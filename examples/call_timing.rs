@@ -1,0 +1,26 @@
+use std::rc::Rc;
+use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
+fn main() {
+    quasar::util::bigstack::run(|| {
+        let root = std::path::PathBuf::from("artifacts");
+        let rt = Rc::new(XlaRuntime::cpu().unwrap());
+        let manifest = Manifest::load(&root).unwrap();
+        let mr = Rc::new(ModelRuntime::load(rt, &manifest, "qwen3-like").unwrap());
+        let cfg = mr.cfg().clone();
+        for variant in ["fp32", "w8a8"] {
+            for (f, chunk) in [("verify", cfg.gamma_max + 1), ("decode", 1)] {
+                let toks = vec![5i32; chunk];
+                let (k, v) = mr.empty_cache(cfg.n_layers, 1);
+                // warmup (compile)
+                let t0 = std::time::Instant::now();
+                mr.run_chunk(variant, f, 1, &toks, &k, &v, &[0]).unwrap();
+                let compile_and_first = t0.elapsed().as_secs_f64();
+                let t0 = std::time::Instant::now();
+                let n = 5;
+                for _ in 0..n { mr.run_chunk(variant, f, 1, &toks, &k, &v, &[0]).unwrap(); }
+                println!("{variant:>5} {f:>7}: first(incl compile) {:.0}ms, steady {:.1}ms/call",
+                    compile_and_first*1e3, t0.elapsed().as_secs_f64()*1e3/n as f64);
+            }
+        }
+    })
+}

@@ -1,0 +1,47 @@
+//! Quickstart: load the trained model, generate with Quasar (w8a8 verifier +
+//! prompt-lookup drafting), and compare against the Ngram (fp32) baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use quasar::bench::BenchCtx;
+use quasar::coordinator::{Engine, EngineConfig, GenParams};
+
+fn main() {
+    quasar::util::bigstack::run(|| {
+        if let Err(e) = run() {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let prompt = "question : tom has 2 4 apples . tom buys 1 3 more apples . \
+                  how many apples now ?";
+    let ids = ctx.tok.encode(prompt, true);
+    println!("prompt: {prompt}\n");
+
+    for cfg in [EngineConfig::vanilla(1), EngineConfig::ngram(1, 5), EngineConfig::quasar(1, 5)] {
+        let name = cfg.method_name();
+        let mut engine = Engine::new(Rc::clone(&mr), cfg)?;
+        engine.submit(ids.clone(), GenParams::default(), "quickstart");
+        let t0 = std::time::Instant::now();
+        let done = engine.run_to_completion()?;
+        let c = &done[0];
+        let modeled = perf.decode_time(&engine.call_log, None);
+        println!("[{name:>8}] {}", ctx.tok.decode(&c.tokens));
+        println!(
+            "           steps={} L={:.2} modeled-decode={:.1}ms cpu-wall={:.0}ms\n",
+            c.stats.steps,
+            c.stats.mean_acceptance_len(),
+            modeled * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}

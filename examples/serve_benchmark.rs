@@ -1,0 +1,102 @@
+//! End-to-end serving validation (DESIGN.md E8): load the trained model,
+//! serve a mixed-task batched workload through the full stack (router ->
+//! engine thread -> continuous batcher -> drafter -> PJRT verification),
+//! and report latency / throughput / acceptance — real wall-clock, plus the
+//! modeled-device speedup comparison between the Ngram baseline and Quasar.
+//!
+//! Run: `cargo run --release --example serve_benchmark -- [--n 24] [--batch 4]`
+
+use std::time::{Duration, Instant};
+
+use quasar::bench::BenchCtx;
+use quasar::coordinator::{EngineConfig, EngineHandle};
+use quasar::util::cli::Cli;
+use quasar::util::hist::Histogram;
+use quasar::util::rng::Pcg;
+use quasar::workload::bench_params;
+
+fn main() {
+    quasar::util::bigstack::run(|| {
+        if let Err(e) = run() {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Cli::new("serve_benchmark", "end-to-end batched serving driver")
+        .opt("n", Some("24"), "number of requests")
+        .opt("batch", Some("4"), "batch bucket")
+        .opt("max-new", Some("48"), "tokens per request")
+        .opt("temp", Some("0"), "sampling temperature")
+        .opt("method", Some("both"), "ngram | quasar | both")
+        .parse_env();
+    let n = args.usize("n");
+    let batch = args.usize("batch");
+    let max_new = args.usize("max-new");
+    let temp = args.f64("temp");
+    let method = args.str("method");
+
+    // xla_extension tolerates exactly one PJRT client per process, so the
+    // two-method comparison re-execs this binary once per method.
+    if method == "both" {
+        let exe = std::env::current_exe()?;
+        for m in ["ngram", "quasar"] {
+            let status = std::process::Command::new(&exe)
+                .args(["--method", m, "--n", &n.to_string(),
+                       "--batch", &batch.to_string(),
+                       "--max-new", &max_new.to_string(),
+                       "--temp", &temp.to_string()])
+                .status()?;
+            anyhow::ensure!(status.success(), "{m} run failed");
+        }
+        println!("\n(CPU wall includes one-time artifact compilation; the \
+                  modeled-device comparison lives in `cargo bench`.)");
+        return Ok(());
+    }
+
+    let ctx = BenchCtx::load()?;
+    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0xE2E));
+    let artifacts = std::env::var("QUASAR_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+
+    {
+        let (name, cfg) = match method.as_str() {
+            "ngram" => ("ngram/fp32 (baseline)", EngineConfig::ngram(batch, 5)),
+            "quasar" => ("quasar/w8a8", EngineConfig::quasar(batch, 5)),
+            other => anyhow::bail!("unknown --method {other}"),
+        };
+        let handle = EngineHandle::spawn(
+            artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n,
+        )?;
+        let t0 = Instant::now();
+        for it in &items {
+            handle.submit(it.prompt_ids.clone(), bench_params(temp, max_new), &it.task)?;
+        }
+        let mut lat = Histogram::new();
+        let mut ttft = Histogram::new();
+        let mut tokens = 0u64;
+        let mut l_sum = 0.0;
+        let mut done = 0;
+        while done < n {
+            let Some(c) = handle.next_completion(Duration::from_secs(300)) else {
+                anyhow::bail!("timed out waiting for completions ({done}/{n})");
+            };
+            lat.record(c.latency_s);
+            ttft.record(c.ttft_s);
+            tokens += c.tokens.len() as u64;
+            l_sum += c.stats.mean_acceptance_len();
+            done += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!("\n=== {name}: {n} requests, b={batch}, T={temp} ===");
+        println!("  wall                {wall:.1}s  ({:.1} tok/s CPU)", tokens as f64 / wall);
+        println!("  tokens generated    {tokens}");
+        println!("  mean acceptance L   {:.2}", l_sum / n as f64);
+        println!("  request latency     {}", lat.summary_ms());
+        println!("  ttft                {}", ttft.summary_ms());
+        handle.shutdown()?;
+    }
+    Ok(())
+}

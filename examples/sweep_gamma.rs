@@ -1,0 +1,53 @@
+//! Speculation-depth sweep: how L and the modeled speedup respond to gamma,
+//! for both verifier variants (companion to the Table 3 bench).
+//!
+//! Run: `cargo run --release --example sweep_gamma -- [--task gsm8k]`
+
+use quasar::bench::{prompts_for, run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::{DrafterKind, EngineConfig};
+use quasar::spec::NgramConfig;
+use quasar::util::cli::Cli;
+
+fn main() {
+    quasar::util::bigstack::run(|| {
+        if let Err(e) = run() {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Cli::new("sweep_gamma", "speculation depth sweep")
+        .opt("task", Some("gsm8k"), "workload task family")
+        .opt("n", Some("4"), "prompts")
+        .parse_env();
+    let ctx = BenchCtx::load()?;
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let items = prompts_for(&ctx, &args.str("task"), args.usize("n"), 5);
+    let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, 48)?;
+
+    let mut table = TableWriter::new(
+        &format!("gamma sweep on {}", args.str("task")),
+        &["gamma", "ngram L", "ngram Speed", "quasar L", "quasar Speed"],
+    );
+    for gamma in [1usize, 2, 3, 5, 7, 9] {
+        let mk = |verifier: &str| EngineConfig {
+            verifier: verifier.into(),
+            drafter: DrafterKind::Ngram(NgramConfig { gamma, adaptive: false, ..Default::default() }),
+            batch: 1,
+            gamma,
+            seed: 0,
+        };
+        let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
+        let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;
+        table.row(vec![
+            gamma.to_string(),
+            format!("{:.2}", ng.mean_l()), speed(ng.speedup_vs(&base)),
+            format!("{:.2}", qs.mean_l()), speed(qs.speedup_vs(&base)),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,427 @@
+"""AOT export pipeline: the L2 -> L3 bridge.
+
+Produces everything the rust engine consumes, under ``artifacts/``:
+
+  manifest.json                   artifact registry + model configs + cost
+                                  constants (the single source of truth the
+                                  rust runtime loads)
+  tokenizer.json                  closed-lexicon vocab for rust/src/tokenizer.rs
+  <model>/ckpt.npz                trained f32 parameters (train.py, cached)
+  <model>/weights_fp32.npz        flat weight arrays, HLO argument order
+  <model>/weights_w8a8.npz        packed INT8+scales, HLO argument order
+  <model>/<variant>_<fn>_b<B>.hlo.txt
+                                  HLO *text* per (variant, function, batch
+                                  bucket) — weights are ARGUMENTS, not
+                                  constants, so the text stays small and the
+                                  rust side keeps weights device-resident
+  <model>/calibration.json        SmoothQuant m2 metadata (calibrate.py)
+  <model>/goldens.json            greedy generations for rust integration tests
+  workloads.json                  per-task serving prompts (corpus held-out)
+  evalset.json                    teacher-forcing rows for Table 4
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; idempotent (skips work whose outputs exist unless
+--force). ``--quick`` builds a tiny 2-layer model with few train steps so the
+python test-suite can exercise the full pipeline in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import time
+from dataclasses import asdict, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .calibrate import calibrate, save_metadata
+from .model import (ModelConfig, PRESETS, empty_cache, forward_chunk,
+                    prune_params)
+from .tokenizer import Tokenizer, padded_vocab_size
+from .train import default_config, train
+
+BATCH_BUCKETS = (1, 4)
+PRUNE_FRACS = {"pruned90": 0.9, "pruned75": 0.75, "pruned50": 0.5}
+
+# Cost-model constants for the simulated Ascend-910B2-class device
+# (DESIGN.md §1). Numbers follow public 910B specs: ~1.6 TB/s HBM bandwidth,
+# ~376 TOPS INT8 / ~188 TFLOPS FP16-class dense compute.
+COST_MODEL = {
+    "device": "ascend-910b2-sim",
+    "hbm_bw_bytes_per_s": 1.6e12,
+    "int8_ops_per_s": 376e12,
+    "bf16_ops_per_s": 188e12,
+    "bytes_per_weight": {"fp32": 2, "w8a8": 1,  # "fp32" plays the paper's BF16
+                         "pruned90": 2, "pruned75": 2, "pruned50": 2},
+    "kernel_launch_s": 2.0e-5,
+    "drafter_cost_per_token_s": 1.0e-6,  # n-gram lookup, host-side
+}
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (see /opt/xla-example/gen_hlo.py)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer elides arrays >8 elements as `{...}`,
+    # which the rust-side text parser silently reads back as zeros — the
+    # RoPE frequency table became all-ones and every position >0 was rotated
+    # wrongly. print_large_constants keeps constants exact. (Weights are
+    # parameters, not constants, so the text stays small.)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-style metadata attributes (source_end_line, ...) are rejected by
+    # XLA 0.5.1's text parser — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _keystr(path) -> str:
+    """Normalize a jax key-path to ``layers.0.wq.ws`` form."""
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(re.sub(r"[^A-Za-z0-9_]", "", str(k)))
+    return ".".join(out)
+
+
+def flatten_with_names(params) -> tuple[list[str], list[jax.Array], object]:
+    """Flatten the parameter tree in *jax argument order* with stable names.
+
+    The order returned here is exactly the order the lowered HLO expects its
+    leading parameters in — the contract rust relies on (manifest
+    ``weight_args``).
+    """
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = [_keystr(p) for p, _ in leaves_with_path]
+    leaves = [l for _, l in leaves_with_path]
+    return names, leaves, treedef
+
+
+def export_chunk_fn(cfg: ModelConfig, params, batch: int, chunk: int,
+                    n_layers: int) -> str:
+    """Lower ``forward_chunk`` with weights as leading HLO parameters."""
+    _, leaves, treedef = flatten_with_names(params)
+
+    def fn(weights, tokens, k_cache, v_cache, pos):
+        tree = jax.tree_util.tree_unflatten(treedef, weights)
+        return forward_chunk(tree, cfg, tokens, k_cache, v_cache, pos)
+
+    S, H, hd = cfg.max_seq, cfg.n_heads, cfg.head_dim
+    specs = (
+        tuple(jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves),
+        jax.ShapeDtypeStruct((batch, chunk), jnp.int32),
+        jax.ShapeDtypeStruct((n_layers, batch, H, S, hd), jnp.float32),
+        jax.ShapeDtypeStruct((n_layers, batch, H, S, hd), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (feeds rust/src/perfmodel via the manifest)
+# ---------------------------------------------------------------------------
+
+
+def artifact_cost(cfg: ModelConfig, variant: str, batch: int, chunk: int,
+                  n_layers: int, weight_bytes_dev: int) -> dict:
+    """Analytic per-call cost: bytes moved and MACs, for the roofline model."""
+    d, f, H, S, hd = (cfg.d_model, cfg.ffn_dim, cfg.n_heads, cfg.max_seq,
+                      cfg.head_dim)
+    v = cfg.vocab_size
+    tok = batch * chunk
+    linear_macs = tok * n_layers * (4 * d * d + 3 * d * f)
+    attn_macs = batch * n_layers * H * chunk * S * hd * 2
+    unembed_macs = tok * d * v
+    kv_bytes = 2 * n_layers * batch * H * S * hd * 4     # cache read traffic
+    act_bytes = tok * d * 4 * (n_layers * 8 + 2)
+    return {
+        "weight_bytes_device": weight_bytes_dev,
+        "kv_bytes": kv_bytes,
+        "act_bytes": act_bytes,
+        "macs": linear_macs + attn_macs + unembed_macs,
+        "tokens_per_call": tok,
+    }
+
+
+def weight_nbytes(leaves: list[jax.Array], variant: str) -> int:
+    """Device bytes the verifier must *load* per forward pass under the
+    paper's accounting: BF16 = 2 B/elt for f32 leaves, INT8 = 1 B."""
+    total = 0
+    for l in leaves:
+        if l.dtype == jnp.int8:
+            total += l.size
+        else:
+            total += l.size * COST_MODEL["bytes_per_weight"].get(variant, 2)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Golden generations for rust integration tests
+# ---------------------------------------------------------------------------
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt_ids: list[int],
+                    n_new: int) -> list[int]:
+    """Reference greedy decoding through the same chunked path rust uses."""
+    k, v = empty_cache(cfg, 1, n_layers=len(params["layers"]))
+    P = cfg.prefill_len
+    ids = list(prompt_ids)[:P]
+    toks = np.zeros((1, P), np.int32)
+    toks[0, : len(ids)] = ids
+    logits, k, v = forward_chunk(params, cfg, jnp.asarray(toks), k, v,
+                                 jnp.zeros((1,), jnp.int32))
+    pos = len(ids)
+    nxt = int(jnp.argmax(logits[0, pos - 1]))
+    out = [nxt]
+    for _ in range(n_new - 1):
+        logits, k, v = forward_chunk(
+            params, cfg, jnp.full((1, 1), nxt, jnp.int32), k, v,
+            jnp.asarray([pos], jnp.int32))
+        pos += 1
+        nxt = int(jnp.argmax(logits[0, 0]))
+        out.append(nxt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Data exports: workloads + eval set
+# ---------------------------------------------------------------------------
+
+
+def export_workloads(tok: Tokenizer, path: str, n_per_task: int = 160,
+                     seed: int = 7777) -> None:
+    """Held-out serving prompts per task family (never seen in training —
+    different seed stream than train.py's)."""
+    tasks = {}
+    for task in corpus.TASKS:
+        docs = corpus.make_task_set(task, n_per_task, seed=seed + hash(task) % 1000)
+        tasks[task] = [{
+            "prompt": d.prompt,
+            "prompt_ids": tok.encode(d.prompt, add_bos=True),
+            "reference": d.completion,
+            "reference_ids": tok.encode(d.completion),
+        } for d in docs]
+    with open(path, "w") as f:
+        json.dump({"tasks": tasks, "seed": seed}, f)
+
+
+def export_evalset(tok: Tokenizer, path: str, row_len: int,
+                   n_per_task: int = 48, seed: int = 9999) -> None:
+    """Teacher-forcing rows for Table 4: ``row_len + 1`` token ids per row
+    (prefill consumes ``row_len``, targets are shifted by one)."""
+    tasks = {}
+    for task in corpus.TASKS:
+        docs = corpus.make_task_set(task, n_per_task * 2, seed=seed + hash(task) % 1000)
+        rows = []
+        for d in docs:
+            ids = tok.encode(d.text, add_bos=True, add_eos=True)
+            if len(ids) < 24:
+                continue
+            ids = ids[: row_len + 1]
+            rows.append({"ids": ids, "len": len(ids)})
+            if len(rows) >= n_per_task:
+                break
+        tasks[task] = rows
+    with open(path, "w") as f:
+        json.dump({"tasks": tasks, "row_len": row_len}, f)
+
+
+# ---------------------------------------------------------------------------
+# Per-model export
+# ---------------------------------------------------------------------------
+
+
+def export_model(cfg: ModelConfig, out_dir: str, tok: Tokenizer,
+                 train_steps: int, force: bool = False,
+                 refine_alpha: bool = True) -> dict:
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+
+    params = train(cfg, out_dir, steps=train_steps)
+
+    # ---- calibration batch: training-mixture docs, fresh seed ------------
+    from .train import pack_corpus
+    calib_docs = corpus.make_corpus(96, seed=4242)
+    calib_rows = pack_corpus(tok, calib_docs)[:16, : cfg.prefill_len]
+    qparams, calib_meta = calibrate(params, cfg, jnp.asarray(calib_rows),
+                                    refine_alpha=refine_alpha)
+    save_metadata(os.path.join(mdir, "calibration.json"), calib_meta)
+
+    variants: dict[str, tuple[dict, int]] = {
+        "fp32": (params, cfg.n_layers),
+        "w8a8": (qparams, cfg.n_layers),
+    }
+    for vname, frac in PRUNE_FRACS.items():
+        pp = prune_params(params, frac)
+        variants[vname] = (pp, len(pp["layers"]))
+
+    # ---- weight npz per variant (pruned share fp32's arrays) -------------
+    weights_files = {}
+    for vname in ("fp32", "w8a8"):
+        vp, _ = variants[vname]
+        names, leaves, _ = flatten_with_names(vp)
+        wpath = os.path.join(mdir, f"weights_{vname}.npz")
+        if force or not os.path.exists(wpath):
+            np.savez(wpath, **{n: np.asarray(l) for n, l in zip(names, leaves)})
+        weights_files[vname] = f"{cfg.name}/weights_{vname}.npz"
+
+    # ---- HLO artifacts ----------------------------------------------------
+    entries = []
+    fns = {"prefill": cfg.prefill_len, "decode": 1, "verify": cfg.verify_len}
+    for vname, (vp, n_layers) in variants.items():
+        names, leaves, _ = flatten_with_names(vp)
+        wbytes = weight_nbytes(leaves, vname)
+        is_pruned = vname.startswith("pruned")
+        buckets = (1,) if is_pruned else BATCH_BUCKETS
+        use_fns = ("prefill", "decode") if is_pruned else tuple(fns)
+        for fn_name in use_fns:
+            chunk = fns[fn_name]
+            for b in buckets:
+                aname = f"{vname}_{fn_name}_b{b}"
+                path = os.path.join(mdir, f"{aname}.hlo.txt")
+                if force or not os.path.exists(path):
+                    t0 = time.time()
+                    text = export_chunk_fn(cfg, vp, b, chunk, n_layers)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    print(f"[aot] {cfg.name}/{aname}: {len(text)/1e6:.2f} MB "
+                          f"hlo text ({time.time()-t0:.1f}s)")
+                S, H, hd = cfg.max_seq, cfg.n_heads, cfg.head_dim
+                entries.append({
+                    "name": aname, "variant": vname, "fn": fn_name,
+                    "batch": b, "chunk_len": chunk, "n_layers": n_layers,
+                    "path": f"{cfg.name}/{aname}.hlo.txt",
+                    "weights_file": weights_files["w8a8" if vname == "w8a8"
+                                                  else "fp32"],
+                    "weight_args": names,
+                    "data_args": [
+                        {"name": "tokens", "shape": [b, chunk], "dtype": "i32"},
+                        {"name": "k_cache",
+                         "shape": [n_layers, b, H, S, hd], "dtype": "f32"},
+                        {"name": "v_cache",
+                         "shape": [n_layers, b, H, S, hd], "dtype": "f32"},
+                        {"name": "pos", "shape": [b], "dtype": "i32"},
+                    ],
+                    "outputs": [
+                        {"name": "logits",
+                         "shape": [b, chunk, cfg.vocab_size], "dtype": "f32"},
+                        {"name": "k_cache",
+                         "shape": [n_layers, b, H, S, hd], "dtype": "f32"},
+                        {"name": "v_cache",
+                         "shape": [n_layers, b, H, S, hd], "dtype": "f32"},
+                    ],
+                    "cost": artifact_cost(cfg, vname, b, chunk, n_layers,
+                                          wbytes),
+                })
+
+    # ---- goldens for rust integration tests -------------------------------
+    # Tokens are informational; the asserted contract is the *logits* row
+    # (rust's XLA 0.5.1 and jax's XLA fuse differently, so argmax can flip on
+    # near-ties — logits agree to ~1e-4 relative).
+    gpath = os.path.join(mdir, "goldens.json")
+    if force or not os.path.exists(gpath):
+        goldens = []
+        grng = np.random.default_rng(31337)
+        for task in ("gsm8k", "mtbench"):
+            doc = corpus.make_task_set(task, 1, seed=int(grng.integers(1e6)))[0]
+            pid = tok.encode(doc.prompt, add_bos=True)
+            entry = {"task": task, "prompt_ids": pid,
+                     "greedy_fp32": greedy_generate(params, cfg, pid, 24),
+                     "greedy_w8a8": greedy_generate(qparams, cfg, pid, 24)}
+            for vname, vp in (("fp32", params), ("w8a8", qparams)):
+                k, v = empty_cache(cfg, 1, n_layers=len(vp["layers"]))
+                toks = np.zeros((1, cfg.prefill_len), np.int32)
+                toks[0, : len(pid)] = pid[: cfg.prefill_len]
+                logits, _, _ = forward_chunk(vp, cfg, jnp.asarray(toks), k, v,
+                                             jnp.zeros((1,), jnp.int32))
+                row = np.asarray(logits[0, len(pid) - 1], np.float32)
+                entry[f"prefill_logits_{vname}"] = [round(float(x), 5)
+                                                    for x in row]
+            goldens.append(entry)
+        with open(gpath, "w") as f:
+            json.dump(goldens, f)
+
+    return {
+        "config": asdict(cfg), "head_dim": cfg.head_dim,
+        "weights": weights_files,
+        "calibration": f"{cfg.name}/calibration.json",
+        "goldens": f"{cfg.name}/goldens.json",
+        "artifacts": entries,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="qwen3-like,pangu-like")
+    ap.add_argument("--train-steps", type=int,
+                    default=int(os.environ.get("QUASAR_TRAIN_STEPS", "700")))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny model + minimal steps (pipeline test)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    tok = Tokenizer.build()
+    tok.save(os.path.join(args.out, "tokenizer.json"))
+
+    models = {}
+    t0 = time.time()
+    if args.quick:
+        cfg = ModelConfig(name="tiny-test", vocab_size=padded_vocab_size(
+            tok.vocab_size), d_model=64, n_layers=2, n_heads=2, ffn_dim=128,
+            max_seq=128, prefill_len=64, gamma_max=4)
+        models[cfg.name] = export_model(cfg, args.out, tok, train_steps=30,
+                                        force=args.force, refine_alpha=False)
+        prefill_len = cfg.prefill_len
+    else:
+        for name in args.models.split(","):
+            cfg = default_config(name.strip())
+            models[cfg.name] = export_model(cfg, args.out, tok,
+                                            train_steps=args.train_steps,
+                                            force=args.force)
+            prefill_len = cfg.prefill_len
+
+    export_workloads(tok, os.path.join(args.out, "workloads.json"))
+    export_evalset(tok, os.path.join(args.out, "evalset.json"),
+                   row_len=prefill_len)
+
+    manifest = {
+        "version": 1,
+        "tokenizer": "tokenizer.json",
+        "workloads": "workloads.json",
+        "evalset": "evalset.json",
+        "cost_model": COST_MODEL,
+        "models": models,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t0:.0f}s -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

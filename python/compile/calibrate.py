@@ -1,0 +1,120 @@
+"""Offline SmoothQuant ("m2") calibration pass (paper §3.3, "Offline Weight
+Preparation").
+
+Runs the full-precision model over a calibration batch drawn from the
+training corpus mixture, records per-input-channel activation ``amax`` for
+every transformer linear, then grid-refines the per-linear migration
+strength ``alpha`` (quantize.calibrate_linear) and emits:
+
+  * the packed W8A8 parameter tree (consumed by aot.py), and
+  * ``calibration.json`` metadata: chosen alphas, per-linear relative output
+    error on held-out activations, and the activation-outlier statistics
+    that motivate smoothing (max / p99.9 channel ratio).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import (LINEAR_NAMES, ModelConfig, apply_rope, rmsnorm,
+                    rope_tables)
+from .quantize import calibrate_linear, pack_linear, ref_quant_linear, relative_error
+
+
+def collect_linear_inputs(params: dict, cfg: ModelConfig,
+                          tokens: jax.Array) -> dict[str, jax.Array]:
+    """Dense forward that records the input activation of every linear.
+
+    Returns ``"{layer}.{name}" -> x [B*S, d_in]`` (f32). Mirrors
+    ``model.forward_train`` exactly — drift between the two is caught by
+    ``python/tests/test_calibrate.py::test_stats_forward_matches_train``.
+    """
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    rec: dict[str, jax.Array] = {}
+    x = params["embed"][tokens]
+    cos_tab, sin_tab = rope_tables(cfg)
+    cos = jnp.broadcast_to(cos_tab[None, :S], (B, S, hd // 2))
+    sin = jnp.broadcast_to(sin_tab[None, :S], (B, S, hd // 2))
+    bias = jnp.where(jnp.tril(jnp.ones((S, S), bool)), 0.0, -1e30)[None, None]
+    scale = 1.0 / np.sqrt(hd)
+    for li, lp in enumerate(params["layers"]):
+        h = rmsnorm(x, lp["ln1"])
+        rec[f"{li}.wq"] = rec[f"{li}.wk"] = rec[f"{li}.wv"] = h.reshape(-1, h.shape[-1])
+        q = (h @ lp["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        attn = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        rec[f"{li}.wo"] = attn.reshape(-1, attn.shape[-1])
+        x = x + attn @ lp["wo"]
+        h = rmsnorm(x, lp["ln2"])
+        rec[f"{li}.w_gate"] = rec[f"{li}.w_up"] = h.reshape(-1, h.shape[-1])
+        inter = jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])
+        rec[f"{li}.w_down"] = inter.reshape(-1, inter.shape[-1])
+        x = x + inter @ lp["w_down"]
+    return rec
+
+
+def activation_amax(inputs: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    return {k: jnp.max(jnp.abs(v), axis=0) for k, v in inputs.items()}
+
+
+def outlier_ratio(x_amax: jax.Array) -> float:
+    """How outlier-dominated a linear's input channels are: max / median of
+    per-channel amax. Large values are exactly what Eq. 5 smoothing fixes."""
+    med = float(jnp.median(x_amax))
+    return float(jnp.max(x_amax)) / max(med, 1e-8)
+
+
+def calibrate(params: dict, cfg: ModelConfig, tokens: jax.Array,
+              sample_rows: int = 256, refine_alpha: bool = True
+              ) -> tuple[dict, dict]:
+    """Full calibration: returns ``(quantized_params, metadata)``."""
+    inputs = collect_linear_inputs(params, cfg, tokens)
+    amax = activation_amax(inputs)
+
+    alphas: dict[str, float] = {}
+    report: dict[str, dict] = {}
+    q_layers = []
+    for li, lp in enumerate(params["layers"]):
+        q = dict(lp)
+        for name in LINEAR_NAMES:
+            key = f"{li}.{name}"
+            w = lp[name]
+            x_s = inputs[key][:sample_rows]
+            if refine_alpha:
+                packed, alpha = calibrate_linear(w, amax[key], x_s)
+            else:
+                alpha = 0.5
+                packed = pack_linear(w, amax[key], alpha)
+            alphas[key] = alpha
+            err = relative_error(ref_quant_linear(x_s, packed), x_s @ w)
+            report[key] = {"alpha": alpha, "rel_err": float(err),
+                           "outlier_ratio": outlier_ratio(amax[key])}
+            q[name] = packed
+        q_layers.append(q)
+
+    qparams = {"embed": params["embed"], "layers": q_layers,
+               "ln_f": params["ln_f"]}
+    meta = {
+        "alpha_grid_refined": refine_alpha,
+        "n_calibration_tokens": int(np.prod(tokens.shape)),
+        "linears": report,
+        "mean_rel_err": float(np.mean([r["rel_err"] for r in report.values()])),
+        "max_outlier_ratio": float(max(r["outlier_ratio"]
+                                       for r in report.values())),
+    }
+    return qparams, meta
+
+
+def save_metadata(path: str, meta: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=1)

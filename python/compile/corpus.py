@@ -1,0 +1,177 @@
+"""Synthetic-but-structured corpus generator for the reproduction model.
+
+The paper evaluates on five Spec-Bench task families (MT-bench, HumanEval,
+GSM8K, Alpaca, CNN/DM). What differentiates them for a prompt-lookup drafter
+is *how often the generation copies n-grams from the context*: GSM8K-style
+reasoning restates question entities and digit chains, code restates
+identifiers and test scaffolding, summarization copies some article spans,
+chat paraphrases loosely and instruction-following writes mostly fresh text.
+
+Each generator below emits ``(prompt, completion)`` pairs over the closed
+lexicon in ``tokenizer.py`` with exactly those echo profiles, so a small LM
+trained on this corpus reproduces the paper's per-task draftability ordering
+(GSM8K > HumanEval > MT-bench > CNN/DM ~ Alpaca).
+
+Everything is seeded; the same pairs are exported to ``workloads.json`` for
+the rust engine (serving prompts) and ``evalset.json`` (Table 4 accuracy).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+from .tokenizer import (CHAT_WORDS, CODE_WORDS, INSTR_WORDS, NAMES,
+                        NEWS_WORDS, OBJECTS, VERBS)
+
+TASKS = ["mtbench", "humaneval", "gsm8k", "alpaca", "cnndm"]
+
+
+@dataclass
+class Doc:
+    task: str
+    prompt: str
+    completion: str
+
+    @property
+    def text(self) -> str:
+        return f"{self.prompt} {self.completion}"
+
+
+def _num(rng: random.Random, lo: int = 2, hi: int = 99) -> str:
+    """Numbers as digit-token sequences, e.g. 47 -> '4 7'."""
+    return " ".join(str(rng.randint(lo, hi)))
+
+
+def _spell(n: int) -> str:
+    return " ".join(str(n))
+
+
+# ---------------------------------------------------------------------------
+# GSM8K-like: templated word problems whose solutions restate the question's
+# entities and numbers step by step. Highest echo — the drafter's best case.
+# ---------------------------------------------------------------------------
+
+def gen_gsm8k(rng: random.Random) -> Doc:
+    name = rng.choice(NAMES)
+    obj = rng.choice(OBJECTS)
+    a = rng.randint(3, 60)
+    b = rng.randint(2, 30)
+    op = rng.choice(["plus", "minus", "times"])
+    if op == "plus":
+        res, opw = a + b, "buys"
+    elif op == "minus":
+        b = min(b, a - 1)
+        res, opw = a - b, "loses"
+    else:
+        a, b = rng.randint(2, 12), rng.randint(2, 9)
+        res, opw = a * b, "makes"
+    prompt = (f"question : {name} has {_spell(a)} {obj} . {name} {opw} "
+              f"{_spell(b)} more {obj} . how many {obj} now ?")
+    if op == "times":
+        prompt = (f"question : {name} has {_spell(a)} {obj} . {name} makes "
+                  f"{_spell(b)} times more . how many {obj} now ?")
+    completion = (f"answer : {name} has {_spell(a)} {obj} . step 1 : "
+                  f"{_spell(a)} {op} {_spell(b)} equals {_spell(res)} . "
+                  f"therefore the answer is {_spell(res)} .")
+    return Doc("gsm8k", prompt, completion)
+
+
+# ---------------------------------------------------------------------------
+# HumanEval-like: code with repeated identifiers, a spec echoed in the body
+# and an assert scaffold that restates the function name. High echo.
+# ---------------------------------------------------------------------------
+
+def gen_humaneval(rng: random.Random) -> Doc:
+    fname = rng.choice(CODE_WORDS[23:31])  # sorted/max/min/abs/... as names
+    var = rng.choice(["value", "item", "index"])
+    k = rng.randint(2, 9)
+    prompt = (f"question : def {fname} ( {var} ) : # return {var} plus "
+              f"{_spell(k)} for each {var} in list .")
+    completion = (f"answer : def {fname} ( {var} ) : return [ {var} + "
+                  f"{_spell(k)} for {var} in list ] "
+                  f"assert {fname} ( [ {_spell(rng.randint(1, 9))} ] ) "
+                  f"== [ {_spell(rng.randint(1, 9) + k)} ] .")
+    return Doc("humaneval", prompt, completion)
+
+
+# ---------------------------------------------------------------------------
+# MT-bench-like: two-turn chat; the assistant partially restates the topic
+# words but adds fresh framing. Moderate echo.
+# ---------------------------------------------------------------------------
+
+def gen_mtbench(rng: random.Random) -> Doc:
+    topic = rng.sample(CHAT_WORDS, 3)
+    view = rng.choice(["agree", "disagree"])
+    prompt = (f"question : tell me about {topic[0]} and {topic[1]} . "
+              f"what do you think about {topic[2]} ?")
+    completion = (f"answer : sure . about {topic[0]} and {topic[1]} , "
+                  f"i think the point is {topic[2]} . both sides can "
+                  f"{view} , and that is a good idea .")
+    return Doc("mtbench", prompt, completion)
+
+
+# ---------------------------------------------------------------------------
+# CNN/DM-like: a short "article" followed by a summary that copies one span
+# verbatim and compresses the rest. Low-moderate echo.
+# ---------------------------------------------------------------------------
+
+def gen_cnndm(rng: random.Random) -> Doc:
+    who = rng.choice(NEWS_WORDS[3:5] + ["mayor", "council", "company"])
+    what = rng.choice(["plan", "project", "statement", "report"])
+    day = rng.choice(["monday", "friday"])
+    pct = rng.randint(2, 40)
+    prompt = (f"question : the city {who} announced a new {what} on {day} . "
+              f"local market prices rose {_spell(pct)} percent this year . "
+              f"residents said the {what} will help people . summarize .")
+    completion = (f"answer : summary : {who} announced a new {what} . "
+                  f"prices rose {_spell(pct)} percent .")
+    return Doc("cnndm", prompt, completion)
+
+
+# ---------------------------------------------------------------------------
+# Alpaca-like: open instruction, mostly fresh completion. Lowest echo.
+# ---------------------------------------------------------------------------
+
+def gen_alpaca(rng: random.Random) -> Doc:
+    act = rng.choice(INSTR_WORDS[:7])
+    kind = rng.choice(["poem", "letter", "email", "recipe", "note"])
+    style = rng.choice(["short", "long", "formal", "informal", "simple"])
+    fresh = rng.sample(CHAT_WORDS + NEWS_WORDS + INSTR_WORDS, 8)
+    prompt = f"question : {act} a {style} {kind} about {fresh[0]} ."
+    completion = ("answer : " + " ".join(fresh[1:7]) + f" . this {kind} is "
+                  f"{style} and done .")
+    return Doc("alpaca", prompt, completion)
+
+
+GENERATORS = {
+    "gsm8k": gen_gsm8k,
+    "humaneval": gen_humaneval,
+    "mtbench": gen_mtbench,
+    "cnndm": gen_cnndm,
+    "alpaca": gen_alpaca,
+}
+
+# Training mixture: weight the echo-heavy families a little higher so the
+# copy behaviours that speculative decoding exploits are well learnt.
+MIX = [("gsm8k", 0.28), ("humaneval", 0.22), ("mtbench", 0.18),
+       ("cnndm", 0.17), ("alpaca", 0.15)]
+
+
+def sample_doc(rng: random.Random) -> Doc:
+    r, acc = rng.random(), 0.0
+    for task, w in MIX:
+        acc += w
+        if r <= acc:
+            return GENERATORS[task](rng)
+    return GENERATORS[MIX[-1][0]](rng)
+
+
+def make_corpus(n_docs: int, seed: int = 0) -> list[Doc]:
+    rng = random.Random(seed)
+    return [sample_doc(rng) for _ in range(n_docs)]
+
+
+def make_task_set(task: str, n: int, seed: int) -> list[Doc]:
+    rng = random.Random(seed)
+    return [GENERATORS[task](rng) for _ in range(n)]

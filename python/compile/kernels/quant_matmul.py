@@ -1,0 +1,202 @@
+"""Layer-1 Pallas kernel: fused W8A8 verification GEMM (paper §3.3).
+
+One kernel fuses the paper's entire online pipeline so activations make a
+single HBM->VMEM round-trip:
+
+    smooth (x * inv_s)  ->  dynamic per-row INT8 quant  ->
+    INT8 x INT8 -> INT32 GEMM  ->  dequant by (dx * ws)
+
+Hardware adaptation (DESIGN.md §2): the paper targets Ascend INT8 cube units;
+here the kernel is tiled for the TPU memory hierarchy instead —
+
+  * grid over (M/bm, N/bn) output tiles; each program holds an
+    ``[bm, K]`` f32 activation stripe, a ``[K, bn]`` *int8* weight stripe
+    (half the VMEM bytes of bf16 — the paper's bandwidth claim transplanted
+    to VMEM residency) and an ``[bm, bn]`` f32 accumulator tile;
+  * the inner op is ``dot_general`` with ``preferred_element_type=int32``,
+    the MXU-native int8 path (WMMA analogue);
+  * the full K dimension stays resident because dynamic per-token
+    quantization needs the complete row max before scaling — a two-pass
+    K-split variant would double activation traffic for no VMEM relief at
+    our sizes (see ``vmem_footprint``).
+
+Must run with ``interpret=True`` on the CPU PJRT backend; real-TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot execute. Perf on real
+hardware is estimated analytically via ``vmem_footprint``/``mxu_utilization``
+(EXPERIMENTS.md §Perf-L1).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget used for the estimates
+MXU_DIM = 128                  # systolic array edge
+
+
+def _kernel(x_ref, wq_ref, ws_ref, inv_s_ref, o_ref):
+    """One (bm, bn) output tile of the fused smooth+quant+GEMM+dequant."""
+    # Prologue: smoothing (Eq. 9) fused with dynamic per-row quantization.
+    xs = x_ref[...] * inv_s_ref[...]                       # [bm, K] f32
+    amax = jnp.max(jnp.abs(xs), axis=1, keepdims=True)     # [bm, 1]
+    dx = jnp.maximum(amax, EPS) / 127.0
+    xq = jnp.clip(jnp.round(xs / dx), -127, 127)
+    # INT8 x INT8 -> INT32 GEMM (Eq. 8). On a real TPU this is the MXU int8
+    # path (dot_general with preferred_element_type=int32, as in ref.py's
+    # oracle). The exported CPU artifact emulates the integer GEMM in f32:
+    # XLA 0.5.1's CPU backend runs s8 dots through a scalar loop (~10x
+    # slower), while the f32 dot takes the vectorized path AND is exactly
+    # integer-accurate here — |products| <= 127^2 and k <= 1024 terms keep
+    # every partial sum below 2^24. Bit-equality against the int32 oracle is
+    # enforced by python/tests/test_kernel.py.
+    acc = jax.lax.dot_general(
+        xq, wq_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())))
+    # Epilogue: dequantize for the non-linear layers (Eq. 10).
+    o_ref[...] = acc * dx * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def quant_matmul(x: jax.Array, wq: jax.Array, ws: jax.Array,
+                 inv_s: jax.Array, *, bm: int | None = None,
+                 bn: int | None = None) -> jax.Array:
+    """Fused W8A8 linear ``y ~= (x * inv_s) @ (wq * ws)``.
+
+    Args:
+      x:     f32 ``[m, k]`` activations (high precision, un-smoothed).
+      wq:    int8 ``[k, n]`` offline-smoothed, per-output-channel quantized
+             weight (``quantize.pack_linear``).
+      ws:    f32 ``[n]`` weight dequant scales.
+      inv_s: f32 ``[k]`` activation-side smoothing multipliers.
+      bm/bn: output tile sizes. ``m`` is padded up to a multiple of ``bm``;
+             ``n`` and ``k`` must already be multiples of the tile/lane
+             sizes (model dims are chosen as multiples of 64).
+    Returns:
+      f32 ``[m, n]``.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    # Block-shape selection. `None` (the default, and what aot.py exports)
+    # means a single (m, n) block: under interpret=True the Pallas grid
+    # lowers to a sequential XLA while-loop whose per-iteration dynamic
+    # slices cost ~10x on CPU while modelling nothing about the TPU -- the
+    # straight-line single-block program computes identical numerics. The
+    # *tiled* schedule (bm/bn set) is what would ship on real hardware; its
+    # VMEM/MXU characteristics are analyzed analytically below
+    # (`best_block_shape`, EXPERIMENTS.md §Perf-L1) and its numerics are
+    # pinned against the single-block path by the python test-suite.
+    if bn is None:
+        bn = n
+    else:
+        for cand in (bn, 256, 128, 64):
+            if n % cand == 0:
+                bn = cand
+                break
+        else:
+            bn = n
+    bm = _ceil_mult(m, 8) if bm is None else min(bm, _ceil_mult(m, 8))
+    mp = _ceil_mult(m, bm)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    grid = (mp // bm, n // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),      # x stripe
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),      # int8 W stripe
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),      # ws tile
+            pl.BlockSpec((1, k), lambda i, j: (0, 0)),       # inv_s (bcast)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(x, wq, ws[None, :], inv_s[None, :])
+    return out[:m]
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Analytic on-TPU estimates (interpret mode gives no hardware signal; these
+# numbers feed DESIGN.md §8 / EXPERIMENTS.md §Perf-L1 and the block-shape
+# sweep in python/tests/test_kernel.py::test_block_shapes_fit_vmem).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TileEstimate:
+    bm: int
+    bn: int
+    k: int
+    vmem_bytes: int
+    mxu_util: float
+    int8_bytes_moved: int
+    bf16_bytes_moved: int
+
+    @property
+    def traffic_ratio(self) -> float:
+        """INT8 weight traffic as a fraction of BF16 — the paper's ~0.5."""
+        return self.int8_bytes_moved / max(self.bf16_bytes_moved, 1)
+
+
+def vmem_footprint(bm: int, bn: int, k: int) -> int:
+    """Bytes resident in VMEM for one program instance of ``_kernel``."""
+    x_tile = bm * k * 4            # f32 activations
+    xs_tile = bm * k * 1           # int8 quantized copy
+    w_tile = k * bn * 1            # int8 weights (the 2x saving vs bf16)
+    acc = bm * bn * 4              # int32 accumulator
+    out = bm * bn * 4              # f32 output tile
+    scales = (bn + k + bm) * 4
+    return x_tile + xs_tile + w_tile + acc + out + scales
+
+
+def mxu_utilization(bm: int, bn: int, k: int) -> float:
+    """Fraction of MXU lanes busy for the tile GEMM (edge-padding model)."""
+    eff_m = bm / _ceil_mult(bm, MXU_DIM)
+    eff_n = bn / _ceil_mult(bn, MXU_DIM)
+    eff_k = k / _ceil_mult(k, MXU_DIM)
+    return eff_m * eff_n * eff_k
+
+
+def estimate(bm: int, bn: int, m: int, k: int, n: int) -> TileEstimate:
+    """Whole-GEMM HBM traffic + per-tile VMEM/MXU estimate for a block shape."""
+    grid_m, grid_n = _ceil_mult(m, bm) // bm, _ceil_mult(n, bn) // bn
+    # Each grid column re-reads the x stripe; each grid row re-reads W.
+    x_traffic = grid_n * m * k * 4
+    w_traffic_int8 = grid_m * k * n * 1
+    w_traffic_bf16 = grid_m * k * n * 2
+    out_traffic = m * n * 4
+    return TileEstimate(
+        bm=bm, bn=bn, k=k,
+        vmem_bytes=vmem_footprint(bm, bn, k),
+        mxu_util=mxu_utilization(bm, bn, k),
+        int8_bytes_moved=x_traffic + w_traffic_int8 + out_traffic,
+        bf16_bytes_moved=2 * (x_traffic // 2) + w_traffic_bf16 + out_traffic,
+    )
+
+
+def best_block_shape(m: int, k: int, n: int) -> tuple[int, int]:
+    """Pick (bm, bn) maximizing MXU utilization subject to the VMEM budget,
+    breaking ties toward lower HBM traffic."""
+    candidates = []
+    for bm in (8, 16, 32, 64, 128, 256):
+        for bn in (64, 128, 256, 512):
+            if n % bn != 0:
+                continue
+            est = estimate(bm, bn, m, k, n)
+            if est.vmem_bytes > VMEM_BYTES:
+                continue
+            candidates.append((est.mxu_util, -est.int8_bytes_moved, bm, bn))
+    if not candidates:
+        return 8, 64
+    candidates.sort(reverse=True)
+    _, _, bm, bn = candidates[0]
+    return bm, bn

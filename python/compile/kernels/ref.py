@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernel.
+
+``ref_quant_matmul`` reproduces the kernel's exact arithmetic (same rounding,
+same clipping, same accumulation dtype) without any blocking, so the Pallas
+implementation must match it bit-for-bit up to f32 reduction order.
+``fp_matmul`` is the un-quantized ground truth used for error *bounds*.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def fp_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Full-precision ground truth ``x @ w``."""
+    return x @ w
+
+
+def ref_quant_matmul(x: jax.Array, wq: jax.Array, ws: jax.Array,
+                     inv_s: jax.Array) -> jax.Array:
+    """Unblocked W8A8 linear with the kernel's exact arithmetic."""
+    xs = x * inv_s[None, :]
+    amax = jnp.max(jnp.abs(xs), axis=1, keepdims=True)
+    dx = jnp.maximum(amax, EPS) / 127.0
+    xq = jnp.clip(jnp.round(xs / dx), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * dx * ws[None, :]
+
+
+def quant_error_bound(x: jax.Array, w_amax_rows: jax.Array) -> float:
+    """A loose a-priori bound on |quant - fp| per output element.
+
+    Both operands carry at most half-ULP-of-127 relative rounding error;
+    with k-term accumulation the worst case grows linearly in k. Used by the
+    property tests to assert the kernel's error stays within theory.
+    """
+    k = x.shape[1]
+    x_amax = float(jnp.max(jnp.abs(x)))
+    w_amax = float(jnp.max(w_amax_rows))
+    step_x = x_amax / 127.0
+    step_w = w_amax / 127.0
+    return k * (step_x * w_amax + step_w * x_amax + step_x * step_w) * 0.5

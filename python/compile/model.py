@@ -1,0 +1,342 @@
+"""Layer-2: the target LM as a JAX compute graph.
+
+A GPT-style decoder (RMSNorm, RoPE, SwiGLU, tied unembedding) exposing a
+single entry point — ``forward_chunk`` — that subsumes the three serving
+functions the rust coordinator needs, distinguished only by the static chunk
+length ``T`` it is exported with (python/compile/aot.py):
+
+  * prefill : T = cfg.prefill_len   (prompt ingestion)
+  * decode  : T = 1                 (fallback autoregressive step,
+                                     and pruned-drafter steps for Table 5)
+  * verify  : T = gamma_max + 1     (the paper's parallel verification pass)
+
+The same graph runs in two weight *variants*:
+
+  * ``fp32``  — full-precision linears (the paper's "BF16" verifier;
+                DESIGN.md §1 documents the f32 stand-in), and
+  * ``w8a8``  — every transformer linear routed through the fused Pallas
+                W8A8 kernel (kernels/quant_matmul.py) with offline-smoothed
+                INT8 weights — the Quasar verifier.
+
+Structural-pruning baselines (Table 5) are the same graph over a parameter
+tree whose trailing layers were dropped (``prune_params``).
+
+KV cache contract (shared with rust/src/runtime):
+  ``k_cache, v_cache : f32 [L, B, H, S, hd]``, advanced functionally; the
+  chunk writes positions ``pos_b .. pos_b + T - 1`` per batch row and the
+  causal mask guarantees slots ``>= pos_b + T`` are never read, so stale
+  bytes beyond the write frontier are harmless (they are overwritten before
+  ever becoming attendable).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.quant_matmul import quant_matmul
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description, embedded into artifacts/manifest.json."""
+
+    name: str
+    vocab_size: int          # padded to a multiple of 64 (MXU tiling)
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffn_dim: int
+    max_seq: int = 256
+    prefill_len: int = 128
+    gamma_max: int = 10
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def verify_len(self) -> int:
+        return self.gamma_max + 1
+
+    def n_params(self) -> int:
+        d, f = self.d_model, self.ffn_dim
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return self.vocab_size * d + self.n_layers * per_layer + d
+
+    def pruned(self, keep_frac: float) -> "ModelConfig":
+        """Config of a depth-pruned variant keeping the first layers."""
+        keep = max(1, int(round(self.n_layers * keep_frac)))
+        return replace(self, name=f"{self.name}-pruned{int(keep_frac * 100)}",
+                       n_layers=keep)
+
+
+def qwen3_like(vocab_size: int) -> ModelConfig:
+    """Scaled-down stand-in for Qwen3-8B (DESIGN.md §1 substitution table)."""
+    return ModelConfig(name="qwen3-like", vocab_size=vocab_size,
+                       d_model=256, n_layers=6, n_heads=8, ffn_dim=768)
+
+
+def pangu_like(vocab_size: int) -> ModelConfig:
+    """Scaled-down stand-in for OpenPangu-7B."""
+    return ModelConfig(name="pangu-like", vocab_size=vocab_size,
+                       d_model=192, n_layers=5, n_heads=6, ffn_dim=576)
+
+
+PRESETS = {"qwen3-like": qwen3_like, "pangu-like": pangu_like}
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    """Scaled-normal init; unembedding is tied to ``embed``."""
+    d, f, v = cfg.d_model, cfg.ffn_dim, cfg.vocab_size
+    keys = jax.random.split(rng, cfg.n_layers + 1)
+
+    def dense(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32)
+                * scale / np.sqrt(shape[0]))
+
+    layers = []
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[li], 7)
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(ks[0], (d, d), 1.0),
+            "wk": dense(ks[1], (d, d), 1.0),
+            "wv": dense(ks[2], (d, d), 1.0),
+            "wo": dense(ks[3], (d, d), 1.0 / np.sqrt(2 * cfg.n_layers)),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(ks[4], (d, f), 1.0),
+            "w_up": dense(ks[5], (d, f), 1.0),
+            "w_down": dense(ks[6], (f, d), 1.0 / np.sqrt(2 * cfg.n_layers)),
+        })
+    return {
+        "embed": dense(keys[-1], (v, d), d ** 0.25),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def prune_params(params: dict, keep_frac: float) -> dict:
+    """Table-5 structural pruning: keep the *first* ``keep_frac`` of layers
+    (the paper: "retaining the first 75% of layers"), final norm intact."""
+    keep = max(1, int(round(len(params["layers"]) * keep_frac)))
+    return {"embed": params["embed"], "layers": params["layers"][:keep],
+            "ln_f": params["ln_f"]}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def linear(x: jax.Array, w, *, use_kernel: bool = True) -> jax.Array:
+    """Variant dispatch: plain f32 GEMM, or the fused Pallas W8A8 kernel when
+    ``w`` is a packed-quantized dict (quantize.pack_linear)."""
+    if isinstance(w, dict):
+        b, t, d = x.shape
+        x2 = x.reshape(b * t, d)
+        if use_kernel:
+            y = quant_matmul(x2, w["wq"], w["ws"], w["inv_s"])
+        else:  # pure-jnp fallback used by tests to isolate kernel effects
+            from .quantize import ref_quant_linear
+            y = ref_quant_linear(x2, w)
+        return y.reshape(b, t, -1)
+    return x @ w
+
+
+def rope_tables(cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2) / hd))
+    t = jnp.arange(cfg.max_seq)[:, None] * inv[None, :]      # [S, hd/2]
+    return jnp.cos(t), jnp.sin(t)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """``x [B, H, T, hd]`` rotated by per-position tables ``[B, T, hd/2]``."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[:, None, :, :]
+    s = sin[:, None, :, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _update_cache(cache_l: jax.Array, new: jax.Array,
+                  pos: jax.Array) -> jax.Array:
+    """Write ``new [B, H, T, hd]`` into ``cache_l [B, H, S, hd]`` at per-row
+    offsets ``pos [B]`` (ragged continuous batching)."""
+
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+
+    return jax.vmap(upd)(cache_l, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                  *, use_kernel: bool = True
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Run ``T`` new tokens through the model against the KV cache.
+
+    Args:
+      tokens:  i32 ``[B, T]`` new token ids (positions ``pos_b .. pos_b+T-1``).
+      k_cache, v_cache: f32 ``[L, B, H, S, hd]``.
+      pos:     i32 ``[B]`` per-row write offsets.
+    Returns:
+      ``logits f32 [B, T, V]`` (position ``i`` conditions on everything up to
+      and including ``tokens[:, i]``), plus the advanced caches.
+    """
+    n_layers = len(params["layers"])
+    B, T = tokens.shape
+    H, S, hd = cfg.n_heads, cfg.max_seq, cfg.head_dim
+
+    x = params["embed"][tokens]                              # [B, T, d]
+
+    cos_tab, sin_tab = rope_tables(cfg)
+    pos_idx = pos[:, None] + jnp.arange(T)[None, :]          # [B, T]
+    cos = cos_tab[pos_idx]                                   # [B, T, hd/2]
+    sin = sin_tab[pos_idx]
+
+    # Causal visibility: chunk row i may read cache slot j iff j <= pos + i.
+    slot = jnp.arange(S)[None, None, :]                      # [1, 1, S]
+    visible = slot <= pos_idx[:, :, None]                    # [B, T, S]
+    bias = jnp.where(visible, 0.0, -1e30)[:, None, :, :]     # [B, 1, T, S]
+
+    new_k = []
+    new_v = []
+    scale = 1.0 / np.sqrt(hd)
+    for li in range(n_layers):
+        lp = params["layers"][li]
+        h = rmsnorm(x, lp["ln1"])
+        q = linear(h, lp["wq"], use_kernel=use_kernel)
+        k = linear(h, lp["wk"], use_kernel=use_kernel)
+        v = linear(h, lp["wv"], use_kernel=use_kernel)
+        q = q.reshape(B, T, H, hd).transpose(0, 2, 1, 3)     # [B, H, T, hd]
+        k = k.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+        k_full = _update_cache(k_cache[li], k, pos)          # [B, H, S, hd]
+        v_full = _update_cache(v_cache[li], v, pos)
+        new_k.append(k_full)
+        new_v.append(v_full)
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, k_full) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        attn = jnp.einsum("bhts,bhsd->bhtd", probs, v_full)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, T, -1)
+        x = x + linear(attn, lp["wo"], use_kernel=use_kernel)
+
+        h = rmsnorm(x, lp["ln2"])
+        gate = jax.nn.silu(linear(h, lp["w_gate"], use_kernel=use_kernel))
+        up = linear(h, lp["w_up"], use_kernel=use_kernel)
+        x = x + linear(gate * up, lp["w_down"], use_kernel=use_kernel)
+
+    h = rmsnorm(x, params["ln_f"])
+    # Tied unembedding stays f32 in both variants: logit fidelity feeds the
+    # rejection sampler directly (paper §3.3 "dequantization restores the
+    # logits to high precision").
+    logits = h @ params["embed"].T                           # [B, T, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def empty_cache(cfg: ModelConfig, batch: int,
+                n_layers: int | None = None) -> tuple[jax.Array, jax.Array]:
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (no cache) and loss
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params: dict, cfg: ModelConfig,
+                  tokens: jax.Array) -> jax.Array:
+    """Dense causal forward for training: ``tokens [B, S] -> logits [B, S, V]``."""
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]
+    cos_tab, sin_tab = rope_tables(cfg)
+    cos = jnp.broadcast_to(cos_tab[None, :S], (B, S, hd // 2))
+    sin = jnp.broadcast_to(sin_tab[None, :S], (B, S, hd // 2))
+    bias = jnp.where(
+        jnp.tril(jnp.ones((S, S), bool)), 0.0, -1e30)[None, None]
+    scale = 1.0 / np.sqrt(hd)
+    for lp in params["layers"]:
+        h = rmsnorm(x, lp["ln1"])
+        q = (h @ lp["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        k = (h @ lp["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        v = (h @ lp["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        attn = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+        x = x + attn.transpose(0, 2, 1, 3).reshape(B, S, -1) @ lp["wo"]
+        h = rmsnorm(x, lp["ln2"])
+        x = x + (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+    return rmsnorm(x, params["ln_f"]) @ params["embed"].T
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def loss_fn(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            mask: jax.Array) -> jax.Array:
+    """Next-token cross-entropy over positions where ``mask`` is 1."""
+    logits = forward_train(params, cfg, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    m = mask[:, 1:]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-variant construction
+# ---------------------------------------------------------------------------
+
+
+def quantize_model(params: dict, act_stats: dict, alphas: dict | None = None
+                   ) -> dict:
+    """Replace every transformer linear by its packed W8A8 form.
+
+    ``act_stats`` maps ``"{layer}.{linear}" -> per-input-channel amax`` from
+    calibrate.py; ``alphas`` the per-linear m2 migration strengths (defaults
+    to 0.5 when absent).
+    """
+    from .quantize import pack_linear
+    out_layers = []
+    for li, lp in enumerate(params["layers"]):
+        q = dict(lp)
+        for name in LINEAR_NAMES:
+            key = f"{li}.{name}"
+            alpha = (alphas or {}).get(key, 0.5)
+            q[name] = pack_linear(lp[name], act_stats[key], alpha)
+        out_layers.append(q)
+    return {"embed": params["embed"], "layers": out_layers,
+            "ln_f": params["ln_f"]}

@@ -1,0 +1,158 @@
+"""Closed-lexicon word tokenizer shared by the trainer, the eval sets and the
+rust engine.
+
+The reproduction corpus (see ``corpus.py``) is generated from a fixed lexicon,
+so a word-level tokenizer with a greedy longest-match fallback is lossless on
+every sequence the system ever sees, keeps the vocabulary small (<= 512), and
+round-trips exactly — which the rust tokenizer (rust/src/tokenizer.rs)
+re-implements and property-tests against the ``tokenizer.json`` emitted here.
+
+Digits are individual tokens so that arithmetic surface forms ("1 7 2") are
+copyable span-by-span by the prompt-lookup drafter, mirroring how real LLM
+tokenizers make GSM8K-style generations highly draftable.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+PAD, BOS, EOS, UNK = "<pad>", "<bos>", "<eos>", "<unk>"
+SPECIALS = [PAD, BOS, EOS, UNK]
+
+# ----------------------------------------------------------------------------
+# Lexicon. Order matters: token ids are stable across python and rust.
+# ----------------------------------------------------------------------------
+
+DIGITS = [str(d) for d in range(10)]
+
+PUNCT = [".", ",", "?", ":", ";", "(", ")", "=", "+", "-", "*", "/", "<", ">",
+         "{", "}", "[", "]", "->", "==", "#", "\"", "'"]
+
+NAMES = ["tom", "anna", "ravi", "mei", "liam", "sara", "omar", "ines", "kofi",
+         "yuki", "nora", "eli"]
+
+OBJECTS = ["apples", "books", "coins", "cards", "boxes", "pens", "stones",
+           "shells", "tokens", "seeds", "cups", "keys"]
+
+VERBS = ["has", "buys", "sells", "finds", "loses", "gives", "takes", "makes",
+         "reads", "counts", "keeps", "shares"]
+
+MATH_WORDS = ["plus", "minus", "times", "total", "each", "more", "fewer",
+              "left", "altogether", "twice", "half", "sum", "difference",
+              "product", "result", "answer", "question", "so", "then", "now",
+              "first", "second", "third", "step", "therefore", "equals"]
+
+CODE_WORDS = ["def", "return", "if", "else", "for", "in", "while", "let",
+              "fn", "val", "list", "range", "len", "append", "print", "assert",
+              "true", "false", "none", "and", "or", "not", "lambda", "sorted",
+              "max", "min", "abs", "input", "output", "index", "value", "item",
+              "array", "loop", "function", "test", "case", "expect"]
+
+CHAT_WORDS = ["hello", "thanks", "please", "tell", "me", "about", "explain",
+              "what", "why", "how", "is", "are", "the", "a", "an", "of", "to",
+              "and", "it", "that", "this", "you", "i", "we", "they", "can",
+              "could", "would", "like", "good", "great", "idea", "think",
+              "know", "help", "sure", "here", "there", "story", "advice",
+              "topic", "point", "view", "both", "sides", "agree", "disagree"]
+
+NEWS_WORDS = ["city", "report", "today", "officials", "said", "announced",
+              "new", "plan", "will", "year", "people", "local", "market",
+              "prices", "rose", "fell", "percent", "company", "team", "won",
+              "game", "season", "summary", "article", "according", "statement",
+              "project", "building", "river", "north", "south", "east", "west",
+              "monday", "friday", "million", "residents", "mayor", "council"]
+
+INSTR_WORDS = ["write", "describe", "compare", "summarize", "translate",
+               "rewrite", "give", "example", "short", "long", "formal",
+               "informal", "poem", "letter", "email", "recipe", "steps",
+               "ingredients", "mix", "bake", "add", "stir", "heat", "serve",
+               "draft", "note", "task", "done", "begin", "end", "with",
+               "without", "using", "make", "simple", "clear"]
+
+LEXICON = (DIGITS + PUNCT + NAMES + OBJECTS + VERBS + MATH_WORDS + CODE_WORDS
+           + CHAT_WORDS + NEWS_WORDS + INSTR_WORDS)
+
+
+@dataclass
+class Tokenizer:
+    """Word-level tokenizer over the closed reproduction lexicon."""
+
+    vocab: list[str] = field(default_factory=list)
+    index: dict[str, int] = field(default_factory=dict)
+
+    @classmethod
+    def build(cls) -> "Tokenizer":
+        vocab: list[str] = []
+        for w in SPECIALS + LEXICON:
+            if w not in vocab:
+                vocab.append(w)
+        index = {w: i for i, w in enumerate(vocab)}
+        return cls(vocab=vocab, index=index)
+
+    # -- core api -------------------------------------------------------------
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+    @property
+    def pad_id(self) -> int:
+        return self.index[PAD]
+
+    @property
+    def bos_id(self) -> int:
+        return self.index[BOS]
+
+    @property
+    def eos_id(self) -> int:
+        return self.index[EOS]
+
+    @property
+    def unk_id(self) -> int:
+        return self.index[UNK]
+
+    def encode(self, text: str, add_bos: bool = False,
+               add_eos: bool = False) -> list[int]:
+        ids = [self.bos_id] if add_bos else []
+        for word in text.split():
+            ids.append(self.index.get(word, self.unk_id))
+        if add_eos:
+            ids.append(self.eos_id)
+        return ids
+
+    def decode(self, ids: list[int], skip_special: bool = True) -> str:
+        words = []
+        for i in ids:
+            if i < 0 or i >= len(self.vocab):
+                words.append(UNK)
+                continue
+            w = self.vocab[i]
+            if skip_special and w in SPECIALS:
+                continue
+            words.append(w)
+        return " ".join(words)
+
+    # -- serialization --------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "kind": "closed-lexicon-word",
+                "vocab": self.vocab,
+                "pad_id": self.pad_id,
+                "bos_id": self.bos_id,
+                "eos_id": self.eos_id,
+                "unk_id": self.unk_id,
+            },
+            indent=1,
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+
+def padded_vocab_size(n: int, multiple: int = 64) -> int:
+    """Round the vocab up so the unembedding GEMM tiles cleanly on the MXU."""
+    return ((n + multiple - 1) // multiple) * multiple

@@ -1,0 +1,215 @@
+"""Build-time trainer for the reproduction target LM.
+
+Trains the GPT-style model of ``model.py`` on the structured synthetic corpus
+(``corpus.py``) with a hand-rolled AdamW (+ cosine schedule, grad clipping —
+optax is not available in the offline image). Runs ONCE under
+``make artifacts``; checkpoints are cached in ``artifacts/<model>/ckpt.npz``
+and training is skipped when the checkpoint already exists.
+
+The point of training (DESIGN.md §1): speculative-decoding dynamics —
+prompt-lookup hit rates, acceptance lengths, quantization logit drift — only
+exist for a model with a *real* next-token distribution. A few hundred steps
+on the templated corpus reaches PPL ~1.5-3 on held-out docs, plenty for the
+copy behaviours the paper's benchmarks exercise.
+
+CLI:  python -m compile.train --model qwen3-like --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, PRESETS, init_params, loss_fn
+from .tokenizer import Tokenizer, padded_vocab_size
+
+SEQ_LEN = 128
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline: tokenize docs, pack into fixed-length rows
+# ---------------------------------------------------------------------------
+
+
+def pack_corpus(tok: Tokenizer, docs: list[corpus.Doc],
+                seq_len: int = SEQ_LEN) -> np.ndarray:
+    """Concatenate ``<bos> doc <eos>`` streams and chunk into ``[N, seq_len+1]``
+    rows (the +1 feeds the shifted next-token loss)."""
+    stream: list[int] = []
+    for d in docs:
+        stream.extend(tok.encode(d.text, add_bos=True, add_eos=True))
+    n = len(stream) // (seq_len + 1)
+    arr = np.asarray(stream[: n * (seq_len + 1)], np.int32)
+    return arr.reshape(n, seq_len + 1)
+
+
+def batches(rows: np.ndarray, batch: int, steps: int,
+            seed: int):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, rows.shape[0], size=batch)
+        yield rows[idx]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AdamWConfig:
+    lr: float = 3e-3
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup: int = 50
+    steps: int = 700
+    clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(t, oc: AdamWConfig):
+    warm = jnp.minimum(t / max(oc.warmup, 1), 1.0)
+    prog = jnp.clip((t - oc.warmup) / max(oc.steps - oc.warmup, 1), 0.0, 1.0)
+    return oc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_update(params, grads, state, oc: AdamWConfig):
+    t = state["t"] + 1
+    lr = _schedule(t.astype(jnp.float32), oc)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                         for g in jax.tree.leaves(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, oc.clip / gnorm)
+    b1, b2 = oc.betas
+
+    def upd(p, g, m, v):
+        g = g * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** t)
+        vh = v / (1 - b2 ** t)
+        p = p - lr * (mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p)
+        return p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "t": t}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint IO (flat npz; mirrored by the rust npy-lite loader for debug)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params) -> dict[str, np.ndarray]:
+    out = {"embed": np.asarray(params["embed"]),
+           "ln_f": np.asarray(params["ln_f"])}
+    for li, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            out[f"layers.{li}.{k}"] = np.asarray(v)
+    return out
+
+
+def unflatten_params(flat: dict[str, np.ndarray]) -> dict:
+    n_layers = 1 + max(int(k.split(".")[1]) for k in flat
+                       if k.startswith("layers."))
+    layers = []
+    for li in range(n_layers):
+        prefix = f"layers.{li}."
+        layers.append({k[len(prefix):]: jnp.asarray(v)
+                       for k, v in flat.items() if k.startswith(prefix)})
+    return {"embed": jnp.asarray(flat["embed"]), "layers": layers,
+            "ln_f": jnp.asarray(flat["ln_f"])}
+
+
+def save_checkpoint(path: str, params) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **flatten_params(params))
+
+
+def load_checkpoint(path: str) -> dict:
+    with np.load(path) as z:
+        return unflatten_params({k: z[k] for k in z.files})
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train(cfg: ModelConfig, out_dir: str, steps: int, batch: int = 32,
+          seed: int = 0, n_docs: int = 8000, log_every: int = 50) -> dict:
+    ckpt = os.path.join(out_dir, cfg.name, "ckpt.npz")
+    if os.path.exists(ckpt):
+        print(f"[train] {cfg.name}: cached checkpoint {ckpt}")
+        return load_checkpoint(ckpt)
+
+    tok = Tokenizer.build()
+    docs = corpus.make_corpus(n_docs, seed=seed)
+    rows = pack_corpus(tok, docs)
+    held = rows[: max(8, rows.shape[0] // 50)]
+    rows = rows[held.shape[0]:]
+    print(f"[train] {cfg.name}: {cfg.n_params()/1e6:.1f}M params, "
+          f"{rows.shape[0]} rows, {steps} steps")
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    oc = AdamWConfig(steps=steps)
+    state = adamw_init(params)
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, toks: loss_fn(p, cfg, toks, jnp.ones_like(toks))))
+    update = jax.jit(lambda p, g, s: adamw_update(p, g, s, oc))
+
+    t0 = time.time()
+    for step, toks in enumerate(batches(rows, batch, steps, seed + 1)):
+        loss, grads = grad_fn(params, jnp.asarray(toks))
+        params, state, gnorm = update(params, grads, state)
+        if step % log_every == 0 or step == steps - 1:
+            hl = float(loss_fn(params, cfg, jnp.asarray(held),
+                               jnp.ones_like(jnp.asarray(held))))
+            print(f"[train] {cfg.name} step {step:4d} loss {float(loss):.3f} "
+                  f"held {hl:.3f} ppl {np.exp(hl):.2f} "
+                  f"gnorm {float(gnorm):.2f} {time.time()-t0:.0f}s")
+    save_checkpoint(ckpt, params)
+    print(f"[train] {cfg.name}: saved {ckpt} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def default_config(name: str) -> ModelConfig:
+    tok = Tokenizer.build()
+    return PRESETS[name](padded_vocab_size(tok.vocab_size))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen3-like", choices=list(PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("QUASAR_TRAIN_STEPS", "700")))
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    cfg = default_config(args.model)
+    train(cfg, args.out, steps=args.steps, batch=args.batch)
+
+
+if __name__ == "__main__":
+    main()

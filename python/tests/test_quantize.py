@@ -1,0 +1,88 @@
+"""Quantization math: Eq. 4-8 invariants, the m2 alpha refinement and the
+error metrics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (ALPHA_GRID, calibrate_linear, kl_divergence,
+                              pack_linear, quantize_activation,
+                              quantize_weight, ref_quant_linear,
+                              relative_error, smooth_factors)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(2, 64), n=st.integers(2, 64), seed=st.integers(0, 2**16))
+def test_weight_quant_roundtrip_bound(k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32) * rng.uniform(0.1, 10)
+    wq, ws = quantize_weight(jnp.asarray(w))
+    assert wq.dtype == jnp.int8
+    assert int(jnp.abs(wq).max()) <= 127
+    recon = np.asarray(wq, np.float32) * np.asarray(ws)[None, :]
+    # symmetric per-channel quantization: error <= half step per element
+    step = np.asarray(ws)[None, :]
+    assert (np.abs(recon - w) <= step * (0.5 + 1e-4) + 1e-7).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 32), k=st.integers(2, 64), seed=st.integers(0, 2**16))
+def test_activation_quant_per_row(m, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    xq, dx = quantize_activation(jnp.asarray(x))
+    assert xq.shape == x.shape and dx.shape == (m, 1)
+    recon = np.asarray(xq, np.float32) * np.asarray(dx)
+    assert (np.abs(recon - x) <= np.asarray(dx) * (0.5 + 1e-4) + 1e-7).all()
+    # each row uses its own scale: the row max hits (close to) 127
+    assert (np.abs(np.asarray(xq)).max(axis=1) >= 126).all()
+
+
+def test_smoothing_identity_eq4():
+    """Eq. 4 is exact in fp64: (W diag(s)^-1)(diag(s) X) == W X."""
+    rng = np.random.default_rng(0)
+    k, n, m = 32, 16, 8
+    w = rng.standard_normal((k, n)).astype(np.float64)
+    x = rng.standard_normal((m, k)).astype(np.float64)
+    amax = np.abs(x).max(axis=0)
+    s = np.asarray(smooth_factors(jnp.asarray(amax), jnp.asarray(w), 0.5),
+                   np.float64)
+    lhs = (x * (1.0 / s)[None, :]) @ (w * s[:, None])
+    np.testing.assert_allclose(lhs, x @ w, rtol=1e-10)
+
+
+def test_smooth_factors_migrate_difficulty():
+    """Channels with larger activation amax get larger s (Eq. 5), shrinking
+    the activation range."""
+    k, n = 8, 4
+    w = np.ones((k, n), np.float32)
+    amax = np.linspace(0.1, 100, k).astype(np.float32)
+    s = np.asarray(smooth_factors(jnp.asarray(amax), jnp.asarray(w), 0.5))
+    assert (np.diff(s) > 0).all()
+    flat = np.asarray(smooth_factors(jnp.asarray(amax), jnp.asarray(w), 0.0))
+    assert flat.std() < s.std(), "alpha=0 migrates nothing"
+
+
+def test_calibrate_linear_picks_best_alpha():
+    rng = np.random.default_rng(1)
+    k, n, m = 64, 32, 128
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    x[:, ::8] *= 50.0
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    amax = jnp.asarray(np.abs(x).max(0))
+    packed, alpha = calibrate_linear(jnp.asarray(w), amax, jnp.asarray(x))
+    assert alpha in ALPHA_GRID
+    y_ref = x @ w
+    err_best = relative_error(ref_quant_linear(jnp.asarray(x), packed), jnp.asarray(y_ref))
+    for a in ALPHA_GRID:
+        p = pack_linear(jnp.asarray(w), amax, a)
+        err = relative_error(ref_quant_linear(jnp.asarray(x), p), jnp.asarray(y_ref))
+        assert err_best <= err + 1e-9, f"alpha {alpha} not optimal vs {a}"
+
+
+def test_kl_divergence_properties():
+    a = jnp.asarray([[1.0, 2.0, 3.0]])
+    assert float(kl_divergence(a, a)[0]) == pytest.approx(0.0, abs=1e-6)
+    b = jnp.asarray([[3.0, 2.0, 1.0]])
+    assert float(kl_divergence(a, b)[0]) > 0.0

@@ -1,0 +1,57 @@
+//! E7: sanity of the paper's §3.4 analytic model. Compares Eq. 13 closed-form
+//! speedups (with measured alpha plugged in) against the engine-measured
+//! modeled speedups, across gamma, for both verifier variants.
+
+use quasar::bench::{prompts_for, run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::{DrafterKind, EngineConfig};
+use quasar::spec::NgramConfig;
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let n = ctx.n_prompts(4);
+    let max_new = ctx.max_new(48);
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let items = prompts_for(&ctx, "gsm8k", n, 77);
+    let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
+
+    let mut table = TableWriter::new(
+        "Eq. 13 closed form vs engine measurement (GSM8k, qwen3-like)",
+        &["Variant", "gamma", "alpha (meas)", "Eq13 speedup", "Engine speedup"],
+    );
+    for verifier in ["fp32", "w8a8"] {
+        for gamma in [3usize, 5, 7] {
+            let cfg = EngineConfig {
+                verifier: verifier.into(),
+                drafter: DrafterKind::Ngram(NgramConfig {
+                    gamma, adaptive: false, ..Default::default()
+                }),
+                batch: 1,
+                gamma,
+                seed: 0,
+            };
+            let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
+            let alpha = res.stats.acceptance_rate();
+            // draft cost per step: host-side lookup of ~gamma tokens
+            let t_draft = gamma as f64 * ctx.manifest.cost_model.drafter_cost_per_token_s;
+            let eq13 = perf.eq13_speedup(verifier, gamma, alpha, t_draft);
+            table.row(vec![
+                verifier.into(),
+                gamma.to_string(),
+                format!("{alpha:.2}"),
+                speed(eq13),
+                speed(res.speedup_vs(&base)),
+            ]);
+        }
+    }
+    table.print();
+    println!("\nNote: Eq. 13 assumes every step proposes a full gamma-token
+draft; the engine only drafts when the n-gram lookup hits, so the closed
+form upper-bounds the measured speedup. Shape (ordering, w8a8 > fp32,
+diminishing returns in gamma) should agree.");
+    Ok(())
+}

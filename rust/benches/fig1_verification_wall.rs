@@ -1,0 +1,63 @@
+//! Figure 1 (E1): the verification wall. Per-verify-call latency breakdown
+//! (weight stream / KV / activations / compute) on the simulated device for
+//! BF16 vs W8A8 verification across speculation depths, plus measured CPU
+//! wall per call for the exported artifacts.
+
+use quasar::bench::{BenchCtx, TableWriter};
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let cfg = mr.cfg().clone();
+
+    let mut table = TableWriter::new(
+        "Figure 1 — verify-call latency decomposition (modeled, b=1)",
+        &["Variant", "gamma", "weight us", "kv us", "act us", "compute us",
+          "total us", "us/token", "bound"],
+    );
+    for variant in ["fp32", "w8a8"] {
+        for gamma in [1usize, 3, 5, 7, 9] {
+            let t = perf.price_parts(variant, cfg.n_layers, 1, gamma + 1);
+            let mem = t.weight_s + t.kv_s + t.act_s;
+            table.row(vec![
+                variant.into(),
+                gamma.to_string(),
+                format!("{:.1}", t.weight_s * 1e6),
+                format!("{:.1}", t.kv_s * 1e6),
+                format!("{:.1}", t.act_s * 1e6),
+                format!("{:.1}", t.compute_s * 1e6),
+                format!("{:.1}", t.total() * 1e6),
+                format!("{:.2}", t.total() * 1e6 / (gamma + 1) as f64),
+                if mem > t.compute_s { "memory".into() } else { "compute".into() },
+            ]);
+        }
+    }
+    table.print();
+
+    // Measured CPU wall per exported verify call (fixed padded chunk).
+    let mut table = TableWriter::new(
+        "Figure 1b — measured CPU wall per verify call (padded chunk, b=1)",
+        &["Variant", "ms/call (steady)"],
+    );
+    for variant in ["fp32", "w8a8"] {
+        let toks = vec![5i32; cfg.verify_len()];
+        let (k, v) = mr.empty_cache(cfg.n_layers, 1);
+        mr.run_chunk(variant, "verify", 1, &toks, &k, &v, &[0])?; // compile
+        let t0 = std::time::Instant::now();
+        let n = 10;
+        for _ in 0..n {
+            mr.run_chunk(variant, "verify", 1, &toks, &k, &v, &[0])?;
+        }
+        table.row(vec![
+            variant.into(),
+            format!("{:.2}", t0.elapsed().as_secs_f64() * 1e3 / n as f64),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Table 1 + Figure 2 (E2): end-to-end Speed and mean acceptance length L
+//! for {Vanilla, Ngram, Quasar} x 5 tasks x {T=0, T=1}, per model.
+//!
+//! Speed is modeled decode-phase throughput on the simulated 910B2-class
+//! device (perfmodel; DESIGN.md §1) over *measured* engine runs — real
+//! drafting, real verification numerics, real acceptance. CPU wall-clock is
+//! also printed for transparency.
+//!
+//! Scale via env: QUASAR_BENCH_N (prompts/task), QUASAR_BENCH_TOKENS,
+//! QUASAR_BENCH_MODELS (comma list).
+
+use quasar::bench::{prompts_for, run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::EngineConfig;
+use quasar::workload::TASKS;
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let n = ctx.n_prompts(4);
+    let max_new = ctx.max_new(48);
+    let models = std::env::var("QUASAR_BENCH_MODELS")
+        .unwrap_or_else(|_| "qwen3-like,pangu-like".into());
+
+    for model in models.split(',') {
+        let mr = ctx.model(model)?;
+        let perf = ctx.perf(&mr);
+        for temp in [0.0, 1.0] {
+            let mut table = TableWriter::new(
+                &format!("Table 1 — {model}, T={temp} (n={n}/task, {max_new} new tokens)"),
+                &["Method", "Metric", "MT-bench", "HumanEval", "GSM8k", "Alpaca", "CNN/DM", "Overall"],
+            );
+            let mut rows: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new(); // (method, speeds, ls)
+            let mut base: Vec<f64> = Vec::new(); // vanilla tps per task
+
+            for cfg_fn in [EngineConfig::vanilla as fn(usize) -> EngineConfig] {
+                let _ = cfg_fn; // (suppress unused-warning pattern)
+            }
+            let methods: Vec<EngineConfig> = vec![
+                EngineConfig::vanilla(1),
+                EngineConfig::ngram(1, 5),
+                EngineConfig::quasar(1, 5),
+            ];
+            for cfg in methods {
+                let mut speeds = Vec::new();
+                let mut ls = Vec::new();
+                let mut tps_overall = Vec::new();
+                for (ti, task) in TASKS.iter().enumerate() {
+                    let items = prompts_for(&ctx, task, n, 100 + ti as u64);
+                    let res = run_method(&mr, &perf, cfg.clone(), &items, temp, max_new)?;
+                    let tps = res.modeled_tps();
+                    if cfg.method_name() == "vanilla" {
+                        base.push(tps);
+                    }
+                    speeds.push(tps / base[ti]);
+                    ls.push(res.mean_l());
+                    tps_overall.push(tps);
+                    eprintln!(
+                        "[tab1] {model} T={temp} {} {task}: L={:.2} modeled={:.3}s cpu={:.1}s",
+                        cfg.method_name(), res.mean_l(), res.modeled_s, res.wall_s
+                    );
+                }
+                rows.push((cfg.method_name(), speeds, ls));
+            }
+            for (method, speeds, ls) in &rows {
+                let overall_speed =
+                    speeds.iter().product::<f64>().powf(1.0 / speeds.len() as f64);
+                let overall_l = ls.iter().sum::<f64>() / ls.len() as f64;
+                let mut cells = vec![method.clone(), "Speed".into()];
+                cells.extend(speeds.iter().map(|s| speed(*s)));
+                cells.push(speed(overall_speed));
+                table.row(cells);
+                let mut cells = vec![method.clone(), "L".into()];
+                cells.extend(ls.iter().map(|l| format!("{l:.2}")));
+                cells.push(format!("{overall_l:.2}"));
+                table.row(cells);
+            }
+            table.print();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Table 2 (E3): robustness across sampling temperatures T in [0, 1].
+//! Ngram (fp32 verify) vs Quasar (w8a8 verify), averaged over all tasks,
+//! with the Avg-Drop summary row.
+
+use quasar::bench::{run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::EngineConfig;
+use quasar::util::rng::Pcg;
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let n = ctx.n_prompts(10); // mixed over the 5 tasks
+    let max_new = ctx.max_new(48);
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB2));
+
+    let temps = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
+    let mut table = TableWriter::new(
+        &format!("Table 2 — temperature sweep, qwen3-like ({n} mixed prompts)"),
+        &["Temperature", "Ngram Speed", "Ngram L", "Quasar Speed", "Quasar L"],
+    );
+    let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
+    let mut first: Option<(f64, f64, f64, f64)> = None;
+    let mut last = (0.0, 0.0, 0.0, 0.0);
+    for t in temps {
+        let ng = run_method(&mr, &perf, EngineConfig::ngram(1, 5), &items, t, max_new)?;
+        let qs = run_method(&mr, &perf, EngineConfig::quasar(1, 5), &items, t, max_new)?;
+        let row = (ng.speedup_vs(&base), ng.mean_l(), qs.speedup_vs(&base), qs.mean_l());
+        table.row(vec![
+            format!("T = {t:.1}"),
+            speed(row.0), format!("{:.2}", row.1),
+            speed(row.2), format!("{:.2}", row.3),
+        ]);
+        if first.is_none() { first = Some(row); }
+        last = row;
+        eprintln!("[tab2] T={t}: ngram L={:.2}, quasar L={:.2}", row.1, row.3);
+    }
+    let f = first.unwrap();
+    table.row(vec![
+        "Avg. Drop".into(),
+        format!("{:+.1}%", (last.0 / f.0 - 1.0) * 100.0),
+        format!("{:+.1}%", (last.1 / f.1 - 1.0) * 100.0),
+        format!("{:+.1}%", (last.2 / f.2 - 1.0) * 100.0),
+        format!("{:+.1}%", (last.3 / f.3 - 1.0) * 100.0),
+    ]);
+    table.print();
+    Ok(())
+}

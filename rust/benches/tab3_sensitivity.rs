@@ -1,0 +1,64 @@
+//! Table 3 (E4): sensitivity to the prompt-lookup range K = (k_min, k_max)
+//! and speculation depth gamma, on the HumanEval profile, Ngram vs Quasar.
+//! Adaptive depth is disabled (fixed-gamma sweep, as in the paper).
+
+use quasar::bench::{prompts_for, run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::{DrafterKind, EngineConfig};
+use quasar::spec::NgramConfig;
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
+    EngineConfig {
+        verifier: verifier.into(),
+        drafter: DrafterKind::Ngram(NgramConfig {
+            k_min: k.0,
+            k_max: k.1,
+            gamma,
+            adaptive: false,
+        }),
+        batch: 1,
+        gamma,
+        seed: 0,
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let n = ctx.n_prompts(4);
+    let max_new = ctx.max_new(48);
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let items = prompts_for(&ctx, "humaneval", n, 33);
+    let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
+
+    let gammas = [3usize, 5, 7, 9];
+    let mut table = TableWriter::new(
+        &format!("Table 3 — K x gamma sensitivity, HumanEval, qwen3-like (n={n})"),
+        &["K", "Method", "Metric", "g=3", "g=5", "g=7", "g=9"],
+    );
+    for k in [(1, 3), (2, 4), (3, 5)] {
+        for verifier in ["fp32", "w8a8"] {
+            let method = if verifier == "w8a8" { "Quasar" } else { "Ngram" };
+            let mut speeds = Vec::new();
+            let mut ls = Vec::new();
+            for &g in &gammas {
+                let res = run_method(&mr, &perf, cfg_for(verifier, k, g), &items, 0.0, max_new)?;
+                speeds.push(speed(res.speedup_vs(&base)));
+                ls.push(format!("{:.2}", res.mean_l()));
+                eprintln!("[tab3] K={k:?} {method} g={g}: L={}", ls.last().unwrap());
+            }
+            let kname = format!("({}, {})", k.0, k.1);
+            let mut c = vec![kname.clone(), method.into(), "Speed".into()];
+            c.extend(speeds);
+            table.row(c);
+            let mut c = vec![kname, method.into(), "L".into()];
+            c.extend(ls);
+            table.row(c);
+        }
+    }
+    table.print();
+    Ok(())
+}

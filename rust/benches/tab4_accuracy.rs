@@ -1,0 +1,49 @@
+//! Table 4 (E5): downstream accuracy of the W8A8 verifier vs the BF16
+//! stand-in — teacher-forced top-1 agreement, perplexity delta and KL on
+//! held-out rows per task family (evalsuite; DESIGN.md §1 substitution).
+
+use quasar::bench::{BenchCtx, TableWriter};
+use quasar::evalsuite::{compare_task, load_evalset};
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let max_rows = ctx.n_prompts(16); // rows per task
+    for model in ["qwen3-like", "pangu-like"] {
+        let Ok(mr) = ctx.model(model) else { continue };
+        let rows = load_evalset(&ctx.manifest.evalset_path)?;
+        let mut table = TableWriter::new(
+            &format!("Table 4 — accuracy: {model} fp32 vs w8a8 ({max_rows} rows/task)"),
+            &["Benchmark", "Top-1 agree", "PPL fp32", "PPL w8a8", "Delta", "mean KL"],
+        );
+        let mut deltas = Vec::new();
+        let mut agrees = Vec::new();
+        for (task, rs) in &rows {
+            let r = compare_task(&mr, task, rs, max_rows)?;
+            deltas.push(r.ppl_delta_pct());
+            agrees.push(r.top1_agreement);
+            table.row(vec![
+                task.clone(),
+                format!("{:.1}%", r.top1_agreement * 100.0),
+                format!("{:.3}", r.ppl_fp32),
+                format!("{:.3}", r.ppl_w8a8),
+                format!("{:+.2}%", r.ppl_delta_pct()),
+                format!("{:.2e}", r.mean_kl),
+            ]);
+            eprintln!("[tab4] {model}/{task}: agree={:.3} dPPL={:+.2}%",
+                      r.top1_agreement, r.ppl_delta_pct());
+        }
+        table.row(vec![
+            "Average".into(),
+            format!("{:.1}%", agrees.iter().sum::<f64>() / agrees.len() as f64 * 100.0),
+            "-".into(), "-".into(),
+            format!("{:+.2}%", deltas.iter().sum::<f64>() / deltas.len() as f64),
+            "-".into(),
+        ]);
+        table.print();
+    }
+    Ok(())
+}

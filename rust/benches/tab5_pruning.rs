@@ -1,0 +1,58 @@
+//! Table 5 (E6): structural pruning vs Quasar. Layer-dropped drafters
+//! (90/75/50% depth, BF16 verify) against Quasar (full depth, W8A8 verify),
+//! with L and end-to-end speedup. The pruned drafters cost *real* forward
+//! passes, priced at their depth on the simulated device.
+
+use quasar::bench::{run_method, speed, BenchCtx, TableWriter};
+use quasar::coordinator::{DrafterKind, EngineConfig};
+use quasar::util::rng::Pcg;
+
+fn main() {
+    quasar::util::bigstack::run(|| run().unwrap())
+}
+
+fn run() -> anyhow::Result<()> {
+    let ctx = BenchCtx::load()?;
+    let n = ctx.n_prompts(4);
+    let max_new = ctx.max_new(48);
+    let mr = ctx.model("qwen3-like")?;
+    let perf = ctx.perf(&mr);
+    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB5));
+    let full_layers = mr.cfg().n_layers;
+
+    let mut table = TableWriter::new(
+        &format!("Table 5 — pruning vs Quasar, qwen3-like ({n} mixed prompts)"),
+        &["Method", "Retention / Precision", "L", "Speedup"],
+    );
+    let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
+    table.row(vec!["Vanilla (Full Model)".into(),
+                   "100% Layers / BF16".into(), "1.00".into(), "1.00x".into()]);
+
+    for variant in ["pruned90", "pruned75", "pruned50"] {
+        let nl = mr.entry.artifact(variant, "decode", 1)?.n_layers;
+        let cfg = EngineConfig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Pruned(variant.into()),
+            batch: 1,
+            gamma: 5,
+            seed: 0,
+        };
+        let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
+        table.row(vec![
+            format!("Pruned-{}", variant.trim_start_matches("pruned")),
+            format!("{}/{} Layers / BF16", nl, full_layers),
+            format!("{:.2}", res.mean_l()),
+            speed(res.speedup_vs(&base)),
+        ]);
+        eprintln!("[tab5] {variant}: L={:.2}", res.mean_l());
+    }
+    let res = run_method(&mr, &perf, EngineConfig::quasar(1, 5), &items, 0.0, max_new)?;
+    table.row(vec![
+        "Quasar".into(),
+        "100% Layers / W8A8".into(),
+        format!("{:.2}", res.mean_l()),
+        speed(res.speedup_vs(&base)),
+    ]);
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,235 @@
+//! Shared harness for the paper-reproduction benchmarks (criterion is not
+//! vendored offline; each `rust/benches/*.rs` is a `harness = false` binary
+//! built on this module).
+//!
+//! A *method* is one of the paper's rows (vanilla / ngram / quasar /
+//! draft-pruned*); `run_method` executes it on a prompt set with real
+//! numerics, collects acceptance statistics and the call log, and prices the
+//! log on the simulated device (perfmodel) to produce the paper-shape Speed
+//! numbers. CPU wall-clock is reported alongside (DESIGN.md §9).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{DrafterKind, Engine, EngineConfig};
+use crate::metrics::SpecStats;
+use crate::perfmodel::PerfModel;
+use crate::runtime::{Manifest, ModelRuntime, XlaRuntime};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Pcg;
+use crate::workload::{bench_params, WorkItem, WorkloadSet};
+
+/// Everything a bench needs, loaded once.
+pub struct BenchCtx {
+    pub manifest: Manifest,
+    pub rt: Rc<XlaRuntime>,
+    pub tok: Tokenizer,
+    pub workloads: WorkloadSet,
+}
+
+impl BenchCtx {
+    /// Artifact root from `QUASAR_ARTIFACTS` (default `artifacts/`).
+    pub fn load() -> Result<Self> {
+        let root = std::env::var("QUASAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        let manifest = Manifest::load(&root)
+            .context("run `make artifacts` before benches")?;
+        let rt = Rc::new(XlaRuntime::cpu()?);
+        let tok = Tokenizer::load(&manifest.tokenizer_path)?;
+        let workloads = WorkloadSet::load(&manifest.workloads_path)?;
+        Ok(BenchCtx { manifest, rt, tok, workloads })
+    }
+
+    pub fn model(&self, name: &str) -> Result<Rc<ModelRuntime>> {
+        Ok(Rc::new(ModelRuntime::load(
+            Rc::clone(&self.rt),
+            &self.manifest,
+            name,
+        )?))
+    }
+
+    pub fn perf(&self, model: &Rc<ModelRuntime>) -> PerfModel {
+        PerfModel::new(self.manifest.cost_model.clone(), model.cfg().clone())
+    }
+
+    /// Bench scale knobs (env-overridable so CI and full runs share code).
+    pub fn n_prompts(&self, default: usize) -> usize {
+        std::env::var("QUASAR_BENCH_N")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn max_new(&self, default: usize) -> usize {
+        std::env::var("QUASAR_BENCH_TOKENS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+/// Result of one (method, workload) run.
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    pub method: String,
+    pub stats: SpecStats,
+    pub tokens_out: u64,
+    /// Modeled decode-phase seconds on the simulated device.
+    pub modeled_s: f64,
+    /// Measured CPU seconds inside PJRT executions (decode phase).
+    pub wall_s: f64,
+    pub requests: usize,
+}
+
+impl MethodResult {
+    pub fn mean_l(&self) -> f64 {
+        self.stats.mean_acceptance_len()
+    }
+
+    /// Modeled tokens/second on the simulated device.
+    pub fn modeled_tps(&self) -> f64 {
+        self.tokens_out as f64 / self.modeled_s.max(1e-12)
+    }
+
+    /// Speedup vs a baseline run over the same workload.
+    pub fn speedup_vs(&self, baseline: &MethodResult) -> f64 {
+        self.modeled_tps() / baseline.modeled_tps().max(1e-12)
+    }
+}
+
+/// Pruned drafter depth for perfmodel pricing, when the method uses one.
+fn pruned_layers(mr: &Rc<ModelRuntime>, cfg: &EngineConfig) -> Option<usize> {
+    match &cfg.drafter {
+        DrafterKind::Pruned(v) => mr
+            .entry
+            .artifact(v, "decode", 1)
+            .ok()
+            .map(|a| a.n_layers),
+        _ => None,
+    }
+}
+
+/// Run one method over a prompt set, returning stats + priced times.
+pub fn run_method(
+    mr: &Rc<ModelRuntime>,
+    perf: &PerfModel,
+    cfg: EngineConfig,
+    items: &[WorkItem],
+    temp: f64,
+    max_new: usize,
+) -> Result<MethodResult> {
+    let method = cfg.method_name();
+    let pl = pruned_layers(mr, &cfg);
+    let mut engine = Engine::new(Rc::clone(mr), cfg)?;
+    for it in items {
+        engine.submit(it.prompt_ids.clone(), bench_params(temp, max_new), &it.task);
+    }
+    let done = engine.run_to_completion()?;
+    let mut stats = SpecStats::default();
+    let mut tokens = 0u64;
+    for c in &done {
+        stats.merge(&c.stats);
+        tokens += c.tokens.len() as u64;
+    }
+    let log = &engine.call_log;
+    let modeled_s = perf.decode_time(log, pl);
+    let wall_s: f64 = log
+        .records
+        .iter()
+        .filter(|r| r.fn_kind != crate::coordinator::FnKind::Prefill)
+        .map(|r| r.wall_s)
+        .sum();
+    Ok(MethodResult {
+        method,
+        stats,
+        tokens_out: tokens,
+        modeled_s,
+        wall_s,
+        requests: done.len(),
+    })
+}
+
+/// Deterministic per-(bench, task) prompt sample.
+pub fn prompts_for(ctx: &BenchCtx, task: &str, n: usize, seed: u64) -> Vec<WorkItem> {
+    let mut rng = Pcg::seeded(seed ^ 0xBEEF);
+    ctx.workloads.sample(task, n, &mut rng)
+}
+
+// ---------------------------------------------------------------------
+// Table formatting
+// ---------------------------------------------------------------------
+
+/// Markdown-ish fixed-width table writer used by all benches so EXPERIMENTS.md
+/// can embed the output verbatim.
+pub struct TableWriter {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TableWriter {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n### {}\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            println!("| {} |", body.join(" | "));
+        };
+        fmt_row(&self.header);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        fmt_row(&sep);
+        for row in &self.rows {
+            fmt_row(row);
+        }
+    }
+}
+
+/// `1.23x` formatting used across tables.
+pub fn speed(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_writer_formats() {
+        let mut t = TableWriter::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // should not panic
+        assert_eq!(speed(1.28394), "1.28x");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_writer_validates_columns() {
+        let mut t = TableWriter::new("t", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Execution accounting: every model call the engine makes, with enough
+//! detail for the roofline model (`perfmodel`) to price it on the simulated
+//! 910B2-class device. This is how measured acceptance dynamics (real
+//! numerics) combine with the paper's Eq. 11–13 bandwidth arithmetic into
+//! the table speedups (DESIGN.md §1, substitution row 2).
+
+use crate::spec::drafter::DraftCost;
+
+/// Which exported function a call used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FnKind {
+    Prefill,
+    Decode,
+    Verify,
+}
+
+impl FnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FnKind::Prefill => "prefill",
+            FnKind::Decode => "decode",
+            FnKind::Verify => "verify",
+        }
+    }
+}
+
+/// One model invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CallRecord {
+    pub variant: String,
+    pub fn_kind: FnKind,
+    /// Batch bucket the artifact ran at.
+    pub batch: usize,
+    /// Transformer depth of the executed variant (pruned variants < full).
+    pub n_layers: usize,
+    /// Rows actually carrying requests (<= batch).
+    pub active_rows: usize,
+    /// Max tokens *used* across rows this call (prefill: prompt len;
+    /// verify: 1 + longest draft). On real hardware the launch would be
+    /// shaped to this, so the cost model prices it, not the padded chunk.
+    pub tokens_used: usize,
+    /// Measured CPU wall-clock of the PJRT execution (reported alongside
+    /// modeled time for transparency; see DESIGN.md §9).
+    pub wall_s: f64,
+}
+
+/// Append-only call log for a run.
+#[derive(Debug, Clone, Default)]
+pub struct CallLog {
+    pub records: Vec<CallRecord>,
+    pub draft_cost: DraftCost,
+}
+
+impl CallLog {
+    pub fn record(&mut self, rec: CallRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn add_draft_cost(&mut self, c: &DraftCost) {
+        self.draft_cost.merge(c);
+    }
+
+    pub fn merge(&mut self, other: &CallLog) {
+        self.records.extend(other.records.iter().cloned());
+        self.draft_cost.merge(&other.draft_cost);
+    }
+
+    pub fn calls(&self, kind: FnKind) -> usize {
+        self.records.iter().filter(|r| r.fn_kind == kind).count()
+    }
+
+    pub fn total_wall_s(&self) -> f64 {
+        self.records.iter().map(|r| r.wall_s).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+        self.draft_cost = DraftCost::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: FnKind) -> CallRecord {
+        CallRecord {
+            variant: "fp32".into(),
+            fn_kind: kind,
+            batch: 4,
+            n_layers: 6,
+            active_rows: 3,
+            tokens_used: 6,
+            wall_s: 0.001,
+        }
+    }
+
+    #[test]
+    fn log_counts_and_merges() {
+        let mut a = CallLog::default();
+        a.record(rec(FnKind::Verify));
+        a.record(rec(FnKind::Verify));
+        a.record(rec(FnKind::Prefill));
+        assert_eq!(a.calls(FnKind::Verify), 2);
+        assert_eq!(a.calls(FnKind::Decode), 0);
+        assert!((a.total_wall_s() - 0.003).abs() < 1e-12);
+
+        let mut b = CallLog::default();
+        b.record(rec(FnKind::Decode));
+        b.add_draft_cost(&DraftCost { decode_calls: 5, ..Default::default() });
+        a.merge(&b);
+        assert_eq!(a.records.len(), 4);
+        assert_eq!(a.draft_cost.decode_calls, 5);
+        a.clear();
+        assert!(a.records.is_empty());
+    }
+}

@@ -1,0 +1,439 @@
+//! The serving engine: continuous batching over a leased-row KV group,
+//! per-request drafting, one parallel verification pass per step, lossless
+//! rejection sampling, and full call accounting.
+//!
+//! One `step()` =
+//!   admit (prefill + splice new requests into free rows)
+//!   -> draft   (per active row, via its drafter)
+//!   -> verify  (single batched chunk execution on the verifier variant:
+//!               `fp32` for the paper's Ngram baseline, `w8a8` for Quasar)
+//!   -> commit  (rejection sampling Eq. 2-3, acceptance bookkeeping,
+//!               finish handling)
+//!
+//! The engine is deliberately single-threaded around the PJRT client (one
+//! device); concurrency lives in the router/server layer which feeds it.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::Metrics;
+use crate::runtime::{ModelCfg, ModelRuntime};
+use crate::spec::drafter::Drafter;
+use crate::spec::{verify_draft, Draft, NgramConfig, NgramDrafter, PrunedDrafter, VanillaDrafter};
+use crate::util::rng::Pcg;
+
+use super::calls::{CallLog, CallRecord, FnKind};
+use super::kv::BatchGroup;
+use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
+
+/// Which drafting strategy the engine wires per request.
+#[derive(Debug, Clone)]
+pub enum DrafterKind {
+    /// Autoregressive baseline (paper's "Vanilla").
+    Vanilla,
+    /// Prompt-lookup decoding (paper's "Ngram" baseline and Quasar).
+    Ngram(NgramConfig),
+    /// Layer-dropped model drafting (Table 5): variant name, e.g. "pruned75".
+    Pruned(String),
+}
+
+/// Engine configuration: the method axes of the paper's tables.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Verifier weight variant: `fp32` ("BF16" baseline) or `w8a8` (Quasar).
+    pub verifier: String,
+    pub drafter: DrafterKind,
+    /// Batch bucket to serve at (must exist in the manifest: 1 or 4).
+    pub batch: usize,
+    /// Speculation depth cap (<= model gamma_max).
+    pub gamma: usize,
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    /// The paper's three methods, by name.
+    pub fn vanilla(batch: usize) -> Self {
+        EngineConfig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Vanilla,
+            batch,
+            gamma: 0,
+            seed: 0,
+        }
+    }
+
+    pub fn ngram(batch: usize, gamma: usize) -> Self {
+        EngineConfig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Ngram(NgramConfig { gamma, ..Default::default() }),
+            batch,
+            gamma,
+            seed: 0,
+        }
+    }
+
+    pub fn quasar(batch: usize, gamma: usize) -> Self {
+        EngineConfig {
+            verifier: "w8a8".into(),
+            ..Self::ngram(batch, gamma)
+        }
+    }
+
+    pub fn method_name(&self) -> String {
+        match (&self.drafter, self.verifier.as_str()) {
+            (DrafterKind::Vanilla, _) => "vanilla".into(),
+            (DrafterKind::Ngram(_), "w8a8") => "quasar".into(),
+            (DrafterKind::Ngram(_), _) => "ngram".into(),
+            (DrafterKind::Pruned(v), _) => format!("draft-{v}"),
+        }
+    }
+}
+
+/// The engine itself. See module docs.
+pub struct Engine {
+    model: Rc<ModelRuntime>,
+    pub cfg: EngineConfig,
+    mcfg: ModelCfg,
+    group: BatchGroup,
+    /// Slot storage; a request keeps its slot index for its lifetime.
+    states: Vec<Option<RequestState>>,
+    pending: VecDeque<Request>,
+    rng: Pcg,
+    next_id: u64,
+    pub metrics: Metrics,
+    pub call_log: CallLog,
+    completions: Vec<Completion>,
+}
+
+impl Engine {
+    pub fn new(model: Rc<ModelRuntime>, cfg: EngineConfig) -> Result<Self> {
+        let mcfg = model.cfg().clone();
+        if cfg.gamma + 1 > mcfg.verify_len() && !matches!(cfg.drafter, DrafterKind::Vanilla) {
+            bail!("gamma {} exceeds exported verify chunk {}", cfg.gamma, mcfg.verify_len());
+        }
+        // Validate the bucket exists up front (prefill is always exported).
+        model.entry.artifact(&cfg.verifier, "prefill", cfg.batch)?;
+        let group = BatchGroup::new(
+            mcfg.n_layers, cfg.batch, mcfg.n_heads, mcfg.max_seq, mcfg.head_dim,
+        );
+        Ok(Engine {
+            model,
+            mcfg,
+            group,
+            states: Vec::new(),
+            pending: VecDeque::new(),
+            rng: Pcg::seeded(cfg.seed ^ 0x5145_5341),
+            next_id: 1,
+            metrics: Metrics::new(),
+            call_log: CallLog::default(),
+            completions: Vec::new(),
+            cfg,
+        })
+    }
+
+    pub fn model(&self) -> &Rc<ModelRuntime> {
+        &self.model
+    }
+
+    pub fn eos_id(&self) -> i32 {
+        2 // tokenizer contract: <pad>=0 <bos>=1 <eos>=2 <unk>=3
+    }
+
+    fn make_drafter(&mut self) -> Result<Box<dyn Drafter>> {
+        Ok(match &self.cfg.drafter {
+            DrafterKind::Vanilla => Box::new(VanillaDrafter),
+            DrafterKind::Ngram(c) => Box::new(NgramDrafter::new(*c)),
+            DrafterKind::Pruned(variant) => Box::new(PrunedDrafter::new(
+                Rc::clone(&self.model),
+                variant,
+                self.rng.next_u64(),
+            )?),
+        })
+    }
+
+    /// Queue a request (prompt truncated to the prefill window).
+    pub fn submit(&mut self, mut prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        prompt.truncate(self.mcfg.prefill_len);
+        if prompt.is_empty() {
+            prompt.push(1); // <bos>
+        }
+        self.pending
+            .push_back(Request::new(id, prompt, params).with_task(task));
+        self.metrics.inc("requests_submitted", 1);
+        id
+    }
+
+    /// Number of requests not yet completed.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len() + self.group.active_rows().len()
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    // ------------------------------------------------------------------
+    // Admission: prefill into a single-row cache, splice into the group.
+    // ------------------------------------------------------------------
+
+    fn admit(&mut self) -> Result<()> {
+        while self.group.free_rows() > 0 && !self.pending.is_empty() {
+            let req = self.pending.pop_front().unwrap();
+            let mut drafter = self.make_drafter()?;
+            drafter.begin(&req.prompt)?;
+            let rng = self.rng.fork(req.params.seed.unwrap_or(req.id));
+            let mut st = RequestState::new(req, drafter, rng);
+
+            let p = self.mcfg.prefill_len;
+            let len = st.req.prompt.len();
+            let mut toks = vec![0i32; p];
+            toks[..len].copy_from_slice(&st.req.prompt);
+            let (k1, v1) = self.model.empty_cache(self.mcfg.n_layers, 1);
+
+            let t0 = Instant::now();
+            let out = self
+                .model
+                .run_chunk(&self.cfg.verifier, "prefill", 1, &toks, &k1, &v1, &[0])
+                .context("prefill")?;
+            let wall = t0.elapsed().as_secs_f64();
+            self.metrics.observe("prefill_s", wall);
+            self.call_log.record(CallRecord {
+                variant: self.cfg.verifier.clone(),
+                fn_kind: FnKind::Prefill,
+                batch: 1,
+                n_layers: self.mcfg.n_layers,
+                active_rows: 1,
+                tokens_used: len,
+                wall_s: wall,
+            });
+
+            // First generated token comes straight from the prefill logits.
+            let first = {
+                let row = out.logits.row(&[0, len - 1]);
+                crate::spec::sample_logits(row, st.req.params.temp, &mut st.rng)
+            };
+            st.cached = len;
+            st.committed.push(first);
+            st.generated = 1;
+            st.stats.steps += 1;
+            st.stats.tokens_out += 1;
+            st.first_token_at = Some(Instant::now());
+            st.drafter.observe_commit(&[first])?;
+            let cost = st.drafter.take_cost();
+            self.call_log.add_draft_cost(&cost);
+            Self::check_finish_with(self.mcfg.max_seq, &mut st);
+
+            // Park the state in a slot and lease a cache row.
+            let slot = self.free_slot();
+            if st.is_active() {
+                self.group.join(slot, &out.k, &out.v)?;
+                self.states[slot] = Some(st);
+            } else {
+                self.finish_to_completion(st);
+            }
+        }
+        Ok(())
+    }
+
+    fn free_slot(&mut self) -> usize {
+        if let Some(i) = self.states.iter().position(|s| s.is_none()) {
+            i
+        } else {
+            self.states.push(None);
+            self.states.len() - 1
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // One decoding step over the whole group.
+    // ------------------------------------------------------------------
+
+    /// Returns `false` when the engine is idle (nothing pending or active).
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit()?;
+        let active = self.group.active_rows();
+        if active.is_empty() {
+            return Ok(!self.pending.is_empty());
+        }
+
+        // ---- draft per active row ------------------------------------
+        let gamma_cap = self.cfg.gamma.min(self.mcfg.gamma_max);
+        let mut drafts: Vec<(usize, usize, Draft)> = Vec::with_capacity(active.len());
+        for &(row, slot) in &active {
+            let st = self.states[slot].as_mut().expect("leased slot has state");
+            // Keep a margin: the chunk writes `chunk_len` positions.
+            let room = self
+                .mcfg
+                .max_seq
+                .saturating_sub(st.cached + 2);
+            let g_cap = gamma_cap.min(room);
+            let draft = if g_cap == 0 {
+                Draft::empty()
+            } else {
+                st.drafter.draft(g_cap, st.req.params.temp)?
+            };
+            let cost = st.drafter.take_cost();
+            self.call_log.add_draft_cost(&cost);
+            drafts.push((row, slot, draft));
+        }
+
+        // ---- choose the chunk function --------------------------------
+        let all_empty = drafts.iter().all(|(_, _, d)| d.is_empty());
+        let (fn_kind, chunk) = if all_empty {
+            (FnKind::Decode, 1usize)
+        } else {
+            (FnKind::Verify, self.mcfg.verify_len())
+        };
+
+        // ---- assemble the batched token block -------------------------
+        let b = self.cfg.batch;
+        let mut tokens = vec![0i32; b * chunk];
+        let mut pos = vec![0i32; b];
+        for (row, slot, draft) in &drafts {
+            let st = self.states[*slot].as_ref().unwrap();
+            tokens[row * chunk] = st.last_token();
+            for (i, &t) in draft.tokens.iter().enumerate().take(chunk - 1) {
+                tokens[row * chunk + 1 + i] = t;
+            }
+            pos[*row] = st.cached as i32;
+        }
+
+        // ---- execute ---------------------------------------------------
+        let t0 = Instant::now();
+        let out = self
+            .model
+            .run_chunk(
+                &self.cfg.verifier,
+                fn_kind.name(),
+                b,
+                &tokens,
+                &self.group.k,
+                &self.group.v,
+                &pos,
+            )
+            .with_context(|| format!("{} step", fn_kind.name()))?;
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.observe("step_s", wall);
+        let max_used = drafts.iter().map(|(_, _, d)| d.len() + 1).max().unwrap_or(1);
+        self.call_log.record(CallRecord {
+            variant: self.cfg.verifier.clone(),
+            fn_kind,
+            batch: b,
+            n_layers: self.mcfg.n_layers,
+            active_rows: drafts.len(),
+            tokens_used: max_used,
+            wall_s: wall,
+        });
+        self.group.adopt(out.k, out.v)?;
+
+        // ---- commit per row --------------------------------------------
+        for (row, slot, draft) in drafts {
+            let st = self.states[slot].as_mut().unwrap();
+            let logits = &out.logits;
+            let outcome = verify_draft(
+                &draft,
+                |i| logits.row(&[row, i]),
+                st.req.params.temp,
+                &mut st.rng,
+            );
+
+            let mut commit: Vec<i32> =
+                draft.tokens[..outcome.accepted].to_vec();
+            commit.push(outcome.next_token);
+            // Clamp to the generation budget.
+            let budget = st.req.params.max_new - st.generated;
+            commit.truncate(budget);
+            // Cut at <eos> (keep it).
+            if st.req.params.stop_at_eos {
+                if let Some(e) = commit.iter().position(|&t| t == 2) {
+                    commit.truncate(e + 1);
+                }
+            }
+            let n_commit = commit.len();
+            let accepted_kept = n_commit.saturating_sub(1).min(outcome.accepted);
+
+            st.committed.extend_from_slice(&commit);
+            st.cached += n_commit; // KV for these positions was just written
+            st.generated += n_commit;
+            st.stats.steps += 1;
+            st.stats.tokens_out += n_commit as u64;
+            st.stats.drafted += draft.len() as u64;
+            st.stats.accepted += accepted_kept as u64;
+            if draft.is_empty() {
+                st.stats.draft_misses += 1;
+            }
+            st.drafter.observe_commit(&commit)?;
+            st.drafter.observe_outcome(draft.len(), outcome.accepted);
+
+            Self::check_finish_with(self.mcfg.max_seq, st);
+            if !st.is_active() {
+                self.group.leave(row)?;
+                let st = self.states[slot].take().unwrap();
+                self.finish_to_completion(st);
+            }
+        }
+        Ok(true)
+    }
+
+    fn check_finish_with(max_seq: usize, st: &mut RequestState) {
+        if st.finished.is_some() {
+            return;
+        }
+        if st.req.params.stop_at_eos && st.committed.last() == Some(&2) {
+            st.finished = Some(FinishReason::Eos);
+        } else if st.generated >= st.req.params.max_new {
+            st.finished = Some(FinishReason::MaxNewTokens);
+        } else if st.cached + 2 >= max_seq {
+            st.finished = Some(FinishReason::ContextFull);
+        }
+    }
+
+    fn finish_to_completion(&mut self, st: RequestState) {
+        let now = Instant::now();
+        let latency = now.duration_since(st.req.submitted_at).as_secs_f64();
+        let ttft = st
+            .first_token_at
+            .map(|t| t.duration_since(st.req.submitted_at).as_secs_f64())
+            .unwrap_or(latency);
+        self.metrics.inc("requests_completed", 1);
+        self.metrics.inc("tokens_generated", st.generated as u64);
+        self.metrics.observe("request_latency_s", latency);
+        self.metrics.observe("ttft_s", ttft);
+        self.completions.push(Completion {
+            id: st.req.id,
+            task: st.req.task.clone(),
+            prompt_len: st.req.prompt.len(),
+            tokens: st.committed[st.req.prompt.len()..].to_vec(),
+            finish: st.finished.unwrap_or(FinishReason::MaxNewTokens),
+            stats: st.stats.clone(),
+            draft_cost: Default::default(),
+            latency_s: latency,
+            ttft_s: ttft,
+        });
+    }
+
+    /// Drive until every submitted request completes; returns completions in
+    /// finish order.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.in_flight() > 0 {
+            self.step()?;
+        }
+        Ok(self.take_completions())
+    }
+
+    /// Convenience for benches: submit-then-drain.
+    pub fn generate(
+        &mut self,
+        prompts: Vec<(Vec<i32>, GenParams, String)>,
+    ) -> Result<Vec<Completion>> {
+        for (p, params, task) in prompts {
+            self.submit(p, params, &task);
+        }
+        self.run_to_completion()
+    }
+}

@@ -1,0 +1,169 @@
+//! Batch-group KV-cache manager.
+//!
+//! The exported artifacts operate on a whole `[L, B, H, S, hd]` cache, so
+//! the engine keeps one *batch group* per batch bucket: a persistent cache
+//! whose rows are leased to requests. Joining a request prefills into a
+//! fresh single-row cache and splices that row in (`Tensor::
+//! copy_axis1_row_from`); leaving zeroes the row. Row state never moves
+//! between steps — continuous batching without cache shuffling.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+/// A leased-row batched KV cache.
+pub struct BatchGroup {
+    pub k: Tensor<f32>,
+    pub v: Tensor<f32>,
+    /// `rows[i] = Some(request_slot)` when leased.
+    rows: Vec<Option<usize>>,
+    pub batch: usize,
+}
+
+impl BatchGroup {
+    pub fn new(n_layers: usize, batch: usize, n_heads: usize, max_seq: usize,
+               head_dim: usize) -> Self {
+        let dims = [n_layers, batch, n_heads, max_seq, head_dim];
+        BatchGroup {
+            k: Tensor::zeros(&dims),
+            v: Tensor::zeros(&dims),
+            rows: vec![None; batch],
+            batch,
+        }
+    }
+
+    pub fn free_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_none()).count()
+    }
+
+    pub fn active_rows(&self) -> Vec<(usize, usize)> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.map(|slot| (i, slot)))
+            .collect()
+    }
+
+    pub fn occupant(&self, row: usize) -> Option<usize> {
+        self.rows[row]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.iter().all(|r| r.is_none())
+    }
+
+    /// Lease a free row to `slot`, splicing in its prefilled single-row
+    /// cache (`[L, 1, H, S, hd]`).
+    pub fn join(&mut self, slot: usize, k1: &Tensor<f32>, v1: &Tensor<f32>) -> Result<usize> {
+        if self.rows.iter().any(|r| *r == Some(slot)) {
+            bail!("slot {slot} already in group");
+        }
+        let row = match self.rows.iter().position(|r| r.is_none()) {
+            Some(r) => r,
+            None => bail!("no free row in batch group"),
+        };
+        if k1.dims[1] != 1 || v1.dims[1] != 1 {
+            bail!("expected single-row cache, got batch {}", k1.dims[1]);
+        }
+        self.k.copy_axis1_row_from(row, k1, 0);
+        self.v.copy_axis1_row_from(row, v1, 0);
+        self.rows[row] = Some(slot);
+        Ok(row)
+    }
+
+    /// Release a row (request finished); zeroes it defensively so a stale
+    /// read would produce obviously-wrong attention rather than plausible
+    /// leakage from the previous occupant.
+    pub fn leave(&mut self, row: usize) -> Result<usize> {
+        let Some(slot) = self.rows[row] else {
+            bail!("row {row} not leased");
+        };
+        self.rows[row] = None;
+        self.k.zero_axis1_row(row);
+        self.v.zero_axis1_row(row);
+        Ok(slot)
+    }
+
+    /// Adopt the advanced caches returned by a chunk execution.
+    pub fn adopt(&mut self, k: Tensor<f32>, v: Tensor<f32>) -> Result<()> {
+        if k.dims != self.k.dims || v.dims != self.v.dims {
+            bail!("adopt dims mismatch {:?} vs {:?}", k.dims, self.k.dims);
+        }
+        self.k = k;
+        self.v = v;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group() -> BatchGroup {
+        BatchGroup::new(2, 3, 2, 8, 4)
+    }
+
+    fn row_cache(fill: f32) -> (Tensor<f32>, Tensor<f32>) {
+        let dims = [2, 1, 2, 8, 4];
+        let mut k = Tensor::zeros(&dims);
+        k.data.iter_mut().for_each(|x| *x = fill);
+        let v = k.clone();
+        (k, v)
+    }
+
+    #[test]
+    fn join_leases_first_free_row_and_splices() {
+        let mut g = group();
+        let (k1, v1) = row_cache(7.0);
+        let row = g.join(42, &k1, &v1).unwrap();
+        assert_eq!(row, 0);
+        assert_eq!(g.free_rows(), 2);
+        assert_eq!(g.occupant(0), Some(42));
+        assert_eq!(g.k.at(&[1, 0, 1, 3, 2]), 7.0);
+        assert_eq!(g.k.at(&[1, 1, 1, 3, 2]), 0.0, "other rows untouched");
+        assert_eq!(g.active_rows(), vec![(0, 42)]);
+    }
+
+    #[test]
+    fn join_rejects_duplicate_slot_and_full_group() {
+        let mut g = group();
+        let (k1, v1) = row_cache(1.0);
+        g.join(1, &k1, &v1).unwrap();
+        assert!(g.join(1, &k1, &v1).is_err(), "duplicate slot");
+        g.join(2, &k1, &v1).unwrap();
+        g.join(3, &k1, &v1).unwrap();
+        assert!(g.join(4, &k1, &v1).is_err(), "full group");
+    }
+
+    #[test]
+    fn leave_frees_and_zeroes() {
+        let mut g = group();
+        let (k1, v1) = row_cache(5.0);
+        let row = g.join(9, &k1, &v1).unwrap();
+        assert_eq!(g.leave(row).unwrap(), 9);
+        assert_eq!(g.free_rows(), 3);
+        assert_eq!(g.k.at(&[0, row, 0, 0, 0]), 0.0);
+        assert!(g.leave(row).is_err(), "double leave");
+        assert!(g.is_empty());
+    }
+
+    #[test]
+    fn rows_are_reused_after_leave() {
+        let mut g = group();
+        let (k1, v1) = row_cache(1.0);
+        let r0 = g.join(1, &k1, &v1).unwrap();
+        g.join(2, &k1, &v1).unwrap();
+        g.leave(r0).unwrap();
+        let r2 = g.join(3, &k1, &v1).unwrap();
+        assert_eq!(r2, r0, "freed row is reused");
+    }
+
+    #[test]
+    fn adopt_validates_dims() {
+        let mut g = group();
+        let bad = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        assert!(g.adopt(bad.clone(), bad).is_err());
+        let good = Tensor::<f32>::zeros(&[2, 3, 2, 8, 4]);
+        assert!(g.adopt(good.clone(), good).is_ok());
+    }
+}

@@ -1,0 +1,151 @@
+//! Request model: what enters the engine, its in-flight state, and the
+//! completion record handed back (with the speculative bookkeeping the
+//! paper's tables aggregate).
+
+use std::time::Instant;
+
+use crate::metrics::SpecStats;
+use crate::spec::drafter::{DraftCost, Drafter};
+
+/// Generation parameters for one request.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    /// Sampling temperature; `0.0` = greedy (paper's T=0 setting).
+    pub temp: f64,
+    /// Maximum new tokens to generate.
+    pub max_new: usize,
+    /// Per-request sampling seed (forked from the engine seed when absent).
+    pub seed: Option<u64>,
+    /// Stop at `<eos>`.
+    pub stop_at_eos: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams { temp: 0.0, max_new: 96, seed: None, stop_at_eos: true }
+    }
+}
+
+/// An admitted request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+    /// Task family tag (workload benches group metrics by it).
+    pub task: String,
+    pub submitted_at: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
+        Request {
+            id,
+            prompt,
+            params,
+            task: String::new(),
+            submitted_at: Instant::now(),
+        }
+    }
+
+    pub fn with_task(mut self, task: &str) -> Self {
+        self.task = task.to_string();
+        self
+    }
+}
+
+/// Why a request stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxNewTokens,
+    ContextFull,
+}
+
+/// In-flight per-request state owned by the scheduler.
+pub struct RequestState {
+    pub req: Request,
+    /// All committed tokens (prompt + generated).
+    pub committed: Vec<i32>,
+    /// KV coverage: positions `0..cached` hold committed tokens
+    /// (invariant: `cached == committed.len() - 1` after prefill).
+    pub cached: usize,
+    pub generated: usize,
+    pub drafter: Box<dyn Drafter>,
+    pub rng: crate::util::rng::Pcg,
+    pub stats: SpecStats,
+    pub first_token_at: Option<Instant>,
+    pub finished: Option<FinishReason>,
+}
+
+impl RequestState {
+    pub fn new(req: Request, drafter: Box<dyn Drafter>, rng: crate::util::rng::Pcg) -> Self {
+        let committed = req.prompt.clone();
+        RequestState {
+            req,
+            committed,
+            cached: 0,
+            generated: 0,
+            drafter,
+            rng,
+            stats: SpecStats::default(),
+            first_token_at: None,
+            finished: None,
+        }
+    }
+
+    /// Tokens generated beyond the prompt.
+    pub fn output_tokens(&self) -> &[i32] {
+        &self.committed[self.req.prompt.len()..]
+    }
+
+    pub fn last_token(&self) -> i32 {
+        *self.committed.last().expect("non-empty committed")
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.finished.is_none()
+    }
+}
+
+/// Completion record returned to the caller.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub task: String,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    pub stats: SpecStats,
+    pub draft_cost: DraftCost,
+    /// Wall-clock seconds from submission to completion / to first token.
+    pub latency_s: f64,
+    pub ttft_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::VanillaDrafter;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn state_tracks_output_tokens() {
+        let req = Request::new(1, vec![10, 11, 12], GenParams::default()).with_task("gsm8k");
+        let mut st = RequestState::new(req, Box::new(VanillaDrafter), Pcg::seeded(0));
+        assert_eq!(st.output_tokens(), &[] as &[i32]);
+        assert_eq!(st.last_token(), 12);
+        st.committed.extend_from_slice(&[13, 14]);
+        st.generated = 2;
+        assert_eq!(st.output_tokens(), &[13, 14]);
+        assert!(st.is_active());
+        st.finished = Some(FinishReason::Eos);
+        assert!(!st.is_active());
+    }
+
+    #[test]
+    fn default_params_are_greedy() {
+        let p = GenParams::default();
+        assert_eq!(p.temp, 0.0);
+        assert!(p.stop_at_eos);
+    }
+}

@@ -1,0 +1,157 @@
+//! Request router: the thread-safe front door.
+//!
+//! The `Engine` is single-threaded around the PJRT client (and `!Send` by
+//! construction), so the router owns it on a dedicated thread and exposes a
+//! channel-based handle: submissions in, completions out, with bounded
+//! admission (backpressure) and graceful shutdown. The TCP server and the
+//! benches both talk to this handle.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Engine, EngineConfig};
+use super::request::{Completion, GenParams};
+
+enum Msg {
+    Submit { prompt: Vec<i32>, params: GenParams, task: String, reply: Sender<u64> },
+    Shutdown,
+}
+
+/// Handle to an engine running on its own thread.
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+    completions: Receiver<Completion>,
+    join: Option<JoinHandle<Result<()>>>,
+    /// Soft cap on in-flight submissions (admission control).
+    max_queue: usize,
+    queued: std::cell::Cell<usize>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread. `artifacts` is the manifest root; engine
+    /// construction happens on the thread (the PJRT client is not `Send`).
+    pub fn spawn(artifacts: PathBuf, model: String, cfg: EngineConfig,
+                 max_queue: usize) -> Result<Self> {
+        let (tx, rx) = channel::<Msg>();
+        let (done_tx, done_rx) = channel::<Completion>();
+        let join = std::thread::Builder::new()
+            .name("quasar-engine".into())
+            .spawn(move || -> Result<()> {
+                let rt = std::rc::Rc::new(crate::runtime::XlaRuntime::cpu()?);
+                let manifest = crate::runtime::Manifest::load(&artifacts)?;
+                let mr = std::rc::Rc::new(crate::runtime::ModelRuntime::load(
+                    rt, &manifest, &model,
+                )?);
+                let mut engine = Engine::new(mr, cfg)?;
+                loop {
+                    // Drain control messages without blocking the decode loop.
+                    let mut shutdown = false;
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Msg::Submit { prompt, params, task, reply }) => {
+                                let id = engine.submit(prompt, params, &task);
+                                let _ = reply.send(id);
+                            }
+                            Ok(Msg::Shutdown) | Err(TryRecvError::Disconnected) => {
+                                shutdown = true;
+                                break;
+                            }
+                            Err(TryRecvError::Empty) => break,
+                        }
+                    }
+                    if shutdown && engine.in_flight() == 0 {
+                        return Ok(());
+                    }
+                    if engine.in_flight() > 0 {
+                        engine.step()?;
+                        for c in engine.take_completions() {
+                            let _ = done_tx.send(c);
+                        }
+                    } else {
+                        // Idle: block briefly for the next submission.
+                        match rx.recv_timeout(Duration::from_millis(5)) {
+                            Ok(Msg::Submit { prompt, params, task, reply }) => {
+                                let id = engine.submit(prompt, params, &task);
+                                let _ = reply.send(id);
+                            }
+                            Ok(Msg::Shutdown) => return Ok(()),
+                            Err(_) => {}
+                        }
+                    }
+                }
+            })?;
+        Ok(EngineHandle {
+            tx,
+            completions: done_rx,
+            join: Some(join),
+            max_queue,
+            queued: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Submit; `Err` when the admission queue is full (backpressure) or the
+    /// engine thread is gone.
+    pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<u64> {
+        if self.queued.get() >= self.max_queue {
+            return Err(anyhow!("admission queue full ({} in flight)", self.queued.get()));
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Submit { prompt, params, task:
+                task.to_string(), reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread terminated"))?;
+        let id = reply_rx
+            .recv_timeout(Duration::from_secs(10))
+            .map_err(|_| anyhow!("engine did not ack submission"))?;
+        self.queued.set(self.queued.get() + 1);
+        Ok(id)
+    }
+
+    /// Non-blocking poll for a finished request.
+    pub fn try_next_completion(&self) -> Option<Completion> {
+        match self.completions.try_recv() {
+            Ok(c) => {
+                self.queued.set(self.queued.get().saturating_sub(1));
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Blocking wait (with timeout) for a finished request.
+    pub fn next_completion(&self, timeout: Duration) -> Option<Completion> {
+        match self.completions.recv_timeout(timeout) {
+            Ok(c) => {
+                self.queued.set(self.queued.get().saturating_sub(1));
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.queued.get()
+    }
+
+    /// Graceful shutdown: drain in-flight work, then join.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

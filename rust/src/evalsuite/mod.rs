@@ -1,0 +1,174 @@
+//! Downstream-accuracy evaluation (Table 4's measurable analogue,
+//! DESIGN.md §1): teacher-forced comparison of the BF16-stand-in and W8A8
+//! verifiers on held-out per-task rows from `artifacts/evalset.json`.
+//!
+//! Reported per task family:
+//!   * top-1 agreement between variants (does quantization flip the argmax —
+//!     the paper's §4.5 "as long as the quantization does not flip the top-1
+//!     prediction" criterion),
+//!   * per-variant teacher-forced perplexity and the relative delta (the
+//!     paper's accuracy-Δ column), and
+//!   * mean KL(fp32 || w8a8) over next-token distributions (§3.4's
+//!     "negligible KL divergence" claim).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ModelRuntime, Tensor};
+use crate::spec::softmax_t;
+use crate::util::json::parse_file;
+
+/// One teacher-forcing row.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub ids: Vec<i32>,
+    pub len: usize,
+}
+
+/// Per-task accuracy comparison.
+#[derive(Debug, Clone)]
+pub struct TaskReport {
+    pub task: String,
+    pub positions: usize,
+    pub top1_agreement: f64,
+    pub ppl_fp32: f64,
+    pub ppl_w8a8: f64,
+    pub mean_kl: f64,
+}
+
+impl TaskReport {
+    /// The paper's Δ column analogue: relative PPL degradation (%).
+    pub fn ppl_delta_pct(&self) -> f64 {
+        (self.ppl_w8a8 / self.ppl_fp32 - 1.0) * 100.0
+    }
+}
+
+/// Load the eval set grouped by task.
+pub fn load_evalset(path: &std::path::Path) -> Result<Vec<(String, Vec<EvalRow>)>> {
+    let j = parse_file(path).context("loading evalset.json")?;
+    let mut out = Vec::new();
+    for (task, arr) in j.get("tasks")?.as_obj()? {
+        let rows = arr
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(EvalRow {
+                    ids: r.get("ids")?.as_i32_vec()?,
+                    len: r.get("len")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>, crate::util::json::JsonError>>()?;
+        out.push((task.clone(), rows));
+    }
+    Ok(out)
+}
+
+/// Teacher-forced logits for a batch of rows under one variant: runs the
+/// prefill artifact (positions 0..P-1) and returns `[rows][pos][vocab]`
+/// logits for the valid positions of each row.
+fn forced_logits(mr: &Rc<ModelRuntime>, variant: &str, rows: &[&EvalRow])
+                 -> Result<Vec<Tensor<f32>>> {
+    let cfg = mr.cfg().clone();
+    let p = cfg.prefill_len;
+    let buckets = mr.entry.buckets(variant, "prefill");
+    let b = buckets.iter().copied().max().unwrap_or(1);
+    let mut out = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(b) {
+        let mut toks = vec![0i32; b * p];
+        for (i, r) in chunk.iter().enumerate() {
+            let n = (r.len - 1).min(p); // last id is target-only
+            toks[i * p..i * p + n].copy_from_slice(&r.ids[..n]);
+        }
+        let (k, v) = mr.empty_cache(cfg.n_layers, b);
+        let o = mr.run_chunk(variant, "prefill", b, &toks, &k, &v, &vec![0; b])?;
+        for (i, _r) in chunk.iter().enumerate() {
+            // slice row i logits [p, vocab]
+            let mut t = Tensor::zeros(&[p, cfg.vocab_size]);
+            for pos in 0..p {
+                t.data[pos * cfg.vocab_size..(pos + 1) * cfg.vocab_size]
+                    .copy_from_slice(o.logits.row(&[i, pos]));
+            }
+            out.push(t);
+        }
+    }
+    Ok(out)
+}
+
+/// Run the full Table-4 comparison for one task's rows.
+pub fn compare_task(mr: &Rc<ModelRuntime>, task: &str, rows: &[EvalRow],
+                    max_rows: usize) -> Result<TaskReport> {
+    let cfg = mr.cfg().clone();
+    let use_rows: Vec<&EvalRow> = rows.iter().take(max_rows).collect();
+    let lf = forced_logits(mr, "fp32", &use_rows)?;
+    let lq = forced_logits(mr, "w8a8", &use_rows)?;
+
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut nll_f = 0.0f64;
+    let mut nll_q = 0.0f64;
+    let mut kl_sum = 0.0f64;
+    let mut pf = Vec::new();
+    let mut pq = Vec::new();
+    for ((row, f), q) in use_rows.iter().zip(&lf).zip(&lq) {
+        let n = (row.len - 1).min(cfg.prefill_len);
+        for pos in 0..n {
+            let target = row.ids[pos + 1] as usize;
+            let rf = f.row(&[pos]);
+            let rq = q.row(&[pos]);
+            softmax_t(rf, 1.0, &mut pf);
+            softmax_t(rq, 1.0, &mut pq);
+            agree += usize::from(crate::spec::argmax(rf) == crate::spec::argmax(rq));
+            nll_f += -(pf[target].max(1e-12) as f64).ln();
+            nll_q += -(pq[target].max(1e-12) as f64).ln();
+            kl_sum += pf
+                .iter()
+                .zip(&pq)
+                .map(|(&a, &b)| {
+                    let a = a.max(1e-12) as f64;
+                    let b = b.max(1e-12) as f64;
+                    a * (a / b).ln()
+                })
+                .sum::<f64>();
+            total += 1;
+        }
+    }
+    let totalf = total.max(1) as f64;
+    Ok(TaskReport {
+        task: task.to_string(),
+        positions: total,
+        top1_agreement: agree as f64 / totalf,
+        ppl_fp32: (nll_f / totalf).exp(),
+        ppl_w8a8: (nll_q / totalf).exp(),
+        mean_kl: kl_sum / totalf,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn evalset_parses() {
+        let j = parse(
+            r#"{"tasks": {"gsm8k": [{"ids": [1,2,3,4], "len": 4}]}, "row_len": 3}"#,
+        )
+        .unwrap();
+        std::fs::write("/tmp/quasar_evalset_test.json", j.to_string()).unwrap();
+        let rows = load_evalset(std::path::Path::new("/tmp/quasar_evalset_test.json")).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, "gsm8k");
+        assert_eq!(rows[0].1[0].ids, vec![1, 2, 3, 4]);
+        assert_eq!(rows[0].1[0].len, 4);
+    }
+
+    #[test]
+    fn report_delta_formula() {
+        let r = TaskReport {
+            task: "t".into(), positions: 10, top1_agreement: 0.99,
+            ppl_fp32: 2.0, ppl_w8a8: 2.06, mean_kl: 0.01,
+        };
+        assert!((r.ppl_delta_pct() - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! # Quasar — Quantized Self-Speculative Acceleration for Rapid Inference
+//!
+//! Production-style reproduction of *Quasar: Quantized Self-Speculative
+//! Acceleration for Rapid Inference via Memory-Efficient Verification*
+//! (Huang & Wen, 2026) as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — request router, continuous batcher, prompt-lookup
+//!   drafter, rejection-sampling verifier logic, KV-cache manager, scheduler,
+//!   metrics and server. Python never runs on the request path.
+//! * **L2** — the target LM as a JAX graph (`python/compile/model.py`),
+//!   AOT-lowered to HLO text per (variant, fn, batch-bucket).
+//! * **L1** — the fused W8A8 verification GEMM as a Pallas kernel
+//!   (`python/compile/kernels/quant_matmul.py`).
+//!
+//! Entry points: [`runtime::Manifest`] + [`runtime::ModelRuntime`] to load
+//! artifacts, [`coordinator::Engine`] to serve, `rust/benches/` to
+//! regenerate every table and figure of the paper (DESIGN.md §4).
+
+pub mod bench;
+pub mod coordinator;
+pub mod evalsuite;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,123 @@
+//! Quasar leader binary: `serve` a model over TCP, `generate` from a prompt
+//! on the command line, or dump `info` about the artifact set.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use quasar::coordinator::{DrafterKind, Engine, EngineConfig, EngineHandle, GenParams};
+use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
+use quasar::spec::NgramConfig;
+use quasar::tokenizer::Tokenizer;
+use quasar::util::cli::Cli;
+
+fn main() {
+    // PJRT init + HLO parsing need a big stack (util::bigstack docs).
+    quasar::util::bigstack::run(|| {
+        if let Err(e) = real_main() {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    })
+}
+
+fn drafter_kind(name: &str, gamma: usize) -> Result<DrafterKind> {
+    Ok(match name {
+        "vanilla" => DrafterKind::Vanilla,
+        "ngram" => DrafterKind::Ngram(NgramConfig { gamma, ..Default::default() }),
+        "pruned90" | "pruned75" | "pruned50" => DrafterKind::Pruned(name.to_string()),
+        other => bail!("unknown drafter '{other}' (vanilla|ngram|pruned90|pruned75|pruned50)"),
+    })
+}
+
+fn real_main() -> Result<()> {
+    let parsed = Cli::new(
+        "quasar",
+        "Quantized self-speculative serving engine (paper reproduction).\n\
+         Subcommands (first positional): serve | generate | info",
+    )
+    .opt("artifacts", Some("artifacts"), "artifact root (make artifacts)")
+    .opt("model", Some("qwen3-like"), "model name from the manifest")
+    .opt("verifier", Some("w8a8"), "verifier variant: fp32 | w8a8")
+    .opt("drafter", Some("ngram"), "vanilla | ngram | pruned{90,75,50}")
+    .opt("gamma", Some("5"), "speculation depth cap")
+    .opt("batch", Some("4"), "batch bucket (1 or 4)")
+    .opt("port", Some("7878"), "serve: TCP port")
+    .opt("prompt", None, "generate: prompt text")
+    .opt("max-new", Some("64"), "generate: new-token budget")
+    .opt("temp", Some("0"), "sampling temperature (0 = greedy)")
+    .parse_env();
+
+    let cmd = parsed
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("info")
+        .to_string();
+    let artifacts = PathBuf::from(parsed.str("artifacts"));
+    let model = parsed.str("model");
+    let cfg = EngineConfig {
+        verifier: parsed.str("verifier"),
+        drafter: drafter_kind(&parsed.str("drafter"), parsed.usize("gamma"))?,
+        batch: parsed.usize("batch"),
+        gamma: parsed.usize("gamma"),
+        seed: 0,
+    };
+
+    match cmd.as_str() {
+        "info" => {
+            let manifest = Manifest::load(&artifacts)?;
+            println!("device model : {}", manifest.cost_model.device);
+            for (name, m) in &manifest.models {
+                println!(
+                    "model {name}: {} layers, d={}, vocab={}, {} artifacts, ~{:.1}M params",
+                    m.cfg.n_layers, m.cfg.d_model, m.cfg.vocab_size,
+                    m.artifacts.len(), m.cfg.n_params() as f64 / 1e6
+                );
+            }
+            Ok(())
+        }
+        "generate" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let tok = Tokenizer::load(&manifest.tokenizer_path)?;
+            let rt = Rc::new(XlaRuntime::cpu()?);
+            let mr = Rc::new(ModelRuntime::load(rt, &manifest, &model)?);
+            let mut engine = Engine::new(mr, cfg)?;
+            let prompt = parsed
+                .get("prompt")
+                .map(String::from)
+                .unwrap_or_else(|| "question : tom has 1 2 apples .".into());
+            let params = GenParams {
+                temp: parsed.f64("temp"),
+                max_new: parsed.usize("max-new"),
+                seed: None,
+                stop_at_eos: true,
+            };
+            engine.submit(tok.encode(&prompt, true), params, "cli");
+            let done = engine.run_to_completion()?;
+            let c = &done[0];
+            println!("{}", tok.decode(&c.tokens));
+            eprintln!(
+                "[stats] steps={} L={:.2} alpha={:.2} latency={:.2}s method={}",
+                c.stats.steps,
+                c.stats.mean_acceptance_len(),
+                c.stats.acceptance_rate(),
+                c.latency_s,
+                engine.cfg.method_name(),
+            );
+            Ok(())
+        }
+        "serve" => {
+            let manifest = Manifest::load(&artifacts)?;
+            let tok = Tokenizer::load(&manifest.tokenizer_path)?;
+            let port = parsed.usize("port");
+            let handle = EngineHandle::spawn(artifacts, model.clone(), cfg, 256)?;
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
+            eprintln!("[quasar] serving {model} on 127.0.0.1:{port}");
+            let served = quasar::server::serve(listener, handle, tok, 8)?;
+            eprintln!("[quasar] shut down after {served} requests");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (serve|generate|info)"),
+    }
+}

@@ -1,0 +1,212 @@
+//! Engine-wide metrics registry: counters, gauges and latency histograms,
+//! cheap enough for the hot loop and dumpable as JSON for the server's
+//! `/metrics`-style endpoint and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+
+/// Speculative-decoding bookkeeping the paper's tables are built from.
+#[derive(Debug, Default, Clone)]
+pub struct SpecStats {
+    /// Decoding steps (one draft+verify round or one fallback decode).
+    pub steps: u64,
+    /// Tokens emitted (accepted + bonus/corrective).
+    pub tokens_out: u64,
+    /// Draft tokens proposed by the drafter.
+    pub drafted: u64,
+    /// Draft tokens accepted by the verifier.
+    pub accepted: u64,
+    /// Steps where the drafter found no candidate (plain decode).
+    pub draft_misses: u64,
+}
+
+impl SpecStats {
+    /// Mean acceptance length `L`: tokens emitted per decoding step — the
+    /// paper's quality metric (1.0 = vanilla autoregressive).
+    pub fn mean_acceptance_len(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.steps as f64
+    }
+
+    /// Token acceptance rate `alpha` over proposed drafts.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+
+    pub fn merge(&mut self, o: &SpecStats) {
+        self.steps += o.steps;
+        self.tokens_out += o.tokens_out;
+        self.drafted += o.drafted;
+        self.accepted += o.accepted;
+        self.draft_misses += o.draft_misses;
+    }
+}
+
+/// Global-ish registry handed around by reference.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, AtomicI64>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: i64) {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .store(v, Ordering::Relaxed);
+    }
+
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.hists.lock().unwrap();
+        m.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<Histogram> {
+        self.hists.lock().unwrap().get(name).cloned()
+    }
+
+    /// Snapshot as JSON (stable key order for golden tests).
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64))
+            })
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| {
+                (k.clone(), Json::Num(v.load(Ordering::Relaxed) as f64))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", Json::num(h.mean())),
+                        ("p50", Json::num(h.p50())),
+                        ("p95", Json::num(h.p95())),
+                        ("p99", Json::num(h.p99())),
+                        ("max", Json::num(h.max())),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(hists)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("requests", 1);
+        m.inc("requests", 2);
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        m.set_gauge("queue_depth", 5);
+        m.set_gauge("queue_depth", 7);
+        assert_eq!(m.gauge("queue_depth"), 7);
+    }
+
+    #[test]
+    fn histograms_record() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("latency", i as f64 * 0.001);
+        }
+        let h = m.hist("latency").unwrap();
+        assert_eq!(h.count(), 100);
+        assert!(h.p50() > 0.03 && h.p50() < 0.08, "{}", h.p50());
+    }
+
+    #[test]
+    fn json_snapshot_contains_all() {
+        let m = Metrics::new();
+        m.inc("a", 1);
+        m.set_gauge("g", -2);
+        m.observe("h", 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("a").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(j.get("gauges").unwrap().get("g").unwrap().as_i64().unwrap(), -2);
+        assert_eq!(
+            j.get("histograms").unwrap().get("h").unwrap().get("count").unwrap().as_i64().unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn spec_stats_derivations() {
+        let s = SpecStats { steps: 10, tokens_out: 14, drafted: 20, accepted: 4, draft_misses: 2 };
+        assert!((s.mean_acceptance_len() - 1.4).abs() < 1e-12);
+        assert!((s.acceptance_rate() - 0.2).abs() < 1e-12);
+        let mut t = SpecStats::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.steps, 20);
+        assert_eq!(t.tokens_out, 28);
+    }
+}

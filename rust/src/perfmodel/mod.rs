@@ -1,0 +1,265 @@
+//! Roofline cost model of the simulated Ascend-910B2-class accelerator
+//! (paper §3.4, Eqs. 11–13; DESIGN.md §1 substitution row 2).
+//!
+//! Measured quantities — acceptance lengths, call counts, per-call token
+//! usage — come from *real* engine runs on real numerics; this module prices
+//! each call on the target device, where the paper's bandwidth arithmetic
+//! lives:
+//!
+//!   T_verify^BF16 ~ M·2B / BW + T_compute      (Eq. 11)
+//!   T_verify^INT8 ~ M·1B / BW + T_compute      (Eq. 12)
+//!   S = (gamma·alpha + 1) / (T_draft + T_verify)   (Eq. 13)
+//!
+//! We use the roofline refinement `max(T_mem, T_compute) + T_launch` rather
+//! than the paper's additive approximation; in the memory-bound regime the
+//! two coincide (attention/linear compute hides entirely under the weight
+//! stream), and the max() form correctly caps the compute-bound end of the
+//! Table-3 gamma sweep.
+
+use crate::coordinator::{CallLog, CallRecord, FnKind};
+use crate::runtime::{CostModelCfg, ModelCfg};
+use crate::spec::drafter::DraftCost;
+
+/// Priced breakdown of one call (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CallTime {
+    pub weight_s: f64,
+    pub kv_s: f64,
+    pub act_s: f64,
+    pub compute_s: f64,
+    pub launch_s: f64,
+}
+
+impl CallTime {
+    /// Roofline total: memory and compute overlap; launch does not.
+    pub fn total(&self) -> f64 {
+        (self.weight_s + self.kv_s + self.act_s).max(self.compute_s) + self.launch_s
+    }
+
+    /// The paper's additive form (Eq. 11/12), for the Fig-1 comparison.
+    pub fn additive(&self) -> f64 {
+        self.weight_s + self.kv_s + self.act_s + self.compute_s + self.launch_s
+    }
+}
+
+/// Device + model pricing context.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub device: CostModelCfg,
+    pub model: ModelCfg,
+}
+
+impl PerfModel {
+    pub fn new(device: CostModelCfg, model: ModelCfg) -> Self {
+        PerfModel { device, model }
+    }
+
+    fn bytes_per_weight(&self, variant: &str) -> f64 {
+        self.device
+            .bytes_per_weight
+            .get(variant)
+            .copied()
+            .unwrap_or(2.0)
+    }
+
+    /// Parameters resident for a depth-`n_layers` variant of the model.
+    pub fn variant_params(&self, n_layers: usize) -> f64 {
+        let (d, f) = (self.model.d_model as f64, self.model.ffn_dim as f64);
+        let per_layer = 4.0 * d * d + 3.0 * d * f + 2.0 * d;
+        self.model.vocab_size as f64 * d + n_layers as f64 * per_layer + d
+    }
+
+    /// Price one engine call on the simulated device.
+    pub fn price(&self, rec: &CallRecord) -> CallTime {
+        self.price_parts(&rec.variant, rec.n_layers, rec.batch, rec.tokens_used)
+    }
+
+    /// Price a (variant, depth, batch, chunk-tokens) invocation.
+    pub fn price_parts(&self, variant: &str, n_layers: usize, batch: usize,
+                       tokens: usize) -> CallTime {
+        let m = &self.model;
+        let (d, f, h, s, hd, v) = (
+            m.d_model as f64, m.ffn_dim as f64, m.n_heads as f64,
+            m.max_seq as f64, m.head_dim as f64, m.vocab_size as f64,
+        );
+        let bw = self.device.hbm_bw_bytes_per_s;
+        let tok = (batch * tokens) as f64;
+        let l = n_layers as f64;
+
+        // Weights stream once per forward pass regardless of batch/chunk —
+        // the whole point of parallel verification (and of W8A8 halving it).
+        let weight_bytes = self.variant_params(n_layers) * self.bytes_per_weight(variant);
+        // KV cache reads: "BF16" cache, both K and V, all resident positions.
+        let kv_bytes = 2.0 * l * batch as f64 * h * s * hd * 2.0;
+        // Activations in/out of each sublayer (bf16).
+        let act_bytes = tok * d * 2.0 * (8.0 * l + 2.0);
+
+        // MACs: quantized variants run the linear GEMMs on the int8 path;
+        // attention and the (kept-high-precision) unembedding stay bf16.
+        let linear_macs = tok * l * (4.0 * d * d + 3.0 * d * f);
+        let attn_macs = batch as f64 * l * h * tokens as f64 * s * hd * 2.0;
+        let unembed_macs = tok * d * v;
+        let (lin_ops, other_ops) = (linear_macs * 2.0, (attn_macs + unembed_macs) * 2.0);
+        let lin_rate = if variant == "w8a8" {
+            self.device.int8_ops_per_s
+        } else {
+            self.device.bf16_ops_per_s
+        };
+        CallTime {
+            weight_s: weight_bytes / bw,
+            kv_s: kv_bytes / bw,
+            act_s: act_bytes / bw,
+            compute_s: lin_ops / lin_rate + other_ops / self.device.bf16_ops_per_s,
+            launch_s: self.device.kernel_launch_s,
+        }
+    }
+
+    /// Price the drafter's own work. N-gram lookups are host-side and cost
+    /// `drafter_cost_per_token_s`; pruned-model drafting is priced as real
+    /// forward passes at the drafter's depth.
+    pub fn price_draft_cost(&self, c: &DraftCost, pruned_layers: Option<usize>) -> f64 {
+        let mut t = c.lookup_tokens as f64 * self.device.drafter_cost_per_token_s;
+        if let Some(nl) = pruned_layers {
+            t += c.prefill_calls as f64
+                * self.price_parts("fp32", nl, 1, self.model.prefill_len).total();
+            t += c.decode_calls as f64 * self.price_parts("fp32", nl, 1, 1).total();
+        }
+        t
+    }
+
+    /// Modeled wall-clock of a whole run.
+    pub fn run_time(&self, log: &CallLog, pruned_layers: Option<usize>) -> f64 {
+        let calls: f64 = log.records.iter().map(|r| self.price(r).total()).sum();
+        calls + self.price_draft_cost(&log.draft_cost, pruned_layers)
+    }
+
+    /// Modeled decode-phase time only (prefill excluded): matches how the
+    /// paper reports decoding speedup (prefill is identical across methods).
+    pub fn decode_time(&self, log: &CallLog, pruned_layers: Option<usize>) -> f64 {
+        let calls: f64 = log
+            .records
+            .iter()
+            .filter(|r| r.fn_kind != FnKind::Prefill)
+            .map(|r| self.price(r).total())
+            .sum();
+        calls + self.price_draft_cost(&log.draft_cost, pruned_layers)
+    }
+
+    /// Eq. 13 closed form: speedup of speculation with acceptance rate
+    /// `alpha`, depth `gamma`, per-step draft cost `t_draft`, against
+    /// vanilla decoding at `t_decode` per token.
+    pub fn eq13_speedup(&self, variant: &str, gamma: usize, alpha: f64,
+                        t_draft: f64) -> f64 {
+        let l = self.model.n_layers;
+        let t_dec_bf16 = self.price_parts("fp32", l, 1, 1).total();
+        let t_verify = self.price_parts(variant, l, 1, gamma + 1).total();
+        let tokens_per_step = gamma as f64 * alpha + 1.0;
+        (tokens_per_step / (t_draft + t_verify)) * t_dec_bf16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn device() -> CostModelCfg {
+        CostModelCfg {
+            device: "sim".into(),
+            hbm_bw_bytes_per_s: 1.6e12,
+            int8_ops_per_s: 376e12,
+            bf16_ops_per_s: 188e12,
+            bytes_per_weight: BTreeMap::from([
+                ("fp32".to_string(), 2.0),
+                ("w8a8".to_string(), 1.0),
+                ("pruned75".to_string(), 2.0),
+            ]),
+            kernel_launch_s: 2e-5,
+            drafter_cost_per_token_s: 1e-6,
+        }
+    }
+
+    fn model() -> ModelCfg {
+        ModelCfg {
+            name: "m".into(), vocab_size: 320, d_model: 256, n_layers: 6,
+            n_heads: 8, ffn_dim: 768, max_seq: 256, prefill_len: 128,
+            gamma_max: 10, head_dim: 32,
+        }
+    }
+
+    fn pm() -> PerfModel {
+        PerfModel::new(device(), model())
+    }
+
+    #[test]
+    fn w8a8_halves_weight_time_exactly() {
+        let pm = pm();
+        let a = pm.price_parts("fp32", 6, 1, 9);
+        let b = pm.price_parts("w8a8", 6, 1, 9);
+        assert!((a.weight_s / b.weight_s - 2.0).abs() < 1e-12);
+        assert_eq!(a.kv_s, b.kv_s);
+        assert!(b.compute_s < a.compute_s, "int8 compute is faster");
+        assert!(b.total() < a.total());
+    }
+
+    #[test]
+    fn decode_is_memory_bound_verify_gets_cheaper_per_token() {
+        let pm = pm();
+        let dec = pm.price_parts("fp32", 6, 1, 1);
+        assert!(
+            dec.weight_s + dec.kv_s + dec.act_s > dec.compute_s,
+            "single-token decode must be memory-bound on this device"
+        );
+        // Verification amortizes the weight stream over gamma+1 tokens.
+        let ver = pm.price_parts("fp32", 6, 1, 9);
+        let per_tok_dec = dec.total();
+        let per_tok_ver = ver.total() / 9.0;
+        assert!(per_tok_ver < per_tok_dec * 0.5);
+    }
+
+    #[test]
+    fn pruned_depth_scales_weight_bytes() {
+        let pm = pm();
+        let full = pm.price_parts("fp32", 6, 1, 1);
+        let half = pm.price_parts("fp32", 3, 1, 1);
+        assert!(half.weight_s < full.weight_s);
+        assert!(half.weight_s > full.weight_s * 0.4, "embedding is shared");
+    }
+
+    #[test]
+    fn eq13_monotone_in_alpha_and_beats_one_for_good_drafts() {
+        let pm = pm();
+        let s_low = pm.eq13_speedup("fp32", 5, 0.1, 5e-6);
+        let s_high = pm.eq13_speedup("fp32", 5, 0.9, 5e-6);
+        assert!(s_high > s_low);
+        assert!(s_high > 1.5, "gamma=5 alpha=0.9 should speed up, got {s_high}");
+        let s_quasar = pm.eq13_speedup("w8a8", 5, 0.9, 5e-6);
+        assert!(s_quasar > s_high, "quasar verify is cheaper");
+    }
+
+    #[test]
+    fn run_time_sums_calls_and_draft_cost() {
+        let pm = pm();
+        let mut log = CallLog::default();
+        log.record(CallRecord {
+            variant: "fp32".into(), fn_kind: FnKind::Prefill, batch: 1,
+            n_layers: 6, active_rows: 1, tokens_used: 100, wall_s: 0.0,
+        });
+        log.record(CallRecord {
+            variant: "fp32".into(), fn_kind: FnKind::Decode, batch: 1,
+            n_layers: 6, active_rows: 1, tokens_used: 1, wall_s: 0.0,
+        });
+        log.add_draft_cost(&DraftCost { lookup_tokens: 100, ..Default::default() });
+        let total = pm.run_time(&log, None);
+        let decode_only = pm.decode_time(&log, None);
+        assert!(total > decode_only);
+        let with_pruned = pm.run_time(
+            &CallLog {
+                draft_cost: DraftCost { decode_calls: 10, ..Default::default() },
+                ..Default::default()
+            },
+            Some(3),
+        );
+        assert!(with_pruned > 0.0);
+    }
+}

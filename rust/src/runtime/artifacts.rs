@@ -1,0 +1,301 @@
+//! Typed view of `artifacts/manifest.json` — the L2→L3 contract emitted by
+//! `python/compile/aot.py` (DESIGN.md §6).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse_file, Json};
+
+/// Architecture of one exported model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub gamma_max: usize,
+    pub head_dim: usize,
+}
+
+impl ModelCfg {
+    pub fn verify_len(&self) -> usize {
+        self.gamma_max + 1
+    }
+
+    /// Parameter count of the full (unpruned) model.
+    pub fn n_params(&self) -> usize {
+        let (d, f) = (self.d_model, self.ffn_dim);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        self.vocab_size * d + self.n_layers * per_layer + d
+    }
+}
+
+/// Analytic per-call cost exported by aot.py, feeding the roofline model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArtifactCost {
+    pub weight_bytes_device: f64,
+    pub kv_bytes: f64,
+    pub act_bytes: f64,
+    pub macs: f64,
+    pub tokens_per_call: f64,
+}
+
+/// One exported HLO program.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub variant: String,
+    pub fn_name: String,
+    pub batch: usize,
+    pub chunk_len: usize,
+    pub n_layers: usize,
+    pub path: PathBuf,
+    pub weights_file: String,
+    pub weight_args: Vec<String>,
+    pub cost: ArtifactCost,
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub cfg: ModelCfg,
+    pub weights: BTreeMap<String, String>, // variant-class -> npz path
+    pub artifacts: Vec<ArtifactEntry>,
+    pub goldens_path: PathBuf,
+    pub calibration_path: PathBuf,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, variant: &str, fn_name: &str, batch: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.variant == variant && a.fn_name == fn_name && a.batch == batch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {variant}/{fn_name}/b{batch} for model {}",
+                    self.cfg.name
+                )
+            })
+    }
+
+    /// The batch buckets available for a (variant, fn).
+    pub fn buckets(&self, variant: &str, fn_name: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant && a.fn_name == fn_name)
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+/// Device constants for the simulated accelerator (DESIGN.md §1).
+#[derive(Debug, Clone)]
+pub struct CostModelCfg {
+    pub device: String,
+    pub hbm_bw_bytes_per_s: f64,
+    pub int8_ops_per_s: f64,
+    pub bf16_ops_per_s: f64,
+    pub bytes_per_weight: BTreeMap<String, f64>,
+    pub kernel_launch_s: f64,
+    pub drafter_cost_per_token_s: f64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub tokenizer_path: PathBuf,
+    pub workloads_path: PathBuf,
+    pub evalset_path: PathBuf,
+    pub cost_model: CostModelCfg,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Self> {
+        let j = parse_file(&root.join("manifest.json"))
+            .context("loading manifest.json (run `make artifacts` first)")?;
+        Self::from_json(root, &j)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn from_json(root: &Path, j: &Json) -> Result<Self> {
+        let version = j.get("version")?.as_i64()?;
+        if version != 1 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let cm = j.get("cost_model")?;
+        let cost_model = CostModelCfg {
+            device: cm.get("device")?.as_str()?.to_string(),
+            hbm_bw_bytes_per_s: cm.get("hbm_bw_bytes_per_s")?.as_f64()?,
+            int8_ops_per_s: cm.get("int8_ops_per_s")?.as_f64()?,
+            bf16_ops_per_s: cm.get("bf16_ops_per_s")?.as_f64()?,
+            bytes_per_weight: cm
+                .get("bytes_per_weight")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_f64()?)))
+                .collect::<Result<_>>()?,
+            kernel_launch_s: cm.get("kernel_launch_s")?.as_f64()?,
+            drafter_cost_per_token_s: cm.get("drafter_cost_per_token_s")?.as_f64()?,
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let c = mj.get("config")?;
+            let cfg = ModelCfg {
+                name: c.get("name")?.as_str()?.to_string(),
+                vocab_size: c.get("vocab_size")?.as_usize()?,
+                d_model: c.get("d_model")?.as_usize()?,
+                n_layers: c.get("n_layers")?.as_usize()?,
+                n_heads: c.get("n_heads")?.as_usize()?,
+                ffn_dim: c.get("ffn_dim")?.as_usize()?,
+                max_seq: c.get("max_seq")?.as_usize()?,
+                prefill_len: c.get("prefill_len")?.as_usize()?,
+                gamma_max: c.get("gamma_max")?.as_usize()?,
+                head_dim: mj.get("head_dim")?.as_usize()?,
+            };
+            let weights = mj
+                .get("weights")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<_>>()?;
+            let mut artifacts = Vec::new();
+            for aj in mj.get("artifacts")?.as_arr()? {
+                let cj = aj.get("cost")?;
+                artifacts.push(ArtifactEntry {
+                    name: aj.get("name")?.as_str()?.to_string(),
+                    variant: aj.get("variant")?.as_str()?.to_string(),
+                    fn_name: aj.get("fn")?.as_str()?.to_string(),
+                    batch: aj.get("batch")?.as_usize()?,
+                    chunk_len: aj.get("chunk_len")?.as_usize()?,
+                    n_layers: aj.get("n_layers")?.as_usize()?,
+                    path: root.join(aj.get("path")?.as_str()?),
+                    weights_file: aj.get("weights_file")?.as_str()?.to_string(),
+                    weight_args: aj
+                        .get("weight_args")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_str().map(String::from))
+                        .collect::<std::result::Result<_, _>>()?,
+                    cost: ArtifactCost {
+                        weight_bytes_device: cj.get("weight_bytes_device")?.as_f64()?,
+                        kv_bytes: cj.get("kv_bytes")?.as_f64()?,
+                        act_bytes: cj.get("act_bytes")?.as_f64()?,
+                        macs: cj.get("macs")?.as_f64()?,
+                        tokens_per_call: cj.get("tokens_per_call")?.as_f64()?,
+                    },
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    cfg,
+                    weights,
+                    artifacts,
+                    goldens_path: root.join(mj.get("goldens")?.as_str()?),
+                    calibration_path: root.join(mj.get("calibration")?.as_str()?),
+                },
+            );
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            tokenizer_path: root.join(j.get("tokenizer")?.as_str()?),
+            workloads_path: root.join(j.get("workloads")?.as_str()?),
+            evalset_path: root.join(j.get("evalset")?.as_str()?),
+            cost_model,
+            models,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        crate::util::json::parse(
+            r#"{
+              "version": 1, "tokenizer": "tok.json",
+              "workloads": "w.json", "evalset": "e.json",
+              "cost_model": {
+                "device": "sim", "hbm_bw_bytes_per_s": 1.6e12,
+                "int8_ops_per_s": 3.76e14, "bf16_ops_per_s": 1.88e14,
+                "bytes_per_weight": {"fp32": 2, "w8a8": 1},
+                "kernel_launch_s": 2e-5, "drafter_cost_per_token_s": 1e-6
+              },
+              "models": {
+                "m": {
+                  "config": {"name":"m","vocab_size":320,"d_model":64,
+                    "n_layers":2,"n_heads":2,"ffn_dim":128,"max_seq":128,
+                    "prefill_len":64,"gamma_max":4,"rope_theta":10000.0},
+                  "head_dim": 32,
+                  "weights": {"fp32":"m/weights_fp32.npz","w8a8":"m/weights_w8a8.npz"},
+                  "calibration": "m/calibration.json",
+                  "goldens": "m/goldens.json",
+                  "artifacts": [
+                    {"name":"fp32_verify_b1","variant":"fp32","fn":"verify",
+                     "batch":1,"chunk_len":5,"n_layers":2,
+                     "path":"m/fp32_verify_b1.hlo.txt",
+                     "weights_file":"m/weights_fp32.npz",
+                     "weight_args":["embed","layers.0.ln1"],
+                     "data_args":[],"outputs":[],
+                     "cost":{"weight_bytes_device":1000,"kv_bytes":2000,
+                             "act_bytes":100,"macs":5000,"tokens_per_call":5}}
+                  ]
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp/x"), &sample_manifest()).unwrap();
+        assert_eq!(m.cost_model.device, "sim");
+        let me = m.model("m").unwrap();
+        assert_eq!(me.cfg.verify_len(), 5);
+        assert_eq!(me.cfg.head_dim, 32);
+        let a = me.artifact("fp32", "verify", 1).unwrap();
+        assert_eq!(a.chunk_len, 5);
+        assert_eq!(a.weight_args.len(), 2);
+        assert_eq!(a.cost.kv_bytes, 2000.0);
+        assert!(me.artifact("w8a8", "verify", 1).is_err());
+        assert!(m.model("nope").is_err());
+        assert_eq!(me.buckets("fp32", "verify"), vec![1]);
+    }
+
+    #[test]
+    fn n_params_formula() {
+        let m = Manifest::from_json(Path::new("/"), &sample_manifest()).unwrap();
+        let cfg = &m.model("m").unwrap().cfg;
+        // 320*64 + 2*(4*64^2 + 3*64*128 + 2*64) + 64
+        assert_eq!(cfg.n_params(), 320 * 64 + 2 * (4 * 4096 + 3 * 8192 + 128) + 64);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut j = sample_manifest();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".into(), Json::Num(2.0));
+        }
+        assert!(Manifest::from_json(Path::new("/"), &j).is_err());
+    }
+}

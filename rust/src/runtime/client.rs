@@ -1,0 +1,218 @@
+//! PJRT execution layer: compiles the AOT HLO-text artifacts and runs them
+//! with device-resident weights.
+//!
+//! Key properties (see DESIGN.md §6 and /opt/xla-example/README.md):
+//!  * HLO **text** interchange — `HloModuleProto::from_text_file` reassigns
+//!    instruction ids, sidestepping the 64-bit-id proto incompatibility.
+//!  * Weights are HLO *arguments*, uploaded once per variant as
+//!    `PjRtBuffer`s (`WeightStore`) and shared by every executable of that
+//!    variant — the request path never re-uploads them.
+//!  * KV caches travel host<->device per call as raw f32 slices; on the CPU
+//!    PJRT backend these are memcpys. `ChunkOutput` hands the advanced
+//!    caches back as owned tensors so the KV manager can splice batch rows.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::FromRawBytes;
+
+use super::artifacts::ArtifactEntry;
+use super::tensor::Tensor;
+
+/// Thin wrapper around the PJRT CPU client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// Device-resident weight buffers, keyed by flattened arg name
+/// (`layers.0.wq.ws`, ...).
+///
+/// The source literals are retained for the store's lifetime:
+/// `buffer_from_host_literal` copies asynchronously on the CPU PJRT backend
+/// and dropping the literal while the copy is in flight is a use-after-free
+/// (observed as flaky SIGSEGV/SIGABRT when loading a second variant's
+/// weights).
+pub struct WeightStore {
+    bufs: HashMap<String, xla::PjRtBuffer>,
+    _literals: Vec<xla::Literal>,
+    pub nbytes_host: usize,
+}
+
+/// One compiled (variant, fn, batch-bucket) program.
+pub struct CompiledChunk {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+    pub cache_dims: Vec<usize>, // [L, B, H, S, hd]
+    pub vocab: usize,
+}
+
+/// Host-side result of one chunk execution.
+pub struct ChunkOutput {
+    /// `[B, T, V]` next-token logits; row `i` conditions on token `i`.
+    pub logits: Tensor<f32>,
+    pub k: Tensor<f32>,
+    pub v: Tensor<f32>,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one variant's weight npz into device buffers.
+    ///
+    /// Goes through `Literal::read_npz` + `buffer_from_host_literal` rather
+    /// than `PjRtBuffer::read_npz`: the latter has an element-type bug in
+    /// xla 0.1.6 (`buffer_from_host_raw_bytes` passes the `ElementType`
+    /// discriminant where XLA expects a `PrimitiveType` value, so F32
+    /// arrives as F16 and S8 as PRED). The literal path converts correctly.
+    pub fn load_weights(&self, path: &Path) -> Result<WeightStore> {
+        let pairs = xla::Literal::read_npz(path, &())
+            .map_err(to_anyhow)
+            .with_context(|| format!("loading weights {}", path.display()))?;
+        let meta = std::fs::metadata(path)?;
+        let mut bufs = HashMap::new();
+        let mut literals = Vec::with_capacity(pairs.len());
+        for (name, lit) in pairs {
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(to_anyhow)
+                .with_context(|| format!("uploading weight '{name}'"))?;
+            bufs.insert(name, buf);
+            literals.push(lit); // keep alive: upload is async (see struct docs)
+        }
+        Ok(WeightStore { bufs, _literals: literals, nbytes_host: meta.len() as usize })
+    }
+
+    /// Compile one artifact (HLO text -> PJRT executable).
+    pub fn compile(&self, entry: &ArtifactEntry, vocab: usize,
+                   head_dim: usize, max_seq: usize, n_heads: usize)
+                   -> Result<CompiledChunk> {
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)
+            .with_context(|| format!("compiling {}", entry.name))?;
+        Ok(CompiledChunk {
+            exe,
+            cache_dims: vec![entry.n_layers, entry.batch, n_heads, max_seq, head_dim],
+            vocab,
+            entry: entry.clone(),
+        })
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(to_anyhow)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(to_anyhow)
+    }
+}
+
+impl WeightStore {
+    /// Resolve the ordered argument buffers for an artifact. Pruned variants
+    /// reference a *subset* of the fp32 arg names, so lookups are by name.
+    pub fn ordered_args<'a>(&'a self, names: &[String]) -> Result<Vec<&'a xla::PjRtBuffer>> {
+        names
+            .iter()
+            .map(|n| {
+                self.bufs
+                    .get(n)
+                    .ok_or_else(|| anyhow!("weight arg '{n}' missing from npz"))
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+impl CompiledChunk {
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn chunk_len(&self) -> usize {
+        self.entry.chunk_len
+    }
+
+    /// Execute the chunk. `tokens` is `[B, T]` row-major, `pos` per-row
+    /// write offsets, caches `[L, B, H, S, hd]`.
+    pub fn run(&self, rt: &XlaRuntime, weights: &WeightStore, tokens: &[i32],
+               k: &Tensor<f32>, v: &Tensor<f32>, pos: &[i32]) -> Result<ChunkOutput> {
+        let (b, t) = (self.entry.batch, self.entry.chunk_len);
+        if tokens.len() != b * t {
+            bail!("tokens len {} != {}x{}", tokens.len(), b, t);
+        }
+        if pos.len() != b {
+            bail!("pos len {} != batch {b}", pos.len());
+        }
+        if k.dims != self.cache_dims || v.dims != self.cache_dims {
+            bail!("cache dims {:?}/{:?} != expected {:?}", k.dims, v.dims, self.cache_dims);
+        }
+
+        let tok_buf = rt.upload_i32(tokens, &[b, t])?;
+        let k_buf = rt.upload_f32(&k.data, &k.dims)?;
+        let v_buf = rt.upload_f32(&v.data, &v.dims)?;
+        let pos_buf = rt.upload_i32(pos, &[b])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            weights.ordered_args(&self.entry.weight_args)?;
+        args.push(&tok_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&pos_buf);
+
+        let outs = self.exe.execute_b(&args).map_err(to_anyhow)?;
+        let first = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = first.to_literal_sync().map_err(to_anyhow)?;
+        let parts = lit.to_tuple().map_err(to_anyhow)?;
+        if parts.len() != 3 {
+            bail!("expected 3 outputs (logits, k, v), got {}", parts.len());
+        }
+        let mut it = parts.into_iter();
+        let logits_lit = it.next().unwrap();
+        let k_lit = it.next().unwrap();
+        let v_lit = it.next().unwrap();
+
+        let logits = Tensor::from_vec(
+            logits_lit.to_vec::<f32>().map_err(to_anyhow)?,
+            &[b, t, self.vocab],
+        )?;
+        let k_out = Tensor::from_vec(
+            k_lit.to_vec::<f32>().map_err(to_anyhow)?,
+            &self.cache_dims,
+        )?;
+        let v_out = Tensor::from_vec(
+            v_lit.to_vec::<f32>().map_err(to_anyhow)?,
+            &self.cache_dims,
+        )?;
+        Ok(ChunkOutput { logits, k: k_out, v: v_out })
+    }
+}
+
+/// xla::Error does not implement std::error::Error -> map by display.
+pub fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

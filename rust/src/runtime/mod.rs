@@ -1,0 +1,17 @@
+//! Runtime layer: loads the AOT artifacts (`make artifacts`) and executes
+//! them on the PJRT CPU client via the `xla` crate.
+//!
+//! Layering: `artifacts` (manifest contract) -> `client` (PJRT wrapper,
+//! weight stores, chunk execution) -> `model` (per-model cache of weights +
+//! compiled executables). `tensor` is the host-side array type crossing the
+//! boundary.
+
+pub mod artifacts;
+pub mod client;
+pub mod model;
+pub mod tensor;
+
+pub use artifacts::{ArtifactEntry, CostModelCfg, Manifest, ModelCfg, ModelEntry};
+pub use client::{ChunkOutput, CompiledChunk, WeightStore, XlaRuntime};
+pub use model::ModelRuntime;
+pub use tensor::Tensor;

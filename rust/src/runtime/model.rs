@@ -1,0 +1,101 @@
+//! Per-model runtime: owns the weight stores and lazily-compiled
+//! executables for every (variant, fn, batch-bucket) the engine asks for.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::artifacts::{Manifest, ModelCfg, ModelEntry};
+use super::client::{CompiledChunk, WeightStore, XlaRuntime};
+
+/// Handle to one loaded model (e.g. "qwen3-like"): weights resident on the
+/// device, executables compiled on first use and cached.
+pub struct ModelRuntime {
+    pub rt: Rc<XlaRuntime>,
+    pub entry: ModelEntry,
+    weights: RefCell<HashMap<String, Rc<WeightStore>>>, // npz path -> store
+    execs: RefCell<HashMap<String, Rc<CompiledChunk>>>, // artifact name -> exec
+    manifest_root: std::path::PathBuf,
+}
+
+impl ModelRuntime {
+    pub fn load(rt: Rc<XlaRuntime>, manifest: &Manifest, model: &str) -> Result<Self> {
+        let entry = manifest.model(model)?.clone();
+        Ok(ModelRuntime {
+            rt,
+            entry,
+            weights: RefCell::new(HashMap::new()),
+            execs: RefCell::new(HashMap::new()),
+            manifest_root: manifest.root.clone(),
+        })
+    }
+
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.entry.cfg
+    }
+
+    /// Weight store for an artifact's npz (loaded once, shared).
+    pub fn weights_for(&self, weights_file: &str) -> Result<Rc<WeightStore>> {
+        if let Some(w) = self.weights.borrow().get(weights_file) {
+            return Ok(Rc::clone(w));
+        }
+        let store = Rc::new(self.rt.load_weights(&self.manifest_root.join(weights_file))?);
+        self.weights
+            .borrow_mut()
+            .insert(weights_file.to_string(), Rc::clone(&store));
+        Ok(store)
+    }
+
+    /// Compiled executable for (variant, fn, batch), compiled on first use.
+    pub fn chunk(&self, variant: &str, fn_name: &str, batch: usize) -> Result<Rc<CompiledChunk>> {
+        let art = self.entry.artifact(variant, fn_name, batch)?.clone();
+        if let Some(c) = self.execs.borrow().get(&art.name) {
+            return Ok(Rc::clone(c));
+        }
+        let cfg = &self.entry.cfg;
+        let compiled = Rc::new(self.rt.compile(
+            &art, cfg.vocab_size, cfg.head_dim, cfg.max_seq, cfg.n_heads,
+        )?);
+        self.execs
+            .borrow_mut()
+            .insert(art.name.clone(), Rc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Convenience: run one chunk end-to-end (compile + weights cached).
+    pub fn run_chunk(
+        &self,
+        variant: &str,
+        fn_name: &str,
+        batch: usize,
+        tokens: &[i32],
+        k: &super::tensor::Tensor<f32>,
+        v: &super::tensor::Tensor<f32>,
+        pos: &[i32],
+    ) -> Result<super::client::ChunkOutput> {
+        let chunk = self.chunk(variant, fn_name, batch)?;
+        let weights = self.weights_for(&chunk.entry.weights_file)?;
+        chunk.run(&self.rt, &weights, tokens, k, v, pos)
+    }
+
+    /// Fresh zeroed KV cache pair for a (variant, batch) shape.
+    pub fn empty_cache(
+        &self,
+        n_layers: usize,
+        batch: usize,
+    ) -> (super::tensor::Tensor<f32>, super::tensor::Tensor<f32>) {
+        let cfg = &self.entry.cfg;
+        let dims = [n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim];
+        (
+            super::tensor::Tensor::zeros(&dims),
+            super::tensor::Tensor::zeros(&dims),
+        )
+    }
+
+    /// Number of executables compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.execs.borrow().len()
+    }
+}

@@ -1,0 +1,152 @@
+//! Small host-side dense tensor used at the rust/XLA boundary: logits,
+//! token blocks and KV caches live in this form between PJRT calls.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    pub data: Vec<T>,
+    pub dims: Vec<usize>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(dims: &[usize]) -> Self {
+        Tensor { data: vec![T::default(); dims.iter().product()], dims: dims.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<T>, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if data.len() != n {
+            bail!("tensor data len {} != product of dims {:?}", data.len(), dims);
+        }
+        Ok(Tensor { data, dims: dims.to_vec() })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Strides in elements (row-major).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.dims).enumerate() {
+            debug_assert!(x < d, "index {x} >= dim {d} at axis {i}");
+            off = off * d + x;
+        }
+        self.data[off]
+    }
+
+    /// Contiguous slice of the last axis at the given leading indices.
+    pub fn row(&self, lead: &[usize]) -> &[T] {
+        let last = *self.dims.last().expect("rank >= 1");
+        let mut off = 0;
+        for (&x, &d) in lead.iter().zip(&self.dims) {
+            off = off * d + x;
+        }
+        let start = off * last;
+        &self.data[start..start + last]
+    }
+
+    /// Copy a row-slice along axis 1 of a rank>=2 tensor from another tensor
+    /// whose shape matches except axis 1 (used to splice one request's KV
+    /// rows into a batch cache: layout `[L, B, ...]`, axis 1 = batch row).
+    pub fn copy_axis1_row_from(&mut self, dst_row: usize, src: &Tensor<T>, src_row: usize) {
+        assert!(self.rank() >= 2 && src.rank() == self.rank());
+        assert_eq!(self.dims[0], src.dims[0], "axis0 mismatch");
+        assert_eq!(&self.dims[2..], &src.dims[2..], "trailing dims mismatch");
+        let inner: usize = self.dims[2..].iter().product();
+        let (db, sb) = (self.dims[1], src.dims[1]);
+        assert!(dst_row < db && src_row < sb);
+        for a0 in 0..self.dims[0] {
+            let d_off = (a0 * db + dst_row) * inner;
+            let s_off = (a0 * sb + src_row) * inner;
+            self.data[d_off..d_off + inner]
+                .copy_from_slice(&src.data[s_off..s_off + inner]);
+        }
+    }
+
+    /// Zero a batch row (cache eviction).
+    pub fn zero_axis1_row(&mut self, row: usize) {
+        let inner: usize = self.dims[2..].iter().product();
+        let b = self.dims[1];
+        for a0 in 0..self.dims[0] {
+            let off = (a0 * b + row) * inner;
+            self.data[off..off + inner]
+                .iter_mut()
+                .for_each(|v| *v = T::default());
+        }
+    }
+}
+
+impl Tensor<f32> {
+    /// Argmax over the last axis at the given leading indices.
+    pub fn argmax_last(&self, lead: &[usize]) -> usize {
+        let row = self.row(lead);
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_strides() {
+        let t = Tensor::from_vec((0..24).collect::<Vec<i32>>(), &[2, 3, 4]).unwrap();
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.at(&[1, 2, 3]), 23);
+        assert_eq!(t.at(&[0, 1, 0]), 4);
+        assert_eq!(t.row(&[1, 0]), &[12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(vec![1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn splice_axis1_row() {
+        // dst [2 (L), 3 (B), 2], src [2, 1, 2]
+        let mut dst = Tensor::<i32>::zeros(&[2, 3, 2]);
+        let src = Tensor::from_vec(vec![10, 11, 20, 21], &[2, 1, 2]).unwrap();
+        dst.copy_axis1_row_from(1, &src, 0);
+        assert_eq!(dst.at(&[0, 1, 0]), 10);
+        assert_eq!(dst.at(&[0, 1, 1]), 11);
+        assert_eq!(dst.at(&[1, 1, 0]), 20);
+        assert_eq!(dst.at(&[1, 1, 1]), 21);
+        // untouched rows stay zero
+        assert_eq!(dst.at(&[0, 0, 0]), 0);
+        assert_eq!(dst.at(&[1, 2, 1]), 0);
+        dst.zero_axis1_row(1);
+        assert_eq!(dst.at(&[1, 1, 0]), 0);
+    }
+
+    #[test]
+    fn argmax_last() {
+        let t = Tensor::from_vec(vec![0.1f32, 0.9, 0.5, 2.0, -1.0, 0.0], &[2, 3]).unwrap();
+        assert_eq!(t.argmax_last(&[0]), 1);
+        assert_eq!(t.argmax_last(&[1]), 0);
+    }
+}

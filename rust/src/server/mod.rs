@@ -1,0 +1,171 @@
+//! JSON-lines TCP serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "question : ...", "max_new": 64, "temp": 0.0, "task": "gsm8k"}
+//!   <- {"id": 3, "text": "answer : ...", "tokens": [..], "steps": n,
+//!       "accept_len": 1.42, "latency_s": 0.41, "finish": "eos"}
+//!   -> {"cmd": "ping"}            <- {"ok": true}
+//!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
+//!
+//! Each connection is handled by a pool worker; generation itself runs on
+//! the single engine thread behind [`EngineHandle`] — the router owns all
+//! PJRT access (DESIGN.md: rust owns the event loop and process topology).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Completion, EngineHandle, FinishReason, GenParams};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{parse, Json};
+
+/// Serve until a `shutdown` command arrives. Returns the number of requests
+/// served.
+pub fn serve(listener: TcpListener, handle: EngineHandle, tok: Tokenizer,
+             n_conn_threads: usize) -> Result<u64> {
+    let handle = Arc::new(Mutex::new(handle));
+    let tok = Arc::new(tok);
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    listener
+        .set_nonblocking(true)
+        .context("set_nonblocking on listener")?;
+    let pool = crate::util::threads::ThreadPool::new(n_conn_threads);
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let handle = Arc::clone(&handle);
+                let tok = Arc::clone(&tok);
+                let stop = Arc::clone(&stop);
+                let served = Arc::clone(&served);
+                pool.submit(move || {
+                    if let Err(e) = handle_conn(stream, &handle, &tok, &stop, &served) {
+                        eprintln!("[server] connection error: {e:#}");
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+    Ok(served.load(Ordering::SeqCst))
+}
+
+fn handle_conn(stream: TcpStream, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
+               stop: &AtomicBool, served: &std::sync::atomic::AtomicU64) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_line(&line, handle, tok, stop) {
+            Ok(r) => {
+                served.fetch_add(1, Ordering::Relaxed);
+                r
+            }
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        };
+        writeln!(writer, "{resp}")?;
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
+               stop: &AtomicBool) -> Result<Json> {
+    let req = parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    if let Some(cmd) = req.opt("cmd") {
+        match cmd.as_str()? {
+            "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+            "shutdown" => {
+                stop.store(true, Ordering::SeqCst);
+                return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
+            }
+            other => anyhow::bail!("unknown cmd '{other}'"),
+        }
+    }
+    let prompt_text = req.get("prompt")?.as_str()?.to_string();
+    let params = GenParams {
+        temp: req.opt("temp").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
+        max_new: req.opt("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(64),
+        seed: req.opt("seed").map(|v| v.as_i64()).transpose()?.map(|s| s as u64),
+        stop_at_eos: true,
+    };
+    let task = req
+        .opt("task")
+        .map(|v| v.as_str().map(String::from))
+        .transpose()?
+        .unwrap_or_default();
+    let ids = tok.encode(&prompt_text, true);
+
+    let completion = {
+        let h = handle.lock().unwrap();
+        h.submit(ids, params, &task)?;
+        h.next_completion(Duration::from_secs(120))
+            .ok_or_else(|| anyhow::anyhow!("generation timed out"))?
+    };
+    Ok(completion_json(&completion, tok))
+}
+
+/// Serialize a completion for the wire (shared with the examples).
+pub fn completion_json(c: &Completion, tok: &Tokenizer) -> Json {
+    let finish = match c.finish {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxNewTokens => "max_new",
+        FinishReason::ContextFull => "context_full",
+    };
+    Json::obj(vec![
+        ("id", Json::num(c.id as f64)),
+        ("task", Json::str(c.task.clone())),
+        ("text", Json::str(tok.decode(&c.tokens))),
+        ("tokens", Json::arr(c.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("finish", Json::str(finish)),
+        ("steps", Json::num(c.stats.steps as f64)),
+        ("accept_len", Json::num(c.stats.mean_acceptance_len())),
+        ("accept_rate", Json::num(c.stats.acceptance_rate())),
+        ("latency_s", Json::num(c.latency_s)),
+        ("ttft_s", Json::num(c.ttft_s)),
+    ])
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        Ok(Client { stream: TcpStream::connect(addr).context("connect")? })
+    }
+
+    pub fn roundtrip(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.stream, "{req}")?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new: usize, temp: f64) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+            ("temp", Json::num(temp)),
+        ]))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.roundtrip(&Json::obj(vec![("cmd", Json::str("shutdown"))]))?;
+        Ok(())
+    }
+}

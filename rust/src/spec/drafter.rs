@@ -1,0 +1,232 @@
+//! Drafting strategies. The paper's methods map to:
+//!
+//! * `VanillaDrafter`  — never drafts (autoregressive baseline),
+//! * `NgramDrafter`    — prompt-lookup decoding (the "Ngram" baseline *and*
+//!   Quasar's drafter; Quasar changes only the verifier variant),
+//! * `PrunedDrafter`   — layer-dropped model drafting (Table 5 ablation;
+//!   `spec/pruned.rs`).
+//!
+//! One drafter instance per request: it tracks the request's committed
+//! context and adapts its speculation depth from observed acceptance.
+
+use super::ngram::NgramIndex;
+use super::sampler::Draft;
+
+/// Per-step model-call counts a drafter incurs (the Table-5 drafters cost
+/// real forward passes; the n-gram drafter costs none). Feeds perfmodel.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DraftCost {
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub lookup_tokens: u64,
+}
+
+impl DraftCost {
+    pub fn merge(&mut self, o: &DraftCost) {
+        self.prefill_calls += o.prefill_calls;
+        self.decode_calls += o.decode_calls;
+        self.lookup_tokens += o.lookup_tokens;
+    }
+}
+
+/// A drafting strategy bound to one request's lifetime.
+pub trait Drafter {
+    /// Reset state for a fresh request with the given prompt.
+    fn begin(&mut self, prompt: &[i32]) -> anyhow::Result<()>;
+
+    /// Propose up to `gamma` tokens continuing the committed context.
+    fn draft(&mut self, gamma: usize, temp: f64) -> anyhow::Result<Draft>;
+
+    /// Tokens the engine committed this step (accepted prefix + bonus).
+    fn observe_commit(&mut self, tokens: &[i32]) -> anyhow::Result<()>;
+
+    /// Outcome feedback for adaptive speculation depth.
+    fn observe_outcome(&mut self, drafted: usize, accepted: usize);
+
+    /// Model calls consumed since the last call to this method.
+    fn take_cost(&mut self) -> DraftCost;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Autoregressive baseline: no speculation.
+#[derive(Debug, Default)]
+pub struct VanillaDrafter;
+
+impl Drafter for VanillaDrafter {
+    fn begin(&mut self, _prompt: &[i32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn draft(&mut self, _gamma: usize, _temp: f64) -> anyhow::Result<Draft> {
+        Ok(Draft::empty())
+    }
+
+    fn observe_commit(&mut self, _tokens: &[i32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn observe_outcome(&mut self, _d: usize, _a: usize) {}
+
+    fn take_cost(&mut self) -> DraftCost {
+        DraftCost::default()
+    }
+
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+}
+
+/// Configuration for prompt-lookup drafting.
+#[derive(Debug, Clone, Copy)]
+pub struct NgramConfig {
+    /// Lookup n-gram length range (paper: dynamically adjusted in [1, 4]).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Speculation depth cap (tokens per draft).
+    pub gamma: usize,
+    /// Adapt effective gamma from an acceptance EWMA (the paper's
+    /// "dynamically adjusted" lookup; disable for the Table-3 fixed sweep).
+    pub adaptive: bool,
+}
+
+impl Default for NgramConfig {
+    fn default() -> Self {
+        NgramConfig { k_min: 1, k_max: 4, gamma: 5, adaptive: true }
+    }
+}
+
+/// Prompt-lookup decoding (PLD): copy the continuation of the most recent
+/// matching n-gram from the request's own context.
+pub struct NgramDrafter {
+    cfg: NgramConfig,
+    index: NgramIndex,
+    /// EWMA of accepted-per-draft, drives adaptive depth.
+    accept_ewma: f64,
+    cost: DraftCost,
+}
+
+impl NgramDrafter {
+    pub fn new(cfg: NgramConfig) -> Self {
+        NgramDrafter {
+            cfg,
+            index: NgramIndex::new(cfg.k_min, cfg.k_max),
+            accept_ewma: cfg.gamma as f64 * 0.5,
+            cost: DraftCost::default(),
+        }
+    }
+
+    /// Effective speculation depth this step.
+    fn effective_gamma(&self, cap: usize) -> usize {
+        if !self.cfg.adaptive {
+            return self.cfg.gamma.min(cap);
+        }
+        // Speculate a little past the recent acceptance level: deep enough
+        // to capture streaks, shallow enough to bound wasted verification.
+        let g = (self.accept_ewma + 2.0).round() as usize;
+        g.clamp(1, self.cfg.gamma.min(cap))
+    }
+}
+
+impl Drafter for NgramDrafter {
+    fn begin(&mut self, prompt: &[i32]) -> anyhow::Result<()> {
+        self.index = NgramIndex::new(self.cfg.k_min, self.cfg.k_max);
+        self.index.extend(prompt);
+        self.accept_ewma = self.cfg.gamma as f64 * 0.5;
+        Ok(())
+    }
+
+    fn draft(&mut self, gamma: usize, _temp: f64) -> anyhow::Result<Draft> {
+        let g = self.effective_gamma(gamma);
+        let toks = self.index.draft(g, self.cfg.k_min, self.cfg.k_max);
+        self.cost.lookup_tokens += toks.len() as u64;
+        Ok(Draft::point_mass(toks))
+    }
+
+    fn observe_commit(&mut self, tokens: &[i32]) -> anyhow::Result<()> {
+        self.index.extend(tokens);
+        Ok(())
+    }
+
+    fn observe_outcome(&mut self, drafted: usize, accepted: usize) {
+        if drafted > 0 {
+            self.accept_ewma = 0.8 * self.accept_ewma + 0.2 * accepted as f64;
+        }
+    }
+
+    fn take_cost(&mut self) -> DraftCost {
+        std::mem::take(&mut self.cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "ngram"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_never_drafts() {
+        let mut d = VanillaDrafter;
+        d.begin(&[1, 2, 3]).unwrap();
+        assert!(d.draft(8, 0.0).unwrap().is_empty());
+        assert_eq!(d.name(), "vanilla");
+    }
+
+    #[test]
+    fn ngram_drafts_from_prompt_repetition() {
+        let mut d = NgramDrafter::new(NgramConfig { adaptive: false, gamma: 4, ..Default::default() });
+        d.begin(&[7, 8, 9, 1, 2, 7, 8]).unwrap();
+        let draft = d.draft(4, 0.0).unwrap();
+        assert_eq!(draft.tokens, vec![9, 1, 2, 7]);
+        assert!(draft.q_rows.is_none(), "PLD drafts are point-mass");
+    }
+
+    #[test]
+    fn commit_extends_lookup_context() {
+        let mut d = NgramDrafter::new(NgramConfig { adaptive: false, ..Default::default() });
+        d.begin(&[1, 2, 3]).unwrap();
+        assert!(d.draft(4, 0.0).unwrap().is_empty());
+        d.observe_commit(&[4, 1, 2]).unwrap();
+        // context ... 1 2 3 4 1 2 -> suffix [1,2] continues with 3
+        assert_eq!(d.draft(2, 0.0).unwrap().tokens, vec![3, 4]);
+    }
+
+    #[test]
+    fn adaptive_gamma_shrinks_on_rejection() {
+        let mut d = NgramDrafter::new(NgramConfig { gamma: 8, adaptive: true, ..Default::default() });
+        let ctx: Vec<i32> = std::iter::repeat([5, 6]).take(12).flatten().collect();
+        d.begin(&ctx).unwrap();
+        let g0 = d.draft(8, 0.0).unwrap().tokens.len();
+        for _ in 0..20 {
+            d.observe_outcome(4, 0); // everything rejected
+        }
+        let g1 = d.draft(8, 0.0).unwrap().tokens.len();
+        assert!(g1 < g0, "gamma should shrink: {g0} -> {g1}");
+        assert_eq!(g1, 2, "floor at ewma~0 + 2");
+        for _ in 0..30 {
+            d.observe_outcome(8, 8);
+        }
+        let g2 = d.draft(8, 0.0).unwrap().tokens.len();
+        assert!(g2 >= 7, "gamma should recover, got {g2}");
+    }
+
+    #[test]
+    fn gamma_cap_respected() {
+        let mut d = NgramDrafter::new(NgramConfig { gamma: 8, adaptive: false, ..Default::default() });
+        d.begin(&[5, 6, 1, 2, 3, 4, 5, 6, 7, 8, 9, 5, 6]).unwrap();
+        assert!(d.draft(3, 0.0).unwrap().tokens.len() <= 3);
+    }
+
+    #[test]
+    fn cost_accumulates_and_resets() {
+        let mut d = NgramDrafter::new(NgramConfig { adaptive: false, ..Default::default() });
+        d.begin(&[7, 8, 9, 7, 8]).unwrap();
+        let n = d.draft(4, 0.0).unwrap().tokens.len() as u64;
+        assert!(n > 0);
+        assert_eq!(d.take_cost().lookup_tokens, n);
+        assert_eq!(d.take_cost(), DraftCost::default());
+    }
+}

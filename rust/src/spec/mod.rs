@@ -1,0 +1,13 @@
+//! Speculative-decoding core: drafting strategies (prompt-lookup, pruned
+//! model, vanilla), the lossless rejection sampler (paper Eq. 2–3), and the
+//! n-gram index substrate.
+
+pub mod drafter;
+pub mod ngram;
+pub mod pruned;
+pub mod sampler;
+
+pub use drafter::{DraftCost, Drafter, NgramConfig, NgramDrafter, VanillaDrafter};
+pub use ngram::NgramIndex;
+pub use pruned::PrunedDrafter;
+pub use sampler::{argmax, sample_logits, softmax_t, verify_draft, Draft, VerifyOutcome};

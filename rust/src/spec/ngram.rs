@@ -1,0 +1,218 @@
+//! Prompt-lookup n-gram index (PLD — Somasundaram et al. 2025), the paper's
+//! self-speculative drafting mechanism ("Ngram" baseline and Quasar both use
+//! it; only the verifier differs).
+//!
+//! The index maps every k-gram (k in `[k_min, k_max]`) of the growing
+//! context to its *latest* end position, so a draft lookup is O(k_max) hash
+//! probes instead of an O(n·k) backward scan. `push` is amortized O(k_max)
+//! per appended token — the drafter stays negligible next to a model call,
+//! which is exactly the regime the paper's speedup model assumes
+//! (`drafter_cost_per_token_s` ~ 1 us).
+
+use std::collections::HashMap;
+
+/// Incremental n-gram index over a token stream.
+#[derive(Debug, Clone)]
+pub struct NgramIndex {
+    k_min: usize,
+    k_max: usize,
+    tokens: Vec<i32>,
+    /// (k, hash of k-gram ending at i) -> i (earliest occurrence wins:
+    /// copying from the *first* occurrence yields the longest continuation,
+    /// matching huggingface's prompt-lookup reference behaviour)
+    table: HashMap<(u8, u64), usize>,
+}
+
+impl NgramIndex {
+    pub fn new(k_min: usize, k_max: usize) -> Self {
+        assert!(k_min >= 1 && k_min <= k_max && k_max <= 16);
+        NgramIndex { k_min, k_max, tokens: Vec::new(), table: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn k_range(&self) -> (usize, usize) {
+        (self.k_min, self.k_max)
+    }
+
+    fn gram_hash(gram: &[i32]) -> u64 {
+        // FNV-1a over the token bytes; collisions are verified by direct
+        // comparison in `lookup` so a collision costs a re-probe, never a
+        // wrong draft.
+        let mut h = 0xcbf29ce484222325u64;
+        for t in gram {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+
+    /// Append one token, registering the k-grams that now end at the tail.
+    pub fn push(&mut self, tok: i32) {
+        self.tokens.push(tok);
+        let n = self.tokens.len();
+        for k in self.k_min..=self.k_max {
+            if n >= k {
+                let gram = &self.tokens[n - k..];
+                self.table
+                    .entry((k as u8, Self::gram_hash(gram)))
+                    .or_insert(n);
+            }
+        }
+    }
+
+    pub fn extend(&mut self, toks: &[i32]) {
+        for &t in toks {
+            self.push(t);
+        }
+    }
+
+    /// Prompt lookup: find the longest k-gram suffix (k from `k_hi` down to
+    /// `k_lo`, clamped to the index range) that re-occurs *earlier* in the
+    /// context, and copy up to `gamma` continuation tokens as the draft.
+    pub fn draft(&self, gamma: usize, k_lo: usize, k_hi: usize) -> Vec<i32> {
+        let n = self.tokens.len();
+        let k_lo = k_lo.max(self.k_min);
+        let k_hi = k_hi.min(self.k_max);
+        if gamma == 0 || n == 0 {
+            return Vec::new();
+        }
+        for k in (k_lo..=k_hi).rev() {
+            if n < k + 1 {
+                continue;
+            }
+            let suffix = &self.tokens[n - k..];
+            if let Some(&end) = self.table.get(&(k as u8, Self::gram_hash(suffix))) {
+                // `end` is the earliest end position of this k-gram; a match
+                // at the very tail (end == n) is the suffix itself — not
+                // useful. Verify against FNV collisions.
+                if let Some(cont_start) = self.verified_match(suffix, end, n) {
+                    let stop = (cont_start + gamma).min(n);
+                    if cont_start < n {
+                        return self.tokens[cont_start..stop].to_vec();
+                    }
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Verify the hashed hit (guarding FNV collisions) and fall back to a
+    /// forward scan on collision or tail-only occurrence.
+    fn verified_match(&self, suffix: &[i32], end: usize, n: usize) -> Option<usize> {
+        let k = suffix.len();
+        let matches_at = |e: usize| &self.tokens[e - k..e] == suffix;
+        if end < n && matches_at(end) {
+            return Some(end);
+        }
+        // Hash collision or the earliest occurrence is the suffix itself:
+        // scan forward for the first true occurrence before the tail
+        // (bounded: contexts are <= max_seq so this stays cheap).
+        for e in k..n {
+            if matches_at(e) {
+                return Some(e);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(tokens: &[i32]) -> NgramIndex {
+        let mut ix = NgramIndex::new(1, 4);
+        ix.extend(tokens);
+        ix
+    }
+
+    #[test]
+    fn draft_copies_continuation_of_repeated_gram() {
+        // ... [5 6 7 8] ... then suffix [5 6] -> continuation [7 8]
+        let ix = idx(&[1, 5, 6, 7, 8, 2, 3, 5, 6]);
+        let d = ix.draft(4, 1, 4);
+        assert_eq!(d, vec![7, 8, 2, 3]);
+    }
+
+    #[test]
+    fn longest_k_wins() {
+        // suffix [6 7] matches continuation 9; suffix [7] alone matches 8
+        let ix = idx(&[6, 7, 9, 4, 7, 8, 6, 7]);
+        assert_eq!(ix.draft(1, 1, 4), vec![9]); // 2-gram beats 1-gram
+        // restricted to k=1 -> earliest occurrence of [7] (index 1) -> 9
+        assert_eq!(ix.draft(1, 1, 1), vec![9]);
+    }
+
+    #[test]
+    fn no_match_returns_empty() {
+        let ix = idx(&[1, 2, 3, 4, 5]);
+        assert!(ix.draft(4, 1, 4).is_empty());
+        let empty = NgramIndex::new(1, 4);
+        assert!(empty.draft(4, 1, 4).is_empty());
+    }
+
+    #[test]
+    fn gamma_caps_draft_length() {
+        let ix = idx(&[5, 6, 1, 2, 3, 4, 9, 5, 6]);
+        assert_eq!(ix.draft(2, 1, 4), vec![1, 2]);
+        assert_eq!(ix.draft(0, 1, 4), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn draft_never_exceeds_context() {
+        let ix = idx(&[5, 6, 7, 5, 6]);
+        // continuation after earlier [5,6] is [7,5,6] then context ends
+        assert_eq!(ix.draft(10, 1, 4), vec![7, 5, 6]);
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        let toks = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 1, 4];
+        let mut a = NgramIndex::new(1, 3);
+        for &t in &toks {
+            a.push(t);
+        }
+        let b = {
+            let mut ix = NgramIndex::new(1, 3);
+            ix.extend(&toks);
+            ix
+        };
+        assert_eq!(a.draft(4, 1, 3), b.draft(4, 1, 3));
+        assert_eq!(a.len(), toks.len());
+    }
+
+    #[test]
+    fn self_match_at_tail_is_skipped() {
+        // the only occurrence of the suffix is the suffix itself
+        let ix = idx(&[1, 2, 3]);
+        assert!(ix.draft(4, 2, 4).is_empty());
+    }
+
+    #[test]
+    fn repeated_pattern_heavy_context_drafts_long() {
+        // templated GSM8K-style context: high draftability
+        let mut toks = Vec::new();
+        for _ in 0..6 {
+            toks.extend_from_slice(&[10, 11, 12, 13, 14, 15]);
+        }
+        // suffix matches the first template instance; the continuation is
+        // the whole next instance
+        let ix = idx(&toks);
+        let d = ix.draft(6, 1, 4);
+        assert_eq!(d.len(), 6);
+        assert_eq!(d, vec![10, 11, 12, 13, 14, 15]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Structural-pruning drafter (Table 5 / §5 "The Failure of Training-Free
+//! Pruning"): the first `keep`% of the target model's layers drafting
+//! autoregressively, verified by the full-precision model.
+//!
+//! This drafter costs *real* forward passes (its own prefill + one decode
+//! per drafted token), which is exactly the paper's point — a 90%-depth
+//! drafter aligns well (high L) but its per-token cost erases the speedup
+//! (0.80x), while a 50%-depth drafter is cheap but misaligned (L ~ 1.03).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::{ModelRuntime, Tensor};
+
+use super::drafter::{DraftCost, Drafter};
+use super::sampler::{sample_logits, softmax_t, Draft};
+
+/// Layer-dropped model drafting against its own KV cache.
+pub struct PrunedDrafter {
+    model: Rc<ModelRuntime>,
+    /// Artifact variant name: "pruned90" | "pruned75" | "pruned50".
+    variant: String,
+    n_layers: usize,
+    k: Tensor<f32>,
+    v: Tensor<f32>,
+    committed: Vec<i32>,
+    /// KV cache coverage: positions `0..cached` hold committed tokens.
+    cached: usize,
+    cost: DraftCost,
+    rng: crate::util::rng::Pcg,
+}
+
+impl PrunedDrafter {
+    pub fn new(model: Rc<ModelRuntime>, variant: &str, seed: u64) -> Result<Self> {
+        let entry = model.entry.artifact(variant, "decode", 1)?;
+        let n_layers = entry.n_layers;
+        let (k, v) = model.empty_cache(n_layers, 1);
+        Ok(PrunedDrafter {
+            model,
+            variant: variant.to_string(),
+            n_layers,
+            k,
+            v,
+            committed: Vec::new(),
+            cached: 0,
+            cost: DraftCost::default(),
+            rng: crate::util::rng::Pcg::seeded(seed),
+        })
+    }
+
+    /// Feed committed-but-uncached tokens so the drafter's cache catches up
+    /// to `committed.len() - 1` (the newest token is fed by `draft` itself).
+    fn catch_up(&mut self) -> Result<()> {
+        while self.cached + 1 < self.committed.len() {
+            let tok = self.committed[self.cached];
+            let out = self.model.run_chunk(
+                &self.variant, "decode", 1, &[tok], &self.k, &self.v,
+                &[self.cached as i32],
+            )?;
+            self.cost.decode_calls += 1;
+            self.k = out.k;
+            self.v = out.v;
+            self.cached += 1;
+        }
+        Ok(())
+    }
+
+    fn max_seq(&self) -> usize {
+        self.model.cfg().max_seq
+    }
+}
+
+impl Drafter for PrunedDrafter {
+    fn begin(&mut self, prompt: &[i32]) -> Result<()> {
+        let cfg = self.model.cfg().clone();
+        let (k, v) = self.model.empty_cache(self.n_layers, 1);
+        self.k = k;
+        self.v = v;
+        self.committed = prompt.to_vec();
+        // Prefill the prompt except its last token (fed at first draft).
+        let p = cfg.prefill_len;
+        let feed = &prompt[..prompt.len().saturating_sub(1).min(p)];
+        let mut toks = vec![0i32; p];
+        toks[..feed.len()].copy_from_slice(feed);
+        let out = self.model.run_chunk(
+            &self.variant, "prefill", 1, &toks, &self.k, &self.v, &[0],
+        )?;
+        self.cost.prefill_calls += 1;
+        self.k = out.k;
+        self.v = out.v;
+        self.cached = feed.len();
+        Ok(())
+    }
+
+    fn draft(&mut self, gamma: usize, temp: f64) -> Result<Draft> {
+        self.catch_up()?;
+        let mut tokens = Vec::with_capacity(gamma);
+        let mut q_rows = Vec::with_capacity(gamma);
+        let mut last = *self.committed.last().expect("begin() before draft()");
+        let mut pos = self.cached;
+        // Speculative writes beyond `cached` are rolled back simply by not
+        // advancing `cached`: the engine's next commit overwrites them (the
+        // same stale-slot argument as the verifier cache, model.py header).
+        let mut k = self.k.clone();
+        let mut v = self.v.clone();
+        for _ in 0..gamma {
+            if pos + 2 >= self.max_seq() {
+                break;
+            }
+            let out = self
+                .model
+                .run_chunk(&self.variant, "decode", 1, &[last], &k, &v, &[pos as i32])?;
+            self.cost.decode_calls += 1;
+            let row = out.logits.row(&[0, 0]);
+            let tok = sample_logits(row, temp, &mut self.rng);
+            let mut q = Vec::new();
+            softmax_t(row, temp.max(1e-3), &mut q);
+            tokens.push(tok);
+            q_rows.push(q);
+            k = out.k;
+            v = out.v;
+            pos += 1;
+            last = tok;
+        }
+        // Keep the caches *without* advancing `cached`: only commits count.
+        self.k = k;
+        self.v = v;
+        Ok(Draft { tokens, q_rows: Some(q_rows) })
+    }
+
+    fn observe_commit(&mut self, tokens: &[i32]) -> Result<()> {
+        self.committed.extend_from_slice(tokens);
+        Ok(())
+    }
+
+    fn observe_outcome(&mut self, _drafted: usize, _accepted: usize) {}
+
+    fn take_cost(&mut self) -> DraftCost {
+        std::mem::take(&mut self.cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "pruned"
+    }
+}

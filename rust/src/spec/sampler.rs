@@ -1,0 +1,333 @@
+//! Sampling and lossless rejection-sampling verification (paper §3.1,
+//! Eq. 2–3).
+//!
+//! Two draft-distribution regimes:
+//!  * **point-mass drafts** (prompt-lookup copies): `q(x) = δ(x = draft)`,
+//!    so Eq. 2 reduces to accept-with-probability `p(draft)` under sampling
+//!    and to argmax equality under greedy decoding, and the corrective
+//!    resample distribution `norm(max(0, p - q))` is `p` with the draft
+//!    token zeroed;
+//!  * **model drafts** (pruned drafter, Table 5): the full `q` row is
+//!    supplied and Eq. 2/3 are applied verbatim.
+//!
+//! Temperature semantics follow the paper's T=0/T=1 settings: `T = 0` is
+//! greedy (deterministic argmax at every position), `T > 0` scales logits
+//! before the softmax.
+
+use crate::util::rng::Pcg;
+
+/// Numerically-stable softmax with temperature into `out`.
+pub fn softmax_t(logits: &[f32], temp: f64, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(logits.len());
+    let t = temp.max(1e-6) as f32;
+    let mut mx = f32::NEG_INFINITY;
+    for &l in logits {
+        mx = mx.max(l / t);
+    }
+    let mut sum = 0.0f32;
+    for &l in logits {
+        let e = ((l / t) - mx).exp();
+        out.push(e);
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample an index from a probability row.
+pub fn sample_probs(probs: &[f32], rng: &mut Pcg) -> usize {
+    let r = rng.f64() as f32;
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Sample from logits at temperature (`T = 0` -> argmax).
+pub fn sample_logits(logits: &[f32], temp: f64, rng: &mut Pcg) -> i32 {
+    if temp <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    let mut probs = Vec::new();
+    softmax_t(logits, temp, &mut probs);
+    sample_probs(&probs, rng) as i32
+}
+
+/// A drafter's proposal for one request step.
+#[derive(Debug, Clone, Default)]
+pub struct Draft {
+    pub tokens: Vec<i32>,
+    /// Full draft distribution rows (aligned with `tokens`); `None` for
+    /// point-mass (copy) drafts.
+    pub q_rows: Option<Vec<Vec<f32>>>,
+}
+
+impl Draft {
+    pub fn empty() -> Self {
+        Draft::default()
+    }
+
+    pub fn point_mass(tokens: Vec<i32>) -> Self {
+        Draft { tokens, q_rows: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Outcome of verifying one draft against target logits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    /// Number of draft tokens accepted (prefix length).
+    pub accepted: usize,
+    /// The bonus (all accepted) or corrective (first rejection) token —
+    /// always emitted, so a step always commits `accepted + 1` tokens.
+    pub next_token: i32,
+}
+
+/// Verify a draft against the verifier's logits rows.
+///
+/// `logit_rows(i)` must yield the logits conditioned on the context plus
+/// `draft.tokens[..i]` — i.e. row `i` scores `draft.tokens[i]` — and be
+/// valid for `i` in `0..=draft.len()`.
+pub fn verify_draft<'a, F>(
+    draft: &Draft,
+    logit_rows: F,
+    temp: f64,
+    rng: &mut Pcg,
+) -> VerifyOutcome
+where
+    F: Fn(usize) -> &'a [f32],
+{
+    let g = draft.len();
+    if temp <= 0.0 {
+        // Greedy: accept while the draft matches argmax.
+        for i in 0..g {
+            let top = argmax(logit_rows(i)) as i32;
+            if top != draft.tokens[i] {
+                return VerifyOutcome { accepted: i, next_token: top };
+            }
+        }
+        return VerifyOutcome { accepted: g, next_token: argmax(logit_rows(g)) as i32 };
+    }
+
+    let mut p = Vec::new();
+    for i in 0..g {
+        softmax_t(logit_rows(i), temp, &mut p);
+        let x = draft.tokens[i] as usize;
+        let px = p.get(x).copied().unwrap_or(0.0) as f64;
+        let qx = match &draft.q_rows {
+            None => 1.0, // point-mass draft
+            Some(rows) => rows[i].get(x).copied().unwrap_or(0.0) as f64,
+        };
+        let accept_p = if qx <= 0.0 { 1.0 } else { (px / qx).min(1.0) };
+        if rng.f64() < accept_p {
+            continue;
+        }
+        // Rejected: corrective resample from norm(max(0, p - q)) (Eq. 3).
+        let next = match &draft.q_rows {
+            None => {
+                // q is a point mass at x: residual is p with x zeroed.
+                let mut resid = p.clone();
+                resid[x] = 0.0;
+                renorm_sample(&mut resid, rng)
+            }
+            Some(rows) => {
+                let mut resid: Vec<f32> = p
+                    .iter()
+                    .zip(&rows[i])
+                    .map(|(&pv, &qv)| (pv - qv).max(0.0))
+                    .collect();
+                renorm_sample(&mut resid, rng)
+            }
+        };
+        return VerifyOutcome { accepted: i, next_token: next };
+    }
+    // All accepted: bonus token from the last row.
+    let mut probs = Vec::new();
+    softmax_t(logit_rows(g), temp, &mut probs);
+    VerifyOutcome { accepted: g, next_token: sample_probs(&probs, rng) as i32 }
+}
+
+fn renorm_sample(resid: &mut [f32], rng: &mut Pcg) -> i32 {
+    let sum: f32 = resid.iter().sum();
+    if sum <= 0.0 {
+        // Degenerate residual (p == q exactly): fall back to argmax of p-q=0
+        // -> uniform over support is meaningless; emit argmax of resid's
+        // original p via the largest entry (all zero -> token 0). In practice
+        // unreachable because p has full support after softmax.
+        return argmax(resid) as i32;
+    }
+    let r = rng.f64() as f32 * sum;
+    let mut acc = 0.0f32;
+    for (i, &v) in resid.iter().enumerate() {
+        acc += v;
+        if r < acc {
+            return i as i32;
+        }
+    }
+    (resid.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(data: Vec<Vec<f32>>) -> impl Fn(usize) -> &'static [f32] {
+        let leaked: &'static Vec<Vec<f32>> = Box::leak(Box::new(data));
+        move |i| leaked[i].as_slice()
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut p = Vec::new();
+        softmax_t(&[1.0, 2.0, 3.0], 1.0, &mut p);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // low temperature sharpens
+        let mut p_cold = Vec::new();
+        softmax_t(&[1.0, 2.0, 3.0], 0.1, &mut p_cold);
+        assert!(p_cold[2] > p[2]);
+    }
+
+    #[test]
+    fn greedy_accepts_matching_prefix() {
+        // rows argmax: 1, 2, 0 — draft [1, 2, 2] accepts 2 then corrects to 0
+        let f = rows(vec![
+            vec![0.0, 5.0, 0.0],
+            vec![0.0, 0.0, 5.0],
+            vec![9.0, 0.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+        ]);
+        let d = Draft::point_mass(vec![1, 2, 2]);
+        let out = verify_draft(&d, f, 0.0, &mut Pcg::seeded(1));
+        assert_eq!(out, VerifyOutcome { accepted: 2, next_token: 0 });
+    }
+
+    #[test]
+    fn greedy_all_accepted_emits_bonus() {
+        let f = rows(vec![vec![0.0, 5.0], vec![5.0, 0.0], vec![0.0, 7.0]]);
+        let d = Draft::point_mass(vec![1, 0]);
+        let out = verify_draft(&d, f, 0.0, &mut Pcg::seeded(1));
+        assert_eq!(out, VerifyOutcome { accepted: 2, next_token: 1 });
+    }
+
+    #[test]
+    fn empty_draft_is_plain_decode() {
+        let f = rows(vec![vec![0.0, 0.0, 3.0]]);
+        let out = verify_draft(&Draft::empty(), f, 0.0, &mut Pcg::seeded(1));
+        assert_eq!(out, VerifyOutcome { accepted: 0, next_token: 2 });
+    }
+
+    #[test]
+    fn point_mass_acceptance_rate_tracks_p() {
+        // p(draft token) ~= 0.731 at T=1 for logits [0, 1]
+        let f = rows(vec![vec![0.0, 1.0], vec![0.0, 0.0]]);
+        let d = Draft::point_mass(vec![1]);
+        let mut rng = Pcg::seeded(99);
+        let n = 20_000;
+        let mut acc = 0usize;
+        for _ in 0..n {
+            let out = verify_draft(&d, &f, 1.0, &mut rng);
+            acc += out.accepted;
+        }
+        let rate = acc as f64 / n as f64;
+        let expect = (1.0f64).exp() / (1.0 + (1.0f64).exp()); // sigmoid(1)
+        assert!((rate - expect).abs() < 0.01, "rate {rate} vs {expect}");
+    }
+
+    #[test]
+    fn rejection_resample_never_returns_rejected_point_mass_token() {
+        // Make p(draft)=tiny so rejection is near-certain; the corrective
+        // token must never equal the rejected draft token.
+        let f = rows(vec![vec![5.0, -10.0, 4.0], vec![0.0; 3]]);
+        let d = Draft::point_mass(vec![1]);
+        let mut rng = Pcg::seeded(7);
+        for _ in 0..2000 {
+            let out = verify_draft(&d, &f, 1.0, &mut rng);
+            if out.accepted == 0 {
+                assert_ne!(out.next_token, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn model_draft_lossless_distribution() {
+        // With q == p exactly, acceptance probability is 1 for every token.
+        let logits = vec![vec![0.3f32, 1.2, -0.5], vec![0.0, 0.0, 0.0]];
+        let mut q = Vec::new();
+        softmax_t(&logits[0], 1.0, &mut q);
+        let f = rows(logits.clone());
+        let mut rng = Pcg::seeded(3);
+        for tok in 0..3 {
+            let d = Draft { tokens: vec![tok], q_rows: Some(vec![q.clone()]) };
+            let out = verify_draft(&d, &f, 1.0, &mut rng);
+            assert_eq!(out.accepted, 1, "token {tok} should always accept");
+        }
+    }
+
+    #[test]
+    fn model_draft_overconfident_q_rejects() {
+        // q puts mass 1.0 on a token with low p -> acceptance prob = p/q = p.
+        let f = rows(vec![vec![2.0f32, -2.0], vec![0.0, 0.0]]);
+        let mut q_row = vec![0.0f32, 1.0];
+        let d = Draft { tokens: vec![1], q_rows: Some(vec![q_row.clone()]) };
+        let mut rng = Pcg::seeded(11);
+        let n = 10_000;
+        let mut acc = 0;
+        for _ in 0..n {
+            acc += verify_draft(&d, &f, 1.0, &mut rng).accepted;
+        }
+        let mut p = Vec::new();
+        softmax_t(&[2.0, -2.0], 1.0, &mut p);
+        let rate = acc as f64 / n as f64;
+        assert!((rate - p[1] as f64).abs() < 0.01, "rate {rate} vs p {}", p[1]);
+        // and the corrective token is always 0 (the only positive residual)
+        q_row[1] = 1.0;
+        let out = loop {
+            let o = verify_draft(&d, &f, 1.0, &mut rng);
+            if o.accepted == 0 {
+                break o;
+            }
+        };
+        assert_eq!(out.next_token, 0);
+    }
+
+    #[test]
+    fn sample_logits_greedy_vs_stochastic() {
+        let mut rng = Pcg::seeded(5);
+        assert_eq!(sample_logits(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+        // stochastic still overwhelmingly picks the 9.0 logit
+        let mut ones = 0;
+        for _ in 0..1000 {
+            if sample_logits(&[0.0, 9.0, 1.0], 1.0, &mut rng) == 1 {
+                ones += 1;
+            }
+        }
+        assert!(ones > 950);
+    }
+}

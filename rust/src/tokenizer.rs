@@ -1,0 +1,152 @@
+//! Rust mirror of the closed-lexicon word tokenizer
+//! (`python/compile/tokenizer.py`), loaded from `artifacts/tokenizer.json`.
+//!
+//! The corpus language is whitespace-separated words from a fixed lexicon,
+//! so encoding is a dictionary lookup per word with `<unk>` fallback, and
+//! `decode(encode(text)) == normalize(text)` exactly — a property the test
+//! suite checks against strings generated from the vocab itself.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::{Json, JsonError};
+
+/// Word-level tokenizer over the shared reproduction lexicon.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, u32>,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub unk_id: i32,
+}
+
+impl Tokenizer {
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let kind = v.get("kind")?.as_str()?;
+        if kind != "closed-lexicon-word" {
+            return Err(JsonError(format!("unsupported tokenizer kind {kind}")));
+        }
+        let vocab: Vec<String> = v
+            .get("vocab")?
+            .as_arr()?
+            .iter()
+            .map(|w| w.as_str().map(String::from))
+            .collect::<Result<_, _>>()?;
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Ok(Tokenizer {
+            pad_id: v.get("pad_id")?.as_i64()? as i32,
+            bos_id: v.get("bos_id")?.as_i64()? as i32,
+            eos_id: v.get("eos_id")?.as_i64()? as i32,
+            unk_id: v.get("unk_id")?.as_i64()? as i32,
+            vocab,
+            index,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, JsonError> {
+        Self::from_json(&crate::util::json::parse_file(path)?)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    pub fn token(&self, id: i32) -> Option<&str> {
+        self.vocab.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn id_of(&self, word: &str) -> Option<i32> {
+        self.index.get(word).map(|&i| i as i32)
+    }
+
+    fn is_special(&self, id: i32) -> bool {
+        id == self.pad_id || id == self.bos_id || id == self.eos_id
+    }
+
+    pub fn encode(&self, text: &str, add_bos: bool) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() / 4 + 1);
+        if add_bos {
+            ids.push(self.bos_id);
+        }
+        for word in text.split_whitespace() {
+            ids.push(self.id_of(word).unwrap_or(self.unk_id));
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if self.is_special(id) {
+                continue;
+            }
+            let word = self.token(id).unwrap_or("<unk>");
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(word);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn tiny() -> Tokenizer {
+        let j = parse(
+            r#"{"kind":"closed-lexicon-word",
+                "vocab":["<pad>","<bos>","<eos>","<unk>","tom","has","3","apples","."],
+                "pad_id":0,"bos_id":1,"eos_id":2,"unk_id":3}"#,
+        )
+        .unwrap();
+        Tokenizer::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tiny();
+        let ids = t.encode("tom has 3 apples .", true);
+        assert_eq!(ids, vec![1, 4, 5, 6, 7, 8]);
+        assert_eq!(t.decode(&ids), "tom has 3 apples .");
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let t = tiny();
+        let ids = t.encode("tom eats pizza", false);
+        assert_eq!(ids, vec![4, 3, 3]);
+        assert_eq!(t.decode(&ids), "tom <unk> <unk>");
+    }
+
+    #[test]
+    fn specials_skipped_in_decode() {
+        let t = tiny();
+        assert_eq!(t.decode(&[1, 4, 0, 0, 2]), "tom");
+        assert_eq!(t.decode(&[]), "");
+    }
+
+    #[test]
+    fn whitespace_normalization() {
+        let t = tiny();
+        assert_eq!(
+            t.encode("  tom   has\napples ", false),
+            vec![4, 5, 7]
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let j = parse(r#"{"kind":"bpe","vocab":[],"pad_id":0,"bos_id":1,"eos_id":2,"unk_id":3}"#)
+            .unwrap();
+        assert!(Tokenizer::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Big-stack entry helper.
+//!
+//! xla_extension 0.5.1's CPU client setup and HLO text parser recurse deeply
+//! (observed SIGSEGV on default 8 MiB stacks when parsing modules with large
+//! inline constants). Every binary/test that touches PJRT runs its body on a
+//! dedicated thread with a generous stack via [`run`].
+
+/// Run `f` on a 256 MiB-stack thread and propagate its result/panic.
+pub fn run<T, F>(f: F) -> T
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name("quasar-main".into())
+        .stack_size(256 << 20)
+        .spawn(f)
+        .expect("spawn big-stack thread")
+        .join()
+        .unwrap_or_else(|e| std::panic::resume_unwind(e))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn returns_value() {
+        assert_eq!(super::run(|| 7), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner")]
+    fn propagates_panic() {
+        super::run(|| panic!("inner"));
+    }
+}

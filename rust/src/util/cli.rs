@@ -1,0 +1,290 @@
+//! Tiny declarative CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative command-line parser.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(String::from),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` switch.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&Spec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Parse; returns Err on unknown/malformed args, prints help and exits
+    /// on `--help` when parsing real process args via [`Cli::parse_env`].
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if name == "help" {
+                    return Ok(Parsed { help: Some(self.help_text()), ..Parsed::empty() });
+                }
+                let spec = self
+                    .spec(&name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                CliError(format!("--{name} requires a value"))
+                            })?
+                            .clone(),
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    self.flags.push(name);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+        }
+        // apply defaults
+        for s in &self.specs {
+            if s.takes_value && !self.values.contains_key(&s.name) {
+                if let Some(d) = &s.default {
+                    self.values.insert(s.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed {
+            help: None,
+            values: self.values,
+            flags: self.flags,
+            positional: self.positional,
+        })
+    }
+
+    /// Parse `std::env::args()[1..]`, printing help/errors and exiting as a
+    /// CLI binary should.
+    pub fn parse_env(self) -> Parsed {
+        let help = self.help_text();
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(p) => {
+                if let Some(h) = &p.help {
+                    println!("{h}");
+                    std::process::exit(0);
+                }
+                p
+            }
+            Err(e) => {
+                eprintln!("{e}\n\n{help}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for s in &self.specs {
+            let head = if s.takes_value {
+                format!("  --{} <value>", s.name)
+            } else {
+                format!("  --{}", s.name)
+            };
+            let dflt = s
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("{head:<28}{}{dflt}\n", s.help));
+        }
+        out.push_str("  --help                    show this message\n");
+        out
+    }
+}
+
+/// Result of parsing; typed accessors panic with a clear message on type
+/// errors (these are programmer errors in bench/example code).
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub help: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    fn empty() -> Self {
+        Parsed {
+            help: None,
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("missing required --{name}"))
+            .clone()
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list accessor.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("model", Some("qwen3-like"), "model name")
+            .opt("steps", None, "step count")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, CliError> {
+        cli().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&[]).unwrap();
+        assert_eq!(p.str("model"), "qwen3-like");
+        assert_eq!(p.get("steps"), None);
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let p = parse(&["--model", "pangu-like", "--steps=42", "--verbose"]).unwrap();
+        assert_eq!(p.str("model"), "pangu-like");
+        assert_eq!(p.usize("steps"), 42);
+        assert!(p.has("verbose"));
+    }
+
+    #[test]
+    fn positional_and_lists() {
+        let p = cli()
+            .opt("tasks", Some("a,b"), "")
+            .parse(&["pos1".into(), "--tasks=x,y,z".into(), "pos2".into()])
+            .unwrap();
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+        assert_eq!(p.list("tasks"), vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn errors_on_unknown_and_missing_value() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--steps"]).is_err());
+        assert!(parse(&["--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--model"));
+        assert!(h.contains("default: qwen3-like"));
+        let p = parse(&["--help"]).unwrap();
+        assert!(p.help.is_some());
+    }
+}

@@ -1,0 +1,223 @@
+//! Streaming histogram / summary statistics for latency and length metrics.
+//!
+//! Log-bucketed (HdrHistogram-style, base-10 sub-decades) so p50/p95/p99 of
+//! microsecond-to-second latencies are captured with ~4% relative error at a
+//! fixed 256-bucket footprint, plus exact min/max/mean/count.
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// log-spaced buckets covering [1e-7, 1e3) in 25-per-decade resolution
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const DECADES_LO: f64 = -7.0;
+const PER_DECADE: usize = 25;
+const N_BUCKETS: usize = 10 * PER_DECADE + 2; // + underflow/overflow
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 {
+            return 0; // underflow
+        }
+        let pos = (v.log10() - DECADES_LO) * PER_DECADE as f64;
+        if pos < 0.0 {
+            0
+        } else if pos as usize + 1 >= N_BUCKETS {
+            N_BUCKETS - 1 // overflow
+        } else {
+            pos as usize + 1
+        }
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        // representative (geometric-mid) value of bucket i
+        10f64.powf(DECADES_LO + (i as f64 - 0.5) / PER_DECADE as f64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Quantile in [0,1]; approximate via bucket representative values but
+    /// exact at the extremes (clamped to observed min/max).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line human summary (seconds assumed, printed in ms).
+    pub fn summary_ms(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count,
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p95() * 1e3,
+            self.p99() * 1e3,
+            self.max() * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+    }
+
+    #[test]
+    fn mean_min_max_exact() {
+        let mut h = Histogram::new();
+        for v in [0.001, 0.002, 0.003] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.002).abs() < 1e-12);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.003);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        let mut rng = Pcg::seeded(2);
+        let mut vals: Vec<f64> = (0..10_000)
+            .map(|_| 0.0001 * (1.0 + 99.0 * rng.f64()))
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.95, 0.99] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.12, "q={q}: approx {approx} vs exact {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = Pcg::seeded(3);
+        for i in 0..2000 {
+            let v = rng.f64() * 0.1;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert!((a.mean() - c.mean()).abs() < 1e-12);
+        assert_eq!(a.p95(), c.p95());
+    }
+
+    #[test]
+    fn extreme_values_clamp_not_panic() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) <= 1e9);
+    }
+}

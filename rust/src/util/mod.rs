@@ -1,0 +1,12 @@
+//! Utility substrates hand-rolled for the offline environment (only the
+//! `xla` crate's dependency tree is vendored — see DESIGN.md §1): JSON,
+//! PRNG, property testing, CLI parsing, threading and timing.
+
+pub mod bigstack;
+pub mod cli;
+pub mod hist;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;
+pub mod time;

@@ -1,0 +1,270 @@
+//! Property-testing micro-framework (proptest is not vendored offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("batcher never drops requests", 500, |rng| gen_case(rng),
+//!            |case| { ...; ok() })
+//! ```
+//! On failure the framework greedily shrinks the case via [`Shrink`] before
+//! panicking with the minimal reproducer's `Debug` form and the seed, so a
+//! failing run is replayable with `QUASAR_PROP_SEED`.
+
+use super::rng::Pcg;
+
+/// Property outcome: `Ok(())` or a failure description.
+pub type PropResult = Result<(), String>;
+
+pub fn ok() -> PropResult {
+    Ok(())
+}
+
+pub fn fail(msg: impl Into<String>) -> PropResult {
+    Err(msg.into())
+}
+
+/// Ensure with message formatting.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Types that can propose strictly-smaller candidate values of themselves.
+pub trait Shrink: Sized {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for usize {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for i32 {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - self.signum()]
+        }
+    }
+}
+
+impl Shrink for i64 {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![0, self / 2, self - self.signum()]
+        }
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // drop halves, then single elements, then shrink one element
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        if n <= 16 {
+            for i in 0..n {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..n {
+                for cand in self[i].shrink_candidates() {
+                    let mut v = self.clone();
+                    v[i] = cand;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b)),
+        );
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink, C: Clone + Shrink> Shrink for (A, B, C) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink_candidates()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `iters` random cases of `prop` over values from `gen`; shrink and
+/// panic on the first failure. The seed comes from `QUASAR_PROP_SEED` when
+/// set (replay), else a fixed default (CI determinism).
+pub fn prop_check<T, G, P>(name: &str, iters: usize, mut gen: G, mut prop: P)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let seed = std::env::var("QUASAR_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Pcg::seeded(seed ^ fxhash(name));
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            let (minimal, min_msg) = shrink_loop(case, msg, &mut prop);
+            panic!(
+                "property '{name}' failed (iter {i}, seed {seed}):\n  {min_msg}\n  minimal case: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut case: T, mut msg: String, prop: &mut P) -> (T, String)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    P: FnMut(&T) -> PropResult,
+{
+    // Greedy descent, bounded to avoid pathological loops.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in case.shrink_candidates() {
+            if let Err(m) = prop(&cand) {
+                case = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (case, msg)
+}
+
+/// Small string hash so each property gets its own stream.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check(
+            "sum of two non-negatives is >= each",
+            200,
+            |rng| (rng.below(1000), rng.below(1000)),
+            |&(a, b)| {
+                prop_assert!(a + b >= a && a + b >= b, "overflowed");
+                ok()
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case")]
+    fn failing_property_shrinks_and_panics() {
+        prop_check(
+            "all vecs shorter than 3 (false)",
+            200,
+            |rng| {
+                (0..rng.usize_below(20))
+                    .map(|_| rng.below(10))
+                    .collect::<Vec<u64>>()
+            },
+            |v| {
+                prop_assert!(v.len() < 3, "len {} >= 3", v.len());
+                ok()
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_reaches_small_case() {
+        // the minimal failing vec for "no element >= 5" should be len-1
+        let case: Vec<u64> = vec![1, 9, 3, 7, 2];
+        let mut prop = |v: &Vec<u64>| -> PropResult {
+            if v.iter().any(|&x| x >= 5) {
+                Err("has big element".into())
+            } else {
+                Ok(())
+            }
+        };
+        let (minimal, _) = shrink_loop(case, "seed".into(), &mut prop);
+        assert_eq!(minimal.len(), 1);
+        assert!(minimal[0] >= 5);
+    }
+}

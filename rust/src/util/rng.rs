@@ -1,0 +1,197 @@
+//! PCG64-family PRNG plus the sampling helpers the engine needs.
+//!
+//! `rand` is not vendored offline; this is a small, well-tested PCG-XSH-RR
+//! implementation. Determinism matters: every benchmark and property test
+//! seeds its own stream so paper tables regenerate bit-identically.
+
+/// PCG-XSH-RR 64/32 with 64-bit output composed from two draws.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-seed constructor (stream derived from the seed).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire-style rejection (unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential inter-arrival sample with the given rate (per second).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = self.f64().max(1e-12);
+        -u.ln() / rate
+    }
+
+    /// Pick one index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted() with zero total");
+        let mut r = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Split a child stream (for per-request / per-agent determinism).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        Pcg::new(self.next_u64() ^ tag, tag.wrapping_mul(2654435761) | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg::seeded(7);
+        let mut b = Pcg::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::seeded(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_roughly_uniform() {
+        let mut rng = Pcg::seeded(42);
+        let n = 20_000;
+        let mut sum = 0.0;
+        let mut buckets = [0usize; 10];
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            buckets[(x * 10.0) as usize] += 1;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        for (i, b) in buckets.iter().enumerate() {
+            let frac = *b as f64 / n as f64;
+            assert!((frac - 0.1).abs() < 0.02, "bucket {i}: {frac}");
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_small_n() {
+        let mut rng = Pcg::seeded(1);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.below(3) as usize] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / 30_000.0;
+            assert!((frac - 1.0 / 3.0).abs() < 0.02, "{frac}");
+        }
+    }
+
+    #[test]
+    fn weighted_tracks_weights() {
+        let mut rng = Pcg::seeded(5);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.weighted(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 30_000.0 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / 30_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn exp_mean_matches_rate() {
+        let mut rng = Pcg::seeded(9);
+        let rate = 4.0;
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| rng.exp(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg::seeded(3);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut root = Pcg::seeded(11);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! Thread-pool + channel utilities (tokio is not vendored offline;
+//! DESIGN.md §1). The engine's concurrency is deliberately simple: a fixed
+//! worker pool for request handling, `std::sync::mpsc` for queues, and a
+//! scoped parallel-map used by benches and the eval suite.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool with graceful shutdown on drop.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    live: Arc<AtomicBool>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "pool of zero workers");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let live = Arc::new(AtomicBool::new(true));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("quasar-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, live }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers gone");
+    }
+
+    pub fn is_live(&self) -> bool {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Drop the sender and join all workers (runs automatically on drop).
+    pub fn shutdown(&mut self) {
+        self.live.store(false, Ordering::Relaxed);
+        self.tx.take(); // closes the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Parallel map preserving input order. Spawns up to `n_threads` scoped
+/// threads; panics in `f` propagate.
+pub fn par_map<T, U, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = n_threads.clamp(1, n);
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = Mutex::new(work);
+    let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let out = Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((idx, v)) => {
+                        let r = f(v);
+                        out.lock().unwrap()[idx] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("slot filled")).collect()
+}
+
+/// Bounded single-producer/single-consumer style queue wrapper around mpsc
+/// with backpressure accounting (the router's admission path).
+pub struct BoundedQueue<T> {
+    tx: Sender<T>,
+    rx: Mutex<Receiver<T>>,
+    cap: usize,
+    len: Arc<Mutex<usize>>,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        let (tx, rx) = channel();
+        BoundedQueue { tx, rx: Mutex::new(rx), cap, len: Arc::new(Mutex::new(0)) }
+    }
+
+    /// Try to enqueue; `Err(item)` when full (caller applies backpressure).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut len = self.len.lock().unwrap();
+        if *len >= self.cap {
+            return Err(item);
+        }
+        *len += 1;
+        self.tx.send(item).map_err(|e| {
+            *self.len.lock().unwrap() -= 1;
+            e.0
+        })
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let rx = self.rx.lock().unwrap();
+        match rx.try_recv() {
+            Ok(v) => {
+                *self.len.lock().unwrap() -= 1;
+                Some(v)
+            }
+            Err(_) => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        *self.len.lock().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop joins
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map((0..50).collect::<Vec<i64>>(), 8, |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single_thread() {
+        let empty: Vec<i32> = vec![];
+        assert!(par_map(empty, 4, |x: i32| x).is_empty());
+        assert_eq!(par_map(vec![1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,124 @@
+//! Timing helpers: stopwatch, scoped timers and a tiny statistics type used
+//! by the bench harness (criterion is not vendored offline).
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Sample statistics over repeated timings.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    pub values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = v.len() / 2;
+        if v.len() % 2 == 0 {
+            (v[mid - 1] + v[mid]) / 2.0
+        } else {
+            v[mid]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.004, "{lap}");
+        assert!(sw.elapsed_s() < lap, "reset after lap");
+    }
+
+    #[test]
+    fn samples_stats() {
+        let mut s = Samples::default();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, t) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Workload layer: the Spec-Bench stand-in (DESIGN.md §1).
+//!
+//! Prompts come from `artifacts/workloads.json` — held-out documents from
+//! the same five task-family generators the model was trained on, exported
+//! by `python/compile/aot.py` so the rust and python sides agree exactly on
+//! the token distribution. This module samples per-task request sets and
+//! synthesizes arrival processes for the serving benchmarks.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::GenParams;
+use crate::util::json::{parse_file, Json};
+use crate::util::rng::Pcg;
+
+/// The paper's five task families (Table 1 columns).
+pub const TASKS: [&str; 5] = ["mtbench", "humaneval", "gsm8k", "alpaca", "cnndm"];
+
+/// One serving prompt with its reference completion.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub task: String,
+    pub prompt: String,
+    pub prompt_ids: Vec<i32>,
+    pub reference_ids: Vec<i32>,
+}
+
+/// The full exported workload set.
+#[derive(Debug, Clone)]
+pub struct WorkloadSet {
+    items: Vec<WorkItem>,
+}
+
+impl WorkloadSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let j = parse_file(path).context("loading workloads.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut items = Vec::new();
+        for (task, arr) in j.get("tasks")?.as_obj()? {
+            for it in arr.as_arr()? {
+                items.push(WorkItem {
+                    task: task.clone(),
+                    prompt: it.get("prompt")?.as_str()?.to_string(),
+                    prompt_ids: it.get("prompt_ids")?.as_i32_vec()?,
+                    reference_ids: it.get("reference_ids")?.as_i32_vec()?,
+                });
+            }
+        }
+        Ok(WorkloadSet { items })
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn task_items(&self, task: &str) -> Vec<&WorkItem> {
+        self.items.iter().filter(|i| i.task == task).collect()
+    }
+
+    /// Deterministically sample `n` prompts of one task.
+    pub fn sample(&self, task: &str, n: usize, rng: &mut Pcg) -> Vec<WorkItem> {
+        let pool = self.task_items(task);
+        assert!(!pool.is_empty(), "no items for task {task}");
+        (0..n)
+            .map(|_| pool[rng.usize_below(pool.len())].clone())
+            .collect()
+    }
+
+    /// A mixed-task batch in round-robin task order (the serving driver).
+    pub fn mixed(&self, n: usize, rng: &mut Pcg) -> Vec<WorkItem> {
+        (0..n)
+            .map(|i| {
+                let task = TASKS[i % TASKS.len()];
+                let pool = self.task_items(task);
+                pool[rng.usize_below(pool.len())].clone()
+            })
+            .collect()
+    }
+}
+
+/// Open-loop Poisson arrival trace for the serving benchmark.
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    /// (arrival offset seconds, item index)
+    pub arrivals: Vec<(f64, usize)>,
+}
+
+impl ArrivalTrace {
+    pub fn poisson(n: usize, rate_per_s: f64, rng: &mut Pcg) -> Self {
+        let mut t = 0.0;
+        let arrivals = (0..n)
+            .map(|i| {
+                t += rng.exp(rate_per_s);
+                (t, i)
+            })
+            .collect();
+        ArrivalTrace { arrivals }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.arrivals.last().map(|a| a.0).unwrap_or(0.0)
+    }
+}
+
+/// Default generation params used by the benches (paper: greedy T=0 and
+/// sampled T=1, ~64 new tokens per request on the scaled-down model).
+pub fn bench_params(temp: f64, max_new: usize) -> GenParams {
+    GenParams { temp, max_new, seed: None, stop_at_eos: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample_json() -> Json {
+        parse(
+            r#"{"tasks": {
+                "gsm8k": [
+                  {"prompt":"question : a","prompt_ids":[1,10],"reference":"r","reference_ids":[11]},
+                  {"prompt":"question : b","prompt_ids":[1,12],"reference":"r","reference_ids":[13]}
+                ],
+                "alpaca": [
+                  {"prompt":"write","prompt_ids":[1,20],"reference":"r","reference_ids":[21]}
+                ],
+                "mtbench": [{"prompt":"m","prompt_ids":[1,30],"reference":"r","reference_ids":[31]}],
+                "humaneval": [{"prompt":"h","prompt_ids":[1,40],"reference":"r","reference_ids":[41]}],
+                "cnndm": [{"prompt":"c","prompt_ids":[1,50],"reference":"r","reference_ids":[51]}]
+            }, "seed": 1}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_filters_by_task() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        assert_eq!(ws.len(), 6);
+        assert_eq!(ws.task_items("gsm8k").len(), 2);
+        assert_eq!(ws.task_items("alpaca").len(), 1);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let a: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5))
+            .iter().map(|i| i.prompt_ids.clone()).collect();
+        let b: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5))
+            .iter().map(|i| i.prompt_ids.clone()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mixed_covers_all_tasks() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let m = ws.mixed(10, &mut Pcg::seeded(1));
+        for t in TASKS {
+            assert!(m.iter().any(|i| i.task == t), "missing {t}");
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_correct_mean() {
+        let mut rng = Pcg::seeded(2);
+        let tr = ArrivalTrace::poisson(4000, 8.0, &mut rng);
+        assert!(tr.arrivals.windows(2).all(|w| w[0].0 <= w[1].0));
+        let mean_gap = tr.duration() / 4000.0;
+        assert!((mean_gap - 0.125).abs() < 0.01, "mean gap {mean_gap}");
+    }
+}

@@ -1,0 +1,82 @@
+//! TCP server round-trip: boots the JSON-lines server on an ephemeral port
+//! against real artifacts, drives it with the client, and checks the
+//! generation responses and control commands. Skips when artifacts are
+//! absent (run `make artifacts`).
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+use quasar::coordinator::{EngineConfig, EngineHandle};
+use quasar::server::{serve, Client};
+use quasar::tokenizer::Tokenizer;
+use quasar::util::json::Json;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = std::env::var("QUASAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("[skip] no artifacts at {root:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn server_round_trip() {
+    quasar::util::bigstack::run(server_round_trip_inner)
+}
+
+fn server_round_trip_inner() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = quasar::runtime::Manifest::load(&root).unwrap();
+    let model = manifest.models.keys().next().unwrap().clone();
+    let tok = Tokenizer::load(&manifest.tokenizer_path).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = EngineHandle::spawn(root, model, EngineConfig::quasar(1, 4), 16).unwrap();
+
+    let server = std::thread::spawn(move || serve(listener, handle, tok, 2).unwrap());
+
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+
+    // control plane
+    let pong = client
+        .roundtrip(&Json::obj(vec![("cmd", Json::str("ping"))]))
+        .unwrap();
+    assert_eq!(pong.get("ok").unwrap().as_bool().unwrap(), true);
+
+    // malformed request -> error response, connection stays usable
+    let err = client.roundtrip(&Json::obj(vec![("nope", Json::num(1.0))])).unwrap();
+    assert!(err.opt("error").is_some(), "expected error field: {err}");
+
+    // generation
+    let resp = client
+        .generate("question : tom has 2 4 apples . how many apples now ?", 24, 0.0)
+        .unwrap();
+    assert!(resp.opt("error").is_none(), "unexpected error: {resp}");
+    let text = resp.get("text").unwrap().as_str().unwrap();
+    assert!(!text.is_empty(), "empty generation");
+    let steps = resp.get("steps").unwrap().as_i64().unwrap();
+    let l = resp.get("accept_len").unwrap().as_f64().unwrap();
+    assert!(steps > 0 && l >= 1.0, "steps={steps} L={l}");
+    assert!(resp.get("latency_s").unwrap().as_f64().unwrap() > 0.0);
+    let tokens = resp.get("tokens").unwrap().as_i32_vec().unwrap();
+    assert!(!tokens.is_empty() && tokens.len() <= 24);
+
+    // determinism: same prompt + greedy -> same tokens
+    let resp2 = client
+        .generate("question : tom has 2 4 apples . how many apples now ?", 24, 0.0)
+        .unwrap();
+    assert_eq!(
+        resp2.get("tokens").unwrap().as_i32_vec().unwrap(),
+        tokens,
+        "greedy generation must be deterministic"
+    );
+
+    client.shutdown().unwrap();
+    let served = server.join().unwrap();
+    assert!(served >= 4, "served {served}");
+}

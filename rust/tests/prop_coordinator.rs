@@ -1,0 +1,260 @@
+//! Property tests over coordinator/spec invariants (pure logic — no PJRT),
+//! using the in-repo `util::prop` micro-framework.
+
+use quasar::coordinator::BatchGroup;
+use quasar::prop_assert;
+use quasar::runtime::Tensor;
+use quasar::spec::{verify_draft, Draft, NgramIndex};
+use quasar::util::prop::{ok, prop_check};
+use quasar::util::rng::Pcg;
+
+#[test]
+fn batch_group_never_loses_or_duplicates_rows() {
+    // Random join/leave sequences: every leased slot is unique, frees are
+    // exact, and capacity is respected.
+    prop_check(
+        "batch group lease discipline",
+        300,
+        |rng| {
+            let ops: Vec<u64> = (0..rng.usize_below(40)).map(|_| rng.below(100)).collect();
+            ops
+        },
+        |ops| {
+            let batch = 4;
+            let mut g = BatchGroup::new(2, batch, 2, 8, 4);
+            let k1 = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
+            let mut next_slot = 0usize;
+            let mut leased: Vec<(usize, usize)> = Vec::new(); // (row, slot)
+            for &op in ops {
+                if op % 2 == 0 {
+                    // join
+                    let r = g.join(next_slot, &k1, &k1);
+                    if leased.len() < batch {
+                        let row = match r {
+                            Ok(row) => row,
+                            Err(e) => return Err(format!("join failed with space: {e}")),
+                        };
+                        prop_assert!(
+                            !leased.iter().any(|(rw, _)| *rw == row),
+                            "row {row} double-leased"
+                        );
+                        leased.push((row, next_slot));
+                        next_slot += 1;
+                    } else {
+                        prop_assert!(r.is_err(), "join succeeded on full group");
+                    }
+                } else if !leased.is_empty() {
+                    let idx = (op as usize / 2) % leased.len();
+                    let (row, slot) = leased.remove(idx);
+                    match g.leave(row) {
+                        Ok(s) => prop_assert!(s == slot, "leave returned wrong slot"),
+                        Err(e) => return Err(format!("leave failed: {e}")),
+                    }
+                }
+                // invariant: active rows equals our model
+                let mut active = g.active_rows();
+                active.sort_unstable();
+                let mut expect = leased.clone();
+                expect.sort_unstable();
+                prop_assert!(active == expect, "active rows diverged");
+                prop_assert!(
+                    g.free_rows() == batch - leased.len(),
+                    "free row count diverged"
+                );
+            }
+            ok()
+        },
+    );
+}
+
+#[test]
+fn verify_outcome_always_commits_accepted_plus_one() {
+    // For any draft and any logits, the outcome accepts a prefix (0..=g) and
+    // emits exactly one extra token; at T=0 the accepted prefix must match
+    // argmax at every accepted position and mismatch at the rejection point.
+    prop_check(
+        "rejection sampler commits prefix + 1",
+        400,
+        |rng| {
+            let v = 8usize;
+            let g = rng.usize_below(5);
+            let logits: Vec<Vec<f64>> = (0..=g)
+                .map(|_| (0..v).map(|_| rng.f64() * 8.0 - 4.0).collect())
+                .collect();
+            let draft: Vec<i64> = (0..g).map(|_| rng.below(v as u64) as i64).collect();
+            let temp_sel = rng.below(2);
+            (logits, draft, temp_sel)
+        },
+        |(logits, draft, temp_sel)| {
+            let rows: Vec<Vec<f32>> = logits
+                .iter()
+                .map(|r| r.iter().map(|&x| x as f32).collect())
+                .collect();
+            let d = Draft::point_mass(draft.iter().map(|&t| t as i32).collect());
+            let temp = if *temp_sel == 0 { 0.0 } else { 1.0 };
+            let mut rng = Pcg::seeded(42);
+            let out = verify_draft(&d, |i| rows[i].as_slice(), temp, &mut rng);
+            prop_assert!(out.accepted <= d.len(), "accepted > drafted");
+            prop_assert!(
+                (out.next_token as usize) < rows[0].len(),
+                "next token out of vocab"
+            );
+            if temp == 0.0 {
+                for i in 0..out.accepted {
+                    let top = quasar::spec::argmax(&rows[i]) as i32;
+                    prop_assert!(top == d.tokens[i], "accepted non-argmax at {i}");
+                }
+                if out.accepted < d.len() {
+                    let top = quasar::spec::argmax(&rows[out.accepted]) as i32;
+                    prop_assert!(
+                        top != d.tokens[out.accepted],
+                        "rejected an argmax match"
+                    );
+                    prop_assert!(out.next_token == top, "corrective != argmax");
+                }
+            }
+            ok()
+        },
+    );
+}
+
+#[test]
+fn ngram_drafts_are_always_copies_of_context() {
+    // Whatever the stream, a PLD draft must be an exact substring of the
+    // context whose preceding k-gram matches the context suffix.
+    prop_check(
+        "PLD drafts are verbatim context continuations",
+        300,
+        |rng| {
+            let n = 3 + rng.usize_below(60);
+            let vocab = 1 + rng.below(6);
+            (0..n).map(|_| rng.below(vocab) as i64).collect::<Vec<i64>>()
+        },
+        |stream| {
+            let toks: Vec<i32> = stream.iter().map(|&t| t as i32).collect();
+            let mut ix = NgramIndex::new(1, 4);
+            ix.extend(&toks);
+            let draft = ix.draft(6, 1, 4);
+            if draft.is_empty() {
+                return ok();
+            }
+            // find the draft as a contiguous slice of the context
+            let found = toks
+                .windows(draft.len())
+                .enumerate()
+                .any(|(start, w)| {
+                    if w != draft.as_slice() || start == 0 {
+                        return false;
+                    }
+                    // some k-suffix of the context must precede this window
+                    (1..=4usize).any(|k| {
+                        start >= k
+                            && toks.len() >= k
+                            && toks[start - k..start] == toks[toks.len() - k..]
+                    })
+                });
+            prop_assert!(found, "draft {draft:?} is not a matched continuation of {toks:?}");
+            ok()
+        },
+    );
+}
+
+#[test]
+fn tensor_row_splice_is_self_inverse() {
+    prop_check(
+        "splice row out and back leaves cache unchanged",
+        200,
+        |rng| {
+            let vals: Vec<u64> = (0..2 * 3 * 4).map(|_| rng.below(100)).collect();
+            let row = rng.below(3);
+            (vals, row)
+        },
+        |(vals, row)| {
+            let row = *row as usize;
+            let data: Vec<f32> = vals.iter().map(|&v| v as f32).collect();
+            let orig = Tensor::from_vec(data, &[2, 3, 4]).unwrap();
+            // extract row into a [2,1,4] tensor
+            let mut single = Tensor::<f32>::zeros(&[2, 1, 4]);
+            single.copy_axis1_row_from(0, &orig, row);
+            // splice back into a copy with the row zeroed
+            let mut modified = orig.clone();
+            modified.zero_axis1_row(row);
+            modified.copy_axis1_row_from(row, &single, 0);
+            prop_assert!(modified == orig, "splice round-trip changed data");
+            ok()
+        },
+    );
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    use quasar::util::json::{parse, Json};
+    // generate random JSON values, emit, reparse, compare
+    fn gen_value(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(2000) as f64 - 1000.0) / 8.0),
+            3 => Json::Str(format!("s{}né\"\\\n{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.usize_below(4)).map(|_| gen_value(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.usize_below(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop_check(
+        "json emit->parse is identity",
+        400,
+        |rng| {
+            let seed = rng.next_u64();
+            seed
+        },
+        |seed| {
+            let mut rng = Pcg::seeded(*seed);
+            let v = gen_value(&mut rng, 0);
+            let text = v.to_string();
+            match parse(&text) {
+                Ok(back) => {
+                    prop_assert!(back == v, "roundtrip mismatch for {text}");
+                    ok()
+                }
+                Err(e) => Err(format!("emitted invalid json {text}: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn tokenizer_roundtrips_vocab_sentences() {
+    use quasar::tokenizer::Tokenizer;
+    use quasar::util::json::parse;
+    let tok_json = parse(
+        r#"{"kind":"closed-lexicon-word",
+            "vocab":["<pad>","<bos>","<eos>","<unk>","tom","has","3","apples",".","plus","equals"],
+            "pad_id":0,"bos_id":1,"eos_id":2,"unk_id":3}"#,
+    )
+    .unwrap();
+    let tok = Tokenizer::from_json(&tok_json).unwrap();
+    let words = ["tom", "has", "3", "apples", ".", "plus", "equals"];
+    prop_check(
+        "decode(encode(x)) == x over the vocab language",
+        300,
+        |rng| {
+            (0..1 + rng.usize_below(30))
+                .map(|_| rng.below(words.len() as u64))
+                .collect::<Vec<u64>>()
+        },
+        |idxs| {
+            let text = idxs
+                .iter()
+                .map(|&i| words[i as usize])
+                .collect::<Vec<_>>()
+                .join(" ");
+            let ids = tok.encode(&text, false);
+            prop_assert!(tok.decode(&ids) == text, "roundtrip failed for {text}");
+            ok()
+        },
+    );
+}
