@@ -1,19 +1,26 @@
 //! End-to-end serving validation (DESIGN.md E8): load the trained model,
-//! serve a mixed-task batched workload through the full stack (router ->
-//! engine thread -> continuous batcher -> drafter -> PJRT verification),
-//! and report latency / throughput / acceptance — real wall-clock, plus the
-//! modeled-device speedup comparison between the Ngram baseline and Quasar.
+//! boot the TCP server, and drive it with N *concurrent closed-loop client
+//! connections* through the full stack (TCP -> pool worker -> scheduler ->
+//! engine thread -> continuous batcher -> drafter -> PJRT verification).
+//! Reports latency / throughput / acceptance plus the scheduler's view:
+//! batch occupancy and mean scheduling delay, so the effect of concurrent
+//! submission on batched verification is visible directly in the output.
 //!
-//! Run: `cargo run --release --example serve_benchmark -- [--n 24] [--batch 4]`
+//! Run: `cargo run --release --example serve_benchmark -- \
+//!         [--n 24] [--clients 8] [--batch 4]`
 
-use std::time::{Duration, Instant};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 use quasar::bench::BenchCtx;
 use quasar::coordinator::{EngineConfig, EngineHandle};
+use quasar::server::{serve, Client};
 use quasar::util::cli::Cli;
 use quasar::util::hist::Histogram;
 use quasar::util::rng::Pcg;
-use quasar::workload::bench_params;
+use quasar::util::json::Json;
 
 fn main() {
     quasar::util::bigstack::run(|| {
@@ -24,15 +31,27 @@ fn main() {
     })
 }
 
+/// Per-client tallies, merged by the driver after the joins.
+#[derive(Default)]
+struct ClientTally {
+    lat: Histogram,
+    ttft: Histogram,
+    tokens: u64,
+    l_sum: f64,
+    done: usize,
+}
+
 fn run() -> anyhow::Result<()> {
     let args = Cli::new("serve_benchmark", "end-to-end batched serving driver")
         .opt("n", Some("24"), "number of requests")
+        .opt("clients", Some("8"), "concurrent closed-loop client connections")
         .opt("batch", Some("4"), "batch bucket")
         .opt("max-new", Some("48"), "tokens per request")
         .opt("temp", Some("0"), "sampling temperature")
         .opt("method", Some("both"), "ngram | quasar | both")
         .parse_env();
     let n = args.usize("n");
+    let clients = args.usize("clients").max(1);
     let batch = args.usize("batch");
     let max_new = args.usize("max-new");
     let temp = args.f64("temp");
@@ -45,6 +64,7 @@ fn run() -> anyhow::Result<()> {
         for m in ["ngram", "quasar"] {
             let status = std::process::Command::new(&exe)
                 .args(["--method", m, "--n", &n.to_string(),
+                       "--clients", &clients.to_string(),
                        "--batch", &batch.to_string(),
                        "--max-new", &max_new.to_string(),
                        "--temp", &temp.to_string()])
@@ -58,45 +78,93 @@ fn run() -> anyhow::Result<()> {
 
     let ctx = BenchCtx::load()?;
     let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0xE2E));
+    // The wire protocol takes prompt text; the closed-lexicon tokenizer
+    // round-trips decode(encode(text)) exactly.
+    let prompts: Arc<Vec<(String, String)>> = Arc::new(
+        items
+            .iter()
+            .map(|it| (ctx.tok.decode(&it.prompt_ids), it.task.clone()))
+            .collect(),
+    );
     let artifacts = std::env::var("QUASAR_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
 
-    {
-        let (name, cfg) = match method.as_str() {
-            "ngram" => ("ngram/fp32 (baseline)", EngineConfig::ngram(batch, 5)),
-            "quasar" => ("quasar/w8a8", EngineConfig::quasar(batch, 5)),
-            other => anyhow::bail!("unknown --method {other}"),
-        };
-        let handle = EngineHandle::spawn(
-            artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n,
-        )?;
-        let t0 = Instant::now();
-        for it in &items {
-            handle.submit(it.prompt_ids.clone(), bench_params(temp, max_new), &it.task)?;
-        }
-        let mut lat = Histogram::new();
-        let mut ttft = Histogram::new();
-        let mut tokens = 0u64;
-        let mut l_sum = 0.0;
-        let mut done = 0;
-        while done < n {
-            let Some(c) = handle.next_completion(Duration::from_secs(300)) else {
-                anyhow::bail!("timed out waiting for completions ({done}/{n})");
-            };
-            lat.record(c.latency_s);
-            ttft.record(c.ttft_s);
-            tokens += c.tokens.len() as u64;
-            l_sum += c.stats.mean_acceptance_len();
-            done += 1;
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        println!("\n=== {name}: {n} requests, b={batch}, T={temp} ===");
-        println!("  wall                {wall:.1}s  ({:.1} tok/s CPU)", tokens as f64 / wall);
-        println!("  tokens generated    {tokens}");
-        println!("  mean acceptance L   {:.2}", l_sum / n as f64);
-        println!("  request latency     {}", lat.summary_ms());
-        println!("  ttft                {}", ttft.summary_ms());
-        handle.shutdown()?;
+    let (name, cfg) = match method.as_str() {
+        "ngram" => ("ngram/fp32 (baseline)", EngineConfig::ngram(batch, 5)),
+        "quasar" => ("quasar/w8a8", EngineConfig::quasar(batch, 5)),
+        other => anyhow::bail!("unknown --method {other}"),
+    };
+    let handle = EngineHandle::spawn(
+        artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n.max(1),
+    )?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let tok_srv = ctx.tok.clone();
+    let server = std::thread::spawn(move || serve(listener, handle, tok_srv, clients + 2));
+
+    // Closed loop: each client connection immediately issues the next
+    // request from the shared work list when its previous one completes,
+    // keeping the scheduler fed so the batch can fill.
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..clients {
+        let next = Arc::clone(&next);
+        let prompts = Arc::clone(&prompts);
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<ClientTally> {
+            let mut client = Client::connect(&addr)?;
+            let mut tally = ClientTally::default();
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= prompts.len() {
+                    return Ok(tally);
+                }
+                let (text, task) = &prompts[i];
+                let resp = client.roundtrip(&Json::obj(vec![
+                    ("prompt", Json::str(text.clone())),
+                    ("max_new", Json::num(max_new as f64)),
+                    ("temp", Json::num(temp)),
+                    ("task", Json::str(task.clone())),
+                ]))?;
+                anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
+                tally.lat.record(resp.get("latency_s")?.as_f64()?);
+                tally.ttft.record(resp.get("ttft_s")?.as_f64()?);
+                tally.tokens += resp.get("tokens")?.as_arr()?.len() as u64;
+                tally.l_sum += resp.get("accept_len")?.as_f64()?;
+                tally.done += 1;
+            }
+        }));
     }
+    let mut total = ClientTally::default();
+    for j in joins {
+        let t = j.join().expect("client thread panicked")?;
+        total.lat.merge(&t.lat);
+        total.ttft.merge(&t.ttft);
+        total.tokens += t.tokens;
+        total.l_sum += t.l_sum;
+        total.done += t.done;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(total.done == n, "completed {}/{} requests", total.done, n);
+
+    let mut ctl = Client::connect(&addr.to_string())?;
+    let stats = ctl.stats()?;
+    ctl.shutdown()?;
+    server.join().expect("server thread panicked")?;
+
+    println!("\n=== {name}: {n} requests, {clients} clients, b={batch}, T={temp} ===");
+    println!("  wall                {wall:.1}s  ({:.1} tok/s CPU)",
+             total.tokens as f64 / wall);
+    println!("  tokens generated    {}", total.tokens);
+    println!("  mean acceptance L   {:.2}", total.l_sum / n as f64);
+    println!("  batch occupancy     {:.2} rows/step (cap {}) over {} steps",
+             stats.get("batch_occupancy")?.as_f64()?,
+             stats.get("batch")?.as_i64()?,
+             stats.get("steps")?.as_i64()?);
+    println!("  sched delay (mean)  {:.1}ms",
+             stats.get("sched_delay_s")?.as_f64()? * 1e3);
+    println!("  request latency     {}", total.lat.summary_ms());
+    println!("  ttft                {}", total.ttft.summary_ms());
     Ok(())
 }

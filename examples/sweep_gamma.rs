@@ -39,6 +39,7 @@ fn run() -> anyhow::Result<()> {
             batch: 1,
             gamma,
             seed: 0,
+            policy: Default::default(),
         };
         let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
         let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;

@@ -33,6 +33,7 @@ fn run() -> anyhow::Result<()> {
                 batch: 1,
                 gamma,
                 seed: 0,
+                policy: Default::default(),
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

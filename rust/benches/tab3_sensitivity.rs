@@ -22,6 +22,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         batch: 1,
         gamma,
         seed: 0,
+        policy: Default::default(),
     }
 }
 

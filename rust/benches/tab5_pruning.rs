@@ -36,6 +36,7 @@ fn run() -> anyhow::Result<()> {
             batch: 1,
             gamma: 5,
             seed: 0,
+            policy: Default::default(),
         };
         let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
         table.row(vec![

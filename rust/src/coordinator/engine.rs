@@ -3,31 +3,39 @@
 //! rejection sampling, and full call accounting.
 //!
 //! One `step()` =
-//!   admit (prefill + splice new requests into free rows)
+//!   expire (cancel running requests whose deadline passed, free their rows)
+//!   -> admit (pop the scheduler in policy order, prefill + splice new
+//!             requests into free rows)
 //!   -> draft   (per active row, via its drafter)
 //!   -> verify  (single batched chunk execution on the verifier variant:
 //!               `fp32` for the paper's Ngram baseline, `w8a8` for Quasar)
 //!   -> commit  (rejection sampling Eq. 2-3, acceptance bookkeeping,
 //!               finish handling)
 //!
+//! Submissions land in the admission [`Scheduler`] (FIFO / shortest-prompt /
+//! priority policies, per-request deadlines) rather than a raw queue; the
+//! engine also exposes a [`Engine::cancel`] path that frees a running
+//! request's KV row and emits a `Cancelled` completion.
+//!
 //! The engine is deliberately single-threaded around the PJRT client (one
 //! device); concurrency lives in the router/server layer which feeds it.
 
-use std::collections::VecDeque;
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::metrics::Metrics;
+use crate::metrics::{names, Metrics, SpecStats};
 use crate::runtime::{ModelCfg, ModelRuntime};
-use crate::spec::drafter::Drafter;
+use crate::spec::drafter::{DraftCost, Drafter};
 use crate::spec::{verify_draft, Draft, NgramConfig, NgramDrafter, PrunedDrafter, VanillaDrafter};
+use crate::tokenizer::{BOS_ID, EOS_ID};
 use crate::util::rng::Pcg;
 
 use super::calls::{CallLog, CallRecord, FnKind};
 use super::kv::BatchGroup;
 use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
+use super::scheduler::{SchedPolicy, Scheduler};
 
 /// Which drafting strategy the engine wires per request.
 #[derive(Debug, Clone)]
@@ -51,6 +59,8 @@ pub struct EngineConfig {
     /// Speculation depth cap (<= model gamma_max).
     pub gamma: usize,
     pub seed: u64,
+    /// Admission ordering for queued requests (see `coordinator::scheduler`).
+    pub policy: SchedPolicy,
 }
 
 impl EngineConfig {
@@ -62,6 +72,7 @@ impl EngineConfig {
             batch,
             gamma: 0,
             seed: 0,
+            policy: SchedPolicy::Fifo,
         }
     }
 
@@ -72,6 +83,7 @@ impl EngineConfig {
             batch,
             gamma,
             seed: 0,
+            policy: SchedPolicy::Fifo,
         }
     }
 
@@ -100,7 +112,8 @@ pub struct Engine {
     group: BatchGroup,
     /// Slot storage; a request keeps its slot index for its lifetime.
     states: Vec<Option<RequestState>>,
-    pending: VecDeque<Request>,
+    /// Admission queue between submitters and the batch group.
+    sched: Scheduler,
     rng: Pcg,
     next_id: u64,
     pub metrics: Metrics,
@@ -124,7 +137,7 @@ impl Engine {
             mcfg,
             group,
             states: Vec::new(),
-            pending: VecDeque::new(),
+            sched: Scheduler::new(cfg.policy),
             rng: Pcg::seeded(cfg.seed ^ 0x5145_5341),
             next_id: 1,
             metrics: Metrics::new(),
@@ -139,7 +152,7 @@ impl Engine {
     }
 
     pub fn eos_id(&self) -> i32 {
-        2 // tokenizer contract: <pad>=0 <bos>=1 <eos>=2 <unk>=3
+        EOS_ID // tokenizer contract constants live in `crate::tokenizer`
     }
 
     fn make_drafter(&mut self) -> Result<Box<dyn Drafter>> {
@@ -160,21 +173,62 @@ impl Engine {
         self.next_id += 1;
         prompt.truncate(self.mcfg.prefill_len);
         if prompt.is_empty() {
-            prompt.push(1); // <bos>
+            prompt.push(BOS_ID);
         }
-        self.pending
-            .push_back(Request::new(id, prompt, params).with_task(task));
+        self.sched
+            .push(Request::new(id, prompt, params).with_task(task));
         self.metrics.inc("requests_submitted", 1);
+        self.metrics
+            .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
         id
     }
 
     /// Number of requests not yet completed.
     pub fn in_flight(&self) -> usize {
-        self.pending.len() + self.group.active_rows().len()
+        self.sched.depth() + self.group.active_rows().len()
+    }
+
+    /// Requests waiting in the scheduler (not yet holding a KV row).
+    pub fn queue_depth(&self) -> usize {
+        self.sched.depth()
+    }
+
+    /// Requests currently holding a KV row.
+    pub fn active_count(&self) -> usize {
+        self.group.active_rows().len()
     }
 
     pub fn take_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
+    }
+
+    /// Abort a request wherever it lives. A queued request is dropped before
+    /// it costs a prefill; a running one releases its KV row via
+    /// [`BatchGroup::leave`]. Either way a [`FinishReason::Cancelled`]
+    /// completion is emitted so the submitter's reply channel resolves.
+    /// Returns `false` when the id is unknown (already completed).
+    pub fn cancel(&mut self, id: u64) -> Result<bool> {
+        if let Some(req) = self.sched.cancel(id) {
+            self.finish_unadmitted(req);
+            return Ok(true);
+        }
+        for (row, slot) in self.group.active_rows() {
+            if self.states[slot].as_ref().map(|st| st.req.id) == Some(id) {
+                self.cancel_row(row, slot)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Release a running request's KV row and finish it as `Cancelled`
+    /// (shared by explicit cancel and deadline expiry).
+    fn cancel_row(&mut self, row: usize, slot: usize) -> Result<()> {
+        self.group.leave(row)?;
+        let mut st = self.states[slot].take().expect("leased slot has state");
+        st.finished = Some(FinishReason::Cancelled);
+        self.finish_to_completion(st);
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -182,12 +236,19 @@ impl Engine {
     // ------------------------------------------------------------------
 
     fn admit(&mut self) -> Result<()> {
-        while self.group.free_rows() > 0 && !self.pending.is_empty() {
-            let req = self.pending.pop_front().unwrap();
+        let now = Instant::now();
+        for req in self.sched.take_expired(now) {
+            self.finish_unadmitted(req);
+        }
+        while self.group.free_rows() > 0 {
+            let Some(req) = self.sched.pop() else { break };
+            let sched_delay = now.duration_since(req.submitted_at).as_secs_f64();
+            self.metrics.observe(names::SCHED_DELAY_S, sched_delay);
             let mut drafter = self.make_drafter()?;
             drafter.begin(&req.prompt)?;
             let rng = self.rng.fork(req.params.seed.unwrap_or(req.id));
             let mut st = RequestState::new(req, drafter, rng);
+            st.sched_delay_s = sched_delay;
 
             let p = self.mcfg.prefill_len;
             let len = st.req.prompt.len();
@@ -226,6 +287,7 @@ impl Engine {
             st.drafter.observe_commit(&[first])?;
             let cost = st.drafter.take_cost();
             self.call_log.add_draft_cost(&cost);
+            st.draft_cost.merge(&cost);
             Self::check_finish_with(self.mcfg.max_seq, &mut st);
 
             // Park the state in a slot and lease a cache row.
@@ -235,6 +297,48 @@ impl Engine {
                 self.states[slot] = Some(st);
             } else {
                 self.finish_to_completion(st);
+            }
+        }
+        self.metrics
+            .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
+        Ok(())
+    }
+
+    /// Finish a request that never reached a KV row (blown deadline or
+    /// cancellation while queued): empty output, `Cancelled` finish.
+    fn finish_unadmitted(&mut self, req: Request) {
+        let latency = Instant::now()
+            .duration_since(req.submitted_at)
+            .as_secs_f64();
+        // `requests_completed` counts every terminal outcome;
+        // `requests_cancelled` is the subset that was aborted.
+        self.metrics.inc("requests_completed", 1);
+        self.metrics.inc("requests_cancelled", 1);
+        self.completions.push(Completion {
+            id: req.id,
+            task: req.task.clone(),
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            finish: FinishReason::Cancelled,
+            stats: SpecStats::default(),
+            draft_cost: DraftCost::default(),
+            sched_delay_s: latency,
+            latency_s: latency,
+            ttft_s: latency,
+        });
+    }
+
+    /// Cancel any *running* request whose deadline has passed, releasing its
+    /// KV row for waiting work.
+    fn expire_active(&mut self) -> Result<()> {
+        let now = Instant::now();
+        for (row, slot) in self.group.active_rows() {
+            let blown = self.states[slot]
+                .as_ref()
+                .and_then(|st| st.req.deadline_at())
+                .is_some_and(|d| now >= d);
+            if blown {
+                self.cancel_row(row, slot)?;
             }
         }
         Ok(())
@@ -255,11 +359,14 @@ impl Engine {
 
     /// Returns `false` when the engine is idle (nothing pending or active).
     pub fn step(&mut self) -> Result<bool> {
+        self.expire_active()?;
         self.admit()?;
         let active = self.group.active_rows();
         if active.is_empty() {
-            return Ok(!self.pending.is_empty());
+            return Ok(!self.sched.is_empty());
         }
+        self.metrics
+            .observe(names::BATCH_OCCUPANCY, active.len() as f64);
 
         // ---- draft per active row ------------------------------------
         let gamma_cap = self.cfg.gamma.min(self.mcfg.gamma_max);
@@ -279,6 +386,7 @@ impl Engine {
             };
             let cost = st.drafter.take_cost();
             self.call_log.add_draft_cost(&cost);
+            st.draft_cost.merge(&cost);
             drafts.push((row, slot, draft));
         }
 
@@ -350,9 +458,7 @@ impl Engine {
             commit.truncate(budget);
             // Cut at <eos> (keep it).
             if st.req.params.stop_at_eos {
-                if let Some(e) = commit.iter().position(|&t| t == 2) {
-                    commit.truncate(e + 1);
-                }
+                crate::spec::truncate_at_eos(&mut commit);
             }
             let n_commit = commit.len();
             let accepted_kept = n_commit.saturating_sub(1).min(outcome.accepted);
@@ -384,7 +490,7 @@ impl Engine {
         if st.finished.is_some() {
             return;
         }
-        if st.req.params.stop_at_eos && st.committed.last() == Some(&2) {
+        if st.req.params.stop_at_eos && st.committed.last() == Some(&EOS_ID) {
             st.finished = Some(FinishReason::Eos);
         } else if st.generated >= st.req.params.max_new {
             st.finished = Some(FinishReason::MaxNewTokens);
@@ -402,6 +508,9 @@ impl Engine {
             .unwrap_or(latency);
         self.metrics.inc("requests_completed", 1);
         self.metrics.inc("tokens_generated", st.generated as u64);
+        if st.finished == Some(FinishReason::Cancelled) {
+            self.metrics.inc("requests_cancelled", 1);
+        }
         self.metrics.observe("request_latency_s", latency);
         self.metrics.observe("ttft_s", ttft);
         self.completions.push(Completion {
@@ -411,7 +520,8 @@ impl Engine {
             tokens: st.committed[st.req.prompt.len()..].to_vec(),
             finish: st.finished.unwrap_or(FinishReason::MaxNewTokens),
             stats: st.stats.clone(),
-            draft_cost: Default::default(),
+            draft_cost: st.draft_cost,
+            sched_delay_s: st.sched_delay_s,
             latency_s: latency,
             ttft_s: ttft,
         });

@@ -1,16 +1,20 @@
 //! Layer-3 coordinator: the paper's serving-system contribution. Continuous
 //! batching over leased KV rows (`kv`), per-request speculative state
-//! (`request`), the decode loop (`engine`), call accounting for the cost
-//! model (`calls`) and the threaded front door (`router`).
+//! (`request`), policy-ordered admission with deadlines and cancellation
+//! (`scheduler`), the decode loop (`engine`), call accounting for the cost
+//! model (`calls`) and the threaded front door with correlated completion
+//! routing (`router`).
 
 pub mod calls;
 pub mod engine;
 pub mod kv;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 
 pub use calls::{CallLog, CallRecord, FnKind};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use kv::BatchGroup;
-pub use request::{Completion, FinishReason, GenParams, Request, RequestState};
-pub use router::EngineHandle;
+pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
+pub use router::{EngineHandle, RouterStats, StatsSnapshot, Ticket};
+pub use scheduler::{SchedPolicy, Scheduler};

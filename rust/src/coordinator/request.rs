@@ -2,10 +2,39 @@
 //! completion record handed back (with the speculative bookkeeping the
 //! paper's tables aggregate).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::metrics::SpecStats;
 use crate::spec::drafter::{DraftCost, Drafter};
+
+/// Scheduling class of a request. Lower sorts first under the scheduler's
+/// `Priority` policy; `Ord` follows declaration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
 
 /// Generation parameters for one request.
 #[derive(Debug, Clone)]
@@ -18,11 +47,24 @@ pub struct GenParams {
     pub seed: Option<u64>,
     /// Stop at `<eos>`.
     pub stop_at_eos: bool,
+    /// Scheduling class under the scheduler's `Priority` policy.
+    pub priority: Priority,
+    /// Relative deadline from submission. An expired request is finished
+    /// with [`FinishReason::Cancelled`]: queued ones before they cost a
+    /// prefill, running ones at the next engine step (freeing the KV row).
+    pub deadline: Option<Duration>,
 }
 
 impl Default for GenParams {
     fn default() -> Self {
-        GenParams { temp: 0.0, max_new: 96, seed: None, stop_at_eos: true }
+        GenParams {
+            temp: 0.0,
+            max_new: 96,
+            seed: None,
+            stop_at_eos: true,
+            priority: Priority::Normal,
+            deadline: None,
+        }
     }
 }
 
@@ -51,6 +93,11 @@ impl Request {
         self.task = task.to_string();
         self
     }
+
+    /// Absolute deadline, when the request carries one.
+    pub fn deadline_at(&self) -> Option<Instant> {
+        self.params.deadline.map(|d| self.submitted_at + d)
+    }
 }
 
 /// Why a request stopped.
@@ -59,6 +106,8 @@ pub enum FinishReason {
     Eos,
     MaxNewTokens,
     ContextFull,
+    /// Aborted before finishing: explicit cancel or blown deadline.
+    Cancelled,
 }
 
 /// In-flight per-request state owned by the scheduler.
@@ -73,6 +122,11 @@ pub struct RequestState {
     pub drafter: Box<dyn Drafter>,
     pub rng: crate::util::rng::Pcg,
     pub stats: SpecStats,
+    /// Accumulated drafter cost for *this* request (threaded into the
+    /// completion; the call log keeps the engine-wide aggregate).
+    pub draft_cost: DraftCost,
+    /// Seconds spent queued in the scheduler before admission.
+    pub sched_delay_s: f64,
     pub first_token_at: Option<Instant>,
     pub finished: Option<FinishReason>,
 }
@@ -88,6 +142,8 @@ impl RequestState {
             drafter,
             rng,
             stats: SpecStats::default(),
+            draft_cost: DraftCost::default(),
+            sched_delay_s: 0.0,
             first_token_at: None,
             finished: None,
         }
@@ -117,6 +173,8 @@ pub struct Completion {
     pub finish: FinishReason,
     pub stats: SpecStats,
     pub draft_cost: DraftCost,
+    /// Seconds spent queued in the scheduler before admission.
+    pub sched_delay_s: f64,
     /// Wall-clock seconds from submission to completion / to first token.
     pub latency_s: f64,
     pub ttft_s: f64,
@@ -147,5 +205,27 @@ mod tests {
         let p = GenParams::default();
         assert_eq!(p.temp, 0.0);
         assert!(p.stop_at_eos);
+        assert_eq!(p.priority, Priority::Normal);
+        assert!(p.deadline.is_none());
+    }
+
+    #[test]
+    fn priority_orders_high_first() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+    }
+
+    #[test]
+    fn deadline_is_relative_to_submission() {
+        let mut params = GenParams::default();
+        params.deadline = Some(std::time::Duration::from_secs(5));
+        let req = Request::new(1, vec![1], params);
+        let d = req.deadline_at().unwrap();
+        assert!(d > req.submitted_at);
+        assert!(Request::new(2, vec![1], GenParams::default()).deadline_at().is_none());
     }
 }

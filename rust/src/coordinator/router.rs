@@ -1,34 +1,133 @@
 //! Request router: the thread-safe front door.
 //!
 //! The `Engine` is single-threaded around the PJRT client (and `!Send` by
-//! construction), so the router owns it on a dedicated thread and exposes a
-//! channel-based handle: submissions in, completions out, with bounded
-//! admission (backpressure) and graceful shutdown. The TCP server and the
-//! benches both talk to this handle.
+//! construction), so the router owns it on a dedicated thread and exposes
+//! [`EngineHandle`], which is `Sync`: any number of submitter threads share
+//! one handle directly — no outer mutex, and nothing is ever locked across
+//! generation.
+//!
+//! Delivery is *correlated*: every submission gets a private reply channel,
+//! and the engine thread routes each [`Completion`] to the channel keyed by
+//! its request id. A submitter blocks only on its own [`Ticket`], so slow
+//! requests never steal another connection's completion. The handle also
+//! carries a cancellation path (drops queued requests, frees running ones'
+//! KV rows) and a lock-free [`RouterStats`] block (queue depth, batch
+//! occupancy, scheduling delay) that the server's `stats` endpoint reads
+//! without disturbing the engine.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::util::json::Json;
+
 use super::engine::{Engine, EngineConfig};
-use super::request::{Completion, GenParams};
+use super::request::{Completion, FinishReason, GenParams};
 
 enum Msg {
-    Submit { prompt: Vec<i32>, params: GenParams, task: String, reply: Sender<u64> },
+    Submit {
+        prompt: Vec<i32>,
+        params: GenParams,
+        task: String,
+        ack: Sender<u64>,
+        done: Sender<Completion>,
+    },
+    Cancel {
+        id: u64,
+    },
     Shutdown,
 }
 
-/// Handle to an engine running on its own thread.
+/// Lock-free counters the engine thread publishes after every step and any
+/// thread may read at any time (the server's `stats` endpoint).
+#[derive(Default)]
+pub struct RouterStats {
+    /// Submitted but not yet completed (queued + running).
+    pub in_flight: AtomicUsize,
+    /// Requests waiting in the scheduler.
+    pub queue_depth: AtomicUsize,
+    /// Requests currently holding a KV row.
+    pub active_rows: AtomicUsize,
+    /// Batch bucket the engine serves at (capacity of the group).
+    pub batch: AtomicUsize,
+    /// Decode/verify steps taken so far.
+    pub steps: AtomicU64,
+    /// Mean active rows per step, fixed-point x1000.
+    pub occupancy_milli: AtomicU64,
+    /// Mean scheduling delay, microseconds.
+    pub sched_delay_us: AtomicU64,
+    pub completed: AtomicU64,
+    pub cancelled: AtomicU64,
+}
+
+/// Point-in-time view of [`RouterStats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsSnapshot {
+    pub in_flight: usize,
+    pub queue_depth: usize,
+    pub active_rows: usize,
+    pub batch: usize,
+    pub steps: u64,
+    /// Mean active rows per decode/verify step (1.0 = no batching benefit).
+    pub batch_occupancy: f64,
+    /// Mean seconds a request queued before admission.
+    pub sched_delay_s: f64,
+    pub completed: u64,
+    pub cancelled: u64,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("in_flight", Json::num(self.in_flight as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("active_rows", Json::num(self.active_rows as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy)),
+            ("sched_delay_s", Json::num(self.sched_delay_s)),
+            ("completed", Json::num(self.completed as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+        ])
+    }
+}
+
+/// One submitted request's private completion channel. Dropping the ticket
+/// abandons delivery only — the engine still finishes the request; call
+/// [`EngineHandle::cancel`] to abort the work itself.
+pub struct Ticket {
+    pub id: u64,
+    rx: Receiver<Completion>,
+}
+
+impl Ticket {
+    /// Block (with timeout) for this request's completion.
+    pub fn wait(&self, timeout: Duration) -> Option<Completion> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking poll for this request's completion.
+    pub fn try_wait(&self) -> Option<Completion> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Handle to an engine running on its own thread. `Sync`: share it behind an
+/// `Arc` and submit from any number of threads concurrently.
 pub struct EngineHandle {
-    tx: Sender<Msg>,
-    completions: Receiver<Completion>,
+    /// The mutex guards only the channel enqueue (microseconds); generation
+    /// never runs under any handle lock.
+    tx: Mutex<Sender<Msg>>,
+    stats: Arc<RouterStats>,
     join: Option<JoinHandle<Result<()>>>,
     /// Soft cap on in-flight submissions (admission control).
     max_queue: usize,
-    queued: std::cell::Cell<usize>,
 }
 
 impl EngineHandle {
@@ -37,7 +136,8 @@ impl EngineHandle {
     pub fn spawn(artifacts: PathBuf, model: String, cfg: EngineConfig,
                  max_queue: usize) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
-        let (done_tx, done_rx) = channel::<Completion>();
+        let stats = Arc::new(RouterStats::default());
+        let tstats = Arc::clone(&stats);
         let join = std::thread::Builder::new()
             .name("quasar-engine".into())
             .spawn(move || -> Result<()> {
@@ -47,99 +147,119 @@ impl EngineHandle {
                     rt, &manifest, &model,
                 )?);
                 let mut engine = Engine::new(mr, cfg)?;
+                tstats.batch.store(engine.cfg.batch, Ordering::Relaxed);
+                let mut routes: HashMap<u64, Sender<Completion>> = HashMap::new();
+                let mut shutdown = false;
                 loop {
                     // Drain control messages without blocking the decode loop.
-                    let mut shutdown = false;
                     loop {
                         match rx.try_recv() {
-                            Ok(Msg::Submit { prompt, params, task, reply }) => {
-                                let id = engine.submit(prompt, params, &task);
-                                let _ = reply.send(id);
+                            Ok(msg) => {
+                                shutdown |=
+                                    handle_msg(&mut engine, msg, &mut routes, &tstats);
                             }
-                            Ok(Msg::Shutdown) | Err(TryRecvError::Disconnected) => {
+                            Err(TryRecvError::Disconnected) => {
                                 shutdown = true;
                                 break;
                             }
                             Err(TryRecvError::Empty) => break,
                         }
                     }
+                    // Cancellations emit completions without a step; publish
+                    // so the stats block never shows a stale active_rows.
+                    route_completions(&mut engine, &mut routes, &tstats);
+                    publish_stats(&engine, &tstats);
                     if shutdown && engine.in_flight() == 0 {
                         return Ok(());
                     }
                     if engine.in_flight() > 0 {
                         engine.step()?;
-                        for c in engine.take_completions() {
-                            let _ = done_tx.send(c);
-                        }
+                        route_completions(&mut engine, &mut routes, &tstats);
+                        publish_stats(&engine, &tstats);
                     } else {
                         // Idle: block briefly for the next submission.
                         match rx.recv_timeout(Duration::from_millis(5)) {
-                            Ok(Msg::Submit { prompt, params, task, reply }) => {
-                                let id = engine.submit(prompt, params, &task);
-                                let _ = reply.send(id);
+                            Ok(msg) => {
+                                shutdown |=
+                                    handle_msg(&mut engine, msg, &mut routes, &tstats);
+                                route_completions(&mut engine, &mut routes, &tstats);
                             }
-                            Ok(Msg::Shutdown) => return Ok(()),
                             Err(_) => {}
                         }
                     }
                 }
             })?;
         Ok(EngineHandle {
-            tx,
-            completions: done_rx,
+            tx: Mutex::new(tx),
+            stats,
             join: Some(join),
             max_queue,
-            queued: std::cell::Cell::new(0),
         })
     }
 
-    /// Submit; `Err` when the admission queue is full (backpressure) or the
-    /// engine thread is gone.
-    pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<u64> {
-        if self.queued.get() >= self.max_queue {
-            return Err(anyhow!("admission queue full ({} in flight)", self.queued.get()));
-        }
-        let (reply_tx, reply_rx) = channel();
+    fn send(&self, msg: Msg) -> Result<()> {
         self.tx
-            .send(Msg::Submit { prompt, params, task:
-                task.to_string(), reply: reply_tx })
-            .map_err(|_| anyhow!("engine thread terminated"))?;
-        let id = reply_rx
+            .lock()
+            .unwrap()
+            .send(msg)
+            .map_err(|_| anyhow!("engine thread terminated"))
+    }
+
+    /// Submit; `Err` when the admission queue is full (backpressure) or the
+    /// engine thread is gone. The returned [`Ticket`] is this request's
+    /// private completion channel.
+    pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<Ticket> {
+        let in_flight = self.stats.in_flight.load(Ordering::SeqCst);
+        if in_flight >= self.max_queue {
+            return Err(anyhow!("admission queue full ({in_flight} in flight)"));
+        }
+        let (ack_tx, ack_rx) = channel();
+        let (done_tx, done_rx) = channel();
+        self.send(Msg::Submit {
+            prompt,
+            params,
+            task: task.to_string(),
+            ack: ack_tx,
+            done: done_tx,
+        })?;
+        let id = ack_rx
             .recv_timeout(Duration::from_secs(10))
             .map_err(|_| anyhow!("engine did not ack submission"))?;
-        self.queued.set(self.queued.get() + 1);
-        Ok(id)
+        Ok(Ticket { id, rx: done_rx })
     }
 
-    /// Non-blocking poll for a finished request.
-    pub fn try_next_completion(&self) -> Option<Completion> {
-        match self.completions.try_recv() {
-            Ok(c) => {
-                self.queued.set(self.queued.get().saturating_sub(1));
-                Some(c)
-            }
-            Err(_) => None,
-        }
+    /// Ask the engine to abort a request (queued or running). The request's
+    /// ticket resolves with a `Cancelled` completion; unknown ids are a
+    /// no-op (the request already completed).
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        self.send(Msg::Cancel { id })
     }
 
-    /// Blocking wait (with timeout) for a finished request.
-    pub fn next_completion(&self, timeout: Duration) -> Option<Completion> {
-        match self.completions.recv_timeout(timeout) {
-            Ok(c) => {
-                self.queued.set(self.queued.get().saturating_sub(1));
-                Some(c)
-            }
-            Err(_) => None,
-        }
-    }
-
+    /// Submitted-but-not-completed count (queued + running).
     pub fn in_flight(&self) -> usize {
-        self.queued.get()
+        self.stats.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot the engine-published serving stats (never blocks on the
+    /// engine).
+    pub fn stats(&self) -> StatsSnapshot {
+        let s = &self.stats;
+        StatsSnapshot {
+            in_flight: s.in_flight.load(Ordering::Relaxed),
+            queue_depth: s.queue_depth.load(Ordering::Relaxed),
+            active_rows: s.active_rows.load(Ordering::Relaxed),
+            batch: s.batch.load(Ordering::Relaxed),
+            steps: s.steps.load(Ordering::Relaxed),
+            batch_occupancy: s.occupancy_milli.load(Ordering::Relaxed) as f64 / 1e3,
+            sched_delay_s: s.sched_delay_us.load(Ordering::Relaxed) as f64 / 1e6,
+            completed: s.completed.load(Ordering::Relaxed),
+            cancelled: s.cancelled.load(Ordering::Relaxed),
+        }
     }
 
     /// Graceful shutdown: drain in-flight work, then join.
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
             j.join().map_err(|_| anyhow!("engine thread panicked"))??;
         }
@@ -149,9 +269,116 @@ impl EngineHandle {
 
 impl Drop for EngineHandle {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+/// Engine-thread message handler; returns `true` on shutdown. Submissions
+/// bump `in_flight` here (engine side) so the count can never underflow
+/// against completion routing.
+fn handle_msg(
+    engine: &mut Engine,
+    msg: Msg,
+    routes: &mut HashMap<u64, Sender<Completion>>,
+    stats: &RouterStats,
+) -> bool {
+    match msg {
+        Msg::Submit { prompt, params, task, ack, done } => {
+            let id = engine.submit(prompt, params, &task);
+            routes.insert(id, done);
+            stats.in_flight.fetch_add(1, Ordering::SeqCst);
+            let _ = ack.send(id);
+            false
+        }
+        Msg::Cancel { id } => {
+            // Unknown id == already completed; nothing to do.
+            let _ = engine.cancel(id);
+            false
+        }
+        Msg::Shutdown => true,
+    }
+}
+
+/// Deliver every finished completion to its submitter's private channel.
+fn route_completions(
+    engine: &mut Engine,
+    routes: &mut HashMap<u64, Sender<Completion>>,
+    stats: &RouterStats,
+) {
+    for c in engine.take_completions() {
+        let _ = stats
+            .in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                Some(v.saturating_sub(1))
+            });
+        stats.completed.fetch_add(1, Ordering::Relaxed);
+        if c.finish == FinishReason::Cancelled {
+            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(tx) = routes.remove(&c.id) {
+            // The receiver may be gone (submitter timed out); dropping the
+            // completion is then correct.
+            let _ = tx.send(c);
+        }
+    }
+}
+
+/// Publish queue/occupancy gauges from the engine's metrics registry into
+/// the atomically-readable stats block.
+fn publish_stats(engine: &Engine, stats: &RouterStats) {
+    stats
+        .queue_depth
+        .store(engine.queue_depth(), Ordering::Relaxed);
+    stats
+        .active_rows
+        .store(engine.active_count(), Ordering::Relaxed);
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::BATCH_OCCUPANCY) {
+        stats.steps.store(h.count(), Ordering::Relaxed);
+        stats
+            .occupancy_milli
+            .store((h.mean() * 1e3) as u64, Ordering::Relaxed);
+    }
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::SCHED_DELAY_S) {
+        stats
+            .sched_delay_us
+            .store((h.mean() * 1e6) as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_is_shareable_across_threads() {
+        // The whole point of the refactor: the handle needs no outer mutex.
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<EngineHandle>();
+        assert_sync_send::<RouterStats>();
+        assert_sync_send::<StatsSnapshot>();
+    }
+
+    #[test]
+    fn stats_snapshot_serializes_every_field() {
+        let s = StatsSnapshot {
+            in_flight: 3,
+            queue_depth: 2,
+            active_rows: 1,
+            batch: 4,
+            steps: 10,
+            batch_occupancy: 2.5,
+            sched_delay_s: 0.012,
+            completed: 7,
+            cancelled: 1,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(j.get("batch").unwrap().as_i64().unwrap(), 4);
+        assert!((j.get("batch_occupancy").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert!((j.get("sched_delay_s").unwrap().as_f64().unwrap() - 0.012).abs() < 1e-9);
+        assert_eq!(j.get("cancelled").unwrap().as_i64().unwrap(), 1);
     }
 }

@@ -1,0 +1,231 @@
+//! Admission scheduler: the layer between submitters and the engine's KV
+//! rows.
+//!
+//! Submitted requests queue here instead of going straight into the batch
+//! group. Each engine step asks the scheduler for the next request(s) to
+//! admit; the policy decides the order, `take_expired` evicts entries whose
+//! deadline passed before they could waste a prefill, and depth accounting
+//! feeds the `queue_depth` gauge and the server's `stats` endpoint. The
+//! scheduler is plain single-threaded state owned by the engine thread —
+//! cross-thread concurrency stays in the router layer.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::Request;
+
+/// Pluggable admission ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict arrival order.
+    #[default]
+    Fifo,
+    /// Cheapest prefill first (shortest prompt; arrival order as tiebreak).
+    /// Minimizes mean queueing delay under mixed prompt lengths.
+    ShortestPromptFirst,
+    /// Priority classes (`High` before `Normal` before `Low`), arrival order
+    /// within a class.
+    Priority,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "spf" | "shortest-prompt-first" => Some(SchedPolicy::ShortestPromptFirst),
+            "priority" => Some(SchedPolicy::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::ShortestPromptFirst => "spf",
+            SchedPolicy::Priority => "priority",
+        }
+    }
+}
+
+struct Queued {
+    /// Arrival counter — the tiebreak for every policy.
+    seq: u64,
+    req: Request,
+}
+
+/// The admission queue plus its ordering policy and depth accounting.
+pub struct Scheduler {
+    policy: SchedPolicy,
+    /// Kept in arrival order; FIFO pops the front in O(1), the other
+    /// policies scan for their minimum.
+    queue: VecDeque<Queued>,
+    next_seq: u64,
+    peak_depth: usize,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedPolicy) -> Self {
+        Scheduler { policy, queue: VecDeque::new(), next_seq: 0, peak_depth: 0 }
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// High-water mark of the queue depth over the scheduler's lifetime.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(Queued { seq: self.next_seq, req });
+        self.next_seq += 1;
+        self.peak_depth = self.peak_depth.max(self.queue.len());
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.queue.iter().any(|q| q.req.id == id)
+    }
+
+    /// Remove a queued request by id (cancellation before admission).
+    pub fn cancel(&mut self, id: u64) -> Option<Request> {
+        let idx = self.queue.iter().position(|q| q.req.id == id)?;
+        Some(self.queue.remove(idx)?.req)
+    }
+
+    /// Drain every queued request whose deadline has passed; the engine
+    /// finishes them as `Cancelled` without spending a prefill.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut expired = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let blown = self.queue[i]
+                .req
+                .deadline_at()
+                .is_some_and(|d| now >= d);
+            if blown {
+                expired.push(self.queue.remove(i).expect("index in bounds").req);
+            } else {
+                i += 1;
+            }
+        }
+        expired
+    }
+
+    /// Hand out the next request in policy order.
+    pub fn pop(&mut self) -> Option<Request> {
+        let idx = match self.policy {
+            // `push_back` keeps arrival order, so FIFO is an O(1) pop.
+            SchedPolicy::Fifo => return self.queue.pop_front().map(|q| q.req),
+            SchedPolicy::ShortestPromptFirst => self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, q)| (q.req.prompt.len(), q.seq))
+                .map(|(i, _)| i)?,
+            SchedPolicy::Priority => self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, q)| (q.req.params.priority, q.seq))
+                .map(|(i, _)| i)?,
+        };
+        Some(self.queue.remove(idx)?.req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{GenParams, Priority};
+    use std::time::Duration;
+
+    fn req(id: u64, prompt_len: usize, priority: Priority) -> Request {
+        let params = GenParams { priority, ..GenParams::default() };
+        Request::new(id, vec![1; prompt_len], params)
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order() {
+        let mut s = Scheduler::new(SchedPolicy::Fifo);
+        for id in [3u64, 1, 2] {
+            s.push(req(id, 4, Priority::Normal));
+        }
+        assert_eq!(s.depth(), 3);
+        assert_eq!(s.peak_depth(), 3);
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![3, 1, 2]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn spf_pops_shortest_prompt_with_fifo_tiebreak() {
+        let mut s = Scheduler::new(SchedPolicy::ShortestPromptFirst);
+        s.push(req(1, 9, Priority::Normal));
+        s.push(req(2, 3, Priority::Normal));
+        s.push(req(3, 3, Priority::Normal));
+        s.push(req(4, 1, Priority::Normal));
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![4, 2, 3, 1]);
+    }
+
+    #[test]
+    fn priority_classes_pop_before_lower_classes() {
+        let mut s = Scheduler::new(SchedPolicy::Priority);
+        s.push(req(1, 4, Priority::Low));
+        s.push(req(2, 4, Priority::Normal));
+        s.push(req(3, 4, Priority::High));
+        s.push(req(4, 4, Priority::Normal));
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn expired_requests_are_drained_not_popped() {
+        let mut s = Scheduler::new(SchedPolicy::Fifo);
+        // Zero deadline: expired the moment it is checked.
+        let params = GenParams {
+            deadline: Some(Duration::ZERO),
+            ..GenParams::default()
+        };
+        s.push(Request::new(1, vec![1, 2], params));
+        s.push(req(2, 2, Priority::Normal)); // no deadline: never expires
+        let expired = s.take_expired(Instant::now());
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 1);
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.pop().unwrap().id, 2);
+        assert!(s.take_expired(Instant::now()).is_empty());
+    }
+
+    #[test]
+    fn cancel_removes_by_id() {
+        let mut s = Scheduler::new(SchedPolicy::Fifo);
+        for id in 1..=3u64 {
+            s.push(req(id, 4, Priority::Normal));
+        }
+        assert!(s.contains(2));
+        let c = s.cancel(2).unwrap();
+        assert_eq!(c.id, 2);
+        assert!(!s.contains(2));
+        assert!(s.cancel(2).is_none());
+        let order: Vec<u64> = std::iter::from_fn(|| s.pop().map(|r| r.id)).collect();
+        assert_eq!(order, vec![1, 3]);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [SchedPolicy::Fifo, SchedPolicy::ShortestPromptFirst, SchedPolicy::Priority] {
+            assert_eq!(SchedPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("nope"), None);
+    }
+}

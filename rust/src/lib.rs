@@ -4,9 +4,20 @@
 //! Acceleration for Rapid Inference via Memory-Efficient Verification*
 //! (Huang & Wen, 2026) as a three-layer rust + JAX + Pallas serving stack:
 //!
-//! * **L3 (this crate)** — request router, continuous batcher, prompt-lookup
-//!   drafter, rejection-sampling verifier logic, KV-cache manager, scheduler,
-//!   metrics and server. Python never runs on the request path.
+//! * **L3 (this crate)** — request router, admission scheduler, continuous
+//!   batcher, prompt-lookup drafter, rejection-sampling verifier logic,
+//!   KV-cache manager, metrics and server. Python never runs on the request
+//!   path.
+//!
+//! Threading model (serving path): pool workers in `server` share one
+//! `Sync` [`coordinator::EngineHandle`] with no outer lock; submissions
+//! queue in the admission scheduler (`coordinator::scheduler` — FIFO /
+//! shortest-prompt / priority policies, deadlines, cancellation) and the
+//! engine thread drains it into the continuous batcher, routing each
+//! completion back to its submitter's private reply channel by request id.
+//! Nothing ever blocks on another connection's generation, so concurrent
+//! connections genuinely share each batched verification pass — the
+//! memory-bandwidth lever the paper's quantized verifier optimizes.
 //! * **L2** — the target LM as a JAX graph (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per (variant, fn, batch-bucket).
 //! * **L1** — the fused W8A8 verification GEMM as a Pallas kernel

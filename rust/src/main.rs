@@ -5,7 +5,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
-use quasar::coordinator::{DrafterKind, Engine, EngineConfig, EngineHandle, GenParams};
+use quasar::coordinator::{DrafterKind, Engine, EngineConfig, EngineHandle, GenParams, SchedPolicy};
 use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
 use quasar::spec::NgramConfig;
 use quasar::tokenizer::Tokenizer;
@@ -42,6 +42,7 @@ fn real_main() -> Result<()> {
     .opt("drafter", Some("ngram"), "vanilla | ngram | pruned{90,75,50}")
     .opt("gamma", Some("5"), "speculation depth cap")
     .opt("batch", Some("4"), "batch bucket (1 or 4)")
+    .opt("sched", Some("fifo"), "admission policy: fifo | spf | priority")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -56,12 +57,15 @@ fn real_main() -> Result<()> {
         .to_string();
     let artifacts = PathBuf::from(parsed.str("artifacts"));
     let model = parsed.str("model");
+    let sched = parsed.str("sched");
     let cfg = EngineConfig {
         verifier: parsed.str("verifier"),
         drafter: drafter_kind(&parsed.str("drafter"), parsed.usize("gamma"))?,
         batch: parsed.usize("batch"),
         gamma: parsed.usize("gamma"),
         seed: 0,
+        policy: SchedPolicy::parse(&sched)
+            .ok_or_else(|| anyhow::anyhow!("unknown sched policy '{sched}'"))?,
     };
 
     match cmd.as_str() {
@@ -90,8 +94,7 @@ fn real_main() -> Result<()> {
             let params = GenParams {
                 temp: parsed.f64("temp"),
                 max_new: parsed.usize("max-new"),
-                seed: None,
-                stop_at_eos: true,
+                ..GenParams::default()
             };
             engine.submit(tok.encode(&prompt, true), params, "cli");
             let done = engine.run_to_completion()?;

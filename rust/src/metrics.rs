@@ -9,6 +9,17 @@ use std::sync::Mutex;
 use crate::util::hist::Histogram;
 use crate::util::json::Json;
 
+/// Names of the scheduler/serving metrics shared between the engine (which
+/// records them) and the router's stats publisher (which reads them back).
+pub mod names {
+    /// Histogram: seconds a request queued before admission.
+    pub const SCHED_DELAY_S: &str = "sched_delay_s";
+    /// Histogram: active rows per decode/verify step (batch fill).
+    pub const BATCH_OCCUPANCY: &str = "batch_occupancy";
+    /// Gauge: requests waiting in the scheduler.
+    pub const QUEUE_DEPTH: &str = "queue_depth";
+}
+
 /// Speculative-decoding bookkeeping the paper's tables are built from.
 #[derive(Debug, Default, Clone)]
 pub struct SpecStats {

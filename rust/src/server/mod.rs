@@ -1,33 +1,51 @@
 //! JSON-lines TCP serving front-end.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"prompt": "question : ...", "max_new": 64, "temp": 0.0, "task": "gsm8k"}
+//!   -> {"prompt": "question : ...", "max_new": 64, "temp": 0.0,
+//!       "task": "gsm8k", "priority": "high", "deadline_ms": 2000}
 //!   <- {"id": 3, "text": "answer : ...", "tokens": [..], "steps": n,
-//!       "accept_len": 1.42, "latency_s": 0.41, "finish": "eos"}
+//!       "accept_len": 1.42, "latency_s": 0.41, "sched_delay_s": 0.02,
+//!       "finish": "eos"}          (finish may also be "cancelled")
 //!   -> {"cmd": "ping"}            <- {"ok": true}
+//!   -> {"cmd": "stats"}           <- {"queue_depth": .., "batch_occupancy":
+//!                                     .., "sched_delay_s": .., ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
-//! Each connection is handled by a pool worker; generation itself runs on
-//! the single engine thread behind [`EngineHandle`] — the router owns all
-//! PJRT access (DESIGN.md: rust owns the event loop and process topology).
+//! Threading model: each connection is handled by a pool worker, and workers
+//! share one [`EngineHandle`] directly — the handle is `Sync`, so there is
+//! no lock anywhere on the request path. A worker submits its request, gets
+//! a private [`Ticket`], and blocks only on *its own* completion while the
+//! engine's continuous batcher multiplexes every connection's request
+//! through one batched verification pass per step. Timeouts cancel the
+//! request (freeing its KV row) instead of abandoning it.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{Completion, EngineHandle, FinishReason, GenParams};
-use crate::tokenizer::Tokenizer;
+use crate::coordinator::{Completion, EngineHandle, FinishReason, GenParams, Priority};
+use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID};
 use crate::util::json::{parse, Json};
+
+/// How long a connection waits for its own completion before cancelling.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Serve until a `shutdown` command arrives. Returns the number of requests
 /// served.
 pub fn serve(listener: TcpListener, handle: EngineHandle, tok: Tokenizer,
              n_conn_threads: usize) -> Result<u64> {
-    let handle = Arc::new(Mutex::new(handle));
+    anyhow::ensure!(
+        tok.matches_contract(),
+        "tokenizer violates the special-token contract \
+         (pad/bos/eos/unk = {}/{}/{}/{} expected {}/{}/{}/{})",
+        tok.pad_id, tok.bos_id, tok.eos_id, tok.unk_id,
+        crate::tokenizer::PAD_ID, BOS_ID, EOS_ID, crate::tokenizer::UNK_ID,
+    );
+    let handle = Arc::new(handle);
     let tok = Arc::new(tok);
     let stop = Arc::new(AtomicBool::new(false));
     let served = Arc::new(std::sync::atomic::AtomicU64::new(0));
@@ -57,7 +75,7 @@ pub fn serve(listener: TcpListener, handle: EngineHandle, tok: Tokenizer,
     Ok(served.load(Ordering::SeqCst))
 }
 
-fn handle_conn(stream: TcpStream, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
+fn handle_conn(stream: TcpStream, handle: &EngineHandle, tok: &Tokenizer,
                stop: &AtomicBool, served: &std::sync::atomic::AtomicU64) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -81,12 +99,13 @@ fn handle_conn(stream: TcpStream, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
     Ok(())
 }
 
-fn handle_line(line: &str, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
+fn handle_line(line: &str, handle: &EngineHandle, tok: &Tokenizer,
                stop: &AtomicBool) -> Result<Json> {
     let req = parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = req.opt("cmd") {
         match cmd.as_str()? {
             "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+            "stats" => return Ok(handle.stats().to_json()),
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
                 return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
@@ -100,6 +119,16 @@ fn handle_line(line: &str, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
         max_new: req.opt("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(64),
         seed: req.opt("seed").map(|v| v.as_i64()).transpose()?.map(|s| s as u64),
         stop_at_eos: true,
+        priority: match req.opt("priority").map(|v| v.as_str()).transpose()? {
+            None => Priority::Normal,
+            Some(s) => Priority::parse(s)
+                .ok_or_else(|| anyhow!("unknown priority '{s}' (high|normal|low)"))?,
+        },
+        deadline: req
+            .opt("deadline_ms")
+            .map(|v| v.as_f64())
+            .transpose()?
+            .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
     };
     let task = req
         .opt("task")
@@ -108,11 +137,13 @@ fn handle_line(line: &str, handle: &Mutex<EngineHandle>, tok: &Tokenizer,
         .unwrap_or_default();
     let ids = tok.encode(&prompt_text, true);
 
-    let completion = {
-        let h = handle.lock().unwrap();
-        h.submit(ids, params, &task)?;
-        h.next_completion(Duration::from_secs(120))
-            .ok_or_else(|| anyhow::anyhow!("generation timed out"))?
+    // Lock-free submit; this worker blocks only on its own ticket while the
+    // engine multiplexes every connection's request in one batch.
+    let ticket = handle.submit(ids, params, &task)?;
+    let Some(completion) = ticket.wait(REQUEST_TIMEOUT) else {
+        // Don't leak the KV row of a request nobody is waiting for.
+        let _ = handle.cancel(ticket.id);
+        anyhow::bail!("generation timed out");
     };
     Ok(completion_json(&completion, tok))
 }
@@ -123,6 +154,7 @@ pub fn completion_json(c: &Completion, tok: &Tokenizer) -> Json {
         FinishReason::Eos => "eos",
         FinishReason::MaxNewTokens => "max_new",
         FinishReason::ContextFull => "context_full",
+        FinishReason::Cancelled => "cancelled",
     };
     Json::obj(vec![
         ("id", Json::num(c.id as f64)),
@@ -133,6 +165,7 @@ pub fn completion_json(c: &Completion, tok: &Tokenizer) -> Json {
         ("steps", Json::num(c.stats.steps as f64)),
         ("accept_len", Json::num(c.stats.mean_acceptance_len())),
         ("accept_rate", Json::num(c.stats.acceptance_rate())),
+        ("sched_delay_s", Json::num(c.sched_delay_s)),
         ("latency_s", Json::num(c.latency_s)),
         ("ttft_s", Json::num(c.ttft_s)),
     ])
@@ -162,6 +195,11 @@ impl Client {
             ("max_new", Json::num(max_new as f64)),
             ("temp", Json::num(temp)),
         ]))
+    }
+
+    /// Snapshot the server's scheduler/batching stats.
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![("cmd", Json::str("stats"))]))
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

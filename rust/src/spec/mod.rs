@@ -10,4 +10,6 @@ pub mod sampler;
 pub use drafter::{DraftCost, Drafter, NgramConfig, NgramDrafter, VanillaDrafter};
 pub use ngram::NgramIndex;
 pub use pruned::PrunedDrafter;
-pub use sampler::{argmax, sample_logits, softmax_t, verify_draft, Draft, VerifyOutcome};
+pub use sampler::{
+    argmax, sample_logits, softmax_t, truncate_at_eos, verify_draft, Draft, VerifyOutcome,
+};

@@ -173,6 +173,16 @@ where
     VerifyOutcome { accepted: g, next_token: sample_probs(&probs, rng) as i32 }
 }
 
+/// Cut a committed-token block at the tokenizer-contract `<eos>`, keeping
+/// it. The shared finish rule for the engine's commit path and any replay
+/// of committed streams — token ids come from [`crate::tokenizer::EOS_ID`]
+/// rather than a re-hardcoded literal.
+pub fn truncate_at_eos(tokens: &mut Vec<i32>) {
+    if let Some(e) = tokens.iter().position(|&t| t == crate::tokenizer::EOS_ID) {
+        tokens.truncate(e + 1);
+    }
+}
+
 fn renorm_sample(resid: &mut [f32], rng: &mut Pcg) -> i32 {
     let sum: f32 = resid.iter().sum();
     if sum <= 0.0 {
@@ -200,6 +210,20 @@ mod tests {
     fn rows(data: Vec<Vec<f32>>) -> impl Fn(usize) -> &'static [f32] {
         let leaked: &'static Vec<Vec<f32>> = Box::leak(Box::new(data));
         move |i| leaked[i].as_slice()
+    }
+
+    #[test]
+    fn truncate_at_eos_keeps_eos_and_ignores_rest() {
+        let eos = crate::tokenizer::EOS_ID;
+        let mut v = vec![5, 6, eos, 7, 8];
+        truncate_at_eos(&mut v);
+        assert_eq!(v, vec![5, 6, eos]);
+        let mut no_eos = vec![5, 6, 7];
+        truncate_at_eos(&mut no_eos);
+        assert_eq!(no_eos, vec![5, 6, 7]);
+        let mut empty: Vec<i32> = Vec::new();
+        truncate_at_eos(&mut empty);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -11,6 +11,15 @@ use std::path::Path;
 
 use crate::util::json::{Json, JsonError};
 
+/// Special-token contract shared by every artifact tokenizer the stack
+/// produces (`python/compile/tokenizer.py` reserves the first four vocab
+/// slots). Engine commit/finish logic, the spec layer, and the server all
+/// key off these instead of re-hardcoding the ids.
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const UNK_ID: i32 = 3;
+
 /// Word-level tokenizer over the shared reproduction lexicon.
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
@@ -55,6 +64,15 @@ impl Tokenizer {
 
     pub fn vocab_size(&self) -> usize {
         self.vocab.len()
+    }
+
+    /// Whether the loaded vocabulary honors the special-token contract the
+    /// engine's finish logic assumes ([`PAD_ID`]..[`UNK_ID`]).
+    pub fn matches_contract(&self) -> bool {
+        self.pad_id == PAD_ID
+            && self.bos_id == BOS_ID
+            && self.eos_id == EOS_ID
+            && self.unk_id == UNK_ID
     }
 
     pub fn token(&self, id: i32) -> Option<&str> {
@@ -109,6 +127,19 @@ mod tests {
         )
         .unwrap();
         Tokenizer::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn contract_constants_match_convention() {
+        let t = tiny();
+        assert!(t.matches_contract());
+        assert_eq!((PAD_ID, BOS_ID, EOS_ID, UNK_ID), (0, 1, 2, 3));
+        let j = parse(
+            r#"{"kind":"closed-lexicon-word","vocab":["a","b"],
+                "pad_id":1,"bos_id":0,"eos_id":2,"unk_id":3}"#,
+        )
+        .unwrap();
+        assert!(!Tokenizer::from_json(&j).unwrap().matches_contract());
     }
 
     #[test]

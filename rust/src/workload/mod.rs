@@ -113,7 +113,7 @@ impl ArrivalTrace {
 /// Default generation params used by the benches (paper: greedy T=0 and
 /// sampled T=1, ~64 new tokens per request on the scaled-down model).
 pub fn bench_params(temp: f64, max_new: usize) -> GenParams {
-    GenParams { temp, max_new, seed: None, stop_at_eos: true }
+    GenParams { temp, max_new, ..GenParams::default() }
 }
 
 #[cfg(test)]

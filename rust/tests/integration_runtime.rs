@@ -118,9 +118,14 @@ fn speculative_greedy_equals_vanilla_greedy(mr: &Rc<ModelRuntime>) {
                 batch: 1,
                 gamma: 4,
                 seed: 3,
+                policy: Default::default(),
             };
             let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-            engine.submit(prompt.clone(), GenParams { temp: 0.0, max_new: 32, seed: None, stop_at_eos: false }, "t");
+            engine.submit(
+                prompt.clone(),
+                GenParams { max_new: 32, stop_at_eos: false, ..GenParams::default() },
+                "t",
+            );
             engine.run_to_completion().unwrap().remove(0)
         };
         let vanilla = gen(DrafterKind::Vanilla);
@@ -152,13 +157,14 @@ fn batched_serving_matches_single_request(mr: &Rc<ModelRuntime>) {
             batch,
             gamma: 3,
             seed: 1,
+            policy: Default::default(),
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         let mut ids = Vec::new();
         for p in prompts {
             ids.push(engine.submit(
                 p.clone(),
-                GenParams { temp: 0.0, max_new: 24, seed: None, stop_at_eos: false },
+                GenParams { max_new: 24, stop_at_eos: false, ..GenParams::default() },
                 "t",
             ));
         }
@@ -187,9 +193,14 @@ fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
             batch: 1,
             gamma: 3,
             seed: 5,
+            policy: Default::default(),
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-        engine.submit(prompt.clone(), GenParams { temp: 0.0, max_new: 16, seed: None, stop_at_eos: false }, "t");
+        engine.submit(
+            prompt.clone(),
+            GenParams { max_new: 16, stop_at_eos: false, ..GenParams::default() },
+            "t",
+        );
         engine.run_to_completion().unwrap().remove(0)
     };
     let vanilla = gen(DrafterKind::Vanilla);

@@ -1,13 +1,18 @@
-//! TCP server round-trip: boots the JSON-lines server on an ephemeral port
-//! against real artifacts, drives it with the client, and checks the
-//! generation responses and control commands. Skips when artifacts are
-//! absent (run `make artifacts`).
+//! TCP server round-trips: boots the JSON-lines server on an ephemeral port
+//! against real artifacts, drives it with clients, and checks generation
+//! responses, control commands, deadline cancellation, and — the point of
+//! the concurrent-scheduler refactor — that many simultaneous connections
+//! each receive exactly *their own* completion while the batch fills.
+//!
+//! One `#[test]` boots one server: xla_extension tolerates exactly one PJRT
+//! client per process, so all phases share the engine. Skips when artifacts
+//! are absent (run `make artifacts`).
 
-use std::net::TcpListener;
+use std::net::SocketAddr;
 use std::path::PathBuf;
 
 use quasar::coordinator::{EngineConfig, EngineHandle};
-use quasar::server::{serve, Client};
+use quasar::server::Client;
 use quasar::tokenizer::Tokenizer;
 use quasar::util::json::Json;
 
@@ -23,23 +28,39 @@ fn artifacts_root() -> Option<PathBuf> {
     }
 }
 
+const CLIENTS: usize = 8;
+const ROUNDS: usize = 3;
+
 #[test]
-fn server_round_trip() {
-    quasar::util::bigstack::run(server_round_trip_inner)
+fn server_round_trip_and_concurrent_delivery() {
+    quasar::util::bigstack::run(server_inner)
 }
 
-fn server_round_trip_inner() {
+fn server_inner() {
     let Some(root) = artifacts_root() else { return };
     let manifest = quasar::runtime::Manifest::load(&root).unwrap();
     let model = manifest.models.keys().next().unwrap().clone();
     let tok = Tokenizer::load(&manifest.tokenizer_path).unwrap();
-
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let handle = EngineHandle::spawn(root, model, EngineConfig::quasar(1, 4), 16).unwrap();
+    // Batch bucket 4 so the continuous batcher can multiplex connections.
+    let handle = EngineHandle::spawn(root, model, EngineConfig::quasar(4, 4), 64).unwrap();
+    let server = std::thread::spawn(move || {
+        quasar::server::serve(listener, handle, tok, CLIENTS + 4).unwrap()
+    });
 
-    let server = std::thread::spawn(move || serve(listener, handle, tok, 2).unwrap());
+    round_trip_phase(addr);
+    concurrent_phase(addr);
 
+    let mut ctl = Client::connect(&addr.to_string()).unwrap();
+    ctl.shutdown().unwrap();
+    let served = server.join().unwrap();
+    assert!(served as usize >= 5 + CLIENTS * ROUNDS, "served {served}");
+}
+
+/// Control plane, single-connection generation, determinism, deadline
+/// cancellation, and the stats endpoint.
+fn round_trip_phase(addr: SocketAddr) {
     let mut client = Client::connect(&addr.to_string()).unwrap();
 
     // control plane
@@ -63,12 +84,19 @@ fn server_round_trip_inner() {
     let l = resp.get("accept_len").unwrap().as_f64().unwrap();
     assert!(steps > 0 && l >= 1.0, "steps={steps} L={l}");
     assert!(resp.get("latency_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(resp.get("sched_delay_s").unwrap().as_f64().unwrap() >= 0.0);
     let tokens = resp.get("tokens").unwrap().as_i32_vec().unwrap();
     assert!(!tokens.is_empty() && tokens.len() <= 24);
 
-    // determinism: same prompt + greedy -> same tokens
+    // determinism: same prompt + greedy -> same tokens (priority field is
+    // parsed but must not perturb generation)
     let resp2 = client
-        .generate("question : tom has 2 4 apples . how many apples now ?", 24, 0.0)
+        .roundtrip(&Json::obj(vec![
+            ("prompt", Json::str("question : tom has 2 4 apples . how many apples now ?")),
+            ("max_new", Json::num(24.0)),
+            ("temp", Json::num(0.0)),
+            ("priority", Json::str("high")),
+        ]))
         .unwrap();
     assert_eq!(
         resp2.get("tokens").unwrap().as_i32_vec().unwrap(),
@@ -76,7 +104,88 @@ fn server_round_trip_inner() {
         "greedy generation must be deterministic"
     );
 
-    client.shutdown().unwrap();
-    let served = server.join().unwrap();
-    assert!(served >= 4, "served {served}");
+    // an already-expired deadline is cancelled before costing a prefill
+    let cancelled = client
+        .roundtrip(&Json::obj(vec![
+            ("prompt", Json::str("question : tom has 2 apples .")),
+            ("max_new", Json::num(8.0)),
+            ("deadline_ms", Json::num(0.0)),
+        ]))
+        .unwrap();
+    assert_eq!(
+        cancelled.get("finish").unwrap().as_str().unwrap(),
+        "cancelled",
+        "zero deadline must cancel: {cancelled}"
+    );
+    assert!(cancelled.get("tokens").unwrap().as_i32_vec().unwrap().is_empty());
+
+    // stats endpoint reports the scheduler's counters
+    let stats = client.stats().unwrap();
+    assert!(stats.get("completed").unwrap().as_i64().unwrap() >= 2, "{stats}");
+    assert!(stats.get("cancelled").unwrap().as_i64().unwrap() >= 1, "{stats}");
+    assert_eq!(stats.get("batch").unwrap().as_i64().unwrap(), 4);
+    assert!(stats.get("queue_depth").unwrap().as_i64().unwrap() >= 0);
+    assert!(stats.get("batch_occupancy").unwrap().as_f64().unwrap() >= 0.0);
+}
+
+/// The acceptance test for the concurrent scheduler: >= 8 connections in
+/// flight at once, each must get back exactly its own completion (the task
+/// tag echoes the request), ids must never be delivered twice, and the
+/// engine's batch must actually fill (mean occupancy > 1 row/step).
+fn concurrent_phase(addr: SocketAddr) {
+    let mut joins = Vec::new();
+    for i in 0..CLIENTS {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || -> Vec<u64> {
+            let mut client = Client::connect(&addr).unwrap();
+            let tag = format!("client-{i}");
+            let mut ids = Vec::new();
+            for r in 0..ROUNDS {
+                // Distinct prompt per (client, round); single digits are in
+                // the closed lexicon.
+                let prompt =
+                    format!("question : tom has {i} {r} apples . how many apples now ?");
+                let resp = client
+                    .roundtrip(&Json::obj(vec![
+                        ("prompt", Json::str(prompt)),
+                        ("max_new", Json::num(16.0)),
+                        ("temp", Json::num(0.0)),
+                        ("task", Json::str(tag.clone())),
+                    ]))
+                    .unwrap();
+                assert!(resp.opt("error").is_none(), "client {i}: {resp}");
+                // Correlated delivery: the echoed task tag proves this
+                // worker got its own completion, not another connection's.
+                assert_eq!(
+                    resp.get("task").unwrap().as_str().unwrap(),
+                    tag,
+                    "cross-delivered completion"
+                );
+                ids.push(resp.get("id").unwrap().as_i64().unwrap() as u64);
+            }
+            ids
+        }));
+    }
+    let mut all_ids: Vec<u64> = Vec::new();
+    for j in joins {
+        all_ids.extend(j.join().unwrap());
+    }
+    assert_eq!(all_ids.len(), CLIENTS * ROUNDS);
+    all_ids.sort_unstable();
+    let before = all_ids.len();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), before, "a completion id was delivered twice");
+
+    let mut ctl = Client::connect(&addr.to_string()).unwrap();
+    let stats = ctl.stats().unwrap();
+    let occupancy = stats.get("batch_occupancy").unwrap().as_f64().unwrap();
+    assert!(
+        occupancy > 1.0,
+        "batch never filled under {CLIENTS} concurrent clients: {stats}"
+    );
+    assert!(
+        stats.get("completed").unwrap().as_i64().unwrap() as usize >= CLIENTS * ROUNDS,
+        "{stats}"
+    );
+    assert_eq!(stats.get("in_flight").unwrap().as_i64().unwrap(), 0, "{stats}");
 }

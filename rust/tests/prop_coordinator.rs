@@ -1,7 +1,7 @@
 //! Property tests over coordinator/spec invariants (pure logic — no PJRT),
 //! using the in-repo `util::prop` micro-framework.
 
-use quasar::coordinator::BatchGroup;
+use quasar::coordinator::{BatchGroup, GenParams, Priority, Request, SchedPolicy, Scheduler};
 use quasar::prop_assert;
 use quasar::runtime::Tensor;
 use quasar::spec::{verify_draft, Draft, NgramIndex};
@@ -61,6 +61,61 @@ fn batch_group_never_loses_or_duplicates_rows() {
                     g.free_rows() == batch - leased.len(),
                     "free row count diverged"
                 );
+            }
+            ok()
+        },
+    );
+}
+
+#[test]
+fn scheduler_pop_order_matches_policy() {
+    // For any mix of priorities and prompt lengths, draining the scheduler
+    // yields a sequence sorted by the policy's key with arrival order as
+    // the tiebreak — and never loses or duplicates a request.
+    prop_check(
+        "scheduler drains in policy order",
+        300,
+        |rng| {
+            (0..rng.usize_below(24))
+                .map(|_| (rng.below(3), 1 + rng.usize_below(9)))
+                .collect::<Vec<(u64, usize)>>()
+        },
+        |items| {
+            for policy in [
+                SchedPolicy::Fifo,
+                SchedPolicy::ShortestPromptFirst,
+                SchedPolicy::Priority,
+            ] {
+                let mut s = Scheduler::new(policy);
+                for (i, (pr, plen)) in items.iter().enumerate() {
+                    let params = GenParams {
+                        priority: match *pr {
+                            0 => Priority::High,
+                            1 => Priority::Normal,
+                            _ => Priority::Low,
+                        },
+                        ..GenParams::default()
+                    };
+                    // id == arrival order + 1, so it doubles as the seq key
+                    s.push(Request::new(i as u64 + 1, vec![1; *plen], params));
+                }
+                let mut popped: Vec<Request> = Vec::new();
+                while let Some(r) = s.pop() {
+                    popped.push(r);
+                }
+                prop_assert!(popped.len() == items.len(), "scheduler lost requests");
+                for w in popped.windows(2) {
+                    let ordered = match policy {
+                        SchedPolicy::Fifo => w[0].id < w[1].id,
+                        SchedPolicy::ShortestPromptFirst => {
+                            (w[0].prompt.len(), w[0].id) < (w[1].prompt.len(), w[1].id)
+                        }
+                        SchedPolicy::Priority => {
+                            (w[0].params.priority, w[0].id) < (w[1].params.priority, w[1].id)
+                        }
+                    };
+                    prop_assert!(ordered, "out of order under {policy:?}");
+                }
             }
             ok()
         },
