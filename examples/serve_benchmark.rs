@@ -162,6 +162,16 @@ fn run() -> anyhow::Result<()> {
              stats.get("batch_occupancy")?.as_f64()?,
              stats.get("batch")?.as_i64()?,
              stats.get("steps")?.as_i64()?);
+    println!("  chunk efficiency    {:.2} useful/executed positions",
+             stats.get("chunk_efficiency")?.as_f64()?);
+    println!("  sub-batches/step    {:.2}",
+             stats.get("subbatches_per_step")?.as_f64()?);
+    for b in stats.get("buckets")?.as_arr()? {
+        println!("  bucket b{:<2}          {} calls, {:.2} rows/call",
+                 b.get("bucket")?.as_i64()?,
+                 b.get("calls")?.as_i64()?,
+                 b.get("mean_rows")?.as_f64()?);
+    }
     println!("  sched delay (mean)  {:.1}ms",
              stats.get("sched_delay_s")?.as_f64()? * 1e3);
     println!("  request latency     {}", total.lat.summary_ms());

@@ -34,6 +34,7 @@ fn run() -> anyhow::Result<()> {
                 gamma,
                 seed: 0,
                 policy: Default::default(),
+                elastic: true,
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

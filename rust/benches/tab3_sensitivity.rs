@@ -23,6 +23,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         gamma,
         seed: 0,
         policy: Default::default(),
+        elastic: true,
     }
 }
 

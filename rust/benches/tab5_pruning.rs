@@ -37,6 +37,7 @@ fn run() -> anyhow::Result<()> {
             gamma: 5,
             seed: 0,
             policy: Default::default(),
+            elastic: true,
         };
         let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
         table.row(vec![

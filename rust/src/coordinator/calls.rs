@@ -24,24 +24,53 @@ impl FnKind {
     }
 }
 
-/// One model invocation.
+/// One model invocation. With the elastic step planner a single engine step
+/// may emit several of these (one per executed sub-batch), each carrying the
+/// bucket and token counts of the call that actually ran — not the engine's
+/// configured bucket.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CallRecord {
     pub variant: String,
     pub fn_kind: FnKind,
-    /// Batch bucket the artifact ran at.
+    /// Batch bucket the artifact ran at (the planner-selected bucket for
+    /// step sub-batches; the cost model's `kv_bytes` scales with this).
     pub batch: usize,
     /// Transformer depth of the executed variant (pruned variants < full).
     pub n_layers: usize,
     /// Rows actually carrying requests (<= batch).
     pub active_rows: usize,
-    /// Max tokens *used* across rows this call (prefill: prompt len;
-    /// verify: 1 + longest draft). On real hardware the launch would be
-    /// shaped to this, so the cost model prices it, not the padded chunk.
+    /// Max tokens *used* across the rows of this call (prefill: prompt len;
+    /// verify: 1 + longest draft *in this sub-batch*). On real hardware the
+    /// launch would be shaped to this, so the cost model prices it, not the
+    /// padded chunk.
     pub tokens_used: usize,
+    /// Positions the artifact executed per row (its fixed chunk length:
+    /// prefill window, verify chunk, or 1 for decode).
+    pub chunk_len: usize,
+    /// Sum over active rows of the positions that carried real work
+    /// (1 + that row's draft length). `useful_tokens / executed_positions`
+    /// is the call's chunk efficiency.
+    pub useful_tokens: usize,
     /// Measured CPU wall-clock of the PJRT execution (reported alongside
     /// modeled time for transparency; see DESIGN.md §9).
     pub wall_s: f64,
+}
+
+impl CallRecord {
+    /// Positions the device really executed: every row of the bucket times
+    /// the artifact's chunk length, padding included.
+    pub fn executed_positions(&self) -> usize {
+        self.batch * self.chunk_len
+    }
+
+    /// Useful-positions / executed-positions for this call.
+    pub fn efficiency(&self) -> f64 {
+        let ex = self.executed_positions();
+        if ex == 0 {
+            return 0.0;
+        }
+        self.useful_tokens as f64 / ex as f64
+    }
 }
 
 /// Append-only call log for a run.
@@ -69,6 +98,25 @@ impl CallLog {
         self.records.iter().filter(|r| r.fn_kind == kind).count()
     }
 
+    /// Aggregate chunk efficiency (useful / executed positions) over the
+    /// decode+verify calls of the run — the serving-layer waste the elastic
+    /// planner attacks. Prefill is excluded: its fill ratio is a property of
+    /// the workload's prompt lengths, not of step planning.
+    pub fn chunk_efficiency(&self) -> f64 {
+        let (mut useful, mut executed) = (0usize, 0usize);
+        for r in &self.records {
+            if r.fn_kind == FnKind::Prefill {
+                continue;
+            }
+            useful += r.useful_tokens;
+            executed += r.executed_positions();
+        }
+        if executed == 0 {
+            return 0.0;
+        }
+        useful as f64 / executed as f64
+    }
+
     pub fn total_wall_s(&self) -> f64 {
         self.records.iter().map(|r| r.wall_s).sum()
     }
@@ -91,6 +139,8 @@ mod tests {
             n_layers: 6,
             active_rows: 3,
             tokens_used: 6,
+            chunk_len: 6,
+            useful_tokens: 12,
             wall_s: 0.001,
         }
     }
@@ -113,5 +163,19 @@ mod tests {
         assert_eq!(a.draft_cost.decode_calls, 5);
         a.clear();
         assert!(a.records.is_empty());
+    }
+
+    #[test]
+    fn efficiency_counts_useful_over_executed() {
+        let r = rec(FnKind::Verify); // 12 useful over 4x6 executed
+        assert_eq!(r.executed_positions(), 24);
+        assert!((r.efficiency() - 0.5).abs() < 1e-12);
+
+        let mut log = CallLog::default();
+        log.record(rec(FnKind::Verify));
+        // prefill must not dilute the decode-phase efficiency
+        log.record(CallRecord { useful_tokens: 0, ..rec(FnKind::Prefill) });
+        assert!((log.chunk_efficiency() - 0.5).abs() < 1e-12);
+        assert_eq!(CallLog::default().chunk_efficiency(), 0.0);
     }
 }

@@ -1,16 +1,29 @@
 //! The serving engine: continuous batching over a leased-row KV group,
-//! per-request drafting, one parallel verification pass per step, lossless
+//! per-request drafting, elastically-planned verification, lossless
 //! rejection sampling, and full call accounting.
 //!
 //! One `step()` =
-//!   expire (cancel running requests whose deadline passed, free their rows)
-//!   -> admit (pop the scheduler in policy order, prefill + splice new
-//!             requests into free rows)
+//!   expire  (cancel running requests whose deadline passed, free their rows)
+//!   -> admit   (pop the scheduler in policy order, prefill + splice new
+//!               requests into free rows)
 //!   -> draft   (per active row, via its drafter)
-//!   -> verify  (single batched chunk execution on the verifier variant:
-//!               `fp32` for the paper's Ngram baseline, `w8a8` for Quasar)
+//!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
+//!               required function — decode-only vs verify — and pick each
+//!               sub-batch's cheapest exported batch bucket on the cost
+//!               model; see `coordinator::plan` for the invariants)
+//!   -> execute (per sub-batch: gather leased KV rows into a pooled
+//!               bucket-shaped scratch cache, run the chunk on the verifier
+//!               variant — `fp32` for the paper's Ngram baseline, `w8a8`
+//!               for Quasar — then scatter the advanced rows back)
 //!   -> commit  (rejection sampling Eq. 2-3, acceptance bookkeeping,
-//!               finish handling)
+//!               finish handling; per sub-batch, in plan order)
+//!
+//! The planner is what keeps memory traffic proportional to *useful* work: a
+//! batch-4 group at occupancy 1 verifies through the batch-1 bucket instead
+//! of streaming four rows of KV, and decode-only rows stop riding the full
+//! verify chunk when a separate 1-token decode call prices cheaper.
+//! `EngineConfig::elastic = false` pins the monolithic configured-bucket
+//! call (the pre-planner behavior) for equivalence tests and A/B benches.
 //!
 //! Submissions land in the admission [`Scheduler`] (FIFO / shortest-prompt /
 //! priority policies, per-request deadlines) rather than a raw queue; the
@@ -26,7 +39,8 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{names, Metrics, SpecStats};
-use crate::runtime::{ModelCfg, ModelRuntime};
+use crate::perfmodel::PerfModel;
+use crate::runtime::{ModelCfg, ModelRuntime, Tensor};
 use crate::spec::drafter::{DraftCost, Drafter};
 use crate::spec::{verify_draft, Draft, NgramConfig, NgramDrafter, PrunedDrafter, VanillaDrafter};
 use crate::tokenizer::{BOS_ID, EOS_ID};
@@ -34,6 +48,7 @@ use crate::util::rng::Pcg;
 
 use super::calls::{CallLog, CallRecord, FnKind};
 use super::kv::BatchGroup;
+use super::plan::{plan_step, PlanCtx, StepPlan, SubBatch};
 use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
 use super::scheduler::{SchedPolicy, Scheduler};
 
@@ -61,6 +76,11 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Admission ordering for queued requests (see `coordinator::scheduler`).
     pub policy: SchedPolicy,
+    /// Elastic step planning (`coordinator::plan`): shrink/split each step
+    /// to the cheapest exported buckets. `false` pins the monolithic
+    /// configured-bucket call per step (pre-planner behavior, for
+    /// equivalence tests and A/B benches).
+    pub elastic: bool,
 }
 
 impl EngineConfig {
@@ -73,6 +93,7 @@ impl EngineConfig {
             gamma: 0,
             seed: 0,
             policy: SchedPolicy::Fifo,
+            elastic: true,
         }
     }
 
@@ -84,6 +105,7 @@ impl EngineConfig {
             gamma,
             seed: 0,
             policy: SchedPolicy::Fifo,
+            elastic: true,
         }
     }
 
@@ -119,6 +141,16 @@ pub struct Engine {
     pub metrics: Metrics,
     pub call_log: CallLog,
     completions: Vec<Completion>,
+    /// Cost model the step planner minimizes over (manifest device constants
+    /// + this model's architecture).
+    perf: PerfModel,
+    /// Exported batch buckets for the verifier's verify/decode fns, sorted.
+    verify_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+    /// Pooled single-row prefill scratch: zeroed and reused per admission
+    /// instead of allocating a fresh `[L, 1, H, S, hd]` pair each time.
+    prefill_k: Tensor<f32>,
+    prefill_v: Tensor<f32>,
 }
 
 impl Engine {
@@ -129,9 +161,16 @@ impl Engine {
         }
         // Validate the bucket exists up front (prefill is always exported).
         model.entry.artifact(&cfg.verifier, "prefill", cfg.batch)?;
+        let verify_buckets = model.entry.buckets(&cfg.verifier, "verify");
+        let decode_buckets = model.entry.buckets(&cfg.verifier, "decode");
+        if verify_buckets.is_empty() && !matches!(cfg.drafter, DrafterKind::Vanilla) {
+            bail!("no verify buckets exported for variant '{}'", cfg.verifier);
+        }
         let group = BatchGroup::new(
             mcfg.n_layers, cfg.batch, mcfg.n_heads, mcfg.max_seq, mcfg.head_dim,
         );
+        let perf = PerfModel::new(model.cost_model().clone(), mcfg.clone());
+        let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
         Ok(Engine {
             model,
             mcfg,
@@ -143,8 +182,27 @@ impl Engine {
             metrics: Metrics::new(),
             call_log: CallLog::default(),
             completions: Vec::new(),
+            perf,
+            verify_buckets,
+            decode_buckets,
+            prefill_k,
+            prefill_v,
             cfg,
         })
+    }
+
+    /// Every bucket the step planner may execute at (stats publishing).
+    pub fn plan_buckets(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .verify_buckets
+            .iter()
+            .chain(self.decode_buckets.iter())
+            .copied()
+            .chain(std::iter::once(self.cfg.batch))
+            .collect();
+        b.sort_unstable();
+        b.dedup();
+        b
     }
 
     pub fn model(&self) -> &Rc<ModelRuntime> {
@@ -254,12 +312,18 @@ impl Engine {
             let len = st.req.prompt.len();
             let mut toks = vec![0i32; p];
             toks[..len].copy_from_slice(&st.req.prompt);
-            let (k1, v1) = self.model.empty_cache(self.mcfg.n_layers, 1);
+            // Pooled prefill scratch: zero in place instead of allocating a
+            // fresh single-row cache pair per admission.
+            self.prefill_k.zero();
+            self.prefill_v.zero();
 
             let t0 = Instant::now();
             let out = self
                 .model
-                .run_chunk(&self.cfg.verifier, "prefill", 1, &toks, &k1, &v1, &[0])
+                .run_chunk(
+                    &self.cfg.verifier, "prefill", 1, &toks,
+                    &self.prefill_k, &self.prefill_v, &[0],
+                )
                 .context("prefill")?;
             let wall = t0.elapsed().as_secs_f64();
             self.metrics.observe("prefill_s", wall);
@@ -270,6 +334,8 @@ impl Engine {
                 n_layers: self.mcfg.n_layers,
                 active_rows: 1,
                 tokens_used: len,
+                chunk_len: p,
+                useful_tokens: len,
                 wall_s: wall,
             });
 
@@ -298,6 +364,8 @@ impl Engine {
             } else {
                 self.finish_to_completion(st);
             }
+            // Recycle the advanced single-row cache as b1 step scratch.
+            self.model.return_scratch(out.k, out.v);
         }
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
@@ -390,62 +458,147 @@ impl Engine {
             drafts.push((row, slot, draft));
         }
 
-        // ---- choose the chunk function --------------------------------
-        let all_empty = drafts.iter().all(|(_, _, d)| d.is_empty());
-        let (fn_kind, chunk) = if all_empty {
-            (FnKind::Decode, 1usize)
+        // ---- plan the step ---------------------------------------------
+        let draft_lens: Vec<usize> = drafts.iter().map(|(_, _, d)| d.len()).collect();
+        let plan = {
+            let ctx = PlanCtx {
+                perf: &self.perf,
+                variant: &self.cfg.verifier,
+                n_layers: self.mcfg.n_layers,
+                full_bucket: self.cfg.batch,
+                verify_chunk: self.mcfg.verify_len(),
+                verify_buckets: &self.verify_buckets,
+                decode_buckets: &self.decode_buckets,
+                elastic: self.cfg.elastic,
+            };
+            plan_step(&ctx, &draft_lens)?
+        };
+        self.observe_plan(&plan);
+
+        // ---- execute + commit each sub-batch ---------------------------
+        let t0 = Instant::now();
+        for sb in &plan.sub_batches {
+            self.exec_sub_batch(sb, &mut drafts)?;
+        }
+        self.metrics.observe("step_s", t0.elapsed().as_secs_f64());
+        Ok(true)
+    }
+
+    fn observe_plan(&self, plan: &StepPlan) {
+        self.metrics
+            .observe(names::SUBBATCHES_PER_STEP, plan.sub_batches.len() as f64);
+        self.metrics
+            .observe(names::PLANNED_SAVINGS_S, plan.monolithic_s - plan.modeled_s);
+    }
+
+    /// Run one planned sub-batch: gather its leased KV rows into a pooled
+    /// bucket-shaped scratch cache, execute the chunk, scatter the advanced
+    /// rows back, and commit each row's verification outcome. Consumes the
+    /// sub-batch's entries of `drafts` (each draft index belongs to exactly
+    /// one sub-batch of a plan).
+    fn exec_sub_batch(
+        &mut self,
+        sb: &SubBatch,
+        drafts: &mut [(usize, usize, Draft)],
+    ) -> Result<()> {
+        let (bucket, chunk) = (sb.bucket, sb.chunk);
+        let row_map: Vec<usize> = sb.rows.iter().map(|&di| drafts[di].0).collect();
+
+        // Identity fast path: when the sub-batch is the whole group in
+        // group-row order (always true for the monolithic elastic=false
+        // shape at full occupancy, and for full single-sub-batch steps),
+        // run directly on the group cache and adopt the returned tensors —
+        // the seed engine's zero-copy behavior. Note this writes the
+        // chunk's speculative output into any trailing unleased rows too
+        // (join splices over them, leave re-zeroes), which the gather/
+        // scatter path avoids.
+        let identity =
+            bucket == self.group.batch && row_map.iter().enumerate().all(|(i, &r)| i == r);
+
+        // ---- gather ----------------------------------------------------
+        let (sk, sv) = if identity {
+            (None, None)
         } else {
-            (FnKind::Verify, self.mcfg.verify_len())
+            let (mut sk, mut sv) = self.model.take_scratch(self.mcfg.n_layers, bucket);
+            self.group.gather_rows(&row_map, &mut sk, &mut sv)?;
+            (Some(sk), Some(sv))
         };
 
-        // ---- assemble the batched token block -------------------------
-        let b = self.cfg.batch;
-        let mut tokens = vec![0i32; b * chunk];
-        let mut pos = vec![0i32; b];
-        for (row, slot, draft) in &drafts {
-            let st = self.states[*slot].as_ref().unwrap();
-            tokens[row * chunk] = st.last_token();
-            for (i, &t) in draft.tokens.iter().enumerate().take(chunk - 1) {
-                tokens[row * chunk + 1 + i] = t;
+        // ---- assemble the sub-batch token block ------------------------
+        let mut tokens = vec![0i32; bucket * chunk];
+        let mut pos = vec![0i32; bucket];
+        for (i, &di) in sb.rows.iter().enumerate() {
+            let (_, slot, ref draft) = drafts[di];
+            let st = self.states[slot].as_ref().expect("leased slot has state");
+            tokens[i * chunk] = st.last_token();
+            for (j, &t) in draft.tokens.iter().enumerate().take(chunk - 1) {
+                tokens[i * chunk + 1 + j] = t;
             }
-            pos[*row] = st.cached as i32;
+            pos[i] = st.cached as i32;
         }
 
         // ---- execute ---------------------------------------------------
         let t0 = Instant::now();
+        let (k_in, v_in) = match (&sk, &sv) {
+            (Some(k), Some(v)) => (k, v),
+            _ => (&self.group.k, &self.group.v),
+        };
         let out = self
             .model
             .run_chunk(
                 &self.cfg.verifier,
-                fn_kind.name(),
-                b,
+                sb.fn_kind.name(),
+                bucket,
                 &tokens,
-                &self.group.k,
-                &self.group.v,
+                k_in,
+                v_in,
                 &pos,
             )
-            .with_context(|| format!("{} step", fn_kind.name()))?;
+            .with_context(|| format!("{} sub-batch b{bucket}", sb.fn_kind.name()))?;
         let wall = t0.elapsed().as_secs_f64();
-        self.metrics.observe("step_s", wall);
-        let max_used = drafts.iter().map(|(_, _, d)| d.len() + 1).max().unwrap_or(1);
         self.call_log.record(CallRecord {
             variant: self.cfg.verifier.clone(),
-            fn_kind,
-            batch: b,
+            fn_kind: sb.fn_kind,
+            batch: bucket,
             n_layers: self.mcfg.n_layers,
-            active_rows: drafts.len(),
-            tokens_used: max_used,
+            active_rows: sb.rows.len(),
+            tokens_used: sb.tokens_used,
+            chunk_len: chunk,
+            useful_tokens: sb.useful_tokens,
             wall_s: wall,
         });
-        self.group.adopt(out.k, out.v)?;
+        self.metrics
+            .observe(&names::bucket_occupancy(bucket), sb.rows.len() as f64);
+        self.metrics.inc(&names::bucket_calls(bucket), 1);
+        self.metrics.observe(
+            names::CHUNK_EFFICIENCY,
+            sb.useful_tokens as f64 / (bucket * chunk) as f64,
+        );
+        self.metrics.inc(names::USEFUL_POSITIONS, sb.useful_tokens as u64);
+        self.metrics
+            .inc(names::EXECUTED_POSITIONS, (bucket * chunk) as u64);
+
+        // ---- scatter / adopt the advanced rows -------------------------
+        if let (Some(sk), Some(sv)) = (sk, sv) {
+            self.group.scatter_rows(&row_map, &out.k, &out.v)?;
+            self.model.return_scratch(sk, sv);
+            self.model.return_scratch(out.k, out.v);
+        } else {
+            // identity fast path: the advanced cache *is* the group cache
+            // (run() already validated its dims against the bucket shape)
+            self.group.k = out.k;
+            self.group.v = out.v;
+        }
 
         // ---- commit per row --------------------------------------------
-        for (row, slot, draft) in drafts {
-            let st = self.states[slot].as_mut().unwrap();
+        for (i, &di) in sb.rows.iter().enumerate() {
+            let (row, slot, _) = drafts[di];
+            let draft = std::mem::take(&mut drafts[di].2);
+            let st = self.states[slot].as_mut().expect("leased slot has state");
             let logits = &out.logits;
             let outcome = verify_draft(
                 &draft,
-                |i| logits.row(&[row, i]),
+                |j| logits.row(&[i, j]),
                 st.req.params.temp,
                 &mut st.rng,
             );
@@ -483,7 +636,7 @@ impl Engine {
                 self.finish_to_completion(st);
             }
         }
-        Ok(true)
+        Ok(())
     }
 
     fn check_finish_with(max_seq: usize, st: &mut RequestState) {

@@ -1,11 +1,19 @@
 //! Batch-group KV-cache manager.
 //!
-//! The exported artifacts operate on a whole `[L, B, H, S, hd]` cache, so
-//! the engine keeps one *batch group* per batch bucket: a persistent cache
-//! whose rows are leased to requests. Joining a request prefills into a
-//! fresh single-row cache and splices that row in (`Tensor::
-//! copy_axis1_row_from`); leaving zeroes the row. Row state never moves
-//! between steps — continuous batching without cache shuffling.
+//! The engine keeps one *batch group* per serving configuration: a
+//! persistent `[L, B, H, S, hd]` cache whose rows are leased to requests.
+//! Joining a request prefills into a fresh single-row cache and splices that
+//! row in; leaving zeroes the row. Row state never moves between steps —
+//! continuous batching without cache shuffling.
+//!
+//! Execution no longer adopts a whole returned cache: the elastic step
+//! planner (`coordinator::plan`) runs each sub-batch against a
+//! *bucket-shaped scratch cache*, so the group exposes per-row movement
+//! instead — [`BatchGroup::gather_rows`] copies leased rows into scratch row
+//! order before a chunk runs, and [`BatchGroup::scatter_rows`] copies the
+//! advanced rows back afterwards. Rows outside the sub-batch are never
+//! touched, which also means freed rows stay zeroed instead of accumulating
+//! speculative garbage.
 
 use anyhow::{bail, Result};
 
@@ -84,13 +92,57 @@ impl BatchGroup {
         Ok(slot)
     }
 
-    /// Adopt the advanced caches returned by a chunk execution.
-    pub fn adopt(&mut self, k: Tensor<f32>, v: Tensor<f32>) -> Result<()> {
-        if k.dims != self.k.dims || v.dims != self.v.dims {
-            bail!("adopt dims mismatch {:?} vs {:?}", k.dims, self.k.dims);
+    /// Check a gather/scatter row map against the group and a scratch shape:
+    /// every group row leased and in range, scratch large enough, dims
+    /// matching everywhere but the batch axis.
+    fn check_row_map(&self, rows: &[usize], k: &Tensor<f32>, v: &Tensor<f32>) -> Result<()> {
+        if k.dims != v.dims {
+            bail!("scratch k/v dims differ: {:?} vs {:?}", k.dims, v.dims);
         }
-        self.k = k;
-        self.v = v;
+        if k.dims.len() != self.k.dims.len()
+            || k.dims[0] != self.k.dims[0]
+            || k.dims[2..] != self.k.dims[2..]
+        {
+            bail!("scratch dims {:?} incompatible with group {:?}", k.dims, self.k.dims);
+        }
+        if rows.len() > k.dims[1] {
+            bail!("{} rows exceed scratch bucket {}", rows.len(), k.dims[1]);
+        }
+        for &r in rows {
+            if r >= self.batch {
+                bail!("row {r} out of range for batch {}", self.batch);
+            }
+            if self.rows[r].is_none() {
+                bail!("row {r} not leased");
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy leased group rows into a bucket-shaped scratch cache pair:
+    /// scratch row `i` receives group row `rows[i]`. Scratch rows beyond
+    /// `rows.len()` are left as-is (padding the executed bucket; per-row
+    /// attention never reads across batch rows).
+    pub fn gather_rows(&self, rows: &[usize], k_dst: &mut Tensor<f32>,
+                       v_dst: &mut Tensor<f32>) -> Result<()> {
+        self.check_row_map(rows, k_dst, v_dst)?;
+        let pairs: Vec<(usize, usize)> =
+            rows.iter().enumerate().map(|(i, &r)| (i, r)).collect();
+        k_dst.copy_axis1_rows(&pairs, &self.k);
+        v_dst.copy_axis1_rows(&pairs, &self.v);
+        Ok(())
+    }
+
+    /// Copy advanced scratch rows back into the group: group row `rows[i]`
+    /// receives scratch row `i` — the inverse of [`BatchGroup::gather_rows`]
+    /// after a chunk execution advanced the scratch.
+    pub fn scatter_rows(&mut self, rows: &[usize], k_src: &Tensor<f32>,
+                        v_src: &Tensor<f32>) -> Result<()> {
+        self.check_row_map(rows, k_src, v_src)?;
+        let pairs: Vec<(usize, usize)> =
+            rows.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+        self.k.copy_axis1_rows(&pairs, k_src);
+        self.v.copy_axis1_rows(&pairs, v_src);
         Ok(())
     }
 }
@@ -159,11 +211,57 @@ mod tests {
     }
 
     #[test]
-    fn adopt_validates_dims() {
+    fn gather_scatter_round_trip_preserves_rows() {
         let mut g = group();
-        let bad = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
-        assert!(g.adopt(bad.clone(), bad).is_err());
-        let good = Tensor::<f32>::zeros(&[2, 3, 2, 8, 4]);
-        assert!(g.adopt(good.clone(), good).is_ok());
+        for (slot, fill) in [(1, 10.0f32), (2, 20.0), (3, 30.0)] {
+            let (k1, v1) = row_cache(fill);
+            g.join(slot, &k1, &v1).unwrap();
+        }
+        let before_k = g.k.clone();
+        // gather rows 2 and 0 (in that order) into a 2-bucket scratch
+        let mut sk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut sv = sk.clone();
+        g.gather_rows(&[2, 0], &mut sk, &mut sv).unwrap();
+        assert_eq!(sk.at(&[0, 0, 0, 0, 0]), 30.0, "scratch row 0 = group row 2");
+        assert_eq!(sk.at(&[1, 1, 1, 7, 3]), 10.0, "scratch row 1 = group row 0");
+        // scatter straight back: the group must be bit-identical
+        g.scatter_rows(&[2, 0], &sk, &sv).unwrap();
+        assert_eq!(g.k, before_k, "gather->scatter round trip changed the cache");
+        // an advanced scratch lands in the right group rows only
+        sk.data.iter_mut().for_each(|x| *x += 1.0);
+        g.scatter_rows(&[2, 0], &sk, &sk.clone()).unwrap();
+        assert_eq!(g.k.at(&[0, 2, 0, 0, 0]), 31.0);
+        assert_eq!(g.k.at(&[0, 0, 0, 0, 0]), 11.0);
+        assert_eq!(g.k.at(&[0, 1, 0, 0, 0]), 20.0, "row outside the map untouched");
+    }
+
+    #[test]
+    fn gather_into_oversize_bucket_pads_and_leaves_tail_rows() {
+        let mut g = group();
+        let (k1, v1) = row_cache(4.0);
+        g.join(7, &k1, &v1).unwrap();
+        let mut sk = Tensor::<f32>::zeros(&[2, 4, 2, 8, 4]);
+        sk.data.iter_mut().for_each(|x| *x = -1.0); // dirty pooled scratch
+        let mut sv = sk.clone();
+        g.gather_rows(&[0], &mut sk, &mut sv).unwrap();
+        assert_eq!(sk.at(&[0, 0, 0, 0, 0]), 4.0);
+        assert_eq!(sk.at(&[0, 3, 0, 0, 0]), -1.0, "padding rows left as-is");
+    }
+
+    #[test]
+    fn gather_scatter_validate_rows_and_shapes() {
+        let mut g = group();
+        let (k1, v1) = row_cache(1.0);
+        g.join(1, &k1, &v1).unwrap();
+        let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
+        let mut sv = sk.clone();
+        assert!(g.gather_rows(&[1], &mut sk, &mut sv).is_err(), "row 1 not leased");
+        assert!(g.gather_rows(&[9], &mut sk, &mut sv).is_err(), "row out of range");
+        assert!(g.gather_rows(&[0, 0], &mut sk, &mut sv).is_err(), "bucket too small");
+        let mut bad = Tensor::<f32>::zeros(&[2, 1, 2, 6, 4]);
+        assert!(g.gather_rows(&[0], &mut bad, &mut sv.clone()).is_err(), "seq mismatch");
+        assert!(g.scatter_rows(&[9], &sk, &sv).is_err());
+        assert!(g.gather_rows(&[0], &mut sk, &mut sv).is_ok());
+        assert!(g.scatter_rows(&[0], &sk, &sv).is_ok());
     }
 }

@@ -1,13 +1,14 @@
 //! Layer-3 coordinator: the paper's serving-system contribution. Continuous
 //! batching over leased KV rows (`kv`), per-request speculative state
 //! (`request`), policy-ordered admission with deadlines and cancellation
-//! (`scheduler`), the decode loop (`engine`), call accounting for the cost
-//! model (`calls`) and the threaded front door with correlated completion
-//! routing (`router`).
+//! (`scheduler`), cost-guided elastic step planning (`plan`), the decode
+//! loop (`engine`), call accounting for the cost model (`calls`) and the
+//! threaded front door with correlated completion routing (`router`).
 
 pub mod calls;
 pub mod engine;
 pub mod kv;
+pub mod plan;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -15,6 +16,7 @@ pub mod scheduler;
 pub use calls::{CallLog, CallRecord, FnKind};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use kv::BatchGroup;
+pub use plan::{best_bucket, plan_step, PlanCtx, StepPlan, SubBatch};
 pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
-pub use router::{EngineHandle, RouterStats, StatsSnapshot, Ticket};
+pub use router::{BucketStat, EngineHandle, RouterStats, StatsSnapshot, Ticket};
 pub use scheduler::{SchedPolicy, Scheduler};

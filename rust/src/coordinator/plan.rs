@@ -1,0 +1,476 @@
+//! Elastic step planning: partition the active rows of a step into
+//! sub-batches and pick, per sub-batch, the cheapest exported batch bucket —
+//! so low-occupancy groups stop reading idle KV rows and decode-only rows
+//! stop paying full verify-chunk traffic (paper Eq. 11/12: verification cost
+//! is memory traffic, and traffic scales with the bucket actually executed).
+//!
+//! One [`StepPlan`] is built per engine step from the per-row draft lengths
+//! and executed as a gather → run_chunk → scatter pipeline per sub-batch
+//! (see `coordinator::kv` for the row movement and `coordinator::engine` for
+//! the driver).
+//!
+//! ## Bucket-selection invariants
+//!
+//! * A sub-batch's bucket is the **smallest exported bucket that fits its
+//!   rows**; when every bucket is smaller than the group, the group splits
+//!   across multiple sub-batches of the largest bucket (never silently
+//!   truncated, never a bucket the manifest doesn't export).
+//! * Every active row lands in **exactly one** sub-batch of the chosen plan.
+//! * A sub-batch is function-homogeneous in what it *executes*: it runs one
+//!   exported fn (`verify` or `decode`). Decode-only rows may ride along in
+//!   a verify sub-batch's spare rows — that call's weight stream is already
+//!   paid, so the ride is free in the cost model — but a `decode` sub-batch
+//!   never contains a drafting row.
+//! * Between the candidate shapes (monolithic configured bucket, shrunk
+//!   single call, split by function) the planner commits to the one with the
+//!   lowest [`PerfModel::plan_cost`]; ties prefer fewer calls, and a shape
+//!   whose bucket the manifest does not export is never committed to. When
+//!   the configured bucket is exported (the normal case) the chosen cost is
+//!   monotonically <= the monolithic cost, and the gap is surfaced as the
+//!   `planned_savings_s` metric.
+//! * Planning is deterministic: rows are ordered longest-draft-first (ties
+//!   by row index), so a split group packs similar draft lengths together
+//!   and per-sub-batch `tokens_used` maxima stay small.
+
+use anyhow::{bail, Result};
+
+use crate::perfmodel::PerfModel;
+
+use super::calls::FnKind;
+
+/// Everything the planner needs about the engine's configuration, borrowed
+/// for one `plan_step` call. Bucket lists come from the manifest
+/// (`ModelEntry::buckets`) and must be sorted ascending.
+pub struct PlanCtx<'a> {
+    pub perf: &'a PerfModel,
+    /// Verifier variant the step executes (prices the weight stream).
+    pub variant: &'a str,
+    pub n_layers: usize,
+    /// The engine's configured construction-time bucket (the monolithic
+    /// fallback shape; seed behavior).
+    pub full_bucket: usize,
+    /// Positions per row of the exported verify chunk (`gamma_max + 1`).
+    pub verify_chunk: usize,
+    pub verify_buckets: &'a [usize],
+    pub decode_buckets: &'a [usize],
+    /// `false` forces the monolithic single-call plan at `full_bucket`
+    /// (bit-compatible with the pre-planner engine; used by equivalence
+    /// tests and A/B benches).
+    pub elastic: bool,
+}
+
+/// One chunk execution of a step: which rows run, through which exported
+/// (fn, bucket), and the token accounting the call log records for it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubBatch {
+    pub fn_kind: FnKind,
+    /// Exported batch bucket to execute at (scratch-cache shape).
+    pub bucket: usize,
+    /// Positions the artifact executes per row (1 for decode, the verify
+    /// chunk otherwise).
+    pub chunk: usize,
+    /// Indices into the step's draft list; scratch row `i` carries
+    /// `rows[i]`.
+    pub rows: Vec<usize>,
+    /// `1 + longest draft` among `rows` (what the cost model prices).
+    pub tokens_used: usize,
+    /// Sum over `rows` of `1 + draft len` (chunk-efficiency numerator).
+    pub useful_tokens: usize,
+}
+
+impl SubBatch {
+    fn new(fn_kind: FnKind, bucket: usize, chunk: usize, rows: Vec<usize>,
+           draft_lens: &[usize]) -> Self {
+        debug_assert!(!rows.is_empty());
+        let tokens_used = rows.iter().map(|&i| draft_lens[i] + 1).max().unwrap_or(1);
+        let useful_tokens = rows.iter().map(|&i| draft_lens[i] + 1).sum();
+        SubBatch { fn_kind, bucket, chunk, rows, tokens_used, useful_tokens }
+    }
+
+    /// Free capacity left in the selected bucket.
+    pub fn spare(&self) -> usize {
+        self.bucket.saturating_sub(self.rows.len())
+    }
+}
+
+/// The committed plan for one step, with the modeled cost of what was chosen
+/// and of the monolithic shape it replaced (their gap is the planner's win).
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    pub sub_batches: Vec<SubBatch>,
+    /// `PerfModel::plan_cost` of the chosen sub-batches (seconds).
+    pub modeled_s: f64,
+    /// Cost of the monolithic single call at the configured bucket.
+    pub monolithic_s: f64,
+}
+
+/// Smallest bucket (ascending list) that fits `n` rows; the largest
+/// available when none fits (the caller then splits); `None` when the list
+/// is empty.
+pub fn best_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .or_else(|| buckets.last().copied())
+}
+
+/// Pack one function-homogeneous group of rows into sub-batches, splitting
+/// over the largest bucket when the group is oversize. `idxs` index into
+/// `draft_lens`.
+fn pack(fn_kind: FnKind, chunk: usize, mut idxs: Vec<usize>, draft_lens: &[usize],
+        buckets: &[usize]) -> Result<Vec<SubBatch>> {
+    if idxs.is_empty() {
+        return Ok(Vec::new());
+    }
+    if buckets.is_empty() {
+        bail!("no '{}' buckets exported for this variant", fn_kind.name());
+    }
+    // Longest drafts first (ties by index): when the group must split,
+    // similar-length work shares a call and per-call tokens_used stays low.
+    idxs.sort_by_key(|&i| (std::cmp::Reverse(draft_lens[i]), i));
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < idxs.len() {
+        let left = idxs.len() - start;
+        let bucket = best_bucket(buckets, left).expect("non-empty bucket list");
+        let take = left.min(bucket);
+        out.push(SubBatch::new(
+            fn_kind, bucket, chunk, idxs[start..start + take].to_vec(), draft_lens,
+        ));
+        start += take;
+    }
+    Ok(out)
+}
+
+fn plan_cost(ctx: &PlanCtx, sbs: &[SubBatch]) -> f64 {
+    let parts: Vec<(usize, usize)> =
+        sbs.iter().map(|sb| (sb.bucket, sb.tokens_used)).collect();
+    ctx.perf.plan_cost(ctx.variant, ctx.n_layers, &parts)
+}
+
+/// Build the step plan for the given per-row draft lengths (one entry per
+/// active row, in group-row order).
+pub fn plan_step(ctx: &PlanCtx, draft_lens: &[usize]) -> Result<StepPlan> {
+    if draft_lens.is_empty() {
+        bail!("plan_step on an empty step");
+    }
+    let n = draft_lens.len();
+    let all: Vec<usize> = (0..n).collect();
+    let any_draft = draft_lens.iter().any(|&d| d > 0);
+
+    // The single-call function: verify when anything drafted; decode when
+    // nothing did (falling back to verify if decode isn't exported).
+    let (mono_fn, mono_chunk, mono_buckets) = if any_draft || ctx.decode_buckets.is_empty() {
+        (FnKind::Verify, ctx.verify_chunk, ctx.verify_buckets)
+    } else {
+        (FnKind::Decode, 1usize, ctx.decode_buckets)
+    };
+
+    // Monolithic shape: the fixed construction-time bucket, one call.
+    let mono = vec![SubBatch::new(
+        mono_fn, ctx.full_bucket, mono_chunk, all.clone(), draft_lens,
+    )];
+    let mono_cost = plan_cost(ctx, &mono);
+    if !ctx.elastic {
+        return Ok(StepPlan { sub_batches: mono, modeled_s: mono_cost, monolithic_s: mono_cost });
+    }
+
+    // Candidate 1 — shrink: same single-function grouping, smallest
+    // exported bucket that fits the occupancy.
+    let shrunk = pack(mono_fn, mono_chunk, all, draft_lens, mono_buckets)?;
+
+    // Candidate 2 — split by required function: drafting rows verify,
+    // decode-only rows first ride along in spare verify capacity (that
+    // weight stream is already paid), the remainder runs as 1-token decode
+    // sub-batches that skip the verify chunk's padding traffic entirely.
+    let split = if any_draft
+        && draft_lens.iter().any(|&d| d == 0)
+        && !ctx.decode_buckets.is_empty()
+    {
+        let verify_idx: Vec<usize> = (0..n).filter(|&i| draft_lens[i] > 0).collect();
+        let decode_idx: Vec<usize> = (0..n).filter(|&i| draft_lens[i] == 0).collect();
+        let mut sbs =
+            pack(FnKind::Verify, ctx.verify_chunk, verify_idx, draft_lens, ctx.verify_buckets)?;
+        let mut decode_iter = decode_idx.into_iter();
+        'fill: for sb in sbs.iter_mut() {
+            while sb.spare() > 0 {
+                match decode_iter.next() {
+                    Some(i) => {
+                        sb.rows.push(i);
+                        sb.useful_tokens += 1; // a decode row uses 1 position
+                    }
+                    None => break 'fill,
+                }
+            }
+        }
+        let leftover: Vec<usize> = decode_iter.collect();
+        sbs.extend(pack(FnKind::Decode, 1, leftover, draft_lens, ctx.decode_buckets)?);
+        Some(sbs)
+    } else {
+        None
+    };
+
+    // Commit to the cheapest candidate; ties prefer the earlier (fewer
+    // calls / closer to monolithic) shape.
+    let mut best = shrunk;
+    let mut best_cost = plan_cost(ctx, &best);
+    if let Some(split) = split {
+        let c = plan_cost(ctx, &split);
+        if c < best_cost {
+            best = split;
+            best_cost = c;
+        }
+    }
+    if mono_cost < best_cost && mono_buckets.contains(&ctx.full_bucket) {
+        // Only reachable when the manifest exports full_bucket but shrink
+        // picked a larger-than-configured bucket (never happens when
+        // full_bucket is in the list, since shrink is monotone) — kept as a
+        // guard. A full_bucket the manifest does NOT export prices cheaper
+        // here too, but committing to it would fail at run_chunk, so an
+        // executable candidate always wins over an unexecutable one.
+        best = mono;
+        best_cost = mono_cost;
+    }
+    Ok(StepPlan { sub_batches: best, modeled_s: best_cost, monolithic_s: mono_cost })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{CostModelCfg, ModelCfg};
+    use std::collections::BTreeMap;
+
+    fn device(bf16_ops: f64, launch_s: f64) -> CostModelCfg {
+        CostModelCfg {
+            device: "sim".into(),
+            hbm_bw_bytes_per_s: 1.6e12,
+            int8_ops_per_s: 2.0 * bf16_ops,
+            bf16_ops_per_s: bf16_ops,
+            bytes_per_weight: BTreeMap::from([
+                ("fp32".to_string(), 2.0),
+                ("w8a8".to_string(), 1.0),
+            ]),
+            kernel_launch_s: launch_s,
+            drafter_cost_per_token_s: 1e-6,
+        }
+    }
+
+    fn small_model() -> ModelCfg {
+        ModelCfg {
+            name: "m".into(), vocab_size: 64, d_model: 32, n_layers: 2,
+            n_heads: 8, ffn_dim: 64, max_seq: 4096, prefill_len: 128,
+            gamma_max: 8, head_dim: 64,
+        }
+    }
+
+    /// Tiny weights, long resident sequence, memory-bound device: shrinking
+    /// the bucket (fewer idle KV rows read) is the dominant lever.
+    fn kv_heavy() -> PerfModel {
+        PerfModel::new(device(188e12, 2e-5), small_model())
+    }
+
+    /// Same model on a compute-starved device with cheap launches: the
+    /// padded verify-chunk attention over the long sequence dominates, so
+    /// splitting decode-only rows out of the verify chunk pays for the
+    /// extra call.
+    fn pad_heavy() -> PerfModel {
+        PerfModel::new(device(1e12, 1e-9), small_model())
+    }
+
+    /// Big dense layers, short sequence — every extra call re-streams the
+    /// weights, so one call wins.
+    fn weight_heavy() -> PerfModel {
+        let model = ModelCfg {
+            name: "m".into(), vocab_size: 32000, d_model: 4096, n_layers: 32,
+            n_heads: 8, ffn_dim: 11008, max_seq: 64, prefill_len: 32,
+            gamma_max: 8, head_dim: 16,
+        };
+        PerfModel::new(device(188e12, 2e-5), model)
+    }
+
+    fn ctx<'a>(perf: &'a PerfModel, buckets: &'a [usize], elastic: bool) -> PlanCtx<'a> {
+        PlanCtx {
+            perf,
+            variant: "fp32",
+            n_layers: perf.model.n_layers,
+            full_bucket: *buckets.last().unwrap(),
+            verify_chunk: 9,
+            verify_buckets: buckets,
+            decode_buckets: buckets,
+            elastic,
+        }
+    }
+
+    fn rows_of(plan: &StepPlan) -> Vec<usize> {
+        let mut r: Vec<usize> =
+            plan.sub_batches.iter().flat_map(|sb| sb.rows.clone()).collect();
+        r.sort_unstable();
+        r
+    }
+
+    #[test]
+    fn best_bucket_edge_cases() {
+        assert_eq!(best_bucket(&[], 1), None, "no bucket large enough (none at all)");
+        assert_eq!(best_bucket(&[1, 2, 4], 2), Some(2), "exact fit");
+        assert_eq!(best_bucket(&[1, 2, 4], 3), Some(4), "next bucket up");
+        assert_eq!(best_bucket(&[1, 2, 4], 9), Some(4), "oversize group takes largest");
+        assert_eq!(best_bucket(&[4], 1), Some(4), "only a big bucket exported");
+    }
+
+    #[test]
+    fn oversize_group_splits_across_largest_bucket() {
+        let sbs =
+            pack(FnKind::Verify, 9, (0..10).collect(), &[1usize; 10], &[1, 2, 4]).unwrap();
+        assert_eq!(sbs.len(), 3, "10 rows over b4 -> 4+4+2");
+        assert_eq!(sbs[0].rows.len(), 4);
+        assert_eq!(sbs[1].rows.len(), 4);
+        assert_eq!(sbs[2].rows.len(), 2);
+        assert_eq!(sbs[2].bucket, 2, "tail picks the smallest fit");
+        let mut all: Vec<usize> = sbs.iter().flat_map(|s| s.rows.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>(), "no row lost or duplicated");
+    }
+
+    #[test]
+    fn packing_groups_similar_draft_lengths() {
+        // 4 rows over b2 buckets: the two long drafts share a call so the
+        // short call's tokens_used stays at 2, not 6.
+        let sbs = pack(FnKind::Verify, 9, vec![0, 1, 2, 3], &[5, 1, 5, 1], &[2]).unwrap();
+        assert_eq!(sbs.len(), 2);
+        assert_eq!(sbs[0].rows, vec![0, 2]);
+        assert_eq!(sbs[0].tokens_used, 6);
+        assert_eq!(sbs[1].rows, vec![1, 3]);
+        assert_eq!(sbs[1].tokens_used, 2);
+    }
+
+    #[test]
+    fn empty_bucket_list_errors_and_elastic_false_is_monolithic() {
+        let perf = kv_heavy();
+        let buckets = [1usize, 4];
+        let mut c = ctx(&perf, &buckets, false);
+        let plan = plan_step(&c, &[3, 0, 0]).unwrap();
+        assert_eq!(plan.sub_batches.len(), 1);
+        assert_eq!(plan.sub_batches[0].bucket, 4, "configured bucket, seed behavior");
+        assert_eq!(plan.modeled_s, plan.monolithic_s);
+
+        c.elastic = true;
+        c.verify_buckets = &[];
+        assert!(plan_step(&c, &[3]).is_err(), "drafting with no verify buckets");
+        assert!(plan_step(&c, &[]).is_err(), "empty step");
+    }
+
+    #[test]
+    fn occupancy_one_shrinks_to_the_small_bucket() {
+        for perf in [kv_heavy(), weight_heavy()] {
+            let buckets = [1usize, 4];
+            let c = ctx(&perf, &buckets, true);
+            let plan = plan_step(&c, &[3]).unwrap();
+            assert_eq!(plan.sub_batches.len(), 1);
+            assert_eq!(plan.sub_batches[0].bucket, 1, "1 row never reads 4 rows of KV");
+            assert_eq!(plan.sub_batches[0].fn_kind, FnKind::Verify);
+            assert!(plan.modeled_s < plan.monolithic_s);
+        }
+    }
+
+    #[test]
+    fn all_decode_rows_use_the_decode_function() {
+        let perf = kv_heavy();
+        let buckets = [1usize, 4];
+        let c = ctx(&perf, &buckets, true);
+        let plan = plan_step(&c, &[0, 0]).unwrap();
+        assert_eq!(plan.sub_batches.len(), 1);
+        assert_eq!(plan.sub_batches[0].fn_kind, FnKind::Decode);
+        assert_eq!(plan.sub_batches[0].chunk, 1);
+        assert_eq!(plan.sub_batches[0].bucket, 4, "2 rows need the b4 bucket here");
+        // the monolithic shape is already a decode call at b4 (seed
+        // behavior), so shrink cannot improve on it here
+        assert_eq!(plan.modeled_s, plan.monolithic_s);
+    }
+
+    #[test]
+    fn decode_rows_ride_spare_verify_capacity_for_free() {
+        // 1 verify + 1 decode row with buckets {2,4}: the verify call runs
+        // at b2 with a spare row, so the decode row rides along — one call.
+        let perf = weight_heavy();
+        let buckets = [2usize, 4];
+        let c = ctx(&perf, &buckets, true);
+        let plan = plan_step(&c, &[4, 0]).unwrap();
+        assert_eq!(plan.sub_batches.len(), 1);
+        let sb = &plan.sub_batches[0];
+        assert_eq!(sb.fn_kind, FnKind::Verify);
+        assert_eq!(sb.bucket, 2);
+        assert_eq!(rows_of(&plan), vec![0, 1]);
+        assert_eq!(sb.tokens_used, 5, "decode rider doesn't raise the max");
+        assert_eq!(sb.useful_tokens, 6, "5 verify positions + 1 decode position");
+        assert!(plan.modeled_s < plan.monolithic_s);
+    }
+
+    #[test]
+    fn mixed_step_splits_when_padding_is_dear_and_stays_single_when_weights_are() {
+        let buckets = [1usize, 2, 4];
+        let lens = [6usize, 0, 0, 0]; // 1 drafting row drags 3 decode rows
+
+        let pad = pad_heavy();
+        let c = ctx(&pad, &buckets, true);
+        let plan = plan_step(&c, &lens).unwrap();
+        assert!(plan.sub_batches.len() > 1, "pad-heavy: split {plan:?}");
+        assert!(plan.sub_batches.iter().any(|sb| sb.bucket < 4));
+        assert!(plan.sub_batches.iter().any(|sb| sb.fn_kind == FnKind::Decode));
+        assert!(
+            plan.sub_batches
+                .iter()
+                .filter(|sb| sb.fn_kind == FnKind::Decode)
+                .all(|sb| sb.rows.iter().all(|&i| lens[i] == 0)),
+            "a decode sub-batch never contains a drafting row"
+        );
+        assert_eq!(rows_of(&plan), vec![0, 1, 2, 3]);
+        assert!(plan.modeled_s < plan.monolithic_s);
+
+        let wh = weight_heavy();
+        let c = ctx(&wh, &buckets, true);
+        let plan = plan_step(&c, &lens).unwrap();
+        assert_eq!(
+            plan.sub_batches.len(), 1,
+            "weight-heavy: an extra call re-streams the weights, keep one"
+        );
+        assert_eq!(rows_of(&plan), vec![0, 1, 2, 3]);
+        assert!(plan.modeled_s <= plan.monolithic_s);
+    }
+
+    #[test]
+    fn unexported_configured_bucket_never_wins_the_plan() {
+        // Engine configured at b1 but verify only exported at b4: the
+        // monolithic b1 shape prices cheapest yet cannot execute — the
+        // planner must commit to the exported bucket instead.
+        let perf = kv_heavy();
+        let buckets = [4usize];
+        let mut c = ctx(&perf, &buckets, true);
+        c.full_bucket = 1;
+        let plan = plan_step(&c, &[3]).unwrap();
+        assert_eq!(plan.sub_batches.len(), 1);
+        assert_eq!(plan.sub_batches[0].bucket, 4, "must pick an exported bucket");
+    }
+
+    #[test]
+    fn chosen_plan_never_costs_more_than_monolithic() {
+        // sweep a grid of occupancy patterns under every cost regime
+        for perf in [kv_heavy(), pad_heavy(), weight_heavy()] {
+            let buckets = [1usize, 2, 4];
+            let c = ctx(&perf, &buckets, true);
+            for pat in [
+                vec![0], vec![5], vec![0, 0], vec![5, 0], vec![5, 5],
+                vec![5, 0, 0], vec![5, 5, 5, 5], vec![8, 4, 0, 2],
+            ] {
+                let plan = plan_step(&c, &pat).unwrap();
+                assert!(
+                    plan.modeled_s <= plan.monolithic_s + 1e-15,
+                    "plan for {pat:?} regressed: {plan:?}"
+                );
+                let mut rows = rows_of(&plan);
+                rows.dedup();
+                assert_eq!(rows, (0..pat.len()).collect::<Vec<_>>());
+            }
+        }
+    }
+}

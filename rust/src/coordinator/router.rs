@@ -44,8 +44,21 @@ enum Msg {
     Shutdown,
 }
 
+/// Per-bucket execution tally the elastic step planner produces (one entry
+/// per bucket the engine has executed at least one call at).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BucketStat {
+    pub bucket: usize,
+    /// Calls executed at this bucket.
+    pub calls: u64,
+    /// Mean rows actually carried per call at this bucket.
+    pub mean_rows: f64,
+}
+
 /// Lock-free counters the engine thread publishes after every step and any
-/// thread may read at any time (the server's `stats` endpoint).
+/// thread may read at any time (the server's `stats` endpoint). The
+/// per-bucket tallies are the one mutex-guarded piece; they are written only
+/// by the engine thread and read only by `stats`, never on the request path.
 #[derive(Default)]
 pub struct RouterStats {
     /// Submitted but not yet completed (queued + running).
@@ -62,12 +75,19 @@ pub struct RouterStats {
     pub occupancy_milli: AtomicU64,
     /// Mean scheduling delay, microseconds.
     pub sched_delay_us: AtomicU64,
+    /// Useful/executed positions over all decode/verify calls (ratio of
+    /// sums, not a mean of per-call ratios), fixed-point x1000.
+    pub chunk_eff_milli: AtomicU64,
+    /// Mean sub-batches per step, fixed-point x1000.
+    pub subbatches_milli: AtomicU64,
     pub completed: AtomicU64,
     pub cancelled: AtomicU64,
+    /// Per-bucket occupancy/calls published by the engine thread.
+    pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
 }
 
 /// Point-in-time view of [`RouterStats`].
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
     pub in_flight: usize,
     pub queue_depth: usize,
@@ -78,8 +98,14 @@ pub struct StatsSnapshot {
     pub batch_occupancy: f64,
     /// Mean seconds a request queued before admission.
     pub sched_delay_s: f64,
+    /// Useful/executed positions over all decode/verify calls.
+    pub chunk_efficiency: f64,
+    /// Mean sub-batches the planner executed per step.
+    pub subbatches_per_step: f64,
     pub completed: u64,
     pub cancelled: u64,
+    /// Per-bucket execution tallies, ascending by bucket.
+    pub buckets: Vec<BucketStat>,
 }
 
 impl StatsSnapshot {
@@ -92,8 +118,25 @@ impl StatsSnapshot {
             ("steps", Json::num(self.steps as f64)),
             ("batch_occupancy", Json::num(self.batch_occupancy)),
             ("sched_delay_s", Json::num(self.sched_delay_s)),
+            ("chunk_efficiency", Json::num(self.chunk_efficiency)),
+            ("subbatches_per_step", Json::num(self.subbatches_per_step)),
             ("completed", Json::num(self.completed as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
+            (
+                "buckets",
+                Json::arr(
+                    self.buckets
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("bucket", Json::num(b.bucket as f64)),
+                                ("calls", Json::num(b.calls as f64)),
+                                ("mean_rows", Json::num(b.mean_rows)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -252,8 +295,11 @@ impl EngineHandle {
             steps: s.steps.load(Ordering::Relaxed),
             batch_occupancy: s.occupancy_milli.load(Ordering::Relaxed) as f64 / 1e3,
             sched_delay_s: s.sched_delay_us.load(Ordering::Relaxed) as f64 / 1e6,
+            chunk_efficiency: s.chunk_eff_milli.load(Ordering::Relaxed) as f64 / 1e3,
+            subbatches_per_step: s.subbatches_milli.load(Ordering::Relaxed) as f64 / 1e3,
             completed: s.completed.load(Ordering::Relaxed),
             cancelled: s.cancelled.load(Ordering::Relaxed),
+            buckets: s.buckets.lock().unwrap().values().copied().collect(),
         }
     }
 
@@ -346,6 +392,35 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
             .sched_delay_us
             .store((h.mean() * 1e6) as u64, Ordering::Relaxed);
     }
+    // Ratio of position-count sums, matching `CallLog::chunk_efficiency`
+    // (a mean of per-call ratios would overweight small calls).
+    let executed = engine.metrics.counter(crate::metrics::names::EXECUTED_POSITIONS);
+    if executed > 0 {
+        let useful = engine.metrics.counter(crate::metrics::names::USEFUL_POSITIONS);
+        stats
+            .chunk_eff_milli
+            .store(useful * 1000 / executed, Ordering::Relaxed);
+    }
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::SUBBATCHES_PER_STEP) {
+        stats
+            .subbatches_milli
+            .store((h.mean() * 1e3) as u64, Ordering::Relaxed);
+    }
+    let mut buckets = stats.buckets.lock().unwrap();
+    for bucket in engine.plan_buckets() {
+        let calls = engine
+            .metrics
+            .counter(&crate::metrics::names::bucket_calls(bucket));
+        if calls == 0 {
+            continue;
+        }
+        let mean_rows = engine
+            .metrics
+            .hist(&crate::metrics::names::bucket_occupancy(bucket))
+            .map(|h| h.mean())
+            .unwrap_or(0.0);
+        buckets.insert(bucket, BucketStat { bucket, calls, mean_rows });
+    }
 }
 
 #[cfg(test)]
@@ -371,14 +446,29 @@ mod tests {
             steps: 10,
             batch_occupancy: 2.5,
             sched_delay_s: 0.012,
+            chunk_efficiency: 0.75,
+            subbatches_per_step: 1.25,
             completed: 7,
             cancelled: 1,
+            buckets: vec![
+                BucketStat { bucket: 1, calls: 3, mean_rows: 1.0 },
+                BucketStat { bucket: 4, calls: 7, mean_rows: 3.2 },
+            ],
         };
         let j = s.to_json();
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("batch").unwrap().as_i64().unwrap(), 4);
         assert!((j.get("batch_occupancy").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
         assert!((j.get("sched_delay_s").unwrap().as_f64().unwrap() - 0.012).abs() < 1e-9);
+        assert!((j.get("chunk_efficiency").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        assert!(
+            (j.get("subbatches_per_step").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-9
+        );
         assert_eq!(j.get("cancelled").unwrap().as_i64().unwrap(), 1);
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[1].get("bucket").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(buckets[1].get("calls").unwrap().as_i64().unwrap(), 7);
+        assert!((buckets[1].get("mean_rows").unwrap().as_f64().unwrap() - 3.2).abs() < 1e-9);
     }
 }

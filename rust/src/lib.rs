@@ -7,7 +7,13 @@
 //! * **L3 (this crate)** — request router, admission scheduler, continuous
 //!   batcher, prompt-lookup drafter, rejection-sampling verifier logic,
 //!   KV-cache manager, metrics and server. Python never runs on the request
-//!   path.
+//!   path. Each engine step runs a plan → gather → execute → scatter →
+//!   commit pipeline (`coordinator::plan`): active rows are partitioned into
+//!   sub-batches by required function (decode-only vs verify) and each
+//!   sub-batch executes through the cheapest exported batch bucket on the
+//!   cost model, so priced memory traffic tracks useful work instead of the
+//!   configured bucket — low-occupancy groups stop streaming idle KV rows
+//!   and decode-only rows stop paying full verify-chunk traffic.
 //!
 //! Threading model (serving path): pool workers in `server` share one
 //! `Sync` [`coordinator::EngineHandle`] with no outer lock; submissions

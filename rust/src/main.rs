@@ -43,6 +43,7 @@ fn real_main() -> Result<()> {
     .opt("gamma", Some("5"), "speculation depth cap")
     .opt("batch", Some("4"), "batch bucket (1 or 4)")
     .opt("sched", Some("fifo"), "admission policy: fifo | spf | priority")
+    .opt("plan", Some("elastic"), "step planning: elastic | monolithic")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -66,6 +67,11 @@ fn real_main() -> Result<()> {
         seed: 0,
         policy: SchedPolicy::parse(&sched)
             .ok_or_else(|| anyhow::anyhow!("unknown sched policy '{sched}'"))?,
+        elastic: match parsed.str("plan").as_str() {
+            "elastic" => true,
+            "monolithic" => false,
+            other => bail!("unknown plan mode '{other}' (elastic|monolithic)"),
+        },
     };
 
     match cmd.as_str() {

@@ -18,6 +18,34 @@ pub mod names {
     pub const BATCH_OCCUPANCY: &str = "batch_occupancy";
     /// Gauge: requests waiting in the scheduler.
     pub const QUEUE_DEPTH: &str = "queue_depth";
+    /// Histogram: useful-positions / executed-positions per decode/verify
+    /// call (1.0 = every executed position carried real work). A per-call
+    /// distribution — the aggregate served by the stats endpoint is the
+    /// ratio of the two position counters below, not this histogram's mean,
+    /// so small calls don't get overweighted.
+    pub const CHUNK_EFFICIENCY: &str = "chunk_efficiency";
+    /// Counter: positions that carried real work across decode/verify calls.
+    pub const USEFUL_POSITIONS: &str = "useful_positions";
+    /// Counter: positions executed (bucket x chunk) across decode/verify
+    /// calls, padding included.
+    pub const EXECUTED_POSITIONS: &str = "executed_positions";
+    /// Histogram: sub-batches the elastic planner executed per step
+    /// (1.0 = monolithic shape).
+    pub const SUBBATCHES_PER_STEP: &str = "subbatches_per_step";
+    /// Histogram: modeled seconds per step the chosen plan saves over the
+    /// monolithic configured-bucket call (>= 0 by planner invariant).
+    pub const PLANNED_SAVINGS_S: &str = "planned_savings_s";
+
+    /// Histogram name: rows actually carried per call executed at `bucket`
+    /// (per-bucket occupancy).
+    pub fn bucket_occupancy(bucket: usize) -> String {
+        format!("bucket_occupancy_b{bucket}")
+    }
+
+    /// Counter name: calls executed at `bucket`.
+    pub fn bucket_calls(bucket: usize) -> String {
+        format!("bucket_calls_b{bucket}")
+    }
 }
 
 /// Speculative-decoding bookkeeping the paper's tables are built from.

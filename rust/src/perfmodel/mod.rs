@@ -114,6 +114,22 @@ impl PerfModel {
         }
     }
 
+    /// Price a candidate execution plan: one `(bucket, tokens_used)` pair
+    /// per sub-batch, all at the same variant/depth. This is what the
+    /// engine's elastic step planner minimizes — each extra sub-batch pays a
+    /// fresh weight stream and launch, each larger bucket pays more KV and
+    /// activation traffic (Eq. 11/12's `M·bytes/BW` term scales with the
+    /// bucket actually executed, not the configured one).
+    pub fn plan_cost(&self, variant: &str, n_layers: usize,
+                     sub_batches: &[(usize, usize)]) -> f64 {
+        sub_batches
+            .iter()
+            .map(|&(bucket, tokens)| {
+                self.price_parts(variant, n_layers, bucket, tokens).total()
+            })
+            .sum()
+    }
+
     /// Price the drafter's own work. N-gram lookups are host-side and cost
     /// `drafter_cost_per_token_s`; pruned-model drafting is priced as real
     /// forward passes at the drafter's depth.
@@ -238,16 +254,37 @@ mod tests {
     }
 
     #[test]
+    fn smaller_bucket_cuts_kv_traffic_and_plan_cost_prices_sub_batches() {
+        let pm = pm();
+        let b4 = pm.price_parts("fp32", 6, 4, 6);
+        let b1 = pm.price_parts("fp32", 6, 1, 6);
+        assert!((b4.kv_s / b1.kv_s - 4.0).abs() < 1e-9, "kv bytes scale with bucket");
+        assert_eq!(b4.weight_s, b1.weight_s, "weights stream once regardless");
+        assert!(b1.total() < b4.total());
+        // plan_cost is the simple sum of its sub-batch call prices
+        let split = pm.plan_cost("fp32", 6, &[(1, 6), (1, 1)]);
+        let expect = pm.price_parts("fp32", 6, 1, 6).total()
+            + pm.price_parts("fp32", 6, 1, 1).total();
+        assert!((split - expect).abs() < 1e-15);
+        // occupancy-1 shrink: one b1 verify call beats the monolithic b4 one
+        assert!(pm.plan_cost("fp32", 6, &[(1, 6)]) < pm.plan_cost("fp32", 6, &[(4, 6)]));
+        // ...while splitting always pays an extra weight stream + launch
+        assert!(split > pm.plan_cost("fp32", 6, &[(1, 6)]));
+    }
+
+    #[test]
     fn run_time_sums_calls_and_draft_cost() {
         let pm = pm();
         let mut log = CallLog::default();
         log.record(CallRecord {
             variant: "fp32".into(), fn_kind: FnKind::Prefill, batch: 1,
-            n_layers: 6, active_rows: 1, tokens_used: 100, wall_s: 0.0,
+            n_layers: 6, active_rows: 1, tokens_used: 100, chunk_len: 128,
+            useful_tokens: 100, wall_s: 0.0,
         });
         log.record(CallRecord {
             variant: "fp32".into(), fn_kind: FnKind::Decode, batch: 1,
-            n_layers: 6, active_rows: 1, tokens_used: 1, wall_s: 0.0,
+            n_layers: 6, active_rows: 1, tokens_used: 1, chunk_len: 1,
+            useful_tokens: 1, wall_s: 0.0,
         });
         log.add_draft_cost(&DraftCost { lookup_tokens: 100, ..Default::default() });
         let total = pm.run_time(&log, None);

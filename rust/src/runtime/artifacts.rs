@@ -95,6 +95,14 @@ impl ModelEntry {
         b.sort_unstable();
         b
     }
+
+    /// Smallest exported bucket that fits `n` rows of a (variant, fn), or
+    /// the largest available when every bucket is smaller (the caller must
+    /// then split the group across calls). `None` when the (variant, fn) has
+    /// no exported buckets at all.
+    pub fn best_bucket(&self, variant: &str, fn_name: &str, n: usize) -> Option<usize> {
+        crate::coordinator::plan::best_bucket(&self.buckets(variant, fn_name), n)
+    }
 }
 
 /// Device constants for the simulated accelerator (DESIGN.md §1).
@@ -280,6 +288,18 @@ mod tests {
         assert!(me.artifact("w8a8", "verify", 1).is_err());
         assert!(m.model("nope").is_err());
         assert_eq!(me.buckets("fp32", "verify"), vec![1]);
+    }
+
+    #[test]
+    fn best_bucket_selects_smallest_fit_or_largest() {
+        let m = Manifest::from_json(Path::new("/tmp/x"), &sample_manifest()).unwrap();
+        let me = m.model("m").unwrap();
+        // only b1 exported: exact fit at 1, largest-available for oversize
+        assert_eq!(me.best_bucket("fp32", "verify", 1), Some(1));
+        assert_eq!(me.best_bucket("fp32", "verify", 3), Some(1));
+        // unknown (variant, fn): no buckets at all
+        assert_eq!(me.best_bucket("w8a8", "verify", 1), None);
+        assert_eq!(me.best_bucket("fp32", "decode", 1), None);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Per-model runtime: owns the weight stores and lazily-compiled
-//! executables for every (variant, fn, batch-bucket) the engine asks for.
+//! executables for every (variant, fn, batch-bucket) the engine asks for,
+//! plus a pool of bucket-shaped KV scratch caches so the per-step
+//! gather/run/scatter pipeline never allocates on the hot path.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -7,8 +9,13 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use super::artifacts::{Manifest, ModelCfg, ModelEntry};
+use super::artifacts::{CostModelCfg, Manifest, ModelCfg, ModelEntry};
 use super::client::{CompiledChunk, WeightStore, XlaRuntime};
+use super::tensor::Tensor;
+
+/// Max pooled scratch pairs per (n_layers, bucket) shape. Two is enough for
+/// the engine's one-in-flight execution; anything beyond is dropped.
+const SCRATCH_POOL_CAP: usize = 2;
 
 /// Handle to one loaded model (e.g. "qwen3-like"): weights resident on the
 /// device, executables compiled on first use and cached.
@@ -17,6 +24,15 @@ pub struct ModelRuntime {
     pub entry: ModelEntry,
     weights: RefCell<HashMap<String, Rc<WeightStore>>>, // npz path -> store
     execs: RefCell<HashMap<String, Rc<CompiledChunk>>>, // artifact name -> exec
+    /// Reusable KV cache pairs keyed by (n_layers, batch-bucket). Pooled
+    /// tensors are *dirty*: callers must overwrite every row they expect the
+    /// model to read (the gather path copies whole rows, so this holds by
+    /// construction; rows outside the gathered set only ever hold stale
+    /// finite values, which batch-independent per-row attention ignores).
+    scratch: RefCell<HashMap<(usize, usize), Vec<(Tensor<f32>, Tensor<f32>)>>>,
+    /// Device pricing constants, carried from the manifest so the engine's
+    /// step planner can cost candidate sub-batch plans without re-loading it.
+    cost_model: CostModelCfg,
     manifest_root: std::path::PathBuf,
 }
 
@@ -28,12 +44,25 @@ impl ModelRuntime {
             entry,
             weights: RefCell::new(HashMap::new()),
             execs: RefCell::new(HashMap::new()),
+            scratch: RefCell::new(HashMap::new()),
+            cost_model: manifest.cost_model.clone(),
             manifest_root: manifest.root.clone(),
         })
     }
 
     pub fn cfg(&self) -> &ModelCfg {
         &self.entry.cfg
+    }
+
+    /// Pricing constants of the simulated device this manifest targets.
+    pub fn cost_model(&self) -> &CostModelCfg {
+        &self.cost_model
+    }
+
+    /// Smallest exported bucket fitting `n` rows (see
+    /// [`ModelEntry::best_bucket`]).
+    pub fn best_bucket(&self, variant: &str, fn_name: &str, n: usize) -> Option<usize> {
+        self.entry.best_bucket(variant, fn_name, n)
     }
 
     /// Weight store for an artifact's npz (loaded once, shared).
@@ -71,8 +100,8 @@ impl ModelRuntime {
         fn_name: &str,
         batch: usize,
         tokens: &[i32],
-        k: &super::tensor::Tensor<f32>,
-        v: &super::tensor::Tensor<f32>,
+        k: &Tensor<f32>,
+        v: &Tensor<f32>,
         pos: &[i32],
     ) -> Result<super::client::ChunkOutput> {
         let chunk = self.chunk(variant, fn_name, batch)?;
@@ -85,13 +114,39 @@ impl ModelRuntime {
         &self,
         n_layers: usize,
         batch: usize,
-    ) -> (super::tensor::Tensor<f32>, super::tensor::Tensor<f32>) {
+    ) -> (Tensor<f32>, Tensor<f32>) {
         let cfg = &self.entry.cfg;
         let dims = [n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim];
-        (
-            super::tensor::Tensor::zeros(&dims),
-            super::tensor::Tensor::zeros(&dims),
-        )
+        (Tensor::zeros(&dims), Tensor::zeros(&dims))
+    }
+
+    /// Borrow a bucket-shaped KV scratch pair from the pool (allocating on
+    /// first use). Contents are *dirty* — see the `scratch` field docs.
+    /// Return it with [`ModelRuntime::return_scratch`] when done.
+    pub fn take_scratch(&self, n_layers: usize, batch: usize) -> (Tensor<f32>, Tensor<f32>) {
+        if let Some(pair) = self
+            .scratch
+            .borrow_mut()
+            .get_mut(&(n_layers, batch))
+            .and_then(Vec::pop)
+        {
+            return pair;
+        }
+        self.empty_cache(n_layers, batch)
+    }
+
+    /// Hand a scratch pair (or an advanced cache of the same shape) back to
+    /// the pool; dropped silently once the per-shape cap is reached.
+    pub fn return_scratch(&self, k: Tensor<f32>, v: Tensor<f32>) {
+        if k.dims.len() != 5 || k.dims != v.dims {
+            return; // not a cache-shaped pair; refuse silently
+        }
+        let key = (k.dims[0], k.dims[1]);
+        let mut pool = self.scratch.borrow_mut();
+        let slot = pool.entry(key).or_default();
+        if slot.len() < SCRATCH_POOL_CAP {
+            slot.push((k, v));
+        }
     }
 
     /// Number of executables compiled so far (diagnostics).

@@ -79,6 +79,36 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// Copy a set of axis-1 rows from `src` in one pass: `pairs[i] =
+    /// (dst_row, src_row)`. The bulk form of [`Tensor::copy_axis1_row_from`]
+    /// used by the KV gather/scatter path, where one chunk execution moves
+    /// several batch rows between the resident group cache and a
+    /// bucket-shaped scratch cache.
+    pub fn copy_axis1_rows(&mut self, pairs: &[(usize, usize)], src: &Tensor<T>) {
+        assert!(self.rank() >= 2 && src.rank() == self.rank());
+        assert_eq!(self.dims[0], src.dims[0], "axis0 mismatch");
+        assert_eq!(&self.dims[2..], &src.dims[2..], "trailing dims mismatch");
+        let inner: usize = self.dims[2..].iter().product();
+        let (db, sb) = (self.dims[1], src.dims[1]);
+        for &(d, s) in pairs {
+            assert!(d < db && s < sb, "row pair ({d},{s}) out of range ({db},{sb})");
+        }
+        for a0 in 0..self.dims[0] {
+            for &(d, s) in pairs {
+                let d_off = (a0 * db + d) * inner;
+                let s_off = (a0 * sb + s) * inner;
+                self.data[d_off..d_off + inner]
+                    .copy_from_slice(&src.data[s_off..s_off + inner]);
+            }
+        }
+    }
+
+    /// Reset every element to the default (pooled-scratch reuse without
+    /// reallocating).
+    pub fn zero(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = T::default());
+    }
+
     /// Zero a batch row (cache eviction).
     pub fn zero_axis1_row(&mut self, row: usize) {
         let inner: usize = self.dims[2..].iter().product();
@@ -141,6 +171,28 @@ mod tests {
         assert_eq!(dst.at(&[1, 2, 1]), 0);
         dst.zero_axis1_row(1);
         assert_eq!(dst.at(&[1, 1, 0]), 0);
+    }
+
+    #[test]
+    fn bulk_row_copy_matches_single_row_copies() {
+        let src = Tensor::from_vec((0..12).collect::<Vec<i32>>(), &[2, 3, 2]).unwrap();
+        let mut bulk = Tensor::<i32>::zeros(&[2, 4, 2]);
+        bulk.copy_axis1_rows(&[(0, 2), (3, 0)], &src);
+        let mut single = Tensor::<i32>::zeros(&[2, 4, 2]);
+        single.copy_axis1_row_from(0, &src, 2);
+        single.copy_axis1_row_from(3, &src, 0);
+        assert_eq!(bulk, single);
+        assert_eq!(bulk.at(&[0, 0, 0]), 4, "row 2 of src landed in row 0");
+        assert_eq!(bulk.at(&[1, 3, 1]), 7, "row 0 of src landed in row 3");
+        assert_eq!(bulk.at(&[0, 1, 0]), 0, "unmapped rows untouched");
+    }
+
+    #[test]
+    fn zero_resets_all_elements() {
+        let mut t = Tensor::from_vec(vec![1.0f32, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        t.zero();
+        assert!(t.data.iter().all(|&v| v == 0.0));
+        assert_eq!(t.dims, vec![2, 2]);
     }
 
     #[test]

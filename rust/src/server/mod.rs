@@ -8,7 +8,11 @@
 //!       "finish": "eos"}          (finish may also be "cancelled")
 //!   -> {"cmd": "ping"}            <- {"ok": true}
 //!   -> {"cmd": "stats"}           <- {"queue_depth": .., "batch_occupancy":
-//!                                     .., "sched_delay_s": .., ...}
+//!                                     .., "sched_delay_s": ..,
+//!                                     "chunk_efficiency": ..,
+//!                                     "subbatches_per_step": ..,
+//!                                     "buckets": [{"bucket": 1, "calls":
+//!                                     .., "mean_rows": ..}, ..], ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
 //! Threading model: each connection is handled by a pool worker, and workers

@@ -9,7 +9,8 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use quasar::coordinator::{DrafterKind, Engine, EngineConfig, GenParams};
+use quasar::coordinator::{DrafterKind, Engine, EngineConfig, FnKind, GenParams};
+use quasar::perfmodel::PerfModel;
 use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
 use quasar::spec::NgramConfig;
 use quasar::util::json;
@@ -49,13 +50,15 @@ fn integration_scenarios() {
 
 fn integration_scenarios_inner() {
     let Some(root) = artifacts_root() else { return };
-    let (_manifest, mr) = load_model(&root);
+    let (manifest, mr) = load_model(&root);
     eprintln!("== prefill_logits_match_python_goldens");
     prefill_logits_match_python_goldens(&mr);
     eprintln!("== speculative_greedy_equals_vanilla_greedy");
     speculative_greedy_equals_vanilla_greedy(&mr);
     eprintln!("== batched_serving_matches_single_request");
     batched_serving_matches_single_request(&mr);
+    eprintln!("== elastic_planner_matches_monolithic_and_prices_lower");
+    elastic_planner_matches_monolithic_and_prices_lower(&manifest, &mr);
     eprintln!("== pruned_drafter_runs_and_verifier_stays_lossless");
     pruned_drafter_runs_and_verifier_stays_lossless(&mr);
 }
@@ -119,6 +122,7 @@ fn speculative_greedy_equals_vanilla_greedy(mr: &Rc<ModelRuntime>) {
                 gamma: 4,
                 seed: 3,
                 policy: Default::default(),
+                elastic: true,
             };
             let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
             engine.submit(
@@ -158,6 +162,7 @@ fn batched_serving_matches_single_request(mr: &Rc<ModelRuntime>) {
             gamma: 3,
             seed: 1,
             policy: Default::default(),
+            elastic: true,
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         let mut ids = Vec::new();
@@ -181,6 +186,89 @@ fn batched_serving_matches_single_request(mr: &Rc<ModelRuntime>) {
     assert_eq!(single, batched, "batched vs single greedy outputs diverge");
 }
 
+fn elastic_planner_matches_monolithic_and_prices_lower(
+    manifest: &Manifest,
+    mr: &Rc<ModelRuntime>,
+) {
+    // A batch-4 group served below capacity with staggered budgets: the
+    // elastic planner must execute smaller buckets (occupancy < 4, and a
+    // drain tail at occupancy 1), commit greedy tokens bit-identical to the
+    // monolithic configured-bucket engine, and price the run lower on the
+    // simulated device.
+    let mr = mr.clone();
+    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
+    let prompts: Vec<Vec<i32>> = goldens
+        .as_arr()
+        .unwrap()
+        .iter()
+        .take(3)
+        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
+        .collect();
+
+    let run = |elastic: bool| {
+        let cfg = EngineConfig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Ngram(NgramConfig {
+                gamma: 3,
+                adaptive: false,
+                ..Default::default()
+            }),
+            batch: 4,
+            gamma: 3,
+            seed: 2,
+            policy: Default::default(),
+            elastic,
+        };
+        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
+        for (i, p) in prompts.iter().enumerate() {
+            engine.submit(
+                p.clone(),
+                GenParams {
+                    max_new: 8 + 8 * i, // staggered finishes -> draining tail
+                    stop_at_eos: false,
+                    ..GenParams::default()
+                },
+                "t",
+            );
+        }
+        let mut done = engine.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        let tokens: Vec<Vec<i32>> = done.into_iter().map(|c| c.tokens).collect();
+        (tokens, engine.call_log.clone())
+    };
+
+    let (mono_tokens, mono_log) = run(false);
+    let (ela_tokens, ela_log) = run(true);
+    assert_eq!(mono_tokens, ela_tokens, "elastic planning changed greedy output");
+
+    let full = 4usize;
+    assert!(
+        mono_log.records.iter().all(|r| r.fn_kind == FnKind::Prefill || r.batch == full),
+        "monolithic engine must stay at the configured bucket"
+    );
+    assert!(
+        ela_log
+            .records
+            .iter()
+            .any(|r| r.fn_kind != FnKind::Prefill && r.batch < full),
+        "elastic engine never used a smaller bucket"
+    );
+
+    let perf = PerfModel::new(manifest.cost_model.clone(), mr.cfg().clone());
+    let (t_mono, t_ela) = (perf.run_time(&mono_log, None), perf.run_time(&ela_log, None));
+    assert!(
+        t_ela < t_mono,
+        "elastic modeled time {t_ela} not below monolithic {t_mono}"
+    );
+    eprintln!(
+        "   modeled run: monolithic {t_mono:.6}s -> elastic {t_ela:.6}s \
+         ({:.1}% saved), chunk efficiency {:.2} -> {:.2}",
+        100.0 * (1.0 - t_ela / t_mono),
+        mono_log.chunk_efficiency(),
+        ela_log.chunk_efficiency(),
+    );
+}
+
 fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
     let mr = mr.clone();
     let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
@@ -194,6 +282,7 @@ fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
             gamma: 3,
             seed: 5,
             policy: Default::default(),
+            elastic: true,
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         engine.submit(

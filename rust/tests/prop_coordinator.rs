@@ -1,9 +1,15 @@
 //! Property tests over coordinator/spec invariants (pure logic — no PJRT),
 //! using the in-repo `util::prop` micro-framework.
 
-use quasar::coordinator::{BatchGroup, GenParams, Priority, Request, SchedPolicy, Scheduler};
+use std::collections::BTreeMap;
+
+use quasar::coordinator::{
+    plan_step, BatchGroup, CallLog, CallRecord, FnKind, GenParams, PlanCtx, Priority, Request,
+    SchedPolicy, Scheduler,
+};
+use quasar::perfmodel::PerfModel;
 use quasar::prop_assert;
-use quasar::runtime::Tensor;
+use quasar::runtime::{CostModelCfg, ModelCfg, Tensor};
 use quasar::spec::{verify_draft, Draft, NgramIndex};
 use quasar::util::prop::{ok, prop_check};
 use quasar::util::rng::Pcg;
@@ -312,4 +318,344 @@ fn tokenizer_roundtrips_vocab_sentences() {
             ok()
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Elastic-plan equivalence: gather -> execute -> scatter through planned
+// sub-batches must commit token streams bit-identical to the monolithic
+// full-bucket step. The "model" here is a deterministic mock chunk function
+// over real BatchGroup / Tensor movement, so the property exercises the
+// actual planning and KV row plumbing without PJRT.
+// ---------------------------------------------------------------------
+
+const SIM_L: usize = 2;
+const SIM_H: usize = 2;
+const SIM_S: usize = 64;
+const SIM_HD: usize = 2;
+const SIM_VOCAB: usize = 4;
+const SIM_CHUNK: usize = 5; // verify chunk (gamma 4)
+
+fn sim_device(bf16_ops: f64, launch_s: f64) -> CostModelCfg {
+    CostModelCfg {
+        device: "sim".into(),
+        hbm_bw_bytes_per_s: 1.6e12,
+        int8_ops_per_s: 2.0 * bf16_ops,
+        bf16_ops_per_s: bf16_ops,
+        bytes_per_weight: BTreeMap::from([("fp32".to_string(), 2.0)]),
+        kernel_launch_s: launch_s,
+        drafter_cost_per_token_s: 1e-6,
+    }
+}
+
+fn sim_model_cfg(d_model: usize, max_seq: usize) -> ModelCfg {
+    ModelCfg {
+        name: "sim".into(), vocab_size: 64, d_model, n_layers: SIM_L,
+        n_heads: 8, ffn_dim: 2 * d_model, max_seq, prefill_len: 16,
+        gamma_max: SIM_CHUNK - 1, head_dim: 64,
+    }
+}
+
+/// Three pricing regimes so the planner's *choice* varies across cases
+/// while correctness must not: KV-bound (shrinks), compute-starved
+/// (splits), weight-bound (stays monolithic-shaped).
+fn sim_perf(sel: u64) -> PerfModel {
+    match sel % 3 {
+        0 => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(32, 4096)),
+        1 => PerfModel::new(sim_device(1e12, 1e-9), sim_model_cfg(32, 4096)),
+        _ => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(2048, 64)),
+    }
+}
+
+fn tset(t: &mut Tensor<f32>, idx: &[usize], val: f32) {
+    let strides = t.strides();
+    let off: usize = idx.iter().zip(&strides).map(|(&i, &s)| i * s).sum();
+    t.data[off] = val;
+}
+
+/// Deterministic row-independent "transformer chunk": writes each row's
+/// tokens into the cache at `pos..pos+chunk` (every layer/head/dim carries
+/// the token value) and emits one-hot logits whose argmax depends on the
+/// row's entire cache prefix — so a wrong row map, stale gather, or wrong
+/// position offset changes the output stream.
+fn mock_chunk(
+    k: &mut Tensor<f32>,
+    v: &mut Tensor<f32>,
+    tokens: &[i32],
+    pos: &[i32],
+    bucket: usize,
+    chunk: usize,
+) -> Tensor<f32> {
+    let mut logits = Tensor::<f32>::zeros(&[bucket, chunk, SIM_VOCAB]);
+    for r in 0..bucket {
+        let p0 = pos[r] as usize;
+        for j in 0..chunk {
+            let t = tokens[r * chunk + j] as f32;
+            for l in 0..SIM_L {
+                for h in 0..SIM_H {
+                    for d in 0..SIM_HD {
+                        tset(k, &[l, r, h, p0 + j, d], t);
+                        tset(v, &[l, r, h, p0 + j, d], t + 0.5);
+                    }
+                }
+            }
+            let prefix: f32 = (0..=p0 + j).map(|p| k.at(&[0, r, 0, p, 0])).sum();
+            // rem_euclid: padding rows of a dirty scratch can sum negative
+            let next = (prefix as i64 * 31 + (p0 + j) as i64 * 7)
+                .rem_euclid(SIM_VOCAB as i64) as usize;
+            tset(&mut logits, &[r, j, next], 1.0);
+        }
+    }
+    logits
+}
+
+struct SimReq {
+    row: usize,
+    committed: Vec<i32>,
+    cached: usize,
+}
+
+/// Minimal engine over the mock chunk: monolithic mode reproduces the
+/// pre-planner step (one full-bucket call, whole-cache adopt), elastic mode
+/// runs the real plan -> gather -> execute -> scatter pipeline.
+struct Sim {
+    group: BatchGroup,
+    reqs: Vec<SimReq>,
+    log: CallLog,
+    perf: PerfModel,
+    full: usize,
+    elastic: bool,
+}
+
+impl Sim {
+    fn new(n_req: usize, full: usize, perf: PerfModel, elastic: bool) -> Sim {
+        let mut group = BatchGroup::new(SIM_L, full, SIM_H, SIM_S, SIM_HD);
+        let mut reqs = Vec::new();
+        for i in 0..n_req {
+            let prompt_tok = (i % SIM_VOCAB) as i32;
+            let mut k1 = Tensor::<f32>::zeros(&[SIM_L, 1, SIM_H, SIM_S, SIM_HD]);
+            let mut v1 = k1.clone();
+            for l in 0..SIM_L {
+                for h in 0..SIM_H {
+                    for d in 0..SIM_HD {
+                        tset(&mut k1, &[l, 0, h, 0, d], prompt_tok as f32);
+                        tset(&mut v1, &[l, 0, h, 0, d], prompt_tok as f32 + 0.5);
+                    }
+                }
+            }
+            let row = group.join(i, &k1, &v1).unwrap();
+            reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
+        }
+        Sim { group, reqs, log: CallLog::default(), perf, full, elastic }
+    }
+
+    fn commit(req: &mut SimReq, draft: &[i32], logits: &Tensor<f32>, lrow: usize) {
+        let d = Draft::point_mass(draft.to_vec());
+        let out = verify_draft(&d, |j| logits.row(&[lrow, j]), 0.0, &mut Pcg::seeded(0));
+        let mut commit: Vec<i32> = d.tokens[..out.accepted].to_vec();
+        commit.push(out.next_token);
+        req.cached += commit.len();
+        req.committed.extend_from_slice(&commit);
+    }
+
+    fn record(&mut self, fn_kind: FnKind, bucket: usize, chunk: usize, rows: usize,
+              tokens_used: usize, useful: usize) {
+        self.log.record(CallRecord {
+            variant: "fp32".into(),
+            fn_kind,
+            batch: bucket,
+            n_layers: SIM_L,
+            active_rows: rows,
+            tokens_used,
+            chunk_len: chunk,
+            useful_tokens: useful,
+            wall_s: 0.0,
+        });
+    }
+
+    fn step(&mut self, drafts: &[Vec<i32>]) {
+        assert_eq!(drafts.len(), self.reqs.len());
+        if self.elastic {
+            self.step_elastic(drafts)
+        } else {
+            self.step_mono(drafts)
+        }
+    }
+
+    /// Seed-engine shape: one call at the configured bucket, token block
+    /// indexed by group row, whole-cache adopt.
+    fn step_mono(&mut self, drafts: &[Vec<i32>]) {
+        let any = drafts.iter().any(|d| !d.is_empty());
+        let (fn_kind, chunk) = if any { (FnKind::Verify, SIM_CHUNK) } else { (FnKind::Decode, 1) };
+        let b = self.full;
+        let mut tokens = vec![0i32; b * chunk];
+        let mut pos = vec![0i32; b];
+        for (req, draft) in self.reqs.iter().zip(drafts) {
+            tokens[req.row * chunk] = *req.committed.last().unwrap();
+            for (j, &t) in draft.iter().enumerate().take(chunk - 1) {
+                tokens[req.row * chunk + 1 + j] = t;
+            }
+            pos[req.row] = req.cached as i32;
+        }
+        let mut k = self.group.k.clone();
+        let mut v = self.group.v.clone();
+        let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk);
+        self.group.k = k; // whole-cache adopt, garbage rows included
+        self.group.v = v;
+        let used = drafts.iter().map(|d| d.len() + 1).max().unwrap_or(1);
+        let useful: usize = drafts.iter().map(|d| d.len() + 1).sum();
+        self.record(fn_kind, b, chunk, self.reqs.len(), used, useful);
+        for (i, draft) in drafts.iter().enumerate() {
+            let lrow = self.reqs[i].row;
+            Self::commit(&mut self.reqs[i], draft, &logits, lrow);
+        }
+    }
+
+    /// The refactored shape: plan, then gather/execute/scatter per
+    /// sub-batch against dirty scratch caches.
+    fn step_elastic(&mut self, drafts: &[Vec<i32>]) {
+        let lens: Vec<usize> = drafts.iter().map(Vec::len).collect();
+        let buckets = [1usize, 2, 4];
+        let plan = {
+            let ctx = PlanCtx {
+                perf: &self.perf,
+                variant: "fp32",
+                n_layers: SIM_L,
+                full_bucket: self.full,
+                verify_chunk: SIM_CHUNK,
+                verify_buckets: &buckets,
+                decode_buckets: &buckets,
+                elastic: true,
+            };
+            plan_step(&ctx, &lens).unwrap()
+        };
+        assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
+        for sb in &plan.sub_batches {
+            let (bucket, chunk) = (sb.bucket, sb.chunk);
+            let row_map: Vec<usize> = sb.rows.iter().map(|&di| self.reqs[di].row).collect();
+            // dirty pooled scratch: gather must overwrite everything read
+            let mut sk = Tensor::<f32>::zeros(&[SIM_L, bucket, SIM_H, SIM_S, SIM_HD]);
+            sk.data.iter_mut().for_each(|x| *x = -7.0);
+            let mut sv = sk.clone();
+            self.group.gather_rows(&row_map, &mut sk, &mut sv).unwrap();
+            let mut tokens = vec![0i32; bucket * chunk];
+            let mut pos = vec![0i32; bucket];
+            for (i, &di) in sb.rows.iter().enumerate() {
+                let req = &self.reqs[di];
+                tokens[i * chunk] = *req.committed.last().unwrap();
+                for (j, &t) in drafts[di].iter().enumerate().take(chunk - 1) {
+                    tokens[i * chunk + 1 + j] = t;
+                }
+                pos[i] = req.cached as i32;
+            }
+            let logits = mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk);
+            self.group.scatter_rows(&row_map, &sk, &sv).unwrap();
+            self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
+                        sb.useful_tokens);
+            for (i, &di) in sb.rows.iter().enumerate() {
+                Self::commit(&mut self.reqs[di], &drafts[di], &logits, i);
+            }
+        }
+    }
+}
+
+/// Drive monolithic and elastic sims with identical drafts; compare streams
+/// and the committed cache prefix of every leased row.
+fn run_equivalence(n_req: usize, perf_sel: u64, seed: u64, steps: usize) -> (Sim, Sim) {
+    let full = 4usize;
+    let mut mono = Sim::new(n_req, full, sim_perf(perf_sel), false);
+    let mut ela = Sim::new(n_req, full, sim_perf(perf_sel), true);
+    let mut rng = Pcg::seeded(seed ^ 0xE1A5);
+    for _ in 0..steps {
+        let drafts: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| {
+                let len = rng.usize_below(SIM_CHUNK);
+                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+            })
+            .collect();
+        mono.step(&drafts);
+        ela.step(&drafts);
+    }
+    (mono, ela)
+}
+
+fn check_equivalent(mono: &Sim, ela: &Sim) -> Result<(), String> {
+    for (i, (m, e)) in mono.reqs.iter().zip(&ela.reqs).enumerate() {
+        prop_assert!(
+            m.committed == e.committed,
+            "req {i} streams diverged:\n  mono {:?}\n  ela  {:?}",
+            m.committed, e.committed
+        );
+        prop_assert!(m.cached == e.cached, "req {i} cached diverged");
+        // committed KV prefix must be bit-identical (positions beyond
+        // `cached` hold unread speculative leftovers and may differ)
+        for l in 0..SIM_L {
+            for h in 0..SIM_H {
+                for p in 0..m.cached {
+                    for d in 0..SIM_HD {
+                        let a = mono.group.k.at(&[l, m.row, h, p, d]);
+                        let b = ela.group.k.at(&[l, e.row, h, p, d]);
+                        prop_assert!(a == b, "req {i} kv prefix diverged at {l}/{h}/{p}/{d}");
+                        let a = mono.group.v.at(&[l, m.row, h, p, d]);
+                        let b = ela.group.v.at(&[l, e.row, h, p, d]);
+                        prop_assert!(a == b, "req {i} v prefix diverged at {l}/{h}/{p}/{d}");
+                    }
+                }
+            }
+        }
+    }
+    ok()
+}
+
+#[test]
+fn elastic_plan_commits_identical_streams_to_monolithic() {
+    prop_check(
+        "plan/gather/execute/scatter == monolithic full-bucket step",
+        150,
+        |rng| (1 + rng.below(4), rng.below(3), rng.next_u64()),
+        |&(n_req, perf_sel, seed)| {
+            let (mono, ela) = run_equivalence(n_req.max(1) as usize, perf_sel, seed, 5);
+            check_equivalent(&mono, &ela)
+        },
+    );
+}
+
+#[test]
+fn mixed_workload_splits_into_cheaper_sub_batches() {
+    // Acceptance scenario: 3 rows in a batch-4 group, one drafting and two
+    // decode-only, on the compute-starved device. The elastic engine must
+    // execute at least one step as multiple sub-batches with buckets below
+    // the configured one, commit identical tokens, and price below the
+    // monolithic call log under PerfModel::run_time.
+    let perf_sel = 1u64; // pad-heavy pricing regime
+    let full = 4usize;
+    let perf = sim_perf(perf_sel);
+    let mut mono = Sim::new(3, full, sim_perf(perf_sel), false);
+    let mut ela = Sim::new(3, full, sim_perf(perf_sel), true);
+    let mut rng = Pcg::seeded(0xD1CE);
+    for _ in 0..4 {
+        // row 0 always drafts a full-depth guess; rows 1-2 never draft
+        let draft: Vec<i32> =
+            (0..SIM_CHUNK - 1).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect();
+        let drafts = vec![draft, Vec::new(), Vec::new()];
+        mono.step(&drafts);
+        ela.step(&drafts);
+    }
+    check_equivalent(&mono, &ela).unwrap();
+
+    // every monolithic step ran one call at the configured bucket
+    assert!(mono.log.records.iter().all(|r| r.batch == full));
+    assert_eq!(mono.log.records.len(), 4);
+    // the planner split: more calls than steps, and smaller buckets
+    assert!(ela.log.records.len() > 4, "expected multi-sub-batch steps");
+    assert!(ela.log.records.iter().all(|r| r.batch < full));
+    assert!(ela.log.records.iter().any(|r| r.fn_kind == FnKind::Decode));
+    // and the executed plan prices strictly below the monolithic log
+    let t_mono = perf.run_time(&mono.log, None);
+    let t_ela = perf.run_time(&ela.log, None);
+    assert!(
+        t_ela < t_mono,
+        "elastic modeled time {t_ela} not below monolithic {t_mono}"
+    );
+    // chunk efficiency improves: decode rows no longer pad the verify chunk
+    assert!(ela.log.chunk_efficiency() > mono.log.chunk_efficiency());
 }
