@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use quasar::bench::BenchCtx;
-use quasar::coordinator::{EngineConfig, EngineHandle};
+use quasar::coordinator::{EngineConfig, EngineHandle, GovernorConfig};
 use quasar::server::{serve, Client};
 use quasar::util::cli::Cli;
 use quasar::util::hist::Histogram;
@@ -49,6 +49,7 @@ fn run() -> anyhow::Result<()> {
         .opt("max-new", Some("48"), "tokens per request")
         .opt("temp", Some("0"), "sampling temperature")
         .opt("method", Some("both"), "ngram | quasar | both")
+        .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
         .parse_env();
     let n = args.usize("n");
     let clients = args.usize("clients").max(1);
@@ -56,19 +57,25 @@ fn run() -> anyhow::Result<()> {
     let max_new = args.usize("max-new");
     let temp = args.f64("temp");
     let method = args.str("method");
+    let governor = args.has("governor");
 
     // xla_extension tolerates exactly one PJRT client per process, so the
     // two-method comparison re-execs this binary once per method.
     if method == "both" {
         let exe = std::env::current_exe()?;
         for m in ["ngram", "quasar"] {
-            let status = std::process::Command::new(&exe)
-                .args(["--method", m, "--n", &n.to_string(),
-                       "--clients", &clients.to_string(),
-                       "--batch", &batch.to_string(),
-                       "--max-new", &max_new.to_string(),
-                       "--temp", &temp.to_string()])
-                .status()?;
+            let mut argv: Vec<String> = ["--method", m, "--n", &n.to_string(),
+                   "--clients", &clients.to_string(),
+                   "--batch", &batch.to_string(),
+                   "--max-new", &max_new.to_string(),
+                   "--temp", &temp.to_string()]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+            if governor {
+                argv.push("--governor".into());
+            }
+            let status = std::process::Command::new(&exe).args(&argv).status()?;
             anyhow::ensure!(status.success(), "{m} run failed");
         }
         println!("\n(CPU wall includes one-time artifact compilation; the \
@@ -89,11 +96,17 @@ fn run() -> anyhow::Result<()> {
     let artifacts = std::env::var("QUASAR_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".into());
 
-    let (name, cfg) = match method.as_str() {
+    let (name, mut cfg) = match method.as_str() {
         "ngram" => ("ngram/fp32 (baseline)", EngineConfig::ngram(batch, 5)),
         "quasar" => ("quasar/w8a8", EngineConfig::quasar(batch, 5)),
         other => anyhow::bail!("unknown --method {other}"),
     };
+    if governor {
+        // Inert for ngram (primary already is the fp32 reference); for
+        // quasar it audits w8a8 verification online and demotes drifting
+        // request classes to fp32.
+        cfg.governor = GovernorConfig::on();
+    }
     let handle = EngineHandle::spawn(
         artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n.max(1),
     )?;
@@ -171,6 +184,24 @@ fn run() -> anyhow::Result<()> {
                  b.get("bucket")?.as_i64()?,
                  b.get("calls")?.as_i64()?,
                  b.get("mean_rows")?.as_f64()?);
+    }
+    for v in stats.get("variants")?.as_arr()? {
+        println!("  variant {:<12}{} calls",
+                 v.get("variant")?.as_str()?,
+                 v.get("calls")?.as_i64()?);
+    }
+    if governor {
+        let gov = stats.get("governor")?;
+        println!("  governor            {} audits ({:.0}% of eligible), top-1 agreement {:.3}, \
+                  accept delta {:+.3}",
+                 gov.get("audits")?.as_i64()?,
+                 gov.get("audit_rate")?.as_f64()? * 100.0,
+                 gov.get("top1_agreement")?.as_f64()?,
+                 gov.get("accept_delta")?.as_f64()?);
+        println!("                      {} probes, demotions {}, promotions {}",
+                 gov.get("probes")?.as_i64()?,
+                 gov.get("demotions")?.as_i64()?,
+                 gov.get("promotions")?.as_i64()?);
     }
     println!("  sched delay (mean)  {:.1}ms",
              stats.get("sched_delay_s")?.as_f64()? * 1e3);

@@ -1,14 +1,19 @@
 //! Speculation-depth sweep: how L and the modeled speedup respond to gamma,
 //! for both verifier variants (companion to the Table 3 bench) — plus an
 //! occupancy sweep showing the elastic step planner's modeled-traffic win
-//! when a batched group runs below capacity.
+//! when a batched group runs below capacity, and a fidelity-governor
+//! agreement-threshold sweep showing what the online audit safety net costs
+//! at each floor.
 //!
 //! Run: `cargo run --release --example sweep_gamma -- [--task gsm8k]`
 
+use std::rc::Rc;
+
 use quasar::bench::{prompts_for, run_method, speed, BenchCtx, TableWriter};
-use quasar::coordinator::{DrafterKind, EngineConfig};
+use quasar::coordinator::{DrafterKind, Engine, EngineConfig, FnKind, GovernorConfig};
 use quasar::spec::NgramConfig;
 use quasar::util::cli::Cli;
+use quasar::workload::bench_params;
 
 fn main() {
     quasar::util::bigstack::run(|| {
@@ -44,6 +49,7 @@ fn run() -> anyhow::Result<()> {
             seed: 0,
             policy: Default::default(),
             elastic: true,
+            governor: Default::default(),
         };
         let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
         let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;
@@ -83,6 +89,47 @@ fn run() -> anyhow::Result<()> {
     println!(
         "\n(Elastic and monolithic runs commit identical greedy tokens; the\n\
          saving is modeled memory traffic on the simulated device.)"
+    );
+
+    // ---- fidelity-governor agreement-threshold sweep --------------------
+    // The governor shadow-audits a sampled fraction of w8a8 verify
+    // sub-batches against fp32 and demotes a request class whose top-1
+    // agreement EWMA sinks below the floor. On a healthy verifier no floor
+    // should trigger a demotion; the table shows what the safety net costs
+    // (audit overhead inside the modeled decode time) as the floor — and
+    // the audit rate backing it — tighten.
+    let mut gov_table = TableWriter::new(
+        "fidelity governor agreement-floor sweep (quasar, gamma 5)",
+        &["floor", "audit rate", "modeled decode", "audit overhead", "audits", "demotions"],
+    );
+    for (floor, audit_rate) in [(0.90, 0.125), (0.95, 0.25), (0.98, 0.25), (0.995, 0.5)] {
+        let cfg = EngineConfig {
+            governor: GovernorConfig {
+                enabled: true,
+                floor,
+                audit_rate,
+                ..Default::default()
+            },
+            ..EngineConfig::quasar(1, 5)
+        };
+        let mut engine = Engine::new(Rc::clone(&mr), cfg)?;
+        for it in &items {
+            engine.submit(it.prompt_ids.clone(), bench_params(0.0, 48), &it.task);
+        }
+        engine.run_to_completion()?;
+        gov_table.row(vec![
+            format!("{floor}"),
+            format!("{audit_rate}"),
+            format!("{:.4}s", perf.decode_time(&engine.call_log, None)),
+            format!("{:.4}s", perf.audit_time(&engine.call_log)),
+            engine.call_log.calls(FnKind::Audit).to_string(),
+            engine.governor().demotions.to_string(),
+        ]);
+    }
+    gov_table.print();
+    println!(
+        "\n(A healthy w8a8 verifier never demotes; the audit overhead is the\n\
+         modeled price of continuously proving the paper's top-1 criterion.)"
     );
     Ok(())
 }

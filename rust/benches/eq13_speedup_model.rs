@@ -35,6 +35,7 @@ fn run() -> anyhow::Result<()> {
                 seed: 0,
                 policy: Default::default(),
                 elastic: true,
+                governor: Default::default(),
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

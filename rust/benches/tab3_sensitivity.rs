@@ -24,6 +24,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         seed: 0,
         policy: Default::default(),
         elastic: true,
+        governor: Default::default(),
     }
 }
 

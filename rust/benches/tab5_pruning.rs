@@ -38,6 +38,7 @@ fn run() -> anyhow::Result<()> {
             seed: 0,
             policy: Default::default(),
             elastic: true,
+            governor: Default::default(),
         };
         let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
         table.row(vec![

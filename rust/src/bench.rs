@@ -100,14 +100,16 @@ impl MethodResult {
     }
 }
 
-/// Pruned drafter depth for perfmodel pricing, when the method uses one.
-fn pruned_layers(mr: &Rc<ModelRuntime>, cfg: &EngineConfig) -> Option<usize> {
+/// Pruned drafter (artifact variant, depth) for perfmodel pricing, when the
+/// method uses one — the drafter's calls are priced at its *own* variant's
+/// bytes/weight, not fp32's.
+fn pruned_pricing(mr: &Rc<ModelRuntime>, cfg: &EngineConfig) -> Option<(String, usize)> {
     match &cfg.drafter {
         DrafterKind::Pruned(v) => mr
             .entry
             .artifact(v, "decode", 1)
             .ok()
-            .map(|a| a.n_layers),
+            .map(|a| (v.clone(), a.n_layers)),
         _ => None,
     }
 }
@@ -122,7 +124,7 @@ pub fn run_method(
     max_new: usize,
 ) -> Result<MethodResult> {
     let method = cfg.method_name();
-    let pl = pruned_layers(mr, &cfg);
+    let pl = pruned_pricing(mr, &cfg);
     let mut engine = Engine::new(Rc::clone(mr), cfg)?;
     for it in items {
         engine.submit(it.prompt_ids.clone(), bench_params(temp, max_new), &it.task);
@@ -135,7 +137,7 @@ pub fn run_method(
         tokens += c.tokens.len() as u64;
     }
     let log = &engine.call_log;
-    let modeled_s = perf.decode_time(log, pl);
+    let modeled_s = perf.decode_time(log, pl.as_ref().map(|(v, n)| (v.as_str(), *n)));
     let wall_s: f64 = log
         .records
         .iter()

@@ -12,6 +12,11 @@ pub enum FnKind {
     Prefill,
     Decode,
     Verify,
+    /// A fidelity-governor shadow call: the same chunk re-executed at the
+    /// other precision variant for top-1 comparison. Its output is
+    /// discarded (never committed, never scattered), but the call is real
+    /// traffic and is priced like any verify/decode call of its variant.
+    Audit,
 }
 
 impl FnKind {
@@ -20,6 +25,7 @@ impl FnKind {
             FnKind::Prefill => "prefill",
             FnKind::Decode => "decode",
             FnKind::Verify => "verify",
+            FnKind::Audit => "audit",
         }
     }
 }
@@ -101,11 +107,13 @@ impl CallLog {
     /// Aggregate chunk efficiency (useful / executed positions) over the
     /// decode+verify calls of the run — the serving-layer waste the elastic
     /// planner attacks. Prefill is excluded: its fill ratio is a property of
-    /// the workload's prompt lengths, not of step planning.
+    /// the workload's prompt lengths, not of step planning. Governor audit
+    /// calls are excluded too: they re-execute already-counted positions,
+    /// so including them would double-count the same useful work.
     pub fn chunk_efficiency(&self) -> f64 {
         let (mut useful, mut executed) = (0usize, 0usize);
         for r in &self.records {
-            if r.fn_kind == FnKind::Prefill {
+            if matches!(r.fn_kind, FnKind::Prefill | FnKind::Audit) {
                 continue;
             }
             useful += r.useful_tokens;

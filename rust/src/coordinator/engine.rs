@@ -8,15 +8,20 @@
 //!               requests into free rows)
 //!   -> draft   (per active row, via its drafter)
 //!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
-//!               required function — decode-only vs verify — and pick each
-//!               sub-batch's cheapest exported batch bucket on the cost
-//!               model; see `coordinator::plan` for the invariants)
+//!               required function — decode-only vs verify — *and* by the
+//!               verifier variant each row's request class resolved to, and
+//!               pick each sub-batch's cheapest exported (bucket, variant)
+//!               pair on the cost model; see `coordinator::plan` for the
+//!               invariants)
 //!   -> execute (per sub-batch: gather leased KV rows into a pooled
-//!               bucket-shaped scratch cache, run the chunk on the verifier
-//!               variant — `fp32` for the paper's Ngram baseline, `w8a8`
-//!               for Quasar — then scatter the advanced rows back)
+//!               bucket-shaped scratch cache, run the chunk on the
+//!               sub-batch's variant — `fp32` for the paper's Ngram
+//!               baseline, `w8a8` for Quasar — then scatter the advanced
+//!               rows back; a sampled fraction of governed sub-batches is
+//!               shadow re-verified at the other precision first)
 //!   -> commit  (rejection sampling Eq. 2-3, acceptance bookkeeping,
-//!               finish handling; per sub-batch, in plan order)
+//!               audit agreement fed to the governor, finish handling; per
+//!               sub-batch, in plan order)
 //!
 //! The planner is what keeps memory traffic proportional to *useful* work: a
 //! batch-4 group at occupancy 1 verifies through the batch-1 bucket instead
@@ -24,6 +29,36 @@
 //! verify chunk when a separate 1-token decode call prices cheaper.
 //! `EngineConfig::elastic = false` pins the monolithic configured-bucket
 //! call (the pre-planner behavior) for equivalence tests and A/B benches.
+//!
+//! ## Adaptive-precision verification (the fidelity governor)
+//!
+//! Verification *precision* is a per-request-class runtime decision, not a
+//! construction-time pin. With `EngineConfig::governor.enabled`, the engine
+//! owns a [`Governor`] whose per-class state machine decides, each step,
+//! whether a class's calls (prefill, decode, verify) execute the primary
+//! (typically `w8a8`) variant or the full-precision reference:
+//!
+//! * **Healthy** classes run the primary variant; a sampled fraction of
+//!   their sub-batches is shadow re-verified against the reference (same
+//!   tokens, same pre-advance KV; the shadow's advanced cache is discarded,
+//!   so audits never touch committed state, request RNGs, or drafts).
+//! * A class whose top-1 agreement EWMA sinks below the configured floor
+//!   (after the hysteresis window) **demotes**: its calls run the reference
+//!   variant. Requests *admitted after* the demotion are bit-exact
+//!   full-precision end to end (their prefill already runs the reference);
+//!   a request mid-generation at demotion time keeps its quantized-history
+//!   KV prefix, so only its remaining steps gain full-precision logits.
+//! * Demoted classes are periodically **probed** (the quantized variant
+//!   shadows the reference call) and re-promote once agreement recovers
+//!   above floor + margin.
+//!
+//! Invariants: shadow calls are logged as [`FnKind::Audit`] and priced like
+//! real traffic but never scattered or committed; the variant a step *plans*
+//! with is the variant it *executes* (resolution happens once, before
+//! planning); and with a healthy quantized verifier the committed stream is
+//! bit-identical to a reference-pinned engine whenever quantization does not
+//! flip the verifier's top-1 — exactly the paper's §4.5 criterion, now
+//! audited online instead of assumed.
 //!
 //! Submissions land in the admission [`Scheduler`] (FIFO / shortest-prompt /
 //! priority policies, per-request deadlines) rather than a raw queue; the
@@ -47,8 +82,9 @@ use crate::tokenizer::{BOS_ID, EOS_ID};
 use crate::util::rng::Pcg;
 
 use super::calls::{CallLog, CallRecord, FnKind};
+use super::governor::{Governor, GovernorConfig, Route, Transition};
 use super::kv::BatchGroup;
-use super::plan::{plan_step, PlanCtx, StepPlan, SubBatch};
+use super::plan::{plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
 use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
 use super::scheduler::{SchedPolicy, Scheduler};
 
@@ -81,6 +117,10 @@ pub struct EngineConfig {
     /// configured-bucket call per step (pre-planner behavior, for
     /// equivalence tests and A/B benches).
     pub elastic: bool,
+    /// Adaptive-precision policy (`coordinator::governor`): per-class
+    /// demotion of the quantized verifier to the reference variant, driven
+    /// by sampled shadow audits. Default: disabled (zero overhead).
+    pub governor: GovernorConfig,
 }
 
 impl EngineConfig {
@@ -94,6 +134,7 @@ impl EngineConfig {
             seed: 0,
             policy: SchedPolicy::Fifo,
             elastic: true,
+            governor: GovernorConfig::default(),
         }
     }
 
@@ -106,6 +147,7 @@ impl EngineConfig {
             seed: 0,
             policy: SchedPolicy::Fifo,
             elastic: true,
+            governor: GovernorConfig::default(),
         }
     }
 
@@ -123,6 +165,32 @@ impl EngineConfig {
             (DrafterKind::Ngram(_), _) => "ngram".into(),
             (DrafterKind::Pruned(v), _) => format!("draft-{v}"),
         }
+    }
+}
+
+/// One executable verifier weight variant: its name plus the exported
+/// bucket lists the planner may pick from. Slot 0 is the configured primary
+/// variant; slot 1 (when the governor is active) the reference variant.
+struct VariantSlot {
+    name: String,
+    verify_buckets: Vec<usize>,
+    decode_buckets: Vec<usize>,
+}
+
+impl VariantSlot {
+    fn load(model: &ModelRuntime, name: &str, drafter: &DrafterKind) -> Result<Self> {
+        let verify_buckets = model.entry.buckets(name, "verify");
+        let decode_buckets = model.entry.buckets(name, "decode");
+        if verify_buckets.is_empty() && !matches!(drafter, DrafterKind::Vanilla) {
+            bail!("no verify buckets exported for variant '{name}'");
+        }
+        // Admission always prefills through the single-row bucket.
+        model.entry.artifact(name, "prefill", 1)?;
+        Ok(VariantSlot {
+            name: name.to_string(),
+            verify_buckets,
+            decode_buckets,
+        })
     }
 }
 
@@ -144,9 +212,12 @@ pub struct Engine {
     /// Cost model the step planner minimizes over (manifest device constants
     /// + this model's architecture).
     perf: PerfModel,
-    /// Exported batch buckets for the verifier's verify/decode fns, sorted.
-    verify_buckets: Vec<usize>,
-    decode_buckets: Vec<usize>,
+    /// Executable verifier variants: `[primary]`, or `[primary, reference]`
+    /// when the fidelity governor is active. `SubBatch::variant` and
+    /// `PlanRow::variant` index into this.
+    variants: Vec<VariantSlot>,
+    /// Adaptive-precision state machine (inert when disabled).
+    governor: Governor,
     /// Pooled single-row prefill scratch: zeroed and reused per admission
     /// instead of allocating a fresh `[L, 1, H, S, hd]` pair each time.
     prefill_k: Tensor<f32>,
@@ -159,18 +230,20 @@ impl Engine {
         if cfg.gamma + 1 > mcfg.verify_len() && !matches!(cfg.drafter, DrafterKind::Vanilla) {
             bail!("gamma {} exceeds exported verify chunk {}", cfg.gamma, mcfg.verify_len());
         }
-        // Validate the bucket exists up front (prefill is always exported).
+        // Validate the configured bucket exists up front.
         model.entry.artifact(&cfg.verifier, "prefill", cfg.batch)?;
-        let verify_buckets = model.entry.buckets(&cfg.verifier, "verify");
-        let decode_buckets = model.entry.buckets(&cfg.verifier, "decode");
-        if verify_buckets.is_empty() && !matches!(cfg.drafter, DrafterKind::Vanilla) {
-            bail!("no verify buckets exported for variant '{}'", cfg.verifier);
+        let mut variants = vec![VariantSlot::load(&model, &cfg.verifier, &cfg.drafter)?];
+        // The governor only matters when the reference really is a second
+        // variant; a governed fp32 engine stays single-variant and inert.
+        if cfg.governor.enabled && cfg.governor.reference != cfg.verifier {
+            variants.push(VariantSlot::load(&model, &cfg.governor.reference, &cfg.drafter)?);
         }
         let group = BatchGroup::new(
             mcfg.n_layers, cfg.batch, mcfg.n_heads, mcfg.max_seq, mcfg.head_dim,
         );
         let perf = PerfModel::new(model.cost_model().clone(), mcfg.clone());
         let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
+        let governor = Governor::new(cfg.governor.clone(), cfg.seed ^ 0x4649_4445);
         Ok(Engine {
             model,
             mcfg,
@@ -183,8 +256,8 @@ impl Engine {
             call_log: CallLog::default(),
             completions: Vec::new(),
             perf,
-            verify_buckets,
-            decode_buckets,
+            variants,
+            governor,
             prefill_k,
             prefill_v,
             cfg,
@@ -194,15 +267,44 @@ impl Engine {
     /// Every bucket the step planner may execute at (stats publishing).
     pub fn plan_buckets(&self) -> Vec<usize> {
         let mut b: Vec<usize> = self
-            .verify_buckets
+            .variants
             .iter()
-            .chain(self.decode_buckets.iter())
+            .flat_map(|v| v.verify_buckets.iter().chain(v.decode_buckets.iter()))
             .copied()
             .chain(std::iter::once(self.cfg.batch))
             .collect();
         b.sort_unstable();
         b.dedup();
         b
+    }
+
+    /// Every weight variant the engine may execute (stats publishing).
+    pub fn variant_names(&self) -> Vec<String> {
+        self.variants.iter().map(|v| v.name.clone()).collect()
+    }
+
+    /// The precision-policy state machine (read-only view for stats/tests).
+    pub fn governor(&self) -> &Governor {
+        &self.governor
+    }
+
+    /// Mutable governor access: lets tests and operational tooling force a
+    /// class's state (e.g. pre-demote a class known to be degraded).
+    pub fn governor_mut(&mut self) -> &mut Governor {
+        &mut self.governor
+    }
+
+    /// True when two precision variants are in play (governor active).
+    fn governed(&self) -> bool {
+        self.variants.len() > 1
+    }
+
+    /// Variant-slot index `class`'s calls execute at, per the governor.
+    fn route_slot(&self, class: &str) -> usize {
+        match self.governor.resolve(class) {
+            Route::Primary => 0,
+            Route::Reference => 1.min(self.variants.len() - 1),
+        }
     }
 
     pub fn model(&self) -> &Rc<ModelRuntime> {
@@ -317,18 +419,23 @@ impl Engine {
             self.prefill_k.zero();
             self.prefill_v.zero();
 
+            // Prefill at the precision the governor resolved for this
+            // request's class: a demoted class gets full-precision KV from
+            // its very first position, so its stream is bit-exact reference
+            // output end to end.
+            let variant = self.variants[self.route_slot(&st.req.task)].name.clone();
             let t0 = Instant::now();
             let out = self
                 .model
                 .run_chunk(
-                    &self.cfg.verifier, "prefill", 1, &toks,
+                    &variant, "prefill", 1, &toks,
                     &self.prefill_k, &self.prefill_v, &[0],
                 )
                 .context("prefill")?;
             let wall = t0.elapsed().as_secs_f64();
             self.metrics.observe("prefill_s", wall);
             self.call_log.record(CallRecord {
-                variant: self.cfg.verifier.clone(),
+                variant: variant.clone(),
                 fn_kind: FnKind::Prefill,
                 batch: 1,
                 n_layers: self.mcfg.n_layers,
@@ -365,7 +472,7 @@ impl Engine {
                 self.finish_to_completion(st);
             }
             // Recycle the advanced single-row cache as b1 step scratch.
-            self.model.return_scratch(out.k, out.v);
+            self.model.return_scratch(&variant, out.k, out.v);
         }
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
@@ -427,6 +534,7 @@ impl Engine {
 
     /// Returns `false` when the engine is idle (nothing pending or active).
     pub fn step(&mut self) -> Result<bool> {
+        self.governor.begin_step(); // drives re-promotion probe scheduling
         self.expire_active()?;
         self.admit()?;
         let active = self.group.active_rows();
@@ -459,19 +567,34 @@ impl Engine {
         }
 
         // ---- plan the step ---------------------------------------------
-        let draft_lens: Vec<usize> = drafts.iter().map(|(_, _, d)| d.len()).collect();
+        // Resolve each row's precision once, before planning: the variant
+        // the plan prices is the variant the sub-batch executes.
+        let plan_rows: Vec<PlanRow> = drafts
+            .iter()
+            .map(|&(_, slot, ref d)| {
+                let st = self.states[slot].as_ref().expect("leased slot has state");
+                PlanRow::new(d.len(), self.route_slot(&st.req.task))
+            })
+            .collect();
         let plan = {
+            let variant_ctxs: Vec<VariantCtx> = self
+                .variants
+                .iter()
+                .map(|v| VariantCtx {
+                    name: &v.name,
+                    verify_buckets: &v.verify_buckets,
+                    decode_buckets: &v.decode_buckets,
+                })
+                .collect();
             let ctx = PlanCtx {
                 perf: &self.perf,
-                variant: &self.cfg.verifier,
+                variants: &variant_ctxs,
                 n_layers: self.mcfg.n_layers,
                 full_bucket: self.cfg.batch,
                 verify_chunk: self.mcfg.verify_len(),
-                verify_buckets: &self.verify_buckets,
-                decode_buckets: &self.decode_buckets,
                 elastic: self.cfg.elastic,
             };
-            plan_step(&ctx, &draft_lens)?
+            plan_step(&ctx, &plan_rows)?
         };
         self.observe_plan(&plan);
 
@@ -492,7 +615,9 @@ impl Engine {
     }
 
     /// Run one planned sub-batch: gather its leased KV rows into a pooled
-    /// bucket-shaped scratch cache, execute the chunk, scatter the advanced
+    /// bucket-shaped scratch cache, execute the chunk at the sub-batch's
+    /// variant (shadow re-verifying at the other precision when the
+    /// governor samples an audit or a probe is due), scatter the advanced
     /// rows back, and commit each row's verification outcome. Consumes the
     /// sub-batch's entries of `drafts` (each draft index belongs to exactly
     /// one sub-batch of a plan).
@@ -502,24 +627,30 @@ impl Engine {
         drafts: &mut [(usize, usize, Draft)],
     ) -> Result<()> {
         let (bucket, chunk) = (sb.bucket, sb.chunk);
+        let variant = self.variants[sb.variant].name.clone();
         let row_map: Vec<usize> = sb.rows.iter().map(|&di| drafts[di].0).collect();
 
-        // Identity fast path: when the sub-batch is the whole group in
-        // group-row order (always true for the monolithic elastic=false
-        // shape at full occupancy, and for full single-sub-batch steps),
-        // run directly on the group cache and adopt the returned tensors —
-        // the seed engine's zero-copy behavior. Note this writes the
-        // chunk's speculative output into any trailing unleased rows too
-        // (join splices over them, leave re-zeroes), which the gather/
-        // scatter path avoids.
-        let identity =
-            bucket == self.group.batch && row_map.iter().enumerate().all(|(i, &r)| i == r);
+        // Identity fast path: when this sub-batch executes at the full
+        // group bucket and covers *every active row* in group-row order
+        // (i.e. it is the whole step's plan — always true for the
+        // single-variant monolithic elastic=false shape), run directly on
+        // the group cache and adopt the returned tensors — the seed
+        // engine's zero-copy behavior. Adopt writes the chunk's speculative
+        // output into unleased trailing rows too, which is fine (join
+        // splices over them, leave re-zeroes); the all-active-rows
+        // requirement is what matters: a governed step can put the
+        // remaining *leased* rows in another variant's sub-batch, and
+        // adopting a whole chunk output over rows this call didn't carry
+        // would overwrite their KV with garbage.
+        let identity = bucket == self.group.batch
+            && row_map.len() == drafts.len()
+            && row_map.iter().enumerate().all(|(i, &r)| i == r);
 
         // ---- gather ----------------------------------------------------
         let (sk, sv) = if identity {
             (None, None)
         } else {
-            let (mut sk, mut sv) = self.model.take_scratch(self.mcfg.n_layers, bucket);
+            let (mut sk, mut sv) = self.model.take_scratch(&variant, self.mcfg.n_layers, bucket);
             self.group.gather_rows(&row_map, &mut sk, &mut sv)?;
             (Some(sk), Some(sv))
         };
@@ -546,7 +677,7 @@ impl Engine {
         let out = self
             .model
             .run_chunk(
-                &self.cfg.verifier,
+                &variant,
                 sb.fn_kind.name(),
                 bucket,
                 &tokens,
@@ -557,7 +688,7 @@ impl Engine {
             .with_context(|| format!("{} sub-batch b{bucket}", sb.fn_kind.name()))?;
         let wall = t0.elapsed().as_secs_f64();
         self.call_log.record(CallRecord {
-            variant: self.cfg.verifier.clone(),
+            variant: variant.clone(),
             fn_kind: sb.fn_kind,
             batch: bucket,
             n_layers: self.mcfg.n_layers,
@@ -570,6 +701,7 @@ impl Engine {
         self.metrics
             .observe(&names::bucket_occupancy(bucket), sb.rows.len() as f64);
         self.metrics.inc(&names::bucket_calls(bucket), 1);
+        self.metrics.inc(&names::variant_calls(&variant), 1);
         self.metrics.observe(
             names::CHUNK_EFFICIENCY,
             sb.useful_tokens as f64 / (bucket * chunk) as f64,
@@ -578,11 +710,148 @@ impl Engine {
         self.metrics
             .inc(names::EXECUTED_POSITIONS, (bucket * chunk) as u64);
 
+        // ---- fidelity governor: sampled shadow verification ------------
+        // Decide whether this sub-batch gets a shadow call at the *other*
+        // precision: primary sub-batches are audited at the sampled rate,
+        // reference sub-batches are probed when a demoted class is due.
+        // The shadow reads the same pre-advance KV (`k_in`/`v_in` are still
+        // the inputs here — the primary's advanced cache lives in `out`)
+        // and its own advanced cache is discarded, so audits never touch
+        // committed state.
+        let shadow_slot: Option<usize> = if !self.governed() {
+            None
+        } else if sb.variant == 0 {
+            self.metrics.inc(names::GOVERNOR_ELIGIBLE, 1);
+            self.governor.should_audit().then_some(1)
+        } else {
+            let due = sb.rows.iter().any(|&di| {
+                let (_, slot, _) = drafts[di];
+                let st = self.states[slot].as_ref().expect("leased slot has state");
+                self.governor.probe_due(&st.req.task)
+            });
+            due.then_some(0)
+        };
+        let audit_logits: Option<Tensor<f32>> = match shadow_slot {
+            None => None,
+            Some(si) => {
+                let sname = self.variants[si].name.clone();
+                // The shadow prefers the primary call's exact shape (it can
+                // then reuse the already-assembled inputs); when the shadow
+                // variant doesn't export it — bucket sets may differ across
+                // variants — fall back to the smallest bucket it *does*
+                // export that fits these rows, so a demoted class whose
+                // reference calls shrink below the quantized variant's
+                // bucket set can still be probed (and re-promoted).
+                let shape_ok = |b: usize| {
+                    self.model
+                        .entry
+                        .artifact(&sname, sb.fn_kind.name(), b)
+                        .map(|a| a.chunk_len == chunk)
+                        .unwrap_or(false)
+                };
+                let shadow_bucket = if shape_ok(bucket) {
+                    Some(bucket)
+                } else {
+                    let bl = match sb.fn_kind {
+                        FnKind::Decode => &self.variants[si].decode_buckets,
+                        _ => &self.variants[si].verify_buckets,
+                    };
+                    super::plan::best_bucket(bl, sb.rows.len())
+                        .filter(|&b| b >= sb.rows.len() && shape_ok(b))
+                };
+                match shadow_bucket {
+                    None => {
+                        // Nothing the shadow variant exports can carry these
+                        // rows; skip. A skipped *probe* still consumes its
+                        // schedule slot — otherwise the due classes would
+                        // re-attempt (and re-lookup) on every reference
+                        // sub-batch.
+                        self.metrics.inc(names::GOVERNOR_AUDIT_SKIPPED, 1);
+                        if si == 0 {
+                            for &di in &sb.rows {
+                                let (_, slot, _) = drafts[di];
+                                let class = self.states[slot]
+                                    .as_ref()
+                                    .expect("leased slot has state")
+                                    .req
+                                    .task
+                                    .clone();
+                                // only the classes whose probe this *was*; a
+                                // co-located demoted class that wasn't due
+                                // yet keeps its own (earlier) schedule
+                                if self.governor.probe_due(&class) {
+                                    self.governor.defer_probe(&class);
+                                }
+                            }
+                        }
+                        None
+                    }
+                    Some(ab) => {
+                        let t0 = Instant::now();
+                        let aout = if ab == bucket {
+                            self.model
+                                .run_chunk(
+                                    &sname, sb.fn_kind.name(), bucket, &tokens, k_in, v_in,
+                                    &pos,
+                                )
+                                .with_context(|| format!("governor audit b{bucket}"))?
+                        } else {
+                            // Re-gather the same pre-advance rows (the
+                            // primary's scatter/adopt hasn't happened yet)
+                            // into the shadow variant's own bucket shape;
+                            // row order matches the primary call, so logits
+                            // row `i` compares one-to-one below.
+                            let n = sb.rows.len();
+                            let (mut ak, mut av) =
+                                self.model.take_scratch(&sname, self.mcfg.n_layers, ab);
+                            self.group.gather_rows(&row_map, &mut ak, &mut av)?;
+                            let mut atokens = vec![0i32; ab * chunk];
+                            atokens[..n * chunk].copy_from_slice(&tokens[..n * chunk]);
+                            let mut apos = vec![0i32; ab];
+                            apos[..n].copy_from_slice(&pos[..n]);
+                            let aout = self
+                                .model
+                                .run_chunk(
+                                    &sname, sb.fn_kind.name(), ab, &atokens, &ak, &av, &apos,
+                                )
+                                .with_context(|| format!("governor audit b{ab}"))?;
+                            self.model.return_scratch(&sname, ak, av);
+                            aout
+                        };
+                        let wall = t0.elapsed().as_secs_f64();
+                        self.call_log.record(CallRecord {
+                            variant: sname.clone(),
+                            fn_kind: FnKind::Audit,
+                            batch: ab,
+                            n_layers: self.mcfg.n_layers,
+                            active_rows: sb.rows.len(),
+                            tokens_used: sb.tokens_used,
+                            chunk_len: chunk,
+                            useful_tokens: sb.useful_tokens,
+                            wall_s: wall,
+                        });
+                        // Sampled audits (primary sub-batch) and scheduled
+                        // probes (reference sub-batch) are tallied
+                        // separately: audits/eligible is the sampled rate,
+                        // probes follow their own per-class cadence.
+                        if sb.variant == 0 {
+                            self.metrics.inc(names::GOVERNOR_AUDITS, 1);
+                        } else {
+                            self.metrics.inc(names::GOVERNOR_PROBES, 1);
+                        }
+                        self.metrics.inc(&names::variant_calls(&sname), 1);
+                        self.model.return_scratch(&sname, aout.k, aout.v);
+                        Some(aout.logits)
+                    }
+                }
+            }
+        };
+
         // ---- scatter / adopt the advanced rows -------------------------
         if let (Some(sk), Some(sv)) = (sk, sv) {
             self.group.scatter_rows(&row_map, &out.k, &out.v)?;
-            self.model.return_scratch(sk, sv);
-            self.model.return_scratch(out.k, out.v);
+            self.model.return_scratch(&variant, sk, sv);
+            self.model.return_scratch(&variant, out.k, out.v);
         } else {
             // identity fast path: the advanced cache *is* the group cache
             // (run() already validated its dims against the bucket shape)
@@ -591,17 +860,74 @@ impl Engine {
         }
 
         // ---- commit per row --------------------------------------------
+        // Per-class audit accumulator for this shadow call: however many
+        // rows a class had in the sub-batch, it contributes ONE sample to
+        // the governor — a single shadow execution's rows are correlated
+        // evidence and must not fill the `min_audits` hysteresis window by
+        // themselves. (class, agreeing positions, verified positions,
+        // accept-delta sum, rows)
+        let mut audit_acc: Vec<(String, usize, usize, i64, u32)> = Vec::new();
         for (i, &di) in sb.rows.iter().enumerate() {
             let (row, slot, _) = drafts[di];
             let draft = std::mem::take(&mut drafts[di].2);
             let st = self.states[slot].as_mut().expect("leased slot has state");
             let logits = &out.logits;
+            // Clone the request RNG *before* the committed verification
+            // consumes it, so a shadow verification replays the same
+            // stochastic accept/resample choices against the other
+            // variant's logits (apples-to-apples acceptance delta).
+            let mut shadow_rng = audit_logits.as_ref().map(|_| st.rng.clone());
             let outcome = verify_draft(
                 &draft,
                 |j| logits.row(&[i, j]),
                 st.req.params.temp,
                 &mut st.rng,
             );
+
+            // On a reference sub-batch the shadow ran because *some* class
+            // was probe-due; only rows whose class is itself due contribute
+            // (the flush below reschedules it) — co-located demoted classes
+            // keep their own probe cadence.
+            let row_records = audit_logits.is_some()
+                && (sb.variant == 0 || self.governor.probe_due(&st.req.task));
+            if let (true, Some(al), Some(srng)) =
+                (row_records, &audit_logits, shadow_rng.as_mut())
+            {
+                // Top-1 agreement over this row's verified positions (the
+                // paper's §4.5 "does quantization flip the top-1" criterion,
+                // measured online) plus the acceptance-length delta.
+                let positions = draft.len().min(chunk - 1) + 1;
+                let agree = (0..positions)
+                    .filter(|&j| {
+                        crate::spec::argmax(logits.row(&[i, j]))
+                            == crate::spec::argmax(al.row(&[i, j]))
+                    })
+                    .count();
+                let ref_outcome = verify_draft(
+                    &draft,
+                    |j| al.row(&[i, j]),
+                    st.req.params.temp,
+                    srng,
+                );
+                // Delta is always quantized − reference, whichever side the
+                // shadow ran on this sub-batch.
+                let (q_acc, f_acc) = if sb.variant == 0 {
+                    (outcome.accepted, ref_outcome.accepted)
+                } else {
+                    (ref_outcome.accepted, outcome.accepted)
+                };
+                let delta = q_acc as i64 - f_acc as i64;
+                let class = &st.req.task;
+                match audit_acc.iter_mut().find(|e| e.0 == *class) {
+                    Some(e) => {
+                        e.1 += agree;
+                        e.2 += positions;
+                        e.3 += delta;
+                        e.4 += 1;
+                    }
+                    None => audit_acc.push((class.clone(), agree, positions, delta, 1)),
+                }
+            }
 
             let mut commit: Vec<i32> =
                 draft.tokens[..outcome.accepted].to_vec();
@@ -634,6 +960,23 @@ impl Engine {
                 self.group.leave(row)?;
                 let st = self.states[slot].take().unwrap();
                 self.finish_to_completion(st);
+            }
+        }
+
+        // ---- flush audit samples: one per (class, shadow call) ---------
+        for (class, agree, positions, delta_sum, rows) in audit_acc {
+            let agreement = agree as f64 / positions.max(1) as f64;
+            let delta = delta_sum as f64 / rows.max(1) as f64;
+            self.metrics.observe(names::GOVERNOR_AGREEMENT, agreement);
+            self.metrics.observe(names::GOVERNOR_ACCEPT_DELTA, delta);
+            match self.governor.record_audit(&class, agreement, delta) {
+                Some(Transition::Demoted) => {
+                    self.metrics.inc(names::GOVERNOR_DEMOTIONS, 1)
+                }
+                Some(Transition::Promoted) => {
+                    self.metrics.inc(names::GOVERNOR_PROMOTIONS, 1)
+                }
+                None => {}
             }
         }
         Ok(())

@@ -1,0 +1,461 @@
+//! Online fidelity governor: makes verification *precision* a serving-time
+//! decision instead of a construction-time pin.
+//!
+//! The paper's W8A8 verifier halves verification memory traffic "as long as
+//! the quantization does not flip the top-1 prediction" (§4.5, Eq. 12) —
+//! a workload-dependent property, not a global one. The governor audits that
+//! assumption online, per *request class* (the request's task tag):
+//!
+//! * A sampled fraction (`audit_rate`) of sub-batches executed at the
+//!   primary (quantized) variant is **shadow re-verified** against the
+//!   reference variant: the same tokens and the same pre-advance KV run
+//!   through the reference weights, and per-row top-1 agreement plus the
+//!   acceptance-length delta feed a per-class EWMA. Shadow outputs are
+//!   discarded — audits never touch committed state or request RNGs.
+//! * When a class's agreement EWMA sinks below `floor` (after at least
+//!   `min_audits` audits since its last transition — the hysteresis window)
+//!   the class **demotes**: its verification, decode and prefill calls run
+//!   the reference variant. Requests admitted after the demotion are
+//!   bit-exact full-precision end to end; a request already mid-generation
+//!   keeps the KV prefix its quantized calls wrote, so the guarantee for it
+//!   covers only the remaining steps.
+//! * A demoted class is **probed** every `probe_after_steps` engine steps:
+//!   the quantized variant shadows the (now-reference) primary call. When
+//!   the EWMA recovers above `floor + promote_margin` (again gated by the
+//!   hysteresis window) the class re-promotes.
+//!
+//! State-machine invariants (documented here, asserted by the property
+//! tests in `rust/tests/prop_coordinator.rs` and the unit tests below):
+//!
+//! 1. A class starts `Healthy` with an optimistic agreement of 1.0; with
+//!    perfect audit agreement it never demotes.
+//! 2. With agreement forced to zero a class demotes after exactly
+//!    `max(min_audits, ⌈ln(floor)/ln(1-alpha)⌉)` audits — bounded, so a
+//!    degraded verifier can only mis-commit for a bounded window.
+//! 3. Transitions only happen in `record_audit`; `resolve` is pure, so the
+//!    variant a step plans with is the variant it executes.
+//! 4. Audits and probes change only governor state, never the committed
+//!    token stream of the step that carried them.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Pcg;
+
+/// Tuning knobs of the precision policy. `Default` is *disabled*; turn it
+/// on with [`GovernorConfig::on`] (or from the CLI via `--governor`).
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Master switch. Disabled: every class resolves to the primary variant
+    /// and no audit is ever scheduled (zero overhead).
+    pub enabled: bool,
+    /// Reference (audit / fallback) weight variant — the precision ground
+    /// truth a demoted class serves at.
+    pub reference: String,
+    /// Fraction of primary-variant sub-batches shadow-audited (sampled on
+    /// the governor's own seeded stream, so runs are reproducible).
+    pub audit_rate: f64,
+    /// Top-1 agreement floor: a class whose agreement EWMA sinks below this
+    /// demotes to the reference variant.
+    pub floor: f64,
+    /// Hysteresis window: audits a class must accumulate since its last
+    /// transition before it may transition again (damps flapping).
+    pub min_audits: u32,
+    /// EWMA smoothing factor for agreement and acceptance-length delta.
+    pub alpha: f64,
+    /// Re-promotion requires agreement above `floor + promote_margin`
+    /// (asymmetric thresholds are the second half of the hysteresis).
+    pub promote_margin: f64,
+    /// Engine steps a demoted class waits between re-promotion probes.
+    pub probe_after_steps: u64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            enabled: false,
+            reference: "fp32".into(),
+            audit_rate: 0.125,
+            floor: 0.98,
+            min_audits: 4,
+            alpha: 0.25,
+            promote_margin: 0.005,
+            probe_after_steps: 16,
+        }
+    }
+}
+
+impl GovernorConfig {
+    /// The default policy, enabled.
+    pub fn on() -> Self {
+        GovernorConfig { enabled: true, ..Default::default() }
+    }
+}
+
+/// Which variant a request class's model calls execute at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// The engine's configured (typically quantized) verifier.
+    Primary,
+    /// The governor's reference (full-precision) variant.
+    Reference,
+}
+
+/// A state transition returned by [`Governor::record_audit`] so the caller
+/// can surface it in metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    Demoted,
+    Promoted,
+}
+
+/// Per-class audit bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ClassState {
+    demoted: bool,
+    /// Next engine step at which a demoted class may probe the primary.
+    next_probe: u64,
+    /// EWMA of per-row top-1 agreement between quantized and reference
+    /// logits over audited positions (optimistic start: 1.0).
+    pub agreement: f64,
+    /// EWMA of (quantized accepted length − reference accepted length).
+    pub accept_delta: f64,
+    /// Audits since the last transition (the hysteresis gate).
+    audits_since_flip: u32,
+    /// Lifetime audits recorded for this class.
+    pub audits: u64,
+}
+
+impl ClassState {
+    fn fresh() -> Self {
+        ClassState {
+            demoted: false,
+            next_probe: 0,
+            agreement: 1.0,
+            accept_delta: 0.0,
+            audits_since_flip: 0,
+            audits: 0,
+        }
+    }
+
+    pub fn is_demoted(&self) -> bool {
+        self.demoted
+    }
+}
+
+/// Cap on distinct tracked classes. The class key is the client-supplied
+/// task tag, so an unbounded map would let a high-cardinality (or
+/// adversarial) workload grow governor state for the process lifetime;
+/// past the cap, unseen tags fold into one shared [`OVERFLOW_CLASS`] that
+/// is audited and governed like any other class.
+const MAX_CLASSES: usize = 256;
+const OVERFLOW_CLASS: &str = "<overflow>";
+
+/// The governor itself: per-class states plus the audit sampler. Owned by
+/// the engine; everything here is cheap enough for the hot loop (a bounded
+/// BTreeMap keyed by short task strings, touched once per audited row).
+pub struct Governor {
+    cfg: GovernorConfig,
+    classes: BTreeMap<String, ClassState>,
+    rng: Pcg,
+    step: u64,
+    pub demotions: u64,
+    pub promotions: u64,
+}
+
+impl Governor {
+    pub fn new(cfg: GovernorConfig, seed: u64) -> Self {
+        Governor {
+            cfg,
+            classes: BTreeMap::new(),
+            rng: Pcg::seeded(seed ^ 0x4745_4F56),
+            step: 0,
+            demotions: 0,
+            promotions: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Advance the governor's step clock (drives probe scheduling).
+    pub fn begin_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// The tracked key for `class`: itself while known or while the map has
+    /// room, the shared overflow class once the cap is hit.
+    fn key<'a>(&self, class: &'a str) -> &'a str {
+        if self.classes.contains_key(class) || self.classes.len() < MAX_CLASSES {
+            class
+        } else {
+            OVERFLOW_CLASS
+        }
+    }
+
+    /// Which variant `class`'s calls execute at. Pure: planning and
+    /// execution of one step always agree.
+    pub fn resolve(&self, class: &str) -> Route {
+        if !self.cfg.enabled {
+            return Route::Primary;
+        }
+        match self.classes.get(self.key(class)) {
+            Some(st) if st.demoted => Route::Reference,
+            _ => Route::Primary,
+        }
+    }
+
+    /// Sample whether a primary-variant sub-batch should be shadow-audited.
+    pub fn should_audit(&mut self) -> bool {
+        self.cfg.enabled && self.rng.bool_with(self.cfg.audit_rate.clamp(0.0, 1.0))
+    }
+
+    /// Is `class` demoted and due for a re-promotion probe this step?
+    pub fn probe_due(&self, class: &str) -> bool {
+        self.cfg.enabled
+            && self
+                .classes
+                .get(self.key(class))
+                .is_some_and(|st| st.demoted && self.step >= st.next_probe)
+    }
+
+    /// Push a demoted class's next probe out by a full window without
+    /// recording anything — used when a due probe could not execute (e.g.
+    /// the shadow variant doesn't export the needed shape), so the engine
+    /// doesn't re-attempt it on every subsequent sub-batch.
+    pub fn defer_probe(&mut self, class: &str) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let key = self.key(class).to_string();
+        if let Some(st) = self.classes.get_mut(&key) {
+            if st.demoted {
+                st.next_probe = self.step + self.cfg.probe_after_steps;
+            }
+        }
+    }
+
+    /// Record one audit sample for `class`: top-1 `agreement` over the
+    /// class's verified positions in one shadow call and the mean
+    /// acceptance-length delta (quantized − reference). One shadow
+    /// execution yields at most one sample per class (the engine aggregates
+    /// its rows), so `min_audits` counts independent shadow events. Applies
+    /// the EWMA and the demote/promote rules; returns the transition, if
+    /// any.
+    pub fn record_audit(
+        &mut self,
+        class: &str,
+        agreement: f64,
+        accept_delta: f64,
+    ) -> Option<Transition> {
+        let key = self.key(class).to_string();
+        let cfg = &self.cfg;
+        let st = self
+            .classes
+            .entry(key)
+            .or_insert_with(ClassState::fresh);
+        st.audits += 1;
+        st.audits_since_flip = st.audits_since_flip.saturating_add(1);
+        st.agreement = (1.0 - cfg.alpha) * st.agreement + cfg.alpha * agreement;
+        st.accept_delta = (1.0 - cfg.alpha) * st.accept_delta + cfg.alpha * accept_delta;
+        if st.demoted {
+            // This audit *was* a probe; schedule the next one.
+            st.next_probe = self.step + cfg.probe_after_steps;
+        }
+        if st.audits_since_flip < cfg.min_audits {
+            return None; // inside the hysteresis window
+        }
+        if !st.demoted && st.agreement < cfg.floor {
+            st.demoted = true;
+            st.next_probe = self.step + cfg.probe_after_steps;
+            st.audits_since_flip = 0;
+            self.demotions += 1;
+            return Some(Transition::Demoted);
+        }
+        // Promote threshold clamped strictly below 1.0: agreement is an
+        // EWMA of values in [0, 1] and only approaches 1.0 asymptotically,
+        // so an unclamped `floor + margin >= 1.0` (e.g. floor 0.995 with
+        // the default margin) would make re-promotion unreachable and pin
+        // the class on the reference — while still paying probe traffic —
+        // forever.
+        let promote_at = (cfg.floor + cfg.promote_margin).min(1.0 - 1e-9);
+        if st.demoted && st.agreement > promote_at {
+            st.demoted = false;
+            st.audits_since_flip = 0;
+            self.promotions += 1;
+            return Some(Transition::Promoted);
+        }
+        None
+    }
+
+    /// Per-class view for stats endpoints and tests.
+    pub fn class(&self, class: &str) -> Option<&ClassState> {
+        self.classes.get(class)
+    }
+
+    pub fn classes(&self) -> impl Iterator<Item = (&String, &ClassState)> {
+        self.classes.iter()
+    }
+
+    /// Lifetime audits across every class.
+    pub fn total_audits(&self) -> u64 {
+        self.classes.values().map(|c| c.audits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gov(min_audits: u32, floor: f64) -> Governor {
+        Governor::new(
+            GovernorConfig {
+                enabled: true,
+                min_audits,
+                floor,
+                alpha: 0.25,
+                promote_margin: 0.005,
+                probe_after_steps: 4,
+                ..Default::default()
+            },
+            1,
+        )
+    }
+
+    #[test]
+    fn disabled_governor_is_inert() {
+        let mut g = Governor::new(GovernorConfig::default(), 0);
+        assert!(!g.enabled());
+        assert_eq!(g.resolve("x"), Route::Primary);
+        assert!(!g.should_audit());
+        assert!(!g.probe_due("x"));
+    }
+
+    #[test]
+    fn perfect_agreement_never_demotes() {
+        let mut g = gov(2, 0.98);
+        for _ in 0..500 {
+            g.begin_step();
+            assert_eq!(g.record_audit("gsm8k", 1.0, 0.0), None);
+            assert_eq!(g.resolve("gsm8k"), Route::Primary);
+        }
+        assert_eq!(g.demotions, 0);
+    }
+
+    #[test]
+    fn forced_disagreement_demotes_exactly_at_the_hysteresis_window() {
+        let mut g = gov(4, 0.98);
+        g.begin_step();
+        for i in 1..=3u32 {
+            assert_eq!(g.record_audit("c", 0.0, -1.0), None, "audit {i} inside window");
+            assert_eq!(g.resolve("c"), Route::Primary, "no transition inside window");
+        }
+        // alpha 0.25: EWMA is 0.75^4 ≈ 0.32 < 0.98 at the 4th audit.
+        assert_eq!(g.record_audit("c", 0.0, -1.0), Some(Transition::Demoted));
+        assert_eq!(g.resolve("c"), Route::Reference);
+        assert_eq!(g.demotions, 1);
+        assert!(g.class("c").unwrap().is_demoted());
+        assert!(g.class("c").unwrap().accept_delta < 0.0);
+    }
+
+    #[test]
+    fn classes_are_independent() {
+        let mut g = gov(1, 0.98);
+        g.begin_step();
+        g.record_audit("bad", 0.0, 0.0);
+        g.record_audit("good", 1.0, 0.0);
+        assert_eq!(g.resolve("bad"), Route::Reference);
+        assert_eq!(g.resolve("good"), Route::Primary);
+        assert_eq!(g.resolve("never-seen"), Route::Primary);
+    }
+
+    #[test]
+    fn probe_schedule_and_repromotion() {
+        let mut g = gov(2, 0.9);
+        g.begin_step(); // step 1
+        g.record_audit("c", 0.0, 0.0);
+        assert_eq!(g.record_audit("c", 0.0, 0.0), Some(Transition::Demoted));
+        // probe only after probe_after_steps (4) more steps
+        assert!(!g.probe_due("c"), "probe immediately after demotion");
+        for _ in 0..4 {
+            g.begin_step();
+        }
+        assert!(g.probe_due("c"), "probe due after the wait");
+        // healthy probes recover the EWMA; promotion needs the window AND
+        // floor + margin
+        let mut promoted_at = None;
+        for i in 1..=64 {
+            // a probe happened: record_audit reschedules next_probe
+            if g.record_audit("c", 1.0, 0.0) == Some(Transition::Promoted) {
+                promoted_at = Some(i);
+                break;
+            }
+            assert!(!g.probe_due("c"), "probe rescheduled after audit");
+            for _ in 0..4 {
+                g.begin_step();
+            }
+        }
+        let n = promoted_at.expect("healthy probes must re-promote");
+        assert!(n >= 2, "promotion inside the hysteresis window");
+        assert_eq!(g.resolve("c"), Route::Primary);
+        assert_eq!(g.promotions, 1);
+    }
+
+    #[test]
+    fn repromotion_stays_reachable_when_floor_plus_margin_reaches_one() {
+        // Regression: floor 0.995 + default margin 0.005 puts the raw
+        // promote threshold at 1.0, which an EWMA of [0,1] samples can
+        // never strictly exceed — the clamp must keep perfect probes able
+        // to re-promote.
+        let mut g = gov(2, 0.995);
+        g.begin_step();
+        g.record_audit("c", 0.0, 0.0);
+        assert_eq!(g.record_audit("c", 0.0, 0.0), Some(Transition::Demoted));
+        let mut promoted = false;
+        for _ in 0..2000 {
+            g.begin_step();
+            if g.record_audit("c", 1.0, 0.0) == Some(Transition::Promoted) {
+                promoted = true;
+                break;
+            }
+        }
+        assert!(promoted, "perfect probes must re-promote even at floor 0.995");
+        assert_eq!(g.resolve("c"), Route::Primary);
+    }
+
+    #[test]
+    fn class_map_is_bounded_and_overflow_tags_are_still_governed() {
+        let mut g = gov(1, 0.98);
+        g.begin_step();
+        for i in 0..MAX_CLASSES + 50 {
+            g.record_audit(&format!("class-{i}"), 1.0, 0.0);
+        }
+        assert!(
+            g.classes().count() <= MAX_CLASSES + 1,
+            "class map must stay bounded, got {}",
+            g.classes().count()
+        );
+        assert!(g.class(OVERFLOW_CLASS).is_some(), "excess tags fold into overflow");
+        // The overflow class is governed like any other: bad audits from a
+        // not-individually-tracked tag still demote it, and every other
+        // unseen tag resolves through it.
+        g.record_audit("some-novel-tag", 0.0, 0.0);
+        assert_eq!(g.resolve("a-different-novel-tag"), Route::Reference);
+        assert_eq!(g.resolve("class-0"), Route::Primary, "tracked classes unaffected");
+    }
+
+    #[test]
+    fn audit_sampling_tracks_rate() {
+        let mut g = Governor::new(
+            GovernorConfig { enabled: true, audit_rate: 0.25, ..Default::default() },
+            3,
+        );
+        let hits = (0..4000).filter(|_| g.should_audit()).count();
+        let rate = hits as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.03, "sampled audit rate {rate}");
+    }
+}

@@ -93,8 +93,8 @@ impl BatchGroup {
     }
 
     /// Check a gather/scatter row map against the group and a scratch shape:
-    /// every group row leased and in range, scratch large enough, dims
-    /// matching everywhere but the batch axis.
+    /// every group row leased, in range and **unique**, scratch large
+    /// enough, dims matching everywhere but the batch axis.
     fn check_row_map(&self, rows: &[usize], k: &Tensor<f32>, v: &Tensor<f32>) -> Result<()> {
         if k.dims != v.dims {
             bail!("scratch k/v dims differ: {:?} vs {:?}", k.dims, v.dims);
@@ -108,6 +108,10 @@ impl BatchGroup {
         if rows.len() > k.dims[1] {
             bail!("{} rows exceed scratch bucket {}", rows.len(), k.dims[1]);
         }
+        // Duplicates would double-write on scatter (last scratch row wins
+        // silently) and alias one lease across two scratch rows on gather —
+        // reject rather than guess which copy the caller meant.
+        let mut seen = vec![false; self.batch];
         for &r in rows {
             if r >= self.batch {
                 bail!("row {r} out of range for batch {}", self.batch);
@@ -115,6 +119,10 @@ impl BatchGroup {
             if self.rows[r].is_none() {
                 bail!("row {r} not leased");
             }
+            if seen[r] {
+                bail!("duplicate row {r} in row map");
+            }
+            seen[r] = true;
         }
         Ok(())
     }
@@ -263,5 +271,23 @@ mod tests {
         assert!(g.scatter_rows(&[9], &sk, &sv).is_err());
         assert!(g.gather_rows(&[0], &mut sk, &mut sv).is_ok());
         assert!(g.scatter_rows(&[0], &sk, &sv).is_ok());
+
+        // Regression: a duplicated row index used to pass validation even
+        // when the scratch had room — scatter then double-wrote the group
+        // row (last scratch row silently winning) and gather aliased one
+        // lease across two scratch rows. Must be rejected outright.
+        let (k2, v2) = row_cache(2.0);
+        g.join(2, &k2, &v2).unwrap(); // second lease so [0, 0] isn't "too small"
+        let mut sk2 = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut sv2 = sk2.clone();
+        assert!(
+            g.gather_rows(&[0, 0], &mut sk2, &mut sv2).is_err(),
+            "duplicate gather rows must be rejected"
+        );
+        assert!(
+            g.scatter_rows(&[0, 0], &sk2, &sv2).is_err(),
+            "duplicate scatter rows must be rejected"
+        );
+        assert!(g.gather_rows(&[1, 0], &mut sk2, &mut sv2).is_ok(), "distinct rows still fine");
     }
 }

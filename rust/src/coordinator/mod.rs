@@ -1,12 +1,14 @@
 //! Layer-3 coordinator: the paper's serving-system contribution. Continuous
 //! batching over leased KV rows (`kv`), per-request speculative state
 //! (`request`), policy-ordered admission with deadlines and cancellation
-//! (`scheduler`), cost-guided elastic step planning (`plan`), the decode
-//! loop (`engine`), call accounting for the cost model (`calls`) and the
+//! (`scheduler`), cost-guided elastic step planning (`plan`), the
+//! adaptive-precision fidelity governor (`governor`), the decode loop
+//! (`engine`), call accounting for the cost model (`calls`) and the
 //! threaded front door with correlated completion routing (`router`).
 
 pub mod calls;
 pub mod engine;
+pub mod governor;
 pub mod kv;
 pub mod plan;
 pub mod request;
@@ -15,8 +17,10 @@ pub mod scheduler;
 
 pub use calls::{CallLog, CallRecord, FnKind};
 pub use engine::{DrafterKind, Engine, EngineConfig};
+pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::BatchGroup;
-pub use plan::{best_bucket, plan_step, PlanCtx, StepPlan, SubBatch};
+pub use plan::{best_bucket, plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
 pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
-pub use router::{BucketStat, EngineHandle, RouterStats, StatsSnapshot, Ticket};
+pub use router::{BucketStat, EngineHandle, GovernorSnapshot, RouterStats, StatsSnapshot,
+                 Ticket, VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -1,36 +1,47 @@
 //! Elastic step planning: partition the active rows of a step into
-//! sub-batches and pick, per sub-batch, the cheapest exported batch bucket —
-//! so low-occupancy groups stop reading idle KV rows and decode-only rows
-//! stop paying full verify-chunk traffic (paper Eq. 11/12: verification cost
-//! is memory traffic, and traffic scales with the bucket actually executed).
+//! sub-batches and pick, per sub-batch, the cheapest exported **(batch
+//! bucket, verifier variant)** pair — so low-occupancy groups stop reading
+//! idle KV rows, decode-only rows stop paying full verify-chunk traffic, and
+//! each request class verifies at the precision the fidelity governor
+//! resolved for it (paper Eq. 11/12: verification cost is memory traffic,
+//! and traffic scales with both the bucket actually executed and the bytes
+//! per weight of the variant actually streamed).
 //!
-//! One [`StepPlan`] is built per engine step from the per-row draft lengths
-//! and executed as a gather → run_chunk → scatter pipeline per sub-batch
-//! (see `coordinator::kv` for the row movement and `coordinator::engine` for
-//! the driver).
+//! One [`StepPlan`] is built per engine step from the per-row
+//! [`PlanRow`]s (draft length + resolved variant) and executed as a
+//! gather → run_chunk → scatter pipeline per sub-batch (see
+//! `coordinator::kv` for the row movement, `coordinator::engine` for the
+//! driver and `coordinator::governor` for how a row's variant is chosen).
 //!
-//! ## Bucket-selection invariants
+//! ## Bucket/variant-selection invariants
 //!
-//! * A sub-batch's bucket is the **smallest exported bucket that fits its
-//!   rows**; when every bucket is smaller than the group, the group splits
-//!   across multiple sub-batches of the largest bucket (never silently
-//!   truncated, never a bucket the manifest doesn't export).
+//! * A sub-batch is **variant-homogeneous**: one chunk call streams one
+//!   variant's weights, so rows resolved to different variants never share a
+//!   call. The planner does not second-guess the governor — variant
+//!   assignment is a fidelity decision, the planner only prices and packs
+//!   within it.
+//! * A sub-batch's bucket is the **smallest bucket its variant exports that
+//!   fits its rows**; when every bucket is smaller than the group, the group
+//!   splits across multiple sub-batches of the largest bucket (never
+//!   silently truncated, never a bucket the manifest doesn't export).
 //! * Every active row lands in **exactly one** sub-batch of the chosen plan.
 //! * A sub-batch is function-homogeneous in what it *executes*: it runs one
 //!   exported fn (`verify` or `decode`). Decode-only rows may ride along in
-//!   a verify sub-batch's spare rows — that call's weight stream is already
-//!   paid, so the ride is free in the cost model — but a `decode` sub-batch
-//!   never contains a drafting row.
-//! * Between the candidate shapes (monolithic configured bucket, shrunk
-//!   single call, split by function) the planner commits to the one with the
-//!   lowest [`PerfModel::plan_cost`]; ties prefer fewer calls, and a shape
-//!   whose bucket the manifest does not export is never committed to. When
-//!   the configured bucket is exported (the normal case) the chosen cost is
-//!   monotonically <= the monolithic cost, and the gap is surfaced as the
-//!   `planned_savings_s` metric.
-//! * Planning is deterministic: rows are ordered longest-draft-first (ties
-//!   by row index), so a split group packs similar draft lengths together
-//!   and per-sub-batch `tokens_used` maxima stay small.
+//!   a same-variant verify sub-batch's spare rows — that call's weight
+//!   stream is already paid, so the ride is free in the cost model — but a
+//!   `decode` sub-batch never contains a drafting row.
+//! * Per variant group, between the candidate shapes (monolithic configured
+//!   bucket, shrunk single call, split by function) the planner commits to
+//!   the one with the lowest [`PerfModel::plan_cost`] at that group's
+//!   variant; ties prefer fewer calls, and a shape whose bucket the variant
+//!   does not export is never committed to. When the configured bucket is
+//!   exported (the normal case) the chosen cost is monotonically <= the
+//!   monolithic cost — summed over groups, `modeled_s <= monolithic_s`, and
+//!   the gap is surfaced as the `planned_savings_s` metric.
+//! * Planning is deterministic: variant groups are planned in variant-index
+//!   order and rows within a group are ordered longest-draft-first (ties by
+//!   row index), so a split group packs similar draft lengths together and
+//!   per-sub-batch `tokens_used` maxima stay small.
 
 use anyhow::{bail, Result};
 
@@ -38,39 +49,67 @@ use crate::perfmodel::PerfModel;
 
 use super::calls::FnKind;
 
+/// Exported bucket lists for one verifier weight variant the step may
+/// execute (from the manifest via `ModelEntry::buckets`, sorted ascending).
+pub struct VariantCtx<'a> {
+    pub name: &'a str,
+    pub verify_buckets: &'a [usize],
+    pub decode_buckets: &'a [usize],
+}
+
 /// Everything the planner needs about the engine's configuration, borrowed
-/// for one `plan_step` call. Bucket lists come from the manifest
-/// (`ModelEntry::buckets`) and must be sorted ascending.
+/// for one `plan_step` call.
 pub struct PlanCtx<'a> {
     pub perf: &'a PerfModel,
-    /// Verifier variant the step executes (prices the weight stream).
-    pub variant: &'a str,
+    /// Verifier variants this step may execute; [`SubBatch::variant`] and
+    /// [`PlanRow::variant`] index into this list. Entry 0 is the engine's
+    /// primary (configured) variant; entry 1, when present, the fidelity
+    /// governor's reference variant.
+    pub variants: &'a [VariantCtx<'a>],
     pub n_layers: usize,
     /// The engine's configured construction-time bucket (the monolithic
     /// fallback shape; seed behavior).
     pub full_bucket: usize,
     /// Positions per row of the exported verify chunk (`gamma_max + 1`).
     pub verify_chunk: usize,
-    pub verify_buckets: &'a [usize],
-    pub decode_buckets: &'a [usize],
-    /// `false` forces the monolithic single-call plan at `full_bucket`
-    /// (bit-compatible with the pre-planner engine; used by equivalence
-    /// tests and A/B benches).
+    /// `false` forces the monolithic plan at `full_bucket` — one call per
+    /// variant group (bit-compatible with the pre-planner engine when a
+    /// single variant is in play; used by equivalence tests and A/B
+    /// benches).
     pub elastic: bool,
 }
 
+/// One active row's planning input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanRow {
+    /// Tokens the row's drafter proposed this step (0 = decode-only).
+    pub draft_len: usize,
+    /// Index into [`PlanCtx::variants`] of the verifier variant this row's
+    /// request class resolved to (the fidelity governor's decision).
+    pub variant: usize,
+}
+
+impl PlanRow {
+    pub fn new(draft_len: usize, variant: usize) -> Self {
+        PlanRow { draft_len, variant }
+    }
+}
+
 /// One chunk execution of a step: which rows run, through which exported
-/// (fn, bucket), and the token accounting the call log records for it.
+/// (variant, fn, bucket), and the token accounting the call log records for
+/// it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubBatch {
     pub fn_kind: FnKind,
+    /// Index into [`PlanCtx::variants`] of the weight variant this call
+    /// streams.
+    pub variant: usize,
     /// Exported batch bucket to execute at (scratch-cache shape).
     pub bucket: usize,
     /// Positions the artifact executes per row (1 for decode, the verify
     /// chunk otherwise).
     pub chunk: usize,
-    /// Indices into the step's draft list; scratch row `i` carries
-    /// `rows[i]`.
+    /// Indices into the step's row list; scratch row `i` carries `rows[i]`.
     pub rows: Vec<usize>,
     /// `1 + longest draft` among `rows` (what the cost model prices).
     pub tokens_used: usize,
@@ -79,12 +118,12 @@ pub struct SubBatch {
 }
 
 impl SubBatch {
-    fn new(fn_kind: FnKind, bucket: usize, chunk: usize, rows: Vec<usize>,
-           draft_lens: &[usize]) -> Self {
+    fn new(fn_kind: FnKind, variant: usize, bucket: usize, chunk: usize,
+           rows: Vec<usize>, draft_lens: &[usize]) -> Self {
         debug_assert!(!rows.is_empty());
         let tokens_used = rows.iter().map(|&i| draft_lens[i] + 1).max().unwrap_or(1);
         let useful_tokens = rows.iter().map(|&i| draft_lens[i] + 1).sum();
-        SubBatch { fn_kind, bucket, chunk, rows, tokens_used, useful_tokens }
+        SubBatch { fn_kind, variant, bucket, chunk, rows, tokens_used, useful_tokens }
     }
 
     /// Free capacity left in the selected bucket.
@@ -100,7 +139,11 @@ pub struct StepPlan {
     pub sub_batches: Vec<SubBatch>,
     /// `PerfModel::plan_cost` of the chosen sub-batches (seconds).
     pub modeled_s: f64,
-    /// Cost of the monolithic single call at the configured bucket.
+    /// Cost of the monolithic configured-bucket shape (one call per variant
+    /// group), clamped to at least `modeled_s` for any group whose variant
+    /// does not export the configured bucket — so `modeled_s <=
+    /// monolithic_s` (and the planner-savings metric's >= 0 guarantee)
+    /// holds unconditionally.
     pub monolithic_s: f64,
 }
 
@@ -115,11 +158,11 @@ pub fn best_bucket(buckets: &[usize], n: usize) -> Option<usize> {
         .or_else(|| buckets.last().copied())
 }
 
-/// Pack one function-homogeneous group of rows into sub-batches, splitting
-/// over the largest bucket when the group is oversize. `idxs` index into
-/// `draft_lens`.
-fn pack(fn_kind: FnKind, chunk: usize, mut idxs: Vec<usize>, draft_lens: &[usize],
-        buckets: &[usize]) -> Result<Vec<SubBatch>> {
+/// Pack one (variant, function)-homogeneous group of rows into sub-batches,
+/// splitting over the largest bucket when the group is oversize. `idxs`
+/// index into `draft_lens`.
+fn pack(fn_kind: FnKind, variant: usize, chunk: usize, mut idxs: Vec<usize>,
+        draft_lens: &[usize], buckets: &[usize]) -> Result<Vec<SubBatch>> {
     if idxs.is_empty() {
         return Ok(Vec::new());
     }
@@ -136,7 +179,7 @@ fn pack(fn_kind: FnKind, chunk: usize, mut idxs: Vec<usize>, draft_lens: &[usize
         let bucket = best_bucket(buckets, left).expect("non-empty bucket list");
         let take = left.min(bucket);
         out.push(SubBatch::new(
-            fn_kind, bucket, chunk, idxs[start..start + take].to_vec(), draft_lens,
+            fn_kind, variant, bucket, chunk, idxs[start..start + take].to_vec(), draft_lens,
         ));
         start += take;
     }
@@ -144,54 +187,73 @@ fn pack(fn_kind: FnKind, chunk: usize, mut idxs: Vec<usize>, draft_lens: &[usize
 }
 
 fn plan_cost(ctx: &PlanCtx, sbs: &[SubBatch]) -> f64 {
-    let parts: Vec<(usize, usize)> =
-        sbs.iter().map(|sb| (sb.bucket, sb.tokens_used)).collect();
-    ctx.perf.plan_cost(ctx.variant, ctx.n_layers, &parts)
+    sbs.iter()
+        .map(|sb| {
+            ctx.perf.plan_cost(
+                ctx.variants[sb.variant].name,
+                ctx.n_layers,
+                &[(sb.bucket, sb.tokens_used)],
+            )
+        })
+        .sum()
 }
 
-/// Build the step plan for the given per-row draft lengths (one entry per
-/// active row, in group-row order).
-pub fn plan_step(ctx: &PlanCtx, draft_lens: &[usize]) -> Result<StepPlan> {
-    if draft_lens.is_empty() {
-        bail!("plan_step on an empty step");
-    }
-    let n = draft_lens.len();
-    let all: Vec<usize> = (0..n).collect();
-    let any_draft = draft_lens.iter().any(|&d| d > 0);
+/// Plan one variant group (`idxs` all resolved to `ctx.variants[vi]`).
+/// Returns the chosen sub-batches plus (chosen, monolithic) modeled costs.
+fn plan_group(ctx: &PlanCtx, vi: usize, idxs: Vec<usize>,
+              draft_lens: &[usize]) -> Result<(Vec<SubBatch>, f64, f64)> {
+    let v = &ctx.variants[vi];
+    let any_draft = idxs.iter().any(|&i| draft_lens[i] > 0);
 
     // The single-call function: verify when anything drafted; decode when
     // nothing did (falling back to verify if decode isn't exported).
-    let (mono_fn, mono_chunk, mono_buckets) = if any_draft || ctx.decode_buckets.is_empty() {
-        (FnKind::Verify, ctx.verify_chunk, ctx.verify_buckets)
+    let (mono_fn, mono_chunk, mono_buckets) = if any_draft || v.decode_buckets.is_empty() {
+        (FnKind::Verify, ctx.verify_chunk, v.verify_buckets)
     } else {
-        (FnKind::Decode, 1usize, ctx.decode_buckets)
+        (FnKind::Decode, 1usize, v.decode_buckets)
     };
 
     // Monolithic shape: the fixed construction-time bucket, one call.
     let mono = vec![SubBatch::new(
-        mono_fn, ctx.full_bucket, mono_chunk, all.clone(), draft_lens,
+        mono_fn, vi, ctx.full_bucket, mono_chunk, idxs.clone(), draft_lens,
     )];
     let mono_cost = plan_cost(ctx, &mono);
     if !ctx.elastic {
-        return Ok(StepPlan { sub_batches: mono, modeled_s: mono_cost, monolithic_s: mono_cost });
+        if mono_buckets.contains(&ctx.full_bucket) {
+            return Ok((mono, mono_cost, mono_cost));
+        }
+        // The configured bucket isn't exported for this variant (e.g. a
+        // governed group demoted to a reference with a different bucket
+        // set): even in monolithic mode, never commit an unexecutable
+        // shape — pack over the variant's own buckets instead. The
+        // monolithic baseline is clamped up to the packed cost so the
+        // `modeled_s <= monolithic_s` invariant (and the derived
+        // planned-savings metric's >= 0 guarantee) holds even when packing
+        // an unexecutable baseline costs more than its fiction would have.
+        let packed = pack(mono_fn, vi, mono_chunk, idxs, draft_lens, mono_buckets)?;
+        let packed_cost = plan_cost(ctx, &packed);
+        return Ok((packed, packed_cost, mono_cost.max(packed_cost)));
     }
 
     // Candidate 1 — shrink: same single-function grouping, smallest
     // exported bucket that fits the occupancy.
-    let shrunk = pack(mono_fn, mono_chunk, all, draft_lens, mono_buckets)?;
+    let shrunk = pack(mono_fn, vi, mono_chunk, idxs.clone(), draft_lens, mono_buckets)?;
 
     // Candidate 2 — split by required function: drafting rows verify,
     // decode-only rows first ride along in spare verify capacity (that
     // weight stream is already paid), the remainder runs as 1-token decode
     // sub-batches that skip the verify chunk's padding traffic entirely.
     let split = if any_draft
-        && draft_lens.iter().any(|&d| d == 0)
-        && !ctx.decode_buckets.is_empty()
+        && idxs.iter().any(|&i| draft_lens[i] == 0)
+        && !v.decode_buckets.is_empty()
     {
-        let verify_idx: Vec<usize> = (0..n).filter(|&i| draft_lens[i] > 0).collect();
-        let decode_idx: Vec<usize> = (0..n).filter(|&i| draft_lens[i] == 0).collect();
-        let mut sbs =
-            pack(FnKind::Verify, ctx.verify_chunk, verify_idx, draft_lens, ctx.verify_buckets)?;
+        let verify_idx: Vec<usize> =
+            idxs.iter().copied().filter(|&i| draft_lens[i] > 0).collect();
+        let decode_idx: Vec<usize> =
+            idxs.iter().copied().filter(|&i| draft_lens[i] == 0).collect();
+        let mut sbs = pack(
+            FnKind::Verify, vi, ctx.verify_chunk, verify_idx, draft_lens, v.verify_buckets,
+        )?;
         let mut decode_iter = decode_idx.into_iter();
         'fill: for sb in sbs.iter_mut() {
             while sb.spare() > 0 {
@@ -205,7 +267,7 @@ pub fn plan_step(ctx: &PlanCtx, draft_lens: &[usize]) -> Result<StepPlan> {
             }
         }
         let leftover: Vec<usize> = decode_iter.collect();
-        sbs.extend(pack(FnKind::Decode, 1, leftover, draft_lens, ctx.decode_buckets)?);
+        sbs.extend(pack(FnKind::Decode, vi, 1, leftover, draft_lens, v.decode_buckets)?);
         Some(sbs)
     } else {
         None
@@ -226,13 +288,58 @@ pub fn plan_step(ctx: &PlanCtx, draft_lens: &[usize]) -> Result<StepPlan> {
         // Only reachable when the manifest exports full_bucket but shrink
         // picked a larger-than-configured bucket (never happens when
         // full_bucket is in the list, since shrink is monotone) — kept as a
-        // guard. A full_bucket the manifest does NOT export prices cheaper
+        // guard. A full_bucket the variant does NOT export prices cheaper
         // here too, but committing to it would fail at run_chunk, so an
         // executable candidate always wins over an unexecutable one.
         best = mono;
         best_cost = mono_cost;
     }
-    Ok(StepPlan { sub_batches: best, modeled_s: best_cost, monolithic_s: mono_cost })
+    // Same clamp as the elastic=false path: when the monolithic shape is
+    // not executable for this variant, it can price below what the
+    // exported buckets allow — report the baseline as at least the chosen
+    // cost so savings never go negative.
+    let mono_baseline = if mono_buckets.contains(&ctx.full_bucket) {
+        mono_cost
+    } else {
+        mono_cost.max(best_cost)
+    };
+    Ok((best, best_cost, mono_baseline))
+}
+
+/// Build the step plan for the given per-row inputs (one entry per active
+/// row, in group-row order).
+pub fn plan_step(ctx: &PlanCtx, rows: &[PlanRow]) -> Result<StepPlan> {
+    if rows.is_empty() {
+        bail!("plan_step on an empty step");
+    }
+    if ctx.variants.is_empty() {
+        bail!("plan_step with no variants");
+    }
+    if let Some(bad) = rows.iter().find(|r| r.variant >= ctx.variants.len()) {
+        bail!(
+            "row variant index {} out of range ({} variants)",
+            bad.variant, ctx.variants.len()
+        );
+    }
+    let draft_lens: Vec<usize> = rows.iter().map(|r| r.draft_len).collect();
+
+    // Plan each variant group independently (costs are additive and groups
+    // are disjoint, so per-group optimization is globally optimal), in
+    // variant-index order for determinism.
+    let mut sub_batches = Vec::new();
+    let (mut modeled_s, mut monolithic_s) = (0.0, 0.0);
+    for vi in 0..ctx.variants.len() {
+        let idxs: Vec<usize> =
+            (0..rows.len()).filter(|&i| rows[i].variant == vi).collect();
+        if idxs.is_empty() {
+            continue;
+        }
+        let (sbs, chosen, mono) = plan_group(ctx, vi, idxs, &draft_lens)?;
+        sub_batches.extend(sbs);
+        modeled_s += chosen;
+        monolithic_s += mono;
+    }
+    Ok(StepPlan { sub_batches, modeled_s, monolithic_s })
 }
 
 #[cfg(test)]
@@ -289,17 +396,24 @@ mod tests {
         PerfModel::new(device(188e12, 2e-5), model)
     }
 
-    fn ctx<'a>(perf: &'a PerfModel, buckets: &'a [usize], elastic: bool) -> PlanCtx<'a> {
+    fn vctx<'a>(buckets: &'a [usize]) -> Vec<VariantCtx<'a>> {
+        vec![VariantCtx { name: "fp32", verify_buckets: buckets, decode_buckets: buckets }]
+    }
+
+    fn ctx<'a>(perf: &'a PerfModel, variants: &'a [VariantCtx<'a>], full: usize,
+               elastic: bool) -> PlanCtx<'a> {
         PlanCtx {
             perf,
-            variant: "fp32",
+            variants,
             n_layers: perf.model.n_layers,
-            full_bucket: *buckets.last().unwrap(),
+            full_bucket: full,
             verify_chunk: 9,
-            verify_buckets: buckets,
-            decode_buckets: buckets,
             elastic,
         }
+    }
+
+    fn prows(lens: &[usize]) -> Vec<PlanRow> {
+        lens.iter().map(|&l| PlanRow::new(l, 0)).collect()
     }
 
     fn rows_of(plan: &StepPlan) -> Vec<usize> {
@@ -321,7 +435,7 @@ mod tests {
     #[test]
     fn oversize_group_splits_across_largest_bucket() {
         let sbs =
-            pack(FnKind::Verify, 9, (0..10).collect(), &[1usize; 10], &[1, 2, 4]).unwrap();
+            pack(FnKind::Verify, 0, 9, (0..10).collect(), &[1usize; 10], &[1, 2, 4]).unwrap();
         assert_eq!(sbs.len(), 3, "10 rows over b4 -> 4+4+2");
         assert_eq!(sbs[0].rows.len(), 4);
         assert_eq!(sbs[1].rows.len(), 4);
@@ -336,7 +450,7 @@ mod tests {
     fn packing_groups_similar_draft_lengths() {
         // 4 rows over b2 buckets: the two long drafts share a call so the
         // short call's tokens_used stays at 2, not 6.
-        let sbs = pack(FnKind::Verify, 9, vec![0, 1, 2, 3], &[5, 1, 5, 1], &[2]).unwrap();
+        let sbs = pack(FnKind::Verify, 0, 9, vec![0, 1, 2, 3], &[5, 1, 5, 1], &[2]).unwrap();
         assert_eq!(sbs.len(), 2);
         assert_eq!(sbs[0].rows, vec![0, 2]);
         assert_eq!(sbs[0].tokens_used, 6);
@@ -348,24 +462,51 @@ mod tests {
     fn empty_bucket_list_errors_and_elastic_false_is_monolithic() {
         let perf = kv_heavy();
         let buckets = [1usize, 4];
-        let mut c = ctx(&perf, &buckets, false);
-        let plan = plan_step(&c, &[3, 0, 0]).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, false);
+        let plan = plan_step(&c, &prows(&[3, 0, 0])).unwrap();
         assert_eq!(plan.sub_batches.len(), 1);
         assert_eq!(plan.sub_batches[0].bucket, 4, "configured bucket, seed behavior");
         assert_eq!(plan.modeled_s, plan.monolithic_s);
 
-        c.elastic = true;
-        c.verify_buckets = &[];
-        assert!(plan_step(&c, &[3]).is_err(), "drafting with no verify buckets");
-        assert!(plan_step(&c, &[]).is_err(), "empty step");
+        let none: [usize; 0] = [];
+        let vs_none =
+            vec![VariantCtx { name: "fp32", verify_buckets: &none, decode_buckets: &none }];
+        let c = ctx(&perf, &vs_none, 4, true);
+        assert!(plan_step(&c, &prows(&[3])).is_err(), "drafting with no verify buckets");
+        assert!(plan_step(&c, &prows(&[])).is_err(), "empty step");
+        let c = ctx(&perf, &vs, 4, true);
+        assert!(
+            plan_step(&c, &[PlanRow::new(3, 1)]).is_err(),
+            "row variant index out of range"
+        );
+    }
+
+    #[test]
+    fn monolithic_mode_never_commits_an_unexported_bucket() {
+        // elastic=false with a configured bucket the variant doesn't export
+        // (reachable when a governed group demotes to a reference with a
+        // different bucket set): the plan must pack over the variant's own
+        // buckets instead of committing a call run_chunk would reject.
+        let perf = kv_heavy();
+        let buckets = [1usize, 2];
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, false);
+        let plan = plan_step(&c, &prows(&[3, 0, 0])).unwrap();
+        assert!(
+            plan.sub_batches.iter().all(|sb| buckets.contains(&sb.bucket)),
+            "unexported bucket committed: {plan:?}"
+        );
+        assert_eq!(rows_of(&plan), vec![0, 1, 2]);
     }
 
     #[test]
     fn occupancy_one_shrinks_to_the_small_bucket() {
         for perf in [kv_heavy(), weight_heavy()] {
             let buckets = [1usize, 4];
-            let c = ctx(&perf, &buckets, true);
-            let plan = plan_step(&c, &[3]).unwrap();
+            let vs = vctx(&buckets);
+            let c = ctx(&perf, &vs, 4, true);
+            let plan = plan_step(&c, &prows(&[3])).unwrap();
             assert_eq!(plan.sub_batches.len(), 1);
             assert_eq!(plan.sub_batches[0].bucket, 1, "1 row never reads 4 rows of KV");
             assert_eq!(plan.sub_batches[0].fn_kind, FnKind::Verify);
@@ -377,8 +518,9 @@ mod tests {
     fn all_decode_rows_use_the_decode_function() {
         let perf = kv_heavy();
         let buckets = [1usize, 4];
-        let c = ctx(&perf, &buckets, true);
-        let plan = plan_step(&c, &[0, 0]).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, true);
+        let plan = plan_step(&c, &prows(&[0, 0])).unwrap();
         assert_eq!(plan.sub_batches.len(), 1);
         assert_eq!(plan.sub_batches[0].fn_kind, FnKind::Decode);
         assert_eq!(plan.sub_batches[0].chunk, 1);
@@ -394,8 +536,9 @@ mod tests {
         // at b2 with a spare row, so the decode row rides along — one call.
         let perf = weight_heavy();
         let buckets = [2usize, 4];
-        let c = ctx(&perf, &buckets, true);
-        let plan = plan_step(&c, &[4, 0]).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, true);
+        let plan = plan_step(&c, &prows(&[4, 0])).unwrap();
         assert_eq!(plan.sub_batches.len(), 1);
         let sb = &plan.sub_batches[0];
         assert_eq!(sb.fn_kind, FnKind::Verify);
@@ -412,8 +555,9 @@ mod tests {
         let lens = [6usize, 0, 0, 0]; // 1 drafting row drags 3 decode rows
 
         let pad = pad_heavy();
-        let c = ctx(&pad, &buckets, true);
-        let plan = plan_step(&c, &lens).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&pad, &vs, 4, true);
+        let plan = plan_step(&c, &prows(&lens)).unwrap();
         assert!(plan.sub_batches.len() > 1, "pad-heavy: split {plan:?}");
         assert!(plan.sub_batches.iter().any(|sb| sb.bucket < 4));
         assert!(plan.sub_batches.iter().any(|sb| sb.fn_kind == FnKind::Decode));
@@ -428,8 +572,9 @@ mod tests {
         assert!(plan.modeled_s < plan.monolithic_s);
 
         let wh = weight_heavy();
-        let c = ctx(&wh, &buckets, true);
-        let plan = plan_step(&c, &lens).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&wh, &vs, 4, true);
+        let plan = plan_step(&c, &prows(&lens)).unwrap();
         assert_eq!(
             plan.sub_batches.len(), 1,
             "weight-heavy: an extra call re-streams the weights, keep one"
@@ -445,9 +590,9 @@ mod tests {
         // planner must commit to the exported bucket instead.
         let perf = kv_heavy();
         let buckets = [4usize];
-        let mut c = ctx(&perf, &buckets, true);
-        c.full_bucket = 1;
-        let plan = plan_step(&c, &[3]).unwrap();
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 1, true);
+        let plan = plan_step(&c, &prows(&[3])).unwrap();
         assert_eq!(plan.sub_batches.len(), 1);
         assert_eq!(plan.sub_batches[0].bucket, 4, "must pick an exported bucket");
     }
@@ -457,12 +602,13 @@ mod tests {
         // sweep a grid of occupancy patterns under every cost regime
         for perf in [kv_heavy(), pad_heavy(), weight_heavy()] {
             let buckets = [1usize, 2, 4];
-            let c = ctx(&perf, &buckets, true);
+            let vs = vctx(&buckets);
+            let c = ctx(&perf, &vs, 4, true);
             for pat in [
                 vec![0], vec![5], vec![0, 0], vec![5, 0], vec![5, 5],
                 vec![5, 0, 0], vec![5, 5, 5, 5], vec![8, 4, 0, 2],
             ] {
-                let plan = plan_step(&c, &pat).unwrap();
+                let plan = plan_step(&c, &prows(&pat)).unwrap();
                 assert!(
                     plan.modeled_s <= plan.monolithic_s + 1e-15,
                     "plan for {pat:?} regressed: {plan:?}"
@@ -472,5 +618,87 @@ mod tests {
                 assert_eq!(rows, (0..pat.len()).collect::<Vec<_>>());
             }
         }
+    }
+
+    #[test]
+    fn mixed_variants_never_share_a_sub_batch_and_use_their_own_buckets() {
+        // Primary w8a8 exports only b4; the fp32 reference exports {1, 4}.
+        // Rows 0/2 are healthy (w8a8), rows 1/3 demoted (fp32): the plan
+        // must keep the variants in disjoint sub-batches, pick each group's
+        // bucket from its own list, and stay <= the per-group monolithic
+        // cost.
+        let perf = kv_heavy();
+        let w8a8_buckets = [4usize];
+        let fp32_buckets = [1usize, 4];
+        let vs = vec![
+            VariantCtx {
+                name: "w8a8",
+                verify_buckets: &w8a8_buckets,
+                decode_buckets: &w8a8_buckets,
+            },
+            VariantCtx {
+                name: "fp32",
+                verify_buckets: &fp32_buckets,
+                decode_buckets: &fp32_buckets,
+            },
+        ];
+        let c = ctx(&perf, &vs, 4, true);
+        let rows = vec![
+            PlanRow::new(3, 0),
+            PlanRow::new(2, 1),
+            PlanRow::new(0, 0),
+            PlanRow::new(0, 1),
+        ];
+        let plan = plan_step(&c, &rows).unwrap();
+        assert_eq!(rows_of(&plan), vec![0, 1, 2, 3], "every row planned once");
+        for sb in &plan.sub_batches {
+            let vi = sb.variant;
+            assert!(
+                sb.rows.iter().all(|&i| rows[i].variant == vi),
+                "sub-batch mixes variants: {plan:?}"
+            );
+            let exported = if sb.fn_kind == FnKind::Decode {
+                vs[vi].decode_buckets
+            } else {
+                vs[vi].verify_buckets
+            };
+            assert!(exported.contains(&sb.bucket), "unexported bucket: {plan:?}");
+        }
+        assert!(plan.sub_batches.iter().any(|sb| sb.variant == 0));
+        assert!(plan.sub_batches.iter().any(|sb| sb.variant == 1));
+        assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
+        // The w8a8 group is stuck at b4; the fp32 drafting+decode rows can
+        // shrink to b-below-4 calls — so at least one fp32 sub-batch is
+        // smaller than the configured bucket on this KV-bound device.
+        assert!(
+            plan.sub_batches.iter().any(|sb| sb.variant == 1 && sb.bucket < 4),
+            "fp32 group should shrink: {plan:?}"
+        );
+
+        // elastic=false: one monolithic call per variant group, never mixed.
+        let c = ctx(&perf, &vs, 4, false);
+        let plan = plan_step(&c, &rows).unwrap();
+        assert_eq!(plan.sub_batches.len(), 2, "one call per variant group");
+        assert!(plan.sub_batches.iter().all(|sb| sb.bucket == 4));
+        assert_eq!(plan.modeled_s, plan.monolithic_s);
+    }
+
+    #[test]
+    fn quantized_variant_prices_below_reference_for_the_same_shape() {
+        // The planner's cost hook must see the variant's bytes/weight: the
+        // same (bucket, tokens) sub-batch priced at w8a8 is strictly
+        // cheaper than at fp32 on a weight-dominated model.
+        let perf = weight_heavy();
+        let buckets = [1usize, 4];
+        let mk = |name: &'static str| {
+            vec![VariantCtx { name, verify_buckets: &buckets, decode_buckets: &buckets }]
+        };
+        let (vq, vf) = (mk("w8a8"), mk("fp32"));
+        let cq = ctx(&perf, &vq, 4, true);
+        let cf = ctx(&perf, &vf, 4, true);
+        let pq = plan_step(&cq, &prows(&[5])).unwrap();
+        let pf = plan_step(&cf, &prows(&[5])).unwrap();
+        assert_eq!(pq.sub_batches[0].bucket, pf.sub_batches[0].bucket);
+        assert!(pq.modeled_s < pf.modeled_s, "w8a8 plan must price below fp32");
     }
 }

@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -55,6 +55,36 @@ pub struct BucketStat {
     pub mean_rows: f64,
 }
 
+/// Per-variant execution tally (decode/verify/audit chunk calls that
+/// streamed this variant's weights).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VariantCalls {
+    pub variant: String,
+    pub calls: u64,
+}
+
+/// Point-in-time view of the fidelity governor (see
+/// `coordinator::governor`): how often the quantized verifier is being
+/// audited, how well it agrees with the reference, and how many classes
+/// have been demoted/re-promoted.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GovernorSnapshot {
+    /// Sampled shadow audits of primary-variant sub-batches.
+    pub audits: u64,
+    /// Scheduled re-promotion probes of demoted (reference) sub-batches.
+    pub probes: u64,
+    /// audits / eligible primary sub-batches (0 when nothing was eligible;
+    /// probes follow their own cadence and are excluded from this rate).
+    pub audit_rate: f64,
+    /// Mean per-row top-1 agreement over audited positions.
+    pub top1_agreement: f64,
+    /// Mean acceptance-length delta, quantized − reference (negative =
+    /// quantization costs accepted tokens).
+    pub accept_delta: f64,
+    pub demotions: u64,
+    pub promotions: u64,
+}
+
 /// Lock-free counters the engine thread publishes after every step and any
 /// thread may read at any time (the server's `stats` endpoint). The
 /// per-bucket tallies are the one mutex-guarded piece; they are written only
@@ -82,8 +112,21 @@ pub struct RouterStats {
     pub subbatches_milli: AtomicU64,
     pub completed: AtomicU64,
     pub cancelled: AtomicU64,
+    /// Fidelity-governor counters published by the engine thread.
+    pub gov_audits: AtomicU64,
+    pub gov_probes: AtomicU64,
+    pub gov_eligible: AtomicU64,
+    /// Mean audited top-1 agreement, fixed-point x1000.
+    pub gov_agreement_milli: AtomicU64,
+    /// Mean acceptance-length delta (quantized − reference), signed
+    /// fixed-point x1000.
+    pub gov_delta_milli: AtomicI64,
+    pub gov_demotions: AtomicU64,
+    pub gov_promotions: AtomicU64,
     /// Per-bucket occupancy/calls published by the engine thread.
     pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
+    /// Per-variant chunk-call tallies published by the engine thread.
+    pub variants: Mutex<std::collections::BTreeMap<String, u64>>,
 }
 
 /// Point-in-time view of [`RouterStats`].
@@ -106,6 +149,10 @@ pub struct StatsSnapshot {
     pub cancelled: u64,
     /// Per-bucket execution tallies, ascending by bucket.
     pub buckets: Vec<BucketStat>,
+    /// Per-variant chunk-call tallies, ascending by variant name.
+    pub variants: Vec<VariantCalls>,
+    /// Adaptive-precision governor view (all-zero when disabled).
+    pub governor: GovernorSnapshot,
 }
 
 impl StatsSnapshot {
@@ -136,6 +183,32 @@ impl StatsSnapshot {
                         })
                         .collect(),
                 ),
+            ),
+            (
+                "variants",
+                Json::arr(
+                    self.variants
+                        .iter()
+                        .map(|v| {
+                            Json::obj(vec![
+                                ("variant", Json::str(v.variant.clone())),
+                                ("calls", Json::num(v.calls as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "governor",
+                Json::obj(vec![
+                    ("audits", Json::num(self.governor.audits as f64)),
+                    ("probes", Json::num(self.governor.probes as f64)),
+                    ("audit_rate", Json::num(self.governor.audit_rate)),
+                    ("top1_agreement", Json::num(self.governor.top1_agreement)),
+                    ("accept_delta", Json::num(self.governor.accept_delta)),
+                    ("demotions", Json::num(self.governor.demotions as f64)),
+                    ("promotions", Json::num(self.governor.promotions as f64)),
+                ]),
             ),
         ])
     }
@@ -300,6 +373,30 @@ impl EngineHandle {
             completed: s.completed.load(Ordering::Relaxed),
             cancelled: s.cancelled.load(Ordering::Relaxed),
             buckets: s.buckets.lock().unwrap().values().copied().collect(),
+            variants: s
+                .variants
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(variant, &calls)| VariantCalls { variant: variant.clone(), calls })
+                .collect(),
+            governor: {
+                let audits = s.gov_audits.load(Ordering::Relaxed);
+                let eligible = s.gov_eligible.load(Ordering::Relaxed);
+                GovernorSnapshot {
+                    audits,
+                    probes: s.gov_probes.load(Ordering::Relaxed),
+                    audit_rate: if eligible == 0 {
+                        0.0
+                    } else {
+                        audits as f64 / eligible as f64
+                    },
+                    top1_agreement: s.gov_agreement_milli.load(Ordering::Relaxed) as f64 / 1e3,
+                    accept_delta: s.gov_delta_milli.load(Ordering::Relaxed) as f64 / 1e3,
+                    demotions: s.gov_demotions.load(Ordering::Relaxed),
+                    promotions: s.gov_promotions.load(Ordering::Relaxed),
+                }
+            },
         }
     }
 
@@ -421,6 +518,49 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
             .unwrap_or(0.0);
         buckets.insert(bucket, BucketStat { bucket, calls, mean_rows });
     }
+    drop(buckets);
+    let mut variants = stats.variants.lock().unwrap();
+    for variant in engine.variant_names() {
+        let calls = engine
+            .metrics
+            .counter(&crate::metrics::names::variant_calls(&variant));
+        if calls > 0 {
+            variants.insert(variant, calls);
+        }
+    }
+    drop(variants);
+    stats.gov_audits.store(
+        engine.metrics.counter(crate::metrics::names::GOVERNOR_AUDITS),
+        Ordering::Relaxed,
+    );
+    stats.gov_probes.store(
+        engine.metrics.counter(crate::metrics::names::GOVERNOR_PROBES),
+        Ordering::Relaxed,
+    );
+    stats.gov_eligible.store(
+        engine.metrics.counter(crate::metrics::names::GOVERNOR_ELIGIBLE),
+        Ordering::Relaxed,
+    );
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::GOVERNOR_AGREEMENT) {
+        stats
+            .gov_agreement_milli
+            .store((h.mean() * 1e3) as u64, Ordering::Relaxed);
+    }
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::GOVERNOR_ACCEPT_DELTA) {
+        stats
+            .gov_delta_milli
+            .store((h.mean() * 1e3) as i64, Ordering::Relaxed);
+    }
+    // Transition counts come from the governor itself (not the metrics
+    // registry): transitions forced outside the engine's audit loop — e.g.
+    // operational pre-demotion via `Engine::governor_mut` — must still be
+    // visible on the stats endpoint.
+    stats
+        .gov_demotions
+        .store(engine.governor().demotions, Ordering::Relaxed);
+    stats
+        .gov_promotions
+        .store(engine.governor().promotions, Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -454,6 +594,19 @@ mod tests {
                 BucketStat { bucket: 1, calls: 3, mean_rows: 1.0 },
                 BucketStat { bucket: 4, calls: 7, mean_rows: 3.2 },
             ],
+            variants: vec![
+                VariantCalls { variant: "fp32".into(), calls: 2 },
+                VariantCalls { variant: "w8a8".into(), calls: 8 },
+            ],
+            governor: GovernorSnapshot {
+                audits: 5,
+                probes: 2,
+                audit_rate: 0.625,
+                top1_agreement: 0.999,
+                accept_delta: -0.25,
+                demotions: 1,
+                promotions: 1,
+            },
         };
         let j = s.to_json();
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
@@ -470,5 +623,17 @@ mod tests {
         assert_eq!(buckets[1].get("bucket").unwrap().as_i64().unwrap(), 4);
         assert_eq!(buckets[1].get("calls").unwrap().as_i64().unwrap(), 7);
         assert!((buckets[1].get("mean_rows").unwrap().as_f64().unwrap() - 3.2).abs() < 1e-9);
+        let variants = j.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(variants.len(), 2);
+        assert_eq!(variants[1].get("variant").unwrap().as_str().unwrap(), "w8a8");
+        assert_eq!(variants[1].get("calls").unwrap().as_i64().unwrap(), 8);
+        let gov = j.get("governor").unwrap();
+        assert_eq!(gov.get("audits").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(gov.get("probes").unwrap().as_i64().unwrap(), 2);
+        assert!((gov.get("audit_rate").unwrap().as_f64().unwrap() - 0.625).abs() < 1e-9);
+        assert!((gov.get("top1_agreement").unwrap().as_f64().unwrap() - 0.999).abs() < 1e-9);
+        assert!((gov.get("accept_delta").unwrap().as_f64().unwrap() + 0.25).abs() < 1e-9);
+        assert_eq!(gov.get("demotions").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(gov.get("promotions").unwrap().as_i64().unwrap(), 1);
     }
 }

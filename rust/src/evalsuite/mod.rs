@@ -44,7 +44,11 @@ impl TaskReport {
     }
 }
 
-/// Load the eval set grouped by task.
+/// Load the eval set grouped by task. Degenerate rows — empty (`len == 0`
+/// / no ids) or inconsistent (`len` exceeding the ids actually present) —
+/// are skipped here so every downstream consumer can assume `len >= 1` and
+/// `ids` covers it; `len - 1` on a zero-length row used to underflow and
+/// panic in `forced_logits`.
 pub fn load_evalset(path: &std::path::Path) -> Result<Vec<(String, Vec<EvalRow>)>> {
     let j = parse_file(path).context("loading evalset.json")?;
     let mut out = Vec::new();
@@ -58,7 +62,10 @@ pub fn load_evalset(path: &std::path::Path) -> Result<Vec<(String, Vec<EvalRow>)
                     len: r.get("len")?.as_usize()?,
                 })
             })
-            .collect::<Result<Vec<_>, crate::util::json::JsonError>>()?;
+            .collect::<Result<Vec<_>, crate::util::json::JsonError>>()?
+            .into_iter()
+            .filter(|r: &EvalRow| r.len >= 1 && r.ids.len() >= r.len)
+            .collect();
         out.push((task.clone(), rows));
     }
     Ok(out)
@@ -77,7 +84,10 @@ fn forced_logits(mr: &Rc<ModelRuntime>, variant: &str, rows: &[&EvalRow])
     for chunk in rows.chunks(b) {
         let mut toks = vec![0i32; b * p];
         for (i, r) in chunk.iter().enumerate() {
-            let n = (r.len - 1).min(p); // last id is target-only
+            // last id is target-only; saturate so an empty row (filtered at
+            // load, but defend anyway) contributes zero positions instead
+            // of a usize underflow panic
+            let n = r.len.saturating_sub(1).min(p);
             toks[i * p..i * p + n].copy_from_slice(&r.ids[..n]);
         }
         let (k, v) = mr.empty_cache(cfg.n_layers, b);
@@ -111,7 +121,7 @@ pub fn compare_task(mr: &Rc<ModelRuntime>, task: &str, rows: &[EvalRow],
     let mut pf = Vec::new();
     let mut pq = Vec::new();
     for ((row, f), q) in use_rows.iter().zip(&lf).zip(&lq) {
-        let n = (row.len - 1).min(cfg.prefill_len);
+        let n = row.len.saturating_sub(1).min(cfg.prefill_len);
         for pos in 0..n {
             let target = row.ids[pos + 1] as usize;
             let rf = f.row(&[pos]);
@@ -161,6 +171,34 @@ mod tests {
         assert_eq!(rows[0].0, "gsm8k");
         assert_eq!(rows[0].1[0].ids, vec![1, 2, 3, 4]);
         assert_eq!(rows[0].1[0].len, 4);
+    }
+
+    #[test]
+    fn empty_and_inconsistent_rows_are_skipped() {
+        // Regression: a zero-length row made `(r.len - 1)` underflow and
+        // panic downstream; rows whose `len` exceeds their ids would read
+        // out of bounds. Both are dropped at load.
+        let j = parse(
+            r#"{"tasks": {"gsm8k": [
+                 {"ids": [], "len": 0},
+                 {"ids": [7], "len": 0},
+                 {"ids": [1,2], "len": 5},
+                 {"ids": [9], "len": 1},
+                 {"ids": [1,2,3,4], "len": 4}
+               ],
+               "empty_task": [{"ids": [], "len": 0}]}}"#,
+        )
+        .unwrap();
+        let path = std::path::Path::new("/tmp/quasar_evalset_empty_rows.json");
+        std::fs::write(path, j.to_string()).unwrap();
+        let tasks = load_evalset(path).unwrap();
+        assert_eq!(tasks.len(), 2);
+        let gsm = &tasks.iter().find(|(t, _)| t == "gsm8k").unwrap().1;
+        assert_eq!(gsm.len(), 2, "only consistent non-empty rows survive");
+        assert_eq!(gsm[0].ids, vec![9]);
+        assert_eq!(gsm[1].ids, vec![1, 2, 3, 4]);
+        let empty = &tasks.iter().find(|(t, _)| t == "empty_task").unwrap().1;
+        assert!(empty.is_empty(), "a task of only empty rows loads as empty, not an error");
     }
 
     #[test]

@@ -9,11 +9,21 @@
 //!   KV-cache manager, metrics and server. Python never runs on the request
 //!   path. Each engine step runs a plan → gather → execute → scatter →
 //!   commit pipeline (`coordinator::plan`): active rows are partitioned into
-//!   sub-batches by required function (decode-only vs verify) and each
-//!   sub-batch executes through the cheapest exported batch bucket on the
-//!   cost model, so priced memory traffic tracks useful work instead of the
-//!   configured bucket — low-occupancy groups stop streaming idle KV rows
-//!   and decode-only rows stop paying full verify-chunk traffic.
+//!   sub-batches by required function (decode-only vs verify) *and* by
+//!   verifier precision, and each sub-batch executes through the cheapest
+//!   exported (batch bucket, weight variant) pair on the cost model, so
+//!   priced memory traffic tracks useful work instead of the configured
+//!   shape — low-occupancy groups stop streaming idle KV rows and
+//!   decode-only rows stop paying full verify-chunk traffic.
+//!
+//! Verification precision is a *serving-time policy*, not an offline A/B
+//! pin: the fidelity governor (`coordinator::governor`) shadow re-verifies a
+//! sampled fraction of quantized (W8A8) verify sub-batches against the fp32
+//! reference, tracks per-request-class top-1 agreement (EWMA with
+//! hysteresis), demotes a drifting class to full precision and probes it for
+//! re-promotion — auditing the paper's §4.5 "quantization does not flip the
+//! top-1" assumption online instead of trusting it. Audit rate, agreement,
+//! demotions and per-variant call counts surface through `{"cmd":"stats"}`.
 //!
 //! Threading model (serving path): pool workers in `server` share one
 //! `Sync` [`coordinator::EngineHandle`] with no outer lock; submissions

@@ -44,6 +44,7 @@ fn real_main() -> Result<()> {
     .opt("batch", Some("4"), "batch bucket (1 or 4)")
     .opt("sched", Some("fifo"), "admission policy: fifo | spf | priority")
     .opt("plan", Some("elastic"), "step planning: elastic | monolithic")
+    .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -71,6 +72,11 @@ fn real_main() -> Result<()> {
             "elastic" => true,
             "monolithic" => false,
             other => bail!("unknown plan mode '{other}' (elastic|monolithic)"),
+        },
+        governor: if parsed.has("governor") {
+            quasar::coordinator::GovernorConfig::on()
+        } else {
+            Default::default()
         },
     };
 

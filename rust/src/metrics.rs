@@ -36,6 +36,32 @@ pub mod names {
     /// monolithic configured-bucket call (>= 0 by planner invariant).
     pub const PLANNED_SAVINGS_S: &str = "planned_savings_s";
 
+    /// Counter: sampled shadow audits of primary-variant sub-batches.
+    pub const GOVERNOR_AUDITS: &str = "governor_audits";
+    /// Counter: scheduled re-promotion probes of reference sub-batches
+    /// (tallied apart from audits so audits/eligible stays a true rate).
+    pub const GOVERNOR_PROBES: &str = "governor_probes";
+    /// Counter: primary-variant sub-batches the governor *could* have
+    /// audited (the audit-rate denominator).
+    pub const GOVERNOR_ELIGIBLE: &str = "governor_eligible";
+    /// Counter: audits skipped because the shadow variant doesn't export
+    /// the needed (fn, bucket) shape.
+    pub const GOVERNOR_AUDIT_SKIPPED: &str = "governor_audit_skipped";
+    /// Histogram: top-1 agreement between quantized and reference logits
+    /// over a class's verified positions, one sample per (class, shadow
+    /// call) — a shadow execution's rows are correlated, so they aggregate
+    /// into a single observation (1.0 = quantization never flipped the
+    /// argmax — the paper's §4.5 criterion).
+    pub const GOVERNOR_AGREEMENT: &str = "governor_agreement";
+    /// Histogram: per-(class, shadow call) acceptance-length delta,
+    /// quantized − reference (negative = the quantized verifier accepts
+    /// shorter prefixes than full precision would).
+    pub const GOVERNOR_ACCEPT_DELTA: &str = "governor_accept_delta";
+    /// Counter: request classes demoted to the reference variant.
+    pub const GOVERNOR_DEMOTIONS: &str = "governor_demotions";
+    /// Counter: request classes re-promoted to the primary variant.
+    pub const GOVERNOR_PROMOTIONS: &str = "governor_promotions";
+
     /// Histogram name: rows actually carried per call executed at `bucket`
     /// (per-bucket occupancy).
     pub fn bucket_occupancy(bucket: usize) -> String {
@@ -45,6 +71,12 @@ pub mod names {
     /// Counter name: calls executed at `bucket`.
     pub fn bucket_calls(bucket: usize) -> String {
         format!("bucket_calls_b{bucket}")
+    }
+
+    /// Counter name: decode/verify/audit chunk calls that streamed
+    /// `variant`'s weights (prefill excluded).
+    pub fn variant_calls(variant: &str) -> String {
+        format!("variant_calls_{variant}")
     }
 }
 

@@ -132,33 +132,51 @@ impl PerfModel {
 
     /// Price the drafter's own work. N-gram lookups are host-side and cost
     /// `drafter_cost_per_token_s`; pruned-model drafting is priced as real
-    /// forward passes at the drafter's depth.
-    pub fn price_draft_cost(&self, c: &DraftCost, pruned_layers: Option<usize>) -> f64 {
+    /// forward passes of the *drafter's own artifact variant* at the
+    /// drafter's depth — `drafter` is `(variant, n_layers)`, e.g.
+    /// `("pruned75", 4)`, so a pruned variant with its own
+    /// `bytes_per_weight` entry is no longer silently priced as fp32.
+    pub fn price_draft_cost(&self, c: &DraftCost, drafter: Option<(&str, usize)>) -> f64 {
         let mut t = c.lookup_tokens as f64 * self.device.drafter_cost_per_token_s;
-        if let Some(nl) = pruned_layers {
+        if let Some((variant, nl)) = drafter {
             t += c.prefill_calls as f64
-                * self.price_parts("fp32", nl, 1, self.model.prefill_len).total();
-            t += c.decode_calls as f64 * self.price_parts("fp32", nl, 1, 1).total();
+                * self.price_parts(variant, nl, 1, self.model.prefill_len).total();
+            t += c.decode_calls as f64 * self.price_parts(variant, nl, 1, 1).total();
         }
         t
     }
 
-    /// Modeled wall-clock of a whole run.
-    pub fn run_time(&self, log: &CallLog, pruned_layers: Option<usize>) -> f64 {
+    /// Modeled wall-clock of a whole run. `drafter` prices pruned-model
+    /// drafting: `(artifact variant, depth)`, `None` for host-side drafters.
+    pub fn run_time(&self, log: &CallLog, drafter: Option<(&str, usize)>) -> f64 {
         let calls: f64 = log.records.iter().map(|r| self.price(r).total()).sum();
-        calls + self.price_draft_cost(&log.draft_cost, pruned_layers)
+        calls + self.price_draft_cost(&log.draft_cost, drafter)
     }
 
     /// Modeled decode-phase time only (prefill excluded): matches how the
     /// paper reports decoding speedup (prefill is identical across methods).
-    pub fn decode_time(&self, log: &CallLog, pruned_layers: Option<usize>) -> f64 {
+    /// Governor shadow audits *are* included — they are real decode-phase
+    /// traffic the adaptive-precision policy pays for its safety net.
+    pub fn decode_time(&self, log: &CallLog, drafter: Option<(&str, usize)>) -> f64 {
         let calls: f64 = log
             .records
             .iter()
             .filter(|r| r.fn_kind != FnKind::Prefill)
             .map(|r| self.price(r).total())
             .sum();
-        calls + self.price_draft_cost(&log.draft_cost, pruned_layers)
+        calls + self.price_draft_cost(&log.draft_cost, drafter)
+    }
+
+    /// Modeled seconds spent on fidelity-governor shadow calls only (the
+    /// audit overhead inside [`PerfModel::decode_time`]). Each audit is
+    /// priced like any chunk call at the shadow variant's weight stream and
+    /// the audited sub-batch's (bucket, tokens) shape.
+    pub fn audit_time(&self, log: &CallLog) -> f64 {
+        log.records
+            .iter()
+            .filter(|r| r.fn_kind == FnKind::Audit)
+            .map(|r| self.price(r).total())
+            .sum()
     }
 
     /// Eq. 13 closed form: speedup of speculation with acceptance rate
@@ -188,7 +206,8 @@ mod tests {
             bytes_per_weight: BTreeMap::from([
                 ("fp32".to_string(), 2.0),
                 ("w8a8".to_string(), 1.0),
-                ("pruned75".to_string(), 2.0),
+                // quantized pruned drafter: its own (smaller) weight stream
+                ("pruned75".to_string(), 1.0),
             ]),
             kernel_launch_s: 2e-5,
             drafter_cost_per_token_s: 1e-6,
@@ -295,8 +314,54 @@ mod tests {
                 draft_cost: DraftCost { decode_calls: 10, ..Default::default() },
                 ..Default::default()
             },
-            Some(3),
+            Some(("fp32", 3)),
         );
         assert!(with_pruned > 0.0);
+    }
+
+    #[test]
+    fn draft_cost_prices_the_drafter_variant_not_fp32() {
+        // Regression: `price_draft_cost` used to hardcode "fp32" for
+        // pruned-model drafting, ignoring the drafter's own
+        // `bytes_per_weight`. With pruned75 at 1 byte/weight the same call
+        // counts must now price strictly below the fp32-priced equivalent.
+        let pm = pm();
+        let c = DraftCost { prefill_calls: 1, decode_calls: 20, ..Default::default() };
+        let as_pruned = pm.price_draft_cost(&c, Some(("pruned75", 4)));
+        let as_fp32 = pm.price_draft_cost(&c, Some(("fp32", 4)));
+        assert!(
+            as_pruned < as_fp32,
+            "pruned75 (1 B/weight) priced {as_pruned} !< fp32 {as_fp32}"
+        );
+        // and the gap is exactly the per-call price difference
+        let per_call = pm.price_parts("pruned75", 4, 1, 1).total();
+        let per_call_fp32 = pm.price_parts("fp32", 4, 1, 1).total();
+        assert!(per_call < per_call_fp32);
+    }
+
+    #[test]
+    fn audit_calls_are_priced_into_decode_time_and_isolated_by_audit_time() {
+        let pm = pm();
+        let verify = CallRecord {
+            variant: "w8a8".into(), fn_kind: FnKind::Verify, batch: 1,
+            n_layers: 6, active_rows: 1, tokens_used: 6, chunk_len: 9,
+            useful_tokens: 6, wall_s: 0.0,
+        };
+        let audit = CallRecord {
+            variant: "fp32".into(), fn_kind: FnKind::Audit, ..verify.clone()
+        };
+        let mut bare = CallLog::default();
+        bare.record(verify.clone());
+        let mut audited = CallLog::default();
+        audited.record(verify);
+        audited.record(audit.clone());
+        let (t_bare, t_audited) = (pm.decode_time(&bare, None), pm.decode_time(&audited, None));
+        assert!(t_audited > t_bare, "audit traffic must show up in decode time");
+        let overhead = pm.audit_time(&audited);
+        assert!((t_audited - t_bare - overhead).abs() < 1e-15);
+        // the shadow runs the reference weights: priced as fp32, i.e. the
+        // audit costs *more* than the w8a8 call it shadows
+        assert!(overhead > t_bare);
+        assert_eq!(pm.audit_time(&bare), 0.0);
     }
 }

@@ -24,12 +24,19 @@ pub struct ModelRuntime {
     pub entry: ModelEntry,
     weights: RefCell<HashMap<String, Rc<WeightStore>>>, // npz path -> store
     execs: RefCell<HashMap<String, Rc<CompiledChunk>>>, // artifact name -> exec
-    /// Reusable KV cache pairs keyed by (n_layers, batch-bucket). Pooled
-    /// tensors are *dirty*: callers must overwrite every row they expect the
-    /// model to read (the gather path copies whole rows, so this holds by
-    /// construction; rows outside the gathered set only ever hold stale
-    /// finite values, which batch-independent per-row attention ignores).
-    scratch: RefCell<HashMap<(usize, usize), Vec<(Tensor<f32>, Tensor<f32>)>>>,
+    /// Reusable KV cache pairs keyed by (variant, n_layers, batch-bucket).
+    /// Pooled tensors are *dirty*: callers must overwrite every row they
+    /// expect the model to read (the gather path copies whole rows, so this
+    /// holds by construction; rows outside the gathered set only ever hold
+    /// stale finite values, which batch-independent per-row attention
+    /// ignores). Keying by variant keeps the fidelity governor's
+    /// shadow-audit scratch (reference variant) and any demoted-class
+    /// traffic from thrashing the primary variant's hot pair — each
+    /// (variant, depth, bucket) shape the engine alternates between keeps
+    /// its own warm pool. The nesting (variant name outside, shape inside)
+    /// lets the hot path look up by `&str` without allocating a key.
+    #[allow(clippy::type_complexity)]
+    scratch: RefCell<HashMap<String, HashMap<(usize, usize), Vec<(Tensor<f32>, Tensor<f32>)>>>>,
     /// Device pricing constants, carried from the manifest so the engine's
     /// step planner can cost candidate sub-batch plans without re-loading it.
     cost_model: CostModelCfg,
@@ -120,14 +127,17 @@ impl ModelRuntime {
         (Tensor::zeros(&dims), Tensor::zeros(&dims))
     }
 
-    /// Borrow a bucket-shaped KV scratch pair from the pool (allocating on
-    /// first use). Contents are *dirty* — see the `scratch` field docs.
-    /// Return it with [`ModelRuntime::return_scratch`] when done.
-    pub fn take_scratch(&self, n_layers: usize, batch: usize) -> (Tensor<f32>, Tensor<f32>) {
+    /// Borrow a bucket-shaped KV scratch pair from the `(variant, n_layers,
+    /// batch)` pool (allocating on first use). Contents are *dirty* — see
+    /// the `scratch` field docs. Return it with
+    /// [`ModelRuntime::return_scratch`] under the same variant when done.
+    pub fn take_scratch(&self, variant: &str, n_layers: usize,
+                        batch: usize) -> (Tensor<f32>, Tensor<f32>) {
         if let Some(pair) = self
             .scratch
             .borrow_mut()
-            .get_mut(&(n_layers, batch))
+            .get_mut(variant)
+            .and_then(|shapes| shapes.get_mut(&(n_layers, batch)))
             .and_then(Vec::pop)
         {
             return pair;
@@ -136,14 +146,22 @@ impl ModelRuntime {
     }
 
     /// Hand a scratch pair (or an advanced cache of the same shape) back to
-    /// the pool; dropped silently once the per-shape cap is reached.
-    pub fn return_scratch(&self, k: Tensor<f32>, v: Tensor<f32>) {
+    /// its variant's pool; dropped silently once the per-shape cap is
+    /// reached.
+    pub fn return_scratch(&self, variant: &str, k: Tensor<f32>, v: Tensor<f32>) {
         if k.dims.len() != 5 || k.dims != v.dims {
             return; // not a cache-shaped pair; refuse silently
         }
-        let key = (k.dims[0], k.dims[1]);
         let mut pool = self.scratch.borrow_mut();
-        let slot = pool.entry(key).or_default();
+        if !pool.contains_key(variant) {
+            // allocate the variant key once, on first sight
+            pool.insert(variant.to_string(), HashMap::new());
+        }
+        let slot = pool
+            .get_mut(variant)
+            .expect("just ensured")
+            .entry((k.dims[0], k.dims[1]))
+            .or_default();
         if slot.len() < SCRATCH_POOL_CAP {
             slot.push((k, v));
         }

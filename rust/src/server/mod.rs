@@ -12,7 +12,14 @@
 //!                                     "chunk_efficiency": ..,
 //!                                     "subbatches_per_step": ..,
 //!                                     "buckets": [{"bucket": 1, "calls":
-//!                                     .., "mean_rows": ..}, ..], ...}
+//!                                     .., "mean_rows": ..}, ..],
+//!                                     "variants": [{"variant": "w8a8",
+//!                                     "calls": ..}, ..],
+//!                                     "governor": {"audits": ..,
+//!                                     "probes": .., "audit_rate": ..,
+//!                                     "top1_agreement": .., "accept_delta":
+//!                                     .., "demotions": .., "promotions":
+//!                                     ..}, ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
 //! Threading model: each connection is handled by a pool worker, and workers

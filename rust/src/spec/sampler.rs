@@ -154,15 +154,15 @@ where
                 // q is a point mass at x: residual is p with x zeroed.
                 let mut resid = p.clone();
                 resid[x] = 0.0;
-                renorm_sample(&mut resid, rng)
+                renorm_sample(&resid, &p, rng)
             }
             Some(rows) => {
-                let mut resid: Vec<f32> = p
+                let resid: Vec<f32> = p
                     .iter()
                     .zip(&rows[i])
                     .map(|(&pv, &qv)| (pv - qv).max(0.0))
                     .collect();
-                renorm_sample(&mut resid, rng)
+                renorm_sample(&resid, &p, rng)
             }
         };
         return VerifyOutcome { accepted: i, next_token: next };
@@ -183,14 +183,18 @@ pub fn truncate_at_eos(tokens: &mut Vec<i32>) {
     }
 }
 
-fn renorm_sample(resid: &mut [f32], rng: &mut Pcg) -> i32 {
+/// Sample from an unnormalized residual distribution, falling back to the
+/// verifier's own row `p` when the residual carries no mass.
+fn renorm_sample(resid: &[f32], p: &[f32], rng: &mut Pcg) -> i32 {
     let sum: f32 = resid.iter().sum();
     if sum <= 0.0 {
-        // Degenerate residual (p == q exactly): fall back to argmax of p-q=0
-        // -> uniform over support is meaningless; emit argmax of resid's
-        // original p via the largest entry (all zero -> token 0). In practice
-        // unreachable because p has full support after softmax.
-        return argmax(resid) as i32;
+        // Degenerate residual: q >= p at every token within f32, which is
+        // exactly the q ≈ p regime a well-calibrated (e.g. quantized)
+        // drafter produces. Eq. 3's corrective distribution carries no
+        // mass, so the lossless fallback is the verifier's own row p.
+        // (The old code took argmax of the all-zero residual and silently
+        // emitted token 0 every time.)
+        return sample_probs(p, rng) as i32;
     }
     let r = rng.f64() as f32 * sum;
     let mut acc = 0.0f32;
@@ -312,6 +316,42 @@ mod tests {
             let out = verify_draft(&d, &f, 1.0, &mut rng);
             assert_eq!(out.accepted, 1, "token {tok} should always accept");
         }
+    }
+
+    #[test]
+    fn degenerate_residual_falls_back_to_verifier_row_not_token_zero() {
+        // Regression: q >= p at every token (q ≈ p, the quantized-draft
+        // regime) makes Eq. 3's residual identically zero on every
+        // rejection. The old fallback took argmax of the all-zero residual
+        // and always emitted token 0; the corrective token must instead be
+        // sampled from the verifier's own row p.
+        let logits = vec![vec![-10.0f32, 1.0, 0.0], vec![0.0; 3]];
+        let mut p = Vec::new();
+        softmax_t(&logits[0], 1.0, &mut p);
+        // q = 1.25 * p: pointwise >= p (zero residual), accept prob 0.8
+        let q: Vec<f32> = p.iter().map(|x| x * 1.25).collect();
+        let f = rows(logits.clone());
+        let d = Draft { tokens: vec![1], q_rows: Some(vec![q]) };
+        let mut rng = Pcg::seeded(13);
+        let mut rejected = 0usize;
+        let mut seen = [0usize; 3];
+        for _ in 0..4000 {
+            let out = verify_draft(&d, &f, 1.0, &mut rng);
+            if out.accepted == 0 {
+                rejected += 1;
+                seen[out.next_token as usize] += 1;
+            }
+        }
+        assert!(rejected > 500, "q > p must reject ~20% of draws, got {rejected}");
+        // p ~ [2e-5, 0.73, 0.27]: the fallback must cover p's support and
+        // must not collapse onto token 0 (whose mass is negligible).
+        assert!(seen[1] > 0 && seen[2] > 0, "fallback must sample from p: {seen:?}");
+        assert!(
+            seen[0] * 10 < rejected,
+            "token 0 dominated the fallback (old argmax-of-zero bug): {seen:?}"
+        );
+        let frac1 = seen[1] as f64 / rejected as f64;
+        assert!((frac1 - p[1] as f64).abs() < 0.05, "fallback should track p: {frac1}");
     }
 
     #[test]

@@ -4,8 +4,8 @@
 use std::collections::BTreeMap;
 
 use quasar::coordinator::{
-    plan_step, BatchGroup, CallLog, CallRecord, FnKind, GenParams, PlanCtx, Priority, Request,
-    SchedPolicy, Scheduler,
+    plan_step, BatchGroup, CallLog, CallRecord, FnKind, GenParams, Governor, GovernorConfig,
+    PlanCtx, PlanRow, Priority, Request, Route, SchedPolicy, Scheduler, Transition, VariantCtx,
 };
 use quasar::perfmodel::PerfModel;
 use quasar::prop_assert;
@@ -376,7 +376,10 @@ fn tset(t: &mut Tensor<f32>, idx: &[usize], val: f32) {
 /// tokens into the cache at `pos..pos+chunk` (every layer/head/dim carries
 /// the token value) and emits one-hot logits whose argmax depends on the
 /// row's entire cache prefix — so a wrong row map, stale gather, or wrong
-/// position offset changes the output stream.
+/// position offset changes the output stream. `flip` models a *degraded
+/// quantized variant*: same KV writes, but every argmax shifted by one —
+/// zero top-1 agreement with the reference, which is what the fidelity
+/// governor must catch.
 fn mock_chunk(
     k: &mut Tensor<f32>,
     v: &mut Tensor<f32>,
@@ -384,6 +387,7 @@ fn mock_chunk(
     pos: &[i32],
     bucket: usize,
     chunk: usize,
+    flip: bool,
 ) -> Tensor<f32> {
     let mut logits = Tensor::<f32>::zeros(&[bucket, chunk, SIM_VOCAB]);
     for r in 0..bucket {
@@ -400,8 +404,11 @@ fn mock_chunk(
             }
             let prefix: f32 = (0..=p0 + j).map(|p| k.at(&[0, r, 0, p, 0])).sum();
             // rem_euclid: padding rows of a dirty scratch can sum negative
-            let next = (prefix as i64 * 31 + (p0 + j) as i64 * 7)
+            let mut next = (prefix as i64 * 31 + (p0 + j) as i64 * 7)
                 .rem_euclid(SIM_VOCAB as i64) as usize;
+            if flip {
+                next = (next + 1) % SIM_VOCAB;
+            }
             tset(&mut logits, &[r, j, next], 1.0);
         }
     }
@@ -424,6 +431,9 @@ struct Sim {
     perf: PerfModel,
     full: usize,
     elastic: bool,
+    /// Degraded-variant mode: the mock chunk flips every argmax (see
+    /// `mock_chunk`). Toggled per step by the governed-sim test.
+    flip: bool,
 }
 
 impl Sim {
@@ -445,7 +455,7 @@ impl Sim {
             let row = group.join(i, &k1, &v1).unwrap();
             reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
         }
-        Sim { group, reqs, log: CallLog::default(), perf, full, elastic }
+        Sim { group, reqs, log: CallLog::default(), perf, full, elastic, flip: false }
     }
 
     fn commit(req: &mut SimReq, draft: &[i32], logits: &Tensor<f32>, lrow: usize) {
@@ -498,7 +508,7 @@ impl Sim {
         }
         let mut k = self.group.k.clone();
         let mut v = self.group.v.clone();
-        let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk);
+        let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk, self.flip);
         self.group.k = k; // whole-cache adopt, garbage rows included
         self.group.v = v;
         let used = drafts.iter().map(|d| d.len() + 1).max().unwrap_or(1);
@@ -513,20 +523,24 @@ impl Sim {
     /// The refactored shape: plan, then gather/execute/scatter per
     /// sub-batch against dirty scratch caches.
     fn step_elastic(&mut self, drafts: &[Vec<i32>]) {
-        let lens: Vec<usize> = drafts.iter().map(Vec::len).collect();
+        let rows: Vec<PlanRow> =
+            drafts.iter().map(|d| PlanRow::new(d.len(), 0)).collect();
         let buckets = [1usize, 2, 4];
         let plan = {
+            let variants = [VariantCtx {
+                name: "fp32",
+                verify_buckets: &buckets,
+                decode_buckets: &buckets,
+            }];
             let ctx = PlanCtx {
                 perf: &self.perf,
-                variant: "fp32",
+                variants: &variants,
                 n_layers: SIM_L,
                 full_bucket: self.full,
                 verify_chunk: SIM_CHUNK,
-                verify_buckets: &buckets,
-                decode_buckets: &buckets,
                 elastic: true,
             };
-            plan_step(&ctx, &lens).unwrap()
+            plan_step(&ctx, &rows).unwrap()
         };
         assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
         for sb in &plan.sub_batches {
@@ -547,7 +561,7 @@ impl Sim {
                 }
                 pos[i] = req.cached as i32;
             }
-            let logits = mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk);
+            let logits = mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk, self.flip);
             self.group.scatter_rows(&row_map, &sk, &sv).unwrap();
             self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
                         sb.useful_tokens);
@@ -658,4 +672,191 @@ fn mixed_workload_splits_into_cheaper_sub_batches() {
     );
     // chunk efficiency improves: decode rows no longer pad the verify chunk
     assert!(ela.log.chunk_efficiency() > mono.log.chunk_efficiency());
+}
+
+// ---------------------------------------------------------------------
+// Fidelity governor: the precision-policy state machine and its coupling
+// to committed output. The quantized variant is modeled by `mock_chunk`'s
+// `flip` mode (every argmax shifted — zero top-1 agreement); audits report
+// agreement 1.0 when the variants coincide and 0.0 when flipped, exactly
+// what the engine's logits comparison would measure on these one-hot rows.
+// ---------------------------------------------------------------------
+
+/// Audits a degraded verifier must demote within a bounded window:
+/// `max(min_audits, ceil(ln floor / ln(1-alpha)))` forced-zero audits.
+#[test]
+fn governor_demotes_within_the_hysteresis_window_for_any_config() {
+    prop_check(
+        "bounded demotion window",
+        300,
+        |rng| {
+            let min_audits = 1 + rng.below(8);
+            let floor = 0.5 + rng.f64() * 0.49; // (0.5, 0.99)
+            let alpha = 0.05 + rng.f64() * 0.9; // (0.05, 0.95)
+            (min_audits, floor, alpha)
+        },
+        |&(min_audits, floor, alpha)| {
+            // Clamp so shrunk candidates (the framework drives values
+            // toward 0 on failure) stay in the config's sane domain.
+            let min_audits = min_audits.clamp(1, 8);
+            let floor = floor.clamp(0.5, 0.99);
+            let alpha = alpha.clamp(0.05, 0.95);
+            let mut g = Governor::new(
+                GovernorConfig {
+                    enabled: true,
+                    min_audits: min_audits as u32,
+                    floor,
+                    alpha,
+                    ..Default::default()
+                },
+                min_audits ^ 0xA0D1,
+            );
+            // EWMA from the optimistic 1.0 start under forced-zero
+            // agreement: value after n audits is (1-alpha)^n. +1 absorbs
+            // the strict-inequality boundary when the ratio lands on an
+            // integer (EWMA == floor does not demote).
+            let sink = (floor.ln() / (1.0 - alpha).ln()).ceil() as u64 + 1;
+            let window = min_audits.max(sink);
+            let mut demoted_at = None;
+            for i in 1..=window + 2 {
+                g.begin_step();
+                match g.record_audit("c", 0.0, 0.0) {
+                    Some(Transition::Demoted) => {
+                        demoted_at = Some(i);
+                        break;
+                    }
+                    Some(Transition::Promoted) => {
+                        return Err("promoted a healthy-born class".into())
+                    }
+                    None => {}
+                }
+            }
+            let at = match demoted_at {
+                Some(at) => at,
+                None => return Err(format!("never demoted within window {window}")),
+            };
+            prop_assert!(at >= min_audits, "demoted before the hysteresis gate");
+            prop_assert!(at <= window, "demoted later than the bound {window}");
+            prop_assert!(g.resolve("c") == Route::Reference, "resolve after demotion");
+            ok()
+        },
+    );
+}
+
+/// Perfect agreement must never demote, no matter how long the run.
+#[test]
+fn governor_never_demotes_on_perfect_agreement() {
+    prop_check(
+        "perfect agreement stays primary",
+        100,
+        |rng| (1 + rng.below(500), rng.next_u64()),
+        |&(n_audits, seed)| {
+            let mut g = Governor::new(
+                GovernorConfig { enabled: true, floor: 0.995, min_audits: 1, ..Default::default() },
+                seed,
+            );
+            for _ in 0..n_audits {
+                g.begin_step();
+                if g.record_audit("c", 1.0, 0.0).is_some() {
+                    return Err("transitioned under perfect agreement".into());
+                }
+                prop_assert!(g.resolve("c") == Route::Primary, "left Primary");
+            }
+            prop_assert!(g.demotions == 0, "demotion counter moved");
+            ok()
+        },
+    );
+}
+
+/// End-to-end over the mock engine: a degraded quantized variant visibly
+/// corrupts output until the governor demotes; afterwards (state persists
+/// across requests) a governed run is bit-identical to the fp32-pinned sim.
+/// A healthy variant never demotes and never diverges.
+#[test]
+fn governed_sim_demotes_on_degraded_quant_then_matches_fp32_pinned() {
+    let gcfg = GovernorConfig {
+        enabled: true,
+        audit_rate: 1.0,
+        floor: 0.98,
+        min_audits: 3,
+        alpha: 0.25,
+        ..Default::default()
+    };
+
+    // Phase 1 — degraded: drive a governed sim whose quantized variant
+    // flips every argmax. Audits report agreement 0.0 while the primary
+    // runs quantized, 1.0 once probes compare identical fp32 outputs.
+    let mut governor = Governor::new(gcfg.clone(), 7);
+    let mut gov = Sim::new(2, 4, sim_perf(0), false);
+    let mut fp = Sim::new(2, 4, sim_perf(0), false);
+    let mut rng = Pcg::seeded(0x60_5157);
+    let mut demoted_at = None;
+    for step in 1..=10usize {
+        let drafts: Vec<Vec<i32>> = (0..2)
+            .map(|_| {
+                let len = rng.usize_below(SIM_CHUNK);
+                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+            })
+            .collect();
+        governor.begin_step();
+        let quant = governor.resolve("c") == Route::Primary;
+        gov.flip = quant; // degraded quantized variant
+        gov.step(&drafts);
+        fp.step(&drafts);
+        let agreement = if quant { 0.0 } else { 1.0 };
+        if governor.record_audit("c", agreement, 0.0) == Some(Transition::Demoted) {
+            demoted_at = Some(step);
+        }
+    }
+    let at = demoted_at.expect("degraded variant must demote");
+    assert_eq!(at as u32, gcfg.min_audits, "demotes exactly at the hysteresis window");
+    assert_eq!(governor.resolve("c"), Route::Reference);
+    assert!(
+        gov.reqs[0].committed != fp.reqs[0].committed,
+        "degraded pre-demotion steps must have visibly corrupted the stream \
+         (otherwise this test proves nothing)"
+    );
+
+    // Phase 2 — after demotion, fresh workload, same governor: every call
+    // runs the reference variant, so the governed sim is bit-identical to
+    // the fp32-pinned one.
+    let mut gov2 = Sim::new(3, 4, sim_perf(0), false);
+    let mut fp2 = Sim::new(3, 4, sim_perf(0), false);
+    for _ in 0..8 {
+        let drafts: Vec<Vec<i32>> = (0..3)
+            .map(|_| {
+                let len = rng.usize_below(SIM_CHUNK);
+                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+            })
+            .collect();
+        governor.begin_step();
+        let quant = governor.resolve("c") == Route::Primary;
+        assert!(!quant, "demoted class must stay on the reference");
+        gov2.flip = quant;
+        gov2.step(&drafts);
+        fp2.step(&drafts);
+    }
+    check_equivalent(&gov2, &fp2).expect("post-demotion output must be bit-identical to fp32");
+
+    // Phase 3 — healthy: quantized agrees with the reference; the governor
+    // must never demote and the governed stream never diverges.
+    let mut g2 = Governor::new(gcfg, 9);
+    let mut gov3 = Sim::new(2, 4, sim_perf(0), false);
+    let mut fp3 = Sim::new(2, 4, sim_perf(0), false);
+    for _ in 0..12 {
+        let drafts: Vec<Vec<i32>> = (0..2)
+            .map(|_| {
+                let len = rng.usize_below(SIM_CHUNK);
+                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+            })
+            .collect();
+        g2.begin_step();
+        assert_eq!(g2.resolve("c"), Route::Primary);
+        gov3.flip = false; // healthy quantized == reference argmax
+        gov3.step(&drafts);
+        fp3.step(&drafts);
+        assert_eq!(g2.record_audit("c", 1.0, 0.0), None);
+    }
+    assert_eq!(g2.demotions, 0, "healthy verifier must never demote");
+    check_equivalent(&gov3, &fp3).expect("healthy governed output matches fp32");
 }
