@@ -22,6 +22,25 @@ use quasar::util::hist::Histogram;
 use quasar::util::rng::Pcg;
 use quasar::util::json::Json;
 
+/// Order-independent FNV-1a over one request's `(work index, tokens)`. The
+/// driver XORs these across requests into a run checksum: greedy outputs
+/// per prompt are deterministic, so a warm (prefix-cached) and a cold run
+/// must print the same value — CI's bit-identity gate.
+fn fnv_request(idx: usize, tokens: &[i64]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let eat = |h: &mut u64, x: u64| {
+        for b in x.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(&mut h, idx as u64);
+    for &t in tokens {
+        eat(&mut h, t as u64);
+    }
+    h
+}
+
 fn main() {
     quasar::util::bigstack::run(|| {
         if let Err(e) = run() {
@@ -39,6 +58,8 @@ struct ClientTally {
     tokens: u64,
     l_sum: f64,
     done: usize,
+    /// XOR of per-request `(index, tokens)` hashes (order-independent).
+    checksum: u64,
 }
 
 fn run() -> anyhow::Result<()> {
@@ -50,6 +71,8 @@ fn run() -> anyhow::Result<()> {
         .opt("temp", Some("0"), "sampling temperature")
         .opt("method", Some("both"), "ngram | quasar | both")
         .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
+        .flag("prefix-share", "shared-prefix workload: per-task system-prompt templates")
+        .flag("no-prefix-cache", "disable shared-prefix KV reuse (cold-admission baseline)")
         .parse_env();
     let n = args.usize("n");
     let clients = args.usize("clients").max(1);
@@ -58,6 +81,8 @@ fn run() -> anyhow::Result<()> {
     let temp = args.f64("temp");
     let method = args.str("method");
     let governor = args.has("governor");
+    let prefix_share = args.has("prefix-share");
+    let no_prefix_cache = args.has("no-prefix-cache");
 
     // xla_extension tolerates exactly one PJRT client per process, so the
     // two-method comparison re-execs this binary once per method.
@@ -75,6 +100,12 @@ fn run() -> anyhow::Result<()> {
             if governor {
                 argv.push("--governor".into());
             }
+            if prefix_share {
+                argv.push("--prefix-share".into());
+            }
+            if no_prefix_cache {
+                argv.push("--no-prefix-cache".into());
+            }
             let status = std::process::Command::new(&exe).args(&argv).status()?;
             anyhow::ensure!(status.success(), "{m} run failed");
         }
@@ -84,7 +115,14 @@ fn run() -> anyhow::Result<()> {
     }
 
     let ctx = BenchCtx::load()?;
-    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0xE2E));
+    let items = if prefix_share {
+        // Family templates half the prefill window long: enough shared
+        // tokens for the cache to matter, enough suffix to stay distinct.
+        let plen = ctx.manifest.model("qwen3-like")?.cfg.prefill_len / 2;
+        ctx.workloads.shared_prefix(n, plen, &mut Pcg::seeded(0xE2E))?
+    } else {
+        ctx.workloads.mixed(n, &mut Pcg::seeded(0xE2E))?
+    };
     // The wire protocol takes prompt text; the closed-lexicon tokenizer
     // round-trips decode(encode(text)) exactly.
     let prompts: Arc<Vec<(String, String)>> = Arc::new(
@@ -107,6 +145,7 @@ fn run() -> anyhow::Result<()> {
         // request classes to fp32.
         cfg.governor = GovernorConfig::on();
     }
+    cfg.prefix.enabled = !no_prefix_cache;
     let handle = EngineHandle::spawn(
         artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n.max(1),
     )?;
@@ -143,7 +182,14 @@ fn run() -> anyhow::Result<()> {
                 anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
                 tally.lat.record(resp.get("latency_s")?.as_f64()?);
                 tally.ttft.record(resp.get("ttft_s")?.as_f64()?);
-                tally.tokens += resp.get("tokens")?.as_arr()?.len() as u64;
+                let toks: Vec<i64> = resp
+                    .get("tokens")?
+                    .as_arr()?
+                    .iter()
+                    .map(|t| t.as_i64())
+                    .collect::<Result<_, _>>()?;
+                tally.checksum ^= fnv_request(i, &toks);
+                tally.tokens += toks.len() as u64;
                 tally.l_sum += resp.get("accept_len")?.as_f64()?;
                 tally.done += 1;
             }
@@ -157,6 +203,7 @@ fn run() -> anyhow::Result<()> {
         total.tokens += t.tokens;
         total.l_sum += t.l_sum;
         total.done += t.done;
+        total.checksum ^= t.checksum;
     }
     let wall = t0.elapsed().as_secs_f64();
     anyhow::ensure!(total.done == n, "completed {}/{} requests", total.done, n);
@@ -203,9 +250,29 @@ fn run() -> anyhow::Result<()> {
                  gov.get("demotions")?.as_i64()?,
                  gov.get("promotions")?.as_i64()?);
     }
+    let prefix = stats.get("prefix")?;
+    let hit_rate = prefix.get("hit_rate")?.as_f64()?;
+    println!("  prefix cache        {} hits / {} misses (rate {:.2}), {} hit tokens",
+             prefix.get("hits")?.as_i64()?,
+             prefix.get("misses")?.as_i64()?,
+             hit_rate,
+             prefix.get("hit_tokens")?.as_i64()?);
+    println!("                      {:.1} MiB resident in {} segments, {} evictions",
+             prefix.get("resident_bytes")?.as_f64()? / (1u64 << 20) as f64,
+             prefix.get("segments")?.as_i64()?,
+             prefix.get("evictions")?.as_i64()?);
+    let truncated = stats.get("prompt_truncated")?.as_i64()?;
+    if truncated > 0 {
+        println!("  prompts truncated   {truncated}");
+    }
     println!("  sched delay (mean)  {:.1}ms",
              stats.get("sched_delay_s")?.as_f64()? * 1e3);
     println!("  request latency     {}", total.lat.summary_ms());
     println!("  ttft                {}", total.ttft.summary_ms());
+    // Machine-readable lines for the CI warm-vs-cold smoke: identical
+    // checksums across cache-on/cache-off runs prove bit-identity; a
+    // non-zero hit rate proves the warm run actually reused prefixes.
+    println!("output_checksum={:016x}", total.checksum);
+    println!("prefix_hit_rate={hit_rate:.4}");
     Ok(())
 }

@@ -16,7 +16,7 @@ fn run() -> anyhow::Result<()> {
     let max_new = ctx.max_new(48);
     let mr = ctx.model("qwen3-like")?;
     let perf = ctx.perf(&mr);
-    let items = prompts_for(&ctx, "gsm8k", n, 77);
+    let items = prompts_for(&ctx, "gsm8k", n, 77)?;
     let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
 
     let mut table = TableWriter::new(
@@ -36,6 +36,7 @@ fn run() -> anyhow::Result<()> {
                 policy: Default::default(),
                 elastic: true,
                 governor: Default::default(),
+                prefix: Default::default(),
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

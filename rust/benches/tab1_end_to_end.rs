@@ -48,7 +48,7 @@ fn run() -> anyhow::Result<()> {
                 let mut ls = Vec::new();
                 let mut tps_overall = Vec::new();
                 for (ti, task) in TASKS.iter().enumerate() {
-                    let items = prompts_for(&ctx, task, n, 100 + ti as u64);
+                    let items = prompts_for(&ctx, task, n, 100 + ti as u64)?;
                     let res = run_method(&mr, &perf, cfg.clone(), &items, temp, max_new)?;
                     let tps = res.modeled_tps();
                     if cfg.method_name() == "vanilla" {

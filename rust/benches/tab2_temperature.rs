@@ -16,7 +16,7 @@ fn run() -> anyhow::Result<()> {
     let max_new = ctx.max_new(48);
     let mr = ctx.model("qwen3-like")?;
     let perf = ctx.perf(&mr);
-    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB2));
+    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB2))?;
 
     let temps = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
     let mut table = TableWriter::new(

@@ -25,6 +25,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         policy: Default::default(),
         elastic: true,
         governor: Default::default(),
+        prefix: Default::default(),
     }
 }
 
@@ -34,7 +35,7 @@ fn run() -> anyhow::Result<()> {
     let max_new = ctx.max_new(48);
     let mr = ctx.model("qwen3-like")?;
     let perf = ctx.perf(&mr);
-    let items = prompts_for(&ctx, "humaneval", n, 33);
+    let items = prompts_for(&ctx, "humaneval", n, 33)?;
     let base = run_method(&mr, &perf, EngineConfig::vanilla(1), &items, 0.0, max_new)?;
 
     let gammas = [3usize, 5, 7, 9];

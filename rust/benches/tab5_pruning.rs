@@ -17,7 +17,7 @@ fn run() -> anyhow::Result<()> {
     let max_new = ctx.max_new(48);
     let mr = ctx.model("qwen3-like")?;
     let perf = ctx.perf(&mr);
-    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB5));
+    let items = ctx.workloads.mixed(n, &mut Pcg::seeded(0x7AB5))?;
     let full_layers = mr.cfg().n_layers;
 
     let mut table = TableWriter::new(
@@ -39,6 +39,7 @@ fn run() -> anyhow::Result<()> {
             policy: Default::default(),
             elastic: true,
             governor: Default::default(),
+            prefix: Default::default(),
         };
         let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
         table.row(vec![

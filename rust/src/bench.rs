@@ -154,8 +154,10 @@ pub fn run_method(
     })
 }
 
-/// Deterministic per-(bench, task) prompt sample.
-pub fn prompts_for(ctx: &BenchCtx, task: &str, n: usize, seed: u64) -> Vec<WorkItem> {
+/// Deterministic per-(bench, task) prompt sample. Errors (rather than
+/// panics) when the task has no exported items — a mistyped `--task` flag
+/// should fail with the exported task list in the message.
+pub fn prompts_for(ctx: &BenchCtx, task: &str, n: usize, seed: u64) -> Result<Vec<WorkItem>> {
     let mut rng = Pcg::seeded(seed ^ 0xBEEF);
     ctx.workloads.sample(task, n, &mut rng)
 }

@@ -4,8 +4,11 @@
 //!
 //! One `step()` =
 //!   expire  (cancel running requests whose deadline passed, free their rows)
-//!   -> admit   (pop the scheduler in policy order, prefill + splice new
-//!               requests into free rows)
+//!   -> admit   (pop the scheduler in policy order; longest-prefix-match the
+//!               prompt against the prefix cache, prefill only the *suffix*
+//!               tokens at the matched write offset, splice the new request
+//!               into a free row, and snapshot its committed prefix back
+//!               into the cache — see `coordinator::prefixcache`)
 //!   -> draft   (per active row, via its drafter)
 //!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
 //!               required function — decode-only vs verify — *and* by the
@@ -85,6 +88,7 @@ use super::calls::{CallLog, CallRecord, FnKind};
 use super::governor::{Governor, GovernorConfig, Route, Transition};
 use super::kv::BatchGroup;
 use super::plan::{plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
+use super::prefixcache::{PrefixCache, PrefixCacheConfig};
 use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
 use super::scheduler::{SchedPolicy, Scheduler};
 
@@ -121,6 +125,11 @@ pub struct EngineConfig {
     /// demotion of the quantized verifier to the reference variant, driven
     /// by sampled shadow audits. Default: disabled (zero overhead).
     pub governor: GovernorConfig,
+    /// Shared-prefix KV reuse (`coordinator::prefixcache`): admission
+    /// longest-prefix-matches the prompt against cached committed prefixes
+    /// and prefills only the suffix. Lossless by construction (segments are
+    /// keyed by the variant that produced them), so the default is enabled.
+    pub prefix: PrefixCacheConfig,
 }
 
 impl EngineConfig {
@@ -135,6 +144,7 @@ impl EngineConfig {
             policy: SchedPolicy::Fifo,
             elastic: true,
             governor: GovernorConfig::default(),
+            prefix: PrefixCacheConfig::default(),
         }
     }
 
@@ -148,6 +158,7 @@ impl EngineConfig {
             policy: SchedPolicy::Fifo,
             elastic: true,
             governor: GovernorConfig::default(),
+            prefix: PrefixCacheConfig::default(),
         }
     }
 
@@ -218,6 +229,8 @@ pub struct Engine {
     variants: Vec<VariantSlot>,
     /// Adaptive-precision state machine (inert when disabled).
     governor: Governor,
+    /// Shared-prefix KV reuse across admissions (inert when disabled).
+    prefix_cache: PrefixCache,
     /// Pooled single-row prefill scratch: zeroed and reused per admission
     /// instead of allocating a fresh `[L, 1, H, S, hd]` pair each time.
     prefill_k: Tensor<f32>,
@@ -244,6 +257,7 @@ impl Engine {
         let perf = PerfModel::new(model.cost_model().clone(), mcfg.clone());
         let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
         let governor = Governor::new(cfg.governor.clone(), cfg.seed ^ 0x4649_4445);
+        let prefix_cache = PrefixCache::new(cfg.prefix.clone());
         Ok(Engine {
             model,
             mcfg,
@@ -258,6 +272,7 @@ impl Engine {
             perf,
             variants,
             governor,
+            prefix_cache,
             prefill_k,
             prefill_v,
             cfg,
@@ -294,6 +309,11 @@ impl Engine {
         &mut self.governor
     }
 
+    /// The shared-prefix KV cache (read-only view for stats/tests).
+    pub fn prefix_cache(&self) -> &PrefixCache {
+        &self.prefix_cache
+    }
+
     /// True when two precision variants are in play (governor active).
     fn governed(&self) -> bool {
         self.variants.len() > 1
@@ -327,16 +347,25 @@ impl Engine {
         })
     }
 
-    /// Queue a request (prompt truncated to the prefill window).
+    /// Queue a request. A prompt longer than the prefill window is cut to
+    /// it — recorded in the completion's [`SpecStats::prompt_truncated`] and
+    /// the `prompt_truncated` counter rather than silently dropped.
     pub fn submit(&mut self, mut prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
+        let truncated = prompt.len() > self.mcfg.prefill_len;
         prompt.truncate(self.mcfg.prefill_len);
+        if truncated {
+            self.metrics.inc(names::PROMPT_TRUNCATED, 1);
+        }
         if prompt.is_empty() {
             prompt.push(BOS_ID);
         }
-        self.sched
-            .push(Request::new(id, prompt, params).with_task(task));
+        self.sched.push(
+            Request::new(id, prompt, params)
+                .with_task(task)
+                .with_truncated(truncated),
+        );
         self.metrics.inc("requests_submitted", 1);
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
@@ -400,8 +429,10 @@ impl Engine {
         for req in self.sched.take_expired(now) {
             self.finish_unadmitted(req);
         }
+        let mut admitted = false;
         while self.group.free_rows() > 0 {
             let Some(req) = self.sched.pop() else { break };
+            admitted = true;
             let sched_delay = now.duration_since(req.submitted_at).as_secs_f64();
             self.metrics.observe(names::SCHED_DELAY_S, sched_delay);
             let mut drafter = self.make_drafter()?;
@@ -412,24 +443,63 @@ impl Engine {
 
             let p = self.mcfg.prefill_len;
             let len = st.req.prompt.len();
-            let mut toks = vec![0i32; p];
-            toks[..len].copy_from_slice(&st.req.prompt);
-            // Pooled prefill scratch: zero in place instead of allocating a
-            // fresh single-row cache pair per admission.
-            self.prefill_k.zero();
-            self.prefill_v.zero();
 
             // Prefill at the precision the governor resolved for this
             // request's class: a demoted class gets full-precision KV from
             // its very first position, so its stream is bit-exact reference
-            // output end to end.
+            // output end to end. The prefix cache is keyed by the same
+            // variant, so reuse never crosses a precision boundary.
             let variant = self.variants[self.route_slot(&st.req.task)].name.clone();
+
+            // Longest-prefix reuse, capped so (a) at least one suffix token
+            // remains — the last prompt position's logits must come from
+            // this chunk — and (b) the chunk's write window
+            // `[hit, hit + prefill_len)` stays inside the cache row.
+            let hit_cap = (len - 1).min(self.mcfg.max_seq.saturating_sub(p));
+            let lease = if self.cfg.prefix.enabled {
+                self.prefix_cache.lookup(&variant, &st.req.prompt[..hit_cap])
+            } else {
+                None
+            };
+            // Pooled prefill scratch: zero in place instead of allocating a
+            // fresh single-row cache pair per admission, then splice the
+            // matched prefix's KV over positions `0..hit`. The lease only
+            // needs to pin the segment for the duration of the copy, so it
+            // is released immediately — before any fallible call could
+            // propagate an error past it and leak the refcount.
+            self.prefill_k.zero();
+            self.prefill_v.zero();
+            let hit = match lease {
+                Some(l) => {
+                    let spliced = self
+                        .prefix_cache
+                        .splice(&l, &mut self.prefill_k, &mut self.prefill_v);
+                    let n = l.len();
+                    self.prefix_cache.release(l);
+                    spliced?;
+                    // Hit/miss/token tallies live in the cache itself (one
+                    // source of truth, published as gauges below); only the
+                    // modeled saving is priced here, where both lengths are
+                    // known.
+                    self.metrics.observe(
+                        names::PREFILL_SAVED_S,
+                        self.perf
+                            .prefill_saved_s(&variant, self.mcfg.n_layers, len, len - n),
+                    );
+                    n
+                }
+                None => 0,
+            };
+
+            let suffix = len - hit;
+            let mut toks = vec![0i32; p];
+            toks[..suffix].copy_from_slice(&st.req.prompt[hit..]);
             let t0 = Instant::now();
             let out = self
                 .model
                 .run_chunk(
                     &variant, "prefill", 1, &toks,
-                    &self.prefill_k, &self.prefill_v, &[0],
+                    &self.prefill_k, &self.prefill_v, &[hit as i32],
                 )
                 .context("prefill")?;
             let wall = t0.elapsed().as_secs_f64();
@@ -440,15 +510,16 @@ impl Engine {
                 batch: 1,
                 n_layers: self.mcfg.n_layers,
                 active_rows: 1,
-                tokens_used: len,
+                tokens_used: suffix,
                 chunk_len: p,
-                useful_tokens: len,
+                useful_tokens: suffix,
                 wall_s: wall,
             });
 
-            // First generated token comes straight from the prefill logits.
+            // First generated token comes straight from the prefill logits
+            // (suffix position `suffix - 1` is prompt position `len - 1`).
             let first = {
-                let row = out.logits.row(&[0, len - 1]);
+                let row = out.logits.row(&[0, suffix - 1]);
                 crate::spec::sample_logits(row, st.req.params.temp, &mut st.rng)
             };
             st.cached = len;
@@ -463,16 +534,43 @@ impl Engine {
             st.draft_cost.merge(&cost);
             Self::check_finish_with(self.mcfg.max_seq, &mut st);
 
-            // Park the state in a slot and lease a cache row.
+            // Feed the cache forward: `out` now holds committed KV for the
+            // whole prompt (`0..hit` spliced, `hit..len` just written), so
+            // future admissions sharing this prefix skip that much prefill.
+            if self.cfg.prefix.enabled {
+                self.prefix_cache.insert(&variant, &st.req.prompt, &out.k, &out.v);
+            }
+
+            // Park the state in a slot and lease a cache row. Only the
+            // prompt's `cached` positions are valid KV — the length-bounded
+            // splice zeroes the rest of the row instead of preserving the
+            // chunk's past-the-prompt garbage.
             let slot = self.free_slot();
             if st.is_active() {
-                self.group.join(slot, &out.k, &out.v)?;
+                self.group.join_prefix(slot, &out.k, &out.v, st.cached)?;
                 self.states[slot] = Some(st);
             } else {
                 self.finish_to_completion(st);
             }
             // Recycle the advanced single-row cache as b1 step scratch.
             self.model.return_scratch(&variant, out.k, out.v);
+        }
+        if self.cfg.prefix.enabled && admitted {
+            // Published wholesale from the cache's own counters — the one
+            // source of truth — rather than tallied a second time inline.
+            // Gated on admissions: cache state only moves here, so the
+            // steady-state decode loop skips the snapshot entirely.
+            let ps = self.prefix_cache.stats();
+            self.metrics.set_gauge(names::PREFIX_HITS, ps.hits as i64);
+            self.metrics.set_gauge(names::PREFIX_MISSES, ps.misses as i64);
+            self.metrics
+                .set_gauge(names::PREFIX_HIT_TOKENS, ps.hit_tokens as i64);
+            self.metrics
+                .set_gauge(names::PREFIX_EVICTIONS, ps.evictions as i64);
+            self.metrics
+                .set_gauge(names::PREFIX_RESIDENT_BYTES, ps.resident_bytes as i64);
+            self.metrics
+                .set_gauge(names::PREFIX_SEGMENTS, ps.segments as i64);
         }
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
@@ -495,7 +593,10 @@ impl Engine {
             prompt_len: req.prompt.len(),
             tokens: Vec::new(),
             finish: FinishReason::Cancelled,
-            stats: SpecStats::default(),
+            stats: SpecStats {
+                prompt_truncated: req.prompt_truncated as u64,
+                ..SpecStats::default()
+            },
             draft_cost: DraftCost::default(),
             sched_delay_s: latency,
             latency_s: latency,

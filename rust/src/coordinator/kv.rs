@@ -61,8 +61,20 @@ impl BatchGroup {
     }
 
     /// Lease a free row to `slot`, splicing in its prefilled single-row
-    /// cache (`[L, 1, H, S, hd]`).
+    /// cache (`[L, 1, H, S, hd]`) whole — [`BatchGroup::join_prefix`] at
+    /// the full sequence extent.
     pub fn join(&mut self, slot: usize, k1: &Tensor<f32>, v1: &Tensor<f32>) -> Result<usize> {
+        let seq = self.k.dims[self.k.rank() - 2];
+        self.join_prefix(slot, k1, v1, seq)
+    }
+
+    /// Length-bounded [`BatchGroup::join`]: lease a free row but splice only
+    /// the first `used_len` sequence positions of the single-row cache and
+    /// zero the rest of the row. An admission only has `prompt_len` valid
+    /// KV positions — the full-`max_seq` copy moved (and kept resident)
+    /// whatever garbage the prefill chunk wrote past the prompt.
+    pub fn join_prefix(&mut self, slot: usize, k1: &Tensor<f32>, v1: &Tensor<f32>,
+                       used_len: usize) -> Result<usize> {
         if self.rows.iter().any(|r| *r == Some(slot)) {
             bail!("slot {slot} already in group");
         }
@@ -73,8 +85,17 @@ impl BatchGroup {
         if k1.dims[1] != 1 || v1.dims[1] != 1 {
             bail!("expected single-row cache, got batch {}", k1.dims[1]);
         }
-        self.k.copy_axis1_row_from(row, k1, 0);
-        self.v.copy_axis1_row_from(row, v1, 0);
+        let seq = self.k.dims[self.k.rank() - 2];
+        if used_len > seq {
+            bail!("used_len {used_len} exceeds cache seq {seq}");
+        }
+        if used_len < seq {
+            // The full-extent splice overwrites every position anyway.
+            self.k.zero_axis1_row(row);
+            self.v.zero_axis1_row(row);
+        }
+        self.k.copy_axis1_row_seq_prefix_from(row, k1, 0, used_len);
+        self.v.copy_axis1_row_seq_prefix_from(row, v1, 0, used_len);
         self.rows[row] = Some(slot);
         Ok(row)
     }
@@ -193,6 +214,45 @@ mod tests {
         g.join(2, &k1, &v1).unwrap();
         g.join(3, &k1, &v1).unwrap();
         assert!(g.join(4, &k1, &v1).is_err(), "full group");
+    }
+
+    #[test]
+    fn join_prefix_splices_used_positions_and_zeroes_the_rest() {
+        let mut g = group(); // seq axis = 8
+        let (k1, v1) = row_cache(7.0); // every position non-zero
+        let row = g.join_prefix(11, &k1, &v1, 3).unwrap();
+        assert_eq!(g.occupant(row), Some(11));
+        assert_eq!(g.k.at(&[0, row, 0, 0, 0]), 7.0);
+        assert_eq!(g.k.at(&[1, row, 1, 2, 3]), 7.0);
+        assert_eq!(g.k.at(&[0, row, 0, 3, 0]), 0.0, "beyond used_len zeroed");
+        assert_eq!(g.v.at(&[1, row, 1, 7, 3]), 0.0);
+        assert_eq!(g.k.at(&[0, 1, 0, 0, 0]), 0.0, "other rows untouched");
+
+        // Round trip against the full splice: used_len == seq must be
+        // bit-identical to join().
+        let mut a = group();
+        let ra = a.join_prefix(1, &k1, &v1, 8).unwrap();
+        let mut b = group();
+        let rb = b.join(1, &k1, &v1).unwrap();
+        assert_eq!(ra, rb);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.v, b.v);
+
+        // And the spliced prefix survives a gather/scatter round trip.
+        let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
+        let mut sv = sk.clone();
+        g.gather_rows(&[row], &mut sk, &mut sv).unwrap();
+        assert_eq!(sk.at(&[0, 0, 0, 2, 0]), 7.0);
+        assert_eq!(sk.at(&[0, 0, 0, 5, 0]), 0.0);
+        g.scatter_rows(&[row], &sk, &sv).unwrap();
+        assert_eq!(g.k.at(&[1, row, 1, 2, 3]), 7.0);
+
+        // Validation: oversized used_len, duplicate slot, full group.
+        assert!(g.join_prefix(12, &k1, &v1, 9).is_err(), "used_len > seq");
+        assert!(g.join_prefix(11, &k1, &v1, 2).is_err(), "duplicate slot");
+        g.join_prefix(12, &k1, &v1, 1).unwrap();
+        g.join_prefix(13, &k1, &v1, 1).unwrap();
+        assert!(g.join_prefix(14, &k1, &v1, 1).is_err(), "full group");
     }
 
     #[test]

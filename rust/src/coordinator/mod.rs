@@ -1,7 +1,8 @@
 //! Layer-3 coordinator: the paper's serving-system contribution. Continuous
 //! batching over leased KV rows (`kv`), per-request speculative state
 //! (`request`), policy-ordered admission with deadlines and cancellation
-//! (`scheduler`), cost-guided elastic step planning (`plan`), the
+//! (`scheduler`), shared-prefix KV reuse for suffix-only prefill
+//! (`prefixcache`), cost-guided elastic step planning (`plan`), the
 //! adaptive-precision fidelity governor (`governor`), the decode loop
 //! (`engine`), call accounting for the cost model (`calls`) and the
 //! threaded front door with correlated completion routing (`router`).
@@ -11,6 +12,7 @@ pub mod engine;
 pub mod governor;
 pub mod kv;
 pub mod plan;
+pub mod prefixcache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -20,7 +22,8 @@ pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::BatchGroup;
 pub use plan::{best_bucket, plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
+pub use prefixcache::{Lease, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
-pub use router::{BucketStat, EngineHandle, GovernorSnapshot, RouterStats, StatsSnapshot,
-                 Ticket, VariantCalls};
+pub use router::{BucketStat, EngineHandle, GovernorSnapshot, PrefixSnapshot, RouterStats,
+                 StatsSnapshot, Ticket, VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -1,0 +1,695 @@
+//! Shared-prefix KV reuse: a radix-trie index over committed token
+//! sequences mapping to reference-counted single-row KV segments, with a
+//! byte-budget LRU evictor.
+//!
+//! At serving scale the paper's five task families are heavily templated —
+//! requests share long system-prompt prefixes — yet every admission paid a
+//! full prefill chunk over the whole prompt. This module lets the engine
+//! run admission as *longest-prefix-match, then suffix-only prefill*:
+//!
+//! * **Index**: one compressed radix trie per verifier weight variant over
+//!   committed token sequences. Keying by variant matters — a `w8a8`-
+//!   prefilled prefix is not bit-exact KV for a class the fidelity governor
+//!   demoted to `fp32`, so cross-variant reuse would silently break the
+//!   engine's bit-identity guarantees.
+//! * **Segments**: `[L, 1, H, S, hd]` single-row KV snapshots holding the
+//!   first `len` sequence positions of a committed prefix (later positions
+//!   zeroed). A snapshot is taken at admission completion, so the cache
+//!   only ever holds KV the verifier actually committed.
+//! * **Leases**: [`PrefixCache::lookup`] returns a [`Lease`] that pins the
+//!   segment (refcount) until [`PrefixCache::release`]; the evictor never
+//!   frees a leased segment, so a splice in flight can never read freed
+//!   memory no matter what inserts happen in between.
+//! * **Eviction**: inserts that push resident bytes over `budget_bytes`
+//!   evict unleased segments in least-recently-used order. When every
+//!   resident segment is leased the cache temporarily exceeds its budget
+//!   rather than corrupt a lease; the next insert re-tries.
+//!
+//! Correctness note (why suffix-only prefill is bit-exact): attention is
+//! causal, so the KV a prefill writes for positions `0..h` depends only on
+//! tokens `0..h`. A cached segment whose key equals the request's first `h`
+//! prompt tokens therefore holds exactly the KV the request's own prefill
+//! would have computed at the same variant, and running the chunk with
+//! write offset `pos = h` over the remaining tokens reproduces the cold
+//! path bit for bit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::Tensor;
+
+/// Tuning knobs for the prefix cache. `Default` is *enabled* with a 256 MiB
+/// budget — reuse is lossless by construction, so it is on unless a bench
+/// explicitly wants cold admissions ([`PrefixCacheConfig::off`]).
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// Master switch. Disabled: no lookups, no snapshots, zero overhead.
+    pub enabled: bool,
+    /// Resident-segment byte budget the LRU evictor enforces (leased
+    /// segments are exempt while leased).
+    pub budget_bytes: usize,
+    /// Shortest prefix worth caching or matching: a tiny shared prefix
+    /// saves less prefill than the row copy costs.
+    pub min_prefix: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig {
+            enabled: true,
+            budget_bytes: 256 << 20,
+            min_prefix: 4,
+        }
+    }
+}
+
+impl PrefixCacheConfig {
+    /// Disabled (cold-admission A/B baseline).
+    pub fn off() -> Self {
+        PrefixCacheConfig { enabled: false, ..Default::default() }
+    }
+}
+
+/// A pinned reference to one cached segment. Obtained from
+/// [`PrefixCache::lookup`]; the segment cannot be evicted until the lease
+/// is handed back via [`PrefixCache::release`]. Not `Clone` — one lookup,
+/// one release.
+#[derive(Debug)]
+pub struct Lease {
+    id: u64,
+    len: usize,
+}
+
+impl Lease {
+    /// Segment id (stable for the segment's lifetime; test hook).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Matched prefix length in tokens — the positions admission may skip.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Point-in-time counters (monotonic except `resident_bytes` / `segments`
+/// / `leases`, which are levels).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Prompt tokens served from cache instead of prefill.
+    pub hit_tokens: u64,
+    pub inserts: u64,
+    /// Inserts refused because a single segment exceeds the whole budget.
+    pub rejected: u64,
+    pub evictions: u64,
+    pub resident_bytes: usize,
+    pub segments: usize,
+    /// Leases currently outstanding (refcounts not yet released).
+    pub leases: usize,
+}
+
+impl PrefixCacheStats {
+    /// hits / (hits + misses); 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / n as f64
+    }
+}
+
+/// One resident KV snapshot.
+struct Segment {
+    variant: String,
+    /// Token key (the committed prefix); kept so eviction can unlink the
+    /// trie node. Tiny next to the KV bytes it indexes.
+    key: Vec<i32>,
+    /// Valid sequence positions (`0..len`); the rest of the row is zero.
+    len: usize,
+    bytes: usize,
+    refs: u32,
+    last_use: u64,
+    k: Tensor<f32>,
+    v: Tensor<f32>,
+}
+
+/// Longest common prefix length of two token slices.
+fn lcp(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Compressed radix-trie node: each edge carries a non-empty token label;
+/// a node's `seg` is the segment cached for the exact prefix spelled by the
+/// path from the root.
+#[derive(Default)]
+struct Node {
+    seg: Option<u64>,
+    edges: Vec<(Vec<i32>, Node)>,
+}
+
+impl Node {
+    /// Deepest usable match of `tokens` against the cached keys:
+    /// `(segment id, match length)`. The walk may stop *inside* an edge or
+    /// at a key-less interior node — every key in the subtree below the
+    /// stop point extends `tokens[..match]`, and by causality the first
+    /// `match` KV positions of any such segment are exactly the KV for
+    /// `tokens[..match]`. So the cache serves partial matches *into*
+    /// longer cached prefixes (template + body A serving template + body
+    /// B), not just whole cached keys.
+    fn longest(&self, tokens: &[i32]) -> Option<(u64, usize)> {
+        let mut node = self;
+        let mut depth = 0usize;
+        let mut rest = tokens;
+        loop {
+            let edge = node
+                .edges
+                .iter()
+                .find(|(l, _)| !rest.is_empty() && l.first() == rest.first());
+            let Some((label, child)) = edge else {
+                // The query ends or diverges at this node: the common
+                // prefix is exactly `depth`, shared by every key under it.
+                return node.any_seg().map(|id| (id, depth));
+            };
+            let c = lcp(label, rest);
+            if c < label.len() {
+                // Stopped mid-edge: every key under `child` starts with
+                // `tokens[..depth + c]`.
+                return child.any_seg().map(|id| (id, depth + c));
+            }
+            depth += c;
+            rest = &rest[c..];
+            node = child;
+        }
+    }
+
+    /// Any segment id in this subtree (pre-order). Trie invariant: every
+    /// leaf holds a segment, so this is `None` only on an empty root.
+    fn any_seg(&self) -> Option<u64> {
+        if let Some(id) = self.seg {
+            return Some(id);
+        }
+        self.edges.iter().find_map(|(_, c)| c.any_seg())
+    }
+
+    /// Segment cached for exactly `tokens`, if any.
+    fn exact(&self, tokens: &[i32]) -> Option<u64> {
+        if tokens.is_empty() {
+            return self.seg;
+        }
+        for (label, child) in &self.edges {
+            let c = lcp(label, tokens);
+            if c == 0 {
+                continue;
+            }
+            if c == label.len() {
+                return child.exact(&tokens[c..]);
+            }
+            return None; // diverges inside the edge
+        }
+        None
+    }
+
+    /// Insert `id` at `tokens`, splitting an edge if the key diverges
+    /// mid-label. Returns a previously-stored id at exactly this key.
+    fn insert(&mut self, tokens: &[i32], id: u64) -> Option<u64> {
+        if tokens.is_empty() {
+            return self.seg.replace(id);
+        }
+        for (label, child) in &mut self.edges {
+            let c = lcp(label, tokens);
+            if c == 0 {
+                continue;
+            }
+            if c == label.len() {
+                return child.insert(&tokens[c..], id);
+            }
+            // Split: `label[..c]` stays on this edge, the old child moves
+            // under `label[c..]` below a fresh intermediate node.
+            let tail = label.split_off(c);
+            let mut old_child = Node::default();
+            std::mem::swap(child, &mut old_child);
+            child.edges.push((tail, old_child));
+            return child.insert(&tokens[c..], id);
+        }
+        let leaf = Node { seg: Some(id), edges: Vec::new() };
+        self.edges.push((tokens.to_vec(), leaf));
+        None
+    }
+
+    /// Remove the segment at exactly `tokens`; prunes empty leaves and
+    /// re-merges pass-through nodes so the trie stays compressed. Returns
+    /// whether the key was present.
+    fn remove(&mut self, tokens: &[i32]) -> bool {
+        if tokens.is_empty() {
+            return self.seg.take().is_some();
+        }
+        let mut removed = false;
+        let mut prune = None;
+        for (i, (label, child)) in self.edges.iter_mut().enumerate() {
+            let c = lcp(label, tokens);
+            if c == 0 {
+                continue;
+            }
+            if c < label.len() {
+                return false;
+            }
+            removed = child.remove(&tokens[c..]);
+            if removed {
+                if child.seg.is_none() && child.edges.is_empty() {
+                    prune = Some(i);
+                } else if child.seg.is_none() && child.edges.len() == 1 {
+                    let (clabel, cchild) = child.edges.pop().expect("len checked");
+                    label.extend(clabel);
+                    *child = cchild;
+                }
+            }
+            break;
+        }
+        if let Some(i) = prune {
+            self.edges.swap_remove(i);
+        }
+        removed
+    }
+}
+
+/// Internal monotonic counters (levels are derived on demand).
+#[derive(Default)]
+struct Counters {
+    hits: u64,
+    misses: u64,
+    hit_tokens: u64,
+    inserts: u64,
+    rejected: u64,
+    evictions: u64,
+}
+
+/// The cache itself. Owned by the engine (single-threaded, like the rest of
+/// the step loop); concurrency stays in the router layer.
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    /// One radix root per weight variant (see module docs on why reuse must
+    /// not cross variants).
+    roots: BTreeMap<String, Node>,
+    segments: BTreeMap<u64, Segment>,
+    next_id: u64,
+    /// Logical clock for LRU recency (bumped per lookup/insert).
+    tick: u64,
+    resident_bytes: usize,
+    counters: Counters,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> Self {
+        PrefixCache {
+            cfg,
+            roots: BTreeMap::new(),
+            segments: BTreeMap::new(),
+            next_id: 1,
+            tick: 0,
+            resident_bytes: 0,
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    /// Deepest cached match of `tokens` under `variant`, at least
+    /// `min_prefix` (and at least one) token long. A hit pins the segment
+    /// (lease) and refreshes its recency; every call counts toward the hit
+    /// rate. The lease's `len()` is the *match* length — it may be shorter
+    /// than the backing segment, whose leading positions then serve it.
+    pub fn lookup(&mut self, variant: &str, tokens: &[i32]) -> Option<Lease> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.tick += 1;
+        let hit = self
+            .roots
+            .get(variant)
+            .and_then(|r| r.longest(tokens))
+            .filter(|&(_, len)| len >= self.cfg.min_prefix.max(1));
+        match hit {
+            Some((id, len)) => {
+                let seg = self.segments.get_mut(&id).expect("trie points at live segment");
+                debug_assert!(seg.len >= len, "match longer than its segment");
+                seg.refs += 1;
+                seg.last_use = self.tick;
+                self.counters.hits += 1;
+                self.counters.hit_tokens += len as u64;
+                Some(Lease { id, len })
+            }
+            None => {
+                self.counters.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Copy a leased match's prefix (`0..lease.len()` sequence positions of
+    /// the backing segment) into a zeroed single-row cache pair of the same
+    /// shape.
+    pub fn splice(&self, lease: &Lease, k_dst: &mut Tensor<f32>,
+                  v_dst: &mut Tensor<f32>) -> Result<()> {
+        let seg = self
+            .segments
+            .get(&lease.id)
+            .ok_or_else(|| anyhow!("lease {} has no live segment", lease.id))?;
+        if seg.k.dims != k_dst.dims || seg.v.dims != v_dst.dims {
+            bail!(
+                "segment dims {:?} incompatible with destination {:?}",
+                seg.k.dims, k_dst.dims
+            );
+        }
+        if lease.len > seg.len {
+            bail!("lease length {} exceeds segment length {}", lease.len, seg.len);
+        }
+        k_dst.copy_seq_prefix_from(&seg.k, lease.len);
+        v_dst.copy_seq_prefix_from(&seg.v, lease.len);
+        Ok(())
+    }
+
+    /// Hand a lease back; the segment becomes evictable again once its
+    /// refcount returns to zero.
+    pub fn release(&mut self, lease: Lease) {
+        if let Some(seg) = self.segments.get_mut(&lease.id) {
+            debug_assert!(seg.refs > 0, "release without matching lease");
+            seg.refs = seg.refs.saturating_sub(1);
+        }
+    }
+
+    /// Snapshot the first `tokens.len()` positions of an advanced
+    /// single-row cache pair under (`variant`, `tokens`), then evict
+    /// least-recently-used unleased segments until the budget holds.
+    /// Returns the number of segments evicted. A prefix already cached only
+    /// refreshes its recency; one larger than the whole budget is rejected.
+    pub fn insert(&mut self, variant: &str, tokens: &[i32], k: &Tensor<f32>,
+                  v: &Tensor<f32>) -> usize {
+        if !self.cfg.enabled || tokens.len() < self.cfg.min_prefix {
+            return 0;
+        }
+        let len = tokens.len();
+        if k.rank() < 2 || len > k.dims[k.rank() - 2] {
+            return 0; // prefix longer than the row holds; nothing to snapshot
+        }
+        self.tick += 1;
+        if let Some(id) = self.roots.get(variant).and_then(|r| r.exact(tokens)) {
+            if let Some(seg) = self.segments.get_mut(&id) {
+                seg.last_use = self.tick;
+            }
+            return 0;
+        }
+        let bytes = (k.numel() + v.numel()) * std::mem::size_of::<f32>();
+        if bytes > self.cfg.budget_bytes {
+            self.counters.rejected += 1;
+            return 0;
+        }
+        let mut sk = Tensor::zeros(&k.dims);
+        sk.copy_seq_prefix_from(k, len);
+        let mut sv = Tensor::zeros(&v.dims);
+        sv.copy_seq_prefix_from(v, len);
+        let id = self.next_id;
+        self.next_id += 1;
+        let _replaced = self
+            .roots
+            .entry(variant.to_string())
+            .or_default()
+            .insert(tokens, id);
+        debug_assert!(_replaced.is_none(), "exact() said the key was absent");
+        self.segments.insert(id, Segment {
+            variant: variant.to_string(),
+            key: tokens.to_vec(),
+            len,
+            bytes,
+            refs: 0,
+            last_use: self.tick,
+            k: sk,
+            v: sv,
+        });
+        self.resident_bytes += bytes;
+        self.counters.inserts += 1;
+        self.evict_to_budget(id)
+    }
+
+    /// Evict unleased segments (LRU first) until resident bytes fit the
+    /// budget; stops early when only leased segments (or the segment this
+    /// very insert just created — evicting it would be pure churn) remain,
+    /// temporarily running over budget instead.
+    fn evict_to_budget(&mut self, keep: u64) -> usize {
+        let mut evicted = 0;
+        while self.resident_bytes > self.cfg.budget_bytes {
+            let victim = self
+                .segments
+                .iter()
+                .filter(|(&id, s)| s.refs == 0 && id != keep)
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let seg = self.segments.remove(&id).expect("victim exists");
+            self.resident_bytes -= seg.bytes;
+            let _unlinked = self
+                .roots
+                .get_mut(&seg.variant)
+                .map(|r| r.remove(&seg.key))
+                .unwrap_or(false);
+            debug_assert!(_unlinked, "segment had no trie entry");
+            self.counters.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// True while the segment is resident (test hook for lease safety).
+    pub fn has_segment(&self, id: u64) -> bool {
+        self.segments.contains_key(&id)
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.counters.hits,
+            misses: self.counters.misses,
+            hit_tokens: self.counters.hit_tokens,
+            inserts: self.counters.inserts,
+            rejected: self.counters.rejected,
+            evictions: self.counters.evictions,
+            resident_bytes: self.resident_bytes,
+            segments: self.segments.len(),
+            leases: self.segments.values().map(|s| s.refs as usize).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: [usize; 5] = [2, 1, 2, 8, 4]; // [L, 1, H, S, hd]
+    const ROW_BYTES: usize = 2 * 2 * 2 * 8 * 4 * 4; // k+v, f32
+
+    fn cfg(budget_rows: usize) -> PrefixCacheConfig {
+        PrefixCacheConfig {
+            enabled: true,
+            budget_bytes: budget_rows * ROW_BYTES,
+            min_prefix: 2,
+        }
+    }
+
+    /// A row pair whose position `s` holds `fill + s` (checks that splice
+    /// moves the right sequence positions).
+    fn row(fill: f32) -> (Tensor<f32>, Tensor<f32>) {
+        let mut k = Tensor::<f32>::zeros(&DIMS);
+        for l in 0..DIMS[0] {
+            for h in 0..DIMS[2] {
+                for s in 0..DIMS[3] {
+                    for d in 0..DIMS[4] {
+                        let off = (((l * DIMS[1]) * DIMS[2] + h) * DIMS[3] + s) * DIMS[4] + d;
+                        k.data[off] = fill + s as f32;
+                    }
+                }
+            }
+        }
+        let v = k.clone();
+        (k, v)
+    }
+
+    #[test]
+    fn longest_prefix_match_with_min_prefix_floor() {
+        let mut c = PrefixCache::new(cfg(8));
+        let (k, v) = row(10.0);
+        assert_eq!(c.insert("fp32", &[1, 2, 3], &k, &v), 0);
+        assert_eq!(c.insert("fp32", &[1, 2, 3, 4, 5], &k, &v), 0);
+
+        // Deepest cached match wins.
+        let l = c.lookup("fp32", &[1, 2, 3, 4, 5, 6, 7]).expect("hit");
+        assert_eq!(l.len(), 5);
+        c.release(l);
+        // A query ending *inside* the longer key is served by that
+        // segment's leading positions: all 4 query tokens match.
+        let l = c.lookup("fp32", &[1, 2, 3, 4]).expect("hit");
+        assert_eq!(l.len(), 4);
+        c.release(l);
+        // Shared tokens below min_prefix don't hit (only 1 common token
+        // along [1, 9]).
+        assert!(c.lookup("fp32", &[1, 9, 9]).is_none());
+        // Unknown variant roots are isolated.
+        assert!(c.lookup("w8a8", &[1, 2, 3, 4, 5]).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+        assert_eq!(s.hit_tokens, 9);
+        assert_eq!(s.leases, 0);
+    }
+
+    #[test]
+    fn partial_match_into_a_longer_segment_serves_the_shared_prefix() {
+        // The serving-shape case: one cached request `template ++ body_a`
+        // must serve the shared template to a request `template ++ body_b`
+        // (and an exact duplicate capped one token short must hit at
+        // len - 1). Neither query is a whole cached key.
+        let mut c = PrefixCache::new(cfg(8));
+        let (k, v) = row(50.0);
+        let template = [1, 8, 8, 8];
+        let full: Vec<i32> = template.iter().chain(&[41, 42]).copied().collect();
+        c.insert("fp32", &full, &k, &v);
+
+        // template ++ other body: matches exactly the template tokens.
+        let query: Vec<i32> = template.iter().chain(&[77, 78, 79]).copied().collect();
+        let l = c.lookup("fp32", &query).expect("template hit");
+        assert_eq!(l.len(), template.len());
+        // Splice serves only the matched positions, not the whole segment.
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.splice(&l, &mut dk, &mut dv).expect("splice");
+        assert_eq!(dk.at(&[0, 0, 0, 3, 0]), 53.0, "last matched position copied");
+        assert_eq!(
+            dk.at(&[0, 0, 0, 4, 0]),
+            0.0,
+            "segment positions past the match stay out"
+        );
+        c.release(l);
+
+        // Exact duplicate, capped one token short (the engine's hit cap).
+        let l = c.lookup("fp32", &full[..full.len() - 1]).expect("duplicate hit");
+        assert_eq!(l.len(), full.len() - 1);
+        c.release(l);
+    }
+
+    #[test]
+    fn radix_edges_split_on_divergence() {
+        let mut c = PrefixCache::new(cfg(8));
+        let (k, v) = row(0.0);
+        c.insert("fp32", &[7, 7, 7, 1], &k, &v);
+        c.insert("fp32", &[7, 7, 7, 2, 2], &k, &v); // splits the [7,7,7,1] edge
+        c.insert("fp32", &[7, 7], &k, &v); // node on the shared spine
+        for (query, want) in [
+            (&[7, 7, 7, 1, 5][..], 4usize),
+            (&[7, 7, 7, 2, 2][..], 5),
+            // diverges after the 3-token spine: served by either deeper
+            // segment's leading positions
+            (&[7, 7, 7, 9][..], 3),
+            (&[7, 7][..], 2),
+        ] {
+            let l = c.lookup("fp32", query).unwrap_or_else(|| panic!("miss on {query:?}"));
+            assert_eq!(l.len(), want, "query {query:?}");
+            c.release(l);
+        }
+    }
+
+    #[test]
+    fn splice_copies_only_the_valid_prefix() {
+        let mut c = PrefixCache::new(cfg(8));
+        let (k, v) = row(100.0);
+        c.insert("fp32", &[1, 2, 3], &k, &v);
+        let l = c.lookup("fp32", &[1, 2, 3, 4]).expect("hit");
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.splice(&l, &mut dk, &mut dv).expect("splice");
+        assert_eq!(dk.at(&[0, 0, 0, 0, 0]), 100.0);
+        assert_eq!(dk.at(&[1, 0, 1, 2, 3]), 102.0);
+        assert_eq!(dk.at(&[0, 0, 0, 3, 0]), 0.0, "beyond the prefix stays zero");
+        // Shape mismatch is an error, not a corrupt copy.
+        let mut bad = Tensor::<f32>::zeros(&[2, 1, 2, 6, 4]);
+        assert!(c.splice(&l, &mut bad, &mut dv).is_err());
+        c.release(l);
+    }
+
+    #[test]
+    fn insert_dedups_and_lru_evicts_oldest_unleased() {
+        let mut c = PrefixCache::new(cfg(2));
+        let (k, v) = row(0.0);
+        assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0);
+        assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0, "duplicate key: no new segment");
+        assert_eq!(c.stats().segments, 1);
+        assert_eq!(c.insert("fp32", &[2, 2], &k, &v), 0);
+        // Touch [1,1] so [2,2] is the LRU victim.
+        let l = c.lookup("fp32", &[1, 1]).expect("hit");
+        c.release(l);
+        assert_eq!(c.insert("fp32", &[3, 3], &k, &v), 1, "one eviction to fit");
+        assert!(c.lookup("fp32", &[2, 2]).is_none(), "LRU segment evicted");
+        let l = c.lookup("fp32", &[1, 1]).expect("recently-used survives");
+        c.release(l);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().resident_bytes <= c.config().budget_bytes);
+    }
+
+    #[test]
+    fn leased_segments_are_never_evicted() {
+        let mut c = PrefixCache::new(cfg(1));
+        let (k, v) = row(0.0);
+        c.insert("fp32", &[1, 1], &k, &v);
+        let lease = c.lookup("fp32", &[1, 1]).expect("hit");
+        let id = lease.id();
+        // Budget is one row; these inserts each demand an eviction, but the
+        // only other resident segment is leased.
+        c.insert("fp32", &[2, 2], &k, &v);
+        c.insert("fp32", &[3, 3], &k, &v);
+        assert!(c.has_segment(id), "leased segment evicted under pressure");
+        assert!(
+            c.stats().resident_bytes > c.config().budget_bytes,
+            "cache should run over budget rather than free a lease"
+        );
+        // Splice still works mid-pressure.
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.splice(&lease, &mut dk, &mut dv).expect("leased splice");
+        c.release(lease);
+        // Once released, the next insert can reclaim it.
+        c.insert("fp32", &[4, 4], &k, &v);
+        assert!(!c.has_segment(id), "released LRU segment reclaimed");
+        assert!(c.stats().resident_bytes <= c.config().budget_bytes);
+        assert_eq!(c.stats().leases, 0);
+    }
+
+    #[test]
+    fn oversize_segment_and_disabled_cache_reject_cleanly() {
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            enabled: true,
+            budget_bytes: ROW_BYTES / 2,
+            min_prefix: 2,
+        });
+        let (k, v) = row(0.0);
+        assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0);
+        assert_eq!(c.stats().rejected, 1);
+        assert_eq!(c.stats().segments, 0);
+
+        let mut off = PrefixCache::new(PrefixCacheConfig::off());
+        assert_eq!(off.insert("fp32", &[1, 1], &k, &v), 0);
+        assert!(off.lookup("fp32", &[1, 1]).is_none());
+        assert_eq!(off.stats(), PrefixCacheStats::default());
+    }
+
+    #[test]
+    fn hit_rate_derivation() {
+        let s = PrefixCacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(PrefixCacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -75,6 +75,10 @@ pub struct Request {
     pub params: GenParams,
     /// Task family tag (workload benches group metrics by it).
     pub task: String,
+    /// The submitted prompt exceeded the prefill window and was cut to it;
+    /// surfaced in the completion's [`SpecStats`] and a metrics counter so
+    /// silently-shortened prompts are visible to callers.
+    pub prompt_truncated: bool,
     pub submitted_at: Instant,
 }
 
@@ -85,12 +89,18 @@ impl Request {
             prompt,
             params,
             task: String::new(),
+            prompt_truncated: false,
             submitted_at: Instant::now(),
         }
     }
 
     pub fn with_task(mut self, task: &str) -> Self {
         self.task = task.to_string();
+        self
+    }
+
+    pub fn with_truncated(mut self, truncated: bool) -> Self {
+        self.prompt_truncated = truncated;
         self
     }
 
@@ -134,6 +144,10 @@ pub struct RequestState {
 impl RequestState {
     pub fn new(req: Request, drafter: Box<dyn Drafter>, rng: crate::util::rng::Pcg) -> Self {
         let committed = req.prompt.clone();
+        let stats = SpecStats {
+            prompt_truncated: req.prompt_truncated as u64,
+            ..SpecStats::default()
+        };
         RequestState {
             req,
             committed,
@@ -141,7 +155,7 @@ impl RequestState {
             generated: 0,
             drafter,
             rng,
-            stats: SpecStats::default(),
+            stats,
             draft_cost: DraftCost::default(),
             sched_delay_s: 0.0,
             first_token_at: None,
@@ -185,6 +199,17 @@ mod tests {
     use super::*;
     use crate::spec::VanillaDrafter;
     use crate::util::rng::Pcg;
+
+    #[test]
+    fn truncation_flag_flows_into_request_state_stats() {
+        let req = Request::new(7, vec![1, 2], GenParams::default()).with_truncated(true);
+        assert!(req.prompt_truncated);
+        let st = RequestState::new(req, Box::new(VanillaDrafter), Pcg::seeded(0));
+        assert_eq!(st.stats.prompt_truncated, 1);
+        let clean = Request::new(8, vec![1, 2], GenParams::default());
+        let st = RequestState::new(clean, Box::new(VanillaDrafter), Pcg::seeded(0));
+        assert_eq!(st.stats.prompt_truncated, 0);
+    }
 
     #[test]
     fn state_tracks_output_tokens() {

@@ -85,6 +85,27 @@ pub struct GovernorSnapshot {
     pub promotions: u64,
 }
 
+/// Point-in-time view of the shared-prefix KV cache (see
+/// `coordinator::prefixcache`): how much admission prefill is being served
+/// from cached committed prefixes, and what that working set costs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixSnapshot {
+    /// Admissions that matched a cached prefix (suffix-only prefill).
+    pub hits: u64,
+    /// Admissions with no usable cached prefix.
+    pub misses: u64,
+    /// hits / (hits + misses); 0 before any admission.
+    pub hit_rate: f64,
+    /// Prompt tokens served from cached KV instead of prefill.
+    pub hit_tokens: u64,
+    /// Bytes of KV segments resident in the cache.
+    pub resident_bytes: u64,
+    /// Segments resident in the cache.
+    pub segments: u64,
+    /// Segments evicted by the byte-budget LRU so far.
+    pub evictions: u64,
+}
+
 /// Lock-free counters the engine thread publishes after every step and any
 /// thread may read at any time (the server's `stats` endpoint). The
 /// per-bucket tallies are the one mutex-guarded piece; they are written only
@@ -123,6 +144,15 @@ pub struct RouterStats {
     pub gov_delta_milli: AtomicI64,
     pub gov_demotions: AtomicU64,
     pub gov_promotions: AtomicU64,
+    /// Prefix-cache counters published by the engine thread.
+    pub prefix_hits: AtomicU64,
+    pub prefix_misses: AtomicU64,
+    pub prefix_hit_tokens: AtomicU64,
+    pub prefix_resident_bytes: AtomicU64,
+    pub prefix_segments: AtomicU64,
+    pub prefix_evictions: AtomicU64,
+    /// Submitted prompts cut to the prefill window.
+    pub prompt_truncated: AtomicU64,
     /// Per-bucket occupancy/calls published by the engine thread.
     pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
     /// Per-variant chunk-call tallies published by the engine thread.
@@ -153,6 +183,10 @@ pub struct StatsSnapshot {
     pub variants: Vec<VariantCalls>,
     /// Adaptive-precision governor view (all-zero when disabled).
     pub governor: GovernorSnapshot,
+    /// Shared-prefix KV cache view (all-zero when disabled).
+    pub prefix: PrefixSnapshot,
+    /// Submitted prompts cut to the prefill window.
+    pub prompt_truncated: u64,
 }
 
 impl StatsSnapshot {
@@ -210,6 +244,19 @@ impl StatsSnapshot {
                     ("promotions", Json::num(self.governor.promotions as f64)),
                 ]),
             ),
+            (
+                "prefix",
+                Json::obj(vec![
+                    ("hits", Json::num(self.prefix.hits as f64)),
+                    ("misses", Json::num(self.prefix.misses as f64)),
+                    ("hit_rate", Json::num(self.prefix.hit_rate)),
+                    ("hit_tokens", Json::num(self.prefix.hit_tokens as f64)),
+                    ("resident_bytes", Json::num(self.prefix.resident_bytes as f64)),
+                    ("segments", Json::num(self.prefix.segments as f64)),
+                    ("evictions", Json::num(self.prefix.evictions as f64)),
+                ]),
+            ),
+            ("prompt_truncated", Json::num(self.prompt_truncated as f64)),
         ])
     }
 }
@@ -397,6 +444,24 @@ impl EngineHandle {
                     promotions: s.gov_promotions.load(Ordering::Relaxed),
                 }
             },
+            prefix: {
+                let hits = s.prefix_hits.load(Ordering::Relaxed);
+                let misses = s.prefix_misses.load(Ordering::Relaxed);
+                PrefixSnapshot {
+                    hits,
+                    misses,
+                    hit_rate: if hits + misses == 0 {
+                        0.0
+                    } else {
+                        hits as f64 / (hits + misses) as f64
+                    },
+                    hit_tokens: s.prefix_hit_tokens.load(Ordering::Relaxed),
+                    resident_bytes: s.prefix_resident_bytes.load(Ordering::Relaxed),
+                    segments: s.prefix_segments.load(Ordering::Relaxed),
+                    evictions: s.prefix_evictions.load(Ordering::Relaxed),
+                }
+            },
+            prompt_truncated: s.prompt_truncated.load(Ordering::Relaxed),
         }
     }
 
@@ -551,6 +616,26 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
             .gov_delta_milli
             .store((h.mean() * 1e3) as i64, Ordering::Relaxed);
     }
+    // The prefix block is gauges end to end: the engine publishes the
+    // cache's own (monotonic) counters wholesale after each admission pass.
+    let m = &engine.metrics;
+    for (dst, name) in [
+        (&stats.prefix_hits, crate::metrics::names::PREFIX_HITS),
+        (&stats.prefix_misses, crate::metrics::names::PREFIX_MISSES),
+        (&stats.prefix_hit_tokens, crate::metrics::names::PREFIX_HIT_TOKENS),
+        (&stats.prefix_evictions, crate::metrics::names::PREFIX_EVICTIONS),
+        (
+            &stats.prefix_resident_bytes,
+            crate::metrics::names::PREFIX_RESIDENT_BYTES,
+        ),
+        (&stats.prefix_segments, crate::metrics::names::PREFIX_SEGMENTS),
+    ] {
+        dst.store(m.gauge(name).max(0) as u64, Ordering::Relaxed);
+    }
+    stats.prompt_truncated.store(
+        m.counter(crate::metrics::names::PROMPT_TRUNCATED),
+        Ordering::Relaxed,
+    );
     // Transition counts come from the governor itself (not the metrics
     // registry): transitions forced outside the engine's audit loop — e.g.
     // operational pre-demotion via `Engine::governor_mut` — must still be
@@ -607,6 +692,16 @@ mod tests {
                 demotions: 1,
                 promotions: 1,
             },
+            prefix: PrefixSnapshot {
+                hits: 6,
+                misses: 2,
+                hit_rate: 0.75,
+                hit_tokens: 480,
+                resident_bytes: 1 << 20,
+                segments: 5,
+                evictions: 3,
+            },
+            prompt_truncated: 2,
         };
         let j = s.to_json();
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
@@ -635,5 +730,17 @@ mod tests {
         assert!((gov.get("accept_delta").unwrap().as_f64().unwrap() + 0.25).abs() < 1e-9);
         assert_eq!(gov.get("demotions").unwrap().as_i64().unwrap(), 1);
         assert_eq!(gov.get("promotions").unwrap().as_i64().unwrap(), 1);
+        let prefix = j.get("prefix").unwrap();
+        assert_eq!(prefix.get("hits").unwrap().as_i64().unwrap(), 6);
+        assert_eq!(prefix.get("misses").unwrap().as_i64().unwrap(), 2);
+        assert!((prefix.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
+        assert_eq!(prefix.get("hit_tokens").unwrap().as_i64().unwrap(), 480);
+        assert_eq!(
+            prefix.get("resident_bytes").unwrap().as_i64().unwrap(),
+            1 << 20
+        );
+        assert_eq!(prefix.get("segments").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(prefix.get("evictions").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(j.get("prompt_truncated").unwrap().as_i64().unwrap(), 2);
     }
 }

@@ -7,7 +7,16 @@
 //! * **L3 (this crate)** — request router, admission scheduler, continuous
 //!   batcher, prompt-lookup drafter, rejection-sampling verifier logic,
 //!   KV-cache manager, metrics and server. Python never runs on the request
-//!   path. Each engine step runs a plan → gather → execute → scatter →
+//!   path. Admission runs a lookup → splice → suffix-prefill → snapshot
+//!   pipeline (`coordinator::prefixcache`): each prompt is longest-prefix-
+//!   matched against a radix trie of committed token prefixes mapping to
+//!   refcounted single-row KV segments (keyed by the verifier variant that
+//!   produced them, byte-budget LRU eviction that never frees a leased
+//!   segment), the matched prefix's KV is spliced into the prefill scratch,
+//!   and only the remaining suffix tokens are prefilled at the matched
+//!   write offset — bit-identical to a cold prefill because attention is
+//!   causal, but priced (and executed) at suffix length. Each engine step
+//!   then runs a plan → gather → execute → scatter →
 //!   commit pipeline (`coordinator::plan`): active rows are partitioned into
 //!   sub-batches by required function (decode-only vs verify) *and* by
 //!   verifier precision, and each sub-batch executes through the cheapest

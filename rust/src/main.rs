@@ -45,6 +45,8 @@ fn real_main() -> Result<()> {
     .opt("sched", Some("fifo"), "admission policy: fifo | spf | priority")
     .opt("plan", Some("elastic"), "step planning: elastic | monolithic")
     .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
+    .opt("prefix-cache", Some("on"), "shared-prefix KV reuse at admission: on | off")
+    .opt("prefix-budget-mb", Some("256"), "prefix-cache resident-segment budget (MiB)")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -77,6 +79,15 @@ fn real_main() -> Result<()> {
             quasar::coordinator::GovernorConfig::on()
         } else {
             Default::default()
+        },
+        prefix: quasar::coordinator::PrefixCacheConfig {
+            enabled: match parsed.str("prefix-cache").as_str() {
+                "on" => true,
+                "off" => false,
+                other => bail!("unknown prefix-cache mode '{other}' (on|off)"),
+            },
+            budget_bytes: parsed.usize("prefix-budget-mb") << 20,
+            ..Default::default()
         },
     };
 

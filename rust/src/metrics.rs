@@ -62,6 +62,29 @@ pub mod names {
     /// Counter: request classes re-promoted to the primary variant.
     pub const GOVERNOR_PROMOTIONS: &str = "governor_promotions";
 
+    /// Gauge (monotonic, published from the cache's own counters):
+    /// admissions whose prompt matched a cached prefix (suffix-only
+    /// prefill).
+    pub const PREFIX_HITS: &str = "prefix_cache_hits";
+    /// Gauge (monotonic): admissions that found no usable cached prefix
+    /// (hits + misses = admissions with the cache enabled).
+    pub const PREFIX_MISSES: &str = "prefix_cache_misses";
+    /// Gauge (monotonic): prompt tokens served from cached KV instead of
+    /// prefill.
+    pub const PREFIX_HIT_TOKENS: &str = "prefix_cache_hit_tokens";
+    /// Gauge (monotonic): cached segments evicted by the byte-budget LRU.
+    pub const PREFIX_EVICTIONS: &str = "prefix_cache_evictions";
+    /// Gauge: bytes of KV segments resident in the prefix cache.
+    pub const PREFIX_RESIDENT_BYTES: &str = "prefix_cache_resident_bytes";
+    /// Gauge: segments resident in the prefix cache.
+    pub const PREFIX_SEGMENTS: &str = "prefix_cache_segments";
+    /// Histogram: modeled prefill seconds each cache hit saved (full-prompt
+    /// chunk price minus the suffix-only price actually paid).
+    pub const PREFILL_SAVED_S: &str = "prefill_saved_s";
+
+    /// Counter: submitted prompts silently cut to the prefill window.
+    pub const PROMPT_TRUNCATED: &str = "prompt_truncated";
+
     /// Histogram name: rows actually carried per call executed at `bucket`
     /// (per-bucket occupancy).
     pub fn bucket_occupancy(bucket: usize) -> String {
@@ -93,6 +116,9 @@ pub struct SpecStats {
     pub accepted: u64,
     /// Steps where the drafter found no candidate (plain decode).
     pub draft_misses: u64,
+    /// 1 when this request's prompt was truncated to the prefill window at
+    /// submission (counts truncated requests after a merge).
+    pub prompt_truncated: u64,
 }
 
 impl SpecStats {
@@ -119,6 +145,7 @@ impl SpecStats {
         self.drafted += o.drafted;
         self.accepted += o.accepted;
         self.draft_misses += o.draft_misses;
+        self.prompt_truncated += o.prompt_truncated;
     }
 }
 
@@ -271,7 +298,10 @@ mod tests {
 
     #[test]
     fn spec_stats_derivations() {
-        let s = SpecStats { steps: 10, tokens_out: 14, drafted: 20, accepted: 4, draft_misses: 2 };
+        let s = SpecStats {
+            steps: 10, tokens_out: 14, drafted: 20, accepted: 4, draft_misses: 2,
+            prompt_truncated: 1,
+        };
         assert!((s.mean_acceptance_len() - 1.4).abs() < 1e-12);
         assert!((s.acceptance_rate() - 0.2).abs() < 1e-12);
         let mut t = SpecStats::default();
@@ -279,5 +309,6 @@ mod tests {
         t.merge(&s);
         assert_eq!(t.steps, 20);
         assert_eq!(t.tokens_out, 28);
+        assert_eq!(t.prompt_truncated, 2, "truncated-request count merges");
     }
 }

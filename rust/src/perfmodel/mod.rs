@@ -153,6 +153,30 @@ impl PerfModel {
         calls + self.price_draft_cost(&log.draft_cost, drafter)
     }
 
+    /// Modeled admission (prefill-phase) seconds of a run — the traffic the
+    /// prefix cache attacks. On a cache hit the recorded prefill call
+    /// carries only the executed *suffix* tokens, so a warm run prices
+    /// strictly below the same workload served cold.
+    pub fn prefill_time(&self, log: &CallLog) -> f64 {
+        log.records
+            .iter()
+            .filter(|r| r.fn_kind == FnKind::Prefill)
+            .map(|r| self.price(r).total())
+            .sum()
+    }
+
+    /// Modeled prefill seconds one prefix-cache hit saves: the full-prompt
+    /// chunk price minus the suffix-only price actually paid. Weight and
+    /// KV streams are per-call and cancel; the saving is the per-token
+    /// activation traffic and compute of the skipped positions — strictly
+    /// positive whenever the suffix is shorter than the prompt.
+    pub fn prefill_saved_s(&self, variant: &str, n_layers: usize,
+                           prompt_tokens: usize, suffix_tokens: usize) -> f64 {
+        (self.price_parts(variant, n_layers, 1, prompt_tokens).total()
+            - self.price_parts(variant, n_layers, 1, suffix_tokens).total())
+            .max(0.0)
+    }
+
     /// Modeled decode-phase time only (prefill excluded): matches how the
     /// paper reports decoding speedup (prefill is identical across methods).
     /// Governor shadow audits *are* included — they are real decode-phase
@@ -337,6 +361,38 @@ mod tests {
         let per_call = pm.price_parts("pruned75", 4, 1, 1).total();
         let per_call_fp32 = pm.price_parts("fp32", 4, 1, 1).total();
         assert!(per_call < per_call_fp32);
+    }
+
+    #[test]
+    fn prefill_time_isolates_admission_and_prefix_hits_price_lower() {
+        let pm = pm();
+        let prefill = |tokens: usize| CallRecord {
+            variant: "fp32".into(), fn_kind: FnKind::Prefill, batch: 1,
+            n_layers: 6, active_rows: 1, tokens_used: tokens, chunk_len: 128,
+            useful_tokens: tokens, wall_s: 0.0,
+        };
+        let mut cold = CallLog::default();
+        cold.record(prefill(100));
+        let mut warm = CallLog::default();
+        warm.record(prefill(20)); // 80-token prefix served from cache
+        let (t_cold, t_warm) = (pm.prefill_time(&cold), pm.prefill_time(&warm));
+        assert!(t_warm < t_cold, "suffix-only prefill must price lower");
+        // prefill_time + decode_time partition run_time
+        let mut mixed = CallLog::default();
+        mixed.record(prefill(100));
+        mixed.record(CallRecord {
+            fn_kind: FnKind::Decode, tokens_used: 1, chunk_len: 1,
+            useful_tokens: 1, ..prefill(100)
+        });
+        let whole = pm.run_time(&mixed, None);
+        assert!(
+            (whole - pm.prefill_time(&mixed) - pm.decode_time(&mixed, None)).abs() < 1e-15
+        );
+        // prefill_saved_s is exactly the cold/warm gap for the same shapes
+        let saved = pm.prefill_saved_s("fp32", 6, 100, 20);
+        assert!((saved - (t_cold - t_warm)).abs() < 1e-15);
+        assert!(saved > 0.0);
+        assert_eq!(pm.prefill_saved_s("fp32", 6, 50, 50), 0.0, "no hit, no saving");
     }
 
     #[test]

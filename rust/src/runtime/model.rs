@@ -116,6 +116,15 @@ impl ModelRuntime {
         chunk.run(&self.rt, &weights, tokens, k, v, pos)
     }
 
+    /// Host bytes of one single-row KV cache *pair* (`[L, 1, H, S, hd]`
+    /// f32 k + v) at the given depth — what one prefix-cache segment costs
+    /// resident, and the unit budget knobs are naturally expressed in.
+    pub fn cache_row_bytes(&self, n_layers: usize) -> usize {
+        let cfg = &self.entry.cfg;
+        2 * n_layers * cfg.n_heads * cfg.max_seq * cfg.head_dim
+            * std::mem::size_of::<f32>()
+    }
+
     /// Fresh zeroed KV cache pair for a (variant, batch) shape.
     pub fn empty_cache(
         &self,

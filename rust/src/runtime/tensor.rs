@@ -103,6 +103,56 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// Copy the first `n_seq` positions of the sequence axis (axis
+    /// `rank-2`) from a same-shaped tensor, leaving later positions
+    /// untouched. KV layout `[..., S, hd]`: the prefix-cache path moves
+    /// only the committed positions of a row instead of the whole
+    /// `max_seq` extent.
+    pub fn copy_seq_prefix_from(&mut self, src: &Tensor<T>, n_seq: usize) {
+        let r = self.rank();
+        assert!(r >= 2, "need a trailing [S, inner] layout");
+        assert_eq!(self.dims, src.dims, "shape mismatch");
+        let seq = self.dims[r - 2];
+        assert!(n_seq <= seq, "prefix {n_seq} exceeds seq {seq}");
+        let inner = self.dims[r - 1];
+        let outer: usize = self.dims[..r - 2].iter().product();
+        let block = seq * inner;
+        for o in 0..outer {
+            let off = o * block;
+            self.data[off..off + n_seq * inner]
+                .copy_from_slice(&src.data[off..off + n_seq * inner]);
+        }
+    }
+
+    /// Copy the first `n_seq` sequence positions of one axis-1 row from
+    /// `src` (whose shape matches except axis 1), leaving the row's later
+    /// positions untouched. The length-bounded form of
+    /// [`Tensor::copy_axis1_row_from`] for `[L, B, ..., S, hd]` KV caches:
+    /// an admission only has `prompt_len` valid positions, so splicing the
+    /// full `max_seq` extent moves (and preserves) garbage.
+    pub fn copy_axis1_row_seq_prefix_from(&mut self, dst_row: usize, src: &Tensor<T>,
+                                          src_row: usize, n_seq: usize) {
+        let r = self.rank();
+        assert!(r >= 4 && src.rank() == r, "need a [_, B, ..., S, inner] layout");
+        assert_eq!(self.dims[0], src.dims[0], "axis0 mismatch");
+        assert_eq!(&self.dims[2..], &src.dims[2..], "trailing dims mismatch");
+        let seq = self.dims[r - 2];
+        assert!(n_seq <= seq, "prefix {n_seq} exceeds seq {seq}");
+        let inner = self.dims[r - 1];
+        let mid: usize = self.dims[2..r - 2].iter().product();
+        let (db, sb) = (self.dims[1], src.dims[1]);
+        assert!(dst_row < db && src_row < sb);
+        let block = seq * inner;
+        for a0 in 0..self.dims[0] {
+            for m in 0..mid {
+                let d_off = ((a0 * db + dst_row) * mid + m) * block;
+                let s_off = ((a0 * sb + src_row) * mid + m) * block;
+                self.data[d_off..d_off + n_seq * inner]
+                    .copy_from_slice(&src.data[s_off..s_off + n_seq * inner]);
+            }
+        }
+    }
+
     /// Reset every element to the default (pooled-scratch reuse without
     /// reallocating).
     pub fn zero(&mut self) {
@@ -185,6 +235,52 @@ mod tests {
         assert_eq!(bulk.at(&[0, 0, 0]), 4, "row 2 of src landed in row 0");
         assert_eq!(bulk.at(&[1, 3, 1]), 7, "row 0 of src landed in row 3");
         assert_eq!(bulk.at(&[0, 1, 0]), 0, "unmapped rows untouched");
+    }
+
+    #[test]
+    fn seq_prefix_copy_moves_only_leading_positions() {
+        // [2 (L), 1 (B), 3 (S), 2 (hd)]: src holds s+1 at every position.
+        let mut src = Tensor::<i32>::zeros(&[2, 1, 3, 2]);
+        for l in 0..2 {
+            for s in 0..3 {
+                for d in 0..2 {
+                    src.data[(l * 3 + s) * 2 + d] = s as i32 + 1;
+                }
+            }
+        }
+        let mut dst = Tensor::<i32>::zeros(&[2, 1, 3, 2]);
+        dst.data.iter_mut().for_each(|x| *x = -1);
+        dst.copy_seq_prefix_from(&src, 2);
+        assert_eq!(dst.at(&[0, 0, 0, 0]), 1);
+        assert_eq!(dst.at(&[1, 0, 1, 1]), 2);
+        assert_eq!(dst.at(&[0, 0, 2, 0]), -1, "beyond the prefix untouched");
+        // n_seq == seq degenerates to a full copy.
+        dst.copy_seq_prefix_from(&src, 3);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn axis1_row_seq_prefix_copy_bounds_the_splice() {
+        // dst [2 (L), 3 (B), 1 (H), 4 (S), 2 (hd)], src single-row.
+        let mut src = Tensor::<i32>::zeros(&[2, 1, 1, 4, 2]);
+        for (i, x) in src.data.iter_mut().enumerate() {
+            *x = i as i32 + 1; // everything non-zero
+        }
+        let mut dst = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        dst.data.iter_mut().for_each(|x| *x = -1);
+        dst.copy_axis1_row_seq_prefix_from(1, &src, 0, 2);
+        // positions 0..2 of row 1 match src, later positions untouched
+        assert_eq!(dst.at(&[0, 1, 0, 0, 0]), src.at(&[0, 0, 0, 0, 0]));
+        assert_eq!(dst.at(&[1, 1, 0, 1, 1]), src.at(&[1, 0, 0, 1, 1]));
+        assert_eq!(dst.at(&[0, 1, 0, 2, 0]), -1);
+        assert_eq!(dst.at(&[0, 0, 0, 0, 0]), -1, "other rows untouched");
+        assert_eq!(dst.at(&[1, 2, 0, 3, 1]), -1);
+        // full-length prefix equals the whole-row splice
+        let mut a = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        a.copy_axis1_row_seq_prefix_from(2, &src, 0, 4);
+        let mut b = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        b.copy_axis1_row_from(2, &src, 0);
+        assert_eq!(a, b);
     }
 
     #[test]

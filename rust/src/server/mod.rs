@@ -19,7 +19,12 @@
 //!                                     "probes": .., "audit_rate": ..,
 //!                                     "top1_agreement": .., "accept_delta":
 //!                                     .., "demotions": .., "promotions":
-//!                                     ..}, ...}
+//!                                     ..},
+//!                                     "prefix": {"hits": .., "misses": ..,
+//!                                     "hit_rate": .., "hit_tokens": ..,
+//!                                     "resident_bytes": .., "segments": ..,
+//!                                     "evictions": ..},
+//!                                     "prompt_truncated": .., ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
 //! Threading model: each connection is handled by a pool worker, and workers

@@ -8,9 +8,10 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::GenParams;
+use crate::tokenizer::BOS_ID;
 use crate::util::json::{parse_file, Json};
 use crate::util::rng::Pcg;
 
@@ -65,22 +66,96 @@ impl WorkloadSet {
         self.items.iter().filter(|i| i.task == task).collect()
     }
 
-    /// Deterministically sample `n` prompts of one task.
-    pub fn sample(&self, task: &str, n: usize, rng: &mut Pcg) -> Vec<WorkItem> {
+    /// Task names present in this set (diagnostics for bad `--task` flags).
+    pub fn task_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.items.iter().map(|i| i.task.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Non-empty item pool for one task, or an actionable error (a mistyped
+    /// benchmark flag should fail with a message, not a panic).
+    fn task_pool(&self, task: &str) -> Result<Vec<&WorkItem>> {
         let pool = self.task_items(task);
-        assert!(!pool.is_empty(), "no items for task {task}");
-        (0..n)
+        if pool.is_empty() {
+            bail!(
+                "no workload items for task '{task}' (exported tasks: {})",
+                self.task_names().join(", ")
+            );
+        }
+        Ok(pool)
+    }
+
+    /// Deterministically sample `n` prompts of one task.
+    pub fn sample(&self, task: &str, n: usize, rng: &mut Pcg) -> Result<Vec<WorkItem>> {
+        let pool = self.task_pool(task)?;
+        Ok((0..n)
             .map(|_| pool[rng.usize_below(pool.len())].clone())
-            .collect()
+            .collect())
     }
 
     /// A mixed-task batch in round-robin task order (the serving driver).
-    pub fn mixed(&self, n: usize, rng: &mut Pcg) -> Vec<WorkItem> {
+    pub fn mixed(&self, n: usize, rng: &mut Pcg) -> Result<Vec<WorkItem>> {
+        (0..n)
+            .map(|i| {
+                let pool = self.task_pool(TASKS[i % TASKS.len()])?;
+                Ok(pool[rng.usize_below(pool.len())].clone())
+            })
+            .collect()
+    }
+
+    /// A shared-prefix serving batch: each task family gets a fixed
+    /// "system prompt" template (the family's first exported item, cut to
+    /// `prefix_len` tokens) that is prepended to every sampled prompt of
+    /// that family, so requests within a family share a long common token
+    /// prefix — the shape the engine's prefix cache turns into suffix-only
+    /// prefill. Round-robin over task families like [`WorkloadSet::mixed`].
+    ///
+    /// The sampled item's leading `<bos>` is stripped before concatenation
+    /// so the combined sequence reads like one prompt (a single `<bos>`
+    /// from the template). The `prompt` text is rebuilt to match the
+    /// truncated ids exactly: the closed-lexicon tokenizer maps every
+    /// non-special id to one whitespace word, so the kept template ids
+    /// correspond to that many leading words of the template text — the
+    /// text<->ids round trip stays exact on the wire path.
+    pub fn shared_prefix(&self, n: usize, prefix_len: usize,
+                         rng: &mut Pcg) -> Result<Vec<WorkItem>> {
         (0..n)
             .map(|i| {
                 let task = TASKS[i % TASKS.len()];
-                let pool = self.task_items(task);
-                pool[rng.usize_below(pool.len())].clone()
+                let pool = self.task_pool(task)?;
+                let template = pool[0];
+                let it = pool[rng.usize_below(pool.len())];
+                let tpl_ids: Vec<i32> = template
+                    .prompt_ids
+                    .iter()
+                    .copied()
+                    .take(prefix_len)
+                    .collect();
+                let tpl_words = tpl_ids
+                    .iter()
+                    .filter(|&&t| t != BOS_ID && t != crate::tokenizer::PAD_ID
+                        && t != crate::tokenizer::EOS_ID)
+                    .count();
+                let tpl_text = template
+                    .prompt
+                    .split_whitespace()
+                    .take(tpl_words)
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                let mut prompt_ids = tpl_ids;
+                let body = it
+                    .prompt_ids
+                    .strip_prefix(&[BOS_ID])
+                    .unwrap_or(it.prompt_ids.as_slice());
+                prompt_ids.extend_from_slice(body);
+                Ok(WorkItem {
+                    task: task.to_string(),
+                    prompt: format!("{tpl_text} {}", it.prompt).trim().to_string(),
+                    prompt_ids,
+                    reference_ids: it.reference_ids.clone(),
+                })
             })
             .collect()
     }
@@ -150,20 +225,62 @@ mod tests {
     #[test]
     fn sampling_is_deterministic_per_seed() {
         let ws = WorkloadSet::from_json(&sample_json()).unwrap();
-        let a: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5))
+        let a: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5)).unwrap()
             .iter().map(|i| i.prompt_ids.clone()).collect();
-        let b: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5))
+        let b: Vec<_> = ws.sample("gsm8k", 8, &mut Pcg::seeded(5)).unwrap()
             .iter().map(|i| i.prompt_ids.clone()).collect();
         assert_eq!(a, b);
     }
 
     #[test]
+    fn unknown_task_is_an_error_not_a_panic() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let err = ws.sample("gsm9k", 4, &mut Pcg::seeded(5)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gsm9k"), "message names the bad task: {msg}");
+        assert!(msg.contains("gsm8k"), "message lists the exported tasks: {msg}");
+        assert!(ws.shared_prefix(3, 1, &mut Pcg::seeded(5)).is_ok());
+        // an empty set fails through mixed/shared_prefix too
+        let empty = WorkloadSet { items: Vec::new() };
+        assert!(empty.mixed(2, &mut Pcg::seeded(1)).is_err());
+        assert!(empty.shared_prefix(2, 1, &mut Pcg::seeded(1)).is_err());
+    }
+
+    #[test]
     fn mixed_covers_all_tasks() {
         let ws = WorkloadSet::from_json(&sample_json()).unwrap();
-        let m = ws.mixed(10, &mut Pcg::seeded(1));
+        let m = ws.mixed(10, &mut Pcg::seeded(1)).unwrap();
         for t in TASKS {
             assert!(m.iter().any(|i| i.task == t), "missing {t}");
         }
+    }
+
+    #[test]
+    fn shared_prefix_items_share_their_family_template() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let items = ws.shared_prefix(10, 2, &mut Pcg::seeded(3)).unwrap();
+        assert_eq!(items.len(), 10);
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(it.task, TASKS[i % TASKS.len()], "round-robin task order");
+            let template: Vec<i32> = ws.task_items(&it.task)[0]
+                .prompt_ids
+                .iter()
+                .copied()
+                .take(2)
+                .collect();
+            assert!(
+                it.prompt_ids.starts_with(&template),
+                "item {i} does not share its family template"
+            );
+            assert!(it.prompt_ids.len() > template.len(), "body appended");
+            // exactly one leading <bos>: the sampled item's was stripped
+            assert_eq!(it.prompt_ids.iter().filter(|&&t| t == 1).count(), 1);
+        }
+        // same seed, same batch
+        let again = ws.shared_prefix(10, 2, &mut Pcg::seeded(3)).unwrap();
+        let a: Vec<_> = items.iter().map(|i| i.prompt_ids.clone()).collect();
+        let b: Vec<_> = again.iter().map(|i| i.prompt_ids.clone()).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -10,8 +10,9 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use quasar::coordinator::{
-    DrafterKind, Engine, EngineConfig, FnKind, GenParams, GovernorConfig,
+    DrafterKind, Engine, EngineConfig, FnKind, GenParams, GovernorConfig, PrefixCacheConfig,
 };
+use quasar::metrics::names;
 use quasar::perfmodel::PerfModel;
 use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
 use quasar::spec::NgramConfig;
@@ -63,6 +64,10 @@ fn integration_scenarios_inner() {
     elastic_planner_matches_monolithic_and_prices_lower(&manifest, &mr);
     eprintln!("== governed_precision_matches_fp32_and_prices_lower");
     governed_precision_matches_fp32_and_prices_lower(&manifest, &mr);
+    eprintln!("== prefix_cache_reuse_is_bit_identical_and_prices_admission_lower");
+    prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(&manifest, &mr);
+    eprintln!("== prompt_truncation_is_flagged_not_silent");
+    prompt_truncation_is_flagged_not_silent(&mr);
     eprintln!("== pruned_drafter_runs_and_verifier_stays_lossless");
     pruned_drafter_runs_and_verifier_stays_lossless(&mr);
 }
@@ -128,6 +133,7 @@ fn speculative_greedy_equals_vanilla_greedy(mr: &Rc<ModelRuntime>) {
                 policy: Default::default(),
                 elastic: true,
                 governor: Default::default(),
+                prefix: Default::default(),
             };
             let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
             engine.submit(
@@ -169,6 +175,7 @@ fn batched_serving_matches_single_request(mr: &Rc<ModelRuntime>) {
             policy: Default::default(),
             elastic: true,
             governor: Default::default(),
+            prefix: Default::default(),
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         let mut ids = Vec::new();
@@ -225,6 +232,7 @@ fn elastic_planner_matches_monolithic_and_prices_lower(
             policy: Default::default(),
             elastic,
             governor: Default::default(),
+            prefix: Default::default(),
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         for (i, p) in prompts.iter().enumerate() {
@@ -317,6 +325,7 @@ fn governed_precision_matches_fp32_and_prices_lower(
         policy: Default::default(),
         elastic: true,
         governor,
+        prefix: Default::default(),
     };
     let run = |mut engine: Engine| {
         for (i, p) in prompts.iter().enumerate() {
@@ -456,6 +465,132 @@ fn governed_precision_matches_fp32_and_prices_lower(
     );
 }
 
+/// The prefix-cache acceptance gate: over a shared-prefix workload (every
+/// goldens prompt submitted twice, so each duplicate's admission can reuse
+/// the first's committed prefix), the warm engine must (1) commit token
+/// streams bit-identical to the cold (cache-off) engine, (2) actually hit
+/// the cache, and (3) price modeled admission strictly lower, because each
+/// hit's prefill call carries only the executed suffix tokens.
+fn prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(
+    manifest: &Manifest,
+    mr: &Rc<ModelRuntime>,
+) {
+    let mr = mr.clone();
+    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
+    let prompts: Vec<Vec<i32>> = goldens
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
+        .collect();
+    // Duplicate the set: the second copy's admissions share full prefixes.
+    let mut many = prompts.clone();
+    many.extend(prompts.clone());
+
+    let run = |prefix: PrefixCacheConfig| {
+        let cfg = EngineConfig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Ngram(NgramConfig {
+                gamma: 3,
+                adaptive: false,
+                ..Default::default()
+            }),
+            batch: 4,
+            gamma: 3,
+            seed: 17,
+            policy: Default::default(),
+            elastic: true,
+            governor: Default::default(),
+            prefix,
+        };
+        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
+        for p in &many {
+            engine.submit(
+                p.clone(),
+                GenParams { max_new: 16, stop_at_eos: false, ..GenParams::default() },
+                "t",
+            );
+        }
+        let mut done = engine.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        let tokens: Vec<Vec<i32>> = done.into_iter().map(|c| c.tokens).collect();
+        (tokens, engine)
+    };
+
+    let (cold_tokens, cold_engine) = run(PrefixCacheConfig::off());
+    let warm_cfg = PrefixCacheConfig { min_prefix: 2, ..Default::default() };
+    let (warm_tokens, warm_engine) = run(warm_cfg);
+
+    assert_eq!(
+        cold_tokens, warm_tokens,
+        "prefix reuse changed the committed stream"
+    );
+    assert_eq!(cold_engine.prefix_cache().stats().hits, 0);
+    let ps = warm_engine.prefix_cache().stats();
+    assert!(ps.hits > 0, "duplicated prompts produced no prefix hits");
+    assert!(ps.hit_tokens > 0, "hits served no tokens");
+    assert!(ps.segments > 0 && ps.resident_bytes > 0);
+    assert_eq!(ps.leases, 0, "admission leaked a prefix lease");
+    // The gauge pipeline the stats endpoint reads must agree with the cache.
+    assert_eq!(
+        warm_engine.metrics.gauge(names::PREFIX_HITS) as u64,
+        ps.hits,
+        "published hit gauge diverged from the cache's own counter"
+    );
+    let (hits, hit_tokens) = (ps.hits, ps.hit_tokens);
+
+    let perf = PerfModel::new(manifest.cost_model.clone(), mr.cfg().clone());
+    let (t_cold, t_warm) = (
+        perf.prefill_time(&cold_engine.call_log),
+        perf.prefill_time(&warm_engine.call_log),
+    );
+    assert!(
+        t_warm < t_cold,
+        "warm modeled admission {t_warm} not below cold {t_cold}"
+    );
+    // Decode-phase pricing is untouched by admission reuse.
+    let (d_cold, d_warm) = (
+        perf.decode_time(&cold_engine.call_log, None),
+        perf.decode_time(&warm_engine.call_log, None),
+    );
+    assert!((d_cold - d_warm).abs() < 1e-12, "decode pricing drifted");
+    eprintln!(
+        "   modeled admission: cold {t_cold:.6}s -> warm {t_warm:.6}s \
+         ({:.1}% saved), {hits} hits, {hit_tokens} tokens from cache",
+        100.0 * (1.0 - t_warm / t_cold)
+    );
+}
+
+/// An over-long prompt must be visibly truncated: flagged on the
+/// completion's stats, counted in the metrics registry, and still served.
+fn prompt_truncation_is_flagged_not_silent(mr: &Rc<ModelRuntime>) {
+    let mr = mr.clone();
+    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
+    let prompt = goldens.idx(0).unwrap().get("prompt_ids").unwrap().as_i32_vec().unwrap();
+    let p = mr.cfg().prefill_len;
+
+    let mut engine = Engine::new(Rc::clone(&mr), EngineConfig::ngram(1, 3)).unwrap();
+    // Tile the golden prompt past the prefill window.
+    let long: Vec<i32> = prompt.iter().cycle().take(p + 7).copied().collect();
+    engine.submit(
+        long,
+        GenParams { max_new: 4, stop_at_eos: false, ..GenParams::default() },
+        "t",
+    );
+    engine.submit(
+        prompt,
+        GenParams { max_new: 4, stop_at_eos: false, ..GenParams::default() },
+        "t",
+    );
+    let mut done = engine.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done[0].stats.prompt_truncated, 1, "truncation not flagged");
+    assert_eq!(done[0].prompt_len, p, "prompt not cut to the prefill window");
+    assert!(!done[0].tokens.is_empty(), "truncated request still serves");
+    assert_eq!(done[1].stats.prompt_truncated, 0, "short prompt falsely flagged");
+    assert_eq!(engine.metrics.counter(names::PROMPT_TRUNCATED), 1);
+}
+
 fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
     let mr = mr.clone();
     let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
@@ -471,6 +606,7 @@ fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
             policy: Default::default(),
             elastic: true,
             governor: Default::default(),
+            prefix: Default::default(),
         };
         let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
         engine.submit(
