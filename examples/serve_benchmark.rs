@@ -70,19 +70,29 @@ fn run() -> anyhow::Result<()> {
         .opt("max-new", Some("48"), "tokens per request")
         .opt("temp", Some("0"), "sampling temperature")
         .opt("method", Some("both"), "ngram | quasar | both")
+        .opt("turns", Some("1"), "closed-loop turns per work item: turn k+1 resubmits the \
+                                  full transcript (prompt + answer) as a longer prompt")
         .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
         .flag("prefix-share", "shared-prefix workload: per-task system-prompt templates")
         .flag("no-prefix-cache", "disable shared-prefix KV reuse (cold-admission baseline)")
+        .opt("page-tokens", Some("16"), "prefix-cache pool page size (tokens)")
+        .flag("no-mid-stream", "disable mid-stream snapshots (prompt-only caching baseline)")
+        .flag("warmup", "pre-populate the prefix cache from the shared-prefix templates \
+                         before the first client")
         .parse_env();
     let n = args.usize("n");
     let clients = args.usize("clients").max(1);
     let batch = args.usize("batch");
     let max_new = args.usize("max-new");
     let temp = args.f64("temp");
+    let turns = args.usize("turns").max(1);
+    let page_tokens = args.usize("page-tokens").max(1);
     let method = args.str("method");
     let governor = args.has("governor");
     let prefix_share = args.has("prefix-share");
     let no_prefix_cache = args.has("no-prefix-cache");
+    let no_mid_stream = args.has("no-mid-stream");
+    let warmup = args.has("warmup");
 
     // xla_extension tolerates exactly one PJRT client per process, so the
     // two-method comparison re-execs this binary once per method.
@@ -93,7 +103,9 @@ fn run() -> anyhow::Result<()> {
                    "--clients", &clients.to_string(),
                    "--batch", &batch.to_string(),
                    "--max-new", &max_new.to_string(),
-                   "--temp", &temp.to_string()]
+                   "--temp", &temp.to_string(),
+                   "--turns", &turns.to_string(),
+                   "--page-tokens", &page_tokens.to_string()]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
@@ -105,6 +117,12 @@ fn run() -> anyhow::Result<()> {
             }
             if no_prefix_cache {
                 argv.push("--no-prefix-cache".into());
+            }
+            if no_mid_stream {
+                argv.push("--no-mid-stream".into());
+            }
+            if warmup {
+                argv.push("--warmup".into());
             }
             let status = std::process::Command::new(&exe).args(&argv).status()?;
             anyhow::ensure!(status.success(), "{m} run failed");
@@ -146,9 +164,28 @@ fn run() -> anyhow::Result<()> {
         cfg.governor = GovernorConfig::on();
     }
     cfg.prefix.enabled = !no_prefix_cache;
+    cfg.prefix.mid_stream = !no_mid_stream;
+    cfg.prefix.page_tokens = page_tokens;
     let handle = EngineHandle::spawn(
-        artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * n.max(1),
+        artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * (n * turns).max(1),
     )?;
+    // Boot warm-up: cache the per-family templates before any client
+    // connects, so the first request of each family already admits warm.
+    if warmup {
+        if prefix_share && !no_prefix_cache {
+            let plen = ctx.manifest.model("qwen3-like")?.cfg.prefill_len / 2;
+            let templates: Vec<(Vec<i32>, String)> = ctx
+                .workloads
+                .templates(plen)?
+                .into_iter()
+                .map(|(task, ids)| (ids, task))
+                .collect();
+            let cached = handle.warm_prefix(templates)?;
+            println!("warm-up cached {cached} family templates");
+        } else {
+            eprintln!("[warn] --warmup needs --prefix-share and an enabled cache; skipping");
+        }
+    }
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let tok_srv = ctx.tok.clone();
@@ -173,25 +210,39 @@ fn run() -> anyhow::Result<()> {
                     return Ok(tally);
                 }
                 let (text, task) = &prompts[i];
-                let resp = client.roundtrip(&Json::obj(vec![
-                    ("prompt", Json::str(text.clone())),
-                    ("max_new", Json::num(max_new as f64)),
-                    ("temp", Json::num(temp)),
-                    ("task", Json::str(task.clone())),
-                ]))?;
-                anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
-                tally.lat.record(resp.get("latency_s")?.as_f64()?);
-                tally.ttft.record(resp.get("ttft_s")?.as_f64()?);
-                let toks: Vec<i64> = resp
-                    .get("tokens")?
-                    .as_arr()?
-                    .iter()
-                    .map(|t| t.as_i64())
-                    .collect::<Result<_, _>>()?;
-                tally.checksum ^= fnv_request(i, &toks);
-                tally.tokens += toks.len() as u64;
-                tally.l_sum += resp.get("accept_len")?.as_f64()?;
-                tally.done += 1;
+                // Multi-turn closed loop: turn k+1's prompt is turn k's
+                // full transcript (prompt + answer + a continuation mark).
+                // Greedy answers are deterministic, so warm and cold runs
+                // build identical follow-up prompts and the run checksum
+                // stays comparable — while mid-stream snapshots let the
+                // warm engine admit each follow-up past the whole
+                // transcript instead of just the original prompt.
+                let mut text = text.clone();
+                for turn in 0..turns {
+                    let resp = client.roundtrip(&Json::obj(vec![
+                        ("prompt", Json::str(text.clone())),
+                        ("max_new", Json::num(max_new as f64)),
+                        ("temp", Json::num(temp)),
+                        ("task", Json::str(task.clone())),
+                    ]))?;
+                    anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
+                    tally.lat.record(resp.get("latency_s")?.as_f64()?);
+                    tally.ttft.record(resp.get("ttft_s")?.as_f64()?);
+                    let toks: Vec<i64> = resp
+                        .get("tokens")?
+                        .as_arr()?
+                        .iter()
+                        .map(|t| t.as_i64())
+                        .collect::<Result<_, _>>()?;
+                    tally.checksum ^= fnv_request(i * turns + turn, &toks);
+                    tally.tokens += toks.len() as u64;
+                    tally.l_sum += resp.get("accept_len")?.as_f64()?;
+                    tally.done += 1;
+                    if turn + 1 < turns {
+                        let answer = resp.get("text")?.as_str()?;
+                        text = format!("{text} {answer} .").trim().to_string();
+                    }
+                }
             }
         }));
     }
@@ -206,14 +257,20 @@ fn run() -> anyhow::Result<()> {
         total.checksum ^= t.checksum;
     }
     let wall = t0.elapsed().as_secs_f64();
-    anyhow::ensure!(total.done == n, "completed {}/{} requests", total.done, n);
+    anyhow::ensure!(
+        total.done == n * turns,
+        "completed {}/{} requests", total.done, n * turns
+    );
 
     let mut ctl = Client::connect(&addr.to_string())?;
     let stats = ctl.stats()?;
     ctl.shutdown()?;
     server.join().expect("server thread panicked")?;
 
-    println!("\n=== {name}: {n} requests, {clients} clients, b={batch}, T={temp} ===");
+    println!(
+        "\n=== {name}: {n} requests x {turns} turn(s), {clients} clients, b={batch}, \
+         T={temp} ==="
+    );
     println!("  wall                {wall:.1}s  ({:.1} tok/s CPU)",
              total.tokens as f64 / wall);
     println!("  tokens generated    {}", total.tokens);
@@ -252,14 +309,19 @@ fn run() -> anyhow::Result<()> {
     }
     let prefix = stats.get("prefix")?;
     let hit_rate = prefix.get("hit_rate")?.as_f64()?;
-    println!("  prefix cache        {} hits / {} misses (rate {:.2}), {} hit tokens",
+    println!("  prefix cache        {} hits / {} misses (rate {:.2}), {} hit tokens \
+              ({} mid-stream)",
              prefix.get("hits")?.as_i64()?,
              prefix.get("misses")?.as_i64()?,
              hit_rate,
-             prefix.get("hit_tokens")?.as_i64()?);
-    println!("                      {:.1} MiB resident in {} segments, {} evictions",
+             prefix.get("hit_tokens")?.as_i64()?,
+             prefix.get("mid_stream_hit_tokens")?.as_i64()?);
+    println!("                      {:.1} MiB resident in {} pages / {} runs \
+              (share ratio {:.2}), {} evictions",
              prefix.get("resident_bytes")?.as_f64()? / (1u64 << 20) as f64,
+             prefix.get("resident_pages")?.as_i64()?,
              prefix.get("segments")?.as_i64()?,
+             prefix.get("page_share_ratio")?.as_f64()?,
              prefix.get("evictions")?.as_i64()?);
     let truncated = stats.get("prompt_truncated")?.as_i64()?;
     if truncated > 0 {
@@ -271,8 +333,14 @@ fn run() -> anyhow::Result<()> {
     println!("  ttft                {}", total.ttft.summary_ms());
     // Machine-readable lines for the CI warm-vs-cold smoke: identical
     // checksums across cache-on/cache-off runs prove bit-identity; a
-    // non-zero hit rate proves the warm run actually reused prefixes.
+    // non-zero hit rate proves the warm run actually reused prefixes; the
+    // mid-stream token count proves multi-turn resubmits hit past their
+    // original prompts.
     println!("output_checksum={:016x}", total.checksum);
     println!("prefix_hit_rate={hit_rate:.4}");
+    println!(
+        "prefix_mid_stream_hit_tokens={}",
+        prefix.get("mid_stream_hit_tokens")?.as_i64()?
+    );
     Ok(())
 }

@@ -174,8 +174,9 @@ fn run() -> anyhow::Result<()> {
             ps.hits.to_string(),
             ps.hit_tokens.to_string(),
             format!(
-                "{} seg / {:.1} KiB",
+                "{} runs / {} pages / {:.1} KiB",
                 ps.segments,
+                ps.resident_pages,
                 ps.resident_bytes as f64 / 1024.0
             ),
         ]);

@@ -5,10 +5,16 @@
 //! One `step()` =
 //!   expire  (cancel running requests whose deadline passed, free their rows)
 //!   -> admit   (pop the scheduler in policy order; longest-prefix-match the
-//!               prompt against the prefix cache, prefill only the *suffix*
-//!               tokens at the matched write offset, splice the new request
-//!               into a free row, and snapshot its committed prefix back
-//!               into the cache — see `coordinator::prefixcache`)
+//!               prompt against the *paged* prefix cache, gather the matched
+//!               page-run into the prefill scratch, prefill only the
+//!               *suffix* tokens at the matched write offset, splice the new
+//!               request into a free row, and snapshot its committed prefix
+//!               back — a paged insert that references shared template pages
+//!               instead of copying them; see `coordinator::prefixcache`.
+//!               When a request finishes, full pages of its *generated*
+//!               continuation extend its cached run (mid-stream snapshot),
+//!               and [`Engine::warm_prefix`] can pre-populate the cache from
+//!               workload templates before the first client.)
 //!   -> draft   (per active row, via its drafter)
 //!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
 //!               required function — decode-only vs verify — *and* by the
@@ -450,6 +456,7 @@ impl Engine {
             // output end to end. The prefix cache is keyed by the same
             // variant, so reuse never crosses a precision boundary.
             let variant = self.variants[self.route_slot(&st.req.task)].name.clone();
+            st.admit_variant = variant.clone();
 
             // Longest-prefix reuse, capped so (a) at least one suffix token
             // remains — the last prompt position's logits must come from
@@ -480,12 +487,17 @@ impl Engine {
                     // Hit/miss/token tallies live in the cache itself (one
                     // source of truth, published as gauges below); only the
                     // modeled saving is priced here, where both lengths are
-                    // known.
-                    self.metrics.observe(
-                        names::PREFILL_SAVED_S,
-                        self.perf
-                            .prefill_saved_s(&variant, self.mcfg.n_layers, len, len - n),
+                    // known. Net of the per-page splice traffic that
+                    // realized the hit — `ceil(n/page_tokens)` pool pages
+                    // read + written, not a max_seq row.
+                    let gross = self
+                        .perf
+                        .prefill_saved_s(&variant, self.mcfg.n_layers, len, len - n);
+                    let splice_s = self.perf.splice_time(
+                        self.mcfg.n_layers, n, self.cfg.prefix.page_tokens,
                     );
+                    self.metrics
+                        .observe(names::PREFILL_SAVED_S, (gross - splice_s).max(0.0));
                     n
                 }
                 None => 0,
@@ -547,7 +559,10 @@ impl Engine {
             // chunk's past-the-prompt garbage.
             let slot = self.free_slot();
             if st.is_active() {
-                self.group.join_prefix(slot, &out.k, &out.v, st.cached)?;
+                // Row-addressed join: row 0 of the prefill output is the
+                // assembled prefix (spliced pages + suffix chunk writes).
+                self.group
+                    .join_prefix_from_row(slot, &out.k, &out.v, 0, st.cached)?;
                 self.states[slot] = Some(st);
             } else {
                 self.finish_to_completion(st);
@@ -558,23 +573,94 @@ impl Engine {
         if self.cfg.prefix.enabled && admitted {
             // Published wholesale from the cache's own counters — the one
             // source of truth — rather than tallied a second time inline.
-            // Gated on admissions: cache state only moves here, so the
-            // steady-state decode loop skips the snapshot entirely.
-            let ps = self.prefix_cache.stats();
-            self.metrics.set_gauge(names::PREFIX_HITS, ps.hits as i64);
-            self.metrics.set_gauge(names::PREFIX_MISSES, ps.misses as i64);
-            self.metrics
-                .set_gauge(names::PREFIX_HIT_TOKENS, ps.hit_tokens as i64);
-            self.metrics
-                .set_gauge(names::PREFIX_EVICTIONS, ps.evictions as i64);
-            self.metrics
-                .set_gauge(names::PREFIX_RESIDENT_BYTES, ps.resident_bytes as i64);
-            self.metrics
-                .set_gauge(names::PREFIX_SEGMENTS, ps.segments as i64);
+            // Gated on state movement: admissions here, mid-stream
+            // snapshots in the commit path; the steady-state decode loop
+            // skips the snapshot entirely.
+            self.publish_prefix_gauges();
         }
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
         Ok(())
+    }
+
+    /// Publish the prefix cache's own counters wholesale as gauges (one
+    /// source of truth; the router's stats block reads these back).
+    fn publish_prefix_gauges(&self) {
+        let ps = self.prefix_cache.stats();
+        self.metrics.set_gauge(names::PREFIX_HITS, ps.hits as i64);
+        self.metrics.set_gauge(names::PREFIX_MISSES, ps.misses as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_HIT_TOKENS, ps.hit_tokens as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_EVICTIONS, ps.evictions as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_RESIDENT_BYTES, ps.resident_bytes as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_SEGMENTS, ps.segments as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_RESIDENT_PAGES, ps.resident_pages as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_PAGE_REFS, ps.page_refs as i64);
+        self.metrics
+            .set_gauge(names::PREFIX_COPIED_PAGES, ps.copied_pages as i64);
+        self.metrics.set_gauge(
+            names::PREFIX_MID_STREAM_HIT_TOKENS,
+            ps.mid_stream_hit_tokens as i64,
+        );
+    }
+
+    /// Boot warm-up: pre-populate the prefix cache from template prompts
+    /// before the first client (the `workload` layer's shared-prefix
+    /// templates). Each template is prefilled whole at its class's
+    /// governor-resolved variant and snapshotted — exactly the KV a cold
+    /// admission of that template would have committed, so warmed hits
+    /// stay bit-identical by the same causality argument as normal reuse.
+    /// Lookup counters are untouched (warm-up is not traffic), so serving
+    /// hit rates stay honest. Returns how many templates were prefilled.
+    pub fn warm_prefix(&mut self, templates: &[(Vec<i32>, String)]) -> Result<usize> {
+        if !self.cfg.prefix.enabled {
+            return Ok(0);
+        }
+        let p = self.mcfg.prefill_len;
+        let mut cached = 0usize;
+        for (ids, task) in templates {
+            let mut prompt = ids.clone();
+            prompt.truncate(p);
+            if prompt.len() < self.cfg.prefix.min_prefix.max(1) {
+                continue;
+            }
+            let variant = self.variants[self.route_slot(task)].name.clone();
+            self.prefill_k.zero();
+            self.prefill_v.zero();
+            let mut toks = vec![0i32; p];
+            toks[..prompt.len()].copy_from_slice(&prompt);
+            let t0 = Instant::now();
+            let out = self
+                .model
+                .run_chunk(
+                    &variant, "prefill", 1, &toks,
+                    &self.prefill_k, &self.prefill_v, &[0],
+                )
+                .context("warm-up prefill")?;
+            let wall = t0.elapsed().as_secs_f64();
+            self.metrics.observe("prefill_s", wall);
+            self.call_log.record(CallRecord {
+                variant: variant.clone(),
+                fn_kind: FnKind::Prefill,
+                batch: 1,
+                n_layers: self.mcfg.n_layers,
+                active_rows: 1,
+                tokens_used: prompt.len(),
+                chunk_len: p,
+                useful_tokens: prompt.len(),
+                wall_s: wall,
+            });
+            self.prefix_cache.insert(&variant, &prompt, &out.k, &out.v);
+            self.model.return_scratch(&variant, out.k, out.v);
+            cached += 1;
+        }
+        self.publish_prefix_gauges();
+        Ok(cached)
     }
 
     /// Finish a request that never reached a KV row (blown deadline or
@@ -968,10 +1054,17 @@ impl Engine {
         // themselves. (class, agreeing positions, verified positions,
         // accept-delta sum, rows)
         let mut audit_acc: Vec<(String, usize, usize, i64, u32)> = Vec::new();
+        let mut snapshotted = false;
         for (i, &di) in sb.rows.iter().enumerate() {
             let (row, slot, _) = drafts[di];
             let draft = std::mem::take(&mut drafts[di].2);
             let st = self.states[slot].as_mut().expect("leased slot has state");
+            // Variant-history tracking for mid-stream snapshots: a row that
+            // ever executes at a second precision has mixed-variant KV and
+            // must never be cached.
+            if st.admit_variant != variant {
+                st.kv_mixed = true;
+            }
             let logits = &out.logits;
             // Clone the request RNG *before* the committed verification
             // consumes it, so a shadow verification replays the same
@@ -1058,10 +1151,40 @@ impl Engine {
 
             Self::check_finish_with(self.mcfg.max_seq, st);
             if !st.is_active() {
+                // Mid-stream snapshot: before the row's KV is freed, extend
+                // the request's cached run with *full pages* of its
+                // generated continuation, so a multi-turn resubmit
+                // (prompt ++ answer ++ follow-up) hits past the prompt.
+                // Only single-variant rows qualify (see `kv_mixed`), only
+                // positions with committed KV (`0..cached`) are cacheable,
+                // and partial tail pages are left to the next admission's
+                // prompt snapshot — full pages keep the pool churn-free.
+                if self.cfg.prefix.enabled
+                    && self.cfg.prefix.mid_stream
+                    && !st.kv_mixed
+                    && st.finished != Some(FinishReason::Cancelled)
+                {
+                    let page = self.cfg.prefix.page_tokens.max(1);
+                    let key_len = (st.cached / page) * page;
+                    if key_len > st.req.prompt.len() {
+                        self.prefix_cache.insert_from_row(
+                            &variant,
+                            &st.committed[..key_len],
+                            &self.group.k,
+                            &self.group.v,
+                            row,
+                            Some(st.req.prompt.len()),
+                        );
+                        snapshotted = true;
+                    }
+                }
                 self.group.leave(row)?;
                 let st = self.states[slot].take().unwrap();
                 self.finish_to_completion(st);
             }
+        }
+        if snapshotted {
+            self.publish_prefix_gauges();
         }
 
         // ---- flush audit samples: one per (class, shadow call) ---------

@@ -2,9 +2,13 @@
 //!
 //! The engine keeps one *batch group* per serving configuration: a
 //! persistent `[L, B, H, S, hd]` cache whose rows are leased to requests.
-//! Joining a request prefills into a fresh single-row cache and splices that
-//! row in; leaving zeroes the row. Row state never moves between steps —
-//! continuous batching without cache shuffling.
+//! Joining a request splices a prefilled row in; leaving zeroes the row.
+//! Row state never moves between steps — continuous batching without cache
+//! shuffling. Join sources are row-addressed
+//! ([`BatchGroup::join_prefix_from_row`]): admission joins from row 0 of
+//! the prefill output (paged prefix-cache splice + suffix chunk writes),
+//! bounded to the prompt's valid length; sources with more than one batch
+//! row work the same way with the holding row selected by index.
 //!
 //! Execution no longer adopts a whole returned cache: the elastic step
 //! planner (`coordinator::plan`) runs each sub-batch against a
@@ -75,6 +79,19 @@ impl BatchGroup {
     /// whatever garbage the prefill chunk wrote past the prompt.
     pub fn join_prefix(&mut self, slot: usize, k1: &Tensor<f32>, v1: &Tensor<f32>,
                        used_len: usize) -> Result<usize> {
+        if k1.dims[1] != 1 || v1.dims[1] != 1 {
+            bail!("expected single-row cache, got batch {}", k1.dims[1]);
+        }
+        self.join_prefix_from_row(slot, k1, v1, 0, used_len)
+    }
+
+    /// [`BatchGroup::join_prefix`] from one row of a *multi-row* source —
+    /// the shape page-run assembly produces: a prefill output, a gathered
+    /// scratch cache, or any `[L, B', H, S, hd]` pair whose row `src_row`
+    /// holds the request's committed prefix.
+    pub fn join_prefix_from_row(&mut self, slot: usize, k_src: &Tensor<f32>,
+                                v_src: &Tensor<f32>, src_row: usize,
+                                used_len: usize) -> Result<usize> {
         if self.rows.iter().any(|r| *r == Some(slot)) {
             bail!("slot {slot} already in group");
         }
@@ -82,8 +99,11 @@ impl BatchGroup {
             Some(r) => r,
             None => bail!("no free row in batch group"),
         };
-        if k1.dims[1] != 1 || v1.dims[1] != 1 {
-            bail!("expected single-row cache, got batch {}", k1.dims[1]);
+        if k_src.dims != v_src.dims {
+            bail!("source k/v dims differ: {:?} vs {:?}", k_src.dims, v_src.dims);
+        }
+        if src_row >= k_src.dims[1] {
+            bail!("source row {src_row} out of range for batch {}", k_src.dims[1]);
         }
         let seq = self.k.dims[self.k.rank() - 2];
         if used_len > seq {
@@ -94,8 +114,8 @@ impl BatchGroup {
             self.k.zero_axis1_row(row);
             self.v.zero_axis1_row(row);
         }
-        self.k.copy_axis1_row_seq_prefix_from(row, k1, 0, used_len);
-        self.v.copy_axis1_row_seq_prefix_from(row, v1, 0, used_len);
+        self.k.copy_axis1_row_seq_prefix_from(row, k_src, src_row, used_len);
+        self.v.copy_axis1_row_seq_prefix_from(row, v_src, src_row, used_len);
         self.rows[row] = Some(slot);
         Ok(row)
     }
@@ -253,6 +273,34 @@ mod tests {
         g.join_prefix(12, &k1, &v1, 1).unwrap();
         g.join_prefix(13, &k1, &v1, 1).unwrap();
         assert!(g.join_prefix(14, &k1, &v1, 1).is_err(), "full group");
+    }
+
+    #[test]
+    fn join_prefix_from_row_splices_the_selected_source_row() {
+        // A 2-row source whose row 1 is the request's prefix; rows join from
+        // it directly (no single-row intermediate).
+        let mut src_k = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        for (i, x) in src_k.data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let src_v = src_k.clone();
+        let mut g = group();
+        let row = g.join_prefix_from_row(5, &src_k, &src_v, 1, 3).unwrap();
+        assert_eq!(g.occupant(row), Some(5));
+        assert_eq!(g.k.at(&[0, row, 0, 0, 0]), src_k.at(&[0, 1, 0, 0, 0]));
+        assert_eq!(g.k.at(&[1, row, 1, 2, 3]), src_k.at(&[1, 1, 1, 2, 3]));
+        assert_eq!(g.k.at(&[0, row, 0, 3, 0]), 0.0, "beyond used_len zeroed");
+        // Row 0 of a single-row source matches plain join_prefix exactly.
+        let (k1, v1) = row_cache(3.0);
+        let mut a = group();
+        let ra = a.join_prefix_from_row(1, &k1, &v1, 0, 4).unwrap();
+        let mut b = group();
+        let rb = b.join_prefix(1, &k1, &v1, 4).unwrap();
+        assert_eq!(ra, rb);
+        assert_eq!(a.k, b.k);
+        // Out-of-range source row is an error, not a panic.
+        let mut c = group();
+        assert!(c.join_prefix_from_row(1, &src_k, &src_v, 2, 3).is_err());
     }
 
     #[test]

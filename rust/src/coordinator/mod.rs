@@ -1,7 +1,8 @@
 //! Layer-3 coordinator: the paper's serving-system contribution. Continuous
 //! batching over leased KV rows (`kv`), per-request speculative state
 //! (`request`), policy-ordered admission with deadlines and cancellation
-//! (`scheduler`), shared-prefix KV reuse for suffix-only prefill
+//! (`scheduler`), paged shared-prefix KV reuse for suffix-only prefill —
+//! page-granular sharing, mid-stream snapshots, boot warm-up
 //! (`prefixcache`), cost-guided elastic step planning (`plan`), the
 //! adaptive-precision fidelity governor (`governor`), the decode loop
 //! (`engine`), call accounting for the cost model (`calls`) and the

@@ -1,37 +1,77 @@
 //! Shared-prefix KV reuse: a radix-trie index over committed token
-//! sequences mapping to reference-counted single-row KV segments, with a
-//! byte-budget LRU evictor.
+//! sequences mapping to **page-runs** over a refcounted fixed-size page
+//! pool, with a byte-budget LRU evictor.
 //!
 //! At serving scale the paper's five task families are heavily templated —
 //! requests share long system-prompt prefixes — yet every admission paid a
 //! full prefill chunk over the whole prompt. This module lets the engine
-//! run admission as *longest-prefix-match, then suffix-only prefill*:
+//! run admission as *longest-prefix-match, then suffix-only prefill*.
 //!
-//! * **Index**: one compressed radix trie per verifier weight variant over
-//!   committed token sequences. Keying by variant matters — a `w8a8`-
-//!   prefilled prefix is not bit-exact KV for a class the fidelity governor
-//!   demoted to `fp32`, so cross-variant reuse would silently break the
-//!   engine's bit-identity guarantees.
-//! * **Segments**: `[L, 1, H, S, hd]` single-row KV snapshots holding the
-//!   first `len` sequence positions of a committed prefix (later positions
-//!   zeroed). A snapshot is taken at admission completion, so the cache
-//!   only ever holds KV the verifier actually committed.
+//! ## The paged store (vs. the PR-4 whole-row segment store)
+//!
+//! The first cut of this cache snapshotted each committed prefix as a whole
+//! `[L, 1, H, S, hd]` single-row KV copy: a 40-token template pinned a full
+//! `max_seq` row, and two keys sharing that template each held their own
+//! copy of it. The store is now paged, the shape vLLM-style paged attention
+//! and SGLang-style radix reuse converge on:
+//!
+//! * **Pages**: the pool's unit is a `[L, 1, H, page_tokens, hd]` KV pair
+//!   holding `page_tokens` consecutive sequence positions of one cached
+//!   prefix. A prefix of `len` tokens resides in `ceil(len/page_tokens)`
+//!   pages — never a `max_seq` row. Pages are refcounted by the runs that
+//!   reference them and freed only at refcount zero.
+//! * **Page-runs**: a radix-trie value is a *run* — an ordered page list
+//!   whose page `i` covers token positions `[i*P, min((i+1)*P, len))`. One
+//!   physical page backs every run (and every concurrent admission) that
+//!   shares its tokens: inserting `template ++ body_b` after
+//!   `template ++ body_a` references the template's full pages and copies
+//!   only the divergent tail.
+//! * **Tail-page copy-on-write**: a page only partially covered by the run
+//!   that owns it is never mutated while shared. Extending a run whose tail
+//!   page is exclusively referenced appends in place (positions past the
+//!   old coverage); otherwise the extension copies into a fresh page. Either
+//!   way, bytes a lease might read are immutable for the page's lifetime.
 //! * **Leases**: [`PrefixCache::lookup`] returns a [`Lease`] that pins the
-//!   segment (refcount) until [`PrefixCache::release`]; the evictor never
-//!   frees a leased segment, so a splice in flight can never read freed
-//!   memory no matter what inserts happen in between.
-//! * **Eviction**: inserts that push resident bytes over `budget_bytes`
-//!   evict unleased segments in least-recently-used order. When every
-//!   resident segment is leased the cache temporarily exceeds its budget
-//!   rather than corrupt a lease; the next insert re-tries.
+//!   matched run (and therefore every page it references) until
+//!   [`PrefixCache::release`]; the evictor never frees a leased run's
+//!   pages, so a splice in flight can never read freed memory no matter
+//!   what inserts happen in between.
+//! * **Eviction**: inserts that push resident page bytes over
+//!   `budget_bytes` evict unleased runs in least-recently-used order,
+//!   freeing only the pages that drop to refcount zero — a shared template
+//!   page survives its youngest run. When every resident run is leased the
+//!   cache temporarily exceeds its budget rather than corrupt a lease.
+//! * **Mid-stream runs**: the engine extends a finished request's cached
+//!   run with full pages of its *generated* continuation
+//!   ([`PrefixCache::insert_from_row`] with the prompt boundary as
+//!   `mid_from`), so a multi-turn resubmit (`prompt ++ answer ++
+//!   follow-up`) hits past the original prompt. Match tokens served past
+//!   that boundary — and only those — are tallied in
+//!   [`PrefixCacheStats::mid_stream_hit_tokens`].
 //!
-//! Correctness note (why suffix-only prefill is bit-exact): attention is
-//! causal, so the KV a prefill writes for positions `0..h` depends only on
-//! tokens `0..h`. A cached segment whose key equals the request's first `h`
-//! prompt tokens therefore holds exactly the KV the request's own prefill
-//! would have computed at the same variant, and running the chunk with
-//! write offset `pos = h` over the remaining tokens reproduces the cold
-//! path bit for bit.
+//! Keys stay isolated per verifier weight variant: a `w8a8`-prefilled
+//! prefix is not bit-exact KV for a class the fidelity governor demoted to
+//! `fp32`, so cross-variant reuse would silently break the engine's
+//! bit-identity guarantees (deliberately out of scope — see ROADMAP).
+//!
+//! Correctness note (why page sharing and suffix-only prefill are
+//! bit-exact): attention is causal, so the KV a prefill writes for
+//! positions `0..h` depends only on tokens `0..h`. Two keys sharing their
+//! first `h` tokens therefore share those positions' KV *bytes*, which is
+//! exactly what lets one page back many runs; and a cached run whose key
+//! equals the request's first `h` prompt tokens holds exactly the KV the
+//! request's own prefill would have computed at the same variant, so
+//! running the chunk at write offset `pos = h` over the remaining tokens
+//! reproduces the cold path bit for bit.
+//!
+//! Mid-stream runs lean on one additional assumption: the KV the
+//! *decode/verify* programs write for a position is byte-identical to what
+//! the *prefill* program would write for the same tokens (mathematically
+//! equal by causality; bitwise equality additionally requires the AOT
+//! artifacts not to fuse the KV projections differently). The paged
+//! integration scenario and the CI warm-vs-cold A/B assert this on the
+//! real artifacts — if a future artifact set breaks it, those gates go
+//! red and `PrefixCacheConfig::mid_stream` is the switch to pull.
 
 use std::collections::BTreeMap;
 
@@ -46,12 +86,20 @@ use crate::runtime::Tensor;
 pub struct PrefixCacheConfig {
     /// Master switch. Disabled: no lookups, no snapshots, zero overhead.
     pub enabled: bool,
-    /// Resident-segment byte budget the LRU evictor enforces (leased
-    /// segments are exempt while leased).
+    /// Resident-page byte budget the LRU evictor enforces (pages of leased
+    /// runs are exempt while leased).
     pub budget_bytes: usize,
     /// Shortest prefix worth caching or matching: a tiny shared prefix
-    /// saves less prefill than the row copy costs.
+    /// saves less prefill than the page splice costs.
     pub min_prefix: usize,
+    /// Sequence positions per pool page. Smaller pages share finer-grained
+    /// prefixes and waste less tail; larger pages amortize bookkeeping.
+    pub page_tokens: usize,
+    /// Snapshot full pages of a finished request's *generated* continuation
+    /// back into its cached run, so multi-turn resubmits hit past the
+    /// prompt. Lossless (same causality argument as prompt reuse), so on by
+    /// default.
+    pub mid_stream: bool,
 }
 
 impl Default for PrefixCacheConfig {
@@ -60,6 +108,8 @@ impl Default for PrefixCacheConfig {
             enabled: true,
             budget_bytes: 256 << 20,
             min_prefix: 4,
+            page_tokens: 16,
+            mid_stream: true,
         }
     }
 }
@@ -71,10 +121,10 @@ impl PrefixCacheConfig {
     }
 }
 
-/// A pinned reference to one cached segment. Obtained from
-/// [`PrefixCache::lookup`]; the segment cannot be evicted until the lease
-/// is handed back via [`PrefixCache::release`]. Not `Clone` — one lookup,
-/// one release.
+/// A pinned reference to one cached page-run. Obtained from
+/// [`PrefixCache::lookup`]; none of the run's pages can be freed until the
+/// lease is handed back via [`PrefixCache::release`]. Not `Clone` — one
+/// lookup, one release.
 #[derive(Debug)]
 pub struct Lease {
     id: u64,
@@ -82,12 +132,14 @@ pub struct Lease {
 }
 
 impl Lease {
-    /// Segment id (stable for the segment's lifetime; test hook).
+    /// Run id (stable for the run's lifetime; test hook).
     pub fn id(&self) -> u64 {
         self.id
     }
 
     /// Matched prefix length in tokens — the positions admission may skip.
+    /// May end mid-page; [`PrefixCache::splice`] copies exactly this many
+    /// tokens, never a trailing page's uncovered remainder.
     pub fn len(&self) -> usize {
         self.len
     }
@@ -97,22 +149,39 @@ impl Lease {
     }
 }
 
-/// Point-in-time counters (monotonic except `resident_bytes` / `segments`
-/// / `leases`, which are levels).
+/// Point-in-time counters (monotonic except the `resident_*` / `segments`
+/// / `leases` / `page_refs` levels).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PrefixCacheStats {
     pub hits: u64,
     pub misses: u64,
     /// Prompt tokens served from cache instead of prefill.
     pub hit_tokens: u64,
+    /// Subset of `hit_tokens` served by runs that were extended with
+    /// generated continuations (mid-stream snapshots).
+    pub mid_stream_hit_tokens: u64,
     pub inserts: u64,
-    /// Inserts refused because a single segment exceeds the whole budget.
+    /// Inserts refused because a single run's pages exceed the whole budget.
     pub rejected: u64,
+    /// Runs evicted by the byte-budget LRU.
     pub evictions: u64,
+    /// Pool pages filled by copying KV in (fresh allocations and
+    /// copy-on-write tails). The zero-copy sharing assertion counter: an
+    /// insert that only references existing pages does not move it.
+    pub copied_pages: u64,
+    /// Run→page references added *without* a copy (prefix sharing).
+    pub shared_pages: u64,
     pub resident_bytes: usize,
+    /// Pages resident in the pool.
+    pub resident_pages: usize,
+    /// Cached page-runs (radix-trie values; the old segment count).
     pub segments: usize,
     /// Leases currently outstanding (refcounts not yet released).
     pub leases: usize,
+    /// Total live run→page references. `page_refs / resident_pages` is the
+    /// share ratio: 1.0 = no sharing, higher = one physical page backing
+    /// several cached prefixes.
+    pub page_refs: usize,
 }
 
 impl PrefixCacheStats {
@@ -124,21 +193,43 @@ impl PrefixCacheStats {
         }
         self.hits as f64 / n as f64
     }
+
+    /// Run→page references per resident page (0 when the pool is empty).
+    pub fn page_share_ratio(&self) -> f64 {
+        if self.resident_pages == 0 {
+            return 0.0;
+        }
+        self.page_refs as f64 / self.resident_pages as f64
+    }
 }
 
-/// One resident KV snapshot.
-struct Segment {
+/// One pool page: `page_tokens` sequence positions of KV for one cached
+/// prefix, shared by every run whose key covers its token range.
+struct Page {
+    k: Tensor<f32>,
+    v: Tensor<f32>,
+    /// Runs referencing this page. Freed at zero.
+    refs: u32,
+    bytes: usize,
+}
+
+/// One cached prefix: a trie key resolved to an ordered page list. Page `i`
+/// covers token positions `[i*P, min((i+1)*P, key.len()))` — runs tile
+/// their key without overlap by construction.
+struct Run {
     variant: String,
     /// Token key (the committed prefix); kept so eviction can unlink the
     /// trie node. Tiny next to the KV bytes it indexes.
     key: Vec<i32>,
-    /// Valid sequence positions (`0..len`); the rest of the row is zero.
-    len: usize,
-    bytes: usize,
-    refs: u32,
+    pages: Vec<u64>,
+    /// Outstanding lookups pinning this run (and its pages).
+    leases: u32,
     last_use: u64,
-    k: Tensor<f32>,
-    v: Tensor<f32>,
+    /// Key positions `mid_from..` hold *generated-continuation* KV
+    /// (mid-stream snapshot); positions below are prompt content. Equals
+    /// `key.len()` for plain prompt runs, so only tokens a match serves
+    /// past this boundary count toward `mid_stream_hit_tokens`.
+    mid_from: usize,
 }
 
 /// Longest common prefix length of two token slices.
@@ -147,7 +238,7 @@ fn lcp(a: &[i32], b: &[i32]) -> usize {
 }
 
 /// Compressed radix-trie node: each edge carries a non-empty token label;
-/// a node's `seg` is the segment cached for the exact prefix spelled by the
+/// a node's `seg` is the run cached for the exact prefix spelled by the
 /// path from the root.
 #[derive(Default)]
 struct Node {
@@ -157,10 +248,10 @@ struct Node {
 
 impl Node {
     /// Deepest usable match of `tokens` against the cached keys:
-    /// `(segment id, match length)`. The walk may stop *inside* an edge or
+    /// `(run id, match length)`. The walk may stop *inside* an edge or
     /// at a key-less interior node — every key in the subtree below the
     /// stop point extends `tokens[..match]`, and by causality the first
-    /// `match` KV positions of any such segment are exactly the KV for
+    /// `match` KV positions of any such run are exactly the KV for
     /// `tokens[..match]`. So the cache serves partial matches *into*
     /// longer cached prefixes (template + body A serving template + body
     /// B), not just whole cached keys.
@@ -190,31 +281,13 @@ impl Node {
         }
     }
 
-    /// Any segment id in this subtree (pre-order). Trie invariant: every
-    /// leaf holds a segment, so this is `None` only on an empty root.
+    /// Any run id in this subtree (pre-order). Trie invariant: every leaf
+    /// holds a run, so this is `None` only on an empty root.
     fn any_seg(&self) -> Option<u64> {
         if let Some(id) = self.seg {
             return Some(id);
         }
         self.edges.iter().find_map(|(_, c)| c.any_seg())
-    }
-
-    /// Segment cached for exactly `tokens`, if any.
-    fn exact(&self, tokens: &[i32]) -> Option<u64> {
-        if tokens.is_empty() {
-            return self.seg;
-        }
-        for (label, child) in &self.edges {
-            let c = lcp(label, tokens);
-            if c == 0 {
-                continue;
-            }
-            if c == label.len() {
-                return child.exact(&tokens[c..]);
-            }
-            return None; // diverges inside the edge
-        }
-        None
     }
 
     /// Insert `id` at `tokens`, splitting an edge if the key diverges
@@ -244,7 +317,7 @@ impl Node {
         None
     }
 
-    /// Remove the segment at exactly `tokens`; prunes empty leaves and
+    /// Remove the run at exactly `tokens`; prunes empty leaves and
     /// re-merges pass-through nodes so the trie stays compressed. Returns
     /// whether the key was present.
     fn remove(&mut self, tokens: &[i32]) -> bool {
@@ -286,9 +359,12 @@ struct Counters {
     hits: u64,
     misses: u64,
     hit_tokens: u64,
+    mid_stream_hit_tokens: u64,
     inserts: u64,
     rejected: u64,
     evictions: u64,
+    copied_pages: u64,
+    shared_pages: u64,
 }
 
 /// The cache itself. Owned by the engine (single-threaded, like the rest of
@@ -298,8 +374,10 @@ pub struct PrefixCache {
     /// One radix root per weight variant (see module docs on why reuse must
     /// not cross variants).
     roots: BTreeMap<String, Node>,
-    segments: BTreeMap<u64, Segment>,
-    next_id: u64,
+    runs: BTreeMap<u64, Run>,
+    pages: BTreeMap<u64, Page>,
+    next_run: u64,
+    next_page: u64,
     /// Logical clock for LRU recency (bumped per lookup/insert).
     tick: u64,
     resident_bytes: usize,
@@ -311,8 +389,10 @@ impl PrefixCache {
         PrefixCache {
             cfg,
             roots: BTreeMap::new(),
-            segments: BTreeMap::new(),
-            next_id: 1,
+            runs: BTreeMap::new(),
+            pages: BTreeMap::new(),
+            next_run: 1,
+            next_page: 1,
             tick: 0,
             resident_bytes: 0,
             counters: Counters::default(),
@@ -323,11 +403,17 @@ impl PrefixCache {
         &self.cfg
     }
 
+    /// Pool page size in tokens (clamped to at least 1).
+    fn page_len(&self) -> usize {
+        self.cfg.page_tokens.max(1)
+    }
+
     /// Deepest cached match of `tokens` under `variant`, at least
-    /// `min_prefix` (and at least one) token long. A hit pins the segment
+    /// `min_prefix` (and at least one) token long. A hit pins the run
     /// (lease) and refreshes its recency; every call counts toward the hit
     /// rate. The lease's `len()` is the *match* length — it may be shorter
-    /// than the backing segment, whose leading positions then serve it.
+    /// than the backing run (and may end mid-page), in which case the run's
+    /// leading positions serve it.
     pub fn lookup(&mut self, variant: &str, tokens: &[i32]) -> Option<Lease> {
         if !self.cfg.enabled {
             return None;
@@ -340,12 +426,17 @@ impl PrefixCache {
             .filter(|&(_, len)| len >= self.cfg.min_prefix.max(1));
         match hit {
             Some((id, len)) => {
-                let seg = self.segments.get_mut(&id).expect("trie points at live segment");
-                debug_assert!(seg.len >= len, "match longer than its segment");
-                seg.refs += 1;
-                seg.last_use = self.tick;
+                let run = self.runs.get_mut(&id).expect("trie points at live run");
+                debug_assert!(run.key.len() >= len, "match longer than its run");
+                run.leases += 1;
+                run.last_use = self.tick;
                 self.counters.hits += 1;
                 self.counters.hit_tokens += len as u64;
+                // Only tokens served past the run's prompt boundary are
+                // mid-stream gain — a template hit on an extended run is
+                // ordinary prompt reuse and must not inflate the tally.
+                self.counters.mid_stream_hit_tokens +=
+                    len.saturating_sub(run.mid_from) as u64;
                 Some(Lease { id, len })
             }
             None => {
@@ -355,122 +446,269 @@ impl PrefixCache {
         }
     }
 
-    /// Copy a leased match's prefix (`0..lease.len()` sequence positions of
-    /// the backing segment) into a zeroed single-row cache pair of the same
-    /// shape.
+    /// Gather a leased match's prefix (`0..lease.len()` token positions of
+    /// the backing run) page by page into row 0 of a zeroed single-row
+    /// cache pair. Only matched tokens move: a match ending mid-page copies
+    /// that page's covered head, never its uncovered remainder. The
+    /// destination's sequence extent only needs to fit the match (its other
+    /// axes must equal the pool's page shape).
     pub fn splice(&self, lease: &Lease, k_dst: &mut Tensor<f32>,
                   v_dst: &mut Tensor<f32>) -> Result<()> {
-        let seg = self
-            .segments
+        let run = self
+            .runs
             .get(&lease.id)
-            .ok_or_else(|| anyhow!("lease {} has no live segment", lease.id))?;
-        if seg.k.dims != k_dst.dims || seg.v.dims != v_dst.dims {
+            .ok_or_else(|| anyhow!("lease {} has no live run", lease.id))?;
+        if lease.len > run.key.len() {
+            bail!("lease length {} exceeds run length {}", lease.len, run.key.len());
+        }
+        if k_dst.dims != v_dst.dims {
+            bail!("destination k/v dims differ: {:?} vs {:?}", k_dst.dims, v_dst.dims);
+        }
+        let r = k_dst.rank();
+        if r < 4 {
+            bail!("destination rank {r} is not a [L, B, .., S, hd] cache");
+        }
+        if k_dst.dims[r - 2] < lease.len {
             bail!(
-                "segment dims {:?} incompatible with destination {:?}",
-                seg.k.dims, k_dst.dims
+                "destination seq {} cannot hold a {}-token match",
+                k_dst.dims[r - 2], lease.len
             );
         }
-        if lease.len > seg.len {
-            bail!("lease length {} exceeds segment length {}", lease.len, seg.len);
+        let p = self.page_len();
+        let mut start = 0usize;
+        for &pid in &run.pages {
+            if start >= lease.len {
+                break;
+            }
+            let n = p.min(lease.len - start);
+            let page = self.pages.get(&pid).ok_or_else(|| {
+                anyhow!("run {} references freed page {pid}", lease.id)
+            })?;
+            if page.k.rank() != r
+                || page.k.dims[0] != k_dst.dims[0]
+                || page.k.dims[2..r - 2] != k_dst.dims[2..r - 2]
+                || page.k.dims[r - 1] != k_dst.dims[r - 1]
+            {
+                bail!(
+                    "page dims {:?} incompatible with destination {:?}",
+                    page.k.dims, k_dst.dims
+                );
+            }
+            k_dst.copy_axis1_row_seq_range_from(0, start, &page.k, 0, 0, n);
+            v_dst.copy_axis1_row_seq_range_from(0, start, &page.v, 0, 0, n);
+            start += n;
         }
-        k_dst.copy_seq_prefix_from(&seg.k, lease.len);
-        v_dst.copy_seq_prefix_from(&seg.v, lease.len);
         Ok(())
     }
 
-    /// Hand a lease back; the segment becomes evictable again once its
-    /// refcount returns to zero.
+    /// Hand a lease back; the run (and any page only it references) becomes
+    /// evictable again once its lease count returns to zero.
     pub fn release(&mut self, lease: Lease) {
-        if let Some(seg) = self.segments.get_mut(&lease.id) {
-            debug_assert!(seg.refs > 0, "release without matching lease");
-            seg.refs = seg.refs.saturating_sub(1);
+        if let Some(run) = self.runs.get_mut(&lease.id) {
+            debug_assert!(run.leases > 0, "release without matching lease");
+            run.leases = run.leases.saturating_sub(1);
         }
     }
 
     /// Snapshot the first `tokens.len()` positions of an advanced
-    /// single-row cache pair under (`variant`, `tokens`), then evict
-    /// least-recently-used unleased segments until the budget holds.
-    /// Returns the number of segments evicted. A prefix already cached only
-    /// refreshes its recency; one larger than the whole budget is rejected.
+    /// single-row cache pair under (`variant`, `tokens`) — see
+    /// [`PrefixCache::insert_from_row`].
     pub fn insert(&mut self, variant: &str, tokens: &[i32], k: &Tensor<f32>,
                   v: &Tensor<f32>) -> usize {
-        if !self.cfg.enabled || tokens.len() < self.cfg.min_prefix {
+        self.insert_from_row(variant, tokens, k, v, 0, None)
+    }
+
+    /// Snapshot the first `tokens.len()` sequence positions of row
+    /// `src_row` of an advanced cache pair under (`variant`, `tokens`),
+    /// then evict least-recently-used unleased runs until the budget holds.
+    /// Returns the number of runs evicted.
+    ///
+    /// The insert is *paged and deduplicating*: full pages shared with the
+    /// longest already-cached prefix are referenced, not copied; a tail
+    /// page is extended in place only when exclusively owned by the run it
+    /// extends (copy-on-write otherwise); and a key already fully covered
+    /// by a cached run only refreshes that run's recency. `mid_from`
+    /// marks a mid-stream snapshot (the engine's finish-time runs): key
+    /// positions from that boundary on are *generated continuation*, and
+    /// only match tokens served past it count toward
+    /// [`PrefixCacheStats::mid_stream_hit_tokens`]. `None` = plain prompt
+    /// content.
+    pub fn insert_from_row(&mut self, variant: &str, tokens: &[i32],
+                           k: &Tensor<f32>, v: &Tensor<f32>, src_row: usize,
+                           mid_from: Option<usize>) -> usize {
+        if !self.cfg.enabled || tokens.is_empty() || tokens.len() < self.cfg.min_prefix {
             return 0;
         }
         let len = tokens.len();
-        if k.rank() < 2 || len > k.dims[k.rank() - 2] {
-            return 0; // prefix longer than the row holds; nothing to snapshot
+        let r = k.rank();
+        if r < 4 || k.dims != v.dims || src_row >= k.dims[1] || len > k.dims[r - 2] {
+            return 0; // not a cache-shaped source, or prefix longer than it holds
         }
+        let p = self.page_len();
         self.tick += 1;
-        if let Some(id) = self.roots.get(variant).and_then(|r| r.exact(tokens)) {
-            if let Some(seg) = self.segments.get_mut(&id) {
-                seg.last_use = self.tick;
+
+        // Longest cached prefix: the sharing source, and the fully-covered
+        // fast path — a key that is a prefix of a cached run adds nothing
+        // (lookups already match *into* runs), so it only refreshes
+        // recency. This also dedupes exact re-inserts.
+        let hit = self.roots.get(variant).and_then(|rt| rt.longest(tokens));
+        let match_len = hit.map(|(_, m)| m).unwrap_or(0);
+        if let Some((rid, m)) = hit {
+            if m == len {
+                if let Some(run) = self.runs.get_mut(&rid) {
+                    run.last_use = self.tick;
+                }
+                return 0;
             }
-            return 0;
         }
-        let bytes = (k.numel() + v.numel()) * std::mem::size_of::<f32>();
-        if bytes > self.cfg.budget_bytes {
+        let (src_pages, src_len): (Vec<u64>, usize) = match hit {
+            Some((rid, _)) => {
+                let run = self.runs.get(&rid).expect("trie points at live run");
+                (run.pages.clone(), run.key.len())
+            }
+            None => (Vec::new(), 0),
+        };
+
+        // Page shape: the source's row shape at one page of sequence.
+        let mut pdims = k.dims.clone();
+        pdims[1] = 1;
+        pdims[r - 2] = p;
+        let page_bytes = 2 * pdims.iter().product::<usize>() * std::mem::size_of::<f32>();
+        let n_pages = len.div_ceil(p);
+        if n_pages * page_bytes > self.cfg.budget_bytes {
             self.counters.rejected += 1;
             return 0;
         }
-        let mut sk = Tensor::zeros(&k.dims);
-        sk.copy_seq_prefix_from(k, len);
-        let mut sv = Tensor::zeros(&v.dims);
-        sv.copy_seq_prefix_from(v, len);
-        let id = self.next_id;
-        self.next_id += 1;
+
+        let full_shared = (match_len / p).min(src_pages.len());
+        let mut pages = Vec::with_capacity(n_pages);
+        for i in 0..n_pages {
+            let start = i * p;
+            let cov = p.min(len - start); // this run's coverage of page i
+            if i < full_shared {
+                // Fully shared page: reference, don't copy.
+                let pid = src_pages[i];
+                self.pages.get_mut(&pid).expect("run references live page").refs += 1;
+                self.counters.shared_pages += 1;
+                pages.push(pid);
+                continue;
+            }
+            if i == full_shared && match_len > start && i < src_pages.len() {
+                // Boundary page: the match ends inside it. Extend in place
+                // only when the source run ends exactly at the match (no
+                // diverging bytes to clobber) and owns the page alone —
+                // positions below the old coverage are never rewritten, so
+                // even a concurrent lease on the source run stays valid.
+                let shared_cov = match_len - start;
+                let pid = src_pages[i];
+                let exclusive = self.pages.get(&pid).map(|pg| pg.refs == 1).unwrap_or(false);
+                if match_len == src_len && exclusive && shared_cov < cov {
+                    let page = self.pages.get_mut(&pid).expect("exclusive page is live");
+                    page.k.copy_axis1_row_seq_range_from(
+                        0, shared_cov, k, src_row, start + shared_cov, cov - shared_cov,
+                    );
+                    page.v.copy_axis1_row_seq_range_from(
+                        0, shared_cov, v, src_row, start + shared_cov, cov - shared_cov,
+                    );
+                    page.refs += 1;
+                    self.counters.shared_pages += 1;
+                    pages.push(pid);
+                    continue;
+                }
+                // Shared-tail divergence: copy-on-write into a fresh page.
+            }
+            let mut pk = Tensor::<f32>::zeros(&pdims);
+            let mut pv = Tensor::<f32>::zeros(&pdims);
+            pk.copy_axis1_row_seq_range_from(0, 0, k, src_row, start, cov);
+            pv.copy_axis1_row_seq_range_from(0, 0, v, src_row, start, cov);
+            let pid = self.next_page;
+            self.next_page += 1;
+            self.pages.insert(pid, Page { k: pk, v: pv, refs: 1, bytes: page_bytes });
+            self.resident_bytes += page_bytes;
+            self.counters.copied_pages += 1;
+            pages.push(pid);
+        }
+
+        let id = self.next_run;
+        self.next_run += 1;
         let _replaced = self
             .roots
             .entry(variant.to_string())
             .or_default()
             .insert(tokens, id);
-        debug_assert!(_replaced.is_none(), "exact() said the key was absent");
-        self.segments.insert(id, Segment {
+        debug_assert!(_replaced.is_none(), "fully-covered check said the key was absent");
+        self.runs.insert(id, Run {
             variant: variant.to_string(),
             key: tokens.to_vec(),
-            len,
-            bytes,
-            refs: 0,
+            pages,
+            leases: 0,
             last_use: self.tick,
-            k: sk,
-            v: sv,
+            mid_from: mid_from.unwrap_or(len).min(len),
         });
-        self.resident_bytes += bytes;
         self.counters.inserts += 1;
         self.evict_to_budget(id)
     }
 
-    /// Evict unleased segments (LRU first) until resident bytes fit the
-    /// budget; stops early when only leased segments (or the segment this
-    /// very insert just created — evicting it would be pure churn) remain,
-    /// temporarily running over budget instead.
+    /// Evict unleased runs (LRU first) until resident page bytes fit the
+    /// budget, freeing only pages whose refcount drops to zero; stops early
+    /// when only leased runs (or the run this very insert just created —
+    /// evicting it would be pure churn) remain, temporarily running over
+    /// budget instead.
     fn evict_to_budget(&mut self, keep: u64) -> usize {
         let mut evicted = 0;
         while self.resident_bytes > self.cfg.budget_bytes {
             let victim = self
-                .segments
+                .runs
                 .iter()
-                .filter(|(&id, s)| s.refs == 0 && id != keep)
-                .min_by_key(|(_, s)| s.last_use)
+                .filter(|(&id, run)| run.leases == 0 && id != keep)
+                .min_by_key(|(_, run)| run.last_use)
                 .map(|(&id, _)| id);
             let Some(id) = victim else { break };
-            let seg = self.segments.remove(&id).expect("victim exists");
-            self.resident_bytes -= seg.bytes;
+            let run = self.runs.remove(&id).expect("victim exists");
             let _unlinked = self
                 .roots
-                .get_mut(&seg.variant)
-                .map(|r| r.remove(&seg.key))
+                .get_mut(&run.variant)
+                .map(|r| r.remove(&run.key))
                 .unwrap_or(false);
-            debug_assert!(_unlinked, "segment had no trie entry");
+            debug_assert!(_unlinked, "run had no trie entry");
+            for pid in run.pages {
+                let page = self.pages.get_mut(&pid).expect("run references live page");
+                page.refs -= 1;
+                if page.refs == 0 {
+                    let bytes = page.bytes;
+                    self.pages.remove(&pid);
+                    self.resident_bytes -= bytes;
+                }
+            }
             self.counters.evictions += 1;
             evicted += 1;
         }
         evicted
     }
 
-    /// True while the segment is resident (test hook for lease safety).
-    pub fn has_segment(&self, id: u64) -> bool {
-        self.segments.contains_key(&id)
+    /// True while the run is resident (test hook for lease safety).
+    pub fn has_run(&self, id: u64) -> bool {
+        self.runs.contains_key(&id)
+    }
+
+    /// True while the page is resident in the pool (test hook).
+    pub fn has_page(&self, id: u64) -> bool {
+        self.pages.contains_key(&id)
+    }
+
+    /// A run's ordered page ids, or `None` when evicted (test hook).
+    pub fn run_pages(&self, id: u64) -> Option<Vec<u64>> {
+        self.runs.get(&id).map(|r| r.pages.clone())
+    }
+
+    /// A run's key length in tokens, or `None` when evicted (test hook).
+    pub fn run_key_len(&self, id: u64) -> Option<usize> {
+        self.runs.get(&id).map(|r| r.key.len())
+    }
+
+    /// Resident run ids (test hook).
+    pub fn run_ids(&self) -> Vec<u64> {
+        self.runs.keys().copied().collect()
     }
 
     pub fn stats(&self) -> PrefixCacheStats {
@@ -478,12 +716,17 @@ impl PrefixCache {
             hits: self.counters.hits,
             misses: self.counters.misses,
             hit_tokens: self.counters.hit_tokens,
+            mid_stream_hit_tokens: self.counters.mid_stream_hit_tokens,
             inserts: self.counters.inserts,
             rejected: self.counters.rejected,
             evictions: self.counters.evictions,
+            copied_pages: self.counters.copied_pages,
+            shared_pages: self.counters.shared_pages,
             resident_bytes: self.resident_bytes,
-            segments: self.segments.len(),
-            leases: self.segments.values().map(|s| s.refs as usize).sum(),
+            resident_pages: self.pages.len(),
+            segments: self.runs.len(),
+            leases: self.runs.values().map(|r| r.leases as usize).sum(),
+            page_refs: self.pages.values().map(|p| p.refs as usize).sum(),
         }
     }
 }
@@ -492,14 +735,17 @@ impl PrefixCache {
 mod tests {
     use super::*;
 
-    const DIMS: [usize; 5] = [2, 1, 2, 8, 4]; // [L, 1, H, S, hd]
-    const ROW_BYTES: usize = 2 * 2 * 2 * 8 * 4 * 4; // k+v, f32
+    const DIMS: [usize; 5] = [2, 1, 2, 16, 4]; // [L, 1, H, S, hd]
+    const PAGE: usize = 4; // page_tokens
+    const PAGE_BYTES: usize = 2 * 2 * 2 * PAGE * 4 * 4; // k+v pair, f32
 
-    fn cfg(budget_rows: usize) -> PrefixCacheConfig {
+    fn cfg(budget_pages: usize) -> PrefixCacheConfig {
         PrefixCacheConfig {
             enabled: true,
-            budget_bytes: budget_rows * ROW_BYTES,
+            budget_bytes: budget_pages * PAGE_BYTES,
             min_prefix: 2,
+            page_tokens: PAGE,
+            mid_stream: true,
         }
     }
 
@@ -521,6 +767,33 @@ mod tests {
         (k, v)
     }
 
+    /// A row pair whose position `s` holds `tokens[s]` — the shape real KV
+    /// sharing relies on: identical token prefixes mean identical bytes.
+    fn row_for(tokens: &[i32]) -> (Tensor<f32>, Tensor<f32>) {
+        assert!(tokens.len() <= DIMS[3]);
+        let mut k = Tensor::<f32>::zeros(&DIMS);
+        let mut v = Tensor::<f32>::zeros(&DIMS);
+        for l in 0..DIMS[0] {
+            for h in 0..DIMS[2] {
+                for (s, &t) in tokens.iter().enumerate() {
+                    for d in 0..DIMS[4] {
+                        let off = (((l * DIMS[1]) * DIMS[2] + h) * DIMS[3] + s) * DIMS[4] + d;
+                        k.data[off] = t as f32;
+                        v.data[off] = t as f32 + 0.5;
+                    }
+                }
+            }
+        }
+        (k, v)
+    }
+
+    fn spliced(c: &PrefixCache, l: &Lease) -> (Tensor<f32>, Tensor<f32>) {
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.splice(l, &mut dk, &mut dv).expect("splice");
+        (dk, dv)
+    }
+
     #[test]
     fn longest_prefix_match_with_min_prefix_floor() {
         let mut c = PrefixCache::new(cfg(8));
@@ -532,8 +805,8 @@ mod tests {
         let l = c.lookup("fp32", &[1, 2, 3, 4, 5, 6, 7]).expect("hit");
         assert_eq!(l.len(), 5);
         c.release(l);
-        // A query ending *inside* the longer key is served by that
-        // segment's leading positions: all 4 query tokens match.
+        // A query ending *inside* the longer key is served by that run's
+        // leading positions: all 4 query tokens match.
         let l = c.lookup("fp32", &[1, 2, 3, 4]).expect("hit");
         assert_eq!(l.len(), 4);
         c.release(l);
@@ -546,10 +819,11 @@ mod tests {
         assert_eq!((s.hits, s.misses), (2, 2));
         assert_eq!(s.hit_tokens, 9);
         assert_eq!(s.leases, 0);
+        assert_eq!(s.mid_stream_hit_tokens, 0, "prompt runs are not mid-stream");
     }
 
     #[test]
-    fn partial_match_into_a_longer_segment_serves_the_shared_prefix() {
+    fn partial_match_into_a_longer_run_serves_the_shared_prefix() {
         // The serving-shape case: one cached request `template ++ body_a`
         // must serve the shared template to a request `template ++ body_b`
         // (and an exact duplicate capped one token short must hit at
@@ -564,15 +838,13 @@ mod tests {
         let query: Vec<i32> = template.iter().chain(&[77, 78, 79]).copied().collect();
         let l = c.lookup("fp32", &query).expect("template hit");
         assert_eq!(l.len(), template.len());
-        // Splice serves only the matched positions, not the whole segment.
-        let mut dk = Tensor::<f32>::zeros(&DIMS);
-        let mut dv = Tensor::<f32>::zeros(&DIMS);
-        c.splice(&l, &mut dk, &mut dv).expect("splice");
+        // Splice serves only the matched positions, not the whole run.
+        let (dk, _dv) = spliced(&c, &l);
         assert_eq!(dk.at(&[0, 0, 0, 3, 0]), 53.0, "last matched position copied");
         assert_eq!(
             dk.at(&[0, 0, 0, 4, 0]),
             0.0,
-            "segment positions past the match stay out"
+            "run positions past the match stay out"
         );
         c.release(l);
 
@@ -583,17 +855,39 @@ mod tests {
     }
 
     #[test]
+    fn match_ending_mid_page_never_leaks_the_trailing_pages_remainder() {
+        // Regression (paged-store edge): a run of 7 tokens spans pages
+        // [0..4) and [4..7). Resubmitting the prompt one token shorter
+        // matches 6 tokens — the splice must copy exactly one token of the
+        // trailing page, not its full coverage, and certainly not the
+        // page's uncovered tail positions.
+        let mut c = PrefixCache::new(cfg(8));
+        let key = [9, 9, 9, 9, 5, 6, 7];
+        let (k, v) = row_for(&key);
+        c.insert("fp32", &key, &k, &v);
+        let l = c.lookup("fp32", &key[..key.len() - 1]).expect("hit");
+        assert_eq!(l.len(), 6, "one-token-shorter resubmit matches len-1");
+        let (dk, dv) = spliced(&c, &l);
+        for s in 0..6 {
+            assert_eq!(dk.at(&[1, 0, 1, s, 2]), key[s] as f32, "position {s}");
+            assert_eq!(dv.at(&[1, 0, 1, s, 2]), key[s] as f32 + 0.5, "position {s}");
+        }
+        assert_eq!(dk.at(&[0, 0, 0, 6, 0]), 0.0, "unmatched covered token stays out");
+        assert_eq!(dk.at(&[0, 0, 0, 7, 0]), 0.0, "uncovered page tail stays out");
+        c.release(l);
+    }
+
+    #[test]
     fn radix_edges_split_on_divergence() {
         let mut c = PrefixCache::new(cfg(8));
         let (k, v) = row(0.0);
         c.insert("fp32", &[7, 7, 7, 1], &k, &v);
         c.insert("fp32", &[7, 7, 7, 2, 2], &k, &v); // splits the [7,7,7,1] edge
-        c.insert("fp32", &[7, 7], &k, &v); // node on the shared spine
         for (query, want) in [
             (&[7, 7, 7, 1, 5][..], 4usize),
             (&[7, 7, 7, 2, 2][..], 5),
             // diverges after the 3-token spine: served by either deeper
-            // segment's leading positions
+            // run's leading positions
             (&[7, 7, 7, 9][..], 3),
             (&[7, 7][..], 2),
         ] {
@@ -601,23 +895,186 @@ mod tests {
             assert_eq!(l.len(), want, "query {query:?}");
             c.release(l);
         }
+        // A key fully covered by a cached run inserts nothing new (lookups
+        // already match into runs), so the trie holds only maximal keys.
+        let before = c.stats().segments;
+        assert_eq!(c.insert("fp32", &[7, 7], &k, &v), 0);
+        assert_eq!(c.stats().segments, before, "covered key must not add a run");
     }
 
     #[test]
-    fn splice_copies_only_the_valid_prefix() {
+    fn splice_copies_only_the_valid_prefix_and_validates_shapes() {
         let mut c = PrefixCache::new(cfg(8));
         let (k, v) = row(100.0);
         c.insert("fp32", &[1, 2, 3], &k, &v);
         let l = c.lookup("fp32", &[1, 2, 3, 4]).expect("hit");
-        let mut dk = Tensor::<f32>::zeros(&DIMS);
-        let mut dv = Tensor::<f32>::zeros(&DIMS);
-        c.splice(&l, &mut dk, &mut dv).expect("splice");
+        let (dk, mut dv) = spliced(&c, &l);
         assert_eq!(dk.at(&[0, 0, 0, 0, 0]), 100.0);
         assert_eq!(dk.at(&[1, 0, 1, 2, 3]), 102.0);
         assert_eq!(dk.at(&[0, 0, 0, 3, 0]), 0.0, "beyond the prefix stays zero");
-        // Shape mismatch is an error, not a corrupt copy.
-        let mut bad = Tensor::<f32>::zeros(&[2, 1, 2, 6, 4]);
-        assert!(c.splice(&l, &mut bad, &mut dv).is_err());
+        // A destination whose sequence extent cannot hold the match is an
+        // error, not a corrupt copy (shorter-but-sufficient extents are
+        // fine — pages are position-strided, not row-shaped).
+        let mut short = Tensor::<f32>::zeros(&[2, 1, 2, 2, 4]);
+        assert!(c.splice(&l, &mut short, &mut dv).is_err());
+        // Mismatched head dims are rejected too.
+        let mut bad_h = Tensor::<f32>::zeros(&[2, 1, 3, 8, 4]);
+        assert!(c.splice(&l, &mut bad_h, &mut dv).is_err());
+        c.release(l);
+    }
+
+    #[test]
+    fn shared_template_pages_are_referenced_not_copied() {
+        let mut c = PrefixCache::new(cfg(16));
+        let template: Vec<i32> = vec![3; 2 * PAGE]; // two full pages
+        let a: Vec<i32> = template.iter().chain(&[10, 11]).copied().collect();
+        let b: Vec<i32> = template.iter().chain(&[20]).copied().collect();
+        let (ka, va) = row_for(&a);
+        let (kb, vb) = row_for(&b);
+
+        c.insert("fp32", &a, &ka, &va);
+        let s = c.stats();
+        assert_eq!(s.resident_pages, 3, "ceil(10/4) pages, not a max_seq row");
+        assert_eq!(s.resident_bytes, 3 * PAGE_BYTES, "residency is page-granular");
+        assert_eq!(s.copied_pages, 3);
+
+        c.insert("fp32", &b, &kb, &vb);
+        let s = c.stats();
+        assert_eq!(s.segments, 2);
+        assert_eq!(
+            s.copied_pages, 4,
+            "second insert copies only its divergent tail page"
+        );
+        assert_eq!(s.shared_pages, 2, "the two full template pages are shared");
+        assert_eq!(s.resident_pages, 4);
+        assert_eq!(s.page_refs, 6, "3 + 3 run references over 4 physical pages");
+        assert!(s.page_share_ratio() > 1.0);
+
+        // Both runs really reference the same physical template pages.
+        let ids = c.run_ids();
+        assert_eq!(ids.len(), 2);
+        let p0 = c.run_pages(ids[0]).unwrap();
+        let p1 = c.run_pages(ids[1]).unwrap();
+        assert_eq!(p0[..2], p1[..2], "template pages shared by id");
+        assert_ne!(p0[2], p1[2], "tails diverge");
+
+        // And each serves its own content correctly through a splice.
+        let l = c.lookup("fp32", &b).expect("hit");
+        assert_eq!(l.len(), b.len());
+        let (dk, _) = spliced(&c, &l);
+        assert_eq!(dk.at(&[0, 0, 0, 8, 0]), 20.0, "b's tail, not a's");
+        c.release(l);
+    }
+
+    #[test]
+    fn one_run_serves_concurrent_leases_with_zero_pool_copies() {
+        // The zero-copy acceptance gate: two admissions leasing the same
+        // page-run concurrently move no pool pages at all — splices read
+        // pages into the callers' scratch, the pool itself never copies.
+        let mut c = PrefixCache::new(cfg(8));
+        let key = [5, 5, 5, 5, 5, 1];
+        let (k, v) = row_for(&key);
+        c.insert("fp32", &key, &k, &v);
+        let copied = c.stats().copied_pages;
+
+        let l1 = c.lookup("fp32", &key[..key.len() - 1]).expect("hit 1");
+        let l2 = c.lookup("fp32", &key[..key.len() - 1]).expect("hit 2");
+        assert_eq!(l1.id(), l2.id(), "one physical run backs both admissions");
+        assert_eq!(c.stats().leases, 2);
+        let (dk1, _) = spliced(&c, &l1);
+        let (dk2, _) = spliced(&c, &l2);
+        assert_eq!(dk1, dk2);
+        let s = c.stats();
+        assert_eq!(s.copied_pages, copied, "concurrent service copied pool pages");
+        assert_eq!(s.resident_pages, 2);
+        c.release(l1);
+        c.release(l2);
+        // Re-inserting the duplicate adds nothing either.
+        assert_eq!(c.insert("fp32", &key, &k, &v), 0);
+        assert_eq!(c.stats().copied_pages, copied);
+        assert_eq!(c.stats().leases, 0);
+    }
+
+    #[test]
+    fn tail_page_extends_in_place_when_exclusive_and_cows_when_shared() {
+        let mut c = PrefixCache::new(cfg(16));
+        let base: Vec<i32> = vec![2, 2, 2, 2, 7, 8]; // pages [0..4), [4..6)
+        let (kb, vb) = row_for(&base);
+        c.insert("fp32", &base, &kb, &vb);
+        assert_eq!(c.stats().resident_pages, 2);
+
+        // Extension while the tail page is exclusively owned: in place, no
+        // new page (mid-stream shape: prompt run extended by generation —
+        // positions past `base.len()` are the generated continuation).
+        let ext: Vec<i32> = base.iter().chain(&[9, 9]).copied().collect();
+        let (ke, ve) = row_for(&ext);
+        c.insert_from_row("fp32", &ext, &ke, &ve, 0, Some(base.len()));
+        let s = c.stats();
+        assert_eq!(s.resident_pages, 2, "in-place tail extension allocates nothing");
+        assert_eq!(s.copied_pages, 2, "still only the base run's two copies");
+        let l = c.lookup("fp32", &ext).expect("hit");
+        assert_eq!(l.len(), ext.len());
+        let (dk, _) = spliced(&c, &l);
+        assert_eq!(dk.at(&[0, 0, 0, 6, 0]), 9.0, "extended positions readable");
+        assert_eq!(dk.at(&[0, 0, 0, 5, 0]), 8.0, "old coverage untouched");
+        c.release(l);
+        // Mid-stream accounting counts only the generated tokens served,
+        // not the prompt prefix the match rode through.
+        assert_eq!(
+            c.stats().mid_stream_hit_tokens,
+            (ext.len() - base.len()) as u64
+        );
+
+        // A diverging sibling cannot extend the (now shared) tail page in
+        // place: it copies on write.
+        let div: Vec<i32> = base[..5].iter().chain(&[30, 31]).copied().collect();
+        let (kd, vd) = row_for(&div);
+        let pages_before = c.stats().resident_pages;
+        c.insert("fp32", &div, &kd, &vd);
+        let s = c.stats();
+        assert_eq!(s.resident_pages, pages_before + 1, "divergent tail copied");
+        // The original run still serves its own bytes.
+        let l = c.lookup("fp32", &ext).expect("hit");
+        let (dk, _) = spliced(&c, &l);
+        assert_eq!(dk.at(&[0, 0, 0, 5, 0]), 8.0, "COW left the shared run intact");
+        c.release(l);
+    }
+
+    #[test]
+    fn insert_from_a_multi_row_source_snapshots_the_selected_row() {
+        // The mid-stream path snapshots straight out of the batched group
+        // cache: [L, B, H, S, hd] with B > 1, row selected by index.
+        let mut c = PrefixCache::new(cfg(8));
+        let gdims = [2usize, 3, 2, 8, 4];
+        let mut gk = Tensor::<f32>::zeros(&gdims);
+        let mut gv = Tensor::<f32>::zeros(&gdims);
+        // Row 1 holds position-coded values; other rows hold garbage.
+        for l in 0..2 {
+            for b in 0..3 {
+                for h in 0..2 {
+                    for s in 0..8 {
+                        for d in 0..4 {
+                            let off = ((((l * 3 + b) * 2 + h) * 8) + s) * 4 + d;
+                            gk.data[off] = if b == 1 { 40.0 + s as f32 } else { -1.0 };
+                            gv.data[off] = if b == 1 { 40.5 + s as f32 } else { -1.0 };
+                        }
+                    }
+                }
+            }
+        }
+        c.insert_from_row("fp32", &[4, 4, 4, 4, 4], &gk, &gv, 1, Some(3));
+        let l = c.lookup("fp32", &[4, 4, 4, 4, 4, 6]).expect("hit");
+        assert_eq!(l.len(), 5);
+        assert_eq!(
+            c.stats().mid_stream_hit_tokens,
+            2,
+            "only the 2 tokens past the prompt boundary count as mid-stream"
+        );
+        let (dk, dv) = spliced(&c, &l);
+        assert_eq!(dk.at(&[0, 0, 0, 0, 0]), 40.0);
+        assert_eq!(dk.at(&[1, 0, 1, 4, 3]), 44.0);
+        assert_eq!(dv.at(&[1, 0, 1, 4, 3]), 44.5);
+        assert_eq!(dk.at(&[0, 0, 0, 5, 0]), 0.0);
         c.release(l);
     }
 
@@ -626,14 +1083,14 @@ mod tests {
         let mut c = PrefixCache::new(cfg(2));
         let (k, v) = row(0.0);
         assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0);
-        assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0, "duplicate key: no new segment");
+        assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0, "duplicate key: no new run");
         assert_eq!(c.stats().segments, 1);
         assert_eq!(c.insert("fp32", &[2, 2], &k, &v), 0);
         // Touch [1,1] so [2,2] is the LRU victim.
         let l = c.lookup("fp32", &[1, 1]).expect("hit");
         c.release(l);
         assert_eq!(c.insert("fp32", &[3, 3], &k, &v), 1, "one eviction to fit");
-        assert!(c.lookup("fp32", &[2, 2]).is_none(), "LRU segment evicted");
+        assert!(c.lookup("fp32", &[2, 2]).is_none(), "LRU run evicted");
         let l = c.lookup("fp32", &[1, 1]).expect("recently-used survives");
         c.release(l);
         assert_eq!(c.stats().evictions, 1);
@@ -641,17 +1098,47 @@ mod tests {
     }
 
     #[test]
-    fn leased_segments_are_never_evicted() {
+    fn eviction_frees_only_unshared_pages() {
+        let mut c = PrefixCache::new(cfg(4));
+        let template: Vec<i32> = vec![6; PAGE]; // one full page
+        let a: Vec<i32> = template.iter().chain(&[1]).copied().collect();
+        let b: Vec<i32> = template.iter().chain(&[2]).copied().collect();
+        let (ka, va) = row_for(&a);
+        let (kb, vb) = row_for(&b);
+        c.insert("fp32", &a, &ka, &va); // pages: T, tail_a
+        c.insert("fp32", &b, &kb, &vb); // pages: T (shared), tail_b
+        assert_eq!(c.stats().resident_pages, 3);
+        let b_lease = c.lookup("fp32", &b).expect("hit");
+        let b_pages = c.run_pages(b_lease.id()).unwrap();
+        // Force eviction pressure: a 4-page insert on a 4-page budget.
+        let big: Vec<i32> = (0..16).map(|i| 50 + i).collect();
+        let (kg, vg) = row_for(&big);
+        c.insert("fp32", &big, &kg, &vg);
+        // Run a was the unleased LRU victim; its tail page is gone but the
+        // template page survives because run b still references it.
+        assert!(c.lookup("fp32", &a).map(|l| { let n = l.len(); c.release(l); n })
+                    .map(|n| n < a.len()).unwrap_or(true),
+                "run a should no longer serve its full key");
+        for pid in &b_pages {
+            assert!(c.has_page(*pid), "page {pid} of the leased run was freed");
+        }
+        let (dk, _) = spliced(&c, &b_lease);
+        assert_eq!(dk.at(&[0, 0, 0, 4, 0]), 2.0, "b still serves through shared pages");
+        c.release(b_lease);
+    }
+
+    #[test]
+    fn leased_runs_are_never_evicted() {
         let mut c = PrefixCache::new(cfg(1));
         let (k, v) = row(0.0);
         c.insert("fp32", &[1, 1], &k, &v);
         let lease = c.lookup("fp32", &[1, 1]).expect("hit");
         let id = lease.id();
-        // Budget is one row; these inserts each demand an eviction, but the
-        // only other resident segment is leased.
+        // Budget is one page; these inserts each demand an eviction, but
+        // the only other resident run is leased.
         c.insert("fp32", &[2, 2], &k, &v);
         c.insert("fp32", &[3, 3], &k, &v);
-        assert!(c.has_segment(id), "leased segment evicted under pressure");
+        assert!(c.has_run(id), "leased run evicted under pressure");
         assert!(
             c.stats().resident_bytes > c.config().budget_bytes,
             "cache should run over budget rather than free a lease"
@@ -663,22 +1150,25 @@ mod tests {
         c.release(lease);
         // Once released, the next insert can reclaim it.
         c.insert("fp32", &[4, 4], &k, &v);
-        assert!(!c.has_segment(id), "released LRU segment reclaimed");
+        assert!(!c.has_run(id), "released LRU run reclaimed");
         assert!(c.stats().resident_bytes <= c.config().budget_bytes);
         assert_eq!(c.stats().leases, 0);
     }
 
     #[test]
-    fn oversize_segment_and_disabled_cache_reject_cleanly() {
+    fn oversize_run_and_disabled_cache_reject_cleanly() {
         let mut c = PrefixCache::new(PrefixCacheConfig {
             enabled: true,
-            budget_bytes: ROW_BYTES / 2,
+            budget_bytes: PAGE_BYTES / 2,
             min_prefix: 2,
+            page_tokens: PAGE,
+            mid_stream: true,
         });
         let (k, v) = row(0.0);
         assert_eq!(c.insert("fp32", &[1, 1], &k, &v), 0);
         assert_eq!(c.stats().rejected, 1);
         assert_eq!(c.stats().segments, 0);
+        assert_eq!(c.stats().resident_pages, 0);
 
         let mut off = PrefixCache::new(PrefixCacheConfig::off());
         assert_eq!(off.insert("fp32", &[1, 1], &k, &v), 0);
@@ -687,9 +1177,12 @@ mod tests {
     }
 
     #[test]
-    fn hit_rate_derivation() {
+    fn stats_derivations() {
         let s = PrefixCacheStats { hits: 3, misses: 1, ..Default::default() };
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(PrefixCacheStats::default().hit_rate(), 0.0);
+        let s = PrefixCacheStats { page_refs: 6, resident_pages: 4, ..Default::default() };
+        assert!((s.page_share_ratio() - 1.5).abs() < 1e-12);
+        assert_eq!(PrefixCacheStats::default().page_share_ratio(), 0.0);
     }
 }

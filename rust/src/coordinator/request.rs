@@ -139,6 +139,15 @@ pub struct RequestState {
     pub sched_delay_s: f64,
     pub first_token_at: Option<Instant>,
     pub finished: Option<FinishReason>,
+    /// Weight variant the request's prefill ran at (set by the engine at
+    /// admission). The prefix cache is keyed by it.
+    pub admit_variant: String,
+    /// A later step executed this row at a *different* variant (the
+    /// fidelity governor demoted/promoted its class mid-generation), so
+    /// the row's KV history mixes precisions. Mixed rows are never
+    /// snapshotted mid-stream — a cached run must be bit-exact KV for its
+    /// key at exactly one variant.
+    pub kv_mixed: bool,
 }
 
 impl RequestState {
@@ -160,6 +169,8 @@ impl RequestState {
             sched_delay_s: 0.0,
             first_token_at: None,
             finished: None,
+            admit_variant: String::new(),
+            kv_mixed: false,
         }
     }
 

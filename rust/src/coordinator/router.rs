@@ -41,6 +41,12 @@ enum Msg {
     Cancel {
         id: u64,
     },
+    /// Boot warm-up: prefill + cache these `(template ids, task)` pairs in
+    /// the prefix cache before traffic (see [`Engine::warm_prefix`]).
+    Warm {
+        templates: Vec<(Vec<i32>, String)>,
+        ack: Sender<usize>,
+    },
     Shutdown,
 }
 
@@ -98,11 +104,20 @@ pub struct PrefixSnapshot {
     pub hit_rate: f64,
     /// Prompt tokens served from cached KV instead of prefill.
     pub hit_tokens: u64,
-    /// Bytes of KV segments resident in the cache.
+    /// Subset of `hit_tokens` served by runs extended with generated
+    /// continuations (mid-stream snapshots): depth multi-turn resubmits
+    /// gained past their original prompts.
+    pub mid_stream_hit_tokens: u64,
+    /// Bytes of KV pages resident in the cache's pool.
     pub resident_bytes: u64,
-    /// Segments resident in the cache.
+    /// Pages resident in the cache's pool.
+    pub resident_pages: u64,
+    /// Run→page references per resident page: 1.0 = no sharing, higher =
+    /// one physical page backing several cached prefixes.
+    pub page_share_ratio: f64,
+    /// Page-runs (cached prefixes) resident in the cache.
     pub segments: u64,
-    /// Segments evicted by the byte-budget LRU so far.
+    /// Runs evicted by the byte-budget LRU so far.
     pub evictions: u64,
 }
 
@@ -148,7 +163,10 @@ pub struct RouterStats {
     pub prefix_hits: AtomicU64,
     pub prefix_misses: AtomicU64,
     pub prefix_hit_tokens: AtomicU64,
+    pub prefix_mid_stream_hit_tokens: AtomicU64,
     pub prefix_resident_bytes: AtomicU64,
+    pub prefix_resident_pages: AtomicU64,
+    pub prefix_page_refs: AtomicU64,
     pub prefix_segments: AtomicU64,
     pub prefix_evictions: AtomicU64,
     /// Submitted prompts cut to the prefill window.
@@ -251,7 +269,13 @@ impl StatsSnapshot {
                     ("misses", Json::num(self.prefix.misses as f64)),
                     ("hit_rate", Json::num(self.prefix.hit_rate)),
                     ("hit_tokens", Json::num(self.prefix.hit_tokens as f64)),
+                    (
+                        "mid_stream_hit_tokens",
+                        Json::num(self.prefix.mid_stream_hit_tokens as f64),
+                    ),
                     ("resident_bytes", Json::num(self.prefix.resident_bytes as f64)),
+                    ("resident_pages", Json::num(self.prefix.resident_pages as f64)),
+                    ("page_share_ratio", Json::num(self.prefix.page_share_ratio)),
                     ("segments", Json::num(self.prefix.segments as f64)),
                     ("evictions", Json::num(self.prefix.evictions as f64)),
                 ]),
@@ -398,6 +422,19 @@ impl EngineHandle {
         self.send(Msg::Cancel { id })
     }
 
+    /// Boot warm-up: block until the engine has prefilled and cached these
+    /// `(template ids, task)` pairs in its prefix cache (see
+    /// [`Engine::warm_prefix`]). Call before the first client so the first
+    /// request of each template family already hits. Returns how many
+    /// templates were cached (0 when the cache is disabled).
+    pub fn warm_prefix(&self, templates: Vec<(Vec<i32>, String)>) -> Result<usize> {
+        let (ack_tx, ack_rx) = channel();
+        self.send(Msg::Warm { templates, ack: ack_tx })?;
+        ack_rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("engine did not ack prefix warm-up"))
+    }
+
     /// Submitted-but-not-completed count (queued + running).
     pub fn in_flight(&self) -> usize {
         self.stats.in_flight.load(Ordering::SeqCst)
@@ -447,6 +484,8 @@ impl EngineHandle {
             prefix: {
                 let hits = s.prefix_hits.load(Ordering::Relaxed);
                 let misses = s.prefix_misses.load(Ordering::Relaxed);
+                let pages = s.prefix_resident_pages.load(Ordering::Relaxed);
+                let refs = s.prefix_page_refs.load(Ordering::Relaxed);
                 PrefixSnapshot {
                     hits,
                     misses,
@@ -456,7 +495,16 @@ impl EngineHandle {
                         hits as f64 / (hits + misses) as f64
                     },
                     hit_tokens: s.prefix_hit_tokens.load(Ordering::Relaxed),
+                    mid_stream_hit_tokens: s
+                        .prefix_mid_stream_hit_tokens
+                        .load(Ordering::Relaxed),
                     resident_bytes: s.prefix_resident_bytes.load(Ordering::Relaxed),
+                    resident_pages: pages,
+                    page_share_ratio: if pages == 0 {
+                        0.0
+                    } else {
+                        refs as f64 / pages as f64
+                    },
                     segments: s.prefix_segments.load(Ordering::Relaxed),
                     evictions: s.prefix_evictions.load(Ordering::Relaxed),
                 }
@@ -504,6 +552,18 @@ fn handle_msg(
         Msg::Cancel { id } => {
             // Unknown id == already completed; nothing to do.
             let _ = engine.cancel(id);
+            false
+        }
+        Msg::Warm { templates, ack } => {
+            match engine.warm_prefix(&templates) {
+                Ok(n) => {
+                    let _ = ack.send(n);
+                }
+                Err(e) => {
+                    eprintln!("[engine] prefix warm-up failed: {e:#}");
+                    let _ = ack.send(0);
+                }
+            }
             false
         }
         Msg::Shutdown => true,
@@ -623,11 +683,20 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
         (&stats.prefix_hits, crate::metrics::names::PREFIX_HITS),
         (&stats.prefix_misses, crate::metrics::names::PREFIX_MISSES),
         (&stats.prefix_hit_tokens, crate::metrics::names::PREFIX_HIT_TOKENS),
+        (
+            &stats.prefix_mid_stream_hit_tokens,
+            crate::metrics::names::PREFIX_MID_STREAM_HIT_TOKENS,
+        ),
         (&stats.prefix_evictions, crate::metrics::names::PREFIX_EVICTIONS),
         (
             &stats.prefix_resident_bytes,
             crate::metrics::names::PREFIX_RESIDENT_BYTES,
         ),
+        (
+            &stats.prefix_resident_pages,
+            crate::metrics::names::PREFIX_RESIDENT_PAGES,
+        ),
+        (&stats.prefix_page_refs, crate::metrics::names::PREFIX_PAGE_REFS),
         (&stats.prefix_segments, crate::metrics::names::PREFIX_SEGMENTS),
     ] {
         dst.store(m.gauge(name).max(0) as u64, Ordering::Relaxed);
@@ -697,7 +766,10 @@ mod tests {
                 misses: 2,
                 hit_rate: 0.75,
                 hit_tokens: 480,
+                mid_stream_hit_tokens: 96,
                 resident_bytes: 1 << 20,
+                resident_pages: 64,
+                page_share_ratio: 1.5,
                 segments: 5,
                 evictions: 3,
             },
@@ -736,8 +808,16 @@ mod tests {
         assert!((prefix.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-9);
         assert_eq!(prefix.get("hit_tokens").unwrap().as_i64().unwrap(), 480);
         assert_eq!(
+            prefix.get("mid_stream_hit_tokens").unwrap().as_i64().unwrap(),
+            96
+        );
+        assert_eq!(
             prefix.get("resident_bytes").unwrap().as_i64().unwrap(),
             1 << 20
+        );
+        assert_eq!(prefix.get("resident_pages").unwrap().as_i64().unwrap(), 64);
+        assert!(
+            (prefix.get("page_share_ratio").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9
         );
         assert_eq!(prefix.get("segments").unwrap().as_i64().unwrap(), 5);
         assert_eq!(prefix.get("evictions").unwrap().as_i64().unwrap(), 3);

@@ -8,14 +8,25 @@
 //!   batcher, prompt-lookup drafter, rejection-sampling verifier logic,
 //!   KV-cache manager, metrics and server. Python never runs on the request
 //!   path. Admission runs a lookup → splice → suffix-prefill → snapshot
-//!   pipeline (`coordinator::prefixcache`): each prompt is longest-prefix-
-//!   matched against a radix trie of committed token prefixes mapping to
-//!   refcounted single-row KV segments (keyed by the verifier variant that
-//!   produced them, byte-budget LRU eviction that never frees a leased
-//!   segment), the matched prefix's KV is spliced into the prefill scratch,
-//!   and only the remaining suffix tokens are prefilled at the matched
-//!   write offset — bit-identical to a cold prefill because attention is
-//!   causal, but priced (and executed) at suffix length. Each engine step
+//!   pipeline over a *paged* prefix store (`coordinator::prefixcache`):
+//!   each prompt is longest-prefix-matched against a radix trie of
+//!   committed token prefixes whose values are **page-runs** — ordered
+//!   references into a refcounted pool of fixed-`page_tokens` KV pages —
+//!   so a cached prefix pins `ceil(len/page_tokens)` pages instead of a
+//!   `max_seq` row, and one physical page backs every run (and every
+//!   concurrent admission) sharing its tokens. The matched run is gathered
+//!   page-wise into the prefill scratch, only the remaining suffix tokens
+//!   are prefilled at the matched write offset — bit-identical to a cold
+//!   prefill because attention is causal, but priced (and executed) at
+//!   suffix length — and the committed prompt is snapshotted back as a
+//!   paged insert that copies only its divergent tail (tail pages are
+//!   copy-on-write). Runs stay keyed by the verifier variant that produced
+//!   them; the byte-budget LRU frees pages only at refcount zero and never
+//!   touches a leased run. Finished requests extend their cached runs with
+//!   full pages of the *generated* continuation (mid-stream snapshots), so
+//!   multi-turn resubmits hit past the prompt, and the cache can be
+//!   pre-populated from workload templates at boot
+//!   ([`coordinator::Engine::warm_prefix`]). Each engine step
 //!   then runs a plan → gather → execute → scatter →
 //!   commit pipeline (`coordinator::plan`): active rows are partitioned into
 //!   sub-batches by required function (decode-only vs verify) *and* by

@@ -46,7 +46,11 @@ fn real_main() -> Result<()> {
     .opt("plan", Some("elastic"), "step planning: elastic | monolithic")
     .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
     .opt("prefix-cache", Some("on"), "shared-prefix KV reuse at admission: on | off")
-    .opt("prefix-budget-mb", Some("256"), "prefix-cache resident-segment budget (MiB)")
+    .opt("prefix-budget-mb", Some("256"), "prefix-cache resident-page budget (MiB)")
+    .opt("prefix-page-tokens", Some("16"), "prefix-cache pool page size (tokens)")
+    .opt("prefix-mid-stream", Some("on"),
+         "snapshot generated continuations into the prefix cache: on | off")
+    .flag("warmup", "serve: pre-populate the prefix cache from workload templates at boot")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -87,6 +91,12 @@ fn real_main() -> Result<()> {
                 other => bail!("unknown prefix-cache mode '{other}' (on|off)"),
             },
             budget_bytes: parsed.usize("prefix-budget-mb") << 20,
+            page_tokens: parsed.usize("prefix-page-tokens").max(1),
+            mid_stream: match parsed.str("prefix-mid-stream").as_str() {
+                "on" => true,
+                "off" => false,
+                other => bail!("unknown prefix-mid-stream mode '{other}' (on|off)"),
+            },
             ..Default::default()
         },
     };
@@ -137,7 +147,21 @@ fn real_main() -> Result<()> {
             let manifest = Manifest::load(&artifacts)?;
             let tok = Tokenizer::load(&manifest.tokenizer_path)?;
             let port = parsed.usize("port");
+            let warmup = parsed.has("warmup") && cfg.prefix.enabled;
             let handle = EngineHandle::spawn(artifacts, model.clone(), cfg, 256)?;
+            if warmup {
+                // Boot warm-up: cache the workload's per-family templates
+                // before accepting the first client.
+                let ws = quasar::workload::WorkloadSet::load(&manifest.workloads_path)?;
+                let plen = manifest.model(&model)?.cfg.prefill_len / 2;
+                let templates: Vec<(Vec<i32>, String)> = ws
+                    .templates(plen)?
+                    .into_iter()
+                    .map(|(task, ids)| (ids, task))
+                    .collect();
+                let cached = handle.warm_prefix(templates)?;
+                eprintln!("[quasar] warm-up cached {cached} prefix templates");
+            }
             let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
             eprintln!("[quasar] serving {model} on 127.0.0.1:{port}");
             let served = quasar::server::serve(listener, handle, tok, 8)?;

@@ -74,12 +74,26 @@ pub mod names {
     pub const PREFIX_HIT_TOKENS: &str = "prefix_cache_hit_tokens";
     /// Gauge (monotonic): cached segments evicted by the byte-budget LRU.
     pub const PREFIX_EVICTIONS: &str = "prefix_cache_evictions";
-    /// Gauge: bytes of KV segments resident in the prefix cache.
+    /// Gauge: bytes of KV pages resident in the prefix cache's pool.
     pub const PREFIX_RESIDENT_BYTES: &str = "prefix_cache_resident_bytes";
-    /// Gauge: segments resident in the prefix cache.
+    /// Gauge: page-runs (cached prefixes) resident in the prefix cache.
     pub const PREFIX_SEGMENTS: &str = "prefix_cache_segments";
-    /// Histogram: modeled prefill seconds each cache hit saved (full-prompt
-    /// chunk price minus the suffix-only price actually paid).
+    /// Gauge: pages resident in the prefix cache's pool.
+    pub const PREFIX_RESIDENT_PAGES: &str = "prefix_cache_resident_pages";
+    /// Gauge: live run→page references. Divided by resident pages this is
+    /// the share ratio (1.0 = no sharing; higher = one physical page backs
+    /// several cached prefixes).
+    pub const PREFIX_PAGE_REFS: &str = "prefix_cache_page_refs";
+    /// Gauge (monotonic): pool pages filled by copying KV in (fresh
+    /// allocations + copy-on-write tails); stable while inserts merely
+    /// reference shared pages.
+    pub const PREFIX_COPIED_PAGES: &str = "prefix_cache_copied_pages";
+    /// Gauge (monotonic): prompt tokens served from runs extended with
+    /// generated continuations (mid-stream snapshots).
+    pub const PREFIX_MID_STREAM_HIT_TOKENS: &str = "prefix_cache_mid_stream_hit_tokens";
+    /// Histogram: modeled prefill seconds each cache hit saved *net* — the
+    /// full-prompt chunk price minus the suffix-only price actually paid,
+    /// minus the per-page splice traffic that realized the hit.
     pub const PREFILL_SAVED_S: &str = "prefill_saved_s";
 
     /// Counter: submitted prompts silently cut to the prefill window.

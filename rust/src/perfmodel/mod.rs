@@ -169,12 +169,39 @@ impl PerfModel {
     /// chunk price minus the suffix-only price actually paid. Weight and
     /// KV streams are per-call and cancel; the saving is the per-token
     /// activation traffic and compute of the skipped positions — strictly
-    /// positive whenever the suffix is shorter than the prompt.
+    /// positive whenever the suffix is shorter than the prompt. The splice
+    /// that realizes the hit is priced separately ([`PerfModel::splice_time`])
+    /// so the engine can report the *net* saving.
     pub fn prefill_saved_s(&self, variant: &str, n_layers: usize,
                            prompt_tokens: usize, suffix_tokens: usize) -> f64 {
         (self.price_parts(variant, n_layers, 1, prompt_tokens).total()
             - self.price_parts(variant, n_layers, 1, suffix_tokens).total())
             .max(0.0)
+    }
+
+    /// Bytes of one resident KV page *pair* (k + v, f32) holding
+    /// `page_tokens` sequence positions at the given depth — the paged
+    /// prefix cache's allocation unit: a cached prefix of `len` tokens
+    /// pins `ceil(len/page_tokens)` of these, where the old segment store
+    /// pinned a whole `max_seq` row.
+    pub fn page_pair_bytes(&self, n_layers: usize, page_tokens: usize) -> f64 {
+        2.0 * n_layers as f64 * self.model.n_heads as f64 * page_tokens as f64
+            * self.model.head_dim as f64 * 4.0
+    }
+
+    /// Modeled seconds admission spends splicing a cached `tokens`-token
+    /// prefix out of the paged store: `ceil(tokens/page_tokens)` pages each
+    /// move through HBM once on the read side and once on the write side.
+    /// Priced *per page, not per row* — a short shared prefix no longer
+    /// pays a `max_seq`-row copy (set `page_tokens = max_seq` to recover
+    /// the old whole-row splice price).
+    pub fn splice_time(&self, n_layers: usize, tokens: usize, page_tokens: usize) -> f64 {
+        if tokens == 0 || page_tokens == 0 {
+            return 0.0;
+        }
+        let pages = tokens.div_ceil(page_tokens);
+        2.0 * pages as f64 * self.page_pair_bytes(n_layers, page_tokens)
+            / self.device.hbm_bw_bytes_per_s
     }
 
     /// Modeled decode-phase time only (prefill excluded): matches how the
@@ -393,6 +420,24 @@ mod tests {
         assert!((saved - (t_cold - t_warm)).abs() < 1e-15);
         assert!(saved > 0.0);
         assert_eq!(pm.prefill_saved_s("fp32", 6, 50, 50), 0.0, "no hit, no saving");
+    }
+
+    #[test]
+    fn splice_is_priced_per_page_not_per_row() {
+        let pm = pm();
+        let (l, p) = (6usize, 16usize);
+        // One page moves 2 * page_pair_bytes through HBM.
+        let one = pm.splice_time(l, p, p);
+        assert!((one - 2.0 * pm.page_pair_bytes(l, p) / 1.6e12).abs() < 1e-18);
+        // Cost scales with page count (ceil), not with max_seq.
+        assert!((pm.splice_time(l, 3 * p, p) / one - 3.0).abs() < 1e-9);
+        assert!((pm.splice_time(l, 2 * p + 1, p) / one - 3.0).abs() < 1e-9, "ceil");
+        // A short prefix priced per page undercuts the whole-row splice the
+        // segment store paid (page_tokens = max_seq recovers that price).
+        let max_seq = pm.model.max_seq;
+        let row = pm.splice_time(l, p, max_seq);
+        assert!(one < row, "per-page {one} not below per-row {row}");
+        assert_eq!(pm.splice_time(l, 0, p), 0.0);
     }
 
     #[test]

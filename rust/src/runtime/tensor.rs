@@ -134,19 +134,37 @@ impl<T: Copy + Default> Tensor<T> {
                                           src_row: usize, n_seq: usize) {
         let r = self.rank();
         assert!(r >= 4 && src.rank() == r, "need a [_, B, ..., S, inner] layout");
-        assert_eq!(self.dims[0], src.dims[0], "axis0 mismatch");
         assert_eq!(&self.dims[2..], &src.dims[2..], "trailing dims mismatch");
-        let seq = self.dims[r - 2];
-        assert!(n_seq <= seq, "prefix {n_seq} exceeds seq {seq}");
+        self.copy_axis1_row_seq_range_from(dst_row, 0, src, src_row, 0, n_seq)
+    }
+
+    /// Copy `n_seq` sequence positions from `src` (row `src_row`, starting
+    /// at position `src_pos`) into this tensor's row `dst_row` starting at
+    /// position `dst_pos`. Shapes must agree on every axis *except* axis 1
+    /// (batch row) and the sequence axis (`rank - 2`), whose extents may
+    /// differ as long as both ranges fit — the page-strided copy the paged
+    /// prefix cache is built on: a `[L, 1, H, page, hd]` pool page reads
+    /// from / writes into any offset of a `[L, B, H, max_seq, hd]` cache
+    /// row.
+    pub fn copy_axis1_row_seq_range_from(&mut self, dst_row: usize, dst_pos: usize,
+                                         src: &Tensor<T>, src_row: usize,
+                                         src_pos: usize, n_seq: usize) {
+        let r = self.rank();
+        assert!(r >= 4 && src.rank() == r, "need a [_, B, ..., S, inner] layout");
+        assert_eq!(self.dims[0], src.dims[0], "axis0 mismatch");
+        assert_eq!(&self.dims[2..r - 2], &src.dims[2..r - 2], "mid dims mismatch");
+        assert_eq!(self.dims[r - 1], src.dims[r - 1], "inner dim mismatch");
+        let (dseq, sseq) = (self.dims[r - 2], src.dims[r - 2]);
+        assert!(dst_pos + n_seq <= dseq, "dst range {dst_pos}+{n_seq} exceeds seq {dseq}");
+        assert!(src_pos + n_seq <= sseq, "src range {src_pos}+{n_seq} exceeds seq {sseq}");
         let inner = self.dims[r - 1];
         let mid: usize = self.dims[2..r - 2].iter().product();
         let (db, sb) = (self.dims[1], src.dims[1]);
         assert!(dst_row < db && src_row < sb);
-        let block = seq * inner;
         for a0 in 0..self.dims[0] {
             for m in 0..mid {
-                let d_off = ((a0 * db + dst_row) * mid + m) * block;
-                let s_off = ((a0 * sb + src_row) * mid + m) * block;
+                let d_off = (((a0 * db + dst_row) * mid + m) * dseq + dst_pos) * inner;
+                let s_off = (((a0 * sb + src_row) * mid + m) * sseq + src_pos) * inner;
                 self.data[d_off..d_off + n_seq * inner]
                     .copy_from_slice(&src.data[s_off..s_off + n_seq * inner]);
             }
@@ -280,6 +298,41 @@ mod tests {
         a.copy_axis1_row_seq_prefix_from(2, &src, 0, 4);
         let mut b = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
         b.copy_axis1_row_from(2, &src, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seq_range_copy_moves_pages_between_mismatched_extents() {
+        // src: a "row cache" [2 (L), 2 (B), 1 (H), 6 (S), 2 (hd)] whose row 1
+        // holds 10*s + d at position s; dst: a "page" [2, 1, 1, 3, 2].
+        let mut src = Tensor::<i32>::zeros(&[2, 2, 1, 6, 2]);
+        for l in 0..2 {
+            for s in 0..6 {
+                for d in 0..2 {
+                    let off = (((l * 2 + 1) * 6) + s) * 2 + d;
+                    src.data[off] = (10 * s + d) as i32;
+                }
+            }
+        }
+        let mut page = Tensor::<i32>::zeros(&[2, 1, 1, 3, 2]);
+        page.data.iter_mut().for_each(|x| *x = -1);
+        // Pull src positions [2, 4) of row 1 into page positions [0, 2).
+        page.copy_axis1_row_seq_range_from(0, 0, &src, 1, 2, 2);
+        assert_eq!(page.at(&[0, 0, 0, 0, 0]), 20);
+        assert_eq!(page.at(&[1, 0, 0, 1, 1]), 31);
+        assert_eq!(page.at(&[0, 0, 0, 2, 0]), -1, "beyond the range untouched");
+        // Push the page back into a different offset of a fresh row cache.
+        let mut dst = Tensor::<i32>::zeros(&[2, 2, 1, 6, 2]);
+        dst.copy_axis1_row_seq_range_from(0, 3, &page, 0, 0, 2);
+        assert_eq!(dst.at(&[0, 0, 0, 3, 0]), 20);
+        assert_eq!(dst.at(&[1, 0, 0, 4, 1]), 31);
+        assert_eq!(dst.at(&[0, 0, 0, 2, 0]), 0, "below the offset untouched");
+        assert_eq!(dst.at(&[0, 1, 0, 3, 0]), 0, "other rows untouched");
+        // Round trip through equal extents matches the prefix copy.
+        let mut a = Tensor::<i32>::zeros(&[2, 2, 1, 6, 2]);
+        a.copy_axis1_row_seq_range_from(0, 0, &src, 1, 0, 4);
+        let mut b = Tensor::<i32>::zeros(&[2, 2, 1, 6, 2]);
+        b.copy_axis1_row_seq_prefix_from(0, &src, 1, 4);
         assert_eq!(a, b);
     }
 

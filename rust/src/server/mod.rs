@@ -22,8 +22,11 @@
 //!                                     ..},
 //!                                     "prefix": {"hits": .., "misses": ..,
 //!                                     "hit_rate": .., "hit_tokens": ..,
-//!                                     "resident_bytes": .., "segments": ..,
-//!                                     "evictions": ..},
+//!                                     "mid_stream_hit_tokens": ..,
+//!                                     "resident_bytes": ..,
+//!                                     "resident_pages": ..,
+//!                                     "page_share_ratio": ..,
+//!                                     "segments": .., "evictions": ..},
 //!                                     "prompt_truncated": .., ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!

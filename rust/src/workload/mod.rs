@@ -105,6 +105,23 @@ impl WorkloadSet {
             .collect()
     }
 
+    /// The per-task system-prompt templates [`WorkloadSet::shared_prefix`]
+    /// prepends — each family's first exported item cut to `prefix_len`
+    /// tokens, as `(task, template_ids)` pairs. Boot warm-up feeds these to
+    /// the engine's prefix cache so the *first* request of every family
+    /// already admits warm.
+    pub fn templates(&self, prefix_len: usize) -> Result<Vec<(String, Vec<i32>)>> {
+        TASKS
+            .iter()
+            .map(|task| {
+                let pool = self.task_pool(task)?;
+                let ids: Vec<i32> =
+                    pool[0].prompt_ids.iter().copied().take(prefix_len).collect();
+                Ok((task.to_string(), ids))
+            })
+            .collect()
+    }
+
     /// A shared-prefix serving batch: each task family gets a fixed
     /// "system prompt" template (the family's first exported item, cut to
     /// `prefix_len` tokens) that is prepended to every sampled prompt of
@@ -253,6 +270,27 @@ mod tests {
         for t in TASKS {
             assert!(m.iter().any(|i| i.task == t), "missing {t}");
         }
+    }
+
+    #[test]
+    fn templates_are_exactly_the_shared_prefix_prefixes() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let templates = ws.templates(2).unwrap();
+        assert_eq!(templates.len(), TASKS.len());
+        let items = ws.shared_prefix(10, 2, &mut Pcg::seeded(9)).unwrap();
+        for it in &items {
+            let (_, tpl) = templates
+                .iter()
+                .find(|(task, _)| *task == it.task)
+                .expect("template for every task");
+            assert!(
+                it.prompt_ids.starts_with(tpl),
+                "warm-up template must be the exact served prefix"
+            );
+        }
+        // Unknown-task plumbing matches the rest of the set's error style.
+        let empty = WorkloadSet { items: Vec::new() };
+        assert!(empty.templates(2).is_err());
     }
 
     #[test]

@@ -1,0 +1,541 @@
+//! Shared test harness for the integration and property suites.
+//!
+//! Two backends, one rig:
+//!
+//! * **Artifact-gated** — [`artifacts_root`] / [`load_model`] /
+//!   [`golden_prompts`] resolve the AOT artifact set (skipping cleanly when
+//!   absent) and [`TestRig`] builds real [`Engine`]s from a small builder
+//!   instead of each test hand-rolling an `EngineConfig` literal.
+//! * **Mock-chunk backed** — [`sim`] hosts the deterministic mock
+//!   transformer chunk and the minimal engine around it that the property
+//!   suites drive when no PJRT artifacts exist: real `BatchGroup` / tensor
+//!   movement and the real step planner, with logits that depend on the
+//!   whole cache prefix so any row-map / gather / position bug changes the
+//!   committed stream.
+//!
+//! Not every test crate uses every item — hence the file-wide
+//! `dead_code` allowance (each `tests/*.rs` is its own crate).
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use quasar::coordinator::{
+    Completion, DrafterKind, Engine, EngineConfig, GenParams, GovernorConfig,
+    PrefixCacheConfig, SchedPolicy,
+};
+use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
+use quasar::spec::NgramConfig;
+use quasar::util::json;
+
+/// Artifact root resolution: `QUASAR_ARTIFACTS` env var, else `artifacts/`.
+/// Tests skip (pass with a notice) when artifacts are absent so
+/// `cargo test` works before `make artifacts`.
+pub fn artifacts_root() -> Option<PathBuf> {
+    let root = std::env::var("QUASAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("[skip] no artifacts at {root:?} — run `make artifacts`");
+        None
+    }
+}
+
+/// Load the manifest and its first model on a fresh PJRT CPU client.
+/// xla_extension tolerates exactly one client per process, so callers share
+/// the returned runtime across every scenario of their `#[test]`.
+pub fn load_model(root: &PathBuf) -> (Manifest, Rc<ModelRuntime>) {
+    let rt = Rc::new(XlaRuntime::cpu().expect("pjrt cpu client"));
+    let manifest = Manifest::load(root).expect("manifest");
+    let name = manifest.models.keys().next().expect("at least one model").clone();
+    let mr = Rc::new(ModelRuntime::load(rt, &manifest, &name).expect("model"));
+    (manifest, mr)
+}
+
+/// The goldens' prompt token ids — the deterministic seeded workload the
+/// integration scenarios share.
+pub fn golden_prompts(mr: &Rc<ModelRuntime>) -> Vec<Vec<i32>> {
+    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
+    goldens
+        .as_arr()
+        .expect("goldens array")
+        .iter()
+        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
+        .collect()
+}
+
+/// Engine builder for the integration scenarios: sane speculative defaults
+/// (fp32 verifier, non-adaptive ngram drafter, batch 4, elastic planning,
+/// governor off, prefix cache at its default), each knob overridable in one
+/// chained call. Replaces the per-test `EngineConfig` literals.
+#[derive(Clone)]
+pub struct TestRig {
+    pub verifier: String,
+    pub drafter: DrafterKind,
+    pub batch: usize,
+    pub gamma: usize,
+    pub seed: u64,
+    pub policy: SchedPolicy,
+    pub elastic: bool,
+    pub governor: GovernorConfig,
+    pub prefix: PrefixCacheConfig,
+}
+
+impl Default for TestRig {
+    fn default() -> Self {
+        TestRig::new()
+    }
+}
+
+impl TestRig {
+    pub fn new() -> Self {
+        TestRig {
+            verifier: "fp32".into(),
+            drafter: DrafterKind::Ngram(NgramConfig {
+                gamma: 3,
+                adaptive: false,
+                ..Default::default()
+            }),
+            batch: 4,
+            gamma: 3,
+            seed: 1,
+            policy: SchedPolicy::default(),
+            elastic: true,
+            governor: GovernorConfig::default(),
+            prefix: PrefixCacheConfig::default(),
+        }
+    }
+
+    pub fn verifier(mut self, v: &str) -> Self {
+        self.verifier = v.into();
+        self
+    }
+
+    /// Speculation depth: sets both the engine cap and the ngram drafter's
+    /// depth (non-adaptive, like every deterministic scenario).
+    pub fn gamma(mut self, gamma: usize) -> Self {
+        self.gamma = gamma;
+        if matches!(self.drafter, DrafterKind::Ngram(_)) {
+            self.drafter = DrafterKind::Ngram(NgramConfig {
+                gamma,
+                adaptive: false,
+                ..Default::default()
+            });
+        }
+        self
+    }
+
+    pub fn drafter(mut self, d: DrafterKind) -> Self {
+        self.drafter = d;
+        self
+    }
+
+    /// Autoregressive baseline (no speculation).
+    pub fn vanilla(mut self) -> Self {
+        self.drafter = DrafterKind::Vanilla;
+        self.gamma = 0;
+        self
+    }
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn elastic(mut self, elastic: bool) -> Self {
+        self.elastic = elastic;
+        self
+    }
+
+    pub fn governor(mut self, governor: GovernorConfig) -> Self {
+        self.governor = governor;
+        self
+    }
+
+    pub fn prefix(mut self, prefix: PrefixCacheConfig) -> Self {
+        self.prefix = prefix;
+        self
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        EngineConfig {
+            verifier: self.verifier.clone(),
+            drafter: self.drafter.clone(),
+            batch: self.batch,
+            gamma: self.gamma,
+            seed: self.seed,
+            policy: self.policy,
+            elastic: self.elastic,
+            governor: self.governor.clone(),
+            prefix: self.prefix.clone(),
+        }
+    }
+
+    pub fn engine(&self, mr: &Rc<ModelRuntime>) -> Engine {
+        Engine::new(Rc::clone(mr), self.config()).expect("engine")
+    }
+
+    /// Submit every prompt (per-index `max_new`, greedy, no eos stop, task
+    /// tag `"t"`), drain, and return the completions sorted by request id
+    /// alongside the engine — for tests that assert on speculative stats,
+    /// not just token streams.
+    pub fn run_completions(
+        &self,
+        mr: &Rc<ModelRuntime>,
+        prompts: &[Vec<i32>],
+        max_new: &dyn Fn(usize) -> usize,
+    ) -> (Vec<Completion>, Engine) {
+        let mut engine = self.engine(mr);
+        for (i, p) in prompts.iter().enumerate() {
+            engine.submit(
+                p.clone(),
+                GenParams { max_new: max_new(i), stop_at_eos: false, ..GenParams::default() },
+                "t",
+            );
+        }
+        let mut done = engine.run_to_completion().expect("run to completion");
+        done.sort_by_key(|c| c.id);
+        (done, engine)
+    }
+
+    /// [`TestRig::run_completions`], reduced to the generated token streams.
+    pub fn run_with(
+        &self,
+        mr: &Rc<ModelRuntime>,
+        prompts: &[Vec<i32>],
+        max_new: &dyn Fn(usize) -> usize,
+    ) -> (Vec<Vec<i32>>, Engine) {
+        let (done, engine) = self.run_completions(mr, prompts, max_new);
+        (done.into_iter().map(|c| c.tokens).collect(), engine)
+    }
+
+    /// [`TestRig::run_with`] at one uniform `max_new`.
+    pub fn run(
+        &self,
+        mr: &Rc<ModelRuntime>,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> (Vec<Vec<i32>>, Engine) {
+        self.run_with(mr, prompts, &|_| max_new)
+    }
+}
+
+/// Mock-chunk backend: a deterministic "transformer" over real
+/// `BatchGroup` / `Tensor` movement and the real step planner, for property
+/// suites that must run without PJRT artifacts.
+pub mod sim {
+    use std::collections::BTreeMap;
+
+    use quasar::coordinator::{
+        plan_step, BatchGroup, CallLog, CallRecord, FnKind, PlanCtx, PlanRow, VariantCtx,
+    };
+    use quasar::perfmodel::PerfModel;
+    use quasar::prop_assert;
+    use quasar::runtime::{CostModelCfg, ModelCfg, Tensor};
+    use quasar::spec::{verify_draft, Draft};
+    use quasar::util::prop::ok;
+    use quasar::util::rng::Pcg;
+
+    pub const SIM_L: usize = 2;
+    pub const SIM_H: usize = 2;
+    pub const SIM_S: usize = 64;
+    pub const SIM_HD: usize = 2;
+    pub const SIM_VOCAB: usize = 4;
+    pub const SIM_CHUNK: usize = 5; // verify chunk (gamma 4)
+
+    pub fn sim_device(bf16_ops: f64, launch_s: f64) -> CostModelCfg {
+        CostModelCfg {
+            device: "sim".into(),
+            hbm_bw_bytes_per_s: 1.6e12,
+            int8_ops_per_s: 2.0 * bf16_ops,
+            bf16_ops_per_s: bf16_ops,
+            bytes_per_weight: BTreeMap::from([("fp32".to_string(), 2.0)]),
+            kernel_launch_s: launch_s,
+            drafter_cost_per_token_s: 1e-6,
+        }
+    }
+
+    pub fn sim_model_cfg(d_model: usize, max_seq: usize) -> ModelCfg {
+        ModelCfg {
+            name: "sim".into(), vocab_size: 64, d_model, n_layers: SIM_L,
+            n_heads: 8, ffn_dim: 2 * d_model, max_seq, prefill_len: 16,
+            gamma_max: SIM_CHUNK - 1, head_dim: 64,
+        }
+    }
+
+    /// Three pricing regimes so the planner's *choice* varies across cases
+    /// while correctness must not: KV-bound (shrinks), compute-starved
+    /// (splits), weight-bound (stays monolithic-shaped).
+    pub fn sim_perf(sel: u64) -> PerfModel {
+        match sel % 3 {
+            0 => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(32, 4096)),
+            1 => PerfModel::new(sim_device(1e12, 1e-9), sim_model_cfg(32, 4096)),
+            _ => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(2048, 64)),
+        }
+    }
+
+    pub fn tset(t: &mut Tensor<f32>, idx: &[usize], val: f32) {
+        let strides = t.strides();
+        let off: usize = idx.iter().zip(&strides).map(|(&i, &s)| i * s).sum();
+        t.data[off] = val;
+    }
+
+    /// Deterministic row-independent "transformer chunk": writes each row's
+    /// tokens into the cache at `pos..pos+chunk` (every layer/head/dim
+    /// carries the token value) and emits one-hot logits whose argmax
+    /// depends on the row's entire cache prefix — so a wrong row map, stale
+    /// gather, or wrong position offset changes the output stream. `flip`
+    /// models a *degraded quantized variant*: same KV writes, but every
+    /// argmax shifted by one — zero top-1 agreement with the reference,
+    /// which is what the fidelity governor must catch.
+    pub fn mock_chunk(
+        k: &mut Tensor<f32>,
+        v: &mut Tensor<f32>,
+        tokens: &[i32],
+        pos: &[i32],
+        bucket: usize,
+        chunk: usize,
+        flip: bool,
+    ) -> Tensor<f32> {
+        let mut logits = Tensor::<f32>::zeros(&[bucket, chunk, SIM_VOCAB]);
+        for r in 0..bucket {
+            let p0 = pos[r] as usize;
+            for j in 0..chunk {
+                let t = tokens[r * chunk + j] as f32;
+                for l in 0..SIM_L {
+                    for h in 0..SIM_H {
+                        for d in 0..SIM_HD {
+                            tset(k, &[l, r, h, p0 + j, d], t);
+                            tset(v, &[l, r, h, p0 + j, d], t + 0.5);
+                        }
+                    }
+                }
+                let prefix: f32 = (0..=p0 + j).map(|p| k.at(&[0, r, 0, p, 0])).sum();
+                // rem_euclid: padding rows of a dirty scratch can sum negative
+                let mut next = (prefix as i64 * 31 + (p0 + j) as i64 * 7)
+                    .rem_euclid(SIM_VOCAB as i64) as usize;
+                if flip {
+                    next = (next + 1) % SIM_VOCAB;
+                }
+                tset(&mut logits, &[r, j, next], 1.0);
+            }
+        }
+        logits
+    }
+
+    pub struct SimReq {
+        pub row: usize,
+        pub committed: Vec<i32>,
+        pub cached: usize,
+    }
+
+    /// Minimal engine over the mock chunk: monolithic mode reproduces the
+    /// pre-planner step (one full-bucket call, whole-cache adopt), elastic
+    /// mode runs the real plan -> gather -> execute -> scatter pipeline.
+    pub struct Sim {
+        pub group: BatchGroup,
+        pub reqs: Vec<SimReq>,
+        pub log: CallLog,
+        pub perf: PerfModel,
+        pub full: usize,
+        pub elastic: bool,
+        /// Degraded-variant mode: the mock chunk flips every argmax (see
+        /// [`mock_chunk`]). Toggled per step by the governed-sim test.
+        pub flip: bool,
+    }
+
+    impl Sim {
+        pub fn new(n_req: usize, full: usize, perf: PerfModel, elastic: bool) -> Sim {
+            let mut group = BatchGroup::new(SIM_L, full, SIM_H, SIM_S, SIM_HD);
+            let mut reqs = Vec::new();
+            for i in 0..n_req {
+                let prompt_tok = (i % SIM_VOCAB) as i32;
+                let mut k1 = Tensor::<f32>::zeros(&[SIM_L, 1, SIM_H, SIM_S, SIM_HD]);
+                let mut v1 = k1.clone();
+                for l in 0..SIM_L {
+                    for h in 0..SIM_H {
+                        for d in 0..SIM_HD {
+                            tset(&mut k1, &[l, 0, h, 0, d], prompt_tok as f32);
+                            tset(&mut v1, &[l, 0, h, 0, d], prompt_tok as f32 + 0.5);
+                        }
+                    }
+                }
+                let row = group.join(i, &k1, &v1).unwrap();
+                reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
+            }
+            Sim { group, reqs, log: CallLog::default(), perf, full, elastic, flip: false }
+        }
+
+        fn commit(req: &mut SimReq, draft: &[i32], logits: &Tensor<f32>, lrow: usize) {
+            let d = Draft::point_mass(draft.to_vec());
+            let out = verify_draft(&d, |j| logits.row(&[lrow, j]), 0.0, &mut Pcg::seeded(0));
+            let mut commit: Vec<i32> = d.tokens[..out.accepted].to_vec();
+            commit.push(out.next_token);
+            req.cached += commit.len();
+            req.committed.extend_from_slice(&commit);
+        }
+
+        fn record(&mut self, fn_kind: FnKind, bucket: usize, chunk: usize, rows: usize,
+                  tokens_used: usize, useful: usize) {
+            self.log.record(CallRecord {
+                variant: "fp32".into(),
+                fn_kind,
+                batch: bucket,
+                n_layers: SIM_L,
+                active_rows: rows,
+                tokens_used,
+                chunk_len: chunk,
+                useful_tokens: useful,
+                wall_s: 0.0,
+            });
+        }
+
+        pub fn step(&mut self, drafts: &[Vec<i32>]) {
+            assert_eq!(drafts.len(), self.reqs.len());
+            if self.elastic {
+                self.step_elastic(drafts)
+            } else {
+                self.step_mono(drafts)
+            }
+        }
+
+        /// Seed-engine shape: one call at the configured bucket, token
+        /// block indexed by group row, whole-cache adopt.
+        fn step_mono(&mut self, drafts: &[Vec<i32>]) {
+            let any = drafts.iter().any(|d| !d.is_empty());
+            let (fn_kind, chunk) =
+                if any { (FnKind::Verify, SIM_CHUNK) } else { (FnKind::Decode, 1) };
+            let b = self.full;
+            let mut tokens = vec![0i32; b * chunk];
+            let mut pos = vec![0i32; b];
+            for (req, draft) in self.reqs.iter().zip(drafts) {
+                tokens[req.row * chunk] = *req.committed.last().unwrap();
+                for (j, &t) in draft.iter().enumerate().take(chunk - 1) {
+                    tokens[req.row * chunk + 1 + j] = t;
+                }
+                pos[req.row] = req.cached as i32;
+            }
+            let mut k = self.group.k.clone();
+            let mut v = self.group.v.clone();
+            let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk, self.flip);
+            self.group.k = k; // whole-cache adopt, garbage rows included
+            self.group.v = v;
+            let used = drafts.iter().map(|d| d.len() + 1).max().unwrap_or(1);
+            let useful: usize = drafts.iter().map(|d| d.len() + 1).sum();
+            self.record(fn_kind, b, chunk, self.reqs.len(), used, useful);
+            for (i, draft) in drafts.iter().enumerate() {
+                let lrow = self.reqs[i].row;
+                Self::commit(&mut self.reqs[i], draft, &logits, lrow);
+            }
+        }
+
+        /// The refactored shape: plan, then gather/execute/scatter per
+        /// sub-batch against dirty scratch caches.
+        fn step_elastic(&mut self, drafts: &[Vec<i32>]) {
+            let rows: Vec<PlanRow> =
+                drafts.iter().map(|d| PlanRow::new(d.len(), 0)).collect();
+            let buckets = [1usize, 2, 4];
+            let plan = {
+                let variants = [VariantCtx {
+                    name: "fp32",
+                    verify_buckets: &buckets,
+                    decode_buckets: &buckets,
+                }];
+                let ctx = PlanCtx {
+                    perf: &self.perf,
+                    variants: &variants,
+                    n_layers: SIM_L,
+                    full_bucket: self.full,
+                    verify_chunk: SIM_CHUNK,
+                    elastic: true,
+                };
+                plan_step(&ctx, &rows).unwrap()
+            };
+            assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
+            for sb in &plan.sub_batches {
+                let (bucket, chunk) = (sb.bucket, sb.chunk);
+                let row_map: Vec<usize> =
+                    sb.rows.iter().map(|&di| self.reqs[di].row).collect();
+                // dirty pooled scratch: gather must overwrite everything read
+                let mut sk = Tensor::<f32>::zeros(&[SIM_L, bucket, SIM_H, SIM_S, SIM_HD]);
+                sk.data.iter_mut().for_each(|x| *x = -7.0);
+                let mut sv = sk.clone();
+                self.group.gather_rows(&row_map, &mut sk, &mut sv).unwrap();
+                let mut tokens = vec![0i32; bucket * chunk];
+                let mut pos = vec![0i32; bucket];
+                for (i, &di) in sb.rows.iter().enumerate() {
+                    let req = &self.reqs[di];
+                    tokens[i * chunk] = *req.committed.last().unwrap();
+                    for (j, &t) in drafts[di].iter().enumerate().take(chunk - 1) {
+                        tokens[i * chunk + 1 + j] = t;
+                    }
+                    pos[i] = req.cached as i32;
+                }
+                let logits =
+                    mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk, self.flip);
+                self.group.scatter_rows(&row_map, &sk, &sv).unwrap();
+                self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
+                            sb.useful_tokens);
+                for (i, &di) in sb.rows.iter().enumerate() {
+                    Self::commit(&mut self.reqs[di], &drafts[di], &logits, i);
+                }
+            }
+        }
+    }
+
+    /// Drive monolithic and elastic sims with identical drafts; compare
+    /// streams and the committed cache prefix of every leased row.
+    pub fn run_equivalence(n_req: usize, perf_sel: u64, seed: u64,
+                           steps: usize) -> (Sim, Sim) {
+        let full = 4usize;
+        let mut mono = Sim::new(n_req, full, sim_perf(perf_sel), false);
+        let mut ela = Sim::new(n_req, full, sim_perf(perf_sel), true);
+        let mut rng = Pcg::seeded(seed ^ 0xE1A5);
+        for _ in 0..steps {
+            let drafts: Vec<Vec<i32>> = (0..n_req)
+                .map(|_| {
+                    let len = rng.usize_below(SIM_CHUNK);
+                    (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+                })
+                .collect();
+            mono.step(&drafts);
+            ela.step(&drafts);
+        }
+        (mono, ela)
+    }
+
+    pub fn check_equivalent(mono: &Sim, ela: &Sim) -> Result<(), String> {
+        for (i, (m, e)) in mono.reqs.iter().zip(&ela.reqs).enumerate() {
+            prop_assert!(
+                m.committed == e.committed,
+                "req {i} streams diverged:\n  mono {:?}\n  ela  {:?}",
+                m.committed, e.committed
+            );
+            prop_assert!(m.cached == e.cached, "req {i} cached diverged");
+            // committed KV prefix must be bit-identical (positions beyond
+            // `cached` hold unread speculative leftovers and may differ)
+            for l in 0..SIM_L {
+                for h in 0..SIM_H {
+                    for p in 0..m.cached {
+                        for d in 0..SIM_HD {
+                            let a = mono.group.k.at(&[l, m.row, h, p, d]);
+                            let b = ela.group.k.at(&[l, e.row, h, p, d]);
+                            prop_assert!(a == b, "req {i} kv prefix diverged at {l}/{h}/{p}/{d}");
+                            let a = mono.group.v.at(&[l, m.row, h, p, d]);
+                            let b = ela.group.v.at(&[l, e.row, h, p, d]);
+                            prop_assert!(a == b, "req {i} v prefix diverged at {l}/{h}/{p}/{d}");
+                        }
+                    }
+                }
+            }
+        }
+        ok()
+    }
+}

@@ -1,46 +1,23 @@
 //! Integration tests over real AOT artifacts: load the manifest, compile
 //! HLO-text programs on the PJRT CPU client, and check the engine's numerics
-//! against python-computed goldens.
+//! against python-computed goldens. Shared setup (artifact gating, model
+//! loading, the `TestRig` engine builder) lives in `tests/common`.
 //!
 //! Artifact root resolution: `QUASAR_ARTIFACTS` env var, else `artifacts/`.
 //! Tests skip (pass with a notice) when artifacts are absent so `cargo test`
 //! works before `make artifacts`.
 
-use std::path::PathBuf;
+mod common;
+
 use std::rc::Rc;
 
+use common::{artifacts_root, golden_prompts, load_model, TestRig};
 use quasar::coordinator::{
-    DrafterKind, Engine, EngineConfig, FnKind, GenParams, GovernorConfig, PrefixCacheConfig,
+    DrafterKind, Engine, FnKind, GenParams, GovernorConfig, PrefixCacheConfig,
 };
 use quasar::metrics::names;
 use quasar::perfmodel::PerfModel;
-use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
-use quasar::spec::NgramConfig;
-use quasar::util::json;
-
-fn artifacts_root() -> Option<PathBuf> {
-    let root = std::env::var("QUASAR_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"));
-    if root.join("manifest.json").exists() {
-        Some(root)
-    } else {
-        eprintln!("[skip] no artifacts at {root:?} — run `make artifacts`");
-        None
-    }
-}
-
-fn first_model(manifest: &Manifest) -> String {
-    manifest.models.keys().next().expect("at least one model").clone()
-}
-
-fn load_model(root: &PathBuf) -> (Manifest, Rc<ModelRuntime>) {
-    let rt = Rc::new(XlaRuntime::cpu().expect("pjrt cpu client"));
-    let manifest = Manifest::load(root).expect("manifest");
-    let name = first_model(&manifest);
-    let mr = Rc::new(ModelRuntime::load(rt, &manifest, &name).expect("model"));
-    (manifest, mr)
-}
+use quasar::runtime::{Manifest, ModelRuntime};
 
 /// One PJRT client per process: xla_extension SIGSEGVs when a second CPU
 /// client is created after the first is dropped, so all scenarios share one
@@ -66,6 +43,8 @@ fn integration_scenarios_inner() {
     governed_precision_matches_fp32_and_prices_lower(&manifest, &mr);
     eprintln!("== prefix_cache_reuse_is_bit_identical_and_prices_admission_lower");
     prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(&manifest, &mr);
+    eprintln!("== paged_store_pins_pages_shares_them_and_serves_mid_stream");
+    paged_store_pins_pages_shares_them_and_serves_mid_stream(&mr);
     eprintln!("== prompt_truncation_is_flagged_not_silent");
     prompt_truncation_is_flagged_not_silent(&mr);
     eprintln!("== pruned_drafter_runs_and_verifier_stays_lossless");
@@ -79,7 +58,7 @@ fn prefill_logits_match_python_goldens(mr: &Rc<ModelRuntime>) {
     // legitimately flip on near-ties because jax's XLA and the crate's XLA
     // 0.5.1 fuse differently — see goldens.json generation in aot.py.)
     let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
+    let goldens = quasar::util::json::parse_file(&mr.entry.goldens_path).expect("goldens");
     let cfg = mr.cfg().clone();
 
     for variant in ["fp32", "w8a8"] {
@@ -117,85 +96,33 @@ fn prefill_logits_match_python_goldens(mr: &Rc<ModelRuntime>) {
 
 fn speculative_greedy_equals_vanilla_greedy(mr: &Rc<ModelRuntime>) {
     // Lossless property at T=0: ngram-speculated output must be identical
-    // to plain autoregressive output, for both verifier variants.
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompt = goldens.idx(0).unwrap().get("prompt_ids").unwrap().as_i32_vec().unwrap();
-
+    // to plain autoregressive output, for both verifier variants — and
+    // speculation must actually be live (mean acceptance length >= 1).
+    let prompt = golden_prompts(mr).remove(0);
     for variant in ["fp32", "w8a8"] {
-        let gen = |drafter: DrafterKind| {
-            let cfg = EngineConfig {
-                verifier: variant.into(),
-                drafter,
-                batch: 1,
-                gamma: 4,
-                seed: 3,
-                policy: Default::default(),
-                elastic: true,
-                governor: Default::default(),
-                prefix: Default::default(),
-            };
-            let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-            engine.submit(
-                prompt.clone(),
-                GenParams { max_new: 32, stop_at_eos: false, ..GenParams::default() },
-                "t",
-            );
-            engine.run_to_completion().unwrap().remove(0)
-        };
-        let vanilla = gen(DrafterKind::Vanilla);
-        let spec = gen(DrafterKind::Ngram(NgramConfig {
-            gamma: 4,
-            adaptive: false,
-            ..Default::default()
-        }));
-        assert_eq!(vanilla.tokens, spec.tokens, "{variant}: speculation changed greedy output");
-        assert!(spec.stats.mean_acceptance_len() >= 1.0);
+        let rig = TestRig::new().verifier(variant).batch(1).gamma(4).seed(3);
+        let (vanilla, _) = rig.clone().vanilla().run(mr, &[prompt.clone()], 32);
+        let (spec, _) = rig.run_completions(mr, &[prompt.clone()], &|_| 32);
+        assert_eq!(
+            vanilla[0], spec[0].tokens,
+            "{variant}: speculation changed greedy output"
+        );
+        assert!(
+            spec[0].stats.mean_acceptance_len() >= 1.0,
+            "{variant}: speculative decoding degenerated (L < 1)"
+        );
     }
 }
 
 fn batched_serving_matches_single_request(mr: &Rc<ModelRuntime>) {
     // b=4 continuous batching must produce the same greedy tokens as b=1.
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompts: Vec<Vec<i32>> = goldens
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
-        .collect();
-
-    let run = |batch: usize, prompts: &[Vec<i32>]| -> Vec<Vec<i32>> {
-        let cfg = EngineConfig {
-            verifier: "fp32".into(),
-            drafter: DrafterKind::Ngram(NgramConfig { gamma: 3, adaptive: false, ..Default::default() }),
-            batch,
-            gamma: 3,
-            seed: 1,
-            policy: Default::default(),
-            elastic: true,
-            governor: Default::default(),
-            prefix: Default::default(),
-        };
-        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-        let mut ids = Vec::new();
-        for p in prompts {
-            ids.push(engine.submit(
-                p.clone(),
-                GenParams { max_new: 24, stop_at_eos: false, ..GenParams::default() },
-                "t",
-            ));
-        }
-        let mut done = engine.run_to_completion().unwrap();
-        done.sort_by_key(|c| c.id);
-        done.into_iter().map(|c| c.tokens).collect()
-    };
-
+    let prompts = golden_prompts(mr);
     // duplicate prompts so the b=4 group is fully loaded
     let mut many = prompts.clone();
     many.extend(prompts.clone());
-    let single: Vec<_> = run(1, &many);
-    let batched: Vec<_> = run(4, &many);
+    let rig = TestRig::new().gamma(3).seed(1);
+    let (single, _) = rig.clone().batch(1).run(mr, &many, 24);
+    let (batched, _) = rig.batch(4).run(mr, &many, 24);
     assert_eq!(single, batched, "batched vs single greedy outputs diverge");
 }
 
@@ -208,53 +135,15 @@ fn elastic_planner_matches_monolithic_and_prices_lower(
     // drain tail at occupancy 1), commit greedy tokens bit-identical to the
     // monolithic configured-bucket engine, and price the run lower on the
     // simulated device.
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompts: Vec<Vec<i32>> = goldens
-        .as_arr()
-        .unwrap()
-        .iter()
-        .take(3)
-        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
-        .collect();
-
-    let run = |elastic: bool| {
-        let cfg = EngineConfig {
-            verifier: "fp32".into(),
-            drafter: DrafterKind::Ngram(NgramConfig {
-                gamma: 3,
-                adaptive: false,
-                ..Default::default()
-            }),
-            batch: 4,
-            gamma: 3,
-            seed: 2,
-            policy: Default::default(),
-            elastic,
-            governor: Default::default(),
-            prefix: Default::default(),
-        };
-        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-        for (i, p) in prompts.iter().enumerate() {
-            engine.submit(
-                p.clone(),
-                GenParams {
-                    max_new: 8 + 8 * i, // staggered finishes -> draining tail
-                    stop_at_eos: false,
-                    ..GenParams::default()
-                },
-                "t",
-            );
-        }
-        let mut done = engine.run_to_completion().unwrap();
-        done.sort_by_key(|c| c.id);
-        let tokens: Vec<Vec<i32>> = done.into_iter().map(|c| c.tokens).collect();
-        (tokens, engine.call_log.clone())
-    };
-
-    let (mono_tokens, mono_log) = run(false);
-    let (ela_tokens, ela_log) = run(true);
+    let prompts: Vec<Vec<i32>> = golden_prompts(mr).into_iter().take(3).collect();
+    let rig = TestRig::new().gamma(3).batch(4).seed(2);
+    // staggered finishes -> draining tail
+    let stagger = |i: usize| 8 + 8 * i;
+    let (mono_tokens, mono_engine) =
+        rig.clone().elastic(false).run_with(mr, &prompts, &stagger);
+    let (ela_tokens, ela_engine) = rig.run_with(mr, &prompts, &stagger);
     assert_eq!(mono_tokens, ela_tokens, "elastic planning changed greedy output");
+    let (mono_log, ela_log) = (mono_engine.call_log, ela_engine.call_log);
 
     let full = 4usize;
     assert!(
@@ -302,30 +191,9 @@ fn governed_precision_matches_fp32_and_prices_lower(
     manifest: &Manifest,
     mr: &Rc<ModelRuntime>,
 ) {
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompts: Vec<Vec<i32>> = goldens
-        .as_arr()
-        .unwrap()
-        .iter()
-        .take(3)
-        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
-        .collect();
-
-    let mk = |verifier: &str, governor: GovernorConfig| EngineConfig {
-        verifier: verifier.into(),
-        drafter: DrafterKind::Ngram(NgramConfig {
-            gamma: 3,
-            adaptive: false,
-            ..Default::default()
-        }),
-        batch: 4,
-        gamma: 3,
-        seed: 11,
-        policy: Default::default(),
-        elastic: true,
-        governor,
-        prefix: Default::default(),
+    let prompts: Vec<Vec<i32>> = golden_prompts(mr).into_iter().take(3).collect();
+    let rig = |verifier: &str, governor: GovernorConfig| {
+        TestRig::new().verifier(verifier).gamma(3).batch(4).seed(11).governor(governor)
     };
     let run = |mut engine: Engine| {
         for (i, p) in prompts.iter().enumerate() {
@@ -347,8 +215,7 @@ fn governed_precision_matches_fp32_and_prices_lower(
     let perf = PerfModel::new(manifest.cost_model.clone(), mr.cfg().clone());
 
     // Baseline: fp32-pinned engine.
-    let (fp32_tokens, fp32_engine) =
-        run(Engine::new(Rc::clone(&mr), mk("fp32", GovernorConfig::default())).unwrap());
+    let (fp32_tokens, fp32_engine) = run(rig("fp32", GovernorConfig::default()).engine(mr));
 
     // 1. Audit machinery at rate 1.0: every eligible sub-batch shadowed.
     // This run also *measures* whether this artifact set's w8a8 verifier is
@@ -357,8 +224,7 @@ fn governed_precision_matches_fp32_and_prices_lower(
     // on health by design (paper §4.5), so the healthy-path assertions
     // below only apply when the measurement says they must hold.
     let audit_cfg = GovernorConfig { enabled: true, audit_rate: 1.0, ..Default::default() };
-    let (audited_tokens, audited_engine) =
-        run(Engine::new(Rc::clone(&mr), mk("w8a8", audit_cfg)).unwrap());
+    let (audited_tokens, audited_engine) = run(rig("w8a8", audit_cfg).engine(mr));
     let audits = audited_engine.call_log.calls(FnKind::Audit);
     assert!(audits > 0, "audit_rate 1.0 recorded no shadow calls");
     assert!(
@@ -384,8 +250,7 @@ fn governed_precision_matches_fp32_and_prices_lower(
             audit_rate: 0.0625,
             ..Default::default()
         };
-        let (gov_tokens, gov_engine) =
-            run(Engine::new(Rc::clone(&mr), mk("w8a8", gov_cfg)).unwrap());
+        let (gov_tokens, gov_engine) = run(rig("w8a8", gov_cfg).engine(mr));
         assert_eq!(
             gov_tokens, fp32_tokens,
             "healthy governed w8a8 diverged from the fp32-pinned engine"
@@ -443,7 +308,7 @@ fn governed_precision_matches_fp32_and_prices_lower(
         probe_after_steps: 10_000, // keep probes out of this short run
         ..Default::default()
     };
-    let mut engine = Engine::new(Rc::clone(&mr), mk("w8a8", degraded_cfg)).unwrap();
+    let mut engine = rig("w8a8", degraded_cfg).engine(mr);
     let min_audits = engine.governor().cfg().min_audits;
     for _ in 0..min_audits {
         engine.governor_mut().record_audit("t", 0.0, -1.0);
@@ -475,51 +340,16 @@ fn prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(
     manifest: &Manifest,
     mr: &Rc<ModelRuntime>,
 ) {
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompts: Vec<Vec<i32>> = goldens
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|g| g.get("prompt_ids").unwrap().as_i32_vec().unwrap())
-        .collect();
+    let prompts = golden_prompts(mr);
     // Duplicate the set: the second copy's admissions share full prefixes.
     let mut many = prompts.clone();
     many.extend(prompts.clone());
 
-    let run = |prefix: PrefixCacheConfig| {
-        let cfg = EngineConfig {
-            verifier: "fp32".into(),
-            drafter: DrafterKind::Ngram(NgramConfig {
-                gamma: 3,
-                adaptive: false,
-                ..Default::default()
-            }),
-            batch: 4,
-            gamma: 3,
-            seed: 17,
-            policy: Default::default(),
-            elastic: true,
-            governor: Default::default(),
-            prefix,
-        };
-        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-        for p in &many {
-            engine.submit(
-                p.clone(),
-                GenParams { max_new: 16, stop_at_eos: false, ..GenParams::default() },
-                "t",
-            );
-        }
-        let mut done = engine.run_to_completion().unwrap();
-        done.sort_by_key(|c| c.id);
-        let tokens: Vec<Vec<i32>> = done.into_iter().map(|c| c.tokens).collect();
-        (tokens, engine)
-    };
-
-    let (cold_tokens, cold_engine) = run(PrefixCacheConfig::off());
+    let rig = TestRig::new().gamma(3).batch(4).seed(17);
+    let (cold_tokens, cold_engine) =
+        rig.clone().prefix(PrefixCacheConfig::off()).run(mr, &many, 16);
     let warm_cfg = PrefixCacheConfig { min_prefix: 2, ..Default::default() };
-    let (warm_tokens, warm_engine) = run(warm_cfg);
+    let (warm_tokens, warm_engine) = rig.prefix(warm_cfg).run(mr, &many, 16);
 
     assert_eq!(
         cold_tokens, warm_tokens,
@@ -530,12 +360,18 @@ fn prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(
     assert!(ps.hits > 0, "duplicated prompts produced no prefix hits");
     assert!(ps.hit_tokens > 0, "hits served no tokens");
     assert!(ps.segments > 0 && ps.resident_bytes > 0);
+    assert!(ps.resident_pages > 0, "paged store holds pages, not rows");
     assert_eq!(ps.leases, 0, "admission leaked a prefix lease");
     // The gauge pipeline the stats endpoint reads must agree with the cache.
     assert_eq!(
         warm_engine.metrics.gauge(names::PREFIX_HITS) as u64,
         ps.hits,
         "published hit gauge diverged from the cache's own counter"
+    );
+    assert_eq!(
+        warm_engine.metrics.gauge(names::PREFIX_RESIDENT_PAGES) as usize,
+        ps.resident_pages,
+        "published page gauge diverged from the cache's own counter"
     );
     let (hits, hit_tokens) = (ps.hits, ps.hit_tokens);
 
@@ -561,15 +397,171 @@ fn prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(
     );
 }
 
+/// The paged-store acceptance gate, on real artifacts:
+///
+/// 1. **Page-granular residency** — one cached prompt pins exactly
+///    `ceil(len/page_tokens)` pool pages, not a `max_seq` row.
+/// 2. **Page sharing** — two admissions diverging after a shared prefix
+///    reference the same physical pages (share ratio > 1) with zero pool
+///    copies for the shared extent, and a duplicate admission copies
+///    nothing at all.
+/// 3. **Mid-stream snapshots** — a multi-turn resubmit
+///    (`prompt ++ answer ++ follow-up`) admits against the finished
+///    request's extended run, hitting past the original prompt, and the
+///    committed stream stays bit-identical to a cold engine replaying the
+///    same two submissions.
+/// 4. **Boot warm-up** — `Engine::warm_prefix` caches a template without
+///    touching lookup counters, and the very first admission after it hits.
+fn paged_store_pins_pages_shares_them_and_serves_mid_stream(mr: &Rc<ModelRuntime>) {
+    let prompts = golden_prompts(mr);
+    let p0 = prompts[0].clone();
+    // Small pages so even short golden prompts span several and share at
+    // least one full page across divergent siblings.
+    let page = 4usize;
+    let mcfg = mr.cfg().clone();
+    let page_pair = 2 * mcfg.n_layers * mcfg.n_heads * page * mcfg.head_dim
+        * std::mem::size_of::<f32>();
+    let pcfg = |mid_stream: bool| PrefixCacheConfig {
+        min_prefix: 2,
+        page_tokens: page,
+        mid_stream,
+        ..Default::default()
+    };
+
+    // 1 + 2a. One prompt cached (mid-stream off), then a duplicate: pages
+    // tile the prompt, and the duplicate admission copies nothing.
+    let rig = TestRig::new().gamma(3).batch(4).seed(21).prefix(pcfg(false));
+    let (_, engine) = rig.clone().run(mr, &[p0.clone(), p0.clone()], 8);
+    let ps = engine.prefix_cache().stats();
+    let want_pages = p0.len().div_ceil(page);
+    assert_eq!(ps.segments, 1, "duplicate key must not add a run");
+    assert_eq!(
+        ps.resident_pages, want_pages,
+        "a cached prefix pins ceil(len/page_tokens) pages"
+    );
+    assert_eq!(
+        ps.resident_bytes,
+        want_pages * page_pair,
+        "residency is page-granular"
+    );
+    assert!(
+        ps.resident_bytes < mr.cache_row_bytes(mcfg.n_layers),
+        "paged residency must undercut the old whole-row segment"
+    );
+    assert_eq!(
+        ps.copied_pages, want_pages as u64,
+        "the duplicate admission must not copy pool pages"
+    );
+    assert!(ps.hits >= 1, "duplicate admission must hit");
+
+    // 2b. Two prompts diverging after a shared prefix: the shared full
+    // pages are referenced by both runs, not copied — and outputs stay
+    // bit-identical to a cold engine.
+    let mut pa = p0.clone();
+    let mut pb = p0.clone();
+    pa.push(5);
+    pb.push(6); // distinct single-token bodies after the shared "template"
+    let pair = [pa.clone(), pb.clone()];
+    let (warm_tokens, engine) = rig.clone().run(mr, &pair, 8);
+    let (cold_tokens, _) =
+        rig.clone().prefix(PrefixCacheConfig::off()).run(mr, &pair, 8);
+    assert_eq!(warm_tokens, cold_tokens, "page sharing changed the stream");
+    let ps = engine.prefix_cache().stats();
+    assert_eq!(ps.segments, 2);
+    assert!(
+        ps.shared_pages >= (p0.len() / page) as u64,
+        "divergent siblings must share the template's full pages"
+    );
+    assert!(
+        ps.page_share_ratio() > 1.0,
+        "one physical page must back both runs (ratio {})",
+        ps.page_share_ratio()
+    );
+    assert!(
+        (ps.copied_pages as usize) < 2 * pa.len().div_ceil(page),
+        "the second admission must not re-copy the shared prefix"
+    );
+
+    // 3. Mid-stream: turn 1, then a follow-up over the full transcript.
+    let params = |max_new: usize| GenParams {
+        max_new,
+        stop_at_eos: false,
+        ..GenParams::default()
+    };
+    let rig_ms = TestRig::new().gamma(3).batch(1).seed(22).prefix(pcfg(true));
+    let mut warm = rig_ms.engine(mr);
+    warm.submit(p0.clone(), params(24), "t");
+    let c1 = warm.run_to_completion().unwrap().remove(0);
+    assert!(!c1.tokens.is_empty());
+    let mut follow = p0.clone();
+    follow.extend_from_slice(&c1.tokens);
+    follow.push(7); // the next user turn
+    warm.submit(follow.clone(), params(8), "t");
+    let c2_warm = warm.run_to_completion().unwrap().remove(0);
+    let ps = warm.prefix_cache().stats();
+    assert!(
+        ps.mid_stream_hit_tokens > 0,
+        "follow-up admission must hit the mid-stream run"
+    );
+    assert!(
+        ps.hit_tokens as usize > p0.len(),
+        "mid-stream hit must reach past the original prompt \
+         ({} hit tokens vs {}-token prompt)",
+        ps.hit_tokens,
+        p0.len()
+    );
+    // Bit-identity across the whole conversation: a cold engine replaying
+    // both submissions commits the same streams.
+    let mut cold = rig_ms.clone().prefix(PrefixCacheConfig::off()).engine(mr);
+    cold.submit(p0.clone(), params(24), "t");
+    let c1_cold = cold.run_to_completion().unwrap().remove(0);
+    assert_eq!(c1.tokens, c1_cold.tokens);
+    cold.submit(follow, params(8), "t");
+    let c2_cold = cold.run_to_completion().unwrap().remove(0);
+    assert_eq!(
+        c2_warm.tokens, c2_cold.tokens,
+        "mid-stream reuse changed the committed stream"
+    );
+
+    // 4. Boot warm-up: cache the template before any traffic; the first
+    // admission hits and commits the same tokens as a cold first turn.
+    let mut warmed = TestRig::new().gamma(3).batch(1).seed(23).prefix(pcfg(true)).engine(mr);
+    let cached = warmed.warm_prefix(&[(p0.clone(), "t".to_string())]).unwrap();
+    assert_eq!(cached, 1);
+    let ps0 = warmed.prefix_cache().stats();
+    assert_eq!((ps0.hits, ps0.misses), (0, 0), "warm-up is not lookup traffic");
+    assert!(ps0.resident_pages > 0);
+    warmed.submit(p0.clone(), params(8), "t");
+    let cw = warmed.run_to_completion().unwrap().remove(0);
+    let ps1 = warmed.prefix_cache().stats();
+    assert_eq!(ps1.hits, 1, "first admission after warm-up must hit");
+    assert_eq!(
+        ps1.hit_tokens as usize,
+        p0.len() - 1,
+        "warmed template serves the whole prompt (capped at len-1)"
+    );
+    let (cold_first, _) = TestRig::new()
+        .gamma(3)
+        .batch(1)
+        .seed(23)
+        .prefix(PrefixCacheConfig::off())
+        .run(mr, &[p0.clone()], 8);
+    assert_eq!(cw.tokens, cold_first[0], "warmed admission changed the stream");
+    eprintln!(
+        "   paged: {} pages/prompt, share ratio {:.2}, {} mid-stream hit tokens",
+        want_pages,
+        ps.page_share_ratio(),
+        ps.mid_stream_hit_tokens
+    );
+}
+
 /// An over-long prompt must be visibly truncated: flagged on the
 /// completion's stats, counted in the metrics registry, and still served.
 fn prompt_truncation_is_flagged_not_silent(mr: &Rc<ModelRuntime>) {
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompt = goldens.idx(0).unwrap().get("prompt_ids").unwrap().as_i32_vec().unwrap();
+    let prompt = golden_prompts(mr).remove(0);
     let p = mr.cfg().prefill_len;
 
-    let mut engine = Engine::new(Rc::clone(&mr), EngineConfig::ngram(1, 3)).unwrap();
+    let mut engine = TestRig::new().batch(1).gamma(3).engine(mr);
     // Tile the golden prompt past the prefill window.
     let long: Vec<i32> = prompt.iter().cycle().take(p + 7).copied().collect();
     engine.submit(
@@ -592,34 +584,14 @@ fn prompt_truncation_is_flagged_not_silent(mr: &Rc<ModelRuntime>) {
 }
 
 fn pruned_drafter_runs_and_verifier_stays_lossless(mr: &Rc<ModelRuntime>) {
-    let mr = mr.clone();
-    let goldens = json::parse_file(&mr.entry.goldens_path).expect("goldens");
-    let prompt = goldens.idx(0).unwrap().get("prompt_ids").unwrap().as_i32_vec().unwrap();
-
-    let gen = |drafter: DrafterKind| {
-        let cfg = EngineConfig {
-            verifier: "fp32".into(),
-            drafter,
-            batch: 1,
-            gamma: 3,
-            seed: 5,
-            policy: Default::default(),
-            elastic: true,
-            governor: Default::default(),
-            prefix: Default::default(),
-        };
-        let mut engine = Engine::new(Rc::clone(&mr), cfg).unwrap();
-        engine.submit(
-            prompt.clone(),
-            GenParams { max_new: 16, stop_at_eos: false, ..GenParams::default() },
-            "t",
-        );
-        engine.run_to_completion().unwrap().remove(0)
-    };
-    let vanilla = gen(DrafterKind::Vanilla);
-    let pruned = gen(DrafterKind::Pruned("pruned75".into()));
+    let prompt = golden_prompts(mr).remove(0);
+    let rig = TestRig::new().batch(1).gamma(3).seed(5);
+    let (vanilla, _) = rig.clone().vanilla().run(mr, &[prompt.clone()], 16);
+    let (pruned, _) = rig
+        .drafter(DrafterKind::Pruned("pruned75".into()))
+        .run(mr, &[prompt.clone()], 16);
     assert_eq!(
-        vanilla.tokens, pruned.tokens,
+        vanilla, pruned,
         "pruned drafting must not change greedy output (verifier decides)"
     );
 }

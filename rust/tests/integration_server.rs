@@ -8,25 +8,15 @@
 //! client per process, so all phases share the engine. Skips when artifacts
 //! are absent (run `make artifacts`).
 
-use std::net::SocketAddr;
-use std::path::PathBuf;
+mod common;
 
+use std::net::SocketAddr;
+
+use common::artifacts_root;
 use quasar::coordinator::{EngineConfig, EngineHandle};
 use quasar::server::Client;
 use quasar::tokenizer::Tokenizer;
 use quasar::util::json::Json;
-
-fn artifacts_root() -> Option<PathBuf> {
-    let root = std::env::var("QUASAR_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"));
-    if root.join("manifest.json").exists() {
-        Some(root)
-    } else {
-        eprintln!("[skip] no artifacts at {root:?} — run `make artifacts`");
-        None
-    }
-}
 
 const CLIENTS: usize = 8;
 const ROUNDS: usize = 3;

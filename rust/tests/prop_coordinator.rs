@@ -1,16 +1,16 @@
 //! Property tests over coordinator/spec invariants (pure logic — no PJRT),
-//! using the in-repo `util::prop` micro-framework.
+//! using the in-repo `util::prop` micro-framework and the shared mock-chunk
+//! harness in `tests/common`.
 
-use std::collections::BTreeMap;
+mod common;
 
+use common::sim::{check_equivalent, run_equivalence, sim_perf, Sim, SIM_CHUNK, SIM_VOCAB};
 use quasar::coordinator::{
-    plan_step, BatchGroup, CallLog, CallRecord, FnKind, GenParams, Governor, GovernorConfig,
-    Lease, PlanCtx, PlanRow, PrefixCache, PrefixCacheConfig, Priority, Request, Route,
-    SchedPolicy, Scheduler, Transition, VariantCtx,
+    BatchGroup, FnKind, GenParams, Governor, GovernorConfig, Lease, PrefixCache,
+    PrefixCacheConfig, Priority, Request, Route, SchedPolicy, Scheduler, Transition,
 };
-use quasar::perfmodel::PerfModel;
 use quasar::prop_assert;
-use quasar::runtime::{CostModelCfg, ModelCfg, Tensor};
+use quasar::runtime::Tensor;
 use quasar::spec::{verify_draft, Draft, NgramIndex};
 use quasar::util::prop::{ok, prop_check};
 use quasar::util::rng::Pcg;
@@ -324,302 +324,10 @@ fn tokenizer_roundtrips_vocab_sentences() {
 // ---------------------------------------------------------------------
 // Elastic-plan equivalence: gather -> execute -> scatter through planned
 // sub-batches must commit token streams bit-identical to the monolithic
-// full-bucket step. The "model" here is a deterministic mock chunk function
-// over real BatchGroup / Tensor movement, so the property exercises the
-// actual planning and KV row plumbing without PJRT.
+// full-bucket step. The harness (mock chunk + Sim engine) lives in
+// `tests/common::sim` — real BatchGroup / Tensor movement and the real
+// planner, no PJRT.
 // ---------------------------------------------------------------------
-
-const SIM_L: usize = 2;
-const SIM_H: usize = 2;
-const SIM_S: usize = 64;
-const SIM_HD: usize = 2;
-const SIM_VOCAB: usize = 4;
-const SIM_CHUNK: usize = 5; // verify chunk (gamma 4)
-
-fn sim_device(bf16_ops: f64, launch_s: f64) -> CostModelCfg {
-    CostModelCfg {
-        device: "sim".into(),
-        hbm_bw_bytes_per_s: 1.6e12,
-        int8_ops_per_s: 2.0 * bf16_ops,
-        bf16_ops_per_s: bf16_ops,
-        bytes_per_weight: BTreeMap::from([("fp32".to_string(), 2.0)]),
-        kernel_launch_s: launch_s,
-        drafter_cost_per_token_s: 1e-6,
-    }
-}
-
-fn sim_model_cfg(d_model: usize, max_seq: usize) -> ModelCfg {
-    ModelCfg {
-        name: "sim".into(), vocab_size: 64, d_model, n_layers: SIM_L,
-        n_heads: 8, ffn_dim: 2 * d_model, max_seq, prefill_len: 16,
-        gamma_max: SIM_CHUNK - 1, head_dim: 64,
-    }
-}
-
-/// Three pricing regimes so the planner's *choice* varies across cases
-/// while correctness must not: KV-bound (shrinks), compute-starved
-/// (splits), weight-bound (stays monolithic-shaped).
-fn sim_perf(sel: u64) -> PerfModel {
-    match sel % 3 {
-        0 => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(32, 4096)),
-        1 => PerfModel::new(sim_device(1e12, 1e-9), sim_model_cfg(32, 4096)),
-        _ => PerfModel::new(sim_device(188e12, 2e-5), sim_model_cfg(2048, 64)),
-    }
-}
-
-fn tset(t: &mut Tensor<f32>, idx: &[usize], val: f32) {
-    let strides = t.strides();
-    let off: usize = idx.iter().zip(&strides).map(|(&i, &s)| i * s).sum();
-    t.data[off] = val;
-}
-
-/// Deterministic row-independent "transformer chunk": writes each row's
-/// tokens into the cache at `pos..pos+chunk` (every layer/head/dim carries
-/// the token value) and emits one-hot logits whose argmax depends on the
-/// row's entire cache prefix — so a wrong row map, stale gather, or wrong
-/// position offset changes the output stream. `flip` models a *degraded
-/// quantized variant*: same KV writes, but every argmax shifted by one —
-/// zero top-1 agreement with the reference, which is what the fidelity
-/// governor must catch.
-fn mock_chunk(
-    k: &mut Tensor<f32>,
-    v: &mut Tensor<f32>,
-    tokens: &[i32],
-    pos: &[i32],
-    bucket: usize,
-    chunk: usize,
-    flip: bool,
-) -> Tensor<f32> {
-    let mut logits = Tensor::<f32>::zeros(&[bucket, chunk, SIM_VOCAB]);
-    for r in 0..bucket {
-        let p0 = pos[r] as usize;
-        for j in 0..chunk {
-            let t = tokens[r * chunk + j] as f32;
-            for l in 0..SIM_L {
-                for h in 0..SIM_H {
-                    for d in 0..SIM_HD {
-                        tset(k, &[l, r, h, p0 + j, d], t);
-                        tset(v, &[l, r, h, p0 + j, d], t + 0.5);
-                    }
-                }
-            }
-            let prefix: f32 = (0..=p0 + j).map(|p| k.at(&[0, r, 0, p, 0])).sum();
-            // rem_euclid: padding rows of a dirty scratch can sum negative
-            let mut next = (prefix as i64 * 31 + (p0 + j) as i64 * 7)
-                .rem_euclid(SIM_VOCAB as i64) as usize;
-            if flip {
-                next = (next + 1) % SIM_VOCAB;
-            }
-            tset(&mut logits, &[r, j, next], 1.0);
-        }
-    }
-    logits
-}
-
-struct SimReq {
-    row: usize,
-    committed: Vec<i32>,
-    cached: usize,
-}
-
-/// Minimal engine over the mock chunk: monolithic mode reproduces the
-/// pre-planner step (one full-bucket call, whole-cache adopt), elastic mode
-/// runs the real plan -> gather -> execute -> scatter pipeline.
-struct Sim {
-    group: BatchGroup,
-    reqs: Vec<SimReq>,
-    log: CallLog,
-    perf: PerfModel,
-    full: usize,
-    elastic: bool,
-    /// Degraded-variant mode: the mock chunk flips every argmax (see
-    /// `mock_chunk`). Toggled per step by the governed-sim test.
-    flip: bool,
-}
-
-impl Sim {
-    fn new(n_req: usize, full: usize, perf: PerfModel, elastic: bool) -> Sim {
-        let mut group = BatchGroup::new(SIM_L, full, SIM_H, SIM_S, SIM_HD);
-        let mut reqs = Vec::new();
-        for i in 0..n_req {
-            let prompt_tok = (i % SIM_VOCAB) as i32;
-            let mut k1 = Tensor::<f32>::zeros(&[SIM_L, 1, SIM_H, SIM_S, SIM_HD]);
-            let mut v1 = k1.clone();
-            for l in 0..SIM_L {
-                for h in 0..SIM_H {
-                    for d in 0..SIM_HD {
-                        tset(&mut k1, &[l, 0, h, 0, d], prompt_tok as f32);
-                        tset(&mut v1, &[l, 0, h, 0, d], prompt_tok as f32 + 0.5);
-                    }
-                }
-            }
-            let row = group.join(i, &k1, &v1).unwrap();
-            reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
-        }
-        Sim { group, reqs, log: CallLog::default(), perf, full, elastic, flip: false }
-    }
-
-    fn commit(req: &mut SimReq, draft: &[i32], logits: &Tensor<f32>, lrow: usize) {
-        let d = Draft::point_mass(draft.to_vec());
-        let out = verify_draft(&d, |j| logits.row(&[lrow, j]), 0.0, &mut Pcg::seeded(0));
-        let mut commit: Vec<i32> = d.tokens[..out.accepted].to_vec();
-        commit.push(out.next_token);
-        req.cached += commit.len();
-        req.committed.extend_from_slice(&commit);
-    }
-
-    fn record(&mut self, fn_kind: FnKind, bucket: usize, chunk: usize, rows: usize,
-              tokens_used: usize, useful: usize) {
-        self.log.record(CallRecord {
-            variant: "fp32".into(),
-            fn_kind,
-            batch: bucket,
-            n_layers: SIM_L,
-            active_rows: rows,
-            tokens_used,
-            chunk_len: chunk,
-            useful_tokens: useful,
-            wall_s: 0.0,
-        });
-    }
-
-    fn step(&mut self, drafts: &[Vec<i32>]) {
-        assert_eq!(drafts.len(), self.reqs.len());
-        if self.elastic {
-            self.step_elastic(drafts)
-        } else {
-            self.step_mono(drafts)
-        }
-    }
-
-    /// Seed-engine shape: one call at the configured bucket, token block
-    /// indexed by group row, whole-cache adopt.
-    fn step_mono(&mut self, drafts: &[Vec<i32>]) {
-        let any = drafts.iter().any(|d| !d.is_empty());
-        let (fn_kind, chunk) = if any { (FnKind::Verify, SIM_CHUNK) } else { (FnKind::Decode, 1) };
-        let b = self.full;
-        let mut tokens = vec![0i32; b * chunk];
-        let mut pos = vec![0i32; b];
-        for (req, draft) in self.reqs.iter().zip(drafts) {
-            tokens[req.row * chunk] = *req.committed.last().unwrap();
-            for (j, &t) in draft.iter().enumerate().take(chunk - 1) {
-                tokens[req.row * chunk + 1 + j] = t;
-            }
-            pos[req.row] = req.cached as i32;
-        }
-        let mut k = self.group.k.clone();
-        let mut v = self.group.v.clone();
-        let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk, self.flip);
-        self.group.k = k; // whole-cache adopt, garbage rows included
-        self.group.v = v;
-        let used = drafts.iter().map(|d| d.len() + 1).max().unwrap_or(1);
-        let useful: usize = drafts.iter().map(|d| d.len() + 1).sum();
-        self.record(fn_kind, b, chunk, self.reqs.len(), used, useful);
-        for (i, draft) in drafts.iter().enumerate() {
-            let lrow = self.reqs[i].row;
-            Self::commit(&mut self.reqs[i], draft, &logits, lrow);
-        }
-    }
-
-    /// The refactored shape: plan, then gather/execute/scatter per
-    /// sub-batch against dirty scratch caches.
-    fn step_elastic(&mut self, drafts: &[Vec<i32>]) {
-        let rows: Vec<PlanRow> =
-            drafts.iter().map(|d| PlanRow::new(d.len(), 0)).collect();
-        let buckets = [1usize, 2, 4];
-        let plan = {
-            let variants = [VariantCtx {
-                name: "fp32",
-                verify_buckets: &buckets,
-                decode_buckets: &buckets,
-            }];
-            let ctx = PlanCtx {
-                perf: &self.perf,
-                variants: &variants,
-                n_layers: SIM_L,
-                full_bucket: self.full,
-                verify_chunk: SIM_CHUNK,
-                elastic: true,
-            };
-            plan_step(&ctx, &rows).unwrap()
-        };
-        assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
-        for sb in &plan.sub_batches {
-            let (bucket, chunk) = (sb.bucket, sb.chunk);
-            let row_map: Vec<usize> = sb.rows.iter().map(|&di| self.reqs[di].row).collect();
-            // dirty pooled scratch: gather must overwrite everything read
-            let mut sk = Tensor::<f32>::zeros(&[SIM_L, bucket, SIM_H, SIM_S, SIM_HD]);
-            sk.data.iter_mut().for_each(|x| *x = -7.0);
-            let mut sv = sk.clone();
-            self.group.gather_rows(&row_map, &mut sk, &mut sv).unwrap();
-            let mut tokens = vec![0i32; bucket * chunk];
-            let mut pos = vec![0i32; bucket];
-            for (i, &di) in sb.rows.iter().enumerate() {
-                let req = &self.reqs[di];
-                tokens[i * chunk] = *req.committed.last().unwrap();
-                for (j, &t) in drafts[di].iter().enumerate().take(chunk - 1) {
-                    tokens[i * chunk + 1 + j] = t;
-                }
-                pos[i] = req.cached as i32;
-            }
-            let logits = mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk, self.flip);
-            self.group.scatter_rows(&row_map, &sk, &sv).unwrap();
-            self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
-                        sb.useful_tokens);
-            for (i, &di) in sb.rows.iter().enumerate() {
-                Self::commit(&mut self.reqs[di], &drafts[di], &logits, i);
-            }
-        }
-    }
-}
-
-/// Drive monolithic and elastic sims with identical drafts; compare streams
-/// and the committed cache prefix of every leased row.
-fn run_equivalence(n_req: usize, perf_sel: u64, seed: u64, steps: usize) -> (Sim, Sim) {
-    let full = 4usize;
-    let mut mono = Sim::new(n_req, full, sim_perf(perf_sel), false);
-    let mut ela = Sim::new(n_req, full, sim_perf(perf_sel), true);
-    let mut rng = Pcg::seeded(seed ^ 0xE1A5);
-    for _ in 0..steps {
-        let drafts: Vec<Vec<i32>> = (0..n_req)
-            .map(|_| {
-                let len = rng.usize_below(SIM_CHUNK);
-                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
-            })
-            .collect();
-        mono.step(&drafts);
-        ela.step(&drafts);
-    }
-    (mono, ela)
-}
-
-fn check_equivalent(mono: &Sim, ela: &Sim) -> Result<(), String> {
-    for (i, (m, e)) in mono.reqs.iter().zip(&ela.reqs).enumerate() {
-        prop_assert!(
-            m.committed == e.committed,
-            "req {i} streams diverged:\n  mono {:?}\n  ela  {:?}",
-            m.committed, e.committed
-        );
-        prop_assert!(m.cached == e.cached, "req {i} cached diverged");
-        // committed KV prefix must be bit-identical (positions beyond
-        // `cached` hold unread speculative leftovers and may differ)
-        for l in 0..SIM_L {
-            for h in 0..SIM_H {
-                for p in 0..m.cached {
-                    for d in 0..SIM_HD {
-                        let a = mono.group.k.at(&[l, m.row, h, p, d]);
-                        let b = ela.group.k.at(&[l, e.row, h, p, d]);
-                        prop_assert!(a == b, "req {i} kv prefix diverged at {l}/{h}/{p}/{d}");
-                        let a = mono.group.v.at(&[l, m.row, h, p, d]);
-                        let b = ela.group.v.at(&[l, e.row, h, p, d]);
-                        prop_assert!(a == b, "req {i} v prefix diverged at {l}/{h}/{p}/{d}");
-                    }
-                }
-            }
-        }
-    }
-    ok()
-}
 
 #[test]
 fn elastic_plan_commits_identical_streams_to_monolithic() {
@@ -677,10 +385,11 @@ fn mixed_workload_splits_into_cheaper_sub_batches() {
 
 // ---------------------------------------------------------------------
 // Fidelity governor: the precision-policy state machine and its coupling
-// to committed output. The quantized variant is modeled by `mock_chunk`'s
-// `flip` mode (every argmax shifted — zero top-1 agreement); audits report
-// agreement 1.0 when the variants coincide and 0.0 when flipped, exactly
-// what the engine's logits comparison would measure on these one-hot rows.
+// to committed output. The quantized variant is modeled by the mock
+// chunk's `flip` mode (every argmax shifted — zero top-1 agreement);
+// audits report agreement 1.0 when the variants coincide and 0.0 when
+// flipped, exactly what the engine's logits comparison would measure on
+// these one-hot rows.
 // ---------------------------------------------------------------------
 
 /// Audits a degraded verifier must demote within a bounded window:
@@ -863,25 +572,60 @@ fn governed_sim_demotes_on_degraded_quant_then_matches_fp32_pinned() {
 }
 
 // ---------------------------------------------------------------------
-// Prefix-cache lease safety (coordinator::prefixcache)
+// Paged prefix cache (coordinator::prefixcache): pool allocator safety and
+// a differential check against the PR-4 whole-row segment semantics.
 // ---------------------------------------------------------------------
 
+const PX_DIMS: [usize; 5] = [2, 1, 2, 32, 4]; // [L, 1, H, S, hd]
+const PX_PAGE: usize = 4; // page_tokens
+const PX_PAGE_BYTES: usize = 2 * 2 * 2 * PX_PAGE * 4 * 4; // k+v pair, f32
+
+/// A source row whose position `s` holds `tokens[s]` (`+0.5` on the v
+/// side) — the shape real KV sharing relies on: identical token prefixes
+/// mean identical bytes, so any matched run must serve exactly the query's
+/// token values.
+fn token_row(tokens: &[i32]) -> (Tensor<f32>, Tensor<f32>) {
+    assert!(tokens.len() <= PX_DIMS[3]);
+    let mut k = Tensor::<f32>::zeros(&PX_DIMS);
+    let mut v = Tensor::<f32>::zeros(&PX_DIMS);
+    let (h_n, s_n, d_n) = (PX_DIMS[2], PX_DIMS[3], PX_DIMS[4]);
+    for l in 0..PX_DIMS[0] {
+        for h in 0..h_n {
+            for (s, &t) in tokens.iter().enumerate() {
+                for d in 0..d_n {
+                    let off = ((l * h_n + h) * s_n + s) * d_n + d;
+                    k.data[off] = t as f32;
+                    v.data[off] = t as f32 + 0.5;
+                }
+            }
+        }
+    }
+    (k, v)
+}
+
+fn lcp_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Satellite: the page-pool allocator under arbitrary interleavings of
+/// lease / extend / release / insert. Invariants checked after every op:
+///
+/// 1. a leased run — and **every page it references** — stays resident, a
+///    splice through it succeeds, and the spliced bytes equal the query's
+///    token coding (so a freed-and-reused or mis-tiled page is caught by
+///    value, not just by id);
+/// 2. lease accounting matches the model exactly, and refcounts return to
+///    zero once everything is released;
+/// 3. every resident run's pages tile `ceil(len/page_tokens)` without
+///    duplicates (page-run token ranges never overlap in the pool), every
+///    referenced page is live, and the pool's `page_refs` / byte / page
+///    accounting is internally consistent;
+/// 4. resident bytes only exceed the budget under lease pressure (checked
+///    at insert ops, the only point eviction runs).
 #[test]
-fn prefix_cache_never_evicts_leased_segments_for_any_interleaving() {
-    // Arbitrary insert / lookup(+hold lease) / release interleavings over a
-    // tiny byte budget (heavy eviction pressure). Invariants checked after
-    // every op:
-    //   1. every outstanding lease's segment is still resident (the evictor
-    //      never frees leased KV), and splicing through it still works;
-    //   2. the outstanding-lease count matches our model exactly;
-    //   3. the cache only exceeds its byte budget while unleased victims
-    //      are unavailable (all-but-newest leased).
-    // At the end, releasing everything and inserting once more drives the
-    // refcounts to zero and the resident bytes back under budget.
-    let dims = [2usize, 1, 2, 8, 4];
-    let row_bytes = 2 * dims.iter().product::<usize>() * 4;
+fn paged_pool_holds_invariants_for_any_interleaving() {
     prop_check(
-        "prefix cache lease safety",
+        "paged pool lease/extend/release/insert safety",
         200,
         |rng| {
             let ops: Vec<u64> = (0..rng.usize_below(60)).map(|_| rng.below(1 << 16)).collect();
@@ -890,81 +634,144 @@ fn prefix_cache_never_evicts_leased_segments_for_any_interleaving() {
         |ops| {
             let mut cache = PrefixCache::new(PrefixCacheConfig {
                 enabled: true,
-                budget_bytes: 2 * row_bytes, // room for two segments
+                budget_bytes: 4 * PX_PAGE_BYTES, // heavy eviction pressure
                 min_prefix: 1,
+                page_tokens: PX_PAGE,
+                mid_stream: true,
             });
-            let (k, v) = (
-                Tensor::<f32>::zeros(&dims),
-                Tensor::<f32>::zeros(&dims),
-            );
-            // Keys drawn from a small alphabet so lookups actually hit.
+            // Keys share a 4-token template spine and branch after it, so
+            // page sharing, tail COW, and partial matches all exercise.
             let key = |sel: u64| -> Vec<i32> {
-                let len = 1 + (sel % 5) as usize;
-                (0..len).map(|i| ((sel / 7 + i as u64) % 3) as i32 + 10).collect()
+                let len = 1 + (sel % 10) as usize;
+                let branch = ((sel / 11) % 3) as i32;
+                (0..len)
+                    .map(|i| if i < 4 { 7 } else { branch * 10 + i as i32 })
+                    .collect()
             };
-            let mut held: Vec<Lease> = Vec::new();
+            let mut held: Vec<(Lease, Vec<i32>)> = Vec::new();
             for &op in ops {
-                match op % 3 {
+                match op % 4 {
                     0 => {
-                        cache.insert("v", &key(op / 3), &k, &v);
+                        // insert
+                        let kk = key(op / 4);
+                        let (k, v) = token_row(&kk);
+                        cache.insert("v", &kk, &k, &v);
                     }
                     1 => {
-                        if let Some(l) = cache.lookup("v", &key(op / 3)) {
-                            held.push(l);
+                        // extend: a strict extension of a (likely cached)
+                        // key — the tail-page in-place/COW path, flagged as
+                        // a mid-stream snapshot with the base as its prompt.
+                        let base_len = key(op / 4).len();
+                        let mut kk = key(op / 4);
+                        kk.extend_from_slice(&[90, 91, 92]);
+                        let (k, v) = token_row(&kk);
+                        cache.insert_from_row("v", &kk, &k, &v, 0, Some(base_len));
+                    }
+                    2 => {
+                        // lease and hold
+                        let q = key(op / 4);
+                        if let Some(l) = cache.lookup("v", &q) {
+                            held.push((l, q));
                         }
                     }
                     _ => {
                         if !held.is_empty() {
-                            let idx = (op as usize / 3) % held.len();
-                            cache.release(held.swap_remove(idx));
+                            let idx = (op as usize / 4) % held.len();
+                            let (l, _) = held.swap_remove(idx);
+                            cache.release(l);
                         }
                     }
                 }
                 let stats = cache.stats();
-                for l in &held {
-                    prop_assert!(
-                        cache.has_segment(l.id()),
-                        "leased segment {} evicted (op {op})",
-                        l.id()
-                    );
-                    let mut dk = Tensor::<f32>::zeros(&dims);
-                    let mut dv = Tensor::<f32>::zeros(&dims);
+                // 1. leased runs + their pages resident; spliced content
+                //    equals the query's token coding.
+                for (l, q) in &held {
+                    prop_assert!(cache.has_run(l.id()), "leased run {} evicted", l.id());
+                    for pid in cache.run_pages(l.id()).expect("leased run resident") {
+                        prop_assert!(cache.has_page(pid), "leased page {pid} freed");
+                    }
+                    let mut dk = Tensor::<f32>::zeros(&PX_DIMS);
+                    let mut dv = Tensor::<f32>::zeros(&PX_DIMS);
                     prop_assert!(
                         cache.splice(l, &mut dk, &mut dv).is_ok(),
                         "splice through live lease {} failed",
                         l.id()
                     );
+                    for s in 0..l.len() {
+                        prop_assert!(
+                            dk.at(&[0, 0, 0, s, 0]) == q[s] as f32
+                                && dv.at(&[1, 0, 1, s, 2]) == q[s] as f32 + 0.5,
+                            "spliced bytes diverged from the matched tokens at {s}"
+                        );
+                    }
+                    for s in l.len()..PX_DIMS[3] {
+                        prop_assert!(
+                            dk.at(&[0, 0, 0, s, 0]) == 0.0,
+                            "splice leaked past the match at {s}"
+                        );
+                    }
                 }
+                // 2. lease accounting.
                 prop_assert!(
                     stats.leases == held.len(),
                     "lease accounting drifted: cache {} vs model {}",
                     stats.leases,
                     held.len()
                 );
-                // Right after an insert (the only point eviction runs), the
-                // budget may only be exceeded under lease pressure: every
-                // resident segment except possibly the just-inserted one is
-                // leased. (A later release can leave the cache stale-over-
-                // budget until the next insert — by design — so the check
-                // is tied to insert ops.)
-                if op % 3 == 0 {
-                    let leased_ids: std::collections::BTreeSet<u64> =
-                        held.iter().map(Lease::id).collect();
+                // 3. page-run tiling + pool accounting.
+                let mut total_refs = 0usize;
+                for id in cache.run_ids() {
+                    let pages = cache.run_pages(id).expect("listed run resident");
+                    let len = cache.run_key_len(id).expect("listed run resident");
+                    prop_assert!(
+                        pages.len() == len.div_ceil(PX_PAGE),
+                        "run {id} pages do not tile its {len}-token key"
+                    );
+                    let mut uniq = pages.clone();
+                    uniq.sort_unstable();
+                    uniq.dedup();
+                    prop_assert!(
+                        uniq.len() == pages.len(),
+                        "page token ranges overlap within run {id}"
+                    );
+                    for pid in &pages {
+                        prop_assert!(cache.has_page(*pid), "run {id} references freed page");
+                    }
+                    total_refs += pages.len();
+                }
+                prop_assert!(
+                    total_refs == stats.page_refs,
+                    "page_refs accounting drifted: {} vs {}",
+                    total_refs,
+                    stats.page_refs
+                );
+                prop_assert!(
+                    stats.resident_bytes == stats.resident_pages * PX_PAGE_BYTES,
+                    "byte accounting is not page-granular"
+                );
+                // 4. Right after an insert-type op (the only point eviction
+                //    runs), the budget may only be exceeded under lease
+                //    pressure: every resident run except possibly the
+                //    just-inserted one is leased.
+                if op % 4 <= 1 {
+                    let leased_runs: std::collections::BTreeSet<u64> =
+                        held.iter().map(|(l, _)| l.id()).collect();
                     prop_assert!(
                         stats.resident_bytes <= cache.config().budget_bytes
-                            || stats.segments <= leased_ids.len() + 1,
-                        "over budget ({} bytes, {} segments) without lease \
-                         pressure ({} leased)",
+                            || stats.segments <= leased_runs.len() + 1,
+                        "over budget ({} bytes, {} runs) without lease pressure \
+                         ({} leased)",
                         stats.resident_bytes,
                         stats.segments,
-                        leased_ids.len()
+                        leased_runs.len()
                     );
                 }
             }
             // Drain: refcounts return to zero and eviction can do its job.
-            for l in held.drain(..) {
+            for (l, _) in held.drain(..) {
                 cache.release(l);
             }
+            let (k, v) = token_row(&[99, 99, 99]);
             cache.insert("v", &[99, 99, 99], &k, &v);
             let stats = cache.stats();
             prop_assert!(stats.leases == 0, "refcounts did not return to zero");
@@ -972,6 +779,108 @@ fn prefix_cache_never_evicts_leased_segments_for_any_interleaving() {
                 stats.resident_bytes <= cache.config().budget_bytes,
                 "still over budget ({} bytes) with nothing leased",
                 stats.resident_bytes
+            );
+            ok()
+        },
+    );
+}
+
+/// Satellite: differential test against PR 4's whole-row segment store —
+/// for any insert/lookup sequence (no budget pressure, so hit sets match),
+/// the paged cache must produce the same hit/miss decisions, the same
+/// match lengths, and byte-identical spliced KV as a whole-row oracle,
+/// while never holding more resident bytes than the oracle's
+/// one-`max_seq`-row-per-key footprint.
+#[test]
+fn paged_cache_matches_the_whole_row_segment_oracle() {
+    prop_check(
+        "paged store == whole-row store semantics, fewer bytes",
+        150,
+        |rng| {
+            let ops: Vec<u64> = (0..rng.usize_below(40)).map(|_| rng.below(1 << 16)).collect();
+            ops
+        },
+        |ops| {
+            let min_prefix = 2usize;
+            let mut paged = PrefixCache::new(PrefixCacheConfig {
+                enabled: true,
+                budget_bytes: usize::MAX / 4, // no eviction on either side
+                min_prefix,
+                page_tokens: PX_PAGE,
+                mid_stream: true,
+            });
+            // The oracle: PR-4 semantics. One whole-row copy per distinct
+            // key, longest-common-prefix matching over all stored keys,
+            // prefix-bounded splice.
+            let mut oracle: Vec<(Vec<i32>, Tensor<f32>, Tensor<f32>)> = Vec::new();
+            let key = |sel: u64| -> Vec<i32> {
+                let len = 1 + (sel % 9) as usize;
+                let branch = ((sel / 9) % 4) as i32;
+                (0..len)
+                    .map(|i| if i < 3 { 5 } else { branch * 16 + i as i32 + 1 })
+                    .collect()
+            };
+            for &op in ops {
+                let kk = key(op / 2);
+                if op % 2 == 0 {
+                    let (k, v) = token_row(&kk);
+                    paged.insert("v", &kk, &k, &v);
+                    if kk.len() >= min_prefix && !oracle.iter().any(|(ek, ..)| *ek == kk) {
+                        oracle.push((kk, k, v));
+                    }
+                } else {
+                    let want = oracle
+                        .iter()
+                        .map(|(ek, ..)| lcp_len(ek, &kk))
+                        .max()
+                        .filter(|&m| m >= min_prefix);
+                    match (paged.lookup("v", &kk), want) {
+                        (None, None) => {}
+                        (Some(l), Some(w)) => {
+                            prop_assert!(
+                                l.len() == w,
+                                "match length diverged: paged {} vs oracle {w}",
+                                l.len()
+                            );
+                            let mut pk = Tensor::<f32>::zeros(&PX_DIMS);
+                            let mut pv = Tensor::<f32>::zeros(&PX_DIMS);
+                            paged.splice(&l, &mut pk, &mut pv).map_err(|e| e.to_string())?;
+                            let (_, ok_src, ov_src) = oracle
+                                .iter()
+                                .max_by_key(|(ek, ..)| lcp_len(ek, &kk))
+                                .expect("oracle hit has a source");
+                            let mut qk = Tensor::<f32>::zeros(&PX_DIMS);
+                            let mut qv = Tensor::<f32>::zeros(&PX_DIMS);
+                            qk.copy_seq_prefix_from(ok_src, w);
+                            qv.copy_seq_prefix_from(ov_src, w);
+                            prop_assert!(
+                                pk == qk && pv == qv,
+                                "spliced bytes diverged from the whole-row oracle"
+                            );
+                            paged.release(l);
+                        }
+                        (got, want) => {
+                            let got = got.map(|l| {
+                                let n = l.len();
+                                paged.release(l);
+                                n
+                            });
+                            return Err(format!(
+                                "hit/miss diverged: paged {got:?} vs oracle {want:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            // Same hit set, page-granular residency: the paged store never
+            // exceeds the whole-row store's footprint for these keys.
+            let row_bytes = 2 * PX_DIMS.iter().product::<usize>() * 4;
+            let stats = paged.stats();
+            prop_assert!(
+                stats.resident_bytes <= oracle.len() * row_bytes,
+                "paged resident {} bytes exceeds whole-row {} bytes",
+                stats.resident_bytes,
+                oracle.len() * row_bytes
             );
             ok()
         },
