@@ -10,11 +10,12 @@
 //!         [--n 24] [--clients 8] [--batch 4]`
 
 use std::net::TcpListener;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use quasar::bench::BenchCtx;
+use quasar::bench::{BenchCtx, BenchReport};
 use quasar::coordinator::{EngineConfig, EngineHandle, GovernorConfig};
 use quasar::server::{serve, Client};
 use quasar::util::cli::Cli;
@@ -55,6 +56,8 @@ fn main() {
 struct ClientTally {
     lat: Histogram,
     ttft: Histogram,
+    /// Per-request time-per-output-token: `(latency - ttft) / (tokens - 1)`.
+    tpot: Histogram,
     tokens: u64,
     l_sum: f64,
     done: usize,
@@ -79,6 +82,10 @@ fn run() -> anyhow::Result<()> {
         .flag("no-mid-stream", "disable mid-stream snapshots (prompt-only caching baseline)")
         .flag("warmup", "pre-populate the prefix cache from the shared-prefix templates \
                          before the first client")
+        .flag("no-paged-rows", "copy-based slab batch rows (the A/B reference the paged \
+                                page-table backend is compared against)")
+        .opt("bench-json", None, "directory to write a machine-readable \
+                                  BENCH_<method>.json artifact into")
         .parse_env();
     let n = args.usize("n");
     let clients = args.usize("clients").max(1);
@@ -93,6 +100,8 @@ fn run() -> anyhow::Result<()> {
     let no_prefix_cache = args.has("no-prefix-cache");
     let no_mid_stream = args.has("no-mid-stream");
     let warmup = args.has("warmup");
+    let no_paged_rows = args.has("no-paged-rows");
+    let bench_json = args.get("bench-json").map(PathBuf::from);
 
     // xla_extension tolerates exactly one PJRT client per process, so the
     // two-method comparison re-execs this binary once per method.
@@ -123,6 +132,13 @@ fn run() -> anyhow::Result<()> {
             }
             if warmup {
                 argv.push("--warmup".into());
+            }
+            if no_paged_rows {
+                argv.push("--no-paged-rows".into());
+            }
+            if let Some(dir) = &bench_json {
+                argv.push("--bench-json".into());
+                argv.push(dir.display().to_string());
             }
             let status = std::process::Command::new(&exe).args(&argv).status()?;
             anyhow::ensure!(status.success(), "{m} run failed");
@@ -166,6 +182,7 @@ fn run() -> anyhow::Result<()> {
     cfg.prefix.enabled = !no_prefix_cache;
     cfg.prefix.mid_stream = !no_mid_stream;
     cfg.prefix.page_tokens = page_tokens;
+    cfg.paged_rows = !no_paged_rows;
     let handle = EngineHandle::spawn(
         artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * (n * turns).max(1),
     )?;
@@ -226,14 +243,20 @@ fn run() -> anyhow::Result<()> {
                         ("task", Json::str(task.clone())),
                     ]))?;
                     anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
-                    tally.lat.record(resp.get("latency_s")?.as_f64()?);
-                    tally.ttft.record(resp.get("ttft_s")?.as_f64()?);
+                    let lat_s = resp.get("latency_s")?.as_f64()?;
+                    let ttft_s = resp.get("ttft_s")?.as_f64()?;
+                    tally.lat.record(lat_s);
+                    tally.ttft.record(ttft_s);
                     let toks: Vec<i64> = resp
                         .get("tokens")?
                         .as_arr()?
                         .iter()
                         .map(|t| t.as_i64())
                         .collect::<Result<_, _>>()?;
+                    tally.tpot.record(
+                        (lat_s - ttft_s).max(0.0)
+                            / toks.len().saturating_sub(1).max(1) as f64,
+                    );
                     tally.checksum ^= fnv_request(i * turns + turn, &toks);
                     tally.tokens += toks.len() as u64;
                     tally.l_sum += resp.get("accept_len")?.as_f64()?;
@@ -251,6 +274,7 @@ fn run() -> anyhow::Result<()> {
         let t = j.join().expect("client thread panicked")?;
         total.lat.merge(&t.lat);
         total.ttft.merge(&t.ttft);
+        total.tpot.merge(&t.tpot);
         total.tokens += t.tokens;
         total.l_sum += t.l_sum;
         total.done += t.done;
@@ -323,6 +347,20 @@ fn run() -> anyhow::Result<()> {
              prefix.get("segments")?.as_i64()?,
              prefix.get("page_share_ratio")?.as_f64()?,
              prefix.get("evictions")?.as_i64()?);
+    let kv = stats.get("kv")?;
+    let paged = kv.get("paged_rows")?.as_bool()?;
+    let mib = (1u64 << 20) as f64;
+    println!("  kv rows             {} backend, {:.1} MiB resident (peak {:.1} MiB)",
+             if paged { "paged" } else { "copy" },
+             kv.get("resident_bytes")?.as_f64()? / mib,
+             kv.get("resident_peak_bytes")?.as_f64()? / mib);
+    println!("                      {} shared / {} copied pages, {} tail copies, \
+              {:.4}s copy saved ({:.4}s prefill saved)",
+             kv.get("row_shared_pages")?.as_i64()?,
+             kv.get("row_copied_pages")?.as_i64()?,
+             kv.get("row_tail_copies")?.as_i64()?,
+             kv.get("copy_saved_s")?.as_f64()?,
+             prefix.get("prefill_saved_s")?.as_f64()?);
     let truncated = stats.get("prompt_truncated")?.as_i64()?;
     if truncated > 0 {
         println!("  prompts truncated   {truncated}");
@@ -331,16 +369,87 @@ fn run() -> anyhow::Result<()> {
              stats.get("sched_delay_s")?.as_f64()? * 1e3);
     println!("  request latency     {}", total.lat.summary_ms());
     println!("  ttft                {}", total.ttft.summary_ms());
-    // Machine-readable lines for the CI warm-vs-cold smoke: identical
-    // checksums across cache-on/cache-off runs prove bit-identity; a
-    // non-zero hit rate proves the warm run actually reused prefixes; the
-    // mid-stream token count proves multi-turn resubmits hit past their
-    // original prompts.
+    println!("  tpot                {}", total.tpot.summary_ms());
+    // Machine-readable lines for the CI warm-vs-cold and paged-vs-copy
+    // smokes: identical checksums across cache-on/cache-off (and paged/copy)
+    // runs prove bit-identity; a non-zero hit rate proves the warm run
+    // actually reused prefixes; the mid-stream token count proves multi-turn
+    // resubmits hit past their original prompts; the peak-resident and
+    // copied-page counters gate the zero-copy claims.
     println!("output_checksum={:016x}", total.checksum);
     println!("prefix_hit_rate={hit_rate:.4}");
     println!(
         "prefix_mid_stream_hit_tokens={}",
         prefix.get("mid_stream_hit_tokens")?.as_i64()?
     );
+    println!("paged_rows={}", paged as u8);
+    println!(
+        "kv_resident_peak_bytes={}",
+        kv.get("resident_peak_bytes")?.as_i64()?
+    );
+    println!(
+        "kv_row_copied_pages={}",
+        kv.get("row_copied_pages")?.as_i64()?
+    );
+
+    if let Some(dir) = &bench_json {
+        let scenario = format!(
+            "{method}{}",
+            if no_paged_rows { "_copyrows" } else { "" }
+        );
+        let mut r = BenchReport::new(&scenario);
+        r.text("method", &method)
+            .flag("paged_rows", paged)
+            .num("requests", (n * turns) as f64)
+            .num("clients", clients as f64)
+            .num("batch", batch as f64)
+            .num("turns", turns as f64)
+            .num("wall_s", wall)
+            .num("tokens", total.tokens as f64)
+            .num("throughput_tok_s", total.tokens as f64 / wall.max(1e-12))
+            .num("mean_accept_len", total.l_sum / n as f64)
+            .num("latency_p50_s", total.lat.p50())
+            .num("latency_p95_s", total.lat.p95())
+            .num("ttft_p50_s", total.ttft.p50())
+            .num("ttft_p95_s", total.ttft.p95())
+            .num("tpot_p50_s", total.tpot.p50())
+            .num("tpot_p95_s", total.tpot.p95())
+            .num("chunk_efficiency", stats.get("chunk_efficiency")?.as_f64()?)
+            .num("batch_occupancy", stats.get("batch_occupancy")?.as_f64()?)
+            .num("prefix_hit_rate", hit_rate)
+            .num(
+                "prefix_mid_stream_hit_tokens",
+                prefix.get("mid_stream_hit_tokens")?.as_f64()?,
+            )
+            .num(
+                "prefix_resident_pages",
+                prefix.get("resident_pages")?.as_f64()?,
+            )
+            .num(
+                "prefill_saved_s",
+                prefix.get("prefill_saved_s")?.as_f64()?,
+            )
+            .num("kv_resident_bytes", kv.get("resident_bytes")?.as_f64()?)
+            .num(
+                "kv_resident_peak_bytes",
+                kv.get("resident_peak_bytes")?.as_f64()?,
+            )
+            .num(
+                "kv_row_shared_pages",
+                kv.get("row_shared_pages")?.as_f64()?,
+            )
+            .num(
+                "kv_row_copied_pages",
+                kv.get("row_copied_pages")?.as_f64()?,
+            )
+            .num(
+                "kv_row_tail_copies",
+                kv.get("row_tail_copies")?.as_f64()?,
+            )
+            .num("kv_copy_saved_s", kv.get("copy_saved_s")?.as_f64()?)
+            .text("output_checksum", &format!("{:016x}", total.checksum));
+        let path = r.write_to(dir)?;
+        println!("bench_json={}", path.display());
+    }
     Ok(())
 }

@@ -54,6 +54,7 @@ fn run() -> anyhow::Result<()> {
             elastic: true,
             governor: Default::default(),
             prefix: Default::default(),
+            paged_rows: true,
         };
         let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
         let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;

@@ -37,6 +37,7 @@ fn run() -> anyhow::Result<()> {
                 elastic: true,
                 governor: Default::default(),
                 prefix: Default::default(),
+                paged_rows: true,
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

@@ -26,6 +26,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         elastic: true,
         governor: Default::default(),
         prefix: Default::default(),
+        paged_rows: true,
     }
 }
 

@@ -163,6 +163,64 @@ pub fn prompts_for(ctx: &BenchCtx, task: &str, n: usize, seed: u64) -> Result<Ve
 }
 
 // ---------------------------------------------------------------------
+// Machine-readable benchmark artifacts
+// ---------------------------------------------------------------------
+
+/// Flat JSON benchmark artifact, written as `BENCH_<scenario>.json` so CI
+/// can upload run metrics (throughput, latency percentiles, cache and KV
+/// residency counters, modeled savings) and diff them across runs. Shared
+/// by `serve_benchmark --bench-json` and the artifact-free mock-sim bench.
+pub struct BenchReport {
+    scenario: String,
+    fields: Vec<(String, crate::util::json::Json)>,
+}
+
+impl BenchReport {
+    pub fn new(scenario: &str) -> Self {
+        BenchReport {
+            scenario: scenario.to_string(),
+            fields: vec![(
+                "scenario".to_string(),
+                crate::util::json::Json::Str(scenario.to_string()),
+            )],
+        }
+    }
+
+    pub fn num(&mut self, name: &str, v: f64) -> &mut Self {
+        self.fields
+            .push((name.to_string(), crate::util::json::Json::Num(v)));
+        self
+    }
+
+    pub fn text(&mut self, name: &str, v: &str) -> &mut Self {
+        self.fields
+            .push((name.to_string(), crate::util::json::Json::Str(v.to_string())));
+        self
+    }
+
+    pub fn flag(&mut self, name: &str, v: bool) -> &mut Self {
+        self.fields
+            .push((name.to_string(), crate::util::json::Json::Bool(v)));
+        self
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Obj(self.fields.iter().cloned().collect())
+    }
+
+    /// Write `<dir>/BENCH_<scenario>.json` (creating `dir`), returning the
+    /// path written.
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench dir {dir:?}"))?;
+        let path = dir.join(format!("BENCH_{}.json", self.scenario));
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+}
+
+// ---------------------------------------------------------------------
 // Table formatting
 // ---------------------------------------------------------------------
 
@@ -235,5 +293,26 @@ mod tests {
     fn table_writer_validates_columns() {
         let mut t = TableWriter::new("t", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("quasar_bench_report_{}", std::process::id()));
+        let mut r = BenchReport::new("unit");
+        r.num("throughput_tok_s", 123.5)
+            .text("checksum", "00ff")
+            .flag("paged_rows", true);
+        let path = r.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit.json");
+        let v = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(v.get("scenario").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(
+            v.get("throughput_tok_s").unwrap().as_f64().unwrap(),
+            123.5
+        );
+        assert_eq!(v.get("checksum").unwrap().as_str().unwrap(), "00ff");
+        assert!(v.get("paged_rows").unwrap().as_bool().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,13 +7,13 @@
 //!   -> admit   (pop the scheduler in policy order; longest-prefix-match the
 //!               prompt against the *paged* prefix cache, gather the matched
 //!               page-run into the prefill scratch, prefill only the
-//!               *suffix* tokens at the matched write offset, splice the new
-//!               request into a free row, and snapshot its committed prefix
+//!               *suffix* tokens at the matched write offset, lease the new
+//!               request a batch row, and snapshot its committed prefix
 //!               back — a paged insert that references shared template pages
 //!               instead of copying them; see `coordinator::prefixcache`.
-//!               When a request finishes, full pages of its *generated*
-//!               continuation extend its cached run (mid-stream snapshot),
-//!               and [`Engine::warm_prefix`] can pre-populate the cache from
+//!               When a request finishes, its *generated* continuation
+//!               extends its cached run (mid-stream snapshot), and
+//!               [`Engine::warm_prefix`] can pre-populate the cache from
 //!               workload templates before the first client.)
 //!   -> draft   (per active row, via its drafter)
 //!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
@@ -22,12 +22,13 @@
 //!               pick each sub-batch's cheapest exported (bucket, variant)
 //!               pair on the cost model; see `coordinator::plan` for the
 //!               invariants)
-//!   -> execute (per sub-batch: gather leased KV rows into a pooled
-//!               bucket-shaped scratch cache, run the chunk on the
-//!               sub-batch's variant — `fp32` for the paper's Ngram
-//!               baseline, `w8a8` for Quasar — then scatter the advanced
-//!               rows back; a sampled fraction of governed sub-batches is
-//!               shadow re-verified at the other precision first)
+//!   -> execute (per sub-batch: gather each leased row's *committed* KV
+//!               positions into a pooled bucket-shaped scratch cache, run
+//!               the chunk on the sub-batch's variant — `fp32` for the
+//!               paper's Ngram baseline, `w8a8` for Quasar — then write the
+//!               advanced rows back; a sampled fraction of governed
+//!               sub-batches is shadow re-verified at the other precision
+//!               first)
 //!   -> commit  (rejection sampling Eq. 2-3, acceptance bookkeeping,
 //!               audit agreement fed to the governor, finish handling; per
 //!               sub-batch, in plan order)
@@ -38,6 +39,41 @@
 //! verify chunk when a separate 1-token decode call prices cheaper.
 //! `EngineConfig::elastic = false` pins the monolithic configured-bucket
 //! call (the pre-planner behavior) for equivalence tests and A/B benches.
+//!
+//! ## Page-table batch rows (`EngineConfig::paged_rows`, the default)
+//!
+//! Batch rows are **page-tables over the shared prefix-cache pool**
+//! ([`super::kv::PagedGroup`]) rather than owned `[L, B, H, max_seq, hd]`
+//! slabs. The ownership/COW discipline is append-only:
+//!
+//! * **Admission** builds the row's table with
+//!   [`PrefixCache::lease_row_pages`]: every *full* page the prompt's
+//!   longest cached run covers is installed by refcount bump — zero copies
+//!   — and only the partial tail page (plus any uncached pages, on a cold
+//!   prompt) is copied out of the prefill output. The admission-time
+//!   `insert` runs first, so even a cold prompt's pages are shared with the
+//!   run that was just snapshotted rather than copied twice.
+//! * **Fully-committed pages are immutable.** A row only ever writes its
+//!   private growth frontier (pages it references exclusively);
+//!   `write_row_page` hard-errors on a shared page, so a page referenced by
+//!   any live row is never mutated or COW'd out from under it, by
+//!   construction. Copies happen in exactly two places: the partial tail at
+//!   admission, and fresh frontier pages as generation advances.
+//! * **Execute** gathers only committed positions (page-wise reads) and
+//!   scatters only the newly-advanced range `[cached, cached + chunk)` —
+//!   the committed prefix is never re-written, where the slab backend
+//!   copies `[0, cached + chunk)` back every step.
+//! * **Finish** snapshots the whole committed prefix — partial tail
+//!   included — by referencing the row's own pages
+//!   ([`PrefixCache::insert_pages`], pure refcount bumps), then `leave`
+//!   releases the row's references; pages survive exactly as long as a run
+//!   or a live row holds them.
+//!
+//! Resident KV drops from `batch × max_seq` slabs to the pages actually
+//! committed, shared across rows with common prefixes; the modeled traffic
+//! avoided is booked in the `kv_copy_saved_s` histogram.
+//! `paged_rows = false` keeps the copy-based slab rows as the bit-exact A/B
+//! reference (the `--no-paged-rows` bench path).
 //!
 //! ## Adaptive-precision verification (the fidelity governor)
 //!
@@ -92,7 +128,7 @@ use crate::util::rng::Pcg;
 
 use super::calls::{CallLog, CallRecord, FnKind};
 use super::governor::{Governor, GovernorConfig, Route, Transition};
-use super::kv::BatchGroup;
+use super::kv::{BatchGroup, PagedGroup, RowStore};
 use super::plan::{plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
 use super::prefixcache::{PrefixCache, PrefixCacheConfig};
 use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
@@ -136,6 +172,12 @@ pub struct EngineConfig {
     /// and prefills only the suffix. Lossless by construction (segments are
     /// keyed by the variant that produced them), so the default is enabled.
     pub prefix: PrefixCacheConfig,
+    /// Page-table batch rows over the shared pool (module docs): admission
+    /// references cached pages instead of copying them, scatter writes only
+    /// newly-advanced positions, finish snapshots by refcount. Bit-identical
+    /// output either way; `false` keeps the copy-based slab rows as the A/B
+    /// reference.
+    pub paged_rows: bool,
 }
 
 impl EngineConfig {
@@ -151,6 +193,7 @@ impl EngineConfig {
             elastic: true,
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
+            paged_rows: true,
         }
     }
 
@@ -165,6 +208,7 @@ impl EngineConfig {
             elastic: true,
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
+            paged_rows: true,
         }
     }
 
@@ -216,7 +260,9 @@ pub struct Engine {
     model: Rc<ModelRuntime>,
     pub cfg: EngineConfig,
     mcfg: ModelCfg,
-    group: BatchGroup,
+    /// Batch rows: page-tables over the pool, or copy-based slabs (see
+    /// `EngineConfig::paged_rows`).
+    rows: RowStore,
     /// Slot storage; a request keeps its slot index for its lifetime.
     states: Vec<Option<RequestState>>,
     /// Admission queue between submitters and the batch group.
@@ -235,8 +281,12 @@ pub struct Engine {
     variants: Vec<VariantSlot>,
     /// Adaptive-precision state machine (inert when disabled).
     governor: Governor,
-    /// Shared-prefix KV reuse across admissions (inert when disabled).
+    /// Shared-prefix KV reuse across admissions (inert when disabled) —
+    /// and, under `paged_rows`, the page allocator the batch rows live in.
     prefix_cache: PrefixCache,
+    /// High-water mark of resident KV bytes (pool + slab), for the A/B
+    /// bench comparison across row backends.
+    kv_peak_bytes: usize,
     /// Pooled single-row prefill scratch: zeroed and reused per admission
     /// instead of allocating a fresh `[L, 1, H, S, hd]` pair each time.
     prefill_k: Tensor<f32>,
@@ -257,9 +307,15 @@ impl Engine {
         if cfg.governor.enabled && cfg.governor.reference != cfg.verifier {
             variants.push(VariantSlot::load(&model, &cfg.governor.reference, &cfg.drafter)?);
         }
-        let group = BatchGroup::new(
-            mcfg.n_layers, cfg.batch, mcfg.n_heads, mcfg.max_seq, mcfg.head_dim,
-        );
+        let rows = if cfg.paged_rows {
+            RowStore::Paged(PagedGroup::new(
+                cfg.batch, cfg.prefix.page_tokens, mcfg.max_seq,
+            ))
+        } else {
+            RowStore::Copy(BatchGroup::new(
+                mcfg.n_layers, cfg.batch, mcfg.n_heads, mcfg.max_seq, mcfg.head_dim,
+            ))
+        };
         let perf = PerfModel::new(model.cost_model().clone(), mcfg.clone());
         let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
         let governor = Governor::new(cfg.governor.clone(), cfg.seed ^ 0x4649_4445);
@@ -267,7 +323,7 @@ impl Engine {
         Ok(Engine {
             model,
             mcfg,
-            group,
+            rows,
             states: Vec::new(),
             sched: Scheduler::new(cfg.policy),
             rng: Pcg::seeded(cfg.seed ^ 0x5145_5341),
@@ -279,6 +335,7 @@ impl Engine {
             variants,
             governor,
             prefix_cache,
+            kv_peak_bytes: 0,
             prefill_k,
             prefill_v,
             cfg,
@@ -380,7 +437,7 @@ impl Engine {
 
     /// Number of requests not yet completed.
     pub fn in_flight(&self) -> usize {
-        self.sched.depth() + self.group.active_rows().len()
+        self.sched.depth() + self.rows.active_rows().len()
     }
 
     /// Requests waiting in the scheduler (not yet holding a KV row).
@@ -390,7 +447,7 @@ impl Engine {
 
     /// Requests currently holding a KV row.
     pub fn active_count(&self) -> usize {
-        self.group.active_rows().len()
+        self.rows.active_rows().len()
     }
 
     pub fn take_completions(&mut self) -> Vec<Completion> {
@@ -407,7 +464,7 @@ impl Engine {
             self.finish_unadmitted(req);
             return Ok(true);
         }
-        for (row, slot) in self.group.active_rows() {
+        for (row, slot) in self.rows.active_rows() {
             if self.states[slot].as_ref().map(|st| st.req.id) == Some(id) {
                 self.cancel_row(row, slot)?;
                 return Ok(true);
@@ -419,7 +476,7 @@ impl Engine {
     /// Release a running request's KV row and finish it as `Cancelled`
     /// (shared by explicit cancel and deadline expiry).
     fn cancel_row(&mut self, row: usize, slot: usize) -> Result<()> {
-        self.group.leave(row)?;
+        self.rows.leave(&mut self.prefix_cache, row)?;
         let mut st = self.states[slot].take().expect("leased slot has state");
         st.finished = Some(FinishReason::Cancelled);
         self.finish_to_completion(st);
@@ -436,7 +493,7 @@ impl Engine {
             self.finish_unadmitted(req);
         }
         let mut admitted = false;
-        while self.group.free_rows() > 0 {
+        while self.rows.free_rows() > 0 {
             let Some(req) = self.sched.pop() else { break };
             admitted = true;
             let sched_delay = now.duration_since(req.submitted_at).as_secs_f64();
@@ -554,15 +611,39 @@ impl Engine {
             }
 
             // Park the state in a slot and lease a cache row. Only the
-            // prompt's `cached` positions are valid KV — the length-bounded
-            // splice zeroes the rest of the row instead of preserving the
-            // chunk's past-the-prompt garbage.
+            // prompt's `cached` positions are valid KV.
             let slot = self.free_slot();
             if st.is_active() {
-                // Row-addressed join: row 0 of the prefill output is the
-                // assembled prefix (spliced pages + suffix chunk writes).
-                self.group
-                    .join_prefix_from_row(slot, &out.k, &out.v, 0, st.cached)?;
+                match &mut self.rows {
+                    RowStore::Copy(g) => {
+                        // Row-addressed join: row 0 of the prefill output is
+                        // the assembled prefix (spliced pages + suffix chunk
+                        // writes). The length-bounded join zeroes the rest
+                        // of the row instead of preserving the chunk's
+                        // past-the-prompt garbage.
+                        g.join_prefix_from_row(slot, &out.k, &out.v, 0, st.cached)?;
+                    }
+                    RowStore::Paged(g) => {
+                        // Build the row's page table off the pool: the
+                        // `insert` above ran first, so every full page of
+                        // the prompt — warm hit or cold miss — is installed
+                        // by refcount bump; only the partial tail (the
+                        // private growth frontier) is copied from the
+                        // prefill output.
+                        let rp = self.prefix_cache.lease_row_pages(
+                            &variant, &st.req.prompt, &out.k, &out.v, 0,
+                        )?;
+                        if rp.shared > 0 {
+                            let saved = self.perf.kv_move_time(
+                                self.mcfg.n_layers,
+                                rp.shared,
+                                self.cfg.prefix.page_tokens.max(1),
+                            );
+                            self.metrics.observe(names::KV_COPY_SAVED_S, saved);
+                        }
+                        g.join_pages(slot, rp.pages, st.cached)?;
+                    }
+                }
                 self.states[slot] = Some(st);
             } else {
                 self.finish_to_completion(st);
@@ -577,6 +658,7 @@ impl Engine {
             // snapshots in the commit path; the steady-state decode loop
             // skips the snapshot entirely.
             self.publish_prefix_gauges();
+            self.publish_kv_gauges();
         }
         self.metrics
             .set_gauge(names::QUEUE_DEPTH, self.sched.depth() as i64);
@@ -607,6 +689,38 @@ impl Engine {
             names::PREFIX_MID_STREAM_HIT_TOKENS,
             ps.mid_stream_hit_tokens as i64,
         );
+    }
+
+    /// Bytes of KV resident right now: the page pool (cached runs + live
+    /// row pages) plus, under the copy-based backend, the group's whole
+    /// slab — the honest apples-to-apples figure the A/B bench compares.
+    pub fn kv_resident_bytes(&self) -> usize {
+        let pool = self.prefix_cache.stats().resident_bytes;
+        match &self.rows {
+            RowStore::Copy(g) => {
+                pool + 2 * g.k.data.len() * std::mem::size_of::<f32>()
+            }
+            RowStore::Paged(_) => pool,
+        }
+    }
+
+    /// Publish the KV residency/row-page gauges and advance the peak.
+    fn publish_kv_gauges(&mut self) {
+        let resident = self.kv_resident_bytes();
+        self.kv_peak_bytes = self.kv_peak_bytes.max(resident);
+        let ps = self.prefix_cache.stats();
+        self.metrics
+            .set_gauge(names::KV_RESIDENT_BYTES, resident as i64);
+        self.metrics
+            .set_gauge(names::KV_RESIDENT_PEAK_BYTES, self.kv_peak_bytes as i64);
+        self.metrics
+            .set_gauge(names::KV_ROW_PAGE_REFS, ps.row_page_refs as i64);
+        self.metrics
+            .set_gauge(names::KV_ROW_SHARED_PAGES, ps.row_shared_pages as i64);
+        self.metrics
+            .set_gauge(names::KV_ROW_COPIED_PAGES, ps.row_copied_pages as i64);
+        self.metrics
+            .set_gauge(names::KV_ROW_TAIL_COPIES, ps.row_tail_copies as i64);
     }
 
     /// Boot warm-up: pre-populate the prefix cache from template prompts
@@ -660,6 +774,7 @@ impl Engine {
             cached += 1;
         }
         self.publish_prefix_gauges();
+        self.publish_kv_gauges();
         Ok(cached)
     }
 
@@ -694,7 +809,7 @@ impl Engine {
     /// KV row for waiting work.
     fn expire_active(&mut self) -> Result<()> {
         let now = Instant::now();
-        for (row, slot) in self.group.active_rows() {
+        for (row, slot) in self.rows.active_rows() {
             let blown = self.states[slot]
                 .as_ref()
                 .and_then(|st| st.req.deadline_at())
@@ -724,7 +839,7 @@ impl Engine {
         self.governor.begin_step(); // drives re-promotion probe scheduling
         self.expire_active()?;
         self.admit()?;
-        let active = self.group.active_rows();
+        let active = self.rows.active_rows();
         if active.is_empty() {
             return Ok(!self.sched.is_empty());
         }
@@ -790,6 +905,7 @@ impl Engine {
         for sb in &plan.sub_batches {
             self.exec_sub_batch(sb, &mut drafts)?;
         }
+        self.publish_kv_gauges();
         self.metrics.observe("step_s", t0.elapsed().as_secs_f64());
         Ok(true)
     }
@@ -816,20 +932,34 @@ impl Engine {
         let (bucket, chunk) = (sb.bucket, sb.chunk);
         let variant = self.variants[sb.variant].name.clone();
         let row_map: Vec<usize> = sb.rows.iter().map(|&di| drafts[di].0).collect();
+        // Each row paired with its committed length: gather moves only
+        // valid positions, scatter only newly-advanced ones.
+        let row_lens: Vec<(usize, usize)> = sb
+            .rows
+            .iter()
+            .map(|&di| {
+                let (row, slot, _) = drafts[di];
+                let st = self.states[slot].as_ref().expect("leased slot has state");
+                (row, st.cached)
+            })
+            .collect();
 
-        // Identity fast path: when this sub-batch executes at the full
-        // group bucket and covers *every active row* in group-row order
-        // (i.e. it is the whole step's plan — always true for the
-        // single-variant monolithic elastic=false shape), run directly on
-        // the group cache and adopt the returned tensors — the seed
-        // engine's zero-copy behavior. Adopt writes the chunk's speculative
-        // output into unleased trailing rows too, which is fine (join
-        // splices over them, leave re-zeroes); the all-active-rows
-        // requirement is what matters: a governed step can put the
-        // remaining *leased* rows in another variant's sub-batch, and
-        // adopting a whole chunk output over rows this call didn't carry
-        // would overwrite their KV with garbage.
-        let identity = bucket == self.group.batch
+        // Identity fast path (copy-based rows only): when this sub-batch
+        // executes at the full group bucket and covers *every active row*
+        // in group-row order (i.e. it is the whole step's plan — always
+        // true for the single-variant monolithic elastic=false shape), run
+        // directly on the group cache and adopt the returned tensors — the
+        // seed engine's zero-copy behavior. Adopt writes the chunk's
+        // speculative output into unleased trailing rows too, which is fine
+        // (join splices over them; `note_written` below keeps leave's
+        // bounded zeroing honest); the all-active-rows requirement is what
+        // matters: a governed step can put the remaining *leased* rows in
+        // another variant's sub-batch, and adopting a whole chunk output
+        // over rows this call didn't carry would overwrite their KV with
+        // garbage. Page-table rows have no monolithic cache to run on, so
+        // they always take the gather/scatter leg.
+        let identity = matches!(self.rows, RowStore::Copy(_))
+            && bucket == self.rows.batch()
             && row_map.len() == drafts.len()
             && row_map.iter().enumerate().all(|(i, &r)| i == r);
 
@@ -838,7 +968,12 @@ impl Engine {
             (None, None)
         } else {
             let (mut sk, mut sv) = self.model.take_scratch(&variant, self.mcfg.n_layers, bucket);
-            self.group.gather_rows(&row_map, &mut sk, &mut sv)?;
+            match &self.rows {
+                RowStore::Copy(g) => g.gather_rows(&row_lens, &mut sk, &mut sv)?,
+                RowStore::Paged(g) => {
+                    g.gather_rows(&self.prefix_cache, &row_lens, &mut sk, &mut sv)?
+                }
+            }
             (Some(sk), Some(sv))
         };
 
@@ -859,7 +994,10 @@ impl Engine {
         let t0 = Instant::now();
         let (k_in, v_in) = match (&sk, &sv) {
             (Some(k), Some(v)) => (k, v),
-            _ => (&self.group.k, &self.group.v),
+            _ => match &self.rows {
+                RowStore::Copy(g) => (&g.k, &g.v),
+                RowStore::Paged(_) => unreachable!("identity fast path is copy-only"),
+            },
         };
         let out = self
             .model
@@ -991,7 +1129,14 @@ impl Engine {
                             let n = sb.rows.len();
                             let (mut ak, mut av) =
                                 self.model.take_scratch(&sname, self.mcfg.n_layers, ab);
-                            self.group.gather_rows(&row_map, &mut ak, &mut av)?;
+                            match &self.rows {
+                                RowStore::Copy(g) => {
+                                    g.gather_rows(&row_lens, &mut ak, &mut av)?
+                                }
+                                RowStore::Paged(g) => g.gather_rows(
+                                    &self.prefix_cache, &row_lens, &mut ak, &mut av,
+                                )?,
+                            }
                             let mut atokens = vec![0i32; ab * chunk];
                             atokens[..n * chunk].copy_from_slice(&tokens[..n * chunk]);
                             let mut apos = vec![0i32; ab];
@@ -1035,15 +1180,63 @@ impl Engine {
         };
 
         // ---- scatter / adopt the advanced rows -------------------------
+        // The chunk wrote positions `[cached, cached + chunk)` per carried
+        // row; everything below was already committed before the call.
         if let (Some(sk), Some(sv)) = (sk, sv) {
-            self.group.scatter_rows(&row_map, &out.k, &out.v)?;
+            match &mut self.rows {
+                RowStore::Copy(g) => {
+                    // The slab backend re-writes the whole valid extent:
+                    // scratch `[0, cached + chunk)` is bit-identical to the
+                    // row's committed prefix plus the chunk's advance.
+                    let write_back: Vec<(usize, usize)> = row_lens
+                        .iter()
+                        .map(|&(r, c)| (r, (c + chunk).min(self.mcfg.max_seq)))
+                        .collect();
+                    g.scatter_rows(&write_back, &out.k, &out.v)?;
+                }
+                RowStore::Paged(g) => {
+                    // Delta-only write-back: just the advanced range lands
+                    // in private frontier pages; committed pages are
+                    // immutable and never touched. The committed prefix the
+                    // slab backend would have re-copied is booked as saved.
+                    let advances: Vec<(usize, usize, usize)> = row_lens
+                        .iter()
+                        .map(|&(r, c)| (r, c, (c + chunk).min(self.mcfg.max_seq)))
+                        .collect();
+                    g.scatter_advance(&mut self.prefix_cache, &advances, &out.k, &out.v)?;
+                    let page = self.cfg.prefix.page_tokens.max(1);
+                    let saved: f64 = row_lens
+                        .iter()
+                        .map(|&(_, c)| {
+                            self.perf.splice_time(self.mcfg.n_layers, c, page)
+                        })
+                        .sum();
+                    if saved > 0.0 {
+                        self.metrics.observe(names::KV_COPY_SAVED_S, saved);
+                    }
+                }
+            }
             self.model.return_scratch(&variant, sk, sv);
             self.model.return_scratch(&variant, out.k, out.v);
         } else {
             // identity fast path: the advanced cache *is* the group cache
             // (run() already validated its dims against the bucket shape)
-            self.group.k = out.k;
-            self.group.v = out.v;
+            let RowStore::Copy(g) = &mut self.rows else {
+                unreachable!("identity fast path is copy-only");
+            };
+            g.k = out.k;
+            g.v = out.v;
+            // The adopted chunk output wrote `[pos, pos + chunk)` into
+            // *every* bucket row — unleased rows ran at pos 0 — so record
+            // each row's high-water mark for leave's bounded zeroing.
+            for r in 0..g.batch {
+                let wrote = row_lens
+                    .iter()
+                    .find(|&&(rr, _)| rr == r)
+                    .map(|&(_, c)| c + chunk)
+                    .unwrap_or(chunk);
+                g.note_written(r, wrote.min(self.mcfg.max_seq));
+            }
         }
 
         // ---- commit per row --------------------------------------------
@@ -1138,6 +1331,12 @@ impl Engine {
 
             st.committed.extend_from_slice(&commit);
             st.cached += n_commit; // KV for these positions was just written
+            if let RowStore::Paged(g) = &mut self.rows {
+                // Advance the row's committed length over pages the
+                // scatter already populated; rejected speculative tail
+                // positions stay unreachable garbage in the frontier page.
+                g.set_len(row, st.cached)?;
+            }
             st.generated += n_commit;
             st.stats.steps += 1;
             st.stats.tokens_out += n_commit as u64;
@@ -1164,27 +1363,66 @@ impl Engine {
                     && !st.kv_mixed
                     && st.finished != Some(FinishReason::Cancelled)
                 {
-                    let page = self.cfg.prefix.page_tokens.max(1);
-                    let key_len = (st.cached / page) * page;
-                    if key_len > st.req.prompt.len() {
-                        self.prefix_cache.insert_from_row(
-                            &variant,
-                            &st.committed[..key_len],
-                            &self.group.k,
-                            &self.group.v,
-                            row,
-                            Some(st.req.prompt.len()),
-                        );
-                        snapshotted = true;
+                    match &self.rows {
+                        RowStore::Copy(g) => {
+                            // The slab backend copies pages into the pool,
+                            // so only full pages are worth the churn.
+                            let page = self.cfg.prefix.page_tokens.max(1);
+                            let key_len = (st.cached / page) * page;
+                            if key_len > st.req.prompt.len() {
+                                self.prefix_cache.insert_from_row(
+                                    &variant,
+                                    &st.committed[..key_len],
+                                    &g.k,
+                                    &g.v,
+                                    row,
+                                    Some(st.req.prompt.len()),
+                                );
+                                snapshotted = true;
+                            }
+                        }
+                        RowStore::Paged(g) => {
+                            // Zero-copy snapshot: the run *references* the
+                            // row's own pages — partial tail included,
+                            // since the run key's length bounds what a
+                            // future splice reads (garbage past `cached`
+                            // in the tail page is never served).
+                            if st.cached > st.req.prompt.len() {
+                                let key = &st.committed[..st.cached];
+                                let covered = self
+                                    .prefix_cache
+                                    .find(&variant, key)
+                                    .is_some_and(|(_, m)| m >= st.cached);
+                                let pages =
+                                    g.row_pages(row).expect("leased row has pages");
+                                self.prefix_cache.insert_pages(
+                                    &variant,
+                                    key,
+                                    pages,
+                                    Some(st.req.prompt.len()),
+                                );
+                                if !covered {
+                                    let page = self.cfg.prefix.page_tokens.max(1);
+                                    let saved = self.perf.kv_move_time(
+                                        self.mcfg.n_layers,
+                                        st.cached.div_ceil(page),
+                                        page,
+                                    );
+                                    self.metrics.observe(names::KV_COPY_SAVED_S, saved);
+                                }
+                                snapshotted = true;
+                            }
+                        }
                     }
                 }
-                self.group.leave(row)?;
+                self.rows.leave(&mut self.prefix_cache, row)?;
                 let st = self.states[slot].take().unwrap();
                 self.finish_to_completion(st);
             }
         }
         if snapshotted {
             self.publish_prefix_gauges();
+            self.publish_kv_gauges();
         }
 
         // ---- flush audit samples: one per (class, shadow call) ---------

@@ -1,35 +1,56 @@
-//! Batch-group KV-cache manager.
+//! Batch-row KV management: copy-based slab rows and page-table rows.
 //!
-//! The engine keeps one *batch group* per serving configuration: a
-//! persistent `[L, B, H, S, hd]` cache whose rows are leased to requests.
-//! Joining a request splices a prefilled row in; leaving zeroes the row.
-//! Row state never moves between steps — continuous batching without cache
-//! shuffling. Join sources are row-addressed
-//! ([`BatchGroup::join_prefix_from_row`]): admission joins from row 0 of
-//! the prefill output (paged prefix-cache splice + suffix chunk writes),
-//! bounded to the prompt's valid length; sources with more than one batch
-//! row work the same way with the holding row selected by index.
+//! Two row backends share one occupancy model (rows leased to request
+//! slots, row state never moves between steps — continuous batching
+//! without cache shuffling):
 //!
-//! Execution no longer adopts a whole returned cache: the elastic step
-//! planner (`coordinator::plan`) runs each sub-batch against a
-//! *bucket-shaped scratch cache*, so the group exposes per-row movement
-//! instead — [`BatchGroup::gather_rows`] copies leased rows into scratch row
-//! order before a chunk runs, and [`BatchGroup::scatter_rows`] copies the
-//! advanced rows back afterwards. Rows outside the sub-batch are never
-//! touched, which also means freed rows stay zeroed instead of accumulating
-//! speculative garbage.
+//! * [`BatchGroup`] — the copy-based A/B reference: a persistent
+//!   `[L, B, H, S, hd]` slab whose rows are spliced in on join and zeroed
+//!   on leave. All movement is **length-bounded**: joins, gathers,
+//!   scatters and leaves touch only each row's committed positions (plus
+//!   a per-row written high-water mark for speculative slack), never the
+//!   full `max_seq` extent.
+//! * [`PagedGroup`] — the serving shape: a row is a *page table* (ordered
+//!   page ids + committed length) over the shared [`PrefixCache`] pool.
+//!   Admission installs pages by refcount bump (copying only the partial
+//!   tail), finish-time snapshots reference the row's own pages, and
+//!   `leave` is a refcount release. The write discipline is append-only:
+//!   committed positions never change, so full pages are immutable and
+//!   only the private growth-frontier page is ever written
+//!   ([`PrefixCache::write_row_page`] enforces refs == 1).
+//!
+//! Execution never adopts a whole returned cache in either backend: the
+//! elastic step planner (`coordinator::plan`) runs each sub-batch against
+//! a *bucket-shaped scratch cache* — gather copies each row's committed
+//! prefix into scratch row order before a chunk runs, and scatter writes
+//! back afterwards. The scatter asymmetry is the paged backend's win: a
+//! slab row must copy back `committed + chunk` positions, a page-table
+//! row writes only the newly-advanced `[from, to)` positions because its
+//! committed pages are immutable and already hold what the scratch holds.
+//! Rows outside the sub-batch are never touched. Scratch positions beyond
+//! a gathered row's bound keep whatever stale-but-finite values the pool
+//! left there — exactly the contract batch-independent causal attention
+//! already grants rows outside the gathered set.
 
 use anyhow::{bail, Result};
 
+use super::prefixcache::PrefixCache;
 use crate::runtime::Tensor;
 
-/// A leased-row batched KV cache.
+/// A leased-row batched KV cache (copy-based slab rows).
 pub struct BatchGroup {
     pub k: Tensor<f32>,
     pub v: Tensor<f32>,
     /// `rows[i] = Some(request_slot)` when leased.
     rows: Vec<Option<usize>>,
     pub batch: usize,
+    /// Per-row written high-water mark: positions `written[i]..` of row `i`
+    /// are zero. Length-bounded join zeroing and leave both rely on it; it
+    /// is max-tracked because a verify chunk followed by a shorter decode
+    /// chunk makes `committed + chunk` non-monotonic, and whole-cache adopt
+    /// paths must report what they dirtied via
+    /// [`BatchGroup::note_written`].
+    written: Vec<usize>,
 }
 
 impl BatchGroup {
@@ -41,6 +62,7 @@ impl BatchGroup {
             v: Tensor::zeros(&dims),
             rows: vec![None; batch],
             batch,
+            written: vec![0; batch],
         }
     }
 
@@ -109,34 +131,57 @@ impl BatchGroup {
         if used_len > seq {
             bail!("used_len {used_len} exceeds cache seq {seq}");
         }
-        if used_len < seq {
-            // The full-extent splice overwrites every position anyway.
-            self.k.zero_axis1_row(row);
-            self.v.zero_axis1_row(row);
+        // Positions `written[row]..` are zero by invariant, so only the
+        // dirty remainder past the splice needs clearing — not the whole
+        // `max_seq` extent.
+        if used_len < self.written[row] {
+            let n = self.written[row] - used_len;
+            self.k.zero_axis1_row_seq_range(row, used_len, n);
+            self.v.zero_axis1_row_seq_range(row, used_len, n);
         }
         self.k.copy_axis1_row_seq_prefix_from(row, k_src, src_row, used_len);
         self.v.copy_axis1_row_seq_prefix_from(row, v_src, src_row, used_len);
         self.rows[row] = Some(slot);
+        self.written[row] = used_len;
         Ok(row)
     }
 
-    /// Release a row (request finished); zeroes it defensively so a stale
-    /// read would produce obviously-wrong attention rather than plausible
-    /// leakage from the previous occupant.
+    /// Record that positions `0..len` of `row` may hold non-zero values —
+    /// required after any path that writes the cache tensors directly
+    /// (whole-cache adoption by the engine's identity fast path, which
+    /// dirties *every* batch row up to its chunk extent, leased or not).
+    /// Max-tracked; clamped to the sequence extent.
+    pub fn note_written(&mut self, row: usize, len: usize) {
+        let seq = self.k.dims[self.k.rank() - 2];
+        self.written[row] = self.written[row].max(len.min(seq));
+    }
+
+    /// Release a row (request finished); zeroes its written prefix
+    /// defensively so a stale read would produce obviously-wrong attention
+    /// rather than plausible leakage from the previous occupant. Positions
+    /// past the written high-water mark are already zero by invariant —
+    /// zeroing the full `max_seq` extent would move bandwidth over them
+    /// for nothing.
     pub fn leave(&mut self, row: usize) -> Result<usize> {
         let Some(slot) = self.rows[row] else {
             bail!("row {row} not leased");
         };
         self.rows[row] = None;
-        self.k.zero_axis1_row(row);
-        self.v.zero_axis1_row(row);
+        let n = self.written[row];
+        if n > 0 {
+            self.k.zero_axis1_row_seq_range(row, 0, n);
+            self.v.zero_axis1_row_seq_range(row, 0, n);
+            self.written[row] = 0;
+        }
         Ok(slot)
     }
 
-    /// Check a gather/scatter row map against the group and a scratch shape:
-    /// every group row leased, in range and **unique**, scratch large
+    /// Check a gather/scatter row map (`(group row, length)` pairs) against
+    /// the group and a scratch shape: every group row leased, in range and
+    /// **unique**, lengths within the sequence extent, scratch large
     /// enough, dims matching everywhere but the batch axis.
-    fn check_row_map(&self, rows: &[usize], k: &Tensor<f32>, v: &Tensor<f32>) -> Result<()> {
+    fn check_row_map(&self, rows: &[(usize, usize)], k: &Tensor<f32>,
+                     v: &Tensor<f32>) -> Result<()> {
         if k.dims != v.dims {
             bail!("scratch k/v dims differ: {:?} vs {:?}", k.dims, v.dims);
         }
@@ -149,9 +194,200 @@ impl BatchGroup {
         if rows.len() > k.dims[1] {
             bail!("{} rows exceed scratch bucket {}", rows.len(), k.dims[1]);
         }
+        let seq = self.k.dims[self.k.rank() - 2];
         // Duplicates would double-write on scatter (last scratch row wins
         // silently) and alias one lease across two scratch rows on gather —
         // reject rather than guess which copy the caller meant.
+        let mut seen = vec![false; self.batch];
+        for &(r, len) in rows {
+            if r >= self.batch {
+                bail!("row {r} out of range for batch {}", self.batch);
+            }
+            if self.rows[r].is_none() {
+                bail!("row {r} not leased");
+            }
+            if seen[r] {
+                bail!("duplicate row {r} in row map");
+            }
+            if len > seq {
+                bail!("row {r} length {len} exceeds cache seq {seq}");
+            }
+            seen[r] = true;
+        }
+        Ok(())
+    }
+
+    /// Copy leased group rows into a bucket-shaped scratch cache pair,
+    /// each bounded to its own valid length: scratch row `i` receives the
+    /// first `rows[i].1` positions of group row `rows[i].0` — copy volume
+    /// tracks committed positions, not `max_seq`. Scratch rows beyond
+    /// `rows.len()`, and scratch positions beyond each row's length, are
+    /// left as-is (padding the executed bucket; per-row causal attention
+    /// never reads across batch rows or past the positions the chunk
+    /// advances through).
+    pub fn gather_rows(&self, rows: &[(usize, usize)], k_dst: &mut Tensor<f32>,
+                       v_dst: &mut Tensor<f32>) -> Result<()> {
+        self.check_row_map(rows, k_dst, v_dst)?;
+        let triples: Vec<(usize, usize, usize)> =
+            rows.iter().enumerate().map(|(i, &(r, len))| (i, r, len)).collect();
+        k_dst.copy_axis1_rows_seq_prefix(&triples, &self.k);
+        v_dst.copy_axis1_rows_seq_prefix(&triples, &self.v);
+        Ok(())
+    }
+
+    /// Copy advanced scratch rows back into the group, each bounded to its
+    /// own advanced length: group row `rows[i].0` receives the first
+    /// `rows[i].1` positions of scratch row `i` — the inverse of
+    /// [`BatchGroup::gather_rows`] after a chunk execution advanced the
+    /// scratch (lengths grow by the executed chunk). Updates each row's
+    /// written high-water mark.
+    pub fn scatter_rows(&mut self, rows: &[(usize, usize)], k_src: &Tensor<f32>,
+                        v_src: &Tensor<f32>) -> Result<()> {
+        self.check_row_map(rows, k_src, v_src)?;
+        let triples: Vec<(usize, usize, usize)> =
+            rows.iter().enumerate().map(|(i, &(r, len))| (r, i, len)).collect();
+        self.k.copy_axis1_rows_seq_prefix(&triples, k_src);
+        self.v.copy_axis1_rows_seq_prefix(&triples, v_src);
+        for &(r, len) in rows {
+            self.written[r] = self.written[r].max(len);
+        }
+        Ok(())
+    }
+}
+
+/// One page-table row: ordered pool page ids plus the committed length.
+/// Page `i` covers token positions `[i*P, (i+1)*P)`; pages past
+/// `ceil(len/P)` hold speculative slack from a truncated verify chunk and
+/// are overwritten (they are private by construction) before ever being
+/// read.
+struct PagedRow {
+    slot: usize,
+    pages: Vec<u64>,
+    /// Committed KV positions. Gathers read `0..len`; scatters write from
+    /// `len` up; everything at or past `len` is unread garbage.
+    len: usize,
+}
+
+/// Page-table batch rows over the shared [`PrefixCache`] pool — the
+/// zero-copy row backend. Holds no KV bytes itself: every operation that
+/// touches KV takes the pool. The append-only write discipline (module
+/// docs) keeps every page either immutable-and-shareable (fully committed)
+/// or private-and-writable (growth frontier, refs == 1).
+pub struct PagedGroup {
+    rows: Vec<Option<PagedRow>>,
+    pub batch: usize,
+    page_tokens: usize,
+    max_seq: usize,
+}
+
+impl PagedGroup {
+    pub fn new(batch: usize, page_tokens: usize, max_seq: usize) -> Self {
+        PagedGroup {
+            rows: (0..batch).map(|_| None).collect(),
+            batch,
+            page_tokens: page_tokens.max(1),
+            max_seq,
+        }
+    }
+
+    pub fn free_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.is_none()).count()
+    }
+
+    pub fn active_rows(&self) -> Vec<(usize, usize)> {
+        self.rows
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|pr| (i, pr.slot)))
+            .collect()
+    }
+
+    pub fn occupant(&self, row: usize) -> Option<usize> {
+        self.rows[row].as_ref().map(|pr| pr.slot)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.iter().all(|r| r.is_none())
+    }
+
+    /// A row's committed length.
+    pub fn row_len(&self, row: usize) -> Option<usize> {
+        self.rows[row].as_ref().map(|pr| pr.len)
+    }
+
+    /// A row's page table (for finish-time snapshots, which reference
+    /// these ids instead of copying KV).
+    pub fn row_pages(&self, row: usize) -> Option<&[u64]> {
+        self.rows[row].as_ref().map(|pr| pr.pages.as_slice())
+    }
+
+    /// Pages referenced across all live rows (occupancy gauge; shared
+    /// pages count once per referencing row, like the refcounts do).
+    pub fn total_pages(&self) -> usize {
+        self.rows.iter().flatten().map(|pr| pr.pages.len()).sum()
+    }
+
+    /// Lease a free row to `slot`, installing an already-built page table
+    /// (from [`PrefixCache::lease_row_pages`]) covering `len` committed
+    /// positions. O(1) — the copies (if any) happened building the table.
+    /// The row takes ownership of the caller's page references.
+    pub fn join_pages(&mut self, slot: usize, pages: Vec<u64>, len: usize) -> Result<usize> {
+        if self.rows.iter().flatten().any(|pr| pr.slot == slot) {
+            bail!("slot {slot} already in group");
+        }
+        let Some(row) = self.rows.iter().position(|r| r.is_none()) else {
+            bail!("no free row in batch group");
+        };
+        if len > self.max_seq {
+            bail!("len {len} exceeds max_seq {}", self.max_seq);
+        }
+        if pages.len() * self.page_tokens < len {
+            bail!("{} pages cannot cover {len} tokens", pages.len());
+        }
+        self.rows[row] = Some(PagedRow { slot, pages, len });
+        Ok(row)
+    }
+
+    /// Advance a row's committed length after the verifier committed
+    /// tokens (the row's pages must already cover it — scatter ran first).
+    pub fn set_len(&mut self, row: usize, len: usize) -> Result<()> {
+        let Some(pr) = self.rows[row].as_mut() else {
+            bail!("row {row} not leased");
+        };
+        if len > self.max_seq {
+            bail!("len {len} exceeds max_seq {}", self.max_seq);
+        }
+        if pr.pages.len() * self.page_tokens < len {
+            bail!("row {row} pages cover {} tokens, not {len}",
+                  pr.pages.len() * self.page_tokens);
+        }
+        pr.len = len;
+        Ok(())
+    }
+
+    /// Release a row: hand its page references back to the pool (shared
+    /// pages survive on their runs' references; private frontier pages are
+    /// freed). No zeroing — nothing can read a freed page table.
+    pub fn leave(&mut self, pool: &mut PrefixCache, row: usize) -> Result<usize> {
+        let Some(pr) = self.rows[row].take() else {
+            bail!("row {row} not leased");
+        };
+        pool.release_row_pages(&pr.pages);
+        Ok(pr.slot)
+    }
+
+    /// Shared row-map validation: leased, in range, unique, scratch pair
+    /// shaped like a cache and large enough for the mapped rows.
+    fn check_rows(&self, rows: &[usize], k: &Tensor<f32>, v: &Tensor<f32>) -> Result<()> {
+        if k.dims != v.dims {
+            bail!("scratch k/v dims differ: {:?} vs {:?}", k.dims, v.dims);
+        }
+        if k.rank() < 4 {
+            bail!("scratch rank {} is not a [L, B, .., S, hd] cache", k.rank());
+        }
+        if rows.len() > k.dims[1] {
+            bail!("{} rows exceed scratch bucket {}", rows.len(), k.dims[1]);
+        }
         let mut seen = vec![false; self.batch];
         for &r in rows {
             if r >= self.batch {
@@ -168,37 +404,132 @@ impl BatchGroup {
         Ok(())
     }
 
-    /// Copy leased group rows into a bucket-shaped scratch cache pair:
-    /// scratch row `i` receives group row `rows[i]`. Scratch rows beyond
-    /// `rows.len()` are left as-is (padding the executed bucket; per-row
-    /// attention never reads across batch rows).
-    pub fn gather_rows(&self, rows: &[usize], k_dst: &mut Tensor<f32>,
-                       v_dst: &mut Tensor<f32>) -> Result<()> {
-        self.check_row_map(rows, k_dst, v_dst)?;
-        let pairs: Vec<(usize, usize)> =
-            rows.iter().enumerate().map(|(i, &r)| (i, r)).collect();
-        k_dst.copy_axis1_rows(&pairs, &self.k);
-        v_dst.copy_axis1_rows(&pairs, &self.v);
+    /// Assemble committed positions into a bucket-shaped scratch pair:
+    /// scratch row `i` receives positions `0..rows[i].1` of group row
+    /// `rows[i].0`, read page-wise from the pool. Lengths must not exceed
+    /// each row's committed length — positions past it are speculative
+    /// garbage no caller may observe.
+    pub fn gather_rows(&self, pool: &PrefixCache, rows: &[(usize, usize)],
+                       k_dst: &mut Tensor<f32>, v_dst: &mut Tensor<f32>) -> Result<()> {
+        let idx: Vec<usize> = rows.iter().map(|&(r, _)| r).collect();
+        self.check_rows(&idx, k_dst, v_dst)?;
+        let p = self.page_tokens;
+        for (i, &(r, len)) in rows.iter().enumerate() {
+            let pr = self.rows[r].as_ref().expect("checked leased");
+            if len > pr.len {
+                bail!("gather length {len} exceeds row {r} committed {}", pr.len);
+            }
+            if len > k_dst.dims[k_dst.rank() - 2] {
+                bail!("gather length {len} exceeds scratch seq");
+            }
+            let mut pos = 0usize;
+            while pos < len {
+                let n = (p - pos % p).min(len - pos);
+                pool.read_page_into(pr.pages[pos / p], pos % p, k_dst, v_dst, i, pos, n)?;
+                pos += n;
+            }
+        }
         Ok(())
     }
 
-    /// Copy advanced scratch rows back into the group: group row `rows[i]`
-    /// receives scratch row `i` — the inverse of [`BatchGroup::gather_rows`]
-    /// after a chunk execution advanced the scratch.
-    pub fn scatter_rows(&mut self, rows: &[usize], k_src: &Tensor<f32>,
-                        v_src: &Tensor<f32>) -> Result<()> {
-        self.check_row_map(rows, k_src, v_src)?;
-        let pairs: Vec<(usize, usize)> =
-            rows.iter().enumerate().map(|(i, &r)| (r, i)).collect();
-        self.k.copy_axis1_rows(&pairs, k_src);
-        self.v.copy_axis1_rows(&pairs, v_src);
+    /// Write back only the newly-advanced positions: group row
+    /// `rows[i].0` absorbs scratch row `i`'s positions `[from, to)`
+    /// (`rows[i] = (row, from, to)`), allocating fresh private pages at
+    /// the growth frontier as needed. Committed pages below `from` are
+    /// never touched — they are immutable and already hold what the
+    /// scratch holds, which is the whole copy saving over the slab
+    /// backend's `0..to` write-back. Does not advance the committed
+    /// length; [`PagedGroup::set_len`] does, after the verifier commits.
+    pub fn scatter_advance(&mut self, pool: &mut PrefixCache,
+                           rows: &[(usize, usize, usize)],
+                           k_src: &Tensor<f32>, v_src: &Tensor<f32>) -> Result<()> {
+        let idx: Vec<usize> = rows.iter().map(|&(r, _, _)| r).collect();
+        self.check_rows(&idx, k_src, v_src)?;
+        let p = self.page_tokens;
+        for (i, &(r, from, to)) in rows.iter().enumerate() {
+            if from > to || to > self.max_seq {
+                bail!("bad advance range [{from}, {to}) for row {r}");
+            }
+            if to > k_src.dims[k_src.rank() - 2] {
+                bail!("advance range end {to} exceeds scratch seq");
+            }
+            let pr = self.rows[r].as_mut().expect("checked leased");
+            if from > pr.pages.len() * p {
+                bail!("advance from {from} leaves a page gap on row {r}");
+            }
+            while pr.pages.len() * p < to {
+                pr.pages.push(pool.alloc_row_page(&k_src.dims));
+            }
+            let mut pos = from;
+            while pos < to {
+                let n = (p - pos % p).min(to - pos);
+                pool.write_row_page(pr.pages[pos / p], pos % p, k_src, v_src, i, pos, n)?;
+                pos += n;
+            }
+        }
         Ok(())
+    }
+}
+
+/// The engine's row backend: copy-based slab rows (the A/B reference) or
+/// page-table rows over the shared pool. Occupancy accessors are common;
+/// data movement is backend-specific and dispatched at the call sites that
+/// own the pool borrow.
+pub enum RowStore {
+    Copy(BatchGroup),
+    Paged(PagedGroup),
+}
+
+impl RowStore {
+    pub fn batch(&self) -> usize {
+        match self {
+            RowStore::Copy(g) => g.batch,
+            RowStore::Paged(g) => g.batch,
+        }
+    }
+
+    pub fn free_rows(&self) -> usize {
+        match self {
+            RowStore::Copy(g) => g.free_rows(),
+            RowStore::Paged(g) => g.free_rows(),
+        }
+    }
+
+    pub fn active_rows(&self) -> Vec<(usize, usize)> {
+        match self {
+            RowStore::Copy(g) => g.active_rows(),
+            RowStore::Paged(g) => g.active_rows(),
+        }
+    }
+
+    pub fn occupant(&self, row: usize) -> Option<usize> {
+        match self {
+            RowStore::Copy(g) => g.occupant(row),
+            RowStore::Paged(g) => g.occupant(row),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            RowStore::Copy(g) => g.is_empty(),
+            RowStore::Paged(g) => g.is_empty(),
+        }
+    }
+
+    /// Release a row in either backend (the pool is unused by the slab
+    /// backend but borrowed uniformly so call sites stay shape-agnostic).
+    pub fn leave(&mut self, pool: &mut PrefixCache, row: usize) -> Result<usize> {
+        match self {
+            RowStore::Copy(g) => g.leave(row),
+            RowStore::Paged(g) => g.leave(pool, row),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::prefixcache::PrefixCacheConfig;
 
     fn group() -> BatchGroup {
         BatchGroup::new(2, 3, 2, 8, 4)
@@ -261,10 +592,10 @@ mod tests {
         // And the spliced prefix survives a gather/scatter round trip.
         let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
         let mut sv = sk.clone();
-        g.gather_rows(&[row], &mut sk, &mut sv).unwrap();
+        g.gather_rows(&[(row, 3)], &mut sk, &mut sv).unwrap();
         assert_eq!(sk.at(&[0, 0, 0, 2, 0]), 7.0);
         assert_eq!(sk.at(&[0, 0, 0, 5, 0]), 0.0);
-        g.scatter_rows(&[row], &sk, &sv).unwrap();
+        g.scatter_rows(&[(row, 3)], &sk, &sv).unwrap();
         assert_eq!(g.k.at(&[1, row, 1, 2, 3]), 7.0);
 
         // Validation: oversized used_len, duplicate slot, full group.
@@ -337,15 +668,15 @@ mod tests {
         // gather rows 2 and 0 (in that order) into a 2-bucket scratch
         let mut sk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
         let mut sv = sk.clone();
-        g.gather_rows(&[2, 0], &mut sk, &mut sv).unwrap();
+        g.gather_rows(&[(2, 8), (0, 8)], &mut sk, &mut sv).unwrap();
         assert_eq!(sk.at(&[0, 0, 0, 0, 0]), 30.0, "scratch row 0 = group row 2");
         assert_eq!(sk.at(&[1, 1, 1, 7, 3]), 10.0, "scratch row 1 = group row 0");
         // scatter straight back: the group must be bit-identical
-        g.scatter_rows(&[2, 0], &sk, &sv).unwrap();
+        g.scatter_rows(&[(2, 8), (0, 8)], &sk, &sv).unwrap();
         assert_eq!(g.k, before_k, "gather->scatter round trip changed the cache");
         // an advanced scratch lands in the right group rows only
         sk.data.iter_mut().for_each(|x| *x += 1.0);
-        g.scatter_rows(&[2, 0], &sk, &sk.clone()).unwrap();
+        g.scatter_rows(&[(2, 8), (0, 8)], &sk, &sk.clone()).unwrap();
         assert_eq!(g.k.at(&[0, 2, 0, 0, 0]), 31.0);
         assert_eq!(g.k.at(&[0, 0, 0, 0, 0]), 11.0);
         assert_eq!(g.k.at(&[0, 1, 0, 0, 0]), 20.0, "row outside the map untouched");
@@ -359,9 +690,87 @@ mod tests {
         let mut sk = Tensor::<f32>::zeros(&[2, 4, 2, 8, 4]);
         sk.data.iter_mut().for_each(|x| *x = -1.0); // dirty pooled scratch
         let mut sv = sk.clone();
-        g.gather_rows(&[0], &mut sk, &mut sv).unwrap();
+        g.gather_rows(&[(0, 8)], &mut sk, &mut sv).unwrap();
         assert_eq!(sk.at(&[0, 0, 0, 0, 0]), 4.0);
         assert_eq!(sk.at(&[0, 3, 0, 0, 0]), -1.0, "padding rows left as-is");
+    }
+
+    #[test]
+    fn length_bounded_gather_scatter_leave_padding_positions_untouched() {
+        // Satellite regression: gather/scatter moved the full max_seq
+        // extent per row regardless of committed length. Both must now be
+        // bounded — scratch (and group) positions past each row's length
+        // keep their prior contents bit-for-bit.
+        let mut g = group(); // seq = 8
+        let (k1, v1) = row_cache(7.0);
+        let row = g.join_prefix(1, &k1, &v1, 4).unwrap(); // 4 committed
+        let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
+        sk.data.iter_mut().for_each(|x| *x = -9.0); // dirty pooled scratch
+        let mut sv = sk.clone();
+        g.gather_rows(&[(row, 4)], &mut sk, &mut sv).unwrap();
+        assert_eq!(sk.at(&[0, 0, 0, 3, 0]), 7.0, "committed positions copied");
+        assert_eq!(sk.at(&[0, 0, 0, 4, 0]), -9.0, "padding positions untouched");
+        assert_eq!(sk.at(&[1, 0, 1, 7, 3]), -9.0);
+
+        // Scatter back 5 positions (one-token advance): group position 5..
+        // must stay exactly as it was (zero), not absorb scratch garbage.
+        sk.data.iter_mut().for_each(|x| {
+            if *x == -9.0 { *x = -5.0; }
+        });
+        let sv2 = sk.clone();
+        g.scatter_rows(&[(row, 5)], &sk, &sv2).unwrap();
+        assert_eq!(g.k.at(&[0, row, 0, 4, 0]), -5.0, "advanced position written");
+        assert_eq!(g.k.at(&[0, row, 0, 5, 0]), 0.0, "beyond the advance untouched");
+        assert_eq!(g.k.at(&[1, row, 1, 7, 3]), 0.0);
+    }
+
+    #[test]
+    fn written_invariant_holds_across_join_advance_leave_cycles() {
+        // Satellite: leave() zeroes only the written prefix; the "positions
+        // past written are zero" invariant must survive arbitrary
+        // join/advance/leave cycles, including re-joining a freed row with
+        // a shorter prefix and whole-cache dirtying via note_written.
+        let seq = 8usize;
+        let all_zero_past = |g: &BatchGroup, row: usize, from: usize| {
+            for l in 0..2 {
+                for h in 0..2 {
+                    for s in from..seq {
+                        for d in 0..4 {
+                            assert_eq!(g.k.at(&[l, row, h, s, d]), 0.0,
+                                       "k[{l},{row},{h},{s},{d}] not zero");
+                            assert_eq!(g.v.at(&[l, row, h, s, d]), 0.0);
+                        }
+                    }
+                }
+            }
+        };
+        let mut g = group();
+        let (k1, v1) = row_cache(3.0);
+        let row = g.join_prefix(1, &k1, &v1, 3).unwrap();
+        all_zero_past(&g, row, 3);
+        // Advance: scatter 6 valid positions (3 committed + 3 speculative).
+        let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
+        sk.data.iter_mut().for_each(|x| *x = 2.0);
+        let sv = sk.clone();
+        g.scatter_rows(&[(row, 6)], &sk, &sv).unwrap();
+        all_zero_past(&g, row, 6);
+        // A shorter follow-up advance must not shrink the high-water mark.
+        g.scatter_rows(&[(row, 4)], &sk, &sv).unwrap();
+        g.leave(row).unwrap();
+        all_zero_past(&g, row, 0);
+        // Re-join the same (freed) row with a shorter prefix: still clean.
+        let row2 = g.join_prefix(2, &k1, &v1, 2).unwrap();
+        assert_eq!(row2, row, "freed row reused");
+        all_zero_past(&g, row2, 2);
+        // Whole-cache adoption dirties rows the row map never covered:
+        // note_written keeps leave() honest about it.
+        g.k.data.iter_mut().for_each(|x| *x = 1.0);
+        g.v.data.iter_mut().for_each(|x| *x = 1.0);
+        for r in 0..3 {
+            g.note_written(r, seq);
+        }
+        g.leave(row2).unwrap();
+        all_zero_past(&g, row2, 0);
     }
 
     #[test]
@@ -371,14 +780,17 @@ mod tests {
         g.join(1, &k1, &v1).unwrap();
         let mut sk = Tensor::<f32>::zeros(&[2, 1, 2, 8, 4]);
         let mut sv = sk.clone();
-        assert!(g.gather_rows(&[1], &mut sk, &mut sv).is_err(), "row 1 not leased");
-        assert!(g.gather_rows(&[9], &mut sk, &mut sv).is_err(), "row out of range");
-        assert!(g.gather_rows(&[0, 0], &mut sk, &mut sv).is_err(), "bucket too small");
+        assert!(g.gather_rows(&[(1, 8)], &mut sk, &mut sv).is_err(), "row 1 not leased");
+        assert!(g.gather_rows(&[(9, 8)], &mut sk, &mut sv).is_err(), "row out of range");
+        assert!(g.gather_rows(&[(0, 8), (0, 8)], &mut sk, &mut sv).is_err(),
+                "bucket too small");
+        assert!(g.gather_rows(&[(0, 9)], &mut sk, &mut sv).is_err(), "length > seq");
         let mut bad = Tensor::<f32>::zeros(&[2, 1, 2, 6, 4]);
-        assert!(g.gather_rows(&[0], &mut bad, &mut sv.clone()).is_err(), "seq mismatch");
-        assert!(g.scatter_rows(&[9], &sk, &sv).is_err());
-        assert!(g.gather_rows(&[0], &mut sk, &mut sv).is_ok());
-        assert!(g.scatter_rows(&[0], &sk, &sv).is_ok());
+        assert!(g.gather_rows(&[(0, 6)], &mut bad, &mut sv.clone()).is_err(),
+                "seq mismatch");
+        assert!(g.scatter_rows(&[(9, 8)], &sk, &sv).is_err());
+        assert!(g.gather_rows(&[(0, 8)], &mut sk, &mut sv).is_ok());
+        assert!(g.scatter_rows(&[(0, 8)], &sk, &sv).is_ok());
 
         // Regression: a duplicated row index used to pass validation even
         // when the scratch had room — scatter then double-wrote the group
@@ -389,13 +801,180 @@ mod tests {
         let mut sk2 = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
         let mut sv2 = sk2.clone();
         assert!(
-            g.gather_rows(&[0, 0], &mut sk2, &mut sv2).is_err(),
+            g.gather_rows(&[(0, 8), (0, 8)], &mut sk2, &mut sv2).is_err(),
             "duplicate gather rows must be rejected"
         );
         assert!(
-            g.scatter_rows(&[0, 0], &sk2, &sv2).is_err(),
+            g.scatter_rows(&[(0, 8), (0, 8)], &sk2, &sv2).is_err(),
             "duplicate scatter rows must be rejected"
         );
-        assert!(g.gather_rows(&[1, 0], &mut sk2, &mut sv2).is_ok(), "distinct rows still fine");
+        assert!(g.gather_rows(&[(1, 8), (0, 8)], &mut sk2, &mut sv2).is_ok(),
+                "distinct rows still fine");
+    }
+
+    // ---- PagedGroup ----
+
+    const PDIMS: [usize; 5] = [2, 1, 2, 8, 4]; // single-row cache shape
+    const PAGE: usize = 4;
+
+    fn pool() -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig {
+            page_tokens: PAGE,
+            min_prefix: 2,
+            ..Default::default()
+        })
+    }
+
+    /// Single-row cache whose position `s` holds `tokens[s]`.
+    fn row_for(tokens: &[i32]) -> (Tensor<f32>, Tensor<f32>) {
+        let mut k = Tensor::<f32>::zeros(&PDIMS);
+        let mut v = Tensor::<f32>::zeros(&PDIMS);
+        for l in 0..PDIMS[0] {
+            for h in 0..PDIMS[2] {
+                for (s, &t) in tokens.iter().enumerate() {
+                    for d in 0..PDIMS[4] {
+                        let off = (((l * PDIMS[2]) + h) * PDIMS[3] + s) * PDIMS[4] + d;
+                        k.data[off] = t as f32;
+                        v.data[off] = t as f32 + 0.5;
+                    }
+                }
+            }
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn paged_join_gather_scatter_leave_round_trip() {
+        let mut pool = pool();
+        let mut g = PagedGroup::new(2, PAGE, 8);
+        let tokens: Vec<i32> = vec![10, 11, 12, 13, 14]; // 1 full page + tail
+        let (k, v) = row_for(&tokens);
+        let rp = pool.lease_row_pages("fp32", &tokens, &k, &v, 0).unwrap();
+        let row = g.join_pages(7, rp.pages, tokens.len()).unwrap();
+        assert_eq!(g.occupant(row), Some(7));
+        assert_eq!(g.row_len(row), Some(5));
+        assert_eq!(g.free_rows(), 1);
+        assert_eq!(g.active_rows(), vec![(row, 7)]);
+
+        // Gather reproduces the committed prefix; dirty scratch positions
+        // past it stay untouched.
+        let mut sk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        sk.data.iter_mut().for_each(|x| *x = -9.0);
+        let mut sv = sk.clone();
+        g.gather_rows(&pool, &[(row, 5)], &mut sk, &mut sv).unwrap();
+        for s in 0..5 {
+            assert_eq!(sk.at(&[0, 0, 0, s, 0]), tokens[s] as f32, "position {s}");
+            assert_eq!(sv.at(&[1, 0, 1, s, 3]), tokens[s] as f32 + 0.5);
+        }
+        assert_eq!(sk.at(&[0, 0, 0, 5, 0]), -9.0, "padding untouched");
+        assert_eq!(sk.at(&[0, 1, 0, 0, 0]), -9.0, "other scratch rows untouched");
+
+        // Advance: the chunk wrote positions [5, 7); scatter only those.
+        for s in 5..7 {
+            for l in 0..2 {
+                for h in 0..2 {
+                    for d in 0..4 {
+                        let off = ((((l * 2) * 2 + h) * 8) + s) * 4 + d;
+                        sk.data[off] = 90.0 + s as f32;
+                        sv.data[off] = 90.5 + s as f32;
+                    }
+                }
+            }
+        }
+        let pages_before = pool.stats().resident_pages;
+        g.scatter_advance(&mut pool, &[(row, 5, 7)], &sk, &sv).unwrap();
+        assert_eq!(pool.stats().resident_pages, pages_before + 1,
+                   "one fresh frontier page for positions [5, 8)");
+        g.set_len(row, 7).unwrap();
+        // Re-gather sees the advance.
+        let mut rk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut rv = rk.clone();
+        g.gather_rows(&pool, &[(row, 7)], &mut rk, &mut rv).unwrap();
+        assert_eq!(rk.at(&[0, 0, 0, 6, 0]), 96.0);
+        assert_eq!(rv.at(&[1, 0, 1, 5, 3]), 95.5);
+        assert_eq!(rk.at(&[0, 0, 0, 4, 0]), 14.0, "committed prefix intact");
+
+        // Leave releases every page reference.
+        assert_eq!(g.leave(&mut pool, row).unwrap(), 7);
+        assert!(g.is_empty());
+        assert_eq!(pool.stats().row_page_refs, 0);
+        assert!(g.leave(&mut pool, row).is_err(), "double leave");
+    }
+
+    #[test]
+    fn paged_rows_share_cached_pages_and_never_write_them() {
+        let mut pool = pool();
+        let mut g = PagedGroup::new(2, PAGE, 8);
+        let template: Vec<i32> = vec![5; PAGE]; // one full page
+        let (k, v) = row_for(&template);
+        pool.insert("fp32", &template, &k, &v);
+
+        // Two rows admit on the same cached template: one physical page.
+        let rp1 = pool.lease_row_pages("fp32", &template, &k, &v, 0).unwrap();
+        let rp2 = pool.lease_row_pages("fp32", &template, &k, &v, 0).unwrap();
+        assert_eq!(rp1.pages, rp2.pages, "both rows reference the same page");
+        assert_eq!(rp1.shared + rp2.shared, 2);
+        assert_eq!(pool.stats().row_copied_pages, 0, "zero full-page copies warm");
+        let shared_pid = rp1.pages[0];
+        let r1 = g.join_pages(1, rp1.pages, PAGE).unwrap();
+        let r2 = g.join_pages(2, rp2.pages, PAGE).unwrap();
+        assert_eq!(pool.page_ref_count(shared_pid), Some(3), "run + two rows");
+
+        // Advancing writes the frontier (a fresh page), never the shared
+        // page — which both rows keep reading correctly.
+        let (sk, sv) = {
+            let mut t: Vec<i32> = template.clone();
+            t.extend([8]);
+            row_for(&t)
+        };
+        let mut bk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut bv = bk.clone();
+        bk.copy_axis1_row_from(0, &sk, 0);
+        bv.copy_axis1_row_from(0, &sv, 0);
+        g.scatter_advance(&mut pool, &[(r1, PAGE, PAGE + 1)], &bk, &bv).unwrap();
+        g.set_len(r1, PAGE + 1).unwrap();
+        assert_eq!(pool.page_ref_count(shared_pid), Some(3), "shared page untouched");
+        let mut gk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut gv = gk.clone();
+        g.gather_rows(&pool, &[(r2, PAGE), (r1, PAGE + 1)], &mut gk, &mut gv).unwrap();
+        assert_eq!(gk.at(&[0, 0, 0, PAGE - 1, 0]), 5.0, "row 2 reads the template");
+        assert_eq!(gk.at(&[0, 1, 0, PAGE, 0]), 8.0, "row 1 reads its advance");
+
+        g.leave(&mut pool, r1).unwrap();
+        g.leave(&mut pool, r2).unwrap();
+        assert_eq!(pool.page_ref_count(shared_pid), Some(1), "run reference remains");
+        assert_eq!(pool.stats().row_page_refs, 0);
+    }
+
+    #[test]
+    fn paged_group_validates_like_the_slab_group() {
+        let mut pool = pool();
+        let mut g = PagedGroup::new(2, PAGE, 8);
+        let tokens: Vec<i32> = vec![1, 2, 3];
+        let (k, v) = row_for(&tokens);
+        let rp = pool.lease_row_pages("fp32", &tokens, &k, &v, 0).unwrap();
+        let row = g.join_pages(1, rp.pages, 3).unwrap();
+        // Duplicate slot, bad coverage, oversize len.
+        assert!(g.join_pages(1, vec![], 0).is_err(), "duplicate slot");
+        assert!(g.join_pages(2, vec![], 3).is_err(), "no pages for 3 tokens");
+        assert!(g.join_pages(2, vec![1, 2, 3], 9).is_err(), "len > max_seq");
+        // Gather beyond committed, unleased rows, duplicates.
+        let mut sk = Tensor::<f32>::zeros(&[2, 2, 2, 8, 4]);
+        let mut sv = sk.clone();
+        assert!(g.gather_rows(&pool, &[(row, 4)], &mut sk, &mut sv).is_err(),
+                "gather past committed");
+        assert!(g.gather_rows(&pool, &[(1, 1)], &mut sk, &mut sv).is_err(), "not leased");
+        assert!(g.gather_rows(&pool, &[(row, 3), (row, 3)], &mut sk, &mut sv).is_err(),
+                "duplicate rows");
+        assert!(g.scatter_advance(&mut pool, &[(row, 5, 4)], &sk, &sv).is_err(),
+                "inverted range");
+        assert!(g.scatter_advance(&mut pool, &[(row, 3, 9)], &sk, &sv).is_err(),
+                "range past max_seq");
+        assert!(g.scatter_advance(&mut pool, &[(row, 6, 7)], &sk, &sv).is_err(),
+                "page gap");
+        assert!(g.set_len(row, 9).is_err(), "len past max_seq");
+        assert!(g.set_len(row, 5).is_err(), "len past page coverage");
+        g.leave(&mut pool, row).unwrap();
+        assert_eq!(pool.stats().resident_bytes, 0);
     }
 }

@@ -21,10 +21,10 @@ pub mod scheduler;
 pub use calls::{CallLog, CallRecord, FnKind};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
-pub use kv::BatchGroup;
+pub use kv::{BatchGroup, PagedGroup, RowStore};
 pub use plan::{best_bucket, plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
 pub use prefixcache::{Lease, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
-pub use router::{BucketStat, EngineHandle, GovernorSnapshot, PrefixSnapshot, RouterStats,
-                 StatsSnapshot, Ticket, VariantCalls};
+pub use router::{BucketStat, EngineHandle, GovernorSnapshot, KvSnapshot, PrefixSnapshot,
+                 RouterStats, StatsSnapshot, Ticket, VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

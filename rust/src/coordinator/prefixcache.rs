@@ -182,6 +182,18 @@ pub struct PrefixCacheStats {
     /// share ratio: 1.0 = no sharing, higher = one physical page backing
     /// several cached prefixes.
     pub page_refs: usize,
+    /// Full pool pages live batch rows reference instead of copying
+    /// (page-table admissions riding cached runs). Monotonic.
+    pub row_shared_pages: u64,
+    /// Full pool pages copied into private row pages because no cached run
+    /// covered them (cold admissions). Monotonic — the warm-admission
+    /// zero-copy assertion counter.
+    pub row_copied_pages: u64,
+    /// Partial tail pages copied for rows (expected even when fully
+    /// cached: the growth frontier must be private). Monotonic.
+    pub row_tail_copies: u64,
+    /// Live row→page references (the page-table working set).
+    pub row_page_refs: usize,
 }
 
 impl PrefixCacheStats {
@@ -365,6 +377,29 @@ struct Counters {
     evictions: u64,
     copied_pages: u64,
     shared_pages: u64,
+    row_shared_pages: u64,
+    row_copied_pages: u64,
+    row_tail_copies: u64,
+}
+
+/// Pages backing one live batch row, handed out by
+/// [`PrefixCache::lease_row_pages`]. The caller owns one refcount per page
+/// id and must hand every id back through
+/// [`PrefixCache::release_row_pages`] (directly or via
+/// `PagedGroup::leave`).
+#[derive(Debug, Default)]
+pub struct RowPages {
+    /// Ordered page ids; page `i` covers token positions
+    /// `[i*P, min((i+1)*P, len))`.
+    pub pages: Vec<u64>,
+    /// Full pages shared with a cached run: referenced, not copied.
+    pub shared: usize,
+    /// Full pages copied from the source (no cached coverage).
+    pub copied: usize,
+    /// Partial tail pages copied (1 or 0). A tail is copied even when the
+    /// cache covers it: the row will write into it, and rows never write
+    /// shared pages.
+    pub tail_copied: usize,
 }
 
 /// The cache itself. Owned by the engine (single-threaded, like the rest of
@@ -381,6 +416,10 @@ pub struct PrefixCache {
     /// Logical clock for LRU recency (bumped per lookup/insert).
     tick: u64,
     resident_bytes: usize,
+    /// Live row→page references (pages leased to batch rows). Pages with
+    /// only row references are working set, not cache: eviction never
+    /// touches them because their refcount can't reach zero while leased.
+    row_refs: usize,
     counters: Counters,
 }
 
@@ -395,6 +434,7 @@ impl PrefixCache {
             next_page: 1,
             tick: 0,
             resident_bytes: 0,
+            row_refs: 0,
             counters: Counters::default(),
         }
     }
@@ -508,6 +548,244 @@ impl PrefixCache {
             debug_assert!(run.leases > 0, "release without matching lease");
             run.leases = run.leases.saturating_sub(1);
         }
+    }
+
+    // ---- Row page-table API ------------------------------------------------
+    //
+    // The pool doubles as the allocator for *live batch rows* (page-table
+    // rows over the shared pool, not owned `max_seq` slabs). The ownership
+    // discipline is strict and simple because committed KV is append-only:
+    //
+    // * A row may READ any page it references (gather).
+    // * A row may WRITE only a page it references *exclusively* (refs == 1)
+    //   — its private growth-frontier pages. [`PrefixCache::write_row_page`]
+    //   enforces this; sharing an already-written full page (admission
+    //   riding a cached run, or a finish-time snapshot referencing row
+    //   pages) is always safe because full pages are never written again.
+    // * Row references pin pages exactly like run references: eviction
+    //   frees pages only at refcount zero, so a page a live row references
+    //   is never freed or COW'd out from under it.
+    //
+    // None of these entry points check `cfg.enabled` — with the cache
+    // disabled the pool still serves as the rows' page allocator (every
+    // admission simply copies all of its pages: no runs, no sharing).
+
+    /// Longest cached match of `tokens` under `variant` *without* counting
+    /// a hit/miss, taking a lease or touching recency: the sharing probe
+    /// the row page-table admission uses after `lookup`/`insert` already
+    /// did the accounting.
+    pub fn find(&self, variant: &str, tokens: &[i32]) -> Option<(u64, usize)> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.roots.get(variant).and_then(|r| r.longest(tokens))
+    }
+
+    /// Page shape for a source cache pair: the row shape at one page of
+    /// sequence.
+    fn page_dims(&self, cache_dims: &[usize]) -> Vec<usize> {
+        let r = cache_dims.len();
+        let mut pdims = cache_dims.to_vec();
+        pdims[1] = 1;
+        pdims[r - 2] = self.page_len();
+        pdims
+    }
+
+    /// Allocate one zeroed private page (refcount 1, owned by a row) shaped
+    /// after `cache_dims` (a `[L, B, .., S, hd]` cache's row shape at
+    /// `page_tokens` sequence positions). The caller owns the reference.
+    pub fn alloc_row_page(&mut self, cache_dims: &[usize]) -> u64 {
+        let pdims = self.page_dims(cache_dims);
+        let page_bytes = 2 * pdims.iter().product::<usize>() * std::mem::size_of::<f32>();
+        let pid = self.next_page;
+        self.next_page += 1;
+        self.pages.insert(pid, Page {
+            k: Tensor::zeros(&pdims),
+            v: Tensor::zeros(&pdims),
+            refs: 1,
+            bytes: page_bytes,
+        });
+        self.resident_bytes += page_bytes;
+        self.row_refs += 1;
+        pid
+    }
+
+    /// Build a row's page table for `tokens`, whose KV lives in row
+    /// `src_row` of `k_src`/`v_src` (the advanced prefill scratch): full
+    /// pages covered by the longest cached run are *referenced* (refcount
+    /// bump, zero copy), everything else — including a partial tail even
+    /// when cached — is copied into fresh private pages, because the row
+    /// will write its growth frontier and rows never write shared pages.
+    /// Runs `evict_to_budget` afterwards: row pages count toward the pool
+    /// budget like any resident page (they are the serving working set).
+    pub fn lease_row_pages(&mut self, variant: &str, tokens: &[i32],
+                           k_src: &Tensor<f32>, v_src: &Tensor<f32>,
+                           src_row: usize) -> Result<RowPages> {
+        let len = tokens.len();
+        let r = k_src.rank();
+        if r < 4 || k_src.dims != v_src.dims {
+            bail!("source is not a cache-shaped pair: {:?} vs {:?}", k_src.dims, v_src.dims);
+        }
+        if src_row >= k_src.dims[1] {
+            bail!("source row {src_row} out of range for batch {}", k_src.dims[1]);
+        }
+        if len > k_src.dims[r - 2] {
+            bail!("{len} tokens exceed source seq {}", k_src.dims[r - 2]);
+        }
+        let p = self.page_len();
+        let mut out = RowPages::default();
+        if len == 0 {
+            return Ok(out);
+        }
+        let hit = self.find(variant, tokens);
+        let match_len = hit.map(|(_, m)| m).unwrap_or(0).min(len);
+        let src_pages: Vec<u64> = match hit {
+            Some((rid, _)) => self.runs.get(&rid).expect("trie points at live run").pages.clone(),
+            None => Vec::new(),
+        };
+        let n_pages = len.div_ceil(p);
+        // Only pages the match covers *entirely* are shareable; the row
+        // must own its partial tail (and anything uncached) privately.
+        let full_shared = (match_len / p).min(src_pages.len()).min(len / p);
+        let pdims = self.page_dims(&k_src.dims);
+        let page_bytes = 2 * pdims.iter().product::<usize>() * std::mem::size_of::<f32>();
+        for i in 0..n_pages {
+            let start = i * p;
+            let cov = p.min(len - start);
+            if i < full_shared {
+                self.pages.get_mut(&src_pages[i]).expect("run references live page").refs += 1;
+                self.row_refs += 1;
+                self.counters.row_shared_pages += 1;
+                out.pages.push(src_pages[i]);
+                out.shared += 1;
+                continue;
+            }
+            let mut pk = Tensor::<f32>::zeros(&pdims);
+            let mut pv = Tensor::<f32>::zeros(&pdims);
+            pk.copy_axis1_row_seq_range_from(0, 0, k_src, src_row, start, cov);
+            pv.copy_axis1_row_seq_range_from(0, 0, v_src, src_row, start, cov);
+            let pid = self.next_page;
+            self.next_page += 1;
+            self.pages.insert(pid, Page { k: pk, v: pv, refs: 1, bytes: page_bytes });
+            self.resident_bytes += page_bytes;
+            self.row_refs += 1;
+            if cov == p {
+                self.counters.row_copied_pages += 1;
+                out.copied += 1;
+            } else {
+                self.counters.row_tail_copies += 1;
+                out.tail_copied += 1;
+            }
+            out.pages.push(pid);
+        }
+        self.evict_to_budget(0);
+        Ok(out)
+    }
+
+    /// Hand a row's page references back; pages whose refcount drops to
+    /// zero are freed (shared pages survive on their runs' references).
+    pub fn release_row_pages(&mut self, pages: &[u64]) {
+        for &pid in pages {
+            let Some(page) = self.pages.get_mut(&pid) else {
+                debug_assert!(false, "row released unknown page {pid}");
+                continue;
+            };
+            debug_assert!(page.refs > 0, "row release on zero-ref page {pid}");
+            page.refs -= 1;
+            self.row_refs = self.row_refs.saturating_sub(1);
+            if page.refs == 0 {
+                let bytes = page.bytes;
+                self.pages.remove(&pid);
+                self.resident_bytes -= bytes;
+            }
+        }
+    }
+
+    /// Write `n` sequence positions from `(src_row, src_pos)` of a cache
+    /// pair into page `id` starting at `page_pos`. Refuses unless the page
+    /// is exclusively referenced (refs == 1): rows only ever write their
+    /// private growth frontier, so a shared page reaching this call is a
+    /// bookkeeping bug, not a copy-on-write opportunity.
+    pub fn write_row_page(&mut self, id: u64, page_pos: usize,
+                          k_src: &Tensor<f32>, v_src: &Tensor<f32>,
+                          src_row: usize, src_pos: usize, n: usize) -> Result<()> {
+        let page = self
+            .pages
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("write into unknown page {id}"))?;
+        if page.refs != 1 {
+            bail!("page {id} is shared ({} refs): rows never write shared pages", page.refs);
+        }
+        page.k.copy_axis1_row_seq_range_from(0, page_pos, k_src, src_row, src_pos, n);
+        page.v.copy_axis1_row_seq_range_from(0, page_pos, v_src, src_row, src_pos, n);
+        Ok(())
+    }
+
+    /// Copy `n` sequence positions of page `id` (from `page_pos`) into
+    /// `(dst_row, dst_pos)` of a cache pair — the page-wise gather read.
+    pub fn read_page_into(&self, id: u64, page_pos: usize,
+                          k_dst: &mut Tensor<f32>, v_dst: &mut Tensor<f32>,
+                          dst_row: usize, dst_pos: usize, n: usize) -> Result<()> {
+        let page = self
+            .pages
+            .get(&id)
+            .ok_or_else(|| anyhow!("read from unknown page {id}"))?;
+        k_dst.copy_axis1_row_seq_range_from(dst_row, dst_pos, &page.k, 0, page_pos, n);
+        v_dst.copy_axis1_row_seq_range_from(dst_row, dst_pos, &page.v, 0, page_pos, n);
+        Ok(())
+    }
+
+    /// Snapshot a finished row's committed prefix as a run that *references*
+    /// the row's own pages — the zero-copy mid-stream snapshot: pure
+    /// refcount bumps, no KV moves, partial tail included (the run's key
+    /// length bounds what a future splice reads, so tail positions past
+    /// `tokens.len()` are never served). Returns runs evicted rebalancing
+    /// the budget (the new run itself adds zero bytes).
+    pub fn insert_pages(&mut self, variant: &str, tokens: &[i32], pages: &[u64],
+                        mid_from: Option<usize>) -> usize {
+        if !self.cfg.enabled || tokens.is_empty() || tokens.len() < self.cfg.min_prefix {
+            return 0;
+        }
+        let len = tokens.len();
+        let p = self.page_len();
+        let n_pages = len.div_ceil(p);
+        if pages.len() < n_pages || pages[..n_pages].iter().any(|id| !self.pages.contains_key(id)) {
+            return 0; // not a coherent page table for this key; refuse quietly
+        }
+        self.tick += 1;
+        // Same fully-covered fast path as insert_from_row: a key a cached
+        // run already covers adds nothing.
+        if let Some((rid, m)) = self.roots.get(variant).and_then(|rt| rt.longest(tokens)) {
+            if m == len {
+                if let Some(run) = self.runs.get_mut(&rid) {
+                    run.last_use = self.tick;
+                }
+                return 0;
+            }
+        }
+        let run_pages: Vec<u64> = pages[..n_pages].to_vec();
+        for pid in &run_pages {
+            self.pages.get_mut(pid).expect("checked above").refs += 1;
+            self.counters.shared_pages += 1;
+        }
+        let id = self.next_run;
+        self.next_run += 1;
+        let _replaced = self
+            .roots
+            .entry(variant.to_string())
+            .or_default()
+            .insert(tokens, id);
+        debug_assert!(_replaced.is_none(), "fully-covered check said the key was absent");
+        self.runs.insert(id, Run {
+            variant: variant.to_string(),
+            key: tokens.to_vec(),
+            pages: run_pages,
+            leases: 0,
+            last_use: self.tick,
+            mid_from: mid_from.unwrap_or(len).min(len),
+        });
+        self.counters.inserts += 1;
+        self.evict_to_budget(id)
     }
 
     /// Snapshot the first `tokens.len()` positions of an advanced
@@ -711,6 +989,17 @@ impl PrefixCache {
         self.runs.keys().copied().collect()
     }
 
+    /// A resident page's refcount (test hook for the refcount-integrity
+    /// property: run references + live row references must equal this).
+    pub fn page_ref_count(&self, id: u64) -> Option<u32> {
+        self.pages.get(&id).map(|p| p.refs)
+    }
+
+    /// Resident page ids (test hook).
+    pub fn page_ids(&self) -> Vec<u64> {
+        self.pages.keys().copied().collect()
+    }
+
     pub fn stats(&self) -> PrefixCacheStats {
         PrefixCacheStats {
             hits: self.counters.hits,
@@ -727,6 +1016,10 @@ impl PrefixCache {
             segments: self.runs.len(),
             leases: self.runs.values().map(|r| r.leases as usize).sum(),
             page_refs: self.pages.values().map(|p| p.refs as usize).sum(),
+            row_shared_pages: self.counters.row_shared_pages,
+            row_copied_pages: self.counters.row_copied_pages,
+            row_tail_copies: self.counters.row_tail_copies,
+            row_page_refs: self.row_refs,
         }
     }
 }
@@ -1174,6 +1467,123 @@ mod tests {
         assert_eq!(off.insert("fp32", &[1, 1], &k, &v), 0);
         assert!(off.lookup("fp32", &[1, 1]).is_none());
         assert_eq!(off.stats(), PrefixCacheStats::default());
+    }
+
+    #[test]
+    fn lease_row_pages_shares_full_pages_and_copies_only_the_tail() {
+        let mut c = PrefixCache::new(cfg(16));
+        let key: Vec<i32> = (0..2 * PAGE as i32 + 2).map(|i| 100 + i).collect();
+        let (k, v) = row_for(&key);
+        c.insert("fp32", &key, &k, &v);
+        let run_pages = c.run_pages(c.run_ids()[0]).unwrap();
+        let before = c.stats();
+
+        let rp = c.lease_row_pages("fp32", &key, &k, &v, 0).expect("lease");
+        assert_eq!((rp.shared, rp.copied, rp.tail_copied), (2, 0, 1),
+                   "fully-cached admission: zero full-page copies");
+        assert_eq!(rp.pages[..2], run_pages[..2], "full pages shared by id");
+        assert_ne!(rp.pages[2], run_pages[2], "tail page is private");
+        let s = c.stats();
+        assert_eq!(s.resident_pages, before.resident_pages + 1, "only the tail allocated");
+        assert_eq!(s.row_copied_pages, 0);
+        assert_eq!(s.row_shared_pages, 2);
+        assert_eq!(s.row_tail_copies, 1);
+        assert_eq!(s.row_page_refs, 3);
+        assert_eq!(c.page_ref_count(rp.pages[0]), Some(2), "run + row");
+        assert_eq!(c.page_ref_count(rp.pages[2]), Some(1), "row only");
+
+        // The private tail really holds the row's KV.
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.read_page_into(rp.pages[2], 0, &mut dk, &mut dv, 0, 2 * PAGE, 2).unwrap();
+        assert_eq!(dk.at(&[0, 0, 0, 2 * PAGE, 0]), key[2 * PAGE] as f32);
+
+        // Releasing the row frees only the private tail; shared pages
+        // survive on the run's references.
+        c.release_row_pages(&rp.pages);
+        let s = c.stats();
+        assert_eq!(s.row_page_refs, 0);
+        assert_eq!(s.resident_pages, before.resident_pages);
+        assert!(!c.has_page(rp.pages[2]), "private tail freed at zero refs");
+        assert!(c.has_page(rp.pages[0]), "shared page survives");
+    }
+
+    #[test]
+    fn lease_row_pages_with_cache_disabled_copies_everything() {
+        // The pool still serves as the rows' page allocator when the cache
+        // is off: no runs, no sharing, every page private.
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            page_tokens: PAGE,
+            ..PrefixCacheConfig::off()
+        });
+        let key: Vec<i32> = (0..PAGE as i32 + 1).collect();
+        let (k, v) = row_for(&key);
+        let rp = c.lease_row_pages("fp32", &key, &k, &v, 0).expect("lease");
+        assert_eq!((rp.shared, rp.copied, rp.tail_copied), (0, 1, 1));
+        assert_eq!(c.stats().resident_pages, 2);
+        assert_eq!(c.stats().segments, 0, "no run materialized");
+        c.release_row_pages(&rp.pages);
+        assert_eq!(c.stats().resident_pages, 0, "all refs returned to zero");
+        assert_eq!(c.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn write_row_page_refuses_shared_pages_and_writes_private_ones() {
+        let mut c = PrefixCache::new(cfg(16));
+        let key: Vec<i32> = vec![4; PAGE];
+        let (k, v) = row_for(&key);
+        c.insert("fp32", &key, &k, &v);
+        let rp = c.lease_row_pages("fp32", &key, &k, &v, 0).expect("lease");
+        assert_eq!(rp.shared, 1);
+        assert!(
+            c.write_row_page(rp.pages[0], 0, &k, &v, 0, 0, 1).is_err(),
+            "rows never write shared pages"
+        );
+        let pid = c.alloc_row_page(&DIMS);
+        c.write_row_page(pid, 1, &k, &v, 0, 2, 2).expect("private write");
+        let mut dk = Tensor::<f32>::zeros(&DIMS);
+        let mut dv = Tensor::<f32>::zeros(&DIMS);
+        c.read_page_into(pid, 1, &mut dk, &mut dv, 0, 0, 2).unwrap();
+        assert_eq!(dk.at(&[0, 0, 0, 0, 0]), 4.0, "wrote source position 2");
+        assert_eq!(dk.at(&[0, 0, 0, 2, 0]), 0.0, "beyond the range untouched");
+        c.release_row_pages(&rp.pages);
+        c.release_row_pages(&[pid]);
+        assert_eq!(c.stats().row_page_refs, 0);
+    }
+
+    #[test]
+    fn insert_pages_snapshots_by_reference_with_zero_copies() {
+        let mut c = PrefixCache::new(cfg(16));
+        // A "finished row": page table built cold (nothing cached yet).
+        let key: Vec<i32> = (0..PAGE as i32 + 2).map(|i| 60 + i).collect();
+        let (k, v) = row_for(&key);
+        let rp = c.lease_row_pages("fp32", &key, &k, &v, 0).expect("lease");
+        let copied_before = c.stats().copied_pages;
+        let pages_before = c.stats().resident_pages;
+
+        assert_eq!(c.insert_pages("fp32", &key, &rp.pages, Some(2)), 0);
+        let s = c.stats();
+        assert_eq!(s.copied_pages, copied_before, "snapshot moved zero pages");
+        assert_eq!(s.resident_pages, pages_before, "snapshot allocated zero pages");
+        assert_eq!(s.segments, 1);
+        assert_eq!(c.page_ref_count(rp.pages[0]), Some(2), "row + run");
+
+        // The run serves the content even after the row leaves — including
+        // the partial-tail positions its key covers.
+        c.release_row_pages(&rp.pages);
+        let l = c.lookup("fp32", &key).expect("hit");
+        assert_eq!(l.len(), key.len());
+        let (dk, _) = spliced(&c, &l);
+        assert_eq!(dk.at(&[0, 0, 0, PAGE + 1, 0]), key[PAGE + 1] as f32,
+                   "partial-tail position served");
+        c.release(l);
+        assert_eq!(c.stats().mid_stream_hit_tokens, (key.len() - 2) as u64);
+
+        // Duplicate snapshot of a covered key adds nothing.
+        assert_eq!(c.insert_pages("fp32", &key, &rp.pages, Some(2)), 0);
+        assert_eq!(c.stats().segments, 1);
+        // A page table too short for its key is refused quietly.
+        assert_eq!(c.insert_pages("fp32", &vec![9; 3 * PAGE], &rp.pages, None), 0);
     }
 
     #[test]

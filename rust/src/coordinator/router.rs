@@ -119,6 +119,37 @@ pub struct PrefixSnapshot {
     pub segments: u64,
     /// Runs evicted by the byte-budget LRU so far.
     pub evictions: u64,
+    /// Modeled prefill seconds saved by suffix-only admission (sum of the
+    /// `prefill_saved_s` histogram).
+    pub prefill_saved_s: f64,
+}
+
+/// Point-in-time view of KV residency and the page-table row backend (see
+/// `coordinator::kv`): what the serving working set costs and how much of
+/// it is shared by reference instead of copied.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvSnapshot {
+    /// Whether batch rows are page-tables over the shared pool (vs the
+    /// copy-based slab reference).
+    pub paged_rows: bool,
+    /// Bytes of KV resident (pool pages; plus the whole batch slab under
+    /// the copy-based backend).
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes` — the A/B comparison figure.
+    pub resident_peak_bytes: u64,
+    /// Page references held by live batch rows.
+    pub row_page_refs: u64,
+    /// Row page-table entries installed by refcount bump (zero-copy).
+    pub row_shared_pages: u64,
+    /// Full pages copied building row page-tables (0 on a warmed run).
+    pub row_copied_pages: u64,
+    /// Partial tail pages copied building row page-tables.
+    pub row_tail_copies: u64,
+    /// Modeled seconds of KV copies the page-table backend avoided by
+    /// referencing pages instead of moving them (sum of the
+    /// `kv_copy_saved_s` histogram): admission splices, committed prefixes
+    /// delta-only scatters skipped, by-reference finish snapshots.
+    pub copy_saved_s: f64,
 }
 
 /// Lock-free counters the engine thread publishes after every step and any
@@ -169,6 +200,19 @@ pub struct RouterStats {
     pub prefix_page_refs: AtomicU64,
     pub prefix_segments: AtomicU64,
     pub prefix_evictions: AtomicU64,
+    /// Modeled prefill seconds saved by suffix-only admission, microseconds.
+    pub prefix_prefill_saved_us: AtomicU64,
+    /// KV residency / page-table-row counters published by the engine
+    /// thread (`paged_rows` is 0/1, set once at spawn).
+    pub kv_paged_rows: AtomicUsize,
+    pub kv_resident_bytes: AtomicU64,
+    pub kv_resident_peak_bytes: AtomicU64,
+    pub kv_row_page_refs: AtomicU64,
+    pub kv_row_shared_pages: AtomicU64,
+    pub kv_row_copied_pages: AtomicU64,
+    pub kv_row_tail_copies: AtomicU64,
+    /// Modeled seconds of KV copies the paged backend avoided, microseconds.
+    pub kv_copy_saved_us: AtomicU64,
     /// Submitted prompts cut to the prefill window.
     pub prompt_truncated: AtomicU64,
     /// Per-bucket occupancy/calls published by the engine thread.
@@ -203,6 +247,8 @@ pub struct StatsSnapshot {
     pub governor: GovernorSnapshot,
     /// Shared-prefix KV cache view (all-zero when disabled).
     pub prefix: PrefixSnapshot,
+    /// KV residency / page-table-row view.
+    pub kv: KvSnapshot,
     /// Submitted prompts cut to the prefill window.
     pub prompt_truncated: u64,
 }
@@ -278,6 +324,23 @@ impl StatsSnapshot {
                     ("page_share_ratio", Json::num(self.prefix.page_share_ratio)),
                     ("segments", Json::num(self.prefix.segments as f64)),
                     ("evictions", Json::num(self.prefix.evictions as f64)),
+                    ("prefill_saved_s", Json::num(self.prefix.prefill_saved_s)),
+                ]),
+            ),
+            (
+                "kv",
+                Json::obj(vec![
+                    ("paged_rows", Json::Bool(self.kv.paged_rows)),
+                    ("resident_bytes", Json::num(self.kv.resident_bytes as f64)),
+                    (
+                        "resident_peak_bytes",
+                        Json::num(self.kv.resident_peak_bytes as f64),
+                    ),
+                    ("row_page_refs", Json::num(self.kv.row_page_refs as f64)),
+                    ("row_shared_pages", Json::num(self.kv.row_shared_pages as f64)),
+                    ("row_copied_pages", Json::num(self.kv.row_copied_pages as f64)),
+                    ("row_tail_copies", Json::num(self.kv.row_tail_copies as f64)),
+                    ("copy_saved_s", Json::num(self.kv.copy_saved_s)),
                 ]),
             ),
             ("prompt_truncated", Json::num(self.prompt_truncated as f64)),
@@ -335,6 +398,9 @@ impl EngineHandle {
                 )?);
                 let mut engine = Engine::new(mr, cfg)?;
                 tstats.batch.store(engine.cfg.batch, Ordering::Relaxed);
+                tstats
+                    .kv_paged_rows
+                    .store(engine.cfg.paged_rows as usize, Ordering::Relaxed);
                 let mut routes: HashMap<u64, Sender<Completion>> = HashMap::new();
                 let mut shutdown = false;
                 loop {
@@ -507,7 +573,20 @@ impl EngineHandle {
                     },
                     segments: s.prefix_segments.load(Ordering::Relaxed),
                     evictions: s.prefix_evictions.load(Ordering::Relaxed),
+                    prefill_saved_s: s.prefix_prefill_saved_us.load(Ordering::Relaxed)
+                        as f64
+                        / 1e6,
                 }
+            },
+            kv: KvSnapshot {
+                paged_rows: s.kv_paged_rows.load(Ordering::Relaxed) != 0,
+                resident_bytes: s.kv_resident_bytes.load(Ordering::Relaxed),
+                resident_peak_bytes: s.kv_resident_peak_bytes.load(Ordering::Relaxed),
+                row_page_refs: s.kv_row_page_refs.load(Ordering::Relaxed),
+                row_shared_pages: s.kv_row_shared_pages.load(Ordering::Relaxed),
+                row_copied_pages: s.kv_row_copied_pages.load(Ordering::Relaxed),
+                row_tail_copies: s.kv_row_tail_copies.load(Ordering::Relaxed),
+                copy_saved_s: s.kv_copy_saved_us.load(Ordering::Relaxed) as f64 / 1e6,
             },
             prompt_truncated: s.prompt_truncated.load(Ordering::Relaxed),
         }
@@ -676,6 +755,17 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
             .gov_delta_milli
             .store((h.mean() * 1e3) as i64, Ordering::Relaxed);
     }
+    // Modeled-savings histograms publish as their running sums.
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::PREFILL_SAVED_S) {
+        stats
+            .prefix_prefill_saved_us
+            .store((h.sum() * 1e6) as u64, Ordering::Relaxed);
+    }
+    if let Some(h) = engine.metrics.hist(crate::metrics::names::KV_COPY_SAVED_S) {
+        stats
+            .kv_copy_saved_us
+            .store((h.sum() * 1e6) as u64, Ordering::Relaxed);
+    }
     // The prefix block is gauges end to end: the engine publishes the
     // cache's own (monotonic) counters wholesale after each admission pass.
     let m = &engine.metrics;
@@ -698,6 +788,24 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
         ),
         (&stats.prefix_page_refs, crate::metrics::names::PREFIX_PAGE_REFS),
         (&stats.prefix_segments, crate::metrics::names::PREFIX_SEGMENTS),
+        (&stats.kv_resident_bytes, crate::metrics::names::KV_RESIDENT_BYTES),
+        (
+            &stats.kv_resident_peak_bytes,
+            crate::metrics::names::KV_RESIDENT_PEAK_BYTES,
+        ),
+        (&stats.kv_row_page_refs, crate::metrics::names::KV_ROW_PAGE_REFS),
+        (
+            &stats.kv_row_shared_pages,
+            crate::metrics::names::KV_ROW_SHARED_PAGES,
+        ),
+        (
+            &stats.kv_row_copied_pages,
+            crate::metrics::names::KV_ROW_COPIED_PAGES,
+        ),
+        (
+            &stats.kv_row_tail_copies,
+            crate::metrics::names::KV_ROW_TAIL_COPIES,
+        ),
     ] {
         dst.store(m.gauge(name).max(0) as u64, Ordering::Relaxed);
     }
@@ -772,6 +880,17 @@ mod tests {
                 page_share_ratio: 1.5,
                 segments: 5,
                 evictions: 3,
+                prefill_saved_s: 0.125,
+            },
+            kv: KvSnapshot {
+                paged_rows: true,
+                resident_bytes: 3 << 20,
+                resident_peak_bytes: 4 << 20,
+                row_page_refs: 12,
+                row_shared_pages: 9,
+                row_copied_pages: 0,
+                row_tail_copies: 4,
+                copy_saved_s: 0.5,
             },
             prompt_truncated: 2,
         };
@@ -821,6 +940,21 @@ mod tests {
         );
         assert_eq!(prefix.get("segments").unwrap().as_i64().unwrap(), 5);
         assert_eq!(prefix.get("evictions").unwrap().as_i64().unwrap(), 3);
+        assert!(
+            (prefix.get("prefill_saved_s").unwrap().as_f64().unwrap() - 0.125).abs() < 1e-9
+        );
+        let kv = j.get("kv").unwrap();
+        assert!(kv.get("paged_rows").unwrap().as_bool().unwrap());
+        assert_eq!(kv.get("resident_bytes").unwrap().as_i64().unwrap(), 3 << 20);
+        assert_eq!(
+            kv.get("resident_peak_bytes").unwrap().as_i64().unwrap(),
+            4 << 20
+        );
+        assert_eq!(kv.get("row_page_refs").unwrap().as_i64().unwrap(), 12);
+        assert_eq!(kv.get("row_shared_pages").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(kv.get("row_copied_pages").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(kv.get("row_tail_copies").unwrap().as_i64().unwrap(), 4);
+        assert!((kv.get("copy_saved_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         assert_eq!(j.get("prompt_truncated").unwrap().as_i64().unwrap(), 2);
     }
 }

@@ -26,15 +26,27 @@
 //!   full pages of the *generated* continuation (mid-stream snapshots), so
 //!   multi-turn resubmits hit past the prompt, and the cache can be
 //!   pre-populated from workload templates at boot
-//!   ([`coordinator::Engine::warm_prefix`]). Each engine step
-//!   then runs a plan → gather → execute → scatter →
-//!   commit pipeline (`coordinator::plan`): active rows are partitioned into
-//!   sub-batches by required function (decode-only vs verify) *and* by
-//!   verifier precision, and each sub-batch executes through the cheapest
-//!   exported (batch bucket, weight variant) pair on the cost model, so
-//!   priced memory traffic tracks useful work instead of the configured
-//!   shape — low-occupancy groups stop streaming idle KV rows and
-//!   decode-only rows stop paying full verify-chunk traffic.
+//!   ([`coordinator::Engine::warm_prefix`]). The batch rows themselves are
+//!   **page-tables over the same pool** (`coordinator::PagedGroup`,
+//!   default `paged_rows`): an admitted request's row is an ordered list of
+//!   leased page ids, so splicing a cached prefix in is O(pages) refcount
+//!   bumps plus at most one partial-tail copy — never a row-sized memcpy —
+//!   a finish-time snapshot hands the row's full pages back by reference,
+//!   and `leave()` is a lease release. Committed positions are append-only,
+//!   so full pages stay immutable and shareable while each row writes only
+//!   its private (refs == 1) growth-frontier page; the copy-based slab
+//!   backend (`paged_rows: false`) is kept as the A/B reference that CI
+//!   holds bit-identical. Each engine step then runs a plan → gather →
+//!   execute → scatter → commit pipeline (`coordinator::plan`): active rows
+//!   are partitioned into sub-batches by required function (decode-only vs
+//!   verify) *and* by verifier precision, and each sub-batch executes
+//!   through the cheapest exported (batch bucket, weight variant) pair on
+//!   the cost model, so priced memory traffic tracks useful work instead of
+//!   the configured shape — low-occupancy groups stop streaming idle KV
+//!   rows, decode-only rows stop paying full verify-chunk traffic, and
+//!   scatter writes back only each row's freshly executed `[cached,
+//!   cached+chunk)` delta (the skipped prefix traffic is booked to the
+//!   `kv_copy_saved_s` stat alongside the admission and snapshot savings).
 //!
 //! Verification precision is a *serving-time policy*, not an offline A/B
 //! pin: the fidelity governor (`coordinator::governor`) shadow re-verifies a

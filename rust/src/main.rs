@@ -50,6 +50,8 @@ fn real_main() -> Result<()> {
     .opt("prefix-page-tokens", Some("16"), "prefix-cache pool page size (tokens)")
     .opt("prefix-mid-stream", Some("on"),
          "snapshot generated continuations into the prefix cache: on | off")
+    .opt("paged-rows", Some("on"),
+         "batch rows as page-tables over the shared pool: on | off (off = copy-based slabs)")
     .flag("warmup", "serve: pre-populate the prefix cache from workload templates at boot")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
@@ -98,6 +100,11 @@ fn real_main() -> Result<()> {
                 other => bail!("unknown prefix-mid-stream mode '{other}' (on|off)"),
             },
             ..Default::default()
+        },
+        paged_rows: match parsed.str("paged-rows").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown paged-rows mode '{other}' (on|off)"),
         },
     };
 

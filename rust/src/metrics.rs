@@ -91,6 +91,32 @@ pub mod names {
     /// Gauge (monotonic): prompt tokens served from runs extended with
     /// generated continuations (mid-stream snapshots).
     pub const PREFIX_MID_STREAM_HIT_TOKENS: &str = "prefix_cache_mid_stream_hit_tokens";
+
+    /// Gauge: bytes of KV resident right now — the page pool (cached runs
+    /// + live row pages) plus, under the copy-based row backend, the
+    /// batch group's whole slab. The headline the paged backend shrinks.
+    pub const KV_RESIDENT_BYTES: &str = "kv_resident_bytes";
+    /// Gauge (monotonic): high-water mark of [`KV_RESIDENT_BYTES`] — what
+    /// the A/B bench compares across row backends.
+    pub const KV_RESIDENT_PEAK_BYTES: &str = "kv_resident_peak_bytes";
+    /// Gauge: page references held by live batch rows (a shared page
+    /// counts once per referencing row).
+    pub const KV_ROW_PAGE_REFS: &str = "kv_row_page_refs";
+    /// Gauge (monotonic): row page-table entries installed by refcount
+    /// bump — admission splices that copied nothing.
+    pub const KV_ROW_SHARED_PAGES: &str = "kv_row_shared_pages";
+    /// Gauge (monotonic): *full* pages copied building row page-tables.
+    /// Zero on a warmed run is the zero-copy admission guarantee.
+    pub const KV_ROW_COPIED_PAGES: &str = "kv_row_copied_pages";
+    /// Gauge (monotonic): partial tail pages copied building row
+    /// page-tables (expected even on fully-cached admissions: the growth
+    /// frontier must be private).
+    pub const KV_ROW_TAIL_COPIES: &str = "kv_row_tail_copies";
+    /// Histogram: modeled seconds of KV movement the page-table row
+    /// backend avoided versus the copy-based slab — shared-page admission
+    /// installs, committed prefixes skipped by delta-only scatter, and
+    /// by-reference finish-time snapshots.
+    pub const KV_COPY_SAVED_S: &str = "kv_copy_saved_s";
     /// Histogram: modeled prefill seconds each cache hit saved *net* — the
     /// full-prompt chunk price minus the suffix-only price actually paid,
     /// minus the per-page splice traffic that realized the hit.

@@ -204,6 +204,17 @@ impl PerfModel {
             / self.device.hbm_bw_bytes_per_s
     }
 
+    /// Modeled seconds a bulk move of `pages` KV pages costs through HBM
+    /// (read + write). The page-table row backend books this as
+    /// `kv_copy_saved_s` wherever it *references* pages the slab backend
+    /// would have copied: admission splice of shared pages, the committed
+    /// prefix a delta-only scatter skips re-writing, and finish-time
+    /// snapshots that refcount row pages instead of duplicating them.
+    pub fn kv_move_time(&self, n_layers: usize, pages: usize, page_tokens: usize) -> f64 {
+        2.0 * pages as f64 * self.page_pair_bytes(n_layers, page_tokens)
+            / self.device.hbm_bw_bytes_per_s
+    }
+
     /// Modeled decode-phase time only (prefill excluded): matches how the
     /// paper reports decoding speedup (prefill is identical across methods).
     /// Governor shadow audits *are* included — they are real decode-phase
@@ -438,6 +449,19 @@ mod tests {
         let row = pm.splice_time(l, p, max_seq);
         assert!(one < row, "per-page {one} not below per-row {row}");
         assert_eq!(pm.splice_time(l, 0, p), 0.0);
+    }
+
+    #[test]
+    fn kv_move_time_prices_bulk_page_moves_linearly() {
+        let pm = pm();
+        let (l, p) = (6usize, 16usize);
+        // n already-paged pages cost exactly the n-page splice: referencing
+        // instead of moving them saves the full per-page HBM price.
+        let one = pm.kv_move_time(l, 1, p);
+        assert!((one - 2.0 * pm.page_pair_bytes(l, p) / 1.6e12).abs() < 1e-18);
+        assert!((pm.kv_move_time(l, 5, p) / one - 5.0).abs() < 1e-9, "linear in pages");
+        assert!((pm.kv_move_time(l, 3, p) - pm.splice_time(l, 3 * p, p)).abs() < 1e-18);
+        assert_eq!(pm.kv_move_time(l, 0, p), 0.0);
     }
 
     #[test]

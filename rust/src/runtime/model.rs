@@ -25,11 +25,12 @@ pub struct ModelRuntime {
     weights: RefCell<HashMap<String, Rc<WeightStore>>>, // npz path -> store
     execs: RefCell<HashMap<String, Rc<CompiledChunk>>>, // artifact name -> exec
     /// Reusable KV cache pairs keyed by (variant, n_layers, batch-bucket).
-    /// Pooled tensors are *dirty*: callers must overwrite every row they
-    /// expect the model to read (the gather path copies whole rows, so this
-    /// holds by construction; rows outside the gathered set only ever hold
-    /// stale finite values, which batch-independent per-row attention
-    /// ignores). Keying by variant keeps the fidelity governor's
+    /// Pooled tensors are *dirty*: callers must overwrite every position
+    /// they expect the model to read. The gather path copies each row's
+    /// committed prefix, so positions at or past a row's `kv_len` — and
+    /// whole rows outside the gathered set — only ever hold stale finite
+    /// values, which causally-masked, batch-independent per-row attention
+    /// never reads. Keying by variant keeps the fidelity governor's
     /// shadow-audit scratch (reference variant) and any demoted-class
     /// traffic from thrashing the primary variant's hot pair — each
     /// (variant, depth, bucket) shape the engine alternates between keeps

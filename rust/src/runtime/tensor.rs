@@ -171,10 +171,47 @@ impl<T: Copy + Default> Tensor<T> {
         }
     }
 
+    /// Copy a set of axis-1 rows from `src`, each bounded to its own
+    /// sequence-prefix length: `triples[i] = (dst_row, src_row, n_seq)`.
+    /// The length-aware form of [`Tensor::copy_axis1_rows`] the KV
+    /// gather/scatter path uses so copy volume tracks each row's committed
+    /// positions instead of the full `max_seq` extent.
+    pub fn copy_axis1_rows_seq_prefix(&mut self, triples: &[(usize, usize, usize)],
+                                      src: &Tensor<T>) {
+        for &(d, s, n) in triples {
+            self.copy_axis1_row_seq_range_from(d, 0, src, s, 0, n);
+        }
+    }
+
     /// Reset every element to the default (pooled-scratch reuse without
     /// reallocating).
     pub fn zero(&mut self) {
         self.data.iter_mut().for_each(|v| *v = T::default());
+    }
+
+    /// Zero `n_seq` sequence positions of one axis-1 row starting at
+    /// `start` — the length-bounded form of [`Tensor::zero_axis1_row`] for
+    /// `[L, B, ..., S, hd]` caches: a leaving request only ever wrote its
+    /// committed prefix (plus speculative slack), so zeroing the full
+    /// `max_seq` extent moves bandwidth over positions that are already
+    /// zero by invariant.
+    pub fn zero_axis1_row_seq_range(&mut self, row: usize, start: usize, n_seq: usize) {
+        let r = self.rank();
+        assert!(r >= 4, "need a [_, B, ..., S, inner] layout");
+        let seq = self.dims[r - 2];
+        assert!(start + n_seq <= seq, "range {start}+{n_seq} exceeds seq {seq}");
+        let inner = self.dims[r - 1];
+        let mid: usize = self.dims[2..r - 2].iter().product();
+        let b = self.dims[1];
+        assert!(row < b, "row {row} out of range for batch {b}");
+        for a0 in 0..self.dims[0] {
+            for m in 0..mid {
+                let off = (((a0 * b + row) * mid + m) * seq + start) * inner;
+                self.data[off..off + n_seq * inner]
+                    .iter_mut()
+                    .for_each(|v| *v = T::default());
+            }
+        }
     }
 
     /// Zero a batch row (cache eviction).
@@ -333,6 +370,55 @@ mod tests {
         a.copy_axis1_row_seq_range_from(0, 0, &src, 1, 0, 4);
         let mut b = Tensor::<i32>::zeros(&[2, 2, 1, 6, 2]);
         b.copy_axis1_row_seq_prefix_from(0, &src, 1, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bulk_prefix_copy_bounds_each_row_to_its_own_length() {
+        // src [2 (L), 3 (B), 1 (H), 4 (S), 2 (hd)]: row r holds r+1.
+        let mut src = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        for l in 0..2 {
+            for b in 0..3 {
+                for s in 0..4 {
+                    for d in 0..2 {
+                        src.data[(((l * 3 + b) * 4) + s) * 2 + d] = b as i32 + 1;
+                    }
+                }
+            }
+        }
+        let mut dst = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        dst.data.iter_mut().for_each(|x| *x = -1);
+        // dst row 0 <- src row 2 (3 positions), dst row 2 <- src row 0 (1).
+        dst.copy_axis1_rows_seq_prefix(&[(0, 2, 3), (2, 0, 1)], &src);
+        assert_eq!(dst.at(&[0, 0, 0, 0, 0]), 3);
+        assert_eq!(dst.at(&[1, 0, 0, 2, 1]), 3);
+        assert_eq!(dst.at(&[0, 0, 0, 3, 0]), -1, "beyond row 0's length untouched");
+        assert_eq!(dst.at(&[0, 2, 0, 0, 0]), 1);
+        assert_eq!(dst.at(&[0, 2, 0, 1, 0]), -1, "beyond row 2's length untouched");
+        assert_eq!(dst.at(&[0, 1, 0, 0, 0]), -1, "unmapped row untouched");
+        // Full-length triples match the unbounded bulk copy exactly.
+        let mut a = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        a.copy_axis1_rows_seq_prefix(&[(0, 2, 4), (2, 0, 4)], &src);
+        let mut b = Tensor::<i32>::zeros(&[2, 3, 1, 4, 2]);
+        b.copy_axis1_rows(&[(0, 2), (2, 0)], &src);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_axis1_row_seq_range_clears_only_the_range() {
+        let mut t = Tensor::<i32>::zeros(&[2, 2, 1, 4, 2]);
+        t.data.iter_mut().for_each(|x| *x = 9);
+        t.zero_axis1_row_seq_range(1, 1, 2);
+        assert_eq!(t.at(&[0, 1, 0, 0, 0]), 9, "below the range untouched");
+        assert_eq!(t.at(&[0, 1, 0, 1, 0]), 0);
+        assert_eq!(t.at(&[1, 1, 0, 2, 1]), 0);
+        assert_eq!(t.at(&[0, 1, 0, 3, 0]), 9, "beyond the range untouched");
+        assert_eq!(t.at(&[0, 0, 0, 1, 0]), 9, "other rows untouched");
+        // Full-extent range matches zero_axis1_row.
+        let mut a = t.clone();
+        a.zero_axis1_row_seq_range(0, 0, 4);
+        let mut b = t.clone();
+        b.zero_axis1_row(0);
         assert_eq!(a, b);
     }
 

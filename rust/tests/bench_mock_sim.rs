@@ -1,0 +1,79 @@
+//! Artifact-free benchmark emitter: drives the deterministic mock-chunk
+//! sim (no PJRT artifacts needed) through both engine shapes and writes a
+//! `BENCH_mock_sim.json` artifact — throughput-ish numbers (modeled decode
+//! seconds, chunk efficiency, call counts) CI uploads on every run, so the
+//! machine-readable bench trail exists even where the compiled model does
+//! not. `QUASAR_BENCH_DIR` overrides the output directory (default
+//! `target/bench`).
+
+mod common;
+
+use std::path::PathBuf;
+
+use quasar::bench::BenchReport;
+use quasar::coordinator::CallLog;
+use quasar::util::json;
+
+use common::sim::{check_equivalent, run_equivalence, SIM_CHUNK};
+
+/// Useful positions over executed positions, the engine's chunk-efficiency
+/// definition applied to the sim's call log.
+fn chunk_efficiency(log: &CallLog) -> f64 {
+    let useful: usize = log.records.iter().map(|r| r.useful_tokens).sum();
+    let executed: usize = log.records.iter().map(|r| r.batch * r.chunk_len).sum();
+    useful as f64 / executed.max(1) as f64
+}
+
+#[test]
+fn bench_mock_sim_emits_json() {
+    let (n_req, steps) = (4usize, 48usize);
+    let t0 = std::time::Instant::now();
+    // KV-bound pricing regime (sel 0): the planner shrinks buckets, so the
+    // elastic log prices strictly cheaper and the saving field is non-trivial.
+    let (mono, ela) = run_equivalence(n_req, 0, 0xBE9C, steps);
+    check_equivalent(&mono, &ela).expect("mono/elastic sim equivalence");
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let tokens_out: u64 = ela
+        .reqs
+        .iter()
+        .map(|r| (r.committed.len() - 1) as u64) // minus the 1-token prompt
+        .sum();
+    let modeled_mono_s = mono.perf.decode_time(&mono.log, None);
+    let modeled_ela_s = ela.perf.decode_time(&ela.log, None);
+    assert!(modeled_mono_s > 0.0 && modeled_ela_s > 0.0);
+
+    let mut r = BenchReport::new("mock_sim");
+    r.num("requests", n_req as f64)
+        .num("steps", steps as f64)
+        .num("verify_chunk", SIM_CHUNK as f64)
+        .num("tokens", tokens_out as f64)
+        .num("wall_s", wall_s)
+        .num("modeled_mono_s", modeled_mono_s)
+        .num("modeled_elastic_s", modeled_ela_s)
+        .num(
+            "elastic_saving_frac",
+            1.0 - modeled_ela_s / modeled_mono_s.max(1e-12),
+        )
+        .num(
+            "modeled_throughput_tok_s",
+            tokens_out as f64 / modeled_ela_s.max(1e-12),
+        )
+        .num("chunk_efficiency_mono", chunk_efficiency(&mono.log))
+        .num("chunk_efficiency_elastic", chunk_efficiency(&ela.log))
+        .num("calls_mono", mono.log.records.len() as f64)
+        .num("calls_elastic", ela.log.records.len() as f64);
+
+    let dir = std::env::var("QUASAR_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/bench"));
+    let path = r.write_to(&dir).expect("write bench json");
+
+    // The artifact must round-trip: CI parses it, so a malformed emit is a
+    // test failure here rather than a broken upload there.
+    let v = json::parse_file(&path).expect("parse bench json");
+    assert_eq!(v.get("scenario").unwrap().as_str().unwrap(), "mock_sim");
+    assert!(v.get("tokens").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.get("chunk_efficiency_elastic").unwrap().as_f64().unwrap() > 0.0);
+    println!("bench_json={}", path.display());
+}

@@ -81,6 +81,7 @@ pub struct TestRig {
     pub elastic: bool,
     pub governor: GovernorConfig,
     pub prefix: PrefixCacheConfig,
+    pub paged_rows: bool,
 }
 
 impl Default for TestRig {
@@ -105,6 +106,7 @@ impl TestRig {
             elastic: true,
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
+            paged_rows: true,
         }
     }
 
@@ -164,6 +166,14 @@ impl TestRig {
         self
     }
 
+    /// Row backend: `true` (default) leases page-tables over the shared
+    /// pool, `false` keeps the copy-based slab rows — the A/B reference
+    /// the differential scenarios compare against.
+    pub fn paged_rows(mut self, paged_rows: bool) -> Self {
+        self.paged_rows = paged_rows;
+        self
+    }
+
     pub fn config(&self) -> EngineConfig {
         EngineConfig {
             verifier: self.verifier.clone(),
@@ -175,6 +185,7 @@ impl TestRig {
             elastic: self.elastic,
             governor: self.governor.clone(),
             prefix: self.prefix.clone(),
+            paged_rows: self.paged_rows,
         }
     }
 
@@ -367,7 +378,8 @@ pub mod sim {
                         }
                     }
                 }
-                let row = group.join(i, &k1, &v1).unwrap();
+                // length-bounded lease: only position 0 holds committed KV
+                let row = group.join_prefix(i, &k1, &v1, 1).unwrap();
                 reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
             }
             Sim { group, reqs, log: CallLog::default(), perf, full, elastic, flip: false }
@@ -427,6 +439,17 @@ pub mod sim {
             let logits = mock_chunk(&mut k, &mut v, &tokens, &pos, b, chunk, self.flip);
             self.group.k = k; // whole-cache adopt, garbage rows included
             self.group.v = v;
+            // The adopt dirtied every row up to its chunk extent — leased
+            // rows from their cached position, padding rows from zero.
+            for r in 0..b {
+                let wrote = self
+                    .reqs
+                    .iter()
+                    .find(|req| req.row == r)
+                    .map(|req| req.cached + chunk)
+                    .unwrap_or(chunk);
+                self.group.note_written(r, wrote.min(SIM_S));
+            }
             let used = drafts.iter().map(|d| d.len() + 1).max().unwrap_or(1);
             let useful: usize = drafts.iter().map(|d| d.len() + 1).sum();
             self.record(fn_kind, b, chunk, self.reqs.len(), used, useful);
@@ -461,13 +484,17 @@ pub mod sim {
             assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
             for sb in &plan.sub_batches {
                 let (bucket, chunk) = (sb.bucket, sb.chunk);
-                let row_map: Vec<usize> =
-                    sb.rows.iter().map(|&di| self.reqs[di].row).collect();
-                // dirty pooled scratch: gather must overwrite everything read
+                let row_lens: Vec<(usize, usize)> = sb
+                    .rows
+                    .iter()
+                    .map(|&di| (self.reqs[di].row, self.reqs[di].cached))
+                    .collect();
+                // dirty pooled scratch: the chunk reads only each row's
+                // gathered committed prefix plus the positions it writes
                 let mut sk = Tensor::<f32>::zeros(&[SIM_L, bucket, SIM_H, SIM_S, SIM_HD]);
                 sk.data.iter_mut().for_each(|x| *x = -7.0);
                 let mut sv = sk.clone();
-                self.group.gather_rows(&row_map, &mut sk, &mut sv).unwrap();
+                self.group.gather_rows(&row_lens, &mut sk, &mut sv).unwrap();
                 let mut tokens = vec![0i32; bucket * chunk];
                 let mut pos = vec![0i32; bucket];
                 for (i, &di) in sb.rows.iter().enumerate() {
@@ -480,7 +507,11 @@ pub mod sim {
                 }
                 let logits =
                     mock_chunk(&mut sk, &mut sv, &tokens, &pos, bucket, chunk, self.flip);
-                self.group.scatter_rows(&row_map, &sk, &sv).unwrap();
+                let write_back: Vec<(usize, usize)> = row_lens
+                    .iter()
+                    .map(|&(r, cached)| (r, (cached + chunk).min(SIM_S)))
+                    .collect();
+                self.group.scatter_rows(&write_back, &sk, &sv).unwrap();
                 self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
                             sb.useful_tokens);
                 for (i, &di) in sb.rows.iter().enumerate() {

@@ -45,6 +45,8 @@ fn integration_scenarios_inner() {
     prefix_cache_reuse_is_bit_identical_and_prices_admission_lower(&manifest, &mr);
     eprintln!("== paged_store_pins_pages_shares_them_and_serves_mid_stream");
     paged_store_pins_pages_shares_them_and_serves_mid_stream(&mr);
+    eprintln!("== paged_rows_match_copy_rows_and_cut_residency");
+    paged_rows_match_copy_rows_and_cut_residency(&mr);
     eprintln!("== prompt_truncation_is_flagged_not_silent");
     prompt_truncation_is_flagged_not_silent(&mr);
     eprintln!("== pruned_drafter_runs_and_verifier_stays_lossless");
@@ -552,6 +554,105 @@ fn paged_store_pins_pages_shares_them_and_serves_mid_stream(mr: &Rc<ModelRuntime
         want_pages,
         ps.page_share_ratio(),
         ps.mid_stream_hit_tokens
+    );
+}
+
+/// The zero-copy paged-row acceptance gate: the page-table backend must be
+/// a pure representation change against the copy-based slab rows.
+///
+/// 1. **Bit-identity** — over a shared-prefix workload (goldens duplicated,
+///    batch 4, mid-stream on) both backends commit identical greedy streams.
+/// 2. **Zero full-page copies** — every admission leases its resident full
+///    pages by reference (cold admissions share with their own just-inserted
+///    run), so `row_copied_pages` stays 0; only non-page-aligned tails copy.
+/// 3. **Strictly lower residency** — the paged engine's peak resident KV
+///    undercuts the copy engine's, which always carries the whole
+///    batch x max_seq slab.
+/// 4. **Lease hygiene** — after the drain every row page reference is
+///    released (`row_page_refs == 0`).
+/// 5. **Multi-turn** — a two-turn conversation (follow-up resubmits the
+///    transcript) commits the same streams on both backends.
+fn paged_rows_match_copy_rows_and_cut_residency(mr: &Rc<ModelRuntime>) {
+    let prompts = golden_prompts(mr);
+    let mut many = prompts.clone();
+    many.extend(prompts.clone());
+    let pcfg = PrefixCacheConfig {
+        min_prefix: 2,
+        page_tokens: 4,
+        mid_stream: true,
+        ..Default::default()
+    };
+    let rig = TestRig::new().gamma(3).batch(4).seed(29).prefix(pcfg.clone());
+    let (paged_tokens, paged_engine) = rig.clone().run(mr, &many, 16);
+    let (copy_tokens, copy_engine) = rig.clone().paged_rows(false).run(mr, &many, 16);
+    assert_eq!(
+        paged_tokens, copy_tokens,
+        "paged rows changed the committed stream"
+    );
+
+    let ps = paged_engine.prefix_cache().stats();
+    assert_eq!(
+        ps.row_copied_pages, 0,
+        "an admission re-copied full resident pages instead of leasing them"
+    );
+    assert!(
+        ps.row_shared_pages > 0,
+        "no admission leased pages by reference"
+    );
+    assert_eq!(
+        ps.row_page_refs, 0,
+        "a finished row leaked page leases"
+    );
+    assert_eq!(
+        copy_engine.prefix_cache().stats().row_shared_pages,
+        0,
+        "the copy backend must not touch the row-lease path"
+    );
+
+    let paged_peak = paged_engine.metrics.gauge(names::KV_RESIDENT_PEAK_BYTES);
+    let copy_peak = copy_engine.metrics.gauge(names::KV_RESIDENT_PEAK_BYTES);
+    assert!(paged_peak > 0 && copy_peak > 0, "peak gauges unpublished");
+    assert!(
+        paged_peak < copy_peak,
+        "paged peak resident KV {paged_peak} not below copy {copy_peak}"
+    );
+
+    // Multi-turn differential: turn 2 resubmits the full transcript; both
+    // backends must walk the same conversation.
+    let p0 = prompts[0].clone();
+    let params = |max_new: usize| GenParams {
+        max_new,
+        stop_at_eos: false,
+        ..GenParams::default()
+    };
+    let turn_pair = |paged: bool| {
+        let mut engine = TestRig::new()
+            .gamma(3)
+            .batch(1)
+            .seed(31)
+            .prefix(pcfg.clone())
+            .paged_rows(paged)
+            .engine(mr);
+        engine.submit(p0.clone(), params(16), "t");
+        let c1 = engine.run_to_completion().unwrap().remove(0);
+        let mut follow = p0.clone();
+        follow.extend_from_slice(&c1.tokens);
+        follow.push(7);
+        engine.submit(follow, params(8), "t");
+        let c2 = engine.run_to_completion().unwrap().remove(0);
+        (c1.tokens, c2.tokens)
+    };
+    assert_eq!(
+        turn_pair(true),
+        turn_pair(false),
+        "paged rows changed the multi-turn conversation"
+    );
+    eprintln!(
+        "   paged vs copy: peak resident {paged_peak} vs {copy_peak} bytes \
+         ({:.1}% cut), {} shared pages, {} tail copies, 0 full-page copies",
+        100.0 * (1.0 - paged_peak as f64 / copy_peak as f64),
+        ps.row_shared_pages,
+        ps.row_tail_copies
     );
 }
 

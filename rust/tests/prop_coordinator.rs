@@ -6,7 +6,7 @@ mod common;
 
 use common::sim::{check_equivalent, run_equivalence, sim_perf, Sim, SIM_CHUNK, SIM_VOCAB};
 use quasar::coordinator::{
-    BatchGroup, FnKind, GenParams, Governor, GovernorConfig, Lease, PrefixCache,
+    BatchGroup, FnKind, GenParams, Governor, GovernorConfig, Lease, PagedGroup, PrefixCache,
     PrefixCacheConfig, Priority, Request, Route, SchedPolicy, Scheduler, Transition,
 };
 use quasar::prop_assert;
@@ -881,6 +881,230 @@ fn paged_cache_matches_the_whole_row_segment_oracle() {
                 "paged resident {} bytes exceeds whole-row {} bytes",
                 stats.resident_bytes,
                 oracle.len() * row_bytes
+            );
+            ok()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Page-table batch rows (kv::PagedGroup over the pool): random
+// admit / advance / finish(+snapshot) interleavings, differential against
+// the copy-based slab backend (PR-5 oracle pattern).
+// ---------------------------------------------------------------------
+
+/// Token-code positions `[from, from + toks.len())` of scratch row `row`:
+/// position `s` holds the token value on the k side, `+0.5` on v — the
+/// same coding as [`token_row`], extended mid-sequence.
+fn code_into(k: &mut Tensor<f32>, v: &mut Tensor<f32>, row: usize, from: usize, toks: &[i32]) {
+    let strides = k.strides();
+    for (j, &t) in toks.iter().enumerate() {
+        let s = from + j;
+        for l in 0..k.dims[0] {
+            for h in 0..k.dims[2] {
+                for d in 0..k.dims[4] {
+                    let off = l * strides[0] + row * strides[1] + h * strides[2]
+                        + s * strides[3] + d * strides[4];
+                    k.data[off] = t as f32;
+                    v.data[off] = t as f32 + 0.5;
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole property: for any interleaving of admissions (insert-then-lease,
+/// the engine's ordering), committed advances (length-bounded gather →
+/// chunk write → delta scatter), and finishes (with or without a
+/// by-reference mid-stream snapshot), page-table rows must behave exactly
+/// like the copy-based slab rows, under heavy pool eviction pressure:
+///
+/// 1. **bit-identity** — every gathered committed prefix is byte-equal
+///    between the two backends (the slab is the oracle);
+/// 2. **no full-page admission copies** — admission after inserting the
+///    prefill shares every full page by refcount bump (`rp.copied == 0`),
+///    warm or cold;
+/// 3. **live pages stay live** — a page referenced by any leased row is
+///    never freed out from under it, and the pool's row-reference
+///    accounting exactly matches the groups' page tables;
+/// 4. **refcounts return to zero** — after every row leaves, no row
+///    references remain and the slab is bit-zero (leave's committed-prefix
+///    zeroing invariant).
+#[test]
+fn paged_rows_match_slab_rows_under_random_interleavings() {
+    prop_check(
+        "paged rows == slab rows; refcounts return to zero",
+        120,
+        |rng| {
+            let ops: Vec<u64> = (0..rng.usize_below(50)).map(|_| rng.next_u64()).collect();
+            ops
+        },
+        |ops| {
+            const BATCH: usize = 3;
+            let max_seq = PX_DIMS[3];
+            let mut pool = PrefixCache::new(PrefixCacheConfig {
+                enabled: true,
+                budget_bytes: 6 * PX_PAGE_BYTES, // heavy eviction pressure
+                min_prefix: 1,
+                page_tokens: PX_PAGE,
+                mid_stream: true,
+            });
+            let mut paged = PagedGroup::new(BATCH, PX_PAGE, max_seq);
+            let mut slab = BatchGroup::new(PX_DIMS[0], BATCH, PX_DIMS[2], max_seq, PX_DIMS[4]);
+            struct LiveRow {
+                row_p: usize,
+                row_c: usize,
+                committed: Vec<i32>,
+                prompt_len: usize,
+            }
+            let mut live: Vec<LiveRow> = Vec::new();
+            let mut next_slot = 0usize;
+            // Prompts share an 8-token spine (two full pages) then branch,
+            // so admissions lease genuinely shared pages across rows.
+            let prompt = |sel: u64| -> Vec<i32> {
+                let len = 1 + (sel % 11) as usize;
+                let branch = ((sel / 11) % 3) as i32;
+                (0..len)
+                    .map(|i| if i < 8 { 7 } else { branch * 10 + i as i32 })
+                    .collect()
+            };
+            let dirty = || {
+                let mut t = Tensor::<f32>::zeros(&PX_DIMS);
+                t.data.iter_mut().for_each(|x| *x = -7.0);
+                t
+            };
+            for &op in ops {
+                match op % 4 {
+                    0 if paged.free_rows() > 0 => {
+                        // Admit, in the engine's order: insert the prefill
+                        // into the pool, then lease — so even a cold prompt
+                        // shares every full page with its own fresh run.
+                        let pr = prompt(op >> 2);
+                        let (k1, v1) = token_row(&pr);
+                        pool.insert("v", &pr, &k1, &v1);
+                        let rp = pool
+                            .lease_row_pages("v", &pr, &k1, &v1, 0)
+                            .map_err(|e| e.to_string())?;
+                        prop_assert!(
+                            rp.copied == 0,
+                            "admission copied {} full pages after inserting the prefill",
+                            rp.copied
+                        );
+                        let row_p = paged
+                            .join_pages(next_slot, rp.pages, pr.len())
+                            .map_err(|e| e.to_string())?;
+                        let row_c = slab
+                            .join_prefix(next_slot, &k1, &v1, pr.len())
+                            .map_err(|e| e.to_string())?;
+                        let prompt_len = pr.len();
+                        live.push(LiveRow { row_p, row_c, committed: pr, prompt_len });
+                        next_slot += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        // Advance: gather the committed prefix into dirty
+                        // scratch, "execute" a chunk (token-code the new
+                        // positions), write back — delta-only on the paged
+                        // side, full prefix on the slab side.
+                        let i = ((op >> 2) as usize) % live.len();
+                        let lv = &mut live[i];
+                        let cached = lv.committed.len();
+                        if cached < max_seq {
+                            let chunk = (1 + ((op >> 8) % 4) as usize).min(max_seq - cached);
+                            let toks: Vec<i32> = (0..chunk)
+                                .map(|j| (((op >> 16) as usize + j) % 40) as i32 + 1)
+                                .collect();
+                            let (mut pk, mut pv) = (dirty(), dirty());
+                            paged
+                                .gather_rows(&pool, &[(lv.row_p, cached)], &mut pk, &mut pv)
+                                .map_err(|e| e.to_string())?;
+                            let (mut ck, mut cv) = (dirty(), dirty());
+                            slab.gather_rows(&[(lv.row_c, cached)], &mut ck, &mut cv)
+                                .map_err(|e| e.to_string())?;
+                            // bit-identity oracle over the committed prefix
+                            for s in 0..cached {
+                                for l in 0..PX_DIMS[0] {
+                                    for h in 0..PX_DIMS[2] {
+                                        for d in 0..PX_DIMS[4] {
+                                            let idx = [l, 0, h, s, d];
+                                            prop_assert!(
+                                                pk.at(&idx) == ck.at(&idx)
+                                                    && pv.at(&idx) == cv.at(&idx),
+                                                "gathered prefix diverged at pos {s}"
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            prop_assert!(
+                                pk.at(&[0, 0, 0, cached - 1, 0])
+                                    == lv.committed[cached - 1] as f32,
+                                "gathered bytes are not the committed token coding"
+                            );
+                            let to = cached + chunk;
+                            code_into(&mut pk, &mut pv, 0, cached, &toks);
+                            code_into(&mut ck, &mut cv, 0, cached, &toks);
+                            paged
+                                .scatter_advance(&mut pool, &[(lv.row_p, cached, to)], &pk, &pv)
+                                .map_err(|e| e.to_string())?;
+                            paged.set_len(lv.row_p, to).map_err(|e| e.to_string())?;
+                            slab.scatter_rows(&[(lv.row_c, to)], &ck, &cv)
+                                .map_err(|e| e.to_string())?;
+                            lv.committed.extend_from_slice(&toks);
+                        }
+                    }
+                    2 | 3 if !live.is_empty() => {
+                        // Finish; on the even arm take a finish-time
+                        // mid-stream snapshot first — refcount bumps on the
+                        // row's own pages, partial tail included.
+                        let i = ((op >> 2) as usize) % live.len();
+                        let lv = live.swap_remove(i);
+                        if op % 4 == 2 && lv.committed.len() > lv.prompt_len {
+                            let pages: Vec<u64> =
+                                paged.row_pages(lv.row_p).expect("live row").to_vec();
+                            pool.insert_pages("v", &lv.committed, &pages, Some(lv.prompt_len));
+                        }
+                        let sp = paged.leave(&mut pool, lv.row_p).map_err(|e| e.to_string())?;
+                        let sc = slab.leave(lv.row_c).map_err(|e| e.to_string())?;
+                        prop_assert!(sp == sc, "backends returned different slots on leave");
+                    }
+                    _ => {}
+                }
+                // Live pages stay live: every page referenced by a leased
+                // row is still allocated, and the pool's row-reference
+                // count equals the group's page-table total.
+                for lv in &live {
+                    for pid in paged.row_pages(lv.row_p).expect("live row") {
+                        prop_assert!(
+                            pool.page_ref_count(*pid).is_some(),
+                            "page {pid} freed out from under a live row"
+                        );
+                    }
+                }
+                let stats = pool.stats();
+                prop_assert!(
+                    stats.row_page_refs == paged.total_pages(),
+                    "row-page reference accounting drifted: pool {} vs group {}",
+                    stats.row_page_refs,
+                    paged.total_pages()
+                );
+            }
+            // Drain: every row leaves, refcounts return to zero, and the
+            // slab's leave zeroing holds bit-exactly.
+            for lv in live.drain(..) {
+                paged.leave(&mut pool, lv.row_p).map_err(|e| e.to_string())?;
+                slab.leave(lv.row_c).map_err(|e| e.to_string())?;
+            }
+            let stats = pool.stats();
+            prop_assert!(
+                stats.row_page_refs == 0,
+                "row-page refcounts did not return to zero ({})",
+                stats.row_page_refs
+            );
+            prop_assert!(paged.total_pages() == 0 && paged.is_empty(), "rows left behind");
+            prop_assert!(
+                slab.k.data.iter().all(|&x| x == 0.0)
+                    && slab.v.data.iter().all(|&x| x == 0.0),
+                "slab leave left residue in the cache"
             );
             ok()
         },
