@@ -84,6 +84,8 @@ fn run() -> anyhow::Result<()> {
                          before the first client")
         .flag("no-paged-rows", "copy-based slab batch rows (the A/B reference the paged \
                                 page-table backend is compared against)")
+        .flag("no-chunked-prefill", "monolithic admission prefill (the A/B reference the \
+                                     chunked rider path is compared against)")
         .opt("bench-json", None, "directory to write a machine-readable \
                                   BENCH_<method>.json artifact into")
         .parse_env();
@@ -101,6 +103,7 @@ fn run() -> anyhow::Result<()> {
     let no_mid_stream = args.has("no-mid-stream");
     let warmup = args.has("warmup");
     let no_paged_rows = args.has("no-paged-rows");
+    let no_chunked_prefill = args.has("no-chunked-prefill");
     let bench_json = args.get("bench-json").map(PathBuf::from);
 
     // xla_extension tolerates exactly one PJRT client per process, so the
@@ -135,6 +138,9 @@ fn run() -> anyhow::Result<()> {
             }
             if no_paged_rows {
                 argv.push("--no-paged-rows".into());
+            }
+            if no_chunked_prefill {
+                argv.push("--no-chunked-prefill".into());
             }
             if let Some(dir) = &bench_json {
                 argv.push("--bench-json".into());
@@ -183,6 +189,7 @@ fn run() -> anyhow::Result<()> {
     cfg.prefix.mid_stream = !no_mid_stream;
     cfg.prefix.page_tokens = page_tokens;
     cfg.paged_rows = !no_paged_rows;
+    cfg.chunked_prefill = !no_chunked_prefill;
     let handle = EngineHandle::spawn(
         artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * (n * turns).max(1),
     )?;
@@ -236,17 +243,24 @@ fn run() -> anyhow::Result<()> {
                 // transcript instead of just the original prompt.
                 let mut text = text.clone();
                 for turn in 0..turns {
+                    let sent = Instant::now();
                     let resp = client.roundtrip(&Json::obj(vec![
                         ("prompt", Json::str(text.clone())),
                         ("max_new", Json::num(max_new as f64)),
                         ("temp", Json::num(temp)),
                         ("task", Json::str(task.clone())),
                     ]))?;
+                    let roundtrip_s = sent.elapsed().as_secs_f64();
                     anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
                     let lat_s = resp.get("latency_s")?.as_f64()?;
                     let ttft_s = resp.get("ttft_s")?.as_f64()?;
                     tally.lat.record(lat_s);
-                    tally.ttft.record(ttft_s);
+                    // TTFT from the client's own submit instant: the server
+                    // value starts at the engine's `submitted_at` and so
+                    // misses transport + dispatch before the request reaches
+                    // the engine thread. Subtract the post-first-token
+                    // generation time from the observed roundtrip instead.
+                    tally.ttft.record((roundtrip_s - (lat_s - ttft_s)).max(0.0));
                     let toks: Vec<i64> = resp
                         .get("tokens")?
                         .as_arr()?
@@ -361,6 +375,21 @@ fn run() -> anyhow::Result<()> {
              kv.get("row_tail_copies")?.as_i64()?,
              kv.get("copy_saved_s")?.as_f64()?,
              prefix.get("prefill_saved_s")?.as_f64()?);
+    let pf = stats.get("prefill")?;
+    println!("  prefill             {} mode, {} chunks, {} decode-stall steps, \
+              {:.4}s stall saved",
+             if no_chunked_prefill { "monolithic" } else { "chunked" },
+             pf.get("chunks")?.as_i64()?,
+             pf.get("decode_stall_steps")?.as_i64()?,
+             pf.get("stall_saved_s")?.as_f64()?);
+    println!("                      ttft warm p50/p99 {:.1}/{:.1}ms cold {:.1}/{:.1}ms, \
+              tpot warm p99 {:.2}ms cold {:.2}ms",
+             pf.get("ttft_warm_p50_s")?.as_f64()? * 1e3,
+             pf.get("ttft_warm_p99_s")?.as_f64()? * 1e3,
+             pf.get("ttft_cold_p50_s")?.as_f64()? * 1e3,
+             pf.get("ttft_cold_p99_s")?.as_f64()? * 1e3,
+             pf.get("tpot_warm_p99_s")?.as_f64()? * 1e3,
+             pf.get("tpot_cold_p99_s")?.as_f64()? * 1e3);
     let truncated = stats.get("prompt_truncated")?.as_i64()?;
     if truncated > 0 {
         println!("  prompts truncated   {truncated}");
@@ -391,15 +420,33 @@ fn run() -> anyhow::Result<()> {
         "kv_row_copied_pages={}",
         kv.get("row_copied_pages")?.as_i64()?
     );
+    // Chunked-prefill A/B gates: the chunked run must keep the identical
+    // checksum while running strictly fewer decode-stall steps and booking
+    // a positive modeled stall saving.
+    println!("chunked_prefill={}", !no_chunked_prefill as u8);
+    println!("prefill_chunks={}", pf.get("chunks")?.as_i64()?);
+    println!(
+        "decode_stall_steps={}",
+        pf.get("decode_stall_steps")?.as_i64()?
+    );
+    println!(
+        "prefill_stall_saved_s={:.6}",
+        pf.get("stall_saved_s")?.as_f64()?
+    );
+    println!("ttft_p50_s={:.6}", total.ttft.p50());
+    println!("ttft_p99_s={:.6}", total.ttft.p99());
+    println!("tpot_p99_s={:.6}", total.tpot.p99());
 
     if let Some(dir) = &bench_json {
         let scenario = format!(
-            "{method}{}",
-            if no_paged_rows { "_copyrows" } else { "" }
+            "{method}{}{}",
+            if no_paged_rows { "_copyrows" } else { "" },
+            if no_chunked_prefill { "_monoprefill" } else { "" }
         );
         let mut r = BenchReport::new(&scenario);
         r.text("method", &method)
             .flag("paged_rows", paged)
+            .flag("chunked_prefill", !no_chunked_prefill)
             .num("requests", (n * turns) as f64)
             .num("clients", clients as f64)
             .num("batch", batch as f64)
@@ -412,8 +459,10 @@ fn run() -> anyhow::Result<()> {
             .num("latency_p95_s", total.lat.p95())
             .num("ttft_p50_s", total.ttft.p50())
             .num("ttft_p95_s", total.ttft.p95())
+            .num("ttft_p99_s", total.ttft.p99())
             .num("tpot_p50_s", total.tpot.p50())
             .num("tpot_p95_s", total.tpot.p95())
+            .num("tpot_p99_s", total.tpot.p99())
             .num("chunk_efficiency", stats.get("chunk_efficiency")?.as_f64()?)
             .num("batch_occupancy", stats.get("batch_occupancy")?.as_f64()?)
             .num("prefix_hit_rate", hit_rate)
@@ -447,6 +496,21 @@ fn run() -> anyhow::Result<()> {
                 kv.get("row_tail_copies")?.as_f64()?,
             )
             .num("kv_copy_saved_s", kv.get("copy_saved_s")?.as_f64()?)
+            .num("prefill_chunks", pf.get("chunks")?.as_f64()?)
+            .num(
+                "decode_stall_steps",
+                pf.get("decode_stall_steps")?.as_f64()?,
+            )
+            .num(
+                "prefill_stall_saved_s",
+                pf.get("stall_saved_s")?.as_f64()?,
+            )
+            .num("ttft_warm_p50_s", pf.get("ttft_warm_p50_s")?.as_f64()?)
+            .num("ttft_warm_p99_s", pf.get("ttft_warm_p99_s")?.as_f64()?)
+            .num("ttft_cold_p50_s", pf.get("ttft_cold_p50_s")?.as_f64()?)
+            .num("ttft_cold_p99_s", pf.get("ttft_cold_p99_s")?.as_f64()?)
+            .num("tpot_warm_p99_s", pf.get("tpot_warm_p99_s")?.as_f64()?)
+            .num("tpot_cold_p99_s", pf.get("tpot_cold_p99_s")?.as_f64()?)
             .text("output_checksum", &format!("{:016x}", total.checksum));
         let path = r.write_to(dir)?;
         println!("bench_json={}", path.display());

@@ -5,23 +5,32 @@
 //! One `step()` =
 //!   expire  (cancel running requests whose deadline passed, free their rows)
 //!   -> admit   (pop the scheduler in policy order; longest-prefix-match the
-//!               prompt against the *paged* prefix cache, gather the matched
-//!               page-run into the prefill scratch, prefill only the
-//!               *suffix* tokens at the matched write offset, lease the new
-//!               request a batch row, and snapshot its committed prefix
-//!               back — a paged insert that references shared template pages
-//!               instead of copying them; see `coordinator::prefixcache`.
-//!               When a request finishes, its *generated* continuation
-//!               extends its cached run (mid-stream snapshot), and
-//!               [`Engine::warm_prefix`] can pre-populate the cache from
-//!               workload templates before the first client.)
-//!   -> draft   (per active row, via its drafter)
+//!               prompt against the *paged* prefix cache, splice the matched
+//!               run into the prefill scratch, and lease the new request a
+//!               batch row carrying that prefix. Under chunked prefill (the
+//!               default) admission *stops there* — the request parks as a
+//!               resumable `Prefilling` row and its prompt suffix is fed by
+//!               the plan/execute stages below; under
+//!               `chunked_prefill = false` the whole suffix prefills here,
+//!               window by window, before the first token samples. Either
+//!               way the committed prompt KV is snapshotted back into the
+//!               cache — a paged insert that references shared template
+//!               pages instead of copying them; see
+//!               `coordinator::prefixcache`. When a request finishes, its
+//!               *generated* continuation extends its cached run
+//!               (mid-stream snapshot), and [`Engine::warm_prefix`] can
+//!               pre-populate the cache from workload templates before the
+//!               first client.)
+//!   -> draft   (per fully-prefilled row, via its drafter; rows whose
+//!               admission prefill is still in flight don't draft — they
+//!               advance one prefill chunk this step instead)
 //!   -> plan    (build a [`StepPlan`]: partition rows into sub-batches by
 //!               required function — decode-only vs verify — *and* by the
 //!               verifier variant each row's request class resolved to, and
 //!               pick each sub-batch's cheapest exported (bucket, variant)
-//!               pair on the cost model; see `coordinator::plan` for the
-//!               invariants)
+//!               pair on the cost model; then pack each prefilling row's
+//!               next chunk into the chosen sub-batches' spare capacity —
+//!               see `coordinator::plan` for both sets of invariants)
 //!   -> execute (per sub-batch: gather each leased row's *committed* KV
 //!               positions into a pooled bucket-shaped scratch cache, run
 //!               the chunk on the sub-batch's variant — `fp32` for the
@@ -74,6 +83,31 @@
 //! avoided is booked in the `kv_copy_saved_s` histogram.
 //! `paged_rows = false` keeps the copy-based slab rows as the bit-exact A/B
 //! reference (the `--no-paged-rows` bench path).
+//!
+//! ## Chunked admission prefill (`EngineConfig::chunked_prefill`, the default)
+//!
+//! A dedicated admission-time prefill stalls every decoding row behind a
+//! single-row call. Chunked admission removes that stall: admission only
+//! splices the cached prefix and leases the row (marking the request
+//! `Prefilling`); the prompt suffix is then fed one chunk per step by the
+//! planner, *riding the spare rows of the decode/verify sub-batches the
+//! step executes anyway* (a rider consumes at most the sub-batch's chunk
+//! positions, so the priced call shape never grows — see the rider-packing
+//! invariants in `coordinator::plan`). Only when no same-variant spare slot
+//! exists does a pending row fall back to a dedicated prefill sub-batch —
+//! the counted `decode_stall_steps` case; rides book the avoided call price
+//! to `prefill_stall_saved_s` instead. The first token samples from the
+//! chunk that covers the final prompt position, drawn from the same
+//! per-request RNG the monolithic path uses.
+//!
+//! Chunk windows near the end of the cache row clamp their write start to
+//! `max_seq - chunk_len` and re-feed the overlap: KV at a position depends
+//! only on the (identical) tokens at and before it, so the rewrite is
+//! bit-identical and the tail lands in-bounds. Output equivalence with
+//! `chunked_prefill = false` rests on that plus the cross-program KV
+//! contract the prefix cache already assumes (decode/verify-program KV for
+//! the same tokens matches prefill-program KV — see ROADMAP's scope notes);
+//! both A/B smokes assert equal output checksums.
 //!
 //! ## Adaptive-precision verification (the fidelity governor)
 //!
@@ -129,9 +163,10 @@ use crate::util::rng::Pcg;
 use super::calls::{CallLog, CallRecord, FnKind};
 use super::governor::{Governor, GovernorConfig, Route, Transition};
 use super::kv::{BatchGroup, PagedGroup, RowStore};
-use super::plan::{plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
+use super::plan::{pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending, StepPlan,
+                  SubBatch, VariantCtx};
 use super::prefixcache::{PrefixCache, PrefixCacheConfig};
-use super::request::{Completion, FinishReason, GenParams, Request, RequestState};
+use super::request::{Completion, FinishReason, GenParams, PrefillProgress, Request, RequestState};
 use super::scheduler::{SchedPolicy, Scheduler};
 
 /// Which drafting strategy the engine wires per request.
@@ -178,6 +213,14 @@ pub struct EngineConfig {
     /// output either way; `false` keeps the copy-based slab rows as the A/B
     /// reference.
     pub paged_rows: bool,
+    /// Chunked admission prefill (module docs): admission leases the KV row
+    /// and splices the cached prefix immediately, then feeds the prompt
+    /// suffix in planner-packed chunks that ride spare decode/verify slots
+    /// instead of preempting the running batch with a dedicated prefill
+    /// call. Bit-identical output either way; `false` keeps the monolithic
+    /// admission-time prefill as the A/B reference
+    /// (the `--no-chunked-prefill` bench path).
+    pub chunked_prefill: bool,
 }
 
 impl EngineConfig {
@@ -194,6 +237,7 @@ impl EngineConfig {
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
             paged_rows: true,
+            chunked_prefill: true,
         }
     }
 
@@ -209,6 +253,7 @@ impl EngineConfig {
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
             paged_rows: true,
+            chunked_prefill: true,
         }
     }
 
@@ -410,14 +455,21 @@ impl Engine {
         })
     }
 
-    /// Queue a request. A prompt longer than the prefill window is cut to
-    /// it — recorded in the completion's [`SpecStats::prompt_truncated`] and
-    /// the `prompt_truncated` counter rather than silently dropped.
+    /// Queue a request. A prompt longer than the context cap (`max_seq - 2`,
+    /// leaving room for at least one generated token plus the decode
+    /// write margin) is cut to it — recorded in the completion's
+    /// [`SpecStats::prompt_truncated`] and the `prompt_truncated` counter
+    /// rather than silently dropped. The cap is deliberately *not* the
+    /// prefill window: a suffix longer than one window is fed in multiple
+    /// chunks, and a warm request's post-splice suffix is shorter still —
+    /// gating admission on the raw prompt length would refuse work the
+    /// cache has already mostly paid for.
     pub fn submit(&mut self, mut prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        let truncated = prompt.len() > self.mcfg.prefill_len;
-        prompt.truncate(self.mcfg.prefill_len);
+        let cap = self.mcfg.max_seq.saturating_sub(2);
+        let truncated = prompt.len() > cap;
+        prompt.truncate(cap);
         if truncated {
             self.metrics.inc(names::PROMPT_TRUNCATED, 1);
         }
@@ -492,6 +544,21 @@ impl Engine {
         for req in self.sched.take_expired(now) {
             self.finish_unadmitted(req);
         }
+        // Rows already decoding when this admission pass starts: a
+        // monolithic prefill executed now stalls them (that is what the
+        // `decode_stall_steps` counter tallies; the chunked path never
+        // prefills here, so it never trips this).
+        let decode_active = self
+            .rows
+            .active_rows()
+            .iter()
+            .filter(|&&(_, slot)| {
+                self.states[slot]
+                    .as_ref()
+                    .is_some_and(|st| st.prefilling.is_none())
+            })
+            .count();
+        let mut prefill_calls = 0usize;
         let mut admitted = false;
         while self.rows.free_rows() > 0 {
             let Some(req) = self.sched.pop() else { break };
@@ -515,11 +582,12 @@ impl Engine {
             let variant = self.variants[self.route_slot(&st.req.task)].name.clone();
             st.admit_variant = variant.clone();
 
-            // Longest-prefix reuse, capped so (a) at least one suffix token
-            // remains — the last prompt position's logits must come from
-            // this chunk — and (b) the chunk's write window
-            // `[hit, hit + prefill_len)` stays inside the cache row.
-            let hit_cap = (len - 1).min(self.mcfg.max_seq.saturating_sub(p));
+            // Longest-prefix reuse, capped only so at least one suffix token
+            // remains — the last prompt position's logits must come from a
+            // chunk this request executes. A hit past `max_seq - prefill_len`
+            // no longer caps the reuse: the chunk windows below clamp their
+            // write start and re-feed the (identical) overlap instead.
+            let hit_cap = len - 1;
             let lease = if self.cfg.prefix.enabled {
                 self.prefix_cache.lookup(&variant, &st.req.prompt[..hit_cap])
             } else {
@@ -560,35 +628,111 @@ impl Engine {
                 None => 0,
             };
 
-            let suffix = len - hit;
-            let mut toks = vec![0i32; p];
-            toks[..suffix].copy_from_slice(&st.req.prompt[hit..]);
-            let t0 = Instant::now();
-            let out = self
-                .model
-                .run_chunk(
-                    &variant, "prefill", 1, &toks,
-                    &self.prefill_k, &self.prefill_v, &[hit as i32],
-                )
+            st.prefix_hit = hit > 0;
+
+            if self.cfg.chunked_prefill {
+                // Resumable admission: lease the row and install the spliced
+                // prefix now; the prompt suffix is fed in planner-packed
+                // chunks riding subsequent steps (`exec_sub_batch`'s rider
+                // leg). No model call runs here, so admission never preempts
+                // the decoding batch with a dedicated prefill.
+                st.cached = hit;
+                st.prefilling = Some(PrefillProgress { hit, consumed: 0 });
+                let slot = self.free_slot();
+                match &mut self.rows {
+                    RowStore::Copy(g) => {
+                        // Row 0 of the prefill scratch holds the spliced
+                        // prefix; the length-bounded join zeroes the rest.
+                        g.join_prefix_from_row(
+                            slot, &self.prefill_k, &self.prefill_v, 0, hit,
+                        )?;
+                    }
+                    RowStore::Paged(g) => {
+                        if hit > 0 {
+                            // Full pages of the hit install by refcount bump
+                            // off the cached run; only the partial tail page
+                            // is copied out of the splice scratch.
+                            let rp = self.prefix_cache.lease_row_pages(
+                                &variant, &st.req.prompt[..hit],
+                                &self.prefill_k, &self.prefill_v, 0,
+                            )?;
+                            if rp.shared > 0 {
+                                let saved = self.perf.kv_move_time(
+                                    self.mcfg.n_layers,
+                                    rp.shared,
+                                    self.cfg.prefix.page_tokens.max(1),
+                                );
+                                self.metrics.observe(names::KV_COPY_SAVED_S, saved);
+                            }
+                            g.join_pages(slot, rp.pages, hit)?;
+                        } else {
+                            g.join_pages(slot, Vec::new(), 0)?;
+                        }
+                    }
+                }
+                self.states[slot] = Some(st);
+                continue;
+            }
+
+            // Monolithic admission (`--no-chunked-prefill`, the A/B
+            // reference): prefill the whole suffix here, in as many
+            // prefill-window chunks as it needs. Each chunk's write window
+            // `[w, w + prefill_len)` must stay inside the cache row, so once
+            // the consumed prefix passes `max_seq - prefill_len` the window
+            // start clamps back and the overlap re-feeds prompt tokens whose
+            // KV the cache already holds — a bit-identical rewrite (same
+            // tokens, same causal prefix) with the new tail landing
+            // in-bounds.
+            let mut consumed = hit;
+            let mut last_w = 0usize;
+            let mut out_opt = None;
+            while consumed < len {
+                let w = consumed.min(self.mcfg.max_seq.saturating_sub(p));
+                let end = len.min(w + p);
+                let mut toks = vec![0i32; p];
+                toks[..end - w].copy_from_slice(&st.req.prompt[w..end]);
+                let t0 = Instant::now();
+                let out = match &out_opt {
+                    // Later chunks read (and extend) the cache the previous
+                    // chunk advanced.
+                    Some(prev) => self.model.run_chunk(
+                        &variant, "prefill", 1, &toks, &prev.k, &prev.v, &[w as i32],
+                    ),
+                    None => self.model.run_chunk(
+                        &variant, "prefill", 1, &toks,
+                        &self.prefill_k, &self.prefill_v, &[w as i32],
+                    ),
+                }
                 .context("prefill")?;
-            let wall = t0.elapsed().as_secs_f64();
-            self.metrics.observe("prefill_s", wall);
-            self.call_log.record(CallRecord {
-                variant: variant.clone(),
-                fn_kind: FnKind::Prefill,
-                batch: 1,
-                n_layers: self.mcfg.n_layers,
-                active_rows: 1,
-                tokens_used: suffix,
-                chunk_len: p,
-                useful_tokens: suffix,
-                wall_s: wall,
-            });
+                let wall = t0.elapsed().as_secs_f64();
+                self.metrics.observe("prefill_s", wall);
+                self.metrics.inc(names::PREFILL_CHUNKS, 1);
+                prefill_calls += 1;
+                self.call_log.record(CallRecord {
+                    variant: variant.clone(),
+                    fn_kind: FnKind::Prefill,
+                    batch: 1,
+                    n_layers: self.mcfg.n_layers,
+                    active_rows: 1,
+                    tokens_used: end - consumed,
+                    chunk_len: p,
+                    useful_tokens: end - consumed,
+                    wall_s: wall,
+                });
+                if let Some(prev) = out_opt.take() {
+                    self.model.return_scratch(&variant, prev.k, prev.v);
+                }
+                consumed = end;
+                last_w = w;
+                out_opt = Some(out);
+            }
+            let out = out_opt.expect("hit < len leaves at least one suffix token");
 
             // First generated token comes straight from the prefill logits
-            // (suffix position `suffix - 1` is prompt position `len - 1`).
+            // (chunk position `(len - 1) - last_w` is prompt position
+            // `len - 1`).
             let first = {
-                let row = out.logits.row(&[0, suffix - 1]);
+                let row = out.logits.row(&[0, (len - 1) - last_w]);
                 crate::spec::sample_logits(row, st.req.params.temp, &mut st.rng)
             };
             st.cached = len;
@@ -650,6 +794,9 @@ impl Engine {
             }
             // Recycle the advanced single-row cache as b1 step scratch.
             self.model.return_scratch(&variant, out.k, out.v);
+        }
+        if decode_active > 0 && prefill_calls > 0 {
+            self.metrics.inc(names::DECODE_STALL_STEPS, 1);
         }
         if self.cfg.prefix.enabled && admitted {
             // Published wholesale from the cache's own counters — the one
@@ -846,10 +993,26 @@ impl Engine {
         self.metrics
             .observe(names::BATCH_OCCUPANCY, active.len() as f64);
 
+        // Partition the leased rows: rows whose admission prefill is still
+        // in flight advance by one planner-packed chunk this step (the
+        // rider leg below); only fully-prefilled rows draft and decode.
+        let mut decode_active: Vec<(usize, usize)> = Vec::with_capacity(active.len());
+        let mut prefill_rows: Vec<(usize, usize)> = Vec::new();
+        for &(row, slot) in &active {
+            let st = self.states[slot].as_ref().expect("leased slot has state");
+            if st.prefilling.is_some() {
+                prefill_rows.push((row, slot));
+            } else {
+                decode_active.push((row, slot));
+            }
+        }
+        self.metrics
+            .set_gauge(names::PREFILL_INFLIGHT_ROWS, prefill_rows.len() as i64);
+
         // ---- draft per active row ------------------------------------
         let gamma_cap = self.cfg.gamma.min(self.mcfg.gamma_max);
-        let mut drafts: Vec<(usize, usize, Draft)> = Vec::with_capacity(active.len());
-        for &(row, slot) in &active {
+        let mut drafts: Vec<(usize, usize, Draft)> = Vec::with_capacity(decode_active.len());
+        for &(row, slot) in &decode_active {
             let st = self.states[slot].as_mut().expect("leased slot has state");
             // Keep a margin: the chunk writes `chunk_len` positions.
             let room = self
@@ -878,6 +1041,24 @@ impl Engine {
                 PlanRow::new(d.len(), self.route_slot(&st.req.task))
             })
             .collect();
+        // Prefilling rows enter the plan as pending chunks, pinned to their
+        // admission variant (their KV must stay single-precision; a
+        // mid-prefill governor flip would otherwise mix histories).
+        let pending: Vec<PrefillPending> = prefill_rows
+            .iter()
+            .map(|&(_, slot)| {
+                let st = self.states[slot].as_ref().expect("leased slot has state");
+                let vi = self
+                    .variants
+                    .iter()
+                    .position(|v| v.name == st.admit_variant)
+                    .unwrap_or(0);
+                PrefillPending {
+                    remaining: st.req.prompt.len() - st.cached,
+                    variant: vi,
+                }
+            })
+            .collect();
         let plan = {
             let variant_ctxs: Vec<VariantCtx> = self
                 .variants
@@ -896,14 +1077,29 @@ impl Engine {
                 verify_chunk: self.mcfg.verify_len(),
                 elastic: self.cfg.elastic,
             };
-            plan_step(&ctx, &plan_rows)?
+            // A step of nothing but prefilling rows has no decode/verify
+            // sub-batches to plan; riders then all run as dedicated calls.
+            let mut plan = if plan_rows.is_empty() {
+                StepPlan { sub_batches: Vec::new(), modeled_s: 0.0, monolithic_s: 0.0 }
+            } else {
+                plan_step(&ctx, &plan_rows)?
+            };
+            pack_prefill_riders(&ctx, &mut plan, &pending, self.mcfg.prefill_len);
+            plan
         };
         self.observe_plan(&plan);
+        if !plan_rows.is_empty()
+            && plan.sub_batches.iter().any(|sb| sb.fn_kind == FnKind::Prefill)
+        {
+            // Spare capacity couldn't absorb every pending chunk: this step
+            // ran a dedicated prefill call alongside live decode rows.
+            self.metrics.inc(names::DECODE_STALL_STEPS, 1);
+        }
 
         // ---- execute + commit each sub-batch ---------------------------
         let t0 = Instant::now();
         for sb in &plan.sub_batches {
-            self.exec_sub_batch(sb, &mut drafts)?;
+            self.exec_sub_batch(sb, &mut drafts, &prefill_rows)?;
         }
         self.publish_kv_gauges();
         self.metrics.observe("step_s", t0.elapsed().as_secs_f64());
@@ -923,18 +1119,22 @@ impl Engine {
     /// governor samples an audit or a probe is due), scatter the advanced
     /// rows back, and commit each row's verification outcome. Consumes the
     /// sub-batch's entries of `drafts` (each draft index belongs to exactly
-    /// one sub-batch of a plan).
+    /// one sub-batch of a plan). Prefill riders occupy the scratch rows
+    /// after `sb.rows` (`pending_rows` maps their pending index to a
+    /// (row, slot) pair) and advance their admission prefill by one chunk.
     fn exec_sub_batch(
         &mut self,
         sb: &SubBatch,
         drafts: &mut [(usize, usize, Draft)],
+        pending_rows: &[(usize, usize)],
     ) -> Result<()> {
         let (bucket, chunk) = (sb.bucket, sb.chunk);
         let variant = self.variants[sb.variant].name.clone();
         let row_map: Vec<usize> = sb.rows.iter().map(|&di| drafts[di].0).collect();
         // Each row paired with its committed length: gather moves only
-        // valid positions, scatter only newly-advanced ones.
-        let row_lens: Vec<(usize, usize)> = sb
+        // valid positions, scatter only newly-advanced ones. Rider rows
+        // follow the committed rows in scratch order.
+        let mut row_lens: Vec<(usize, usize)> = sb
             .rows
             .iter()
             .map(|&di| {
@@ -943,6 +1143,11 @@ impl Engine {
                 (row, st.cached)
             })
             .collect();
+        for r in &sb.riders {
+            let (row, slot) = pending_rows[r.pending];
+            let st = self.states[slot].as_ref().expect("leased slot has state");
+            row_lens.push((row, st.cached));
+        }
 
         // Identity fast path (copy-based rows only): when this sub-batch
         // executes at the full group bucket and covers *every active row*
@@ -959,6 +1164,7 @@ impl Engine {
         // garbage. Page-table rows have no monolithic cache to run on, so
         // they always take the gather/scatter leg.
         let identity = matches!(self.rows, RowStore::Copy(_))
+            && sb.riders.is_empty()
             && bucket == self.rows.batch()
             && row_map.len() == drafts.len()
             && row_map.iter().enumerate().all(|(i, &r)| i == r);
@@ -989,6 +1195,27 @@ impl Engine {
             }
             pos[i] = st.cached as i32;
         }
+        // Rider rows feed prompt tokens for the window `[w, w + chunk)`.
+        // The start clamps to keep the chunk's writes inside the cache row;
+        // a clamped window's overlap `[w, cached)` re-feeds prompt tokens
+        // whose KV the row already holds — a bit-identical rewrite — and
+        // only `[cached, cached + take)` is new. Positions past the prompt
+        // are padding whose KV is never committed.
+        let mut rider_w = vec![0usize; sb.riders.len()];
+        for (ri, r) in sb.riders.iter().enumerate() {
+            let (_, slot) = pending_rows[r.pending];
+            let st = self.states[slot].as_ref().expect("leased slot has state");
+            let w = st.cached.min(self.mcfg.max_seq.saturating_sub(chunk));
+            rider_w[ri] = w;
+            let i = sb.rows.len() + ri;
+            for j in 0..chunk {
+                let pi = w + j;
+                if pi < st.req.prompt.len() {
+                    tokens[i * chunk + j] = st.req.prompt[pi];
+                }
+            }
+            pos[i] = w as i32;
+        }
 
         // ---- execute ---------------------------------------------------
         let t0 = Instant::now();
@@ -1017,14 +1244,16 @@ impl Engine {
             fn_kind: sb.fn_kind,
             batch: bucket,
             n_layers: self.mcfg.n_layers,
-            active_rows: sb.rows.len(),
+            active_rows: sb.rows.len() + sb.riders.len(),
             tokens_used: sb.tokens_used,
             chunk_len: chunk,
             useful_tokens: sb.useful_tokens,
             wall_s: wall,
         });
-        self.metrics
-            .observe(&names::bucket_occupancy(bucket), sb.rows.len() as f64);
+        self.metrics.observe(
+            &names::bucket_occupancy(bucket),
+            (sb.rows.len() + sb.riders.len()) as f64,
+        );
         self.metrics.inc(&names::bucket_calls(bucket), 1);
         self.metrics.inc(&names::variant_calls(&variant), 1);
         self.metrics.observe(
@@ -1043,7 +1272,9 @@ impl Engine {
         // the inputs here — the primary's advanced cache lives in `out`)
         // and its own advanced cache is discarded, so audits never touch
         // committed state.
-        let shadow_slot: Option<usize> = if !self.governed() {
+        let shadow_slot: Option<usize> = if !self.governed() || sb.rows.is_empty() {
+            // Dedicated prefill sub-batches carry no committed rows, so
+            // there is nothing for a shadow call to compare against.
             None
         } else if sb.variant == 0 {
             self.metrics.inc(names::GOVERNOR_ELIGIBLE, 1);
@@ -1183,6 +1414,18 @@ impl Engine {
         // The chunk wrote positions `[cached, cached + chunk)` per carried
         // row; everything below was already committed before the call.
         if let (Some(sk), Some(sv)) = (sk, sv) {
+            // Per scratch row, the first position past this call's committed
+            // write: the full speculative window for decode/verify rows, but
+            // only the rider's `take` — the window tail past the prompt is
+            // padding garbage that must never land in a row.
+            let max_seq = self.mcfg.max_seq;
+            let write_end = move |i: usize, c: usize| {
+                if i < sb.rows.len() {
+                    (c + chunk).min(max_seq)
+                } else {
+                    c + sb.riders[i - sb.rows.len()].take
+                }
+            };
             match &mut self.rows {
                 RowStore::Copy(g) => {
                     // The slab backend re-writes the whole valid extent:
@@ -1190,7 +1433,8 @@ impl Engine {
                     // row's committed prefix plus the chunk's advance.
                     let write_back: Vec<(usize, usize)> = row_lens
                         .iter()
-                        .map(|&(r, c)| (r, (c + chunk).min(self.mcfg.max_seq)))
+                        .enumerate()
+                        .map(|(i, &(r, c))| (r, write_end(i, c)))
                         .collect();
                     g.scatter_rows(&write_back, &out.k, &out.v)?;
                 }
@@ -1201,7 +1445,8 @@ impl Engine {
                     // slab backend would have re-copied is booked as saved.
                     let advances: Vec<(usize, usize, usize)> = row_lens
                         .iter()
-                        .map(|&(r, c)| (r, c, (c + chunk).min(self.mcfg.max_seq)))
+                        .enumerate()
+                        .map(|(i, &(r, c))| (r, c, write_end(i, c)))
                         .collect();
                     g.scatter_advance(&mut self.prefix_cache, &advances, &out.k, &out.v)?;
                     let page = self.cfg.prefix.page_tokens.max(1);
@@ -1420,6 +1665,87 @@ impl Engine {
                 self.finish_to_completion(st);
             }
         }
+
+        // ---- advance prefill riders ------------------------------------
+        // Each rider consumed one chunk of its admission prefill: commit
+        // the newly-covered positions, and once the prompt completes,
+        // sample the first token from this chunk's logits (position
+        // `(len - 1) - w` of the rider's scratch row is prompt position
+        // `len - 1`) — the same draw, from the same per-request RNG, over
+        // the same logits the monolithic admission prefill produces.
+        for (ri, r) in sb.riders.iter().enumerate() {
+            let (row, slot) = pending_rows[r.pending];
+            let w = rider_w[ri];
+            let st = self.states[slot].as_mut().expect("leased slot has state");
+            let prog = st.prefilling.as_mut().expect("rider row is prefilling");
+            prog.consumed += r.take;
+            st.cached += r.take;
+            if let RowStore::Paged(g) = &mut self.rows {
+                g.set_len(row, st.cached)?;
+            }
+            self.metrics.inc(names::PREFILL_CHUNKS, 1);
+            if r.saved_s > 0.0 {
+                self.metrics.observe(names::PREFILL_STALL_SAVED_S, r.saved_s);
+            }
+            let len = st.req.prompt.len();
+            if st.cached < len {
+                continue; // more chunks to come on later steps
+            }
+
+            // Prompt complete: first token, then the row decodes normally.
+            let scratch_row = sb.rows.len() + ri;
+            let first = {
+                let lrow = out.logits.row(&[scratch_row, (len - 1) - w]);
+                crate::spec::sample_logits(lrow, st.req.params.temp, &mut st.rng)
+            };
+            st.prefilling = None;
+            st.committed.push(first);
+            st.generated = 1;
+            st.stats.steps += 1;
+            st.stats.tokens_out += 1;
+            st.first_token_at = Some(Instant::now());
+            st.drafter.observe_commit(&[first])?;
+            let cost = st.drafter.take_cost();
+            self.call_log.add_draft_cost(&cost);
+            st.draft_cost.merge(&cost);
+            Self::check_finish_with(self.mcfg.max_seq, st);
+
+            // Feed the cache forward, as monolithic admission does once its
+            // prefill lands: future admissions sharing this prefix skip
+            // that much work.
+            if self.cfg.prefix.enabled {
+                match &self.rows {
+                    RowStore::Copy(g) => {
+                        // The slab row holds the whole prompt's KV; copy it
+                        // into the pool under the full-prompt key.
+                        self.prefix_cache.insert_from_row(
+                            &variant, &st.req.prompt, &g.k, &g.v, row, None,
+                        );
+                        snapshotted = true;
+                    }
+                    RowStore::Paged(g) => {
+                        // Reference the row's own pages — but only *full*
+                        // ones: the partial tail page is this live row's
+                        // private growth frontier, and sharing it would make
+                        // the row's next `write_row_page` hard-error.
+                        let page = self.cfg.prefix.page_tokens.max(1);
+                        let key_len = (len / page) * page;
+                        if key_len > 0 {
+                            let pages = g.row_pages(row).expect("leased row has pages");
+                            self.prefix_cache.insert_pages(
+                                &variant, &st.req.prompt[..key_len], pages, None,
+                            );
+                            snapshotted = true;
+                        }
+                    }
+                }
+            }
+            if !st.is_active() {
+                self.rows.leave(&mut self.prefix_cache, row)?;
+                let st = self.states[slot].take().unwrap();
+                self.finish_to_completion(st);
+            }
+        }
         if snapshotted {
             self.publish_prefix_gauges();
             self.publish_kv_gauges();
@@ -1471,6 +1797,18 @@ impl Engine {
         }
         self.metrics.observe("request_latency_s", latency);
         self.metrics.observe("ttft_s", ttft);
+        // Warm/cold split, keyed on whether admission matched a cached
+        // prefix: chunked prefill's whole point is that warm requests admit
+        // (and reach their first token) earlier, and the aggregate TTFT
+        // histogram averages that signal away.
+        let tpot = (latency - ttft).max(0.0) / st.generated.saturating_sub(1).max(1) as f64;
+        if st.prefix_hit {
+            self.metrics.observe(names::TTFT_WARM_S, ttft);
+            self.metrics.observe(names::TPOT_WARM_S, tpot);
+        } else {
+            self.metrics.observe(names::TTFT_COLD_S, ttft);
+            self.metrics.observe(names::TPOT_COLD_S, tpot);
+        }
         self.completions.push(Completion {
             id: st.req.id,
             task: st.req.task.clone(),

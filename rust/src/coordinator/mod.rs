@@ -22,9 +22,11 @@ pub use calls::{CallLog, CallRecord, FnKind};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::{BatchGroup, PagedGroup, RowStore};
-pub use plan::{best_bucket, plan_step, PlanCtx, PlanRow, StepPlan, SubBatch, VariantCtx};
+pub use plan::{best_bucket, pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending,
+               PrefillRider, StepPlan, SubBatch, VariantCtx};
 pub use prefixcache::{Lease, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
-pub use request::{Completion, FinishReason, GenParams, Priority, Request, RequestState};
-pub use router::{BucketStat, EngineHandle, GovernorSnapshot, KvSnapshot, PrefixSnapshot,
-                 RouterStats, StatsSnapshot, Ticket, VariantCalls};
+pub use request::{Completion, FinishReason, GenParams, PrefillProgress, Priority, Request,
+                  RequestState};
+pub use router::{BucketStat, EngineHandle, GovernorSnapshot, KvSnapshot, PrefillSnapshot,
+                 PrefixSnapshot, RouterStats, StatsSnapshot, Ticket, VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -42,6 +42,35 @@
 //!   order and rows within a group are ordered longest-draft-first (ties by
 //!   row index), so a split group packs similar draft lengths together and
 //!   per-sub-batch `tokens_used` maxima stay small.
+//!
+//! ## Rider-packing invariants (prefill chunks riding decode steps)
+//!
+//! After the plan is chosen, [`pack_prefill_riders`] fills remaining spare
+//! capacity with pending admission-prefill chunks (see
+//! `coordinator::engine`'s resumable admission state machine). The packing
+//! obeys:
+//!
+//! * **Same variant** — a chunk only rides a sub-batch streaming the
+//!   variant its admission resolved to, mirroring the decode-rider rule
+//!   (and the prefix cache's one-variant-per-run bit-identity contract).
+//! * **Bucket cost never grows** — a rider occupies a spare row the chosen
+//!   bucket already pays KV/activation traffic for, and consumes at most
+//!   `sb.chunk` positions (`take <= chunk`), so the sub-batch's priced
+//!   shape `(bucket, tokens_used)` can only grow in `tokens_used` up to
+//!   the chunk the call executes anyway. The plan's bucket choice is never
+//!   revisited for a rider.
+//! * **At most one chunk per pending row per step** — a prefilling row
+//!   advances by one chunk per planned pass, keeping the step a single
+//!   plan → gather → execute → scatter pipeline.
+//! * **Stall fallback** — a pending row that finds no same-variant spare
+//!   slot gets a *dedicated* single-row `FnKind::Prefill` sub-batch (the
+//!   monolithic admission shape, `rows` empty, the chunk described by its
+//!   one rider). Those are the steps the `decode_stall_steps` counter
+//!   tallies when decode rows were active; riding chunks book the avoided
+//!   dedicated-call price to `prefill_stall_saved_s` instead.
+//! * Riders never change committed-row semantics: `SubBatch::rows` is
+//!   still exactly the decode/verify rows, and every consumer of the plan
+//!   (governor audits, commit loop) iterates `rows` untouched.
 
 use anyhow::{bail, Result};
 
@@ -111,9 +140,15 @@ pub struct SubBatch {
     pub chunk: usize,
     /// Indices into the step's row list; scratch row `i` carries `rows[i]`.
     pub rows: Vec<usize>,
+    /// Pending-admission prefill chunks filling spare rows after `rows`
+    /// (scratch row `rows.len() + j` carries `riders[j]`); empty until
+    /// [`pack_prefill_riders`] runs. A dedicated prefill sub-batch has
+    /// empty `rows` and exactly one rider.
+    pub riders: Vec<PrefillRider>,
     /// `1 + longest draft` among `rows` (what the cost model prices).
     pub tokens_used: usize,
-    /// Sum over `rows` of `1 + draft len` (chunk-efficiency numerator).
+    /// Sum over `rows` of `1 + draft len` (chunk-efficiency numerator);
+    /// rider takes are added when they pack.
     pub useful_tokens: usize,
 }
 
@@ -123,12 +158,84 @@ impl SubBatch {
         debug_assert!(!rows.is_empty());
         let tokens_used = rows.iter().map(|&i| draft_lens[i] + 1).max().unwrap_or(1);
         let useful_tokens = rows.iter().map(|&i| draft_lens[i] + 1).sum();
-        SubBatch { fn_kind, variant, bucket, chunk, rows, tokens_used, useful_tokens }
+        SubBatch {
+            fn_kind, variant, bucket, chunk, rows, riders: Vec::new(),
+            tokens_used, useful_tokens,
+        }
     }
 
-    /// Free capacity left in the selected bucket.
+    /// Free capacity left in the selected bucket (riders occupy slots too).
     pub fn spare(&self) -> usize {
-        self.bucket.saturating_sub(self.rows.len())
+        self.bucket.saturating_sub(self.rows.len() + self.riders.len())
+    }
+}
+
+/// One pending admission-prefill chunk packed into a sub-batch's spare
+/// capacity (or into a dedicated prefill sub-batch when nothing had room).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillRider {
+    /// Index into the `pending` list handed to [`pack_prefill_riders`].
+    pub pending: usize,
+    /// Suffix tokens this chunk consumes (`<= sb.chunk` when riding).
+    pub take: usize,
+    /// Modeled seconds of dedicated-prefill stall the ride avoided
+    /// ([`PerfModel::prefill_stall_saved_s`]); `0.0` for a dedicated
+    /// sub-batch — nothing was avoided, the stall happened.
+    pub saved_s: f64,
+}
+
+/// One partially-prefilled row awaiting its next chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillPending {
+    /// Prompt-suffix tokens still to prefill (`> 0`).
+    pub remaining: usize,
+    /// Index into [`PlanCtx::variants`] of the row's admission variant.
+    pub variant: usize,
+}
+
+/// Fill the chosen plan's spare capacity with pending prefill chunks (see
+/// the module doc's rider-packing invariants). Every pending row advances
+/// by exactly one chunk: riding a same-variant sub-batch's spare slot when
+/// one exists, otherwise as a dedicated single-row prefill sub-batch of
+/// `prefill_chunk` positions appended to the plan. Dedicated calls are
+/// priced into both `modeled_s` and `monolithic_s` (the stall costs the
+/// same in either shape, so the planner-savings invariant is unchanged).
+pub fn pack_prefill_riders(ctx: &PlanCtx, plan: &mut StepPlan,
+                           pending: &[PrefillPending], prefill_chunk: usize) {
+    for (pi, p) in pending.iter().enumerate() {
+        debug_assert!(p.remaining > 0);
+        let slot = plan.sub_batches.iter_mut().find(|sb| {
+            sb.fn_kind != FnKind::Prefill && sb.variant == p.variant && sb.spare() > 0
+        });
+        if let Some(sb) = slot {
+            let take = p.remaining.min(sb.chunk);
+            let saved_s = ctx.perf.prefill_stall_saved_s(
+                ctx.variants[p.variant].name, ctx.n_layers, take,
+            );
+            sb.riders.push(PrefillRider { pending: pi, take, saved_s });
+            sb.useful_tokens += take;
+            // The call executes `chunk` positions either way; the rider can
+            // only raise the *priced* token count up to that ceiling.
+            sb.tokens_used = sb.tokens_used.max(take);
+        } else {
+            let take = p.remaining.min(prefill_chunk);
+            let cost = ctx
+                .perf
+                .price_parts(ctx.variants[p.variant].name, ctx.n_layers, 1, take)
+                .total();
+            plan.sub_batches.push(SubBatch {
+                fn_kind: FnKind::Prefill,
+                variant: p.variant,
+                bucket: 1,
+                chunk: prefill_chunk,
+                rows: Vec::new(),
+                riders: vec![PrefillRider { pending: pi, take, saved_s: 0.0 }],
+                tokens_used: take,
+                useful_tokens: take,
+            });
+            plan.modeled_s += cost;
+            plan.monolithic_s += cost;
+        }
     }
 }
 
@@ -681,6 +788,110 @@ mod tests {
         assert_eq!(plan.sub_batches.len(), 2, "one call per variant group");
         assert!(plan.sub_batches.iter().all(|sb| sb.bucket == 4));
         assert_eq!(plan.modeled_s, plan.monolithic_s);
+    }
+
+    #[test]
+    fn prefill_chunk_rides_spare_capacity_and_books_the_saving() {
+        // 1 verify row in a b2 bucket leaves one spare slot: the pending
+        // prefill chunk rides it, capped at the verify chunk, without
+        // touching the committed rows or the bucket choice.
+        let perf = weight_heavy();
+        let buckets = [2usize, 4];
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, true);
+        let mut plan = plan_step(&c, &prows(&[4])).unwrap();
+        let (modeled, mono) = (plan.modeled_s, plan.monolithic_s);
+        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 40, variant: 0 }], 128);
+        assert_eq!(plan.sub_batches.len(), 1, "no dedicated call appended");
+        let sb = &plan.sub_batches[0];
+        assert_eq!(sb.rows, vec![0], "committed rows untouched");
+        assert_eq!(sb.riders.len(), 1);
+        assert_eq!(sb.riders[0].pending, 0);
+        assert_eq!(sb.riders[0].take, 9, "take capped at the verify chunk");
+        assert!(sb.riders[0].saved_s > 0.0, "the avoided dedicated call is priced");
+        assert_eq!(sb.spare(), 0, "the rider consumed the spare slot");
+        assert_eq!(sb.tokens_used, 9, "priced tokens grow up to the chunk ceiling");
+        assert_eq!(sb.useful_tokens, 5 + 9);
+        assert_eq!(plan.modeled_s, modeled, "riding is free in the plan cost");
+        assert_eq!(plan.monolithic_s, mono);
+
+        // A short remainder takes only what is left.
+        let mut plan = plan_step(&c, &prows(&[4])).unwrap();
+        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 3, variant: 0 }], 128);
+        assert_eq!(plan.sub_batches[0].riders[0].take, 3);
+    }
+
+    #[test]
+    fn prefill_chunk_without_spare_capacity_gets_a_dedicated_call() {
+        // Occupancy 1 shrinks to the b1 bucket: no spare slot, so the
+        // pending row falls back to a dedicated single-row prefill
+        // sub-batch priced into both cost sides (savings gap unchanged).
+        let perf = kv_heavy();
+        let buckets = [1usize, 4];
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, true);
+        let mut plan = plan_step(&c, &prows(&[3])).unwrap();
+        assert_eq!(plan.sub_batches[0].spare(), 0);
+        let gap = plan.monolithic_s - plan.modeled_s;
+        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 200, variant: 0 }], 128);
+        assert_eq!(plan.sub_batches.len(), 2);
+        let ded = &plan.sub_batches[1];
+        assert_eq!(ded.fn_kind, FnKind::Prefill);
+        assert_eq!(ded.bucket, 1);
+        assert_eq!(ded.chunk, 128);
+        assert!(ded.rows.is_empty());
+        assert_eq!(ded.riders.len(), 1);
+        assert_eq!(ded.riders[0].take, 128, "take capped at the prefill chunk");
+        assert_eq!(ded.riders[0].saved_s, 0.0, "a stall saves nothing");
+        assert_eq!(ded.tokens_used, 128);
+        assert!(
+            (plan.monolithic_s - plan.modeled_s - gap).abs() < 1e-15,
+            "dedicated cost lands on both sides"
+        );
+    }
+
+    #[test]
+    fn prefill_riders_respect_variant_and_one_chunk_per_row() {
+        // Spare capacity exists only at variant 0; the variant-1 pending
+        // row must NOT ride it. Two variant-0 pending rows each get exactly
+        // one chunk: the first rides the spare slot, the second (slot now
+        // full) falls back to a dedicated call.
+        let perf = kv_heavy();
+        let buckets = [2usize, 4];
+        let vs = vec![
+            VariantCtx { name: "w8a8", verify_buckets: &buckets, decode_buckets: &buckets },
+            VariantCtx { name: "fp32", verify_buckets: &buckets, decode_buckets: &buckets },
+        ];
+        let c = ctx(&perf, &vs, 4, true);
+        let mut plan = plan_step(&c, &[PlanRow::new(4, 0)]).unwrap();
+        assert_eq!(plan.sub_batches.len(), 1);
+        assert_eq!(plan.sub_batches[0].spare(), 1);
+        let pending = [
+            PrefillPending { remaining: 50, variant: 1 },
+            PrefillPending { remaining: 50, variant: 0 },
+            PrefillPending { remaining: 50, variant: 0 },
+        ];
+        pack_prefill_riders(&c, &mut plan, &pending, 64);
+        assert_eq!(plan.sub_batches.len(), 3, "two dedicated calls appended");
+        assert_eq!(plan.sub_batches[0].riders.len(), 1, "one ride in the spare slot");
+        assert_eq!(plan.sub_batches[0].riders[0].pending, 1, "same-variant row rides");
+        let ded: Vec<&SubBatch> =
+            plan.sub_batches.iter().filter(|sb| sb.fn_kind == FnKind::Prefill).collect();
+        assert_eq!(ded.len(), 2);
+        assert_eq!(ded[0].variant, 1, "cross-variant row stalled");
+        assert_eq!(ded[0].riders[0].pending, 0);
+        assert_eq!(ded[1].variant, 0, "no spare left for the third row");
+        assert_eq!(ded[1].riders[0].pending, 2);
+        // Exactly one chunk per pending row this step.
+        let mut seen: Vec<usize> = plan
+            .sub_batches
+            .iter()
+            .flat_map(|sb| sb.riders.iter().map(|r| r.pending))
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        // A dedicated prefill sub-batch is never a rider target.
+        assert!(ded.iter().all(|sb| sb.riders.len() == 1));
     }
 
     #[test]

@@ -75,9 +75,10 @@ pub struct Request {
     pub params: GenParams,
     /// Task family tag (workload benches group metrics by it).
     pub task: String,
-    /// The submitted prompt exceeded the prefill window and was cut to it;
-    /// surfaced in the completion's [`SpecStats`] and a metrics counter so
-    /// silently-shortened prompts are visible to callers.
+    /// The submitted prompt exceeded the context cap (`max_seq - 2`) and
+    /// was cut to it; surfaced in the completion's [`SpecStats`] and a
+    /// metrics counter so silently-shortened prompts are visible to
+    /// callers.
     pub prompt_truncated: bool,
     pub submitted_at: Instant,
 }
@@ -120,6 +121,23 @@ pub enum FinishReason {
     Cancelled,
 }
 
+/// Progress of a chunked (resumable) admission prefill. While present on a
+/// [`RequestState`], the row holds a KV slot whose positions `0..cached`
+/// are committed (`cached = hit + consumed`) but has emitted no token yet:
+/// the remaining prompt suffix `[hit + consumed, prompt.len())` is fed in
+/// planner-packed chunks that ride spare decode/verify slots. The first
+/// token samples from the chunk that covers the final prompt position —
+/// bit-identical to the monolithic suffix prefill because attention is
+/// causal and every chunk writes the same positions the one-shot chunk
+/// would.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillProgress {
+    /// Prompt tokens served from the prefix cache at admission.
+    pub hit: usize,
+    /// Suffix tokens prefilled by completed chunks so far.
+    pub consumed: usize,
+}
+
 /// In-flight per-request state owned by the scheduler.
 pub struct RequestState {
     pub req: Request,
@@ -148,6 +166,13 @@ pub struct RequestState {
     /// snapshotted mid-stream — a cached run must be bit-exact KV for its
     /// key at exactly one variant.
     pub kv_mixed: bool,
+    /// `Some` while the row's admission prefill is still being fed in
+    /// chunks (chunked admission only); `None` once the first token has
+    /// sampled and the row decodes normally.
+    pub prefilling: Option<PrefillProgress>,
+    /// The admission lookup matched a cached prefix — keys the warm/cold
+    /// TTFT/TPOT histogram split at completion.
+    pub prefix_hit: bool,
 }
 
 impl RequestState {
@@ -171,6 +196,8 @@ impl RequestState {
             finished: None,
             admit_variant: String::new(),
             kv_mixed: false,
+            prefilling: None,
+            prefix_hit: false,
         }
     }
 

@@ -152,6 +152,35 @@ pub struct KvSnapshot {
     pub copy_saved_s: f64,
 }
 
+/// Point-in-time view of chunked admission prefill (see
+/// `coordinator::engine`): how much prompt ingestion rode spare
+/// decode/verify slots instead of stalling decode, and what first-token /
+/// per-token latency looks like split by prefix-cache warmth.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefillSnapshot {
+    /// Prefill chunks executed (riders, dedicated fallbacks, and
+    /// monolithic admission windows all count).
+    pub chunks: u64,
+    /// Rows currently admitted but still prefilling chunk-by-chunk.
+    pub inflight_rows: u64,
+    /// Steps in which a dedicated prefill call ran while decode rows were
+    /// active — the stall chunked prefill exists to remove.
+    pub decode_stall_steps: u64,
+    /// Modeled seconds of stall avoided by chunks that rode spare slots
+    /// (sum of the `prefill_stall_saved_s` histogram).
+    pub stall_saved_s: f64,
+    /// TTFT percentiles; warm = admission hit the prefix cache.
+    pub ttft_warm_p50_s: f64,
+    pub ttft_warm_p99_s: f64,
+    pub ttft_cold_p50_s: f64,
+    pub ttft_cold_p99_s: f64,
+    /// Per-token decode latency percentiles on the same warm/cold split.
+    pub tpot_warm_p50_s: f64,
+    pub tpot_warm_p99_s: f64,
+    pub tpot_cold_p50_s: f64,
+    pub tpot_cold_p99_s: f64,
+}
+
 /// Lock-free counters the engine thread publishes after every step and any
 /// thread may read at any time (the server's `stats` endpoint). The
 /// per-bucket tallies are the one mutex-guarded piece; they are written only
@@ -213,8 +242,24 @@ pub struct RouterStats {
     pub kv_row_tail_copies: AtomicU64,
     /// Modeled seconds of KV copies the paged backend avoided, microseconds.
     pub kv_copy_saved_us: AtomicU64,
-    /// Submitted prompts cut to the prefill window.
+    /// Submitted prompts cut to the context cap.
     pub prompt_truncated: AtomicU64,
+    /// Chunked-admission prefill counters published by the engine thread.
+    pub prefill_chunks: AtomicU64,
+    pub prefill_inflight_rows: AtomicUsize,
+    pub decode_stall_steps: AtomicU64,
+    /// Modeled stall seconds riding chunks avoided, microseconds.
+    pub prefill_stall_saved_us: AtomicU64,
+    /// Warm/cold first-token and per-token latency percentiles,
+    /// microseconds (warm = admission hit the prefix cache).
+    pub ttft_warm_p50_us: AtomicU64,
+    pub ttft_warm_p99_us: AtomicU64,
+    pub ttft_cold_p50_us: AtomicU64,
+    pub ttft_cold_p99_us: AtomicU64,
+    pub tpot_warm_p50_us: AtomicU64,
+    pub tpot_warm_p99_us: AtomicU64,
+    pub tpot_cold_p50_us: AtomicU64,
+    pub tpot_cold_p99_us: AtomicU64,
     /// Per-bucket occupancy/calls published by the engine thread.
     pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
     /// Per-variant chunk-call tallies published by the engine thread.
@@ -249,7 +294,9 @@ pub struct StatsSnapshot {
     pub prefix: PrefixSnapshot,
     /// KV residency / page-table-row view.
     pub kv: KvSnapshot,
-    /// Submitted prompts cut to the prefill window.
+    /// Chunked admission-prefill view (warm/cold latency split included).
+    pub prefill: PrefillSnapshot,
+    /// Submitted prompts cut to the context cap.
     pub prompt_truncated: u64,
 }
 
@@ -341,6 +388,26 @@ impl StatsSnapshot {
                     ("row_copied_pages", Json::num(self.kv.row_copied_pages as f64)),
                     ("row_tail_copies", Json::num(self.kv.row_tail_copies as f64)),
                     ("copy_saved_s", Json::num(self.kv.copy_saved_s)),
+                ]),
+            ),
+            (
+                "prefill",
+                Json::obj(vec![
+                    ("chunks", Json::num(self.prefill.chunks as f64)),
+                    ("inflight_rows", Json::num(self.prefill.inflight_rows as f64)),
+                    (
+                        "decode_stall_steps",
+                        Json::num(self.prefill.decode_stall_steps as f64),
+                    ),
+                    ("stall_saved_s", Json::num(self.prefill.stall_saved_s)),
+                    ("ttft_warm_p50_s", Json::num(self.prefill.ttft_warm_p50_s)),
+                    ("ttft_warm_p99_s", Json::num(self.prefill.ttft_warm_p99_s)),
+                    ("ttft_cold_p50_s", Json::num(self.prefill.ttft_cold_p50_s)),
+                    ("ttft_cold_p99_s", Json::num(self.prefill.ttft_cold_p99_s)),
+                    ("tpot_warm_p50_s", Json::num(self.prefill.tpot_warm_p50_s)),
+                    ("tpot_warm_p99_s", Json::num(self.prefill.tpot_warm_p99_s)),
+                    ("tpot_cold_p50_s", Json::num(self.prefill.tpot_cold_p50_s)),
+                    ("tpot_cold_p99_s", Json::num(self.prefill.tpot_cold_p99_s)),
                 ]),
             ),
             ("prompt_truncated", Json::num(self.prompt_truncated as f64)),
@@ -588,6 +655,23 @@ impl EngineHandle {
                 row_tail_copies: s.kv_row_tail_copies.load(Ordering::Relaxed),
                 copy_saved_s: s.kv_copy_saved_us.load(Ordering::Relaxed) as f64 / 1e6,
             },
+            prefill: {
+                let us = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / 1e6;
+                PrefillSnapshot {
+                    chunks: s.prefill_chunks.load(Ordering::Relaxed),
+                    inflight_rows: s.prefill_inflight_rows.load(Ordering::Relaxed) as u64,
+                    decode_stall_steps: s.decode_stall_steps.load(Ordering::Relaxed),
+                    stall_saved_s: us(&s.prefill_stall_saved_us),
+                    ttft_warm_p50_s: us(&s.ttft_warm_p50_us),
+                    ttft_warm_p99_s: us(&s.ttft_warm_p99_us),
+                    ttft_cold_p50_s: us(&s.ttft_cold_p50_us),
+                    ttft_cold_p99_s: us(&s.ttft_cold_p99_us),
+                    tpot_warm_p50_s: us(&s.tpot_warm_p50_us),
+                    tpot_warm_p99_s: us(&s.tpot_warm_p99_us),
+                    tpot_cold_p50_s: us(&s.tpot_cold_p50_us),
+                    tpot_cold_p99_s: us(&s.tpot_cold_p99_us),
+                }
+            },
             prompt_truncated: s.prompt_truncated.load(Ordering::Relaxed),
         }
     }
@@ -813,6 +897,53 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
         m.counter(crate::metrics::names::PROMPT_TRUNCATED),
         Ordering::Relaxed,
     );
+    // Chunked admission-prefill counters (zero in monolithic mode except
+    // `prefill_chunks`, which also counts monolithic admission windows).
+    stats.prefill_chunks.store(
+        m.counter(crate::metrics::names::PREFILL_CHUNKS),
+        Ordering::Relaxed,
+    );
+    stats.decode_stall_steps.store(
+        m.counter(crate::metrics::names::DECODE_STALL_STEPS),
+        Ordering::Relaxed,
+    );
+    stats.prefill_inflight_rows.store(
+        m.gauge(crate::metrics::names::PREFILL_INFLIGHT_ROWS).max(0) as usize,
+        Ordering::Relaxed,
+    );
+    if let Some(h) = m.hist(crate::metrics::names::PREFILL_STALL_SAVED_S) {
+        stats
+            .prefill_stall_saved_us
+            .store((h.sum() * 1e6) as u64, Ordering::Relaxed);
+    }
+    // Warm/cold latency split: publish p50/p99 pairs per histogram.
+    for (name, p50_dst, p99_dst) in [
+        (
+            crate::metrics::names::TTFT_WARM_S,
+            &stats.ttft_warm_p50_us,
+            &stats.ttft_warm_p99_us,
+        ),
+        (
+            crate::metrics::names::TTFT_COLD_S,
+            &stats.ttft_cold_p50_us,
+            &stats.ttft_cold_p99_us,
+        ),
+        (
+            crate::metrics::names::TPOT_WARM_S,
+            &stats.tpot_warm_p50_us,
+            &stats.tpot_warm_p99_us,
+        ),
+        (
+            crate::metrics::names::TPOT_COLD_S,
+            &stats.tpot_cold_p50_us,
+            &stats.tpot_cold_p99_us,
+        ),
+    ] {
+        if let Some(h) = m.hist(name) {
+            p50_dst.store((h.p50() * 1e6) as u64, Ordering::Relaxed);
+            p99_dst.store((h.p99() * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
     // Transition counts come from the governor itself (not the metrics
     // registry): transitions forced outside the engine's audit loop — e.g.
     // operational pre-demotion via `Engine::governor_mut` — must still be
@@ -892,6 +1023,20 @@ mod tests {
                 row_tail_copies: 4,
                 copy_saved_s: 0.5,
             },
+            prefill: PrefillSnapshot {
+                chunks: 11,
+                inflight_rows: 2,
+                decode_stall_steps: 3,
+                stall_saved_s: 0.0625,
+                ttft_warm_p50_s: 0.010,
+                ttft_warm_p99_s: 0.020,
+                ttft_cold_p50_s: 0.030,
+                ttft_cold_p99_s: 0.040,
+                tpot_warm_p50_s: 0.001,
+                tpot_warm_p99_s: 0.002,
+                tpot_cold_p50_s: 0.003,
+                tpot_cold_p99_s: 0.004,
+            },
             prompt_truncated: 2,
         };
         let j = s.to_json();
@@ -955,6 +1100,23 @@ mod tests {
         assert_eq!(kv.get("row_copied_pages").unwrap().as_i64().unwrap(), 0);
         assert_eq!(kv.get("row_tail_copies").unwrap().as_i64().unwrap(), 4);
         assert!((kv.get("copy_saved_s").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        let pf = j.get("prefill").unwrap();
+        assert_eq!(pf.get("chunks").unwrap().as_i64().unwrap(), 11);
+        assert_eq!(pf.get("inflight_rows").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(pf.get("decode_stall_steps").unwrap().as_i64().unwrap(), 3);
+        assert!((pf.get("stall_saved_s").unwrap().as_f64().unwrap() - 0.0625).abs() < 1e-9);
+        for (key, want) in [
+            ("ttft_warm_p50_s", 0.010),
+            ("ttft_warm_p99_s", 0.020),
+            ("ttft_cold_p50_s", 0.030),
+            ("ttft_cold_p99_s", 0.040),
+            ("tpot_warm_p50_s", 0.001),
+            ("tpot_warm_p99_s", 0.002),
+            ("tpot_cold_p50_s", 0.003),
+            ("tpot_cold_p99_s", 0.004),
+        ] {
+            assert!((pf.get(key).unwrap().as_f64().unwrap() - want).abs() < 1e-9, "{key}");
+        }
         assert_eq!(j.get("prompt_truncated").unwrap().as_i64().unwrap(), 2);
     }
 }

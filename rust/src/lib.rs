@@ -36,13 +36,31 @@
 //!   so full pages stay immutable and shareable while each row writes only
 //!   its private (refs == 1) growth-frontier page; the copy-based slab
 //!   backend (`paged_rows: false`) is kept as the A/B reference that CI
-//!   holds bit-identical. Each engine step then runs a plan → gather →
-//!   execute → scatter → commit pipeline (`coordinator::plan`): active rows
-//!   are partitioned into sub-batches by required function (decode-only vs
-//!   verify) *and* by verifier precision, and each sub-batch executes
-//!   through the cheapest exported (batch bucket, weight variant) pair on
-//!   the cost model, so priced memory traffic tracks useful work instead of
-//!   the configured shape — low-occupancy groups stop streaming idle KV
+//!   holds bit-identical. Admission itself is a *resumable state machine*,
+//!   not a blocking prefill (`chunked_prefill`, the default): a request is
+//!   admitted as soon as a KV row and one prefill-window slot exist — the
+//!   row leases its spliced prefix pages immediately and the remaining
+//!   suffix is recorded as `Prefilling { hit, consumed }` request state —
+//!   and the suffix is then fed one planner-packed chunk per engine step,
+//!   *riding the spare rows of the decode/verify sub-batches the step
+//!   executes anyway*, so admission prefill never preempts decoding rows.
+//!   Partially-prefilled rows accumulate pool pages chunk by chunk through
+//!   the same append-only lease API, the first token samples from the
+//!   chunk covering the final prompt position, and only when no
+//!   same-variant spare slot exists does a chunk fall back to a dedicated
+//!   prefill call — the case the `decode_stall_steps` counter tallies,
+//!   while ridden chunks book the avoided call price to
+//!   `prefill_stall_saved_s`. The monolithic admission loop
+//!   (`chunked_prefill: false`) is kept as the bit-identical A/B
+//!   reference, exactly like the slab rows. Each engine step then runs a
+//!   plan → gather → execute → scatter → commit pipeline
+//!   (`coordinator::plan`): active rows are partitioned into sub-batches
+//!   by required function (decode-only vs verify) *and* by verifier
+//!   precision, each sub-batch executes through the cheapest exported
+//!   (batch bucket, weight variant) pair on the cost model, and pending
+//!   prefill chunks pack into whatever spare capacity the chosen buckets
+//!   leave, so priced memory traffic tracks useful work instead of the
+//!   configured shape — low-occupancy groups stop streaming idle KV
 //!   rows, decode-only rows stop paying full verify-chunk traffic, and
 //!   scatter writes back only each row's freshly executed `[cached,
 //!   cached+chunk)` delta (the skipped prefix traffic is booked to the

@@ -52,6 +52,8 @@ fn real_main() -> Result<()> {
          "snapshot generated continuations into the prefix cache: on | off")
     .opt("paged-rows", Some("on"),
          "batch rows as page-tables over the shared pool: on | off (off = copy-based slabs)")
+    .opt("chunked-prefill", Some("on"),
+         "admission prefill in chunks riding spare decode slots: on | off (off = monolithic)")
     .flag("warmup", "serve: pre-populate the prefix cache from workload templates at boot")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
@@ -105,6 +107,11 @@ fn real_main() -> Result<()> {
             "on" => true,
             "off" => false,
             other => bail!("unknown paged-rows mode '{other}' (on|off)"),
+        },
+        chunked_prefill: match parsed.str("chunked-prefill").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown chunked-prefill mode '{other}' (on|off)"),
         },
     };
 

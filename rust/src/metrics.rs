@@ -122,8 +122,36 @@ pub mod names {
     /// minus the per-page splice traffic that realized the hit.
     pub const PREFILL_SAVED_S: &str = "prefill_saved_s";
 
-    /// Counter: submitted prompts silently cut to the prefill window.
+    /// Counter: submitted prompts cut to the context cap (`max_seq - 2`,
+    /// the longest prompt that can still emit a token before the row's
+    /// context fills).
     pub const PROMPT_TRUNCATED: &str = "prompt_truncated";
+
+    /// Counter: prefill chunks executed — one per admission-suffix chunk,
+    /// whether it rode a decode/verify sub-batch's spare slot or ran as a
+    /// dedicated prefill call. Monolithic admission counts its chunks too,
+    /// so the A/B compares like with like.
+    pub const PREFILL_CHUNKS: &str = "prefill_chunks";
+    /// Gauge: admitted rows still mid-prefill (chunked admission only).
+    pub const PREFILL_INFLIGHT_ROWS: &str = "prefill_inflight_rows";
+    /// Counter: steps where a *dedicated* prefill call executed while at
+    /// least one decode row was active — the stall the chunked-prefill
+    /// riders exist to eliminate. Strictly lower chunked-vs-monolithic on
+    /// the same workload is the A/B acceptance gate.
+    pub const DECODE_STALL_STEPS: &str = "decode_stall_steps";
+    /// Histogram: modeled seconds of dedicated-prefill stall each riding
+    /// chunk avoided — the chunk's own priced call time, saved because it
+    /// filled an already-paid spare slot instead of preempting decode.
+    pub const PREFILL_STALL_SAVED_S: &str = "prefill_stall_saved_s";
+
+    /// Histogram: TTFT of requests whose admission hit the prefix cache.
+    pub const TTFT_WARM_S: &str = "ttft_warm_s";
+    /// Histogram: TTFT of requests admitted cold (no prefix hit).
+    pub const TTFT_COLD_S: &str = "ttft_cold_s";
+    /// Histogram: per-token decode latency of warm-admitted requests.
+    pub const TPOT_WARM_S: &str = "tpot_warm_s";
+    /// Histogram: per-token decode latency of cold-admitted requests.
+    pub const TPOT_COLD_S: &str = "tpot_cold_s";
 
     /// Histogram name: rows actually carried per call executed at `bucket`
     /// (per-bucket occupancy).

@@ -179,6 +179,22 @@ impl PerfModel {
             .max(0.0)
     }
 
+    /// Modeled seconds of dedicated-prefill stall one riding chunk avoids:
+    /// the single-row call that would otherwise have run `take` suffix
+    /// tokens as its own step-serializing prefill pass. When the chunk
+    /// instead fills a spare slot of an already-planned decode/verify
+    /// sub-batch, that sub-batch's bucket and chunk shape are unchanged
+    /// (the rider obeys `take <= sb.chunk` and occupies a row the bucket
+    /// already paid KV traffic for), so the whole dedicated call is the
+    /// saving — booked to the `prefill_stall_saved_s` metric.
+    pub fn prefill_stall_saved_s(&self, variant: &str, n_layers: usize,
+                                 take: usize) -> f64 {
+        if take == 0 {
+            return 0.0;
+        }
+        self.price_parts(variant, n_layers, 1, take).total()
+    }
+
     /// Bytes of one resident KV page *pair* (k + v, f32) holding
     /// `page_tokens` sequence positions at the given depth — the paged
     /// prefix cache's allocation unit: a cached prefix of `len` tokens
@@ -431,6 +447,19 @@ mod tests {
         assert!((saved - (t_cold - t_warm)).abs() < 1e-15);
         assert!(saved > 0.0);
         assert_eq!(pm.prefill_saved_s("fp32", 6, 50, 50), 0.0, "no hit, no saving");
+    }
+
+    #[test]
+    fn prefill_stall_saving_is_the_dedicated_call_price() {
+        let pm = pm();
+        // A riding chunk saves exactly the b1 call it would have run as a
+        // dedicated pass — and a w8a8 chunk saves less than an fp32 one
+        // (half the weight stream was going to stall the step).
+        let saved = pm.prefill_stall_saved_s("fp32", 6, 16);
+        assert!((saved - pm.price_parts("fp32", 6, 1, 16).total()).abs() < 1e-18);
+        assert!(saved > 0.0);
+        assert!(pm.prefill_stall_saved_s("w8a8", 6, 16) < saved);
+        assert_eq!(pm.prefill_stall_saved_s("fp32", 6, 0), 0.0);
     }
 
     #[test]

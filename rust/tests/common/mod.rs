@@ -82,6 +82,7 @@ pub struct TestRig {
     pub governor: GovernorConfig,
     pub prefix: PrefixCacheConfig,
     pub paged_rows: bool,
+    pub chunked_prefill: bool,
 }
 
 impl Default for TestRig {
@@ -107,6 +108,9 @@ impl TestRig {
             governor: GovernorConfig::default(),
             prefix: PrefixCacheConfig::default(),
             paged_rows: true,
+            // Deterministic scenarios default to the monolithic admission
+            // path; the chunked-vs-monolithic differential scenarios opt in.
+            chunked_prefill: false,
         }
     }
 
@@ -174,6 +178,15 @@ impl TestRig {
         self
     }
 
+    /// Admission prefill mode: `true` parks admitted rows as resumable
+    /// `Prefilling` state fed in chunks riding spare decode/verify slots,
+    /// `false` (rig default) keeps the monolithic suffix prefill — the A/B
+    /// reference the chunked differential scenarios compare against.
+    pub fn chunked_prefill(mut self, chunked_prefill: bool) -> Self {
+        self.chunked_prefill = chunked_prefill;
+        self
+    }
+
     pub fn config(&self) -> EngineConfig {
         EngineConfig {
             verifier: self.verifier.clone(),
@@ -186,6 +199,7 @@ impl TestRig {
             governor: self.governor.clone(),
             prefix: self.prefix.clone(),
             paged_rows: self.paged_rows,
+            chunked_prefill: self.chunked_prefill,
         }
     }
 

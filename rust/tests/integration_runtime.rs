@@ -47,6 +47,10 @@ fn integration_scenarios_inner() {
     paged_store_pins_pages_shares_them_and_serves_mid_stream(&mr);
     eprintln!("== paged_rows_match_copy_rows_and_cut_residency");
     paged_rows_match_copy_rows_and_cut_residency(&mr);
+    eprintln!("== chunked_prefill_matches_monolithic_and_avoids_stalls");
+    chunked_prefill_matches_monolithic_and_avoids_stalls(&mr);
+    eprintln!("== warm_admission_gates_on_suffix_not_prompt");
+    warm_admission_gates_on_suffix_not_prompt(&mr);
     eprintln!("== prompt_truncation_is_flagged_not_silent");
     prompt_truncation_is_flagged_not_silent(&mr);
     eprintln!("== pruned_drafter_runs_and_verifier_stays_lossless");
@@ -656,31 +660,162 @@ fn paged_rows_match_copy_rows_and_cut_residency(mr: &Rc<ModelRuntime>) {
     );
 }
 
+/// The chunked-admission acceptance gate (the continuous-batching
+/// tentpole): splitting admission prefill into planner-packed chunks that
+/// ride spare decode slots must be a pure scheduling change.
+///
+/// 1. **Bit-identity** — same staggered workload, same seed: the chunked
+///    engine commits exactly the monolithic engine's greedy streams.
+/// 2. **Fewer stalls** — the monolithic engine's admission prefills run
+///    while other rows sit decoding (`decode_stall_steps > 0`); the
+///    chunked engine rides those chunks in the decode steps it executes
+///    anyway and must count strictly fewer.
+/// 3. **Priced savings** — every ridden chunk banks the avoided
+///    dedicated-call price into the `prefill_stall_saved_s` histogram.
+fn chunked_prefill_matches_monolithic_and_avoids_stalls(mr: &Rc<ModelRuntime>) {
+    let mcfg = mr.cfg().clone();
+    let mut many = golden_prompts(mr);
+    // One prompt spanning several prefill windows, so a chunked admission
+    // accumulates its row across multiple rides before the first token.
+    let long_len = (mcfg.prefill_len + 8).min(mcfg.max_seq.saturating_sub(24));
+    let long: Vec<i32> = many[0].iter().cycle().take(long_len).copied().collect();
+    many.push(long);
+    let second = many.clone();
+    many.extend(second);
+    // Distinct budgets stagger the finishes, so later admissions always
+    // find other rows mid-decode.
+    let stagger = |i: usize| 6 + 3 * (i % 5);
+    let rig = TestRig::new().gamma(3).batch(4).seed(37);
+    let (mono_tokens, mono_engine) = rig.clone().run_with(mr, &many, &stagger);
+    let (chunk_tokens, chunk_engine) =
+        rig.chunked_prefill(true).run_with(mr, &many, &stagger);
+    assert_eq!(
+        mono_tokens, chunk_tokens,
+        "chunked admission changed the committed stream"
+    );
+
+    let (mono_stalls, chunk_stalls) = (
+        mono_engine.metrics.counter(names::DECODE_STALL_STEPS),
+        chunk_engine.metrics.counter(names::DECODE_STALL_STEPS),
+    );
+    assert!(
+        mono_stalls > 0,
+        "staggered admissions never stalled the monolithic engine (workload too light)"
+    );
+    assert!(
+        chunk_stalls < mono_stalls,
+        "chunked prefill did not cut decode stalls ({chunk_stalls} vs {mono_stalls})"
+    );
+    assert!(
+        chunk_engine.metrics.counter(names::PREFILL_CHUNKS) as usize >= many.len(),
+        "every admission must flow through the chunk counter"
+    );
+    assert_eq!(
+        mono_engine.metrics.gauge(names::PREFILL_INFLIGHT_ROWS),
+        0,
+        "monolithic admission must never leave a row mid-prefill"
+    );
+    let saved = chunk_engine
+        .metrics
+        .hist(names::PREFILL_STALL_SAVED_S)
+        .map(|h| h.sum())
+        .unwrap_or(0.0);
+    assert!(saved > 0.0, "ridden chunks must bank modeled stall savings");
+    eprintln!(
+        "   stalls: monolithic {mono_stalls} -> chunked {chunk_stalls}, \
+         {} chunks, {saved:.6}s modeled stall saved",
+        chunk_engine.metrics.counter(names::PREFILL_CHUNKS)
+    );
+}
+
+/// Admission-capacity regression: a warm request is gated on its
+/// post-splice *suffix*, not the raw prompt length — a shared template
+/// longer than one prefill window admits untruncated, the duplicate's
+/// splice covers all but the final token, and the warm admission executes
+/// strictly fewer prefill windows than the cold replay.
+fn warm_admission_gates_on_suffix_not_prompt(mr: &Rc<ModelRuntime>) {
+    let mcfg = mr.cfg().clone();
+    let base = golden_prompts(mr).remove(0);
+    let len = (mcfg.prefill_len + 8).min(mcfg.max_seq.saturating_sub(16));
+    assert!(
+        len > mcfg.prefill_len,
+        "artifact max_seq leaves no room for a multi-window template"
+    );
+    let long: Vec<i32> = base.iter().cycle().take(len).copied().collect();
+    let pair = [long.clone(), long.clone()];
+    let pcfg = PrefixCacheConfig { min_prefix: 2, page_tokens: 4, ..Default::default() };
+    let rig = TestRig::new().gamma(3).batch(1).seed(41);
+    let (warm_tokens, warm_engine) = rig.clone().prefix(pcfg).run(mr, &pair, 8);
+    let (cold_tokens, cold_engine) =
+        rig.prefix(PrefixCacheConfig::off()).run(mr, &pair, 8);
+    assert_eq!(warm_tokens, cold_tokens, "suffix-gated admission changed the stream");
+    assert_eq!(
+        warm_engine.metrics.counter(names::PROMPT_TRUNCATED),
+        0,
+        "a multi-window template must admit untruncated"
+    );
+    let ps = warm_engine.prefix_cache().stats();
+    assert!(ps.hits >= 1, "the duplicate template produced no hit");
+    assert_eq!(
+        ps.hit_tokens as usize,
+        len - 1,
+        "the splice must cover the whole template (capped at len-1)"
+    );
+    let (warm_prefills, cold_prefills) = (
+        warm_engine.call_log.calls(FnKind::Prefill),
+        cold_engine.call_log.calls(FnKind::Prefill),
+    );
+    assert!(
+        warm_prefills < cold_prefills,
+        "warm admission must run fewer prefill windows ({warm_prefills} vs {cold_prefills})"
+    );
+    eprintln!(
+        "   {len}-token template: {cold_prefills} cold prefill windows -> \
+         {warm_prefills} warm, {} hit tokens",
+        ps.hit_tokens
+    );
+}
+
 /// An over-long prompt must be visibly truncated: flagged on the
 /// completion's stats, counted in the metrics registry, and still served.
+/// The cap is the context window (`max_seq - 2`), not the prefill window —
+/// a prompt spanning several prefill windows admits whole, fed chunk by
+/// chunk by the admission window loop.
 fn prompt_truncation_is_flagged_not_silent(mr: &Rc<ModelRuntime>) {
     let prompt = golden_prompts(mr).remove(0);
-    let p = mr.cfg().prefill_len;
+    let mcfg = mr.cfg().clone();
+    let cap = mcfg.max_seq - 2;
 
     let mut engine = TestRig::new().batch(1).gamma(3).engine(mr);
-    // Tile the golden prompt past the prefill window.
-    let long: Vec<i32> = prompt.iter().cycle().take(p + 7).copied().collect();
+    // Tile the golden prompt past the whole context window.
+    let long: Vec<i32> = prompt.iter().cycle().take(mcfg.max_seq + 5).copied().collect();
     engine.submit(
         long,
         GenParams { max_new: 4, stop_at_eos: false, ..GenParams::default() },
         "t",
     );
+    // Longer than one prefill window but inside the context cap: served
+    // whole through the multi-window admission loop, never cut.
+    let multi: Vec<i32> = prompt
+        .iter()
+        .cycle()
+        .take((mcfg.prefill_len + 7).min(cap))
+        .copied()
+        .collect();
+    let multi_len = multi.len();
     engine.submit(
-        prompt,
+        multi,
         GenParams { max_new: 4, stop_at_eos: false, ..GenParams::default() },
         "t",
     );
     let mut done = engine.run_to_completion().unwrap();
     done.sort_by_key(|c| c.id);
     assert_eq!(done[0].stats.prompt_truncated, 1, "truncation not flagged");
-    assert_eq!(done[0].prompt_len, p, "prompt not cut to the prefill window");
+    assert_eq!(done[0].prompt_len, cap, "prompt not cut to the context cap");
     assert!(!done[0].tokens.is_empty(), "truncated request still serves");
-    assert_eq!(done[1].stats.prompt_truncated, 0, "short prompt falsely flagged");
+    assert_eq!(done[1].stats.prompt_truncated, 0, "multi-window prompt falsely flagged");
+    assert_eq!(done[1].prompt_len, multi_len, "multi-window prompt must admit whole");
+    assert!(!done[1].tokens.is_empty(), "multi-window prompt still serves");
     assert_eq!(engine.metrics.counter(names::PROMPT_TRUNCATED), 1);
 }
 

@@ -4,7 +4,8 @@
 
 mod common;
 
-use common::sim::{check_equivalent, run_equivalence, sim_perf, Sim, SIM_CHUNK, SIM_VOCAB};
+use common::sim::{check_equivalent, mock_chunk, run_equivalence, sim_perf, Sim, SIM_CHUNK,
+                  SIM_H, SIM_HD, SIM_L, SIM_S, SIM_VOCAB};
 use quasar::coordinator::{
     BatchGroup, FnKind, GenParams, Governor, GovernorConfig, Lease, PagedGroup, PrefixCache,
     PrefixCacheConfig, Priority, Request, Route, SchedPolicy, Scheduler, Transition,
@@ -1105,6 +1106,245 @@ fn paged_rows_match_slab_rows_under_random_interleavings() {
                 slab.k.data.iter().all(|&x| x == 0.0)
                     && slab.v.data.iter().all(|&x| x == 0.0),
                 "slab leave left residue in the cache"
+            );
+            ok()
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Chunked admission prefill (engine.rs `chunked_prefill`): random
+// admit / advance interleavings through the mock chunk, differential
+// against the monolithic one-shot prefill, on both RowStore backends.
+// ---------------------------------------------------------------------
+
+/// Tentpole property: feeding a prompt through fixed-size prefill chunks —
+/// gather the partial row, run the chunk window at `pos = cached`, scatter
+/// back only the `take` real positions — must reproduce the monolithic
+/// one-shot prefill exactly, for any admit/advance interleaving across
+/// concurrent rows and any chunk size:
+///
+/// 1. **first token** — the argmax sampled from the chunk that covers the
+///    final prompt position equals the monolithic call's;
+/// 2. **KV bytes** — the completed row's committed prefix is byte-equal to
+///    the monolithic row's, on the copy-based slab *and* on page-table rows
+///    that accumulated pool pages chunk-by-chunk;
+/// 3. **window padding never commits** — a short final chunk's padding
+///    positions (written by the call, as on the real device) stay out of
+///    the row because the scatter is bounded at `cached + take`.
+#[test]
+fn chunked_prefill_matches_monolithic_under_random_interleavings() {
+    prop_check(
+        "chunked prefill == monolithic prefill on both row backends",
+        120,
+        |rng| {
+            let chunk_sel = rng.below(5);
+            let ops: Vec<u64> = (0..rng.usize_below(40)).map(|_| rng.next_u64()).collect();
+            (chunk_sel, ops)
+        },
+        |case| {
+            let (chunk_sel, ops) = case;
+            const BATCH: usize = 3;
+            const PAGE: usize = 4;
+            let chunk = 2 + *chunk_sel as usize; // 2..=6 tokens per chunk
+            let dims = [SIM_L, 1, SIM_H, SIM_S, SIM_HD];
+            let dirty = || {
+                let mut t = Tensor::<f32>::zeros(&dims);
+                t.data.iter_mut().for_each(|x| *x = -7.0);
+                t
+            };
+            let argmax = |l: &[f32]| -> i32 {
+                let mut best = 0usize;
+                for (i, &x) in l.iter().enumerate() {
+                    if x > l[best] {
+                        best = i;
+                    }
+                }
+                best as i32
+            };
+            let pool_cfg = || PrefixCacheConfig {
+                enabled: true,
+                budget_bytes: 1 << 22,
+                min_prefix: 1,
+                page_tokens: PAGE,
+                mid_stream: false,
+            };
+            // Four independent rows per request: {slab, paged} x {chunked,
+            // monolithic}. The monolithic pair is the oracle.
+            let mut slab_c = BatchGroup::new(SIM_L, BATCH, SIM_H, SIM_S, SIM_HD);
+            let mut slab_m = BatchGroup::new(SIM_L, BATCH, SIM_H, SIM_S, SIM_HD);
+            let mut pool_c = PrefixCache::new(pool_cfg());
+            let mut pool_m = PrefixCache::new(pool_cfg());
+            let mut paged_c = PagedGroup::new(BATCH, PAGE, SIM_S);
+            let mut paged_m = PagedGroup::new(BATCH, PAGE, SIM_S);
+            struct ChunkReq {
+                prompt: Vec<i32>,
+                cached: usize,
+                row_sc: usize,
+                row_pc: usize,
+                row_sm: usize,
+                row_pm: usize,
+                first_mono: i32,
+            }
+            let mut live: Vec<ChunkReq> = Vec::new();
+            let mut next_slot = 0usize;
+            let mut qi = 0usize;
+            loop {
+                // Past the generated ops, drain: advance until every
+                // pending prefill completes and has been compared.
+                let op = if qi < ops.len() {
+                    let o = ops[qi];
+                    qi += 1;
+                    o
+                } else if !live.is_empty() {
+                    1
+                } else {
+                    break;
+                };
+                match op % 2 {
+                    0 if slab_c.free_rows() > 0 => {
+                        // Admit: monolithic oracle prefills the whole prompt
+                        // in one window; the chunked rows start empty.
+                        let len = 2 + ((op >> 2) % 23) as usize;
+                        let prompt: Vec<i32> = (0..len)
+                            .map(|i| (((op >> 7) as usize + 3 * i) % SIM_VOCAB) as i32)
+                            .collect();
+                        let (mut mk, mut mv) = (dirty(), dirty());
+                        let logits =
+                            mock_chunk(&mut mk, &mut mv, &prompt, &[0], 1, len, false);
+                        let first_mono = argmax(logits.row(&[0, len - 1]));
+                        let row_sm = slab_m
+                            .join_prefix(next_slot, &mk, &mv, len)
+                            .map_err(|e| e.to_string())?;
+                        let row_pm = paged_m
+                            .join_pages(next_slot, Vec::new(), 0)
+                            .map_err(|e| e.to_string())?;
+                        paged_m
+                            .scatter_advance(&mut pool_m, &[(row_pm, 0, len)], &mk, &mv)
+                            .map_err(|e| e.to_string())?;
+                        paged_m.set_len(row_pm, len).map_err(|e| e.to_string())?;
+                        let z = Tensor::<f32>::zeros(&dims);
+                        let row_sc = slab_c
+                            .join_prefix(next_slot, &z, &z, 0)
+                            .map_err(|e| e.to_string())?;
+                        let row_pc = paged_c
+                            .join_pages(next_slot, Vec::new(), 0)
+                            .map_err(|e| e.to_string())?;
+                        live.push(ChunkReq {
+                            prompt, cached: 0, row_sc, row_pc, row_sm, row_pm, first_mono,
+                        });
+                        next_slot += 1;
+                    }
+                    _ if !live.is_empty() => {
+                        // Advance one pending row by one chunk, mirroring
+                        // the engine's rider: window at `pos = cached`,
+                        // commit only the `take` real positions.
+                        let i = ((op >> 2) as usize) % live.len();
+                        let lv = &mut live[i];
+                        let len = lv.prompt.len();
+                        let cached = lv.cached;
+                        let take = (len - cached).min(chunk);
+                        let mut toks = vec![0i32; chunk];
+                        toks[..take].copy_from_slice(&lv.prompt[cached..cached + take]);
+                        let (mut sk, mut sv) = (dirty(), dirty());
+                        slab_c
+                            .gather_rows(&[(lv.row_sc, cached)], &mut sk, &mut sv)
+                            .map_err(|e| e.to_string())?;
+                        let (mut pk, mut pv) = (dirty(), dirty());
+                        paged_c
+                            .gather_rows(&pool_c, &[(lv.row_pc, cached)], &mut pk, &mut pv)
+                            .map_err(|e| e.to_string())?;
+                        let pos = [cached as i32];
+                        let logits_s =
+                            mock_chunk(&mut sk, &mut sv, &toks, &pos, 1, chunk, false);
+                        let logits_p =
+                            mock_chunk(&mut pk, &mut pv, &toks, &pos, 1, chunk, false);
+                        slab_c
+                            .scatter_rows(&[(lv.row_sc, cached + take)], &sk, &sv)
+                            .map_err(|e| e.to_string())?;
+                        paged_c
+                            .scatter_advance(
+                                &mut pool_c,
+                                &[(lv.row_pc, cached, cached + take)],
+                                &pk,
+                                &pv,
+                            )
+                            .map_err(|e| e.to_string())?;
+                        paged_c
+                            .set_len(lv.row_pc, cached + take)
+                            .map_err(|e| e.to_string())?;
+                        lv.cached += take;
+                        if lv.cached < len {
+                            continue;
+                        }
+                        // Prefill complete: the chunk covering the final
+                        // prompt position samples the first token.
+                        let first_s = argmax(logits_s.row(&[0, (len - 1) - cached]));
+                        let first_p = argmax(logits_p.row(&[0, (len - 1) - cached]));
+                        prop_assert!(
+                            first_s == lv.first_mono && first_p == lv.first_mono,
+                            "first token diverged: mono {} vs slab {} / paged {}",
+                            lv.first_mono, first_s, first_p
+                        );
+                        let lv = live.swap_remove(i);
+                        let (mut gck, mut gcv) = (dirty(), dirty()); // chunked slab
+                        let (mut gpk, mut gpv) = (dirty(), dirty()); // chunked paged
+                        let (mut omk, mut omv) = (dirty(), dirty()); // mono slab
+                        let (mut opk, mut opv) = (dirty(), dirty()); // mono paged
+                        slab_c
+                            .gather_rows(&[(lv.row_sc, len)], &mut gck, &mut gcv)
+                            .map_err(|e| e.to_string())?;
+                        slab_m
+                            .gather_rows(&[(lv.row_sm, len)], &mut omk, &mut omv)
+                            .map_err(|e| e.to_string())?;
+                        paged_c
+                            .gather_rows(&pool_c, &[(lv.row_pc, len)], &mut gpk, &mut gpv)
+                            .map_err(|e| e.to_string())?;
+                        paged_m
+                            .gather_rows(&pool_m, &[(lv.row_pm, len)], &mut opk, &mut opv)
+                            .map_err(|e| e.to_string())?;
+                        for s in 0..len {
+                            for l in 0..SIM_L {
+                                for hh in 0..SIM_H {
+                                    for dd in 0..SIM_HD {
+                                        let idx = [l, 0, hh, s, dd];
+                                        let want_k = omk.at(&idx);
+                                        let want_v = omv.at(&idx);
+                                        prop_assert!(
+                                            want_k == opk.at(&idx)
+                                                && want_v == opv.at(&idx),
+                                            "mono backends disagree at pos {s}"
+                                        );
+                                        prop_assert!(
+                                            gck.at(&idx) == want_k
+                                                && gcv.at(&idx) == want_v,
+                                            "chunked slab KV diverged at pos {s}"
+                                        );
+                                        prop_assert!(
+                                            gpk.at(&idx) == want_k
+                                                && gpv.at(&idx) == want_v,
+                                            "chunked paged KV diverged at pos {s}"
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        slab_c.leave(lv.row_sc).map_err(|e| e.to_string())?;
+                        slab_m.leave(lv.row_sm).map_err(|e| e.to_string())?;
+                        paged_c
+                            .leave(&mut pool_c, lv.row_pc)
+                            .map_err(|e| e.to_string())?;
+                        paged_m
+                            .leave(&mut pool_m, lv.row_pm)
+                            .map_err(|e| e.to_string())?;
+                    }
+                    _ => {}
+                }
+            }
+            // Drained: chunk-accumulated pages all returned to the pool.
+            prop_assert!(
+                pool_c.stats().row_page_refs == 0 && paged_c.total_pages() == 0,
+                "chunk-accumulated row pages leaked"
             );
             ok()
         },
