@@ -6,6 +6,12 @@
 //! batch occupancy and mean scheduling delay, so the effect of concurrent
 //! submission on batched verification is visible directly in the output.
 //!
+//! `--replicas N` fronts N engine replicas with the locality-hashing
+//! dispatcher (work-stealing spillover, `--dispatch random` as the
+//! locality-blind control); `--replicas 0` keeps the bare single-engine
+//! handle as the dispatcher-free A/B reference, and `--replicas 1` must
+//! match it bit for bit (CI's checksum gate).
+//!
 //! Run: `cargo run --release --example serve_benchmark -- \
 //!         [--n 24] [--clients 8] [--batch 4]`
 
@@ -16,8 +22,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use quasar::bench::{BenchCtx, BenchReport};
-use quasar::coordinator::{EngineConfig, EngineHandle, GovernorConfig};
-use quasar::server::{serve, Client};
+use quasar::coordinator::{ClusterConfig, ClusterHandle, DispatchPolicy, EngineConfig,
+                          EngineHandle, GovernorConfig};
+use quasar::server::{serve, Client, ServeHandle};
 use quasar::util::cli::Cli;
 use quasar::util::hist::Histogram;
 use quasar::util::rng::Pcg;
@@ -86,6 +93,11 @@ fn run() -> anyhow::Result<()> {
                                 page-table backend is compared against)")
         .flag("no-chunked-prefill", "monolithic admission prefill (the A/B reference the \
                                      chunked rider path is compared against)")
+        .opt("replicas", Some("1"), "engine replicas behind the locality dispatcher \
+                                     (0 = bare EngineHandle, the dispatcher-free A/B control)")
+        .opt("dispatch", Some("locality"), "replica dispatch policy: locality | random")
+        .opt("steal-threshold", Some("8"), "home-replica queue depth at which requests \
+                                            spill to the shallowest replica")
         .opt("bench-json", None, "directory to write a machine-readable \
                                   BENCH_<method>.json artifact into")
         .parse_env();
@@ -104,6 +116,9 @@ fn run() -> anyhow::Result<()> {
     let warmup = args.has("warmup");
     let no_paged_rows = args.has("no-paged-rows");
     let no_chunked_prefill = args.has("no-chunked-prefill");
+    let replicas = args.usize("replicas");
+    let dispatch = args.str("dispatch");
+    let steal_threshold = args.usize("steal-threshold").max(1);
     let bench_json = args.get("bench-json").map(PathBuf::from);
 
     // xla_extension tolerates exactly one PJRT client per process, so the
@@ -117,7 +132,10 @@ fn run() -> anyhow::Result<()> {
                    "--max-new", &max_new.to_string(),
                    "--temp", &temp.to_string(),
                    "--turns", &turns.to_string(),
-                   "--page-tokens", &page_tokens.to_string()]
+                   "--page-tokens", &page_tokens.to_string(),
+                   "--replicas", &replicas.to_string(),
+                   "--dispatch", &dispatch,
+                   "--steal-threshold", &steal_threshold.to_string()]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();
@@ -190,9 +208,26 @@ fn run() -> anyhow::Result<()> {
     cfg.prefix.page_tokens = page_tokens;
     cfg.paged_rows = !no_paged_rows;
     cfg.chunked_prefill = !no_chunked_prefill;
-    let handle = EngineHandle::spawn(
-        artifacts.clone().into(), "qwen3-like".into(), cfg, 4 * (n * turns).max(1),
-    )?;
+    let policy = DispatchPolicy::parse(&dispatch)
+        .ok_or_else(|| anyhow::anyhow!("unknown --dispatch {dispatch} (locality|random)"))?;
+    let max_queue = 4 * (n * turns).max(1);
+    // --replicas 0 drives a bare EngineHandle with no dispatch plane at all
+    // — the differential control the 1-replica cluster must match bit for
+    // bit; --replicas N>=1 goes through the cluster dispatcher.
+    let handle: ServeHandle = if replicas == 0 {
+        EngineHandle::spawn(artifacts.clone().into(), "qwen3-like".into(), cfg, max_queue)?
+            .into()
+    } else {
+        let ccfg = ClusterConfig {
+            replicas,
+            dispatch: policy,
+            steal_threshold,
+            ..ClusterConfig::default()
+        };
+        ClusterHandle::spawn(artifacts.clone().into(), "qwen3-like".into(), cfg, ccfg,
+                             max_queue)?
+            .into()
+    };
     // Boot warm-up: cache the per-family templates before any client
     // connects, so the first request of each family already admits warm.
     if warmup {
@@ -436,12 +471,35 @@ fn run() -> anyhow::Result<()> {
     println!("ttft_p50_s={:.6}", total.ttft.p50());
     println!("ttft_p99_s={:.6}", total.ttft.p99());
     println!("tpot_p99_s={:.6}", total.tpot.p99());
+    // Multi-replica A/B gates: equal checksums across --replicas 0 (bare
+    // engine), 1 and N prove the dispatch plane never changes outputs; the
+    // locality leg's warm hit rate must beat the --dispatch random control
+    // while steals stay bounded by the threshold rule.
+    println!("replicas={replicas}");
+    let dispatch_stats = if replicas >= 1 { Some(stats.get("dispatch")?) } else { None };
+    match &dispatch_stats {
+        Some(d) => {
+            println!("dispatch={}", d.get("policy")?.as_str()?);
+            println!("steal_count={}", d.get("steals")?.as_i64()?);
+            println!("locality_hit_rate={:.4}", d.get("locality_hit_rate")?.as_f64()?);
+        }
+        None => {
+            println!("dispatch=none");
+            println!("steal_count=0");
+            println!("locality_hit_rate=0.0000");
+        }
+    }
 
     if let Some(dir) = &bench_json {
         let scenario = format!(
-            "{method}{}{}",
+            "{method}{}{}{}",
             if no_paged_rows { "_copyrows" } else { "" },
-            if no_chunked_prefill { "_monoprefill" } else { "" }
+            if no_chunked_prefill { "_monoprefill" } else { "" },
+            match replicas {
+                1 => String::new(),
+                0 => "_bare".into(),
+                r => format!("_r{r}"),
+            }
         );
         let mut r = BenchReport::new(&scenario);
         r.text("method", &method)
@@ -512,6 +570,30 @@ fn run() -> anyhow::Result<()> {
             .num("tpot_warm_p99_s", pf.get("tpot_warm_p99_s")?.as_f64()?)
             .num("tpot_cold_p99_s", pf.get("tpot_cold_p99_s")?.as_f64()?)
             .text("output_checksum", &format!("{:016x}", total.checksum));
+        r.num("replica_count", replicas as f64);
+        if let Some(d) = &dispatch_stats {
+            // Per-replica breakdown straight from the fleet stats: shows
+            // whether dispatch kept the replicas busy (occupancy), balanced
+            // (dispatched/queue depth) and warm (per-replica hit rate).
+            let mut reps = Vec::new();
+            for (ri, rs) in stats.get("replicas")?.as_arr()?.iter().enumerate() {
+                reps.push(Json::obj(vec![
+                    ("replica", Json::num(ri as f64)),
+                    ("completed", rs.get("completed")?.clone()),
+                    ("steps", rs.get("steps")?.clone()),
+                    ("batch_occupancy", rs.get("batch_occupancy")?.clone()),
+                    ("queue_depth", rs.get("queue_depth")?.clone()),
+                    ("dispatched", d.get("dispatched")?.as_arr()?[ri].clone()),
+                    (
+                        "throughput_req_s",
+                        Json::num(rs.get("completed")?.as_f64()? / wall.max(1e-12)),
+                    ),
+                    ("prefix_hit_rate", rs.get("prefix")?.get("hit_rate")?.clone()),
+                ]));
+            }
+            r.json("replicas", Json::arr(reps));
+            r.json("dispatch", (*d).clone());
+        }
         let path = r.write_to(dir)?;
         println!("bench_json={}", path.display());
     }

@@ -55,6 +55,9 @@ fn run() -> anyhow::Result<()> {
             governor: Default::default(),
             prefix: Default::default(),
             paged_rows: true,
+            chunked_prefill: true,
+            replica: 0,
+            replicas: 1,
         };
         let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
         let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;

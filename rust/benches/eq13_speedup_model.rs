@@ -38,6 +38,9 @@ fn run() -> anyhow::Result<()> {
                 governor: Default::default(),
                 prefix: Default::default(),
                 paged_rows: true,
+                chunked_prefill: true,
+                replica: 0,
+                replicas: 1,
             };
             let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
             let alpha = res.stats.acceptance_rate();

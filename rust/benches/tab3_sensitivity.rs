@@ -27,6 +27,9 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         governor: Default::default(),
         prefix: Default::default(),
         paged_rows: true,
+        chunked_prefill: true,
+        replica: 0,
+        replicas: 1,
     }
 }
 

@@ -204,6 +204,13 @@ impl BenchReport {
         self
     }
 
+    /// Attach a pre-built JSON value (arrays, nested objects — e.g. the
+    /// per-replica breakdown block).
+    pub fn json(&mut self, name: &str, v: crate::util::json::Json) -> &mut Self {
+        self.fields.push((name.to_string(), v));
+        self
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         crate::util::json::Json::Obj(self.fields.iter().cloned().collect())
     }

@@ -1,0 +1,856 @@
+//! Replica-fleet dispatch plane: the top tier of the two-tier coordinator.
+//!
+//! One engine replica — one `EngineHandle`, with its own engine thread,
+//! scheduler, governor, step loop and paged KV pool — is the unit the rest
+//! of the stack already knows how to run. This module owns N of them behind
+//! a [`ClusterHandle`] that is API-compatible with a bare handle
+//! (`submit`/`cancel`/`warm_prefix`/`stats`/`shutdown`), so the server,
+//! the leader binary and the benches switch between one engine and a fleet
+//! with a `--replicas N` knob. N = 1 degenerates to exactly the bare-engine
+//! behavior (same request ids, same admission order, same output bytes) and
+//! stays the A/B reference.
+//!
+//! ## Locality-aware dispatch
+//!
+//! The shared-prefix paged KV cache (PRs 4–6) only pays off if a
+//! conversation's later turns land on the pool that already holds its
+//! pages. Dispatch therefore keys each request by its prefix *family*: a
+//! [`LocalityIndex`] probe hashes the prompt's page-aligned prefix
+//! boundaries (the same key shape the radix trie matches on, without any
+//! pool lock) and resolves every turn of a conversation — and every
+//! request stamped from the same workload template — to one stable family
+//! key. The family key consistent-hashes onto a vnode ring over the
+//! replicas, so adding or removing a replica remaps only ~1/N of the key
+//! space (asserted by a property test) and multi-turn resubmits land on
+//! the replica whose pool holds their pages.
+//!
+//! ## Work-stealing spillover
+//!
+//! Locality loses to a hot template: one replica drowns while three idle.
+//! When the home replica's in-flight depth is at least
+//! [`ClusterConfig::steal_threshold`] and some other replica is strictly
+//! shallower, the request is *stolen* to the shallowest replica
+//! ([`dispatch_decision`] — a pure function, property-tested). A stolen
+//! request admits cold there and is priced as a cold admission (full
+//! suffix prefill, cold TTFT bucket) — the steal counter plus the engines'
+//! own warm/cold split keep that cost visible rather than averaged away.
+//! The `--dispatch random` scatter policy is the control: same fleet, no
+//! locality, for the CI A/B that asserts locality's warm hit rate beats it.
+//!
+//! ## What stays where
+//!
+//! The dispatcher holds no request state: completions flow on each
+//! replica's private ticket channels exactly as before, cancels route by
+//! the id-stride rule (`EngineConfig::replicas` — replica r mints ids
+//! `r + 1, r + 1 + N, …`, so `(id - 1) % N` recovers the owner with no
+//! shared allocator), and stats aggregate by *reading* each replica's
+//! lock-free block. The one piece of shared mutable state is the locality
+//! index behind a mutex taken for a few hash probes per submit — never
+//! across generation, never by engine threads.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::engine::EngineConfig;
+use super::prefixcache::LocalityIndex;
+use super::request::GenParams;
+use super::router::{
+    BucketStat, EngineHandle, StatsSnapshot, Ticket, VariantCalls,
+};
+
+/// How the dispatch plane picks a replica for a new request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// Consistent-hash by prefix family (the default): multi-turn
+    /// resubmits and template siblings land on the replica whose paged
+    /// pool already holds their pages, with work-stealing spillover.
+    #[default]
+    Locality,
+    /// Deterministic round-robin scatter, ignoring prefixes. The A/B
+    /// control that shows what locality buys.
+    Random,
+}
+
+impl DispatchPolicy {
+    pub fn parse(s: &str) -> Option<DispatchPolicy> {
+        match s {
+            "locality" => Some(DispatchPolicy::Locality),
+            "random" => Some(DispatchPolicy::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::Locality => "locality",
+            DispatchPolicy::Random => "random",
+        }
+    }
+}
+
+/// Fleet topology and dispatch tuning.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Engine replicas to spawn (>= 1; 1 = the bare-engine A/B reference).
+    pub replicas: usize,
+    pub dispatch: DispatchPolicy,
+    /// Home-replica in-flight depth at which a request may spill to the
+    /// shallowest replica. Below it, locality always wins.
+    pub steal_threshold: usize,
+    /// Virtual nodes per replica on the consistent-hash ring. More vnodes
+    /// smooth the key-space split; the default is plenty for single-digit
+    /// fleets.
+    pub vnodes: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            dispatch: DispatchPolicy::Locality,
+            steal_threshold: 8,
+            vnodes: 64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure dispatch machinery (property-tested without engines)
+// ---------------------------------------------------------------------------
+
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Build the consistent-hash ring: `vnodes` points per replica, sorted by
+/// hash. Vnode positions depend only on `(replica index, vnode index)`, so
+/// the ring for N replicas shares all its points with the ring for N+1
+/// except the new replica's own — which is exactly the ~1/N key-movement
+/// property.
+pub fn build_ring(replicas: usize, vnodes: usize) -> Vec<(u64, usize)> {
+    let mut ring = Vec::with_capacity(replicas * vnodes);
+    for r in 0..replicas {
+        for v in 0..vnodes {
+            let mut key = [0u8; 16];
+            key[..8].copy_from_slice(&(r as u64).to_le_bytes());
+            key[8..].copy_from_slice(&(v as u64).to_le_bytes());
+            ring.push((fnv1a_bytes(&key), r));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+/// Map a family key to its home replica: the first vnode clockwise of the
+/// key (wrapping).
+pub fn ring_assign(ring: &[(u64, usize)], key: u64) -> usize {
+    debug_assert!(!ring.is_empty());
+    let i = ring.partition_point(|&(h, _)| h < key);
+    ring[i % ring.len()].1
+}
+
+/// The steal rule, as a pure function of observed depths: stay home unless
+/// the home replica's depth has reached `steal_threshold` AND somewhere is
+/// strictly shallower — then go to the shallowest replica (lowest index on
+/// ties). Returns `(target, stolen)`.
+///
+/// Two bounds fall out of the rule and are property-tested: a steal never
+/// happens while the home replica is below the threshold (locality is
+/// never traded away cheaply), and a steal target is always strictly
+/// shallower than home (stealing cannot pile onto a deeper replica).
+pub fn dispatch_decision(
+    home: usize,
+    depths: &[usize],
+    steal_threshold: usize,
+) -> (usize, bool) {
+    debug_assert!(home < depths.len());
+    if depths[home] < steal_threshold {
+        return (home, false);
+    }
+    let (min_r, &min_d) = depths
+        .iter()
+        .enumerate()
+        .min_by_key(|&(i, &d)| (d, i))
+        .expect("non-empty fleet");
+    if min_d < depths[home] && min_r != home {
+        (min_r, true)
+    } else {
+        (home, false)
+    }
+}
+
+/// Recover the replica that minted a request id under the id-stride scheme
+/// (`EngineConfig::replicas`): replica r mints `r + 1, r + 1 + N, …`.
+pub fn replica_of_id(id: u64, replicas: usize) -> usize {
+    let n = replicas.max(1) as u64;
+    ((id.max(1) - 1) % n) as usize
+}
+
+// ---------------------------------------------------------------------------
+// The fleet handle
+// ---------------------------------------------------------------------------
+
+/// Dispatch-plane counters, point-in-time. Part of [`ClusterSnapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct DispatchSnapshot {
+    pub policy: String,
+    pub steal_threshold: usize,
+    /// Requests routed away from their home replica by the steal rule.
+    pub steals: u64,
+    /// Submits whose prompt matched a recorded prefix boundary in the
+    /// locality index (the *dispatcher's* warm hits — the engines' own
+    /// `prefix.hit_rate` tells whether the pages were really there).
+    pub locality_hits: u64,
+    pub locality_misses: u64,
+    pub locality_hit_rate: f64,
+    /// Submits dispatched to each replica, by replica index.
+    pub dispatched: Vec<u64>,
+}
+
+/// Fleet-level stats: the aggregated fleet view plus every replica's own
+/// snapshot and the dispatch counters.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSnapshot {
+    pub fleet: StatsSnapshot,
+    pub replicas: Vec<StatsSnapshot>,
+    pub dispatch: DispatchSnapshot,
+}
+
+impl ClusterSnapshot {
+    /// JSON shape: the fleet aggregate's keys inlined at the top level —
+    /// so every existing `{"cmd":"stats"}` consumer keeps reading the same
+    /// keys — plus a `replicas` array (per-replica breakdown) and a
+    /// `dispatch` object.
+    pub fn to_json(&self) -> Json {
+        let mut obj = match self.fleet.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("StatsSnapshot::to_json returns an object"),
+        };
+        obj.insert(
+            "replicas".into(),
+            Json::arr(self.replicas.iter().map(|s| s.to_json()).collect()),
+        );
+        obj.insert(
+            "dispatch".into(),
+            Json::obj(vec![
+                ("policy", Json::str(self.dispatch.policy.clone())),
+                (
+                    "steal_threshold",
+                    Json::num(self.dispatch.steal_threshold as f64),
+                ),
+                ("steals", Json::num(self.dispatch.steals as f64)),
+                (
+                    "locality_hits",
+                    Json::num(self.dispatch.locality_hits as f64),
+                ),
+                (
+                    "locality_misses",
+                    Json::num(self.dispatch.locality_misses as f64),
+                ),
+                (
+                    "locality_hit_rate",
+                    Json::num(self.dispatch.locality_hit_rate),
+                ),
+                (
+                    "dispatched",
+                    Json::arr(
+                        self.dispatch
+                            .dispatched
+                            .iter()
+                            .map(|&d| Json::num(d as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// Fold per-replica snapshots into one fleet view. Counters sum; rates and
+/// means recombine under the weight that produced them (steps for
+/// occupancy-style means, completions for scheduling delay, summed
+/// hits/misses for hit rates); latency percentiles take the fleet-worst
+/// replica (a conservative upper bound — true fleet percentiles would need
+/// the raw histograms). `aggregate(&[s])` reproduces `s` exactly, which is
+/// what keeps the 1-replica cluster's stats endpoint bit-compatible with
+/// the bare engine's (unit-tested).
+pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
+    if snaps.is_empty() {
+        return StatsSnapshot::default();
+    }
+    let sum_u64 = |f: &dyn Fn(&StatsSnapshot) -> u64| snaps.iter().map(f).sum::<u64>();
+    let sum_usize =
+        |f: &dyn Fn(&StatsSnapshot) -> usize| snaps.iter().map(f).sum::<usize>();
+    let sum_f64 = |f: &dyn Fn(&StatsSnapshot) -> f64| snaps.iter().map(f).sum::<f64>();
+    // Weighted mean that degenerates to the plain value for one snapshot
+    // and to 0 when no weight has accumulated anywhere.
+    let wmean = |val: &dyn Fn(&StatsSnapshot) -> f64,
+                 weight: &dyn Fn(&StatsSnapshot) -> f64| {
+        let total: f64 = snaps.iter().map(weight).sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            snaps.iter().map(|s| val(s) * weight(s)).sum::<f64>() / total
+        }
+    };
+    let max_f64 = |f: &dyn Fn(&StatsSnapshot) -> f64| {
+        snaps.iter().map(f).fold(0.0_f64, f64::max)
+    };
+
+    let mut buckets: std::collections::BTreeMap<usize, BucketStat> =
+        std::collections::BTreeMap::new();
+    for s in snaps {
+        for b in &s.buckets {
+            let e = buckets.entry(b.bucket).or_insert(BucketStat {
+                bucket: b.bucket,
+                calls: 0,
+                mean_rows: 0.0,
+            });
+            // Calls-weighted mean of mean_rows, folded incrementally.
+            let total = e.calls + b.calls;
+            if total > 0 {
+                e.mean_rows = (e.mean_rows * e.calls as f64
+                    + b.mean_rows * b.calls as f64)
+                    / total as f64;
+            }
+            e.calls = total;
+        }
+    }
+    let mut variants: std::collections::BTreeMap<String, u64> =
+        std::collections::BTreeMap::new();
+    for s in snaps {
+        for v in &s.variants {
+            *variants.entry(v.variant.clone()).or_insert(0) += v.calls;
+        }
+    }
+
+    let hits = sum_u64(&|s| s.prefix.hits);
+    let misses = sum_u64(&|s| s.prefix.misses);
+    let pages = sum_u64(&|s| s.prefix.resident_pages);
+    let audits = sum_u64(&|s| s.governor.audits);
+
+    StatsSnapshot {
+        // A fleet view belongs to no single replica; keep the sole
+        // replica's identity when there is exactly one (the N=1 identity).
+        replica: if snaps.len() == 1 { snaps[0].replica } else { 0 },
+        in_flight: sum_usize(&|s| s.in_flight),
+        queue_depth: sum_usize(&|s| s.queue_depth),
+        active_rows: sum_usize(&|s| s.active_rows),
+        // Fleet capacity: rows across all replicas.
+        batch: sum_usize(&|s| s.batch),
+        steps: sum_u64(&|s| s.steps),
+        batch_occupancy: wmean(&|s| s.batch_occupancy, &|s| s.steps as f64),
+        sched_delay_s: wmean(&|s| s.sched_delay_s, &|s| s.completed as f64),
+        chunk_efficiency: wmean(&|s| s.chunk_efficiency, &|s| s.steps as f64),
+        subbatches_per_step: wmean(&|s| s.subbatches_per_step, &|s| s.steps as f64),
+        completed: sum_u64(&|s| s.completed),
+        cancelled: sum_u64(&|s| s.cancelled),
+        buckets: buckets.into_values().collect(),
+        variants: variants
+            .into_iter()
+            .map(|(variant, calls)| VariantCalls { variant, calls })
+            .collect(),
+        governor: super::router::GovernorSnapshot {
+            audits,
+            probes: sum_u64(&|s| s.governor.probes),
+            audit_rate: wmean(&|s| s.governor.audit_rate, &|s| s.governor.audits as f64),
+            top1_agreement: wmean(
+                &|s| s.governor.top1_agreement,
+                &|s| s.governor.audits as f64,
+            ),
+            accept_delta: wmean(
+                &|s| s.governor.accept_delta,
+                &|s| s.governor.audits as f64,
+            ),
+            demotions: sum_u64(&|s| s.governor.demotions),
+            promotions: sum_u64(&|s| s.governor.promotions),
+        },
+        prefix: super::router::PrefixSnapshot {
+            hits,
+            misses,
+            hit_rate: if hits + misses == 0 {
+                0.0
+            } else {
+                hits as f64 / (hits + misses) as f64
+            },
+            hit_tokens: sum_u64(&|s| s.prefix.hit_tokens),
+            mid_stream_hit_tokens: sum_u64(&|s| s.prefix.mid_stream_hit_tokens),
+            resident_bytes: sum_u64(&|s| s.prefix.resident_bytes),
+            resident_pages: pages,
+            page_share_ratio: if pages == 0 {
+                0.0
+            } else {
+                // refs_i = ratio_i * pages_i, so this is sum(refs)/sum(pages).
+                snaps
+                    .iter()
+                    .map(|s| s.prefix.page_share_ratio * s.prefix.resident_pages as f64)
+                    .sum::<f64>()
+                    / pages as f64
+            },
+            segments: sum_u64(&|s| s.prefix.segments),
+            evictions: sum_u64(&|s| s.prefix.evictions),
+            prefill_saved_s: sum_f64(&|s| s.prefix.prefill_saved_s),
+        },
+        kv: super::router::KvSnapshot {
+            paged_rows: snaps[0].kv.paged_rows,
+            resident_bytes: sum_u64(&|s| s.kv.resident_bytes),
+            // Sum of per-replica peaks: an upper bound on the true
+            // concurrent fleet peak (replica peaks need not coincide).
+            resident_peak_bytes: sum_u64(&|s| s.kv.resident_peak_bytes),
+            row_page_refs: sum_u64(&|s| s.kv.row_page_refs),
+            row_shared_pages: sum_u64(&|s| s.kv.row_shared_pages),
+            row_copied_pages: sum_u64(&|s| s.kv.row_copied_pages),
+            row_tail_copies: sum_u64(&|s| s.kv.row_tail_copies),
+            copy_saved_s: sum_f64(&|s| s.kv.copy_saved_s),
+        },
+        prefill: super::router::PrefillSnapshot {
+            chunks: sum_u64(&|s| s.prefill.chunks),
+            inflight_rows: sum_u64(&|s| s.prefill.inflight_rows),
+            decode_stall_steps: sum_u64(&|s| s.prefill.decode_stall_steps),
+            stall_saved_s: sum_f64(&|s| s.prefill.stall_saved_s),
+            ttft_warm_p50_s: max_f64(&|s| s.prefill.ttft_warm_p50_s),
+            ttft_warm_p99_s: max_f64(&|s| s.prefill.ttft_warm_p99_s),
+            ttft_cold_p50_s: max_f64(&|s| s.prefill.ttft_cold_p50_s),
+            ttft_cold_p99_s: max_f64(&|s| s.prefill.ttft_cold_p99_s),
+            tpot_warm_p50_s: max_f64(&|s| s.prefill.tpot_warm_p50_s),
+            tpot_warm_p99_s: max_f64(&|s| s.prefill.tpot_warm_p99_s),
+            tpot_cold_p50_s: max_f64(&|s| s.prefill.tpot_cold_p50_s),
+            tpot_cold_p99_s: max_f64(&|s| s.prefill.tpot_cold_p99_s),
+        },
+        prompt_truncated: sum_u64(&|s| s.prompt_truncated),
+    }
+}
+
+/// Handle to a replica fleet. `Sync` like the [`EngineHandle`] it
+/// generalizes: share one behind an `Arc` and submit from any number of
+/// threads.
+pub struct ClusterHandle {
+    replicas: Vec<EngineHandle>,
+    ring: Vec<(u64, usize)>,
+    dispatch: DispatchPolicy,
+    steal_threshold: usize,
+    /// Prefix-family index for locality dispatch; the lock guards a few
+    /// hash probes per submit, never any engine work.
+    locality: Mutex<LocalityIndex>,
+    /// Round-robin cursor for the `Random` scatter policy.
+    rr: AtomicUsize,
+    steals: AtomicU64,
+    locality_hits: AtomicU64,
+    locality_misses: AtomicU64,
+    dispatched: Vec<AtomicU64>,
+}
+
+impl ClusterHandle {
+    /// Spawn `ccfg.replicas` engine replicas of `cfg`. Each replica gets
+    /// its own engine thread (construction serialized by the router's boot
+    /// lock) with `cfg.replica`/`cfg.replicas` stamped for id striding;
+    /// `max_queue` is the per-replica admission cap.
+    pub fn spawn(
+        artifacts: PathBuf,
+        model: String,
+        cfg: EngineConfig,
+        ccfg: ClusterConfig,
+        max_queue: usize,
+    ) -> Result<Self> {
+        if ccfg.replicas == 0 {
+            bail!("cluster needs at least one replica");
+        }
+        let n = ccfg.replicas;
+        let mut replicas = Vec::with_capacity(n);
+        for r in 0..n {
+            let mut rcfg = cfg.clone();
+            rcfg.replica = r;
+            rcfg.replicas = n;
+            replicas.push(EngineHandle::spawn(
+                artifacts.clone(),
+                model.clone(),
+                rcfg,
+                max_queue,
+            )?);
+        }
+        let page_tokens = cfg.prefix.page_tokens.max(1);
+        Ok(ClusterHandle {
+            replicas,
+            ring: build_ring(n, ccfg.vnodes.max(1)),
+            dispatch: ccfg.dispatch,
+            steal_threshold: ccfg.steal_threshold.max(1),
+            locality: Mutex::new(LocalityIndex::new(page_tokens)),
+            rr: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            locality_hits: AtomicU64::new(0),
+            locality_misses: AtomicU64::new(0),
+            dispatched: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pick the replica a new prompt dispatches to, updating the locality
+    /// index and the steal/hit counters.
+    fn route(&self, prompt: &[i32]) -> usize {
+        let n = self.replicas.len();
+        match self.dispatch {
+            DispatchPolicy::Random => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            DispatchPolicy::Locality => {
+                let (family, hit) = self.locality.lock().unwrap().observe(prompt);
+                if hit {
+                    self.locality_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.locality_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                if n == 1 {
+                    return 0;
+                }
+                let home = ring_assign(&self.ring, family);
+                let depths: Vec<usize> =
+                    self.replicas.iter().map(|r| r.in_flight()).collect();
+                let (target, stolen) =
+                    dispatch_decision(home, &depths, self.steal_threshold);
+                if stolen {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                }
+                target
+            }
+        }
+    }
+
+    /// Submit to the dispatched replica; the returned [`Ticket`] is the
+    /// request's private completion channel exactly as with a bare handle.
+    pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<Ticket> {
+        let target = self.route(&prompt);
+        self.dispatched[target].fetch_add(1, Ordering::Relaxed);
+        self.replicas[target].submit(prompt, params, task)
+    }
+
+    /// Cancel routes straight to the replica that minted the id (the
+    /// id-stride rule) — no broadcast, no shared allocator.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        let r = replica_of_id(id, self.replicas.len());
+        self.replicas[r].cancel(id)
+    }
+
+    /// Boot warm-up, fleet-aware: every template is keyed into the
+    /// locality index and prefilled on its *home* replica only — warming
+    /// all replicas with all templates would waste N−1 copies of every
+    /// page run, and dispatch sends the template's requests home anyway.
+    /// Under the `Random` scatter policy templates round-robin instead
+    /// (there is no home). Returns the total templates cached.
+    pub fn warm_prefix(&self, templates: Vec<(Vec<i32>, String)>) -> Result<usize> {
+        let n = self.replicas.len();
+        let mut per: Vec<Vec<(Vec<i32>, String)>> = (0..n).map(|_| Vec::new()).collect();
+        for (ids, task) in templates {
+            let home = match self.dispatch {
+                DispatchPolicy::Locality => {
+                    let (family, _) = self.locality.lock().unwrap().observe(&ids);
+                    if n == 1 {
+                        0
+                    } else {
+                        ring_assign(&self.ring, family)
+                    }
+                }
+                DispatchPolicy::Random => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            };
+            per[home].push((ids, task));
+        }
+        let mut cached = 0;
+        for (r, batch) in per.into_iter().enumerate() {
+            if !batch.is_empty() {
+                cached += self.replicas[r].warm_prefix(batch)?;
+            }
+        }
+        Ok(cached)
+    }
+
+    /// Fleet-wide submitted-but-not-completed count.
+    pub fn in_flight(&self) -> usize {
+        self.replicas.iter().map(|r| r.in_flight()).sum()
+    }
+
+    /// Fleet-aggregated stats, same shape as a bare engine's (see
+    /// [`aggregate`]). For the per-replica breakdown use
+    /// [`ClusterHandle::cluster_stats`].
+    pub fn stats(&self) -> StatsSnapshot {
+        let snaps: Vec<StatsSnapshot> = self.replicas.iter().map(|r| r.stats()).collect();
+        aggregate(&snaps)
+    }
+
+    /// Everything: fleet aggregate, per-replica snapshots, dispatch
+    /// counters.
+    pub fn cluster_stats(&self) -> ClusterSnapshot {
+        let replicas: Vec<StatsSnapshot> =
+            self.replicas.iter().map(|r| r.stats()).collect();
+        let fleet = aggregate(&replicas);
+        let hits = self.locality_hits.load(Ordering::Relaxed);
+        let misses = self.locality_misses.load(Ordering::Relaxed);
+        ClusterSnapshot {
+            fleet,
+            replicas,
+            dispatch: DispatchSnapshot {
+                policy: self.dispatch.name().into(),
+                steal_threshold: self.steal_threshold,
+                steals: self.steals.load(Ordering::Relaxed),
+                locality_hits: hits,
+                locality_misses: misses,
+                locality_hit_rate: if hits + misses == 0 {
+                    0.0
+                } else {
+                    hits as f64 / (hits + misses) as f64
+                },
+                dispatched: self
+                    .dispatched
+                    .iter()
+                    .map(|d| d.load(Ordering::Relaxed))
+                    .collect(),
+            },
+        }
+    }
+
+    /// Graceful shutdown: drain every replica, then join them all. The
+    /// first error is reported after every replica has been joined.
+    pub fn shutdown(self) -> Result<()> {
+        let mut first_err = None;
+        for r in self.replicas {
+            if let Err(e) = r.shutdown() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_is_shareable_across_threads() {
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<ClusterHandle>();
+        assert_sync_send::<ClusterSnapshot>();
+    }
+
+    #[test]
+    fn ring_covers_every_replica_and_is_deterministic() {
+        let ring = build_ring(4, 64);
+        assert_eq!(ring.len(), 4 * 64);
+        assert_eq!(ring, build_ring(4, 64), "ring is a pure function");
+        // Sweep the key space: every replica owns a share.
+        let mut owned = [0usize; 4];
+        for k in 0..4096u64 {
+            owned[ring_assign(&ring, k.wrapping_mul(0x9e37_79b9_7f4a_7c15))] += 1;
+        }
+        for (r, &n) in owned.iter().enumerate() {
+            assert!(n > 0, "replica {r} owns no keys");
+        }
+    }
+
+    #[test]
+    fn steal_rule_bounds() {
+        // Below threshold: never steals, whatever the imbalance.
+        assert_eq!(dispatch_decision(0, &[3, 0, 0, 0], 4), (0, false));
+        // At threshold with a shallower replica: steals to the shallowest.
+        assert_eq!(dispatch_decision(0, &[4, 2, 1, 5], 4), (2, true));
+        // At threshold but nobody shallower: stays home.
+        assert_eq!(dispatch_decision(1, &[4, 4, 4, 4], 4), (1, false));
+        // Home is itself the shallowest: stays home, not a steal.
+        assert_eq!(dispatch_decision(2, &[9, 9, 4, 9], 4), (2, false));
+        // Single replica can never steal.
+        assert_eq!(dispatch_decision(0, &[100], 1), (0, false));
+    }
+
+    #[test]
+    fn id_stride_roundtrip() {
+        for n in 1..=5usize {
+            for r in 0..n {
+                for k in 0..4u64 {
+                    let id = (r as u64 + 1) + k * n as u64;
+                    assert_eq!(replica_of_id(id, n), r, "id {id} of {n}");
+                }
+            }
+        }
+        // Defensive: id 0 (never minted) and n = 0 don't panic.
+        assert_eq!(replica_of_id(0, 4), 0);
+        assert_eq!(replica_of_id(7, 0), 0);
+    }
+
+    #[test]
+    fn aggregate_of_one_snapshot_is_identity() {
+        // The N=1 cluster must answer `stats` exactly like a bare engine:
+        // build a snapshot with every weight-bearing field non-zero and
+        // check the aggregate reproduces it bit for bit.
+        let s = StatsSnapshot {
+            replica: 3,
+            in_flight: 5,
+            queue_depth: 2,
+            active_rows: 3,
+            batch: 4,
+            steps: 100,
+            batch_occupancy: 2.75,
+            sched_delay_s: 0.0125,
+            chunk_efficiency: 0.8,
+            subbatches_per_step: 1.5,
+            completed: 42,
+            cancelled: 2,
+            buckets: vec![BucketStat { bucket: 4, calls: 10, mean_rows: 3.5 }],
+            variants: vec![VariantCalls { variant: "w8a8".into(), calls: 10 }],
+            governor: super::super::router::GovernorSnapshot {
+                audits: 8,
+                probes: 2,
+                audit_rate: 0.25,
+                top1_agreement: 0.99,
+                accept_delta: -0.125,
+                demotions: 1,
+                promotions: 1,
+            },
+            prefix: super::super::router::PrefixSnapshot {
+                hits: 30,
+                misses: 10,
+                hit_rate: 0.75,
+                hit_tokens: 960,
+                mid_stream_hit_tokens: 128,
+                resident_bytes: 1 << 20,
+                resident_pages: 64,
+                page_share_ratio: 1.25,
+                segments: 7,
+                evictions: 3,
+                prefill_saved_s: 0.5,
+            },
+            kv: super::super::router::KvSnapshot {
+                paged_rows: true,
+                resident_bytes: 2 << 20,
+                resident_peak_bytes: 3 << 20,
+                row_page_refs: 11,
+                row_shared_pages: 9,
+                row_copied_pages: 1,
+                row_tail_copies: 2,
+                copy_saved_s: 0.25,
+            },
+            prefill: super::super::router::PrefillSnapshot {
+                chunks: 17,
+                inflight_rows: 1,
+                decode_stall_steps: 4,
+                stall_saved_s: 0.0625,
+                ttft_warm_p50_s: 0.01,
+                ttft_warm_p99_s: 0.02,
+                ttft_cold_p50_s: 0.03,
+                ttft_cold_p99_s: 0.04,
+                tpot_warm_p50_s: 0.001,
+                tpot_warm_p99_s: 0.002,
+                tpot_cold_p50_s: 0.003,
+                tpot_cold_p99_s: 0.004,
+            },
+            prompt_truncated: 1,
+        };
+        let a = aggregate(std::slice::from_ref(&s));
+        assert_eq!(a.replica, s.replica);
+        assert_eq!(a.in_flight, s.in_flight);
+        assert_eq!(a.queue_depth, s.queue_depth);
+        assert_eq!(a.active_rows, s.active_rows);
+        assert_eq!(a.batch, s.batch);
+        assert_eq!(a.steps, s.steps);
+        assert_eq!(a.batch_occupancy, s.batch_occupancy);
+        assert_eq!(a.sched_delay_s, s.sched_delay_s);
+        assert_eq!(a.chunk_efficiency, s.chunk_efficiency);
+        assert_eq!(a.subbatches_per_step, s.subbatches_per_step);
+        assert_eq!(a.completed, s.completed);
+        assert_eq!(a.cancelled, s.cancelled);
+        assert_eq!(a.buckets, s.buckets);
+        assert_eq!(a.variants, s.variants);
+        assert_eq!(a.governor, s.governor);
+        assert_eq!(a.prefix, s.prefix);
+        assert_eq!(a.kv, s.kv);
+        assert_eq!(a.prefill, s.prefill);
+        assert_eq!(a.prompt_truncated, s.prompt_truncated);
+    }
+
+    #[test]
+    fn aggregate_recombines_weighted_rates() {
+        let mut a = StatsSnapshot::default();
+        a.steps = 100;
+        a.batch = 4;
+        a.batch_occupancy = 3.0;
+        a.completed = 10;
+        a.sched_delay_s = 0.010;
+        a.prefix.hits = 9;
+        a.prefix.misses = 1;
+        a.prefix.hit_rate = 0.9;
+        let mut b = StatsSnapshot::default();
+        b.replica = 1;
+        b.steps = 300;
+        b.batch = 4;
+        b.batch_occupancy = 1.0;
+        b.completed = 30;
+        b.sched_delay_s = 0.030;
+        b.prefix.hits = 1;
+        b.prefix.misses = 9;
+        b.prefix.hit_rate = 0.1;
+        let f = aggregate(&[a, b]);
+        assert_eq!(f.replica, 0, "fleet view is anonymous");
+        assert_eq!(f.batch, 8, "fleet capacity sums");
+        assert_eq!(f.steps, 400);
+        // (3.0*100 + 1.0*300) / 400
+        assert!((f.batch_occupancy - 1.5).abs() < 1e-12);
+        // (0.010*10 + 0.030*30) / 40
+        assert!((f.sched_delay_s - 0.025).abs() < 1e-12);
+        // Recomputed from summed hits/misses, not averaged rates.
+        assert!((f.prefix.hit_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_snapshot_json_keeps_flat_fleet_keys() {
+        let snap = ClusterSnapshot {
+            fleet: StatsSnapshot { queue_depth: 7, ..Default::default() },
+            replicas: vec![
+                StatsSnapshot { replica: 0, ..Default::default() },
+                StatsSnapshot { replica: 1, ..Default::default() },
+            ],
+            dispatch: DispatchSnapshot {
+                policy: "locality".into(),
+                steal_threshold: 8,
+                steals: 3,
+                locality_hits: 5,
+                locality_misses: 5,
+                locality_hit_rate: 0.5,
+                dispatched: vec![6, 4],
+            },
+        };
+        let j = snap.to_json();
+        // Existing consumers keep their flat keys…
+        assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 7);
+        // …and the fleet detail rides alongside.
+        let reps = j.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[1].get("replica").unwrap().as_i64().unwrap(), 1);
+        let d = j.get("dispatch").unwrap();
+        assert_eq!(d.get("policy").unwrap().as_str().unwrap(), "locality");
+        assert_eq!(d.get("steals").unwrap().as_i64().unwrap(), 3);
+        assert!(
+            (d.get("locality_hit_rate").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12
+        );
+        assert_eq!(d.get("dispatched").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn dispatch_policy_parse_roundtrip() {
+        for p in [DispatchPolicy::Locality, DispatchPolicy::Random] {
+            assert_eq!(DispatchPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::parse("nope"), None);
+    }
+}

@@ -221,6 +221,16 @@ pub struct EngineConfig {
     /// admission-time prefill as the A/B reference
     /// (the `--no-chunked-prefill` bench path).
     pub chunked_prefill: bool,
+    /// This engine's index within a replica fleet (`coordinator::cluster`).
+    /// Purely identity: threads through stats and strides request ids.
+    pub replica: usize,
+    /// Fleet size this engine is a member of. Request ids are strided so
+    /// every replica mints globally-unique ids (`replica + 1`, step
+    /// `replicas`): the dispatcher can route a cancel by `(id - 1) %
+    /// replicas` without a shared id allocator. The single-engine default
+    /// (`replica: 0, replicas: 1`) yields ids 1, 2, 3, … — bit-identical
+    /// to the pre-cluster engine.
+    pub replicas: usize,
 }
 
 impl EngineConfig {
@@ -238,6 +248,8 @@ impl EngineConfig {
             prefix: PrefixCacheConfig::default(),
             paged_rows: true,
             chunked_prefill: true,
+            replica: 0,
+            replicas: 1,
         }
     }
 
@@ -254,6 +266,8 @@ impl EngineConfig {
             prefix: PrefixCacheConfig::default(),
             paged_rows: true,
             chunked_prefill: true,
+            replica: 0,
+            replicas: 1,
         }
     }
 
@@ -372,7 +386,9 @@ impl Engine {
             states: Vec::new(),
             sched: Scheduler::new(cfg.policy),
             rng: Pcg::seeded(cfg.seed ^ 0x5145_5341),
-            next_id: 1,
+            // Fleet-unique id lane: replica r of N mints r+1, r+1+N, … —
+            // the default (0 of 1) is the classic 1, 2, 3, … sequence.
+            next_id: 1 + cfg.replica as u64,
             metrics: Metrics::new(),
             call_log: CallLog::default(),
             completions: Vec::new(),
@@ -466,7 +482,7 @@ impl Engine {
     /// cache has already mostly paid for.
     pub fn submit(&mut self, mut prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.cfg.replicas.max(1) as u64;
         let cap = self.mcfg.max_seq.saturating_sub(2);
         let truncated = prompt.len() > cap;
         prompt.truncate(cap);
@@ -1084,16 +1100,35 @@ impl Engine {
             } else {
                 plan_step(&ctx, &plan_rows)?
             };
-            pack_prefill_riders(&ctx, &mut plan, &pending, self.mcfg.prefill_len);
+            // Load-adaptive chunk sizing: when the admission queue has
+            // backed up past the batch, a dedicated prefill chunk gives up
+            // the full exported window and reroutes through the single-row
+            // verify program instead — a much shorter chunk, so the step's
+            // time bound (and every live row's TPOT) stays smooth while the
+            // queue drains. Rides are unaffected (they were already capped
+            // at the hosting sub-batch's chunk).
+            let shed_load = self.sched.depth() > self.cfg.batch;
+            pack_prefill_riders(&ctx, &mut plan, &pending, self.mcfg.prefill_len, shed_load);
             plan
         };
         self.observe_plan(&plan);
-        if !plan_rows.is_empty()
-            && plan.sub_batches.iter().any(|sb| sb.fn_kind == FnKind::Prefill)
-        {
+        // A dedicated admission chunk is any sub-batch carrying riders but
+        // no committed rows, whatever program it executes through (the
+        // full-window prefill artifact, or the verify artifact under shed).
+        let dedicated =
+            |sb: &SubBatch| sb.rows.is_empty() && !sb.riders.is_empty();
+        if !plan_rows.is_empty() && plan.sub_batches.iter().any(dedicated) {
             // Spare capacity couldn't absorb every pending chunk: this step
             // ran a dedicated prefill call alongside live decode rows.
             self.metrics.inc(names::DECODE_STALL_STEPS, 1);
+        }
+        let shed_chunks = plan
+            .sub_batches
+            .iter()
+            .filter(|sb| dedicated(sb) && sb.fn_kind != FnKind::Prefill)
+            .count();
+        if shed_chunks > 0 {
+            self.metrics.inc(names::PREFILL_SHED_CHUNKS, shed_chunks as u64);
         }
 
         // ---- execute + commit each sub-batch ---------------------------

@@ -5,10 +5,13 @@
 //! page-granular sharing, mid-stream snapshots, boot warm-up
 //! (`prefixcache`), cost-guided elastic step planning (`plan`), the
 //! adaptive-precision fidelity governor (`governor`), the decode loop
-//! (`engine`), call accounting for the cost model (`calls`) and the
-//! threaded front door with correlated completion routing (`router`).
+//! (`engine`), call accounting for the cost model (`calls`), the threaded
+//! front door with correlated completion routing (`router`), and the
+//! replica-fleet dispatch plane — locality-hashing dispatch with
+//! work-stealing spillover over N engine replicas (`cluster`).
 
 pub mod calls;
+pub mod cluster;
 pub mod engine;
 pub mod governor;
 pub mod kv;
@@ -19,12 +22,15 @@ pub mod router;
 pub mod scheduler;
 
 pub use calls::{CallLog, CallRecord, FnKind};
+pub use cluster::{aggregate, build_ring, dispatch_decision, replica_of_id, ring_assign,
+                  ClusterConfig, ClusterHandle, ClusterSnapshot, DispatchPolicy,
+                  DispatchSnapshot};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::{BatchGroup, PagedGroup, RowStore};
 pub use plan::{best_bucket, pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending,
                PrefillRider, StepPlan, SubBatch, VariantCtx};
-pub use prefixcache::{Lease, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
+pub use prefixcache::{Lease, LocalityIndex, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use request::{Completion, FinishReason, GenParams, PrefillProgress, Priority, Request,
                   RequestState};
 pub use router::{BucketStat, EngineHandle, GovernorSnapshot, KvSnapshot, PrefillSnapshot,

@@ -68,6 +68,13 @@
 //!   one rider). Those are the steps the `decode_stall_steps` counter
 //!   tallies when decode rows were active; riding chunks book the avoided
 //!   dedicated-call price to `prefill_stall_saved_s` instead.
+//! * **Load-adaptive chunk shrink** — under a deep admission queue
+//!   (`shed_load`) a dedicated call drops from the full prefill window to
+//!   the exported single-row verify program (`FnKind::Verify`, bucket 1,
+//!   `ctx.verify_chunk` positions) when the variant exports one: slower
+//!   ingest for that row, but the step's priced bound shrinks by the
+//!   window/verify-chunk ratio, smoothing live rows' TPOT while the queue
+//!   drains (counted by `prefill_shed_chunks`).
 //! * Riders never change committed-row semantics: `SubBatch::rows` is
 //!   still exactly the decode/verify rows, and every consumer of the plan
 //!   (governor audits, commit loop) iterates `rows` untouched.
@@ -196,12 +203,24 @@ pub struct PrefillPending {
 /// Fill the chosen plan's spare capacity with pending prefill chunks (see
 /// the module doc's rider-packing invariants). Every pending row advances
 /// by exactly one chunk: riding a same-variant sub-batch's spare slot when
-/// one exists, otherwise as a dedicated single-row prefill sub-batch of
-/// `prefill_chunk` positions appended to the plan. Dedicated calls are
-/// priced into both `modeled_s` and `monolithic_s` (the stall costs the
-/// same in either shape, so the planner-savings invariant is unchanged).
+/// one exists, otherwise as a dedicated single-row sub-batch appended to
+/// the plan. Dedicated calls are priced into both `modeled_s` and
+/// `monolithic_s` (the stall costs the same in either shape, so the
+/// planner-savings invariant is unchanged).
+///
+/// `shed_load` is the load-adaptive chunk-size switch: chunk shapes must
+/// match an exported program exactly, so the only sizes a dedicated call
+/// can run at are the full prefill window (`FnKind::Prefill`, bucket 1)
+/// and the much shorter single-row verify chunk (`ctx.verify_chunk`,
+/// available whenever the variant exports a b1 verify program — the same
+/// program whose KV bytes mid-stream snapshots already rely on matching
+/// prefill's). Under shed, a dedicated chunk takes the verify shape:
+/// admission ingests fewer positions per step, but the step's priced time
+/// bound drops by the window/verify-chunk ratio, smoothing live rows'
+/// TPOT while a deep queue drains.
 pub fn pack_prefill_riders(ctx: &PlanCtx, plan: &mut StepPlan,
-                           pending: &[PrefillPending], prefill_chunk: usize) {
+                           pending: &[PrefillPending], prefill_chunk: usize,
+                           shed_load: bool) {
     for (pi, p) in pending.iter().enumerate() {
         debug_assert!(p.remaining > 0);
         let slot = plan.sub_batches.iter_mut().find(|sb| {
@@ -218,16 +237,24 @@ pub fn pack_prefill_riders(ctx: &PlanCtx, plan: &mut StepPlan,
             // only raise the *priced* token count up to that ceiling.
             sb.tokens_used = sb.tokens_used.max(take);
         } else {
-            let take = p.remaining.min(prefill_chunk);
+            let shed = shed_load
+                && ctx.verify_chunk < prefill_chunk
+                && ctx.variants[p.variant].verify_buckets.contains(&1);
+            let (fn_kind, chunk) = if shed {
+                (FnKind::Verify, ctx.verify_chunk)
+            } else {
+                (FnKind::Prefill, prefill_chunk)
+            };
+            let take = p.remaining.min(chunk);
             let cost = ctx
                 .perf
                 .price_parts(ctx.variants[p.variant].name, ctx.n_layers, 1, take)
                 .total();
             plan.sub_batches.push(SubBatch {
-                fn_kind: FnKind::Prefill,
+                fn_kind,
                 variant: p.variant,
                 bucket: 1,
-                chunk: prefill_chunk,
+                chunk,
                 rows: Vec::new(),
                 riders: vec![PrefillRider { pending: pi, take, saved_s: 0.0 }],
                 tokens_used: take,
@@ -801,7 +828,9 @@ mod tests {
         let c = ctx(&perf, &vs, 4, true);
         let mut plan = plan_step(&c, &prows(&[4])).unwrap();
         let (modeled, mono) = (plan.modeled_s, plan.monolithic_s);
-        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 40, variant: 0 }], 128);
+        pack_prefill_riders(
+            &c, &mut plan, &[PrefillPending { remaining: 40, variant: 0 }], 128, false,
+        );
         assert_eq!(plan.sub_batches.len(), 1, "no dedicated call appended");
         let sb = &plan.sub_batches[0];
         assert_eq!(sb.rows, vec![0], "committed rows untouched");
@@ -817,7 +846,9 @@ mod tests {
 
         // A short remainder takes only what is left.
         let mut plan = plan_step(&c, &prows(&[4])).unwrap();
-        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 3, variant: 0 }], 128);
+        pack_prefill_riders(
+            &c, &mut plan, &[PrefillPending { remaining: 3, variant: 0 }], 128, false,
+        );
         assert_eq!(plan.sub_batches[0].riders[0].take, 3);
     }
 
@@ -833,7 +864,9 @@ mod tests {
         let mut plan = plan_step(&c, &prows(&[3])).unwrap();
         assert_eq!(plan.sub_batches[0].spare(), 0);
         let gap = plan.monolithic_s - plan.modeled_s;
-        pack_prefill_riders(&c, &mut plan, &[PrefillPending { remaining: 200, variant: 0 }], 128);
+        pack_prefill_riders(
+            &c, &mut plan, &[PrefillPending { remaining: 200, variant: 0 }], 128, false,
+        );
         assert_eq!(plan.sub_batches.len(), 2);
         let ded = &plan.sub_batches[1];
         assert_eq!(ded.fn_kind, FnKind::Prefill);
@@ -848,6 +881,71 @@ mod tests {
             (plan.monolithic_s - plan.modeled_s - gap).abs() < 1e-15,
             "dedicated cost lands on both sides"
         );
+    }
+
+    #[test]
+    fn shed_load_shrinks_dedicated_chunks_to_the_verify_program() {
+        // Same no-spare setup as above, but with a deep queue (shed_load):
+        // the dedicated call reroutes through the exported single-row
+        // verify program — verify-chunk positions instead of the full
+        // prefill window — so the step's priced time bound shrinks too.
+        let perf = kv_heavy();
+        let buckets = [1usize, 4];
+        let vs = vctx(&buckets);
+        let c = ctx(&perf, &vs, 4, true);
+        let mut plan = plan_step(&c, &prows(&[3])).unwrap();
+        assert_eq!(plan.sub_batches[0].spare(), 0);
+        let gap = plan.monolithic_s - plan.modeled_s;
+        let full = plan.modeled_s;
+        pack_prefill_riders(
+            &c, &mut plan, &[PrefillPending { remaining: 200, variant: 0 }], 128, true,
+        );
+        assert_eq!(plan.sub_batches.len(), 2);
+        let ded = &plan.sub_batches[1];
+        assert_eq!(ded.fn_kind, FnKind::Verify, "shed uses the verify program");
+        assert_eq!(ded.bucket, 1);
+        assert_eq!(ded.chunk, 9, "chunk shrinks to the verify window");
+        assert_eq!(ded.riders[0].take, 9, "take capped at the shrunk chunk");
+        assert!(ded.rows.is_empty());
+        assert!(
+            (plan.monolithic_s - plan.modeled_s - gap).abs() < 1e-15,
+            "shed cost still lands on both sides"
+        );
+        // The shed step must price strictly below the same step with a
+        // full-window dedicated call — that gap is the TPOT smoothing.
+        let shed_cost = plan.modeled_s - full;
+        let full_cost = c.perf.price_parts("fp32", c.n_layers, 1, 128).total();
+        assert!(shed_cost < full_cost, "shed chunk must be cheaper per step");
+
+        // A variant without an exported b1 verify program cannot shed: the
+        // dedicated call keeps the full prefill shape.
+        let v1_buckets = [4usize];
+        let vs2 = vec![
+            VariantCtx { name: "w8a8", verify_buckets: &buckets, decode_buckets: &buckets },
+            VariantCtx {
+                name: "fp32",
+                verify_buckets: &v1_buckets,
+                decode_buckets: &v1_buckets,
+            },
+        ];
+        let c2 = ctx(&perf, &vs2, 4, true);
+        let mut plan = plan_step(&c2, &prows(&[3])).unwrap();
+        pack_prefill_riders(
+            &c2, &mut plan, &[PrefillPending { remaining: 200, variant: 1 }], 128, true,
+        );
+        let ded = plan.sub_batches.last().unwrap();
+        assert_eq!(ded.fn_kind, FnKind::Prefill, "no b1 verify export: no shed");
+        assert_eq!(ded.chunk, 128);
+
+        // Shed never grows the chunk: a prefill window already at or below
+        // the verify chunk stays on the prefill program.
+        let mut plan = plan_step(&c, &prows(&[3])).unwrap();
+        pack_prefill_riders(
+            &c, &mut plan, &[PrefillPending { remaining: 200, variant: 0 }], 8, true,
+        );
+        let ded = plan.sub_batches.last().unwrap();
+        assert_eq!(ded.fn_kind, FnKind::Prefill);
+        assert_eq!(ded.chunk, 8);
     }
 
     #[test]
@@ -871,7 +969,7 @@ mod tests {
             PrefillPending { remaining: 50, variant: 0 },
             PrefillPending { remaining: 50, variant: 0 },
         ];
-        pack_prefill_riders(&c, &mut plan, &pending, 64);
+        pack_prefill_riders(&c, &mut plan, &pending, 64, false);
         assert_eq!(plan.sub_batches.len(), 3, "two dedicated calls appended");
         assert_eq!(plan.sub_batches[0].riders.len(), 1, "one ride in the spare slot");
         assert_eq!(plan.sub_batches[0].riders[0].pending, 1, "same-variant row rides");

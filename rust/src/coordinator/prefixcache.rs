@@ -73,7 +73,7 @@
 //! real artifacts — if a future artifact set breaks it, those gates go
 //! red and `PrefixCacheConfig::mid_stream` is the switch to pull.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -1021,6 +1021,203 @@ impl PrefixCache {
             row_tail_copies: self.counters.row_tail_copies,
             row_page_refs: self.row_refs,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Locality probe: the dispatch plane's view of prefix affinity
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a token prefix — the cheap stand-in for the radix-trie
+/// lookup key that `coordinator::cluster` hashes requests by. Stable across
+/// processes (no `RandomState`), so CI A/B legs see the same ring keys.
+fn fnv1a_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Prefix-locality index for the replica dispatcher: maps page-aligned
+/// prompt-prefix boundaries to a stable *family key*, so every turn of a
+/// conversation — and every request stamped from the same template —
+/// consistent-hashes to the same replica.
+///
+/// This is deliberately **not** the [`PrefixCache`]: that structure is
+/// single-threaded state owned by one engine thread, holds the page pool
+/// lock discipline, and knows nothing outside its replica. The dispatcher
+/// needs a probe it can take on the submit path without any pool lock, and
+/// the answer is a *routing hint*, never a correctness input — a wrong
+/// guess costs one cold prefill on the target replica, nothing more. For
+/// the same reason the index is variant-agnostic: all replicas run the same
+/// configured verifier, and the per-variant isolation the trie enforces is
+/// a property of the KV bytes, not of where a request runs.
+///
+/// The family-key scheme handles the multi-turn growth problem: turn 1 of a
+/// conversation misses and is keyed by its *first page* (so cold siblings
+/// of one template co-locate immediately); `observe` then records every
+/// page-aligned boundary of the prompt under that same family key, first
+/// writer wins. Turn 2 arrives as `prompt ++ answer ++ follow-up`, probes
+/// longest-boundary-first, hits one of turn 1's recorded boundaries, and
+/// resolves to the *identical* family key — the ring sends it home even
+/// though its longest matched prefix grew.
+pub struct LocalityIndex {
+    page_tokens: usize,
+    /// boundary hash → family key, first writer wins.
+    families: HashMap<u64, u64>,
+    /// Insertion order of boundary hashes, for capacity eviction.
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl LocalityIndex {
+    /// Default boundary capacity: plenty for the workload's template count
+    /// times typical conversation depth, small enough that the index stays
+    /// cache-resident on the submit path.
+    pub const DEFAULT_CAP: usize = 4096;
+
+    pub fn new(page_tokens: usize) -> Self {
+        Self::with_capacity(page_tokens, Self::DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(page_tokens: usize, cap: usize) -> Self {
+        LocalityIndex {
+            page_tokens: page_tokens.max(1),
+            families: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Page-aligned prefix lengths of `prompt`, shortest first; a prompt
+    /// shorter than one page contributes its whole length so it still has
+    /// a key.
+    fn boundaries(&self, prompt_len: usize) -> Vec<usize> {
+        let p = self.page_tokens;
+        if prompt_len < p {
+            return if prompt_len == 0 { Vec::new() } else { vec![prompt_len] };
+        }
+        (1..=prompt_len / p).map(|i| i * p).collect()
+    }
+
+    /// Resolve the family key this prompt routes by. Scans the prompt's
+    /// page-aligned boundaries longest-first and returns the first recorded
+    /// family (`hit = true`); an unseen prompt falls back to the hash of
+    /// its first page (`hit = false`), which is exactly the key `observe`
+    /// will then record its boundaries under. Read-only and lock-free state
+    /// aside from the caller's own synchronization.
+    pub fn probe(&self, prompt: &[i32]) -> (u64, bool) {
+        let bounds = self.boundaries(prompt.len());
+        for &len in bounds.iter().rev() {
+            if let Some(&family) = self.families.get(&fnv1a_tokens(&prompt[..len])) {
+                return (family, true);
+            }
+        }
+        let anchor = bounds.first().copied().unwrap_or(0);
+        (fnv1a_tokens(&prompt[..anchor]), false)
+    }
+
+    /// Record this prompt's boundaries under its resolved family key and
+    /// return `(family, hit)` as [`LocalityIndex::probe`] would. First
+    /// writer wins per boundary: once a boundary belongs to a family it is
+    /// never re-pointed, which is what keeps a conversation's ring key
+    /// stable across turns.
+    pub fn observe(&mut self, prompt: &[i32]) -> (u64, bool) {
+        let (family, hit) = self.probe(prompt);
+        for len in self.boundaries(prompt.len()) {
+            let h = fnv1a_tokens(&prompt[..len]);
+            if self.families.contains_key(&h) {
+                continue;
+            }
+            self.families.insert(h, family);
+            self.order.push_back(h);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.families.remove(&old);
+                }
+            }
+        }
+        (family, hit)
+    }
+
+    /// Recorded boundary count (capacity accounting, tests).
+    pub fn len(&self) -> usize {
+        self.families.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.families.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod locality_tests {
+    use super::*;
+
+    const P: usize = 4;
+
+    fn prompt(template: i32, body: &[i32]) -> Vec<i32> {
+        let mut t: Vec<i32> = (0..8).map(|i| template * 100 + i).collect();
+        t.extend_from_slice(body);
+        t
+    }
+
+    #[test]
+    fn multi_turn_resubmits_keep_one_family_key() {
+        let mut ix = LocalityIndex::new(P);
+        let turn1 = prompt(1, &[7, 8, 9]);
+        let (f1, hit1) = ix.observe(&turn1);
+        assert!(!hit1, "first sighting is a miss");
+        // Turn 2 = turn 1 ++ answer ++ follow-up, well past new boundaries.
+        let mut turn2 = turn1.clone();
+        turn2.extend_from_slice(&[20, 21, 22, 23, 24, 25, 26, 27, 30, 31]);
+        let (f2, hit2) = ix.observe(&turn2);
+        assert!(hit2, "turn 2 hits a turn-1 boundary");
+        assert_eq!(f1, f2, "family key is stable as the prefix grows");
+        // Turn 3 keeps the chain going from turn 2's longer boundaries.
+        let mut turn3 = turn2.clone();
+        turn3.extend_from_slice(&[40, 41, 42, 43, 44]);
+        let (f3, hit3) = ix.probe(&turn3);
+        assert!(hit3);
+        assert_eq!(f1, f3);
+    }
+
+    #[test]
+    fn same_template_cold_requests_co_locate() {
+        let mut ix = LocalityIndex::new(P);
+        let (fa, _) = ix.observe(&prompt(1, &[7, 8, 9]));
+        // A sibling stamped from the same template, different body, shares
+        // the template pages — same family even though its tail diverges.
+        let (fb, hit) = ix.observe(&prompt(1, &[50, 60]));
+        assert!(hit, "template pages were recorded by the first sibling");
+        assert_eq!(fa, fb);
+        // A different template resolves to a different family.
+        let (fc, hit_c) = ix.observe(&prompt(2, &[7, 8, 9]));
+        assert!(!hit_c);
+        assert_ne!(fa, fc);
+    }
+
+    #[test]
+    fn short_prompts_still_key_and_capacity_evicts_oldest() {
+        let mut ix = LocalityIndex::with_capacity(P, 4);
+        let (f, hit) = ix.observe(&[1, 2]); // shorter than one page
+        assert!(!hit);
+        assert_eq!(ix.probe(&[1, 2]), (f, true));
+        assert!(!ix.probe(&[]).1, "empty prompt never hits");
+        // Flood past the cap: the oldest boundaries fall out of the map.
+        for t in 10..20 {
+            ix.observe(&prompt(t, &[]));
+        }
+        assert!(ix.len() <= 4, "index bounded by its capacity");
+        assert!(!ix.probe(&[1, 2]).1, "oldest boundary evicted");
+        // Hashing is deterministic: a fresh index resolves the same keys.
+        let mut ix2 = LocalityIndex::new(P);
+        let (g, _) = ix2.observe(&[1, 2]);
+        assert_eq!(f, g, "family keys are process-stable (FNV, no RandomState)");
     }
 }
 

@@ -1,10 +1,22 @@
-//! Request router: the thread-safe front door.
+//! Request router: the thread-safe front door to **one engine replica**.
 //!
 //! The `Engine` is single-threaded around the PJRT client (and `!Send` by
 //! construction), so the router owns it on a dedicated thread and exposes
 //! [`EngineHandle`], which is `Sync`: any number of submitter threads share
 //! one handle directly — no outer mutex, and nothing is ever locked across
 //! generation.
+//!
+//! In the two-tier topology (`coordinator::cluster`) this layer is the
+//! *bottom* tier: the dispatch plane owns N `EngineHandle`s — one per
+//! replica, each with its own engine thread, scheduler, governor, and paged
+//! KV pool — and routes every submit/cancel above them. Nothing here knows
+//! about the fleet beyond two identity threads: `EngineConfig::replica`
+//! lands in [`RouterStats`]/[`StatsSnapshot`] so a per-replica breakdown
+//! can say who is who, and engine-thread *construction* is serialized
+//! process-wide (see `spawn`) because PJRT client creation is the one
+//! non-reentrant step of boot. Steady-state replicas never share state —
+//! cross-replica aggregation happens entirely in the cluster layer by
+//! reading each replica's lock-free stats block.
 //!
 //! Delivery is *correlated*: every submission gets a private reply channel,
 //! and the engine thread routes each [`Completion`] to the channel keyed by
@@ -187,6 +199,9 @@ pub struct PrefillSnapshot {
 /// by the engine thread and read only by `stats`, never on the request path.
 #[derive(Default)]
 pub struct RouterStats {
+    /// Which fleet replica this stats block belongs to (`EngineConfig::
+    /// replica`; 0 for a bare single engine). Set once at spawn.
+    pub replica: AtomicUsize,
     /// Submitted but not yet completed (queued + running).
     pub in_flight: AtomicUsize,
     /// Requests waiting in the scheduler.
@@ -269,6 +284,10 @@ pub struct RouterStats {
 /// Point-in-time view of [`RouterStats`].
 #[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
+    /// Fleet replica index this snapshot describes (0 for a bare engine;
+    /// fleet-aggregated snapshots keep 0 and list per-replica snapshots
+    /// alongside — see `coordinator::cluster`).
+    pub replica: usize,
     pub in_flight: usize,
     pub queue_depth: usize,
     pub active_rows: usize,
@@ -303,6 +322,7 @@ pub struct StatsSnapshot {
 impl StatsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("replica", Json::num(self.replica as f64)),
             ("in_flight", Json::num(self.in_flight as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("active_rows", Json::num(self.active_rows as f64)),
@@ -447,23 +467,37 @@ pub struct EngineHandle {
     max_queue: usize,
 }
 
+/// Serializes engine-thread *construction* across the process. PJRT client
+/// creation and artifact loading are the one stretch of an engine's life
+/// that is not obviously reentrant (the CPU plugin registers process-global
+/// state on first touch); with N replicas booting concurrently that stretch
+/// would race. Held only during boot — steady-state replicas share nothing.
+static BOOT_LOCK: Mutex<()> = Mutex::new(());
+
 impl EngineHandle {
     /// Spawn the engine thread. `artifacts` is the manifest root; engine
-    /// construction happens on the thread (the PJRT client is not `Send`).
+    /// construction happens on the thread (the PJRT client is not `Send`)
+    /// and is serialized process-wide by [`BOOT_LOCK`] so a replica fleet
+    /// can spawn its engines from a loop without racing PJRT init.
     pub fn spawn(artifacts: PathBuf, model: String, cfg: EngineConfig,
                  max_queue: usize) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let stats = Arc::new(RouterStats::default());
         let tstats = Arc::clone(&stats);
+        let thread_name = format!("quasar-engine-{}", cfg.replica);
         let join = std::thread::Builder::new()
-            .name("quasar-engine".into())
+            .name(thread_name)
             .spawn(move || -> Result<()> {
-                let rt = std::rc::Rc::new(crate::runtime::XlaRuntime::cpu()?);
-                let manifest = crate::runtime::Manifest::load(&artifacts)?;
-                let mr = std::rc::Rc::new(crate::runtime::ModelRuntime::load(
-                    rt, &manifest, &model,
-                )?);
-                let mut engine = Engine::new(mr, cfg)?;
+                let mut engine = {
+                    let _boot = BOOT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+                    let rt = std::rc::Rc::new(crate::runtime::XlaRuntime::cpu()?);
+                    let manifest = crate::runtime::Manifest::load(&artifacts)?;
+                    let mr = std::rc::Rc::new(crate::runtime::ModelRuntime::load(
+                        rt, &manifest, &model,
+                    )?);
+                    Engine::new(mr, cfg)?
+                };
+                tstats.replica.store(engine.cfg.replica, Ordering::Relaxed);
                 tstats.batch.store(engine.cfg.batch, Ordering::Relaxed);
                 tstats
                     .kv_paged_rows
@@ -578,6 +612,7 @@ impl EngineHandle {
     pub fn stats(&self) -> StatsSnapshot {
         let s = &self.stats;
         StatsSnapshot {
+            replica: s.replica.load(Ordering::Relaxed),
             in_flight: s.in_flight.load(Ordering::Relaxed),
             queue_depth: s.queue_depth.load(Ordering::Relaxed),
             active_rows: s.active_rows.load(Ordering::Relaxed),
@@ -972,6 +1007,7 @@ mod tests {
     #[test]
     fn stats_snapshot_serializes_every_field() {
         let s = StatsSnapshot {
+            replica: 2,
             in_flight: 3,
             queue_depth: 2,
             active_rows: 1,
@@ -1040,6 +1076,7 @@ mod tests {
             prompt_truncated: 2,
         };
         let j = s.to_json();
+        assert_eq!(j.get("replica").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("batch").unwrap().as_i64().unwrap(), 4);
         assert!((j.get("batch_occupancy").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);

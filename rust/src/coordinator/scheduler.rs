@@ -9,7 +9,7 @@
 //! scheduler is plain single-threaded state owned by the engine thread —
 //! cross-thread concurrency stays in the router layer.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::time::Instant;
 
 use super::request::Request;
@@ -59,13 +59,28 @@ pub struct Scheduler {
     /// Kept in arrival order; FIFO pops the front in O(1), the other
     /// policies scan for their minimum.
     queue: VecDeque<Queued>,
+    /// Ids currently queued. `contains` and the (common) miss side of
+    /// `cancel` are O(1) lookups instead of queue scans — at fleet queue
+    /// depths the dispatcher probes these on every cancel it routes.
+    ids: HashSet<u64>,
+    /// How many queued requests carry a deadline: `take_expired` runs every
+    /// engine step and can skip its scan entirely for the (typical)
+    /// deadline-free queue.
+    deadlines: usize,
     next_seq: u64,
     peak_depth: usize,
 }
 
 impl Scheduler {
     pub fn new(policy: SchedPolicy) -> Self {
-        Scheduler { policy, queue: VecDeque::new(), next_seq: 0, peak_depth: 0 }
+        Scheduler {
+            policy,
+            queue: VecDeque::new(),
+            ids: HashSet::new(),
+            deadlines: 0,
+            next_seq: 0,
+            peak_depth: 0,
+        }
     }
 
     pub fn policy(&self) -> SchedPolicy {
@@ -86,25 +101,49 @@ impl Scheduler {
     }
 
     pub fn push(&mut self, req: Request) {
+        self.ids.insert(req.id);
+        if req.deadline_at().is_some() {
+            self.deadlines += 1;
+        }
         self.queue.push_back(Queued { seq: self.next_seq, req });
         self.next_seq += 1;
         self.peak_depth = self.peak_depth.max(self.queue.len());
     }
 
+    /// Bookkeeping for a request leaving the queue by any path.
+    fn forget(&mut self, req: &Request) {
+        self.ids.remove(&req.id);
+        if req.deadline_at().is_some() {
+            self.deadlines -= 1;
+        }
+    }
+
     pub fn contains(&self, id: u64) -> bool {
-        self.queue.iter().any(|q| q.req.id == id)
+        self.ids.contains(&id)
     }
 
     /// Remove a queued request by id (cancellation before admission).
+    /// The miss side — every cancel probe for an id queued on some other
+    /// replica, or already admitted — is an O(1) index lookup; only a hit
+    /// pays the positional scan.
     pub fn cancel(&mut self, id: u64) -> Option<Request> {
+        if !self.ids.contains(&id) {
+            return None;
+        }
         let idx = self.queue.iter().position(|q| q.req.id == id)?;
-        Some(self.queue.remove(idx)?.req)
+        let req = self.queue.remove(idx)?.req;
+        self.forget(&req);
+        Some(req)
     }
 
     /// Drain every queued request whose deadline has passed; the engine
-    /// finishes them as `Cancelled` without spending a prefill.
+    /// finishes them as `Cancelled` without spending a prefill. O(1) when
+    /// nothing queued carries a deadline (the per-step common case).
     pub fn take_expired(&mut self, now: Instant) -> Vec<Request> {
         let mut expired = Vec::new();
+        if self.deadlines == 0 {
+            return expired;
+        }
         let mut i = 0;
         while i < self.queue.len() {
             let blown = self.queue[i]
@@ -112,7 +151,9 @@ impl Scheduler {
                 .deadline_at()
                 .is_some_and(|d| now >= d);
             if blown {
-                expired.push(self.queue.remove(i).expect("index in bounds").req);
+                let req = self.queue.remove(i).expect("index in bounds").req;
+                self.forget(&req);
+                expired.push(req);
             } else {
                 i += 1;
             }
@@ -124,7 +165,11 @@ impl Scheduler {
     pub fn pop(&mut self) -> Option<Request> {
         let idx = match self.policy {
             // `push_back` keeps arrival order, so FIFO is an O(1) pop.
-            SchedPolicy::Fifo => return self.queue.pop_front().map(|q| q.req),
+            SchedPolicy::Fifo => {
+                let q = self.queue.pop_front()?;
+                self.forget(&q.req);
+                return Some(q.req);
+            }
             SchedPolicy::ShortestPromptFirst => self
                 .queue
                 .iter()
@@ -138,7 +183,9 @@ impl Scheduler {
                 .min_by_key(|(_, q)| (q.req.params.priority, q.seq))
                 .map(|(i, _)| i)?,
         };
-        Some(self.queue.remove(idx)?.req)
+        let req = self.queue.remove(idx)?.req;
+        self.forget(&req);
+        Some(req)
     }
 }
 
@@ -219,6 +266,47 @@ mod tests {
         assert!(s.cancel(2).is_none());
         let order: Vec<u64> = std::iter::from_fn(|| s.pop().map(|r| r.id)).collect();
         assert_eq!(order, vec![1, 3]);
+    }
+
+    #[test]
+    fn cancel_under_load_keeps_the_index_consistent() {
+        // Fleet-depth queue: interleave pushes, pops, cancels and expiry
+        // and check the id index never drifts from the queue itself.
+        let mut s = Scheduler::new(SchedPolicy::Fifo);
+        for id in 0..1000u64 {
+            s.push(req(id, (id % 17) as usize + 1, Priority::Normal));
+        }
+        // Cancel every third id, including repeat cancels (misses).
+        for id in (0..1000u64).step_by(3) {
+            assert!(s.contains(id));
+            assert_eq!(s.cancel(id).map(|r| r.id), Some(id));
+            assert!(!s.contains(id));
+            assert!(s.cancel(id).is_none());
+        }
+        // Pop half of what is left; every popped id leaves the index.
+        for _ in 0..300 {
+            let id = s.pop().unwrap().id;
+            assert!(!s.contains(id));
+        }
+        // No deadlines queued: expiry is the O(1) fast path and drains
+        // nothing.
+        assert!(s.take_expired(Instant::now()).is_empty());
+        // Drain the remainder: depth, index and queue agree to the end.
+        while let Some(r) = s.pop() {
+            assert!(!s.contains(r.id));
+        }
+        assert!(s.is_empty());
+        assert_eq!(s.depth(), 0);
+
+        // Expired requests leave the deadline count too: a queue that
+        // drains its only deadline goes back to the fast path.
+        let params = GenParams { deadline: Some(Duration::ZERO), ..GenParams::default() };
+        s.push(Request::new(2000, vec![1, 2], params));
+        s.push(req(2001, 2, Priority::Normal));
+        assert_eq!(s.take_expired(Instant::now()).len(), 1);
+        assert!(!s.contains(2000));
+        assert!(s.contains(2001));
+        assert!(s.take_expired(Instant::now()).is_empty());
     }
 
     #[test]

@@ -75,15 +75,32 @@
 //! top-1" assumption online instead of trusting it. Audit rate, agreement,
 //! demotions and per-variant call counts surface through `{"cmd":"stats"}`.
 //!
-//! Threading model (serving path): pool workers in `server` share one
-//! `Sync` [`coordinator::EngineHandle`] with no outer lock; submissions
-//! queue in the admission scheduler (`coordinator::scheduler` — FIFO /
-//! shortest-prompt / priority policies, deadlines, cancellation) and the
-//! engine thread drains it into the continuous batcher, routing each
-//! completion back to its submitter's private reply channel by request id.
-//! Nothing ever blocks on another connection's generation, so concurrent
-//! connections genuinely share each batched verification pass — the
-//! memory-bandwidth lever the paper's quantized verifier optimizes.
+//! Threading model (serving path, two tiers): pool workers in `server`
+//! share one `Sync` [`coordinator::ClusterHandle`] with no outer lock. The
+//! top tier is a stateless-per-request dispatch plane
+//! (`coordinator::cluster`) over N engine replicas: each submit is keyed by
+//! its prefix *family* (page-aligned prompt-boundary hashes in a
+//! [`coordinator::LocalityIndex`] — a cheap probe, never a pool lock) and
+//! consistent-hashed onto the replica whose paged pool already holds its
+//! pages, with work-stealing spillover to the shallowest replica when the
+//! home queue crosses a threshold (stolen requests admit cold and are
+//! priced as cold admissions). The bottom tier is unchanged: each replica
+//! is a full single-threaded engine on its own thread — submissions queue
+//! in its admission scheduler (`coordinator::scheduler` — FIFO /
+//! shortest-prompt / priority policies, deadlines, cancellation, an id
+//! index for O(1) cancel probes) and the engine thread drains them into its
+//! continuous batcher, routing each completion back to the submitter's
+//! private reply channel by request id. Replica r of N mints request ids
+//! `r + 1, r + 1 + N, …`, so cancels route by `(id − 1) mod N` with no
+//! shared allocator, and replicas share nothing at steady state (engine
+//! construction is serialized behind a boot lock for the PJRT runtime).
+//! `--replicas 1` collapses the dispatcher to a pass-through that is
+//! bit-identical to a bare [`coordinator::EngineHandle`] — the A/B
+//! reference CI holds to equal output checksums. Nothing ever blocks on
+//! another connection's generation, so concurrent connections genuinely
+//! share each batched verification pass — the memory-bandwidth lever the
+//! paper's quantized verifier optimizes — while the fleet's `stats`
+//! aggregate per-replica occupancy, steal and locality-hit counters.
 //! * **L2** — the target LM as a JAX graph (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per (variant, fn, batch-bucket).
 //! * **L1** — the fused W8A8 verification GEMM as a Pallas kernel

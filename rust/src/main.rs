@@ -5,7 +5,8 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
-use quasar::coordinator::{DrafterKind, Engine, EngineConfig, EngineHandle, GenParams, SchedPolicy};
+use quasar::coordinator::{ClusterConfig, ClusterHandle, DispatchPolicy, DrafterKind, Engine,
+                          EngineConfig, GenParams, SchedPolicy};
 use quasar::runtime::{Manifest, ModelRuntime, XlaRuntime};
 use quasar::spec::NgramConfig;
 use quasar::tokenizer::Tokenizer;
@@ -55,6 +56,11 @@ fn real_main() -> Result<()> {
     .opt("chunked-prefill", Some("on"),
          "admission prefill in chunks riding spare decode slots: on | off (off = monolithic)")
     .flag("warmup", "serve: pre-populate the prefix cache from workload templates at boot")
+    .opt("replicas", Some("1"), "serve: engine replicas behind the dispatcher (1 = single engine)")
+    .opt("dispatch", Some("locality"),
+         "serve: replica dispatch policy: locality (prefix-hashing + work stealing) | random")
+    .opt("steal-threshold", Some("8"),
+         "serve: home-replica queue depth at which requests spill to the shallowest replica")
     .opt("port", Some("7878"), "serve: TCP port")
     .opt("prompt", None, "generate: prompt text")
     .opt("max-new", Some("64"), "generate: new-token budget")
@@ -113,6 +119,9 @@ fn real_main() -> Result<()> {
             "off" => false,
             other => bail!("unknown chunked-prefill mode '{other}' (on|off)"),
         },
+        // The cluster stamps per-replica identity when it clones this config.
+        replica: 0,
+        replicas: 1,
     };
 
     match cmd.as_str() {
@@ -162,10 +171,21 @@ fn real_main() -> Result<()> {
             let tok = Tokenizer::load(&manifest.tokenizer_path)?;
             let port = parsed.usize("port");
             let warmup = parsed.has("warmup") && cfg.prefix.enabled;
-            let handle = EngineHandle::spawn(artifacts, model.clone(), cfg, 256)?;
+            let dispatch = parsed.str("dispatch");
+            let ccfg = ClusterConfig {
+                replicas: parsed.usize("replicas").max(1),
+                dispatch: DispatchPolicy::parse(&dispatch)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown dispatch policy '{dispatch}' (locality|random)"))?,
+                steal_threshold: parsed.usize("steal-threshold").max(1),
+                ..ClusterConfig::default()
+            };
+            let n = ccfg.replicas;
+            let handle = ClusterHandle::spawn(artifacts, model.clone(), cfg, ccfg, 256)?;
             if warmup {
                 // Boot warm-up: cache the workload's per-family templates
-                // before accepting the first client.
+                // before accepting the first client. The cluster fans each
+                // template to its home replica only.
                 let ws = quasar::workload::WorkloadSet::load(&manifest.workloads_path)?;
                 let plen = manifest.model(&model)?.cfg.prefill_len / 2;
                 let templates: Vec<(Vec<i32>, String)> = ws
@@ -177,7 +197,7 @@ fn real_main() -> Result<()> {
                 eprintln!("[quasar] warm-up cached {cached} prefix templates");
             }
             let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))?;
-            eprintln!("[quasar] serving {model} on 127.0.0.1:{port}");
+            eprintln!("[quasar] serving {model} on 127.0.0.1:{port} ({n} replica(s))");
             let served = quasar::server::serve(listener, handle, tok, 8)?;
             eprintln!("[quasar] shut down after {served} requests");
             Ok(())

@@ -143,6 +143,11 @@ pub mod names {
     /// chunk avoided — the chunk's own priced call time, saved because it
     /// filled an already-paid spare slot instead of preempting decode.
     pub const PREFILL_STALL_SAVED_S: &str = "prefill_stall_saved_s";
+    /// Counter: dedicated prefill chunks shrunk below the exported prefill
+    /// window because the admission queue was deep (load-adaptive chunk
+    /// sizing — the chunk reroutes through the single-row verify program,
+    /// trading ingest throughput for a tighter per-step time bound).
+    pub const PREFILL_SHED_CHUNKS: &str = "prefill_shed_chunks";
 
     /// Histogram: TTFT of requests whose admission hit the prefix cache.
     pub const TTFT_WARM_S: &str = "ttft_warm_s";

@@ -27,16 +27,32 @@
 //!                                     "resident_pages": ..,
 //!                                     "page_share_ratio": ..,
 //!                                     "segments": .., "evictions": ..},
-//!                                     "prompt_truncated": .., ...}
+//!                                     "prompt_truncated": ..,
+//!                                     "replicas": [per-replica stats, ..],
+//!                                     "dispatch": {"policy": ..,
+//!                                     "steal_threshold": .., "steals": ..,
+//!                                     "locality_hits": ..,
+//!                                     "locality_misses": ..,
+//!                                     "locality_hit_rate": ..,
+//!                                     "dispatched": [..]}, ...}
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
-//! Threading model: each connection is handled by a pool worker, and workers
-//! share one [`EngineHandle`] directly — the handle is `Sync`, so there is
-//! no lock anywhere on the request path. A worker submits its request, gets
-//! a private [`Ticket`], and blocks only on *its own* completion while the
-//! engine's continuous batcher multiplexes every connection's request
-//! through one batched verification pass per step. Timeouts cancel the
-//! request (freeing its KV row) instead of abandoning it.
+//! Threading model (two-tier): each connection is handled by a pool worker,
+//! and workers share one [`ServeHandle`] directly — a bare
+//! [`EngineHandle`] or (the serving default) a [`ClusterHandle`] fleet,
+//! both `Sync`, so the request path takes no lock beyond the dispatcher's
+//! brief locality-index probe. The cluster routes the request to one of its N
+//! engine replicas (consistent-hash by prefix family, work-stealing
+//! spillover under load; N = 1 collapses to exactly the old
+//! single-`EngineHandle` behavior). The worker gets a private [`Ticket`]
+//! from the chosen replica and blocks only on *its own* completion while
+//! that replica's continuous batcher multiplexes every request dispatched
+//! to it through one batched verification pass per step. Completions never
+//! pass back through the dispatcher; cancels route by the id-stride rule to
+//! the replica that minted the id. Timeouts cancel the request (freeing its
+//! KV row) instead of abandoning it. The `stats` command reports the fleet
+//! aggregate flat at the top level (same keys as a bare engine) plus
+//! per-replica breakdown and dispatch counters.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -46,17 +62,73 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{Completion, EngineHandle, FinishReason, GenParams, Priority};
+use crate::coordinator::{ClusterHandle, Completion, EngineHandle, FinishReason, GenParams,
+                         Priority, Ticket};
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID};
 use crate::util::json::{parse, Json};
 
 /// How long a connection waits for its own completion before cancelling.
 const REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
 
+/// The server's engine-facing handle: one bare engine or a replica fleet.
+/// Both are `Sync` with the same submit/cancel surface; the bare variant
+/// keeps the dispatch plane entirely out of the A/B control path (the
+/// `--replicas 0` leg of the differential smoke), where a 1-replica
+/// cluster is the dispatcher's own degenerate case.
+pub enum ServeHandle {
+    Engine(EngineHandle),
+    Cluster(ClusterHandle),
+}
+
+impl From<EngineHandle> for ServeHandle {
+    fn from(h: EngineHandle) -> Self {
+        ServeHandle::Engine(h)
+    }
+}
+
+impl From<ClusterHandle> for ServeHandle {
+    fn from(h: ClusterHandle) -> Self {
+        ServeHandle::Cluster(h)
+    }
+}
+
+impl ServeHandle {
+    pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<Ticket> {
+        match self {
+            ServeHandle::Engine(h) => h.submit(prompt, params, task),
+            ServeHandle::Cluster(h) => h.submit(prompt, params, task),
+        }
+    }
+
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        match self {
+            ServeHandle::Engine(h) => h.cancel(id),
+            ServeHandle::Cluster(h) => h.cancel(id),
+        }
+    }
+
+    pub fn warm_prefix(&self, templates: Vec<(Vec<i32>, String)>) -> Result<usize> {
+        match self {
+            ServeHandle::Engine(h) => h.warm_prefix(templates),
+            ServeHandle::Cluster(h) => h.warm_prefix(templates),
+        }
+    }
+
+    /// `{"cmd":"stats"}` payload: flat engine keys for a bare engine, the
+    /// same flat keys plus `replicas` + `dispatch` for a fleet.
+    pub fn stats_json(&self) -> Json {
+        match self {
+            ServeHandle::Engine(h) => h.stats().to_json(),
+            ServeHandle::Cluster(h) => h.cluster_stats().to_json(),
+        }
+    }
+}
+
 /// Serve until a `shutdown` command arrives. Returns the number of requests
 /// served.
-pub fn serve(listener: TcpListener, handle: EngineHandle, tok: Tokenizer,
+pub fn serve(listener: TcpListener, handle: impl Into<ServeHandle>, tok: Tokenizer,
              n_conn_threads: usize) -> Result<u64> {
+    let handle = handle.into();
     anyhow::ensure!(
         tok.matches_contract(),
         "tokenizer violates the special-token contract \
@@ -94,7 +166,7 @@ pub fn serve(listener: TcpListener, handle: EngineHandle, tok: Tokenizer,
     Ok(served.load(Ordering::SeqCst))
 }
 
-fn handle_conn(stream: TcpStream, handle: &EngineHandle, tok: &Tokenizer,
+fn handle_conn(stream: TcpStream, handle: &ServeHandle, tok: &Tokenizer,
                stop: &AtomicBool, served: &std::sync::atomic::AtomicU64) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -118,13 +190,13 @@ fn handle_conn(stream: TcpStream, handle: &EngineHandle, tok: &Tokenizer,
     Ok(())
 }
 
-fn handle_line(line: &str, handle: &EngineHandle, tok: &Tokenizer,
+fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
                stop: &AtomicBool) -> Result<Json> {
     let req = parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = req.opt("cmd") {
         match cmd.as_str()? {
             "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
-            "stats" => return Ok(handle.stats().to_json()),
+            "stats" => return Ok(handle.stats_json()),
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
                 return Ok(Json::obj(vec![("ok", Json::Bool(true))]));

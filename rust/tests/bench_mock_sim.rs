@@ -11,10 +11,11 @@ mod common;
 use std::path::PathBuf;
 
 use quasar::bench::BenchReport;
-use quasar::coordinator::CallLog;
+use quasar::coordinator::{pack_prefill_riders, plan_step, CallLog, FnKind, PlanCtx, PlanRow,
+                          PrefillPending, VariantCtx};
 use quasar::util::json;
 
-use common::sim::{check_equivalent, run_equivalence, SIM_CHUNK};
+use common::sim::{check_equivalent, run_equivalence, sim_perf, SIM_CHUNK, SIM_L};
 
 /// Useful positions over executed positions, the engine's chunk-efficiency
 /// definition applied to the sim's call log.
@@ -76,4 +77,61 @@ fn bench_mock_sim_emits_json() {
     assert!(v.get("tokens").unwrap().as_f64().unwrap() > 0.0);
     assert!(v.get("chunk_efficiency_elastic").unwrap().as_f64().unwrap() > 0.0);
     println!("bench_json={}", path.display());
+}
+
+/// The load-adaptive prefill-chunk satellite, priced on the sim's cost
+/// model: under a deep queue a dedicated prefill chunk sheds to the
+/// (smaller) exported verify program, so the modeled time of a step that
+/// carries one — the stall every co-running decode row waits out — is
+/// strictly smaller. That worst-case single-step stall bounds decode TPOT
+/// jitter, so shedding smooths TPOT while the admission backlog drains.
+#[test]
+fn shed_load_caps_the_dedicated_prefill_stall() {
+    let perf = sim_perf(0);
+    let buckets = [1usize, 2, 4];
+    let variants = [VariantCtx {
+        name: "fp32",
+        verify_buckets: &buckets,
+        decode_buckets: &buckets,
+    }];
+    let ctx = PlanCtx {
+        perf: &perf,
+        variants: &variants,
+        n_layers: SIM_L,
+        full_bucket: 4,
+        verify_chunk: SIM_CHUNK,
+        elastic: true,
+    };
+    // Exported admission window, well above the verify chunk.
+    let prefill_chunk = 16usize;
+    // Four decode-only rows fill the bucket exactly: no spare slot to ride,
+    // so the pending admission must fall back to a dedicated chunk.
+    let rows: Vec<PlanRow> = (0..4).map(|_| PlanRow::new(0, 0)).collect();
+    let pending = [PrefillPending { remaining: 64, variant: 0 }];
+
+    let step = |shed: bool| {
+        let mut plan = plan_step(&ctx, &rows).expect("plan");
+        pack_prefill_riders(&ctx, &mut plan, &pending, prefill_chunk, shed);
+        let dedicated: Vec<_> = plan
+            .sub_batches
+            .iter()
+            .filter(|sb| sb.rows.is_empty() && !sb.riders.is_empty())
+            .collect();
+        assert_eq!(dedicated.len(), 1, "one pending row, one dedicated chunk");
+        (plan.modeled_s, dedicated[0].fn_kind, dedicated[0].chunk,
+         dedicated[0].riders[0].take)
+    };
+
+    let (calm_s, calm_kind, calm_chunk, calm_take) = step(false);
+    let (shed_s, shed_kind, shed_chunk, shed_take) = step(true);
+    assert_eq!(calm_kind, FnKind::Prefill);
+    assert_eq!((calm_chunk, calm_take), (prefill_chunk, prefill_chunk));
+    assert_eq!(shed_kind, FnKind::Verify);
+    assert_eq!((shed_chunk, shed_take), (SIM_CHUNK, SIM_CHUNK));
+    assert!(
+        shed_s < calm_s,
+        "shed step must stall decode less: shed {shed_s} vs calm {calm_s}"
+    );
+    println!("calm_stall_s={calm_s:.9}");
+    println!("shed_stall_s={shed_s:.9}");
 }

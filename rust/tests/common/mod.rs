@@ -200,6 +200,8 @@ impl TestRig {
             prefix: self.prefix.clone(),
             paged_rows: self.paged_rows,
             chunked_prefill: self.chunked_prefill,
+            replica: 0,
+            replicas: 1,
         }
     }
 

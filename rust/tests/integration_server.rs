@@ -13,7 +13,7 @@ mod common;
 use std::net::SocketAddr;
 
 use common::artifacts_root;
-use quasar::coordinator::{EngineConfig, EngineHandle};
+use quasar::coordinator::{ClusterConfig, ClusterHandle, EngineConfig};
 use quasar::server::Client;
 use quasar::tokenizer::Tokenizer;
 use quasar::util::json::Json;
@@ -34,7 +34,13 @@ fn server_inner() {
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     // Batch bucket 4 so the continuous batcher can multiplex connections.
-    let handle = EngineHandle::spawn(root, model, EngineConfig::quasar(4, 4), 64).unwrap();
+    // Served through a 1-replica cluster: the dispatcher's degenerate case
+    // must preserve every bare-engine behavior this test asserts
+    // (determinism, correlated delivery, cancellation, stats counters).
+    let handle = ClusterHandle::spawn(
+        root, model, EngineConfig::quasar(4, 4), ClusterConfig::default(), 64,
+    )
+    .unwrap();
     let server = std::thread::spawn(move || {
         quasar::server::serve(listener, handle, tok, CLIENTS + 4).unwrap()
     });
@@ -116,6 +122,15 @@ fn round_trip_phase(addr: SocketAddr) {
     assert_eq!(stats.get("batch").unwrap().as_i64().unwrap(), 4);
     assert!(stats.get("queue_depth").unwrap().as_i64().unwrap() >= 0);
     assert!(stats.get("batch_occupancy").unwrap().as_f64().unwrap() >= 0.0);
+    // Fleet serving: the flat keys above stay bare-engine-shaped while the
+    // per-replica breakdown and dispatch counters ride alongside.
+    let reps = stats.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 1, "{stats}");
+    assert_eq!(reps[0].get("replica").unwrap().as_i64().unwrap(), 0);
+    let dispatch = stats.get("dispatch").unwrap();
+    assert_eq!(dispatch.get("policy").unwrap().as_str().unwrap(), "locality");
+    assert_eq!(dispatch.get("steals").unwrap().as_i64().unwrap(), 0,
+               "a 1-replica fleet can never steal: {stats}");
 }
 
 /// The acceptance test for the concurrent scheduler: >= 8 connections in

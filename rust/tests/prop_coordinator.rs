@@ -7,8 +7,9 @@ mod common;
 use common::sim::{check_equivalent, mock_chunk, run_equivalence, sim_perf, Sim, SIM_CHUNK,
                   SIM_H, SIM_HD, SIM_L, SIM_S, SIM_VOCAB};
 use quasar::coordinator::{
-    BatchGroup, FnKind, GenParams, Governor, GovernorConfig, Lease, PagedGroup, PrefixCache,
-    PrefixCacheConfig, Priority, Request, Route, SchedPolicy, Scheduler, Transition,
+    build_ring, dispatch_decision, replica_of_id, ring_assign, BatchGroup, FnKind, GenParams,
+    Governor, GovernorConfig, Lease, PagedGroup, PrefixCache, PrefixCacheConfig, Priority,
+    Request, Route, SchedPolicy, Scheduler, Transition,
 };
 use quasar::prop_assert;
 use quasar::runtime::Tensor;
@@ -1349,4 +1350,144 @@ fn chunked_prefill_matches_monolithic_under_random_interleavings() {
             ok()
         },
     );
+}
+
+#[test]
+fn cluster_ring_add_moves_about_one_nth_of_keys() {
+    // Consistent-hash stability: growing the fleet from n to n+1 replicas
+    // may only move keys *onto* the new replica (vnode positions of the
+    // surviving replicas are identical in both rings), and the moved share
+    // concentrates around 1/(n+1). Removal is the mirror image — the same
+    // moved set returns home — so one direction bounds both.
+    prop_check(
+        "consistent-hash ring stability under replica add/remove",
+        150,
+        |rng| {
+            let n = 2 + rng.usize_below(7); // fleet size before the add
+            let keys: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+            (n as u64, keys)
+        },
+        |(n, keys)| {
+            let n = (*n as usize).clamp(2, 16);
+            let before = build_ring(n, 64);
+            let after = build_ring(n + 1, 64);
+            let mut moved = 0usize;
+            for &k in keys {
+                let a = ring_assign(&before, k);
+                let b = ring_assign(&after, k);
+                if a != b {
+                    prop_assert!(
+                        b == n,
+                        "key moved between surviving replicas: {a} -> {b} (new replica {n})"
+                    );
+                    moved += 1;
+                }
+            }
+            // 64 vnodes keep the new replica's realized share concentrated
+            // around the 1/(n+1) mean; 2.5x mean plus slack is a
+            // conservative ceiling that still fails a broken ring (which
+            // reshuffles ~half the space).
+            let cap = keys.len() as f64 * 2.5 / (n + 1) as f64 + 8.0;
+            prop_assert!(
+                (moved as f64) < cap,
+                "add moved {moved}/{} keys for n={n} (cap {cap:.1})",
+                keys.len()
+            );
+            ok()
+        },
+    )
+}
+
+#[test]
+fn cluster_steal_decision_is_bounded_and_deterministic() {
+    // The pure steal rule: never below the home threshold, never onto a
+    // replica at least as deep as home, always the shallowest target.
+    prop_check(
+        "work-steal decision bounds",
+        400,
+        |rng| {
+            let nd = 1 + rng.usize_below(8);
+            let depths: Vec<u64> = (0..nd).map(|_| rng.below(16)).collect();
+            let home = rng.usize_below(nd) as u64;
+            let threshold = 1 + rng.below(8);
+            (home, depths, threshold)
+        },
+        |(home, depths, threshold)| {
+            let home = *home as usize;
+            let t = (*threshold as usize).max(1);
+            let depths: Vec<usize> = depths.iter().map(|&d| d as usize).collect();
+            if depths.is_empty() || home >= depths.len() {
+                return ok(); // shrunk out of the generator's invariant
+            }
+            let (target, stolen) = dispatch_decision(home, &depths, t);
+            prop_assert!(
+                (target, stolen) == dispatch_decision(home, &depths, t),
+                "decision must be deterministic"
+            );
+            prop_assert!(target < depths.len(), "target out of range");
+            if depths[home] < t {
+                prop_assert!(
+                    target == home && !stolen,
+                    "stole below the threshold (home depth {} < {t})",
+                    depths[home]
+                );
+            }
+            if stolen {
+                prop_assert!(target != home, "a steal must leave home");
+                prop_assert!(depths[home] >= t, "steal below threshold");
+                prop_assert!(
+                    depths[target] < depths[home],
+                    "stole onto a no-shallower replica ({} >= {})",
+                    depths[target],
+                    depths[home]
+                );
+                prop_assert!(
+                    depths.iter().all(|&d| d >= depths[target]),
+                    "steal must take the shallowest replica"
+                );
+            } else {
+                prop_assert!(target == home, "an unstolen request must stay home");
+            }
+            ok()
+        },
+    )
+}
+
+#[test]
+fn cluster_id_stride_routes_cancels_home_and_one_replica_degenerates() {
+    // Replica r of n mints ids r+1, r+1+n, ... (EngineConfig id striding):
+    // cancel routing must recover the minting replica for every id, and the
+    // 1-replica fleet must behave exactly like a bare engine — ids 1,2,3..
+    // all route to replica 0 and no depth can trigger a steal.
+    prop_check(
+        "id-stride cancel routing and the bare-engine degenerate",
+        300,
+        |rng| {
+            let n = 1 + rng.usize_below(8);
+            let mints = 1 + rng.usize_below(64);
+            (n as u64, mints as u64)
+        },
+        |(n, mints)| {
+            let n = (*n as usize).max(1);
+            for r in 0..n {
+                let mut id = (r + 1) as u64;
+                for _ in 0..*mints {
+                    prop_assert!(
+                        replica_of_id(id, n) == r,
+                        "id {id} routed to {} not its minting replica {r}/{n}",
+                        replica_of_id(id, n)
+                    );
+                    id += n as u64;
+                }
+            }
+            for id in 1..=1 + *mints {
+                prop_assert!(replica_of_id(id, 1) == 0, "bare ids must route to 0");
+            }
+            prop_assert!(
+                dispatch_decision(0, &[*mints as usize], 1) == (0, false),
+                "a 1-replica fleet can never steal"
+            );
+            ok()
+        },
+    )
 }
