@@ -65,6 +65,17 @@ struct ClientTally {
     ttft: Histogram,
     /// Per-request time-per-output-token: `(latency - ttft) / (tokens - 1)`.
     tpot: Histogram,
+    /// Per-stage latency attribution from the server's opt-in breakdown
+    /// (the six stages partition each response's latency_s).
+    stage_queue: Histogram,
+    stage_dispatch: Histogram,
+    stage_splice: Histogram,
+    stage_prefill: Histogram,
+    stage_decode: Histogram,
+    stage_emit: Histogram,
+    /// Worst relative error of sum(stages) vs latency_s over this client's
+    /// requests — CI gates it under 5%.
+    stage_err_max: f64,
     tokens: u64,
     l_sum: f64,
     done: usize,
@@ -100,6 +111,11 @@ fn run() -> anyhow::Result<()> {
                                             spill to the shallowest replica")
         .opt("bench-json", None, "directory to write a machine-readable \
                                   BENCH_<method>.json artifact into")
+        .flag("trace", "arm the flight recorder (per-request span events; see crate::trace)")
+        .opt("trace-out", None, "directory to write the Chrome trace-event artifact \
+                                 TRACE_<scenario>.json into (implies --trace)")
+        .opt("slow-log-ms", None, "log a structured [slow] exemplar line for requests over \
+                                   this latency (rate-limited to 1/s)")
         .parse_env();
     let n = args.usize("n");
     let clients = args.usize("clients").max(1);
@@ -120,6 +136,12 @@ fn run() -> anyhow::Result<()> {
     let dispatch = args.str("dispatch");
     let steal_threshold = args.usize("steal-threshold").max(1);
     let bench_json = args.get("bench-json").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let trace_on = args.has("trace") || trace_out.is_some();
+    let slow_log_ms: Option<f64> = args
+        .get("slow-log-ms")
+        .map(|s| s.parse::<f64>())
+        .transpose()?;
 
     // xla_extension tolerates exactly one PJRT client per process, so the
     // two-method comparison re-execs this binary once per method.
@@ -163,6 +185,17 @@ fn run() -> anyhow::Result<()> {
             if let Some(dir) = &bench_json {
                 argv.push("--bench-json".into());
                 argv.push(dir.display().to_string());
+            }
+            if trace_on {
+                argv.push("--trace".into());
+            }
+            if let Some(dir) = &trace_out {
+                argv.push("--trace-out".into());
+                argv.push(dir.display().to_string());
+            }
+            if let Some(ms) = slow_log_ms {
+                argv.push("--slow-log-ms".into());
+                argv.push(ms.to_string());
             }
             let status = std::process::Command::new(&exe).args(&argv).status()?;
             anyhow::ensure!(status.success(), "{m} run failed");
@@ -208,6 +241,7 @@ fn run() -> anyhow::Result<()> {
     cfg.prefix.page_tokens = page_tokens;
     cfg.paged_rows = !no_paged_rows;
     cfg.chunked_prefill = !no_chunked_prefill;
+    cfg.trace = trace_on;
     let policy = DispatchPolicy::parse(&dispatch)
         .ok_or_else(|| anyhow::anyhow!("unknown --dispatch {dispatch} (locality|random)"))?;
     let max_queue = 4 * (n * turns).max(1);
@@ -254,11 +288,16 @@ fn run() -> anyhow::Result<()> {
     // request from the shared work list when its previous one completes,
     // keeping the scheduler fed so the batch can fill.
     let next = Arc::new(AtomicUsize::new(0));
+    // Slow-request exemplar gate shared by every client: at most one
+    // structured [slow] line per second across the whole run.
+    let slow_gate: Arc<std::sync::Mutex<Option<Instant>>> =
+        Arc::new(std::sync::Mutex::new(None));
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for _ in 0..clients {
         let next = Arc::clone(&next);
         let prompts = Arc::clone(&prompts);
+        let slow_gate = Arc::clone(&slow_gate);
         let addr = addr.to_string();
         joins.push(std::thread::spawn(move || -> anyhow::Result<ClientTally> {
             let mut client = Client::connect(&addr)?;
@@ -284,12 +323,61 @@ fn run() -> anyhow::Result<()> {
                         ("max_new", Json::num(max_new as f64)),
                         ("temp", Json::num(temp)),
                         ("task", Json::str(task.clone())),
+                        ("stages", Json::Bool(true)),
                     ]))?;
                     let roundtrip_s = sent.elapsed().as_secs_f64();
                     anyhow::ensure!(resp.opt("error").is_none(), "server error: {resp}");
                     let lat_s = resp.get("latency_s")?.as_f64()?;
                     let ttft_s = resp.get("ttft_s")?.as_f64()?;
                     tally.lat.record(lat_s);
+                    // Per-stage attribution: the six stages must partition
+                    // the reported latency (CI gates the worst rel. error).
+                    let st = resp.get("stages")?;
+                    let queue_s = st.get("queue_s")?.as_f64()?;
+                    let dispatch_s = st.get("dispatch_s")?.as_f64()?;
+                    let splice_s = st.get("splice_s")?.as_f64()?;
+                    let prefill_s = st.get("prefill_s")?.as_f64()?;
+                    let decode_s = st.get("decode_s")?.as_f64()?;
+                    let emit_s = st.get("emit_s")?.as_f64()?;
+                    tally.stage_queue.record(queue_s);
+                    tally.stage_dispatch.record(dispatch_s);
+                    tally.stage_splice.record(splice_s);
+                    tally.stage_prefill.record(prefill_s);
+                    tally.stage_decode.record(decode_s);
+                    tally.stage_emit.record(emit_s);
+                    let stage_sum =
+                        queue_s + dispatch_s + splice_s + prefill_s + decode_s + emit_s;
+                    if lat_s > 1e-9 {
+                        tally.stage_err_max =
+                            tally.stage_err_max.max((stage_sum - lat_s).abs() / lat_s);
+                    }
+                    if let Some(thresh_ms) = slow_log_ms {
+                        if lat_s * 1e3 >= thresh_ms {
+                            let now = Instant::now();
+                            let mut gate = slow_gate.lock().unwrap();
+                            let open = gate
+                                .map_or(true, |t| now.duration_since(t).as_secs_f64() >= 1.0);
+                            if open {
+                                *gate = Some(now);
+                                eprintln!(
+                                    "[slow] ticket={} task={} lat_ms={:.1} queue_ms={:.1} \
+                                     dispatch_ms={:.1} splice_ms={:.1} prefill_ms={:.1} \
+                                     decode_ms={:.1} emit_ms={:.1} replica={} stolen={}",
+                                    resp.get("id")?.as_i64()?,
+                                    task,
+                                    lat_s * 1e3,
+                                    queue_s * 1e3,
+                                    dispatch_s * 1e3,
+                                    splice_s * 1e3,
+                                    prefill_s * 1e3,
+                                    decode_s * 1e3,
+                                    emit_s * 1e3,
+                                    resp.get("replica")?.as_i64()?,
+                                    resp.get("stolen")?.as_bool()?,
+                                );
+                            }
+                        }
+                    }
                     // TTFT from the client's own submit instant: the server
                     // value starts at the engine's `submitted_at` and so
                     // misses transport + dispatch before the request reaches
@@ -324,6 +412,13 @@ fn run() -> anyhow::Result<()> {
         total.lat.merge(&t.lat);
         total.ttft.merge(&t.ttft);
         total.tpot.merge(&t.tpot);
+        total.stage_queue.merge(&t.stage_queue);
+        total.stage_dispatch.merge(&t.stage_dispatch);
+        total.stage_splice.merge(&t.stage_splice);
+        total.stage_prefill.merge(&t.stage_prefill);
+        total.stage_decode.merge(&t.stage_decode);
+        total.stage_emit.merge(&t.stage_emit);
+        total.stage_err_max = total.stage_err_max.max(t.stage_err_max);
         total.tokens += t.tokens;
         total.l_sum += t.l_sum;
         total.done += t.done;
@@ -335,8 +430,27 @@ fn run() -> anyhow::Result<()> {
         "completed {}/{} requests", total.done, n * turns
     );
 
+    let scenario = format!(
+        "{method}{}{}{}",
+        if no_paged_rows { "_copyrows" } else { "" },
+        if no_chunked_prefill { "_monoprefill" } else { "" },
+        match replicas {
+            1 => String::new(),
+            0 => "_bare".into(),
+            r => format!("_r{r}"),
+        }
+    );
     let mut ctl = Client::connect(&addr.to_string())?;
     let stats = ctl.stats()?;
+    // Drain the flight recorder through the wire protocol and persist the
+    // Chrome trace-event artifact before the server shuts down.
+    if let Some(dir) = &trace_out {
+        let trace = ctl.roundtrip(&Json::obj(vec![("cmd", Json::str("trace"))]))?;
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("TRACE_{scenario}.json"));
+        std::fs::write(&path, format!("{trace}\n"))?;
+        println!("trace_json={}", path.display());
+    }
     ctl.shutdown()?;
     server.join().expect("server thread panicked")?;
 
@@ -434,6 +548,16 @@ fn run() -> anyhow::Result<()> {
     println!("  request latency     {}", total.lat.summary_ms());
     println!("  ttft                {}", total.ttft.summary_ms());
     println!("  tpot                {}", total.tpot.summary_ms());
+    // Per-request stage attribution (from the opt-in "stages" wire field):
+    // the six stages partition each request's observed latency, so their
+    // sums must track latency_s to within float noise plus clock skew.
+    println!("  stage queue         {}", total.stage_queue.summary_ms());
+    println!("  stage dispatch      {}", total.stage_dispatch.summary_ms());
+    println!("  stage splice        {}", total.stage_splice.summary_ms());
+    println!("  stage prefill       {}", total.stage_prefill.summary_ms());
+    println!("  stage decode        {}", total.stage_decode.summary_ms());
+    println!("  stage emit          {}", total.stage_emit.summary_ms());
+    println!("  stage sum error     {:.4}% (worst request)", total.stage_err_max * 100.0);
     // Machine-readable lines for the CI warm-vs-cold and paged-vs-copy
     // smokes: identical checksums across cache-on/cache-off (and paged/copy)
     // runs prove bit-identity; a non-zero hit rate proves the warm run
@@ -471,6 +595,9 @@ fn run() -> anyhow::Result<()> {
     println!("ttft_p50_s={:.6}", total.ttft.p50());
     println!("ttft_p99_s={:.6}", total.ttft.p99());
     println!("tpot_p99_s={:.6}", total.tpot.p99());
+    // Stage-attribution gate: the CI trace smoke requires the six per-stage
+    // durations to reconstruct each request's latency within 5%.
+    println!("stage_sum_max_rel_err={:.6}", total.stage_err_max);
     // Multi-replica A/B gates: equal checksums across --replicas 0 (bare
     // engine), 1 and N prove the dispatch plane never changes outputs; the
     // locality leg's warm hit rate must beat the --dispatch random control
@@ -491,16 +618,6 @@ fn run() -> anyhow::Result<()> {
     }
 
     if let Some(dir) = &bench_json {
-        let scenario = format!(
-            "{method}{}{}{}",
-            if no_paged_rows { "_copyrows" } else { "" },
-            if no_chunked_prefill { "_monoprefill" } else { "" },
-            match replicas {
-                1 => String::new(),
-                0 => "_bare".into(),
-                r => format!("_r{r}"),
-            }
-        );
         let mut r = BenchReport::new(&scenario);
         r.text("method", &method)
             .flag("paged_rows", paged)
@@ -521,6 +638,19 @@ fn run() -> anyhow::Result<()> {
             .num("tpot_p50_s", total.tpot.p50())
             .num("tpot_p95_s", total.tpot.p95())
             .num("tpot_p99_s", total.tpot.p99())
+            .num("stage_queue_p50_s", total.stage_queue.p50())
+            .num("stage_queue_p99_s", total.stage_queue.p99())
+            .num("stage_dispatch_p50_s", total.stage_dispatch.p50())
+            .num("stage_dispatch_p99_s", total.stage_dispatch.p99())
+            .num("stage_splice_p50_s", total.stage_splice.p50())
+            .num("stage_splice_p99_s", total.stage_splice.p99())
+            .num("stage_prefill_p50_s", total.stage_prefill.p50())
+            .num("stage_prefill_p99_s", total.stage_prefill.p99())
+            .num("stage_decode_p50_s", total.stage_decode.p50())
+            .num("stage_decode_p99_s", total.stage_decode.p99())
+            .num("stage_emit_p50_s", total.stage_emit.p50())
+            .num("stage_emit_p99_s", total.stage_emit.p99())
+            .num("stage_sum_max_rel_err", total.stage_err_max)
             .num("chunk_efficiency", stats.get("chunk_efficiency")?.as_f64()?)
             .num("batch_occupancy", stats.get("batch_occupancy")?.as_f64()?)
             .num("prefix_hit_rate", hit_rate)

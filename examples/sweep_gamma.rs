@@ -58,6 +58,7 @@ fn run() -> anyhow::Result<()> {
             chunked_prefill: true,
             replica: 0,
             replicas: 1,
+            trace: false,
         };
         let ng = run_method(&mr, &perf, mk("fp32"), &items, 0.0, 48)?;
         let qs = run_method(&mr, &perf, mk("w8a8"), &items, 0.0, 48)?;

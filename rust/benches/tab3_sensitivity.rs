@@ -30,6 +30,7 @@ fn cfg_for(verifier: &str, k: (usize, usize), gamma: usize) -> EngineConfig {
         chunked_prefill: true,
         replica: 0,
         replicas: 1,
+        trace: false,
     }
 }
 

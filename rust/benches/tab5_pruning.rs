@@ -44,6 +44,7 @@ fn run() -> anyhow::Result<()> {
             chunked_prefill: true,
             replica: 0,
             replicas: 1,
+            trace: false,
         };
         let res = run_method(&mr, &perf, cfg, &items, 0.0, max_new)?;
         table.row(vec![

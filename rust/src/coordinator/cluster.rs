@@ -48,12 +48,16 @@
 //! index behind a mutex taken for a few hash probes per submit — never
 //! across generation, never by engine threads.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::metrics::MetricsDump;
+use crate::trace::{EventKind, FlightRecorder, TraceHandle};
+use crate::util::hist::Histogram;
 use crate::util::json::Json;
 
 use super::engine::EngineConfig;
@@ -200,6 +204,17 @@ pub fn replica_of_id(id: u64, replicas: usize) -> usize {
 // The fleet handle
 // ---------------------------------------------------------------------------
 
+/// Where one submission actually landed: the replica the dispatcher chose
+/// and whether the steal rule moved it off its locality home. Returned by
+/// [`ClusterHandle::submit_dispatch`] so callers (the server's per-request
+/// echo, slow-request logging) can attribute a request to its replica
+/// without parsing the id stride.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchInfo {
+    pub replica: usize,
+    pub stolen: bool,
+}
+
 /// Dispatch-plane counters, point-in-time. Part of [`ClusterSnapshot`].
 #[derive(Debug, Clone, Default)]
 pub struct DispatchSnapshot {
@@ -280,11 +295,15 @@ impl ClusterSnapshot {
 /// Fold per-replica snapshots into one fleet view. Counters sum; rates and
 /// means recombine under the weight that produced them (steps for
 /// occupancy-style means, completions for scheduling delay, summed
-/// hits/misses for hit rates); latency percentiles take the fleet-worst
-/// replica (a conservative upper bound — true fleet percentiles would need
-/// the raw histograms). `aggregate(&[s])` reproduces `s` exactly, which is
-/// what keeps the 1-replica cluster's stats endpoint bit-compatible with
-/// the bare engine's (unit-tested).
+/// hits/misses for hit rates). Latency percentiles come from the replicas'
+/// raw histograms merged bucket-wise, so the fleet p99 is the percentile of
+/// the *combined* distribution — not a max-fold or weighted mean over
+/// replica percentiles, both of which misrepresent bimodal fleets (the
+/// bucket-accuracy unit test below builds exactly that case). The max-fold
+/// remains only as the fallback when a snapshot carries no histograms.
+/// `aggregate(&[s])` reproduces `s` exactly, which is what keeps the
+/// 1-replica cluster's stats endpoint bit-compatible with the bare
+/// engine's (unit-tested).
 pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
     if snaps.is_empty() {
         return StatsSnapshot::default();
@@ -339,6 +358,32 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
     let misses = sum_u64(&|s| s.prefix.misses);
     let pages = sum_u64(&|s| s.prefix.resident_pages);
     let audits = sum_u64(&|s| s.governor.audits);
+
+    // Merge the raw latency histograms bucket-wise; fleet percentiles read
+    // off the combined distribution below.
+    let mut hists: BTreeMap<String, Histogram> = BTreeMap::new();
+    for s in snaps {
+        for (name, h) in &s.hists {
+            match hists.get_mut(name) {
+                Some(acc) => acc.merge(h),
+                None => {
+                    hists.insert(name.clone(), h.clone());
+                }
+            }
+        }
+    }
+    // Percentile of the merged distribution when we have it; the old
+    // fleet-worst fold only as fallback. For a single snapshot the scalar
+    // passes through untouched (bit-for-bit identity).
+    let pct = |name: &str, q: f64, fold: f64| {
+        if snaps.len() == 1 {
+            return fold;
+        }
+        match hists.get(name) {
+            Some(h) if h.count() > 0 => h.quantile(q),
+            _ => fold,
+        }
+    };
 
     StatsSnapshot {
         // A fleet view belongs to no single replica; keep the sole
@@ -419,16 +464,52 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
             inflight_rows: sum_u64(&|s| s.prefill.inflight_rows),
             decode_stall_steps: sum_u64(&|s| s.prefill.decode_stall_steps),
             stall_saved_s: sum_f64(&|s| s.prefill.stall_saved_s),
-            ttft_warm_p50_s: max_f64(&|s| s.prefill.ttft_warm_p50_s),
-            ttft_warm_p99_s: max_f64(&|s| s.prefill.ttft_warm_p99_s),
-            ttft_cold_p50_s: max_f64(&|s| s.prefill.ttft_cold_p50_s),
-            ttft_cold_p99_s: max_f64(&|s| s.prefill.ttft_cold_p99_s),
-            tpot_warm_p50_s: max_f64(&|s| s.prefill.tpot_warm_p50_s),
-            tpot_warm_p99_s: max_f64(&|s| s.prefill.tpot_warm_p99_s),
-            tpot_cold_p50_s: max_f64(&|s| s.prefill.tpot_cold_p50_s),
-            tpot_cold_p99_s: max_f64(&|s| s.prefill.tpot_cold_p99_s),
+            ttft_warm_p50_s: pct(
+                crate::metrics::names::TTFT_WARM_S,
+                0.50,
+                max_f64(&|s| s.prefill.ttft_warm_p50_s),
+            ),
+            ttft_warm_p99_s: pct(
+                crate::metrics::names::TTFT_WARM_S,
+                0.99,
+                max_f64(&|s| s.prefill.ttft_warm_p99_s),
+            ),
+            ttft_cold_p50_s: pct(
+                crate::metrics::names::TTFT_COLD_S,
+                0.50,
+                max_f64(&|s| s.prefill.ttft_cold_p50_s),
+            ),
+            ttft_cold_p99_s: pct(
+                crate::metrics::names::TTFT_COLD_S,
+                0.99,
+                max_f64(&|s| s.prefill.ttft_cold_p99_s),
+            ),
+            tpot_warm_p50_s: pct(
+                crate::metrics::names::TPOT_WARM_S,
+                0.50,
+                max_f64(&|s| s.prefill.tpot_warm_p50_s),
+            ),
+            tpot_warm_p99_s: pct(
+                crate::metrics::names::TPOT_WARM_S,
+                0.99,
+                max_f64(&|s| s.prefill.tpot_warm_p99_s),
+            ),
+            tpot_cold_p50_s: pct(
+                crate::metrics::names::TPOT_COLD_S,
+                0.50,
+                max_f64(&|s| s.prefill.tpot_cold_p50_s),
+            ),
+            tpot_cold_p99_s: pct(
+                crate::metrics::names::TPOT_COLD_S,
+                0.99,
+                max_f64(&|s| s.prefill.tpot_cold_p99_s),
+            ),
         },
         prompt_truncated: sum_u64(&|s| s.prompt_truncated),
+        hists,
+        // Fleet uptime = the longest-lived replica's.
+        uptime_s: max_f64(&|s| s.uptime_s),
+        config: snaps[0].config.clone(),
     }
 }
 
@@ -449,6 +530,10 @@ pub struct ClusterHandle {
     locality_hits: AtomicU64,
     locality_misses: AtomicU64,
     dispatched: Vec<AtomicU64>,
+    /// Dispatch-plane view of the fleet-shared flight recorder (disarmed
+    /// unless `EngineConfig::trace`); records the `Dispatched` span event
+    /// with the routing decision's own timestamp.
+    trace: TraceHandle,
 }
 
 impl ClusterHandle {
@@ -467,16 +552,21 @@ impl ClusterHandle {
             bail!("cluster needs at least one replica");
         }
         let n = ccfg.replicas;
+        // One recorder for the whole fleet: every replica's span events
+        // land in the same trace, on the same monotonic timebase, so the
+        // Perfetto export shows cross-replica steals on one timeline.
+        let recorder = Arc::new(FlightRecorder::new(cfg.trace));
         let mut replicas = Vec::with_capacity(n);
         for r in 0..n {
             let mut rcfg = cfg.clone();
             rcfg.replica = r;
             rcfg.replicas = n;
-            replicas.push(EngineHandle::spawn(
+            replicas.push(EngineHandle::spawn_with_recorder(
                 artifacts.clone(),
                 model.clone(),
                 rcfg,
                 max_queue,
+                Arc::clone(&recorder),
             )?);
         }
         let page_tokens = cfg.prefix.page_tokens.max(1);
@@ -491,6 +581,7 @@ impl ClusterHandle {
             locality_hits: AtomicU64::new(0),
             locality_misses: AtomicU64::new(0),
             dispatched: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            trace: TraceHandle::new(recorder, 0),
         })
     }
 
@@ -499,11 +590,13 @@ impl ClusterHandle {
     }
 
     /// Pick the replica a new prompt dispatches to, updating the locality
-    /// index and the steal/hit counters.
-    fn route(&self, prompt: &[i32]) -> usize {
+    /// index and the steal/hit counters. Returns `(target, stolen)`.
+    fn route(&self, prompt: &[i32]) -> (usize, bool) {
         let n = self.replicas.len();
         match self.dispatch {
-            DispatchPolicy::Random => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            DispatchPolicy::Random => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) % n, false)
+            }
             DispatchPolicy::Locality => {
                 let (family, hit) = self.locality.lock().unwrap().observe(prompt);
                 if hit {
@@ -512,7 +605,7 @@ impl ClusterHandle {
                     self.locality_misses.fetch_add(1, Ordering::Relaxed);
                 }
                 if n == 1 {
-                    return 0;
+                    return (0, false);
                 }
                 let home = ring_assign(&self.ring, family);
                 let depths: Vec<usize> =
@@ -522,7 +615,7 @@ impl ClusterHandle {
                 if stolen {
                     self.steals.fetch_add(1, Ordering::Relaxed);
                 }
-                target
+                (target, stolen)
             }
         }
     }
@@ -530,9 +623,53 @@ impl ClusterHandle {
     /// Submit to the dispatched replica; the returned [`Ticket`] is the
     /// request's private completion channel exactly as with a bare handle.
     pub fn submit(&self, prompt: Vec<i32>, params: GenParams, task: &str) -> Result<Ticket> {
-        let target = self.route(&prompt);
+        self.submit_dispatch(prompt, params, task).map(|(t, _)| t)
+    }
+
+    /// [`ClusterHandle::submit`], plus where the request landed. The
+    /// `Dispatched` span event carries the routing decision's timestamp
+    /// (stamped before the ticket id exists) so the trace shows dispatch
+    /// preceding the engine's own `Enqueued`.
+    pub fn submit_dispatch(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+        task: &str,
+    ) -> Result<(Ticket, DispatchInfo)> {
+        let stamp = self.trace.stamp();
+        let (target, stolen) = self.route(&prompt);
         self.dispatched[target].fetch_add(1, Ordering::Relaxed);
-        self.replicas[target].submit(prompt, params, task)
+        let ticket = self.replicas[target].submit(prompt, params, task)?;
+        if let Some(ts) = stamp {
+            self.trace.record_at(
+                ts,
+                ticket.id,
+                EventKind::Dispatched { replica: target as u32, stolen },
+            );
+        }
+        Ok((ticket, DispatchInfo { replica: target, stolen }))
+    }
+
+    /// The fleet-shared flight recorder (disarmed unless
+    /// `EngineConfig::trace`).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        self.replicas[0].recorder()
+    }
+
+    /// Drain the fleet-shared flight recorder into Chrome trace-event JSON
+    /// (one track per replica, one async lane per request).
+    pub fn trace_json(&self) -> Json {
+        self.replicas[0].trace_json()
+    }
+
+    /// Fleet-merged metrics registry dump: every replica scraped, then
+    /// counters summed and histograms merged bucket-wise.
+    pub fn metrics_dump(&self) -> Result<MetricsDump> {
+        let mut dump = MetricsDump::default();
+        for r in &self.replicas {
+            dump.merge(&r.metrics_dump()?);
+        }
+        Ok(dump)
     }
 
     /// Cancel routes straight to the replica that minted the id (the
@@ -584,15 +721,23 @@ impl ClusterHandle {
     /// [`ClusterHandle::cluster_stats`].
     pub fn stats(&self) -> StatsSnapshot {
         let snaps: Vec<StatsSnapshot> = self.replicas.iter().map(|r| r.stats()).collect();
-        aggregate(&snaps)
+        let mut fleet = aggregate(&snaps);
+        fleet.config.dispatch = self.dispatch.name().to_string();
+        fleet
     }
 
     /// Everything: fleet aggregate, per-replica snapshots, dispatch
     /// counters.
     pub fn cluster_stats(&self) -> ClusterSnapshot {
-        let replicas: Vec<StatsSnapshot> =
+        let mut replicas: Vec<StatsSnapshot> =
             self.replicas.iter().map(|r| r.stats()).collect();
-        let fleet = aggregate(&replicas);
+        let mut fleet = aggregate(&replicas);
+        // The router layer doesn't know the dispatch policy; stamp it here
+        // so the config echo is complete at every level of the breakdown.
+        fleet.config.dispatch = self.dispatch.name().to_string();
+        for r in &mut replicas {
+            r.config.dispatch = self.dispatch.name().to_string();
+        }
         let hits = self.locality_hits.load(Ordering::Relaxed);
         let misses = self.locality_misses.load(Ordering::Relaxed);
         ClusterSnapshot {
@@ -756,6 +901,24 @@ mod tests {
                 tpot_cold_p99_s: 0.004,
             },
             prompt_truncated: 1,
+            hists: {
+                let mut m = BTreeMap::new();
+                let mut h = Histogram::new();
+                h.record(0.01);
+                h.record(0.02);
+                m.insert(crate::metrics::names::TTFT_COLD_S.to_string(), h);
+                m
+            },
+            uptime_s: 33.5,
+            config: super::super::router::ConfigEcho {
+                method: "w8a8".into(),
+                batch: 4,
+                replicas: 1,
+                dispatch: "none".into(),
+                paged_rows: true,
+                chunked_prefill: true,
+                trace: false,
+            },
         };
         let a = aggregate(std::slice::from_ref(&s));
         assert_eq!(a.replica, s.replica);
@@ -777,6 +940,55 @@ mod tests {
         assert_eq!(a.kv, s.kv);
         assert_eq!(a.prefill, s.prefill);
         assert_eq!(a.prompt_truncated, s.prompt_truncated);
+        assert_eq!(a.hists, s.hists);
+        assert_eq!(a.uptime_s, s.uptime_s);
+        assert_eq!(a.config, s.config);
+    }
+
+    #[test]
+    fn merged_histogram_p99_is_bucket_accurate() {
+        // Bimodal fleet: replica A served 9 900 requests at ~1 ms TTFT,
+        // replica B served 100 at ~100 ms. The combined distribution's p99
+        // sits in the fast mode (9 900 of 10 000 samples < the 99th cut),
+        // so neither a max-fold over replica p99s (0.1 s) nor any weighted
+        // mean of them is right — only the merged histogram gets it.
+        let name = crate::metrics::names::TTFT_COLD_S;
+        let mut fast = Histogram::new();
+        for _ in 0..9_900 {
+            fast.record(0.001);
+        }
+        let mut slow = Histogram::new();
+        for _ in 0..100 {
+            slow.record(0.1);
+        }
+        let mut a = StatsSnapshot::default();
+        a.prefill.ttft_cold_p99_s = fast.p99();
+        a.hists.insert(name.to_string(), fast.clone());
+        let mut b = StatsSnapshot::default();
+        b.replica = 1;
+        b.prefill.ttft_cold_p99_s = slow.p99();
+        b.hists.insert(name.to_string(), slow.clone());
+
+        let f = aggregate(&[a, b]);
+        let merged_p99 = f.prefill.ttft_cold_p99_s;
+        let max_fold = fast.p99().max(slow.p99());
+        let weighted_mean = (fast.p99() * 9_900.0 + slow.p99() * 100.0) / 10_000.0;
+        assert!(
+            merged_p99 < 0.01,
+            "fleet p99 {merged_p99} must sit in the fast mode"
+        );
+        assert!(
+            merged_p99 < max_fold / 5.0,
+            "merged p99 {merged_p99} vs max-fold {max_fold}"
+        );
+        assert!(
+            (merged_p99 - weighted_mean).abs() > 1e-4,
+            "merged p99 {merged_p99} must differ from weighted mean {weighted_mean}"
+        );
+        // And the merged histogram itself is carried for the next tier up.
+        let h = f.hists.get(name).expect("merged histogram present");
+        assert_eq!(h.count(), 10_000);
+        assert!((h.sum() - (9_900.0 * 0.001 + 100.0 * 0.1)).abs() < 1e-6);
     }
 
     #[test]

@@ -166,8 +166,11 @@ use super::kv::{BatchGroup, PagedGroup, RowStore};
 use super::plan::{pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending, StepPlan,
                   SubBatch, VariantCtx};
 use super::prefixcache::{PrefixCache, PrefixCacheConfig};
-use super::request::{Completion, FinishReason, GenParams, PrefillProgress, Request, RequestState};
+use super::request::{Completion, FinishReason, GenParams, PrefillProgress, Request,
+                     RequestState, StageBreakdown};
 use super::scheduler::{SchedPolicy, Scheduler};
+use crate::trace::{EventKind, FlightRecorder, PrefillMode, TraceHandle, FUNC_AUDIT,
+                   FUNC_DECODE, FUNC_PREFILL, FUNC_VERIFY};
 
 /// Which drafting strategy the engine wires per request.
 #[derive(Debug, Clone)]
@@ -231,6 +234,10 @@ pub struct EngineConfig {
     /// (`replica: 0, replicas: 1`) yields ids 1, 2, 3, … — bit-identical
     /// to the pre-cluster engine.
     pub replicas: usize,
+    /// Flight recorder (`crate::trace`): per-request span events drained by
+    /// `{"cmd":"trace"}`. Default off — the off path is a single atomic
+    /// branch per record site, no allocation.
+    pub trace: bool,
 }
 
 impl EngineConfig {
@@ -250,6 +257,7 @@ impl EngineConfig {
             chunked_prefill: true,
             replica: 0,
             replicas: 1,
+            trace: false,
         }
     }
 
@@ -268,6 +276,7 @@ impl EngineConfig {
             chunked_prefill: true,
             replica: 0,
             replicas: 1,
+            trace: false,
         }
     }
 
@@ -285,6 +294,16 @@ impl EngineConfig {
             (DrafterKind::Ngram(_), _) => "ngram".into(),
             (DrafterKind::Pruned(v), _) => format!("draft-{v}"),
         }
+    }
+}
+
+/// Map a call-log function kind onto the trace wire code.
+fn trace_func(k: FnKind) -> u8 {
+    match k {
+        FnKind::Decode => FUNC_DECODE,
+        FnKind::Verify => FUNC_VERIFY,
+        FnKind::Prefill => FUNC_PREFILL,
+        FnKind::Audit => FUNC_AUDIT,
     }
 }
 
@@ -350,6 +369,10 @@ pub struct Engine {
     /// instead of allocating a fresh `[L, 1, H, S, hd]` pair each time.
     prefill_k: Tensor<f32>,
     prefill_v: Tensor<f32>,
+    /// Flight-recorder handle (`crate::trace`); a single-branch no-op when
+    /// `cfg.trace` is off. The router replaces it at spawn so all replicas
+    /// of a cluster share one recorder.
+    trace: TraceHandle,
 }
 
 impl Engine {
@@ -379,12 +402,26 @@ impl Engine {
         let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
         let governor = Governor::new(cfg.governor.clone(), cfg.seed ^ 0x4649_4445);
         let prefix_cache = PrefixCache::new(cfg.prefix.clone());
+        // Direct-embedding users (benches, tests) get a private recorder
+        // when tracing is on; the router replaces it at spawn so a cluster's
+        // replicas share one. Off stays a plain disabled handle — no
+        // allocation at all.
+        let trace = if cfg.trace {
+            TraceHandle::new(
+                std::sync::Arc::new(FlightRecorder::new(true)),
+                cfg.replica as u32,
+            )
+        } else {
+            TraceHandle::disabled()
+        };
+        let mut sched = Scheduler::new(cfg.policy);
+        sched.set_trace(trace.clone());
         Ok(Engine {
             model,
             mcfg,
             rows,
             states: Vec::new(),
-            sched: Scheduler::new(cfg.policy),
+            sched,
             rng: Pcg::seeded(cfg.seed ^ 0x5145_5341),
             // Fleet-unique id lane: replica r of N mints r+1, r+1+N, … —
             // the default (0 of 1) is the classic 1, 2, 3, … sequence.
@@ -399,8 +436,22 @@ impl Engine {
             kv_peak_bytes: 0,
             prefill_k,
             prefill_v,
+            trace,
             cfg,
         })
+    }
+
+    /// Replace the flight-recorder handle (the router wires a shared
+    /// recorder at spawn, before any submission). Keeps the scheduler's
+    /// handle in sync.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.sched.set_trace(trace.clone());
+        self.trace = trace;
+    }
+
+    /// The engine's flight-recorder handle (for export surfaces).
+    pub fn trace_handle(&self) -> &TraceHandle {
+        &self.trace
     }
 
     /// Every bucket the step planner may execute at (stats publishing).
@@ -480,7 +531,21 @@ impl Engine {
     /// chunks, and a warm request's post-splice suffix is shorter still —
     /// gating admission on the raw prompt length would refuse work the
     /// cache has already mostly paid for.
-    pub fn submit(&mut self, mut prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
+    pub fn submit(&mut self, prompt: Vec<i32>, params: GenParams, task: &str) -> u64 {
+        self.submit_at(prompt, params, task, Instant::now())
+    }
+
+    /// [`submit`](Self::submit) with an explicit submission instant — the
+    /// router passes the moment the client handed over the request, so the
+    /// channel hop is attributed to the completion's `dispatch_s` stage
+    /// (and the deadline clock starts when the client thinks it did).
+    pub fn submit_at(
+        &mut self,
+        mut prompt: Vec<i32>,
+        params: GenParams,
+        task: &str,
+        sent_at: Instant,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += self.cfg.replicas.max(1) as u64;
         let cap = self.mcfg.max_seq.saturating_sub(2);
@@ -495,7 +560,8 @@ impl Engine {
         self.sched.push(
             Request::new(id, prompt, params)
                 .with_task(task)
-                .with_truncated(truncated),
+                .with_truncated(truncated)
+                .with_submitted_at(sent_at),
         );
         self.metrics.inc("requests_submitted", 1);
         self.metrics
@@ -547,6 +613,7 @@ impl Engine {
         self.rows.leave(&mut self.prefix_cache, row)?;
         let mut st = self.states[slot].take().expect("leased slot has state");
         st.finished = Some(FinishReason::Cancelled);
+        self.trace.record(st.req.id, EventKind::Cancelled);
         self.finish_to_completion(st);
         Ok(())
     }
@@ -586,6 +653,7 @@ impl Engine {
             let rng = self.rng.fork(req.params.seed.unwrap_or(req.id));
             let mut st = RequestState::new(req, drafter, rng);
             st.sched_delay_s = sched_delay;
+            st.admitted_at = Some(now);
 
             let p = self.mcfg.prefill_len;
             let len = st.req.prompt.len();
@@ -617,6 +685,7 @@ impl Engine {
             // propagate an error past it and leak the refcount.
             self.prefill_k.zero();
             self.prefill_v.zero();
+            let splice_t0 = Instant::now();
             let hit = match lease {
                 Some(l) => {
                     let spliced = self
@@ -643,8 +712,13 @@ impl Engine {
                 }
                 None => 0,
             };
+            if hit > 0 {
+                st.splice_s = splice_t0.elapsed().as_secs_f64();
+            }
 
             st.prefix_hit = hit > 0;
+            self.trace
+                .record(st.req.id, EventKind::Admitted { hit_tokens: hit as u32 });
 
             if self.cfg.chunked_prefill {
                 // Resumable admission: lease the row and install the spliced
@@ -723,6 +797,10 @@ impl Engine {
                 let wall = t0.elapsed().as_secs_f64();
                 self.metrics.observe("prefill_s", wall);
                 self.metrics.inc(names::PREFILL_CHUNKS, 1);
+                self.trace.record(
+                    st.req.id,
+                    EventKind::PrefillChunk { mode: PrefillMode::Dedicated },
+                );
                 prefill_calls += 1;
                 self.call_log.record(CallRecord {
                     variant: variant.clone(),
@@ -944,13 +1022,19 @@ impl Engine {
     /// Finish a request that never reached a KV row (blown deadline or
     /// cancellation while queued): empty output, `Cancelled` finish.
     fn finish_unadmitted(&mut self, req: Request) {
-        let latency = Instant::now()
-            .duration_since(req.submitted_at)
-            .as_secs_f64();
+        let now = Instant::now();
+        let latency = now.duration_since(req.submitted_at).as_secs_f64();
         // `requests_completed` counts every terminal outcome;
         // `requests_cancelled` is the subset that was aborted.
         self.metrics.inc("requests_completed", 1);
         self.metrics.inc("requests_cancelled", 1);
+        self.trace.record(req.id, EventKind::Cancelled);
+        // Never admitted: the whole latency is dispatch + queue time.
+        let stages = StageBreakdown {
+            dispatch_s: req.enqueued_at.duration_since(req.submitted_at).as_secs_f64(),
+            queue_s: now.duration_since(req.enqueued_at).as_secs_f64(),
+            ..StageBreakdown::default()
+        };
         self.completions.push(Completion {
             id: req.id,
             task: req.task.clone(),
@@ -965,6 +1049,8 @@ impl Engine {
             sched_delay_s: latency,
             latency_s: latency,
             ttft_s: latency,
+            stages,
+            finished_at: now,
         });
     }
 
@@ -1112,6 +1198,10 @@ impl Engine {
             plan
         };
         self.observe_plan(&plan);
+        self.trace.record(
+            0,
+            EventKind::Plan { subbatches: plan.sub_batches.len() as u32 },
+        );
         // A dedicated admission chunk is any sub-batch carrying riders but
         // no committed rows, whatever program it executes through (the
         // full-window prefill artifact, or the verify artifact under shed).
@@ -1285,6 +1375,15 @@ impl Engine {
             useful_tokens: sb.useful_tokens,
             wall_s: wall,
         });
+        self.trace.record(
+            0,
+            EventKind::ChunkExec {
+                variant: self.trace.intern(&variant),
+                func: trace_func(sb.fn_kind),
+                bucket: bucket as u16,
+                wall_us: (wall * 1e6) as u32,
+            },
+        );
         self.metrics.observe(
             &names::bucket_occupancy(bucket),
             (sb.rows.len() + sb.riders.len()) as f64,
@@ -1437,6 +1536,7 @@ impl Engine {
                         } else {
                             self.metrics.inc(names::GOVERNOR_PROBES, 1);
                         }
+                        self.trace.record(0, EventKind::Audit);
                         self.metrics.inc(&names::variant_calls(&sname), 1);
                         self.model.return_scratch(&sname, aout.k, aout.v);
                         Some(aout.logits)
@@ -1518,6 +1618,8 @@ impl Engine {
                 g.note_written(r, wrote.min(self.mcfg.max_seq));
             }
         }
+
+        self.trace.record(0, EventKind::Scatter);
 
         // ---- commit per row --------------------------------------------
         // Per-class audit accumulator for this shadow call: however many
@@ -1622,6 +1724,10 @@ impl Engine {
             st.stats.tokens_out += n_commit as u64;
             st.stats.drafted += draft.len() as u64;
             st.stats.accepted += accepted_kept as u64;
+            self.trace.record(
+                st.req.id,
+                EventKind::Commit { accepted: accepted_kept as u32 },
+            );
             if draft.is_empty() {
                 st.stats.draft_misses += 1;
             }
@@ -1719,6 +1825,18 @@ impl Engine {
                 g.set_len(row, st.cached)?;
             }
             self.metrics.inc(names::PREFILL_CHUNKS, 1);
+            // How this chunk executed: riding a spare slot of a live
+            // decode/verify sub-batch, as a dedicated prefill call, or shed
+            // to the shorter verify program under queue pressure.
+            let mode = if !sb.rows.is_empty() {
+                PrefillMode::Ridden
+            } else if sb.fn_kind == FnKind::Prefill {
+                PrefillMode::Dedicated
+            } else {
+                PrefillMode::Shed
+            };
+            self.trace
+                .record(st.req.id, EventKind::PrefillChunk { mode });
             if r.saved_s > 0.0 {
                 self.metrics.observe(names::PREFILL_STALL_SAVED_S, r.saved_s);
             }
@@ -1794,10 +1912,12 @@ impl Engine {
             self.metrics.observe(names::GOVERNOR_ACCEPT_DELTA, delta);
             match self.governor.record_audit(&class, agreement, delta) {
                 Some(Transition::Demoted) => {
-                    self.metrics.inc(names::GOVERNOR_DEMOTIONS, 1)
+                    self.metrics.inc(names::GOVERNOR_DEMOTIONS, 1);
+                    self.trace.record(0, EventKind::Demote);
                 }
                 Some(Transition::Promoted) => {
-                    self.metrics.inc(names::GOVERNOR_PROMOTIONS, 1)
+                    self.metrics.inc(names::GOVERNOR_PROMOTIONS, 1);
+                    self.trace.record(0, EventKind::Promote);
                 }
                 None => {}
             }
@@ -1844,6 +1964,26 @@ impl Engine {
             self.metrics.observe(names::TTFT_COLD_S, ttft);
             self.metrics.observe(names::TPOT_COLD_S, tpot);
         }
+        // Stage attribution: the stages partition `[submitted_at, now]`
+        // exactly (`dispatch + queue + splice + prefill + decode = latency`;
+        // the router adds `emit_s` — and the same amount to `latency_s` —
+        // at delivery). `prefill_s` nets out the measured splice; the clamp
+        // only matters when the splice measurably exceeded admission→first
+        // token, which float rounding can produce on instant requests.
+        let admitted = st.admitted_at.unwrap_or(now);
+        let first = st.first_token_at.unwrap_or(now);
+        let dispatch_s = st.req.enqueued_at.duration_since(st.req.submitted_at).as_secs_f64();
+        let queue_s = admitted.duration_since(st.req.enqueued_at).as_secs_f64();
+        let raw_prefill = first.duration_since(admitted).as_secs_f64();
+        let splice_s = st.splice_s.min(raw_prefill);
+        let stages = StageBreakdown {
+            dispatch_s,
+            queue_s,
+            splice_s,
+            prefill_s: (raw_prefill - splice_s).max(0.0),
+            decode_s: now.duration_since(first).as_secs_f64(),
+            emit_s: 0.0,
+        };
         self.completions.push(Completion {
             id: st.req.id,
             task: st.req.task.clone(),
@@ -1855,6 +1995,8 @@ impl Engine {
             sched_delay_s: st.sched_delay_s,
             latency_s: latency,
             ttft_s: ttft,
+            stages,
+            finished_at: now,
         });
     }
 

@@ -23,8 +23,8 @@ pub mod scheduler;
 
 pub use calls::{CallLog, CallRecord, FnKind};
 pub use cluster::{aggregate, build_ring, dispatch_decision, replica_of_id, ring_assign,
-                  ClusterConfig, ClusterHandle, ClusterSnapshot, DispatchPolicy,
-                  DispatchSnapshot};
+                  ClusterConfig, ClusterHandle, ClusterSnapshot, DispatchInfo,
+                  DispatchPolicy, DispatchSnapshot};
 pub use engine::{DrafterKind, Engine, EngineConfig};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::{BatchGroup, PagedGroup, RowStore};
@@ -32,7 +32,8 @@ pub use plan::{best_bucket, pack_prefill_riders, plan_step, PlanCtx, PlanRow, Pr
                PrefillRider, StepPlan, SubBatch, VariantCtx};
 pub use prefixcache::{Lease, LocalityIndex, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use request::{Completion, FinishReason, GenParams, PrefillProgress, Priority, Request,
-                  RequestState};
-pub use router::{BucketStat, EngineHandle, GovernorSnapshot, KvSnapshot, PrefillSnapshot,
-                 PrefixSnapshot, RouterStats, StatsSnapshot, Ticket, VariantCalls};
+                  RequestState, StageBreakdown};
+pub use router::{BucketStat, ConfigEcho, EngineHandle, GovernorSnapshot, KvSnapshot,
+                 PrefillSnapshot, PrefixSnapshot, RouterStats, StatsSnapshot, Ticket,
+                 VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -80,23 +80,37 @@ pub struct Request {
     /// metrics counter so silently-shortened prompts are visible to
     /// callers.
     pub prompt_truncated: bool,
+    /// When the client handed the request to the serving stack (captured at
+    /// the handle boundary so queue time in the router channel is charged to
+    /// `dispatch_s`, not lost).
     pub submitted_at: Instant,
+    /// When the request entered the engine's admission queue.
+    pub enqueued_at: Instant,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
+        let now = Instant::now();
         Request {
             id,
             prompt,
             params,
             task: String::new(),
             prompt_truncated: false,
-            submitted_at: Instant::now(),
+            submitted_at: now,
+            enqueued_at: now,
         }
     }
 
     pub fn with_task(mut self, task: &str) -> Self {
         self.task = task.to_string();
+        self
+    }
+
+    /// Backdate the submission point to when the client actually sent the
+    /// request (the deadline clock and `dispatch_s` both anchor on it).
+    pub fn with_submitted_at(mut self, t: Instant) -> Self {
+        self.submitted_at = t;
         self
     }
 
@@ -155,6 +169,12 @@ pub struct RequestState {
     pub draft_cost: DraftCost,
     /// Seconds spent queued in the scheduler before admission.
     pub sched_delay_s: f64,
+    /// When the engine granted this request a KV row (stage-breakdown
+    /// anchor; always measured — a couple of clock reads per request, not
+    /// gated on tracing).
+    pub admitted_at: Option<Instant>,
+    /// Seconds spent splicing cached prefix pages at admission.
+    pub splice_s: f64,
     pub first_token_at: Option<Instant>,
     pub finished: Option<FinishReason>,
     /// Weight variant the request's prefill ran at (set by the engine at
@@ -192,6 +212,8 @@ impl RequestState {
             stats,
             draft_cost: DraftCost::default(),
             sched_delay_s: 0.0,
+            admitted_at: None,
+            splice_s: 0.0,
             first_token_at: None,
             finished: None,
             admit_variant: String::new(),
@@ -215,6 +237,35 @@ impl RequestState {
     }
 }
 
+/// Per-request wall-clock attribution: where the observed latency went.
+/// The stages partition `[submitted_at, delivery]`, so they sum to the
+/// reported `latency_s` exactly (up to float rounding):
+///
+/// * `dispatch_s` — client submit → engine admission queue (router channel
+///   hop plus, under a cluster, the dispatch decision).
+/// * `queue_s` — waiting in the scheduler for a KV row / window slot.
+/// * `splice_s` — prefix-cache page splicing at admission.
+/// * `prefill_s` — admission → first token, net of splice.
+/// * `decode_s` — first token → engine-side finish.
+/// * `emit_s` — engine finish → completion delivered to the waiter.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    pub queue_s: f64,
+    pub dispatch_s: f64,
+    pub splice_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub emit_s: f64,
+}
+
+impl StageBreakdown {
+    /// Sum of every stage; equals the delivered `latency_s`.
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.dispatch_s + self.splice_s + self.prefill_s + self.decode_s
+            + self.emit_s
+    }
+}
+
 /// Completion record returned to the caller.
 #[derive(Debug, Clone)]
 pub struct Completion {
@@ -228,8 +279,16 @@ pub struct Completion {
     /// Seconds spent queued in the scheduler before admission.
     pub sched_delay_s: f64,
     /// Wall-clock seconds from submission to completion / to first token.
+    /// The router adds the delivery hop (`stages.emit_s`) before handing
+    /// the completion to the waiter, so this is submission → delivery.
     pub latency_s: f64,
     pub ttft_s: f64,
+    /// Where `latency_s` went, stage by stage (always populated; opt-in on
+    /// the wire via the request's `"stages": true` flag).
+    pub stages: StageBreakdown,
+    /// When the engine finished the request — the router derives `emit_s`
+    /// from it at delivery.
+    pub finished_at: Instant,
 }
 
 #[cfg(test)]
@@ -280,6 +339,31 @@ mod tests {
             assert_eq!(Priority::parse(p.name()), Some(p));
         }
         assert_eq!(Priority::parse("urgent"), None);
+    }
+
+    #[test]
+    fn stage_breakdown_totals_every_stage() {
+        let s = StageBreakdown {
+            queue_s: 0.1,
+            dispatch_s: 0.2,
+            splice_s: 0.3,
+            prefill_s: 0.4,
+            decode_s: 0.5,
+            emit_s: 0.6,
+        };
+        assert!((s.total_s() - 2.1).abs() < 1e-12);
+        assert_eq!(StageBreakdown::default().total_s(), 0.0);
+    }
+
+    #[test]
+    fn submitted_at_backdates_the_deadline_anchor() {
+        let t0 = Instant::now() - Duration::from_millis(50);
+        let mut params = GenParams::default();
+        params.deadline = Some(Duration::from_millis(10));
+        let req = Request::new(3, vec![1], params).with_submitted_at(t0);
+        assert_eq!(req.submitted_at, t0);
+        assert!(req.deadline_at().unwrap() < Instant::now(), "backdated deadline already blown");
+        assert!(req.enqueued_at >= t0);
     }
 
     #[test]

@@ -27,16 +27,19 @@
 //! occupancy, scheduling delay) that the server's `stats` endpoint reads
 //! without disturbing the engine.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::MetricsDump;
+use crate::trace::{EventKind, FlightRecorder, TraceHandle};
+use crate::util::hist::Histogram;
 use crate::util::json::Json;
 
 use super::engine::{Engine, EngineConfig};
@@ -47,8 +50,17 @@ enum Msg {
         prompt: Vec<i32>,
         params: GenParams,
         task: String,
+        /// Wall-clock instant the submitter called [`EngineHandle::submit`];
+        /// the engine anchors the request's `submitted_at` here so the stage
+        /// breakdown's `dispatch_s` covers channel + handoff time.
+        sent_at: Instant,
         ack: Sender<u64>,
         done: Sender<Completion>,
+    },
+    /// Snapshot the engine's full metrics registry (counters, gauges, and
+    /// raw histograms) for Prometheus exposition and fleet-level merging.
+    Scrape {
+        ack: Sender<MetricsDump>,
     },
     Cancel {
         id: u64,
@@ -193,6 +205,65 @@ pub struct PrefillSnapshot {
     pub tpot_cold_p99_s: f64,
 }
 
+/// Provenance echo of the serving configuration, published once at spawn
+/// and carried through `stats` so an operator (or a benchmark harness) can
+/// tell *what* produced a stats block without cross-referencing the launch
+/// command line. The cluster layer patches `dispatch` with its policy name;
+/// a bare engine reports `"none"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigEcho {
+    /// Verifier variant the engine was configured with (`fp32`, `w8a8`, …).
+    pub method: String,
+    pub batch: usize,
+    pub replicas: usize,
+    /// Cluster dispatch policy name; `"none"` outside a cluster.
+    pub dispatch: String,
+    pub paged_rows: bool,
+    pub chunked_prefill: bool,
+    /// Whether the flight recorder is armed (see [`crate::trace`]).
+    pub trace: bool,
+}
+
+impl Default for ConfigEcho {
+    fn default() -> Self {
+        ConfigEcho {
+            method: String::new(),
+            batch: 0,
+            replicas: 1,
+            dispatch: "none".to_string(),
+            paged_rows: false,
+            chunked_prefill: false,
+            trace: false,
+        }
+    }
+}
+
+impl ConfigEcho {
+    fn from_cfg(cfg: &EngineConfig) -> Self {
+        ConfigEcho {
+            method: cfg.verifier.clone(),
+            batch: cfg.batch,
+            replicas: cfg.replicas,
+            dispatch: "none".to_string(),
+            paged_rows: cfg.paged_rows,
+            chunked_prefill: cfg.chunked_prefill,
+            trace: cfg.trace,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("batch", Json::num(self.batch as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("dispatch", Json::str(self.dispatch.clone())),
+            ("paged_rows", Json::Bool(self.paged_rows)),
+            ("chunked_prefill", Json::Bool(self.chunked_prefill)),
+            ("trace", Json::Bool(self.trace)),
+        ])
+    }
+}
+
 /// Lock-free counters the engine thread publishes after every step and any
 /// thread may read at any time (the server's `stats` endpoint). The
 /// per-bucket tallies are the one mutex-guarded piece; they are written only
@@ -279,6 +350,15 @@ pub struct RouterStats {
     pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
     /// Per-variant chunk-call tallies published by the engine thread.
     pub variants: Mutex<std::collections::BTreeMap<String, u64>>,
+    /// Full latency histograms published by the engine thread alongside the
+    /// scalar p50/p99 pairs above. The cluster layer merges these bucket-wise
+    /// so fleet percentiles come from the combined distribution instead of a
+    /// max-fold over replica percentiles.
+    pub hists: Mutex<BTreeMap<String, Histogram>>,
+    /// When the engine thread was spawned (drives `uptime_s`).
+    pub start: OnceLock<Instant>,
+    /// Serving-config echo, set once at spawn.
+    pub config: OnceLock<ConfigEcho>,
 }
 
 /// Point-in-time view of [`RouterStats`].
@@ -317,11 +397,22 @@ pub struct StatsSnapshot {
     pub prefill: PrefillSnapshot,
     /// Submitted prompts cut to the context cap.
     pub prompt_truncated: u64,
+    /// Full latency histograms backing the scalar percentiles in `prefill`
+    /// (keyed by metric name). Carried so cluster aggregation can merge
+    /// distributions bucket-wise; not serialized into the stats JSON.
+    pub hists: BTreeMap<String, Histogram>,
+    /// Seconds since the engine thread spawned.
+    pub uptime_s: f64,
+    /// Serving-config echo (what produced this snapshot).
+    pub config: ConfigEcho,
 }
 
 impl StatsSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("uptime_s", Json::num(self.uptime_s)),
+            ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+            ("config", self.config.to_json()),
             ("replica", Json::num(self.replica as f64)),
             ("in_flight", Json::num(self.in_flight as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
@@ -465,6 +556,10 @@ pub struct EngineHandle {
     join: Option<JoinHandle<Result<()>>>,
     /// Soft cap on in-flight submissions (admission control).
     max_queue: usize,
+    /// Flight recorder the engine thread writes span events into (disarmed
+    /// unless `EngineConfig::trace`). A cluster passes one shared recorder
+    /// to every replica so the fleet exports a single merged trace.
+    recorder: Arc<FlightRecorder>,
 }
 
 /// Serializes engine-thread *construction* across the process. PJRT client
@@ -481,9 +576,26 @@ impl EngineHandle {
     /// can spawn its engines from a loop without racing PJRT init.
     pub fn spawn(artifacts: PathBuf, model: String, cfg: EngineConfig,
                  max_queue: usize) -> Result<Self> {
+        let recorder = Arc::new(FlightRecorder::new(cfg.trace));
+        Self::spawn_with_recorder(artifacts, model, cfg, max_queue, recorder)
+    }
+
+    /// Spawn with an externally-owned flight recorder (the cluster layer
+    /// hands every replica the same one so span events from the whole fleet
+    /// land in a single trace, on one timebase).
+    pub fn spawn_with_recorder(
+        artifacts: PathBuf,
+        model: String,
+        cfg: EngineConfig,
+        max_queue: usize,
+        recorder: Arc<FlightRecorder>,
+    ) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let stats = Arc::new(RouterStats::default());
+        let _ = stats.start.set(Instant::now());
+        let _ = stats.config.set(ConfigEcho::from_cfg(&cfg));
         let tstats = Arc::clone(&stats);
+        let trec = Arc::clone(&recorder);
         let thread_name = format!("quasar-engine-{}", cfg.replica);
         let join = std::thread::Builder::new()
             .name(thread_name)
@@ -497,6 +609,9 @@ impl EngineHandle {
                     )?);
                     Engine::new(mr, cfg)?
                 };
+                // Replace the engine's private recorder with the handle's
+                // shared one before any request can be submitted.
+                engine.set_trace(TraceHandle::new(trec, engine.cfg.replica as u32));
                 tstats.replica.store(engine.cfg.replica, Ordering::Relaxed);
                 tstats.batch.store(engine.cfg.batch, Ordering::Relaxed);
                 tstats
@@ -548,7 +663,33 @@ impl EngineHandle {
             stats,
             join: Some(join),
             max_queue,
+            recorder,
         })
+    }
+
+    /// The flight recorder shared with the engine thread (disarmed unless
+    /// `EngineConfig::trace`).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// Drain the flight recorder and render the Chrome trace-event JSON
+    /// (openable in Perfetto / `chrome://tracing`). With tracing off this
+    /// returns a valid document with an empty event list.
+    pub fn trace_json(&self) -> Json {
+        self.recorder.chrome_trace_json()
+    }
+
+    /// Snapshot the engine's full metrics registry (counters, gauges, raw
+    /// histograms). Round-trips through the engine thread, so it reflects a
+    /// consistent point between steps; use [`MetricsDump::to_prometheus`]
+    /// for text exposition.
+    pub fn metrics_dump(&self) -> Result<MetricsDump> {
+        let (ack_tx, ack_rx) = channel();
+        self.send(Msg::Scrape { ack: ack_tx })?;
+        ack_rx
+            .recv_timeout(Duration::from_secs(10))
+            .map_err(|_| anyhow!("engine did not answer metrics scrape"))
     }
 
     fn send(&self, msg: Msg) -> Result<()> {
@@ -573,6 +714,7 @@ impl EngineHandle {
             prompt,
             params,
             task: task.to_string(),
+            sent_at: Instant::now(),
             ack: ack_tx,
             done: done_tx,
         })?;
@@ -708,6 +850,13 @@ impl EngineHandle {
                 }
             },
             prompt_truncated: s.prompt_truncated.load(Ordering::Relaxed),
+            hists: s.hists.lock().unwrap().clone(),
+            uptime_s: s
+                .start
+                .get()
+                .map(|t| t.elapsed().as_secs_f64())
+                .unwrap_or(0.0),
+            config: s.config.get().cloned().unwrap_or_default(),
         }
     }
 
@@ -740,11 +889,15 @@ fn handle_msg(
     stats: &RouterStats,
 ) -> bool {
     match msg {
-        Msg::Submit { prompt, params, task, ack, done } => {
-            let id = engine.submit(prompt, params, &task);
+        Msg::Submit { prompt, params, task, sent_at, ack, done } => {
+            let id = engine.submit_at(prompt, params, &task, sent_at);
             routes.insert(id, done);
             stats.in_flight.fetch_add(1, Ordering::SeqCst);
             let _ = ack.send(id);
+            false
+        }
+        Msg::Scrape { ack } => {
+            let _ = ack.send(engine.metrics.export());
             false
         }
         Msg::Cancel { id } => {
@@ -769,12 +922,19 @@ fn handle_msg(
 }
 
 /// Deliver every finished completion to its submitter's private channel.
+/// Emission time (engine finish → here) lands in `stages.emit_s` and is
+/// folded into `latency_s`, so the stage breakdown partitions the full
+/// observed latency.
 fn route_completions(
     engine: &mut Engine,
     routes: &mut HashMap<u64, Sender<Completion>>,
     stats: &RouterStats,
 ) {
-    for c in engine.take_completions() {
+    for mut c in engine.take_completions() {
+        let emit = Instant::now().duration_since(c.finished_at).as_secs_f64();
+        c.stages.emit_s = emit;
+        c.latency_s += emit;
+        engine.trace_handle().record(c.id, EventKind::Finished);
         let _ = stats
             .in_flight
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
@@ -951,7 +1111,10 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
             .prefill_stall_saved_us
             .store((h.sum() * 1e6) as u64, Ordering::Relaxed);
     }
-    // Warm/cold latency split: publish p50/p99 pairs per histogram.
+    // Warm/cold latency split: publish p50/p99 pairs per histogram, and
+    // carry the raw histograms so the cluster layer can merge distributions
+    // bucket-wise instead of folding replica percentiles.
+    let mut hists = stats.hists.lock().unwrap();
     for (name, p50_dst, p99_dst) in [
         (
             crate::metrics::names::TTFT_WARM_S,
@@ -977,8 +1140,10 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
         if let Some(h) = m.hist(name) {
             p50_dst.store((h.p50() * 1e6) as u64, Ordering::Relaxed);
             p99_dst.store((h.p99() * 1e6) as u64, Ordering::Relaxed);
+            hists.insert(name.to_string(), h);
         }
     }
+    drop(hists);
     // Transition counts come from the governor itself (not the metrics
     // registry): transitions forced outside the engine's audit loop — e.g.
     // operational pre-demotion via `Engine::governor_mut` — must still be
@@ -1074,8 +1239,32 @@ mod tests {
                 tpot_cold_p99_s: 0.004,
             },
             prompt_truncated: 2,
+            hists: BTreeMap::new(),
+            uptime_s: 12.5,
+            config: ConfigEcho {
+                method: "w8a8".into(),
+                batch: 4,
+                replicas: 2,
+                dispatch: "locality".into(),
+                paged_rows: true,
+                chunked_prefill: true,
+                trace: true,
+            },
         };
         let j = s.to_json();
+        assert!((j.get("uptime_s").unwrap().as_f64().unwrap() - 12.5).abs() < 1e-9);
+        assert_eq!(
+            j.get("version").unwrap().as_str().unwrap(),
+            env!("CARGO_PKG_VERSION")
+        );
+        let cfg = j.get("config").unwrap();
+        assert_eq!(cfg.get("method").unwrap().as_str().unwrap(), "w8a8");
+        assert_eq!(cfg.get("batch").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(cfg.get("replicas").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(cfg.get("dispatch").unwrap().as_str().unwrap(), "locality");
+        assert!(cfg.get("paged_rows").unwrap().as_bool().unwrap());
+        assert!(cfg.get("chunked_prefill").unwrap().as_bool().unwrap());
+        assert!(cfg.get("trace").unwrap().as_bool().unwrap());
         assert_eq!(j.get("replica").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("batch").unwrap().as_i64().unwrap(), 4);

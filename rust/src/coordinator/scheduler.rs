@@ -13,6 +13,7 @@ use std::collections::{HashSet, VecDeque};
 use std::time::Instant;
 
 use super::request::Request;
+use crate::trace::{EventKind, TraceHandle};
 
 /// Pluggable admission ordering.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -69,6 +70,8 @@ pub struct Scheduler {
     deadlines: usize,
     next_seq: u64,
     peak_depth: usize,
+    /// Flight-recorder handle; disabled by default (one branch per push).
+    trace: TraceHandle,
 }
 
 impl Scheduler {
@@ -80,7 +83,13 @@ impl Scheduler {
             deadlines: 0,
             next_seq: 0,
             peak_depth: 0,
+            trace: TraceHandle::disabled(),
         }
+    }
+
+    /// Attach a flight-recorder handle (the engine wires this at spawn).
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
     }
 
     pub fn policy(&self) -> SchedPolicy {
@@ -101,6 +110,7 @@ impl Scheduler {
     }
 
     pub fn push(&mut self, req: Request) {
+        self.trace.record(req.id, EventKind::Enqueued);
         self.ids.insert(req.id);
         if req.deadline_at().is_some() {
             self.deadlines += 1;

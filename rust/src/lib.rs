@@ -101,6 +101,35 @@
 //! share each batched verification pass — the memory-bandwidth lever the
 //! paper's quantized verifier optimizes — while the fleet's `stats`
 //! aggregate per-replica occupancy, steal and locality-hit counters.
+//! ## Observability
+//!
+//! Three read-only planes ride on the serving path, all wired through the
+//! same JSON-lines protocol (`server`):
+//!
+//! * **Flight recorder** (`trace`) — a bounded, lock-free, per-thread
+//!   ring-buffer of typed span events (enqueue, dispatch/steal, admission
+//!   with prefix-hit size, prefill-chunk mode, step plan, per-sub-batch
+//!   execution, scatter, commit with acceptance length, audit,
+//!   demote/promote, cancel, finish), each stamped with a monotonic
+//!   microsecond timestamp and the request's ticket id as the causal key.
+//!   Armed by `EngineConfig::trace` (default **off**; the disabled path is
+//!   one relaxed atomic load — no clock read, no allocation). Rings
+//!   overwrite oldest on wrap and count what they dropped. `{"cmd":"trace"}`
+//!   drains the fleet-shared recorder as Chrome trace-event JSON that
+//!   Perfetto loads directly: one process track per replica, one async lane
+//!   per request.
+//! * **Stage attribution** (`coordinator::StageBreakdown`) — every
+//!   completion carries a six-way partition of its observed latency
+//!   (queue, dispatch, prefix-splice, suffix-prefill, decode, emit);
+//!   clients opt in per request with `"stages": true` and
+//!   `serve_benchmark` folds the stages into per-stage p50/p99 bench
+//!   fields plus a `--slow-log-ms` structured exemplar line.
+//! * **Prometheus exposition** (`metrics`) — `{"cmd":"metrics"}` renders
+//!   the engine's counters and log-bucket histograms (cumulative
+//!   `_bucket`/`le` lines) in the text exposition format, merged across
+//!   replicas; `{"cmd":"stats"}` carries provenance alongside (uptime,
+//!   crate version, config echo).
+//!
 //! * **L2** — the target LM as a JAX graph (`python/compile/model.py`),
 //!   AOT-lowered to HLO text per (variant, fn, batch-bucket).
 //! * **L1** — the fused W8A8 verification GEMM as a Pallas kernel
@@ -119,5 +148,6 @@ pub mod runtime;
 pub mod server;
 pub mod spec;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod workload;

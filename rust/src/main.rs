@@ -56,6 +56,7 @@ fn real_main() -> Result<()> {
     .opt("chunked-prefill", Some("on"),
          "admission prefill in chunks riding spare decode slots: on | off (off = monolithic)")
     .flag("warmup", "serve: pre-populate the prefix cache from workload templates at boot")
+    .flag("trace", "arm the flight recorder: per-request span events, exported by {\"cmd\":\"trace\"}")
     .opt("replicas", Some("1"), "serve: engine replicas behind the dispatcher (1 = single engine)")
     .opt("dispatch", Some("locality"),
          "serve: replica dispatch policy: locality (prefix-hashing + work stealing) | random")
@@ -122,6 +123,7 @@ fn real_main() -> Result<()> {
         // The cluster stamps per-replica identity when it clones this config.
         replica: 0,
         replicas: 1,
+        trace: parsed.has("trace"),
     };
 
     match cmd.as_str() {

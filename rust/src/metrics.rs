@@ -276,6 +276,33 @@ impl Metrics {
         self.hists.lock().unwrap().get(name).cloned()
     }
 
+    /// Owned point-in-time snapshot of every counter/gauge/histogram, for
+    /// cross-thread scrapes and cross-replica merging.
+    pub fn export(&self) -> MetricsDump {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.clone()))
+            .collect();
+        MetricsDump { counters, gauges, hists }
+    }
+
     /// Snapshot as JSON (stable key order for golden tests).
     pub fn to_json(&self) -> Json {
         let counters = self
@@ -327,6 +354,86 @@ impl Metrics {
     }
 }
 
+/// Owned registry snapshot: mergeable across replicas (counters/gauges add,
+/// histograms merge bucket-wise) and renderable in Prometheus text
+/// exposition format for `{"cmd":"metrics"}`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsDump {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, Histogram>,
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; anything else becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+impl MetricsDump {
+    /// Fold another replica's snapshot into this one.
+    pub fn merge(&mut self, other: &MetricsDump) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Render as Prometheus text exposition format (version 0.0.4).
+    /// Histograms become cumulative `_bucket{le="..."}` series straight from
+    /// the log-buckets, plus exact `_sum`/`_count`. Empty-count buckets are
+    /// skipped (the cumulative values stay exact); the `+Inf` bucket is
+    /// always emitted.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = format!("quasar_{}", sanitize(name));
+            let _ = writeln!(out, "# TYPE {n} counter");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let n = format!("quasar_{}", sanitize(name));
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (name, h) in &self.hists {
+            let n = format!("quasar_{}", sanitize(name));
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if c == 0 && i + 1 < counts.len() {
+                    continue;
+                }
+                let le = Histogram::bucket_upper_bound(i);
+                let le = if le.is_infinite() {
+                    "+Inf".to_string()
+                } else {
+                    format!("{le}")
+                };
+                let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{n}_sum {}", h.sum());
+            let _ = writeln!(out, "{n}_count {}", h.count());
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -367,6 +474,49 @@ mod tests {
             j.get("histograms").unwrap().get("h").unwrap().get("count").unwrap().as_i64().unwrap(),
             1
         );
+    }
+
+    #[test]
+    fn export_merge_and_prometheus_text() {
+        let a = Metrics::new();
+        a.inc("requests_completed", 3);
+        a.set_gauge("queue_depth", 2);
+        a.observe("sched_delay_s", 0.001);
+        a.observe("sched_delay_s", 0.002);
+        let b = Metrics::new();
+        b.inc("requests_completed", 4);
+        b.set_gauge("queue_depth", 1);
+        b.observe("sched_delay_s", 0.1);
+        let mut dump = a.export();
+        dump.merge(&b.export());
+        assert_eq!(dump.counters["requests_completed"], 7);
+        assert_eq!(dump.gauges["queue_depth"], 3);
+        assert_eq!(dump.hists["sched_delay_s"].count(), 3);
+
+        let text = dump.to_prometheus();
+        assert!(text.contains("# TYPE quasar_requests_completed counter"));
+        assert!(text.contains("quasar_requests_completed 7"));
+        assert!(text.contains("# TYPE quasar_queue_depth gauge"));
+        assert!(text.contains("quasar_queue_depth 3"));
+        assert!(text.contains("# TYPE quasar_sched_delay_s histogram"));
+        assert!(text.contains("quasar_sched_delay_s_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("quasar_sched_delay_s_count 3"));
+        // no exponent notation anywhere (Prometheus floats are plain decimal)
+        assert!(!text.contains('e') || !text.lines().any(|l| {
+            l.split_whitespace().nth(1).is_some_and(|v| v.contains('e') && v != "+Inf")
+        }));
+        // cumulative bucket counts are non-decreasing
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev);
+            prev = v;
+        }
+        // dotted / dashed names sanitize
+        let c = Metrics::new();
+        c.inc("governor.demote-total", 1);
+        let t = c.export().to_prometheus();
+        assert!(t.contains("quasar_governor_demote_total 1"));
     }
 
     #[test]

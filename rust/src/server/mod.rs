@@ -35,6 +35,24 @@
 //!                                     "locality_misses": ..,
 //!                                     "locality_hit_rate": ..,
 //!                                     "dispatched": [..]}, ...}
+//!   -> {.., "stages": true}       <- the response additionally carries
+//!                                     {"stages": {"queue_s": ..,
+//!                                     "dispatch_s": .., "splice_s": ..,
+//!                                     "prefill_s": .., "decode_s": ..,
+//!                                     "emit_s": ..}, "replica": ..,
+//!                                     "stolen": ..} — a per-request stage
+//!                                     breakdown summing to latency_s plus
+//!                                     where dispatch landed it
+//!   -> {"cmd": "trace"}           <- Chrome trace-event JSON: drains the
+//!                                     flight recorder (see `crate::trace`;
+//!                                     requires `EngineConfig::trace`). One
+//!                                     track per replica, one async lane
+//!                                     per request; open in Perfetto.
+//!   -> {"cmd": "metrics"}         <- {"metrics": "..."} — Prometheus text
+//!                                     exposition of the engine metrics
+//!                                     registry (counters, gauges, and
+//!                                     histograms with cumulative buckets);
+//!                                     fleet-merged under a cluster
 //!   -> {"cmd": "shutdown"}        <- {"ok": true}  (server exits)
 //!
 //! Threading model (two-tier): each connection is handled by a pool worker,
@@ -62,8 +80,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::{ClusterHandle, Completion, EngineHandle, FinishReason, GenParams,
-                         Priority, Ticket};
+use crate::coordinator::{ClusterHandle, Completion, DispatchInfo, EngineHandle,
+                         FinishReason, GenParams, Priority, StageBreakdown, Ticket};
+use crate::metrics::MetricsDump;
 use crate::tokenizer::{Tokenizer, BOS_ID, EOS_ID};
 use crate::util::json::{parse, Json};
 
@@ -114,6 +133,22 @@ impl ServeHandle {
         }
     }
 
+    /// [`ServeHandle::submit`], plus where the request landed. A bare
+    /// engine always reports replica 0, never stolen.
+    pub fn submit_dispatch(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+        task: &str,
+    ) -> Result<(Ticket, DispatchInfo)> {
+        match self {
+            ServeHandle::Engine(h) => {
+                Ok((h.submit(prompt, params, task)?, DispatchInfo::default()))
+            }
+            ServeHandle::Cluster(h) => h.submit_dispatch(prompt, params, task),
+        }
+    }
+
     /// `{"cmd":"stats"}` payload: flat engine keys for a bare engine, the
     /// same flat keys plus `replicas` + `dispatch` for a fleet.
     pub fn stats_json(&self) -> Json {
@@ -121,6 +156,28 @@ impl ServeHandle {
             ServeHandle::Engine(h) => h.stats().to_json(),
             ServeHandle::Cluster(h) => h.cluster_stats().to_json(),
         }
+    }
+
+    /// `{"cmd":"trace"}` payload: drain the flight recorder into Chrome
+    /// trace-event JSON (a valid empty document when tracing is off).
+    pub fn trace_json(&self) -> Json {
+        match self {
+            ServeHandle::Engine(h) => h.trace_json(),
+            ServeHandle::Cluster(h) => h.trace_json(),
+        }
+    }
+
+    /// Full metrics-registry dump (fleet-merged under a cluster).
+    pub fn metrics_dump(&self) -> Result<MetricsDump> {
+        match self {
+            ServeHandle::Engine(h) => h.metrics_dump(),
+            ServeHandle::Cluster(h) => h.metrics_dump(),
+        }
+    }
+
+    /// `{"cmd":"metrics"}` payload body: Prometheus text exposition.
+    pub fn metrics_text(&self) -> Result<String> {
+        Ok(self.metrics_dump()?.to_prometheus())
     }
 }
 
@@ -197,6 +254,13 @@ fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
         match cmd.as_str()? {
             "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
             "stats" => return Ok(handle.stats_json()),
+            "trace" => return Ok(handle.trace_json()),
+            "metrics" => {
+                return Ok(Json::obj(vec![(
+                    "metrics",
+                    Json::str(handle.metrics_text()?),
+                )]))
+            }
             "shutdown" => {
                 stop.store(true, Ordering::SeqCst);
                 return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
@@ -226,17 +290,43 @@ fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
         .map(|v| v.as_str().map(String::from))
         .transpose()?
         .unwrap_or_default();
+    let want_stages = req
+        .opt("stages")
+        .map(|v| v.as_bool())
+        .transpose()?
+        .unwrap_or(false);
     let ids = tok.encode(&prompt_text, true);
 
     // Lock-free submit; this worker blocks only on its own ticket while the
     // engine multiplexes every connection's request in one batch.
-    let ticket = handle.submit(ids, params, &task)?;
+    let (ticket, dispatch) = handle.submit_dispatch(ids, params, &task)?;
     let Some(completion) = ticket.wait(REQUEST_TIMEOUT) else {
         // Don't leak the KV row of a request nobody is waiting for.
         let _ = handle.cancel(ticket.id);
         anyhow::bail!("generation timed out");
     };
-    Ok(completion_json(&completion, tok))
+    let mut resp = completion_json(&completion, tok);
+    if want_stages {
+        if let Json::Obj(m) = &mut resp {
+            m.insert("stages".into(), stages_json(&completion.stages));
+            m.insert("replica".into(), Json::num(dispatch.replica as f64));
+            m.insert("stolen".into(), Json::Bool(dispatch.stolen));
+        }
+    }
+    Ok(resp)
+}
+
+/// Per-request stage breakdown for the wire: the six stages partition the
+/// response's `latency_s` (see [`StageBreakdown`]).
+pub fn stages_json(st: &StageBreakdown) -> Json {
+    Json::obj(vec![
+        ("queue_s", Json::num(st.queue_s)),
+        ("dispatch_s", Json::num(st.dispatch_s)),
+        ("splice_s", Json::num(st.splice_s)),
+        ("prefill_s", Json::num(st.prefill_s)),
+        ("decode_s", Json::num(st.decode_s)),
+        ("emit_s", Json::num(st.emit_s)),
+    ])
 }
 
 /// Serialize a completion for the wire (shared with the examples).

@@ -1,0 +1,955 @@
+//! Flight recorder: low-overhead structured tracing for per-request span
+//! attribution.
+//!
+//! # Event taxonomy
+//!
+//! Every lifecycle edge of a request emits a [`TraceEvent`] keyed by the
+//! request's ticket id (the causal key) plus the replica id and a monotonic
+//! microsecond timestamp relative to the process epoch:
+//!
+//! | kind              | emitted by            | meaning                                   |
+//! |-------------------|-----------------------|-------------------------------------------|
+//! | `Enqueued`        | `scheduler.rs`        | request entered the admission queue       |
+//! | `Dispatched`      | `cluster.rs`          | dispatcher chose a replica (home/stolen)  |
+//! | `Admitted`        | `engine.rs`           | row + window slot granted; prefix hit len |
+//! | `PrefillChunk`    | `engine.rs`           | one prefill chunk (ridden/dedicated/shed) |
+//! | `Plan`            | `engine.rs`           | step planner chose N sub-batches          |
+//! | `ChunkExec`       | `engine.rs`           | one chunk program call (variant/fn/bucket)|
+//! | `Scatter`         | `engine.rs`           | sub-batch KV scatter-back done            |
+//! | `Commit`          | `engine.rs`           | per-row accepted-token commit             |
+//! | `Audit`           | `engine.rs`           | governor shadow audit ran                 |
+//! | `Demote`/`Promote`| `engine.rs`           | governor precision transition             |
+//! | `Cancelled`       | `engine.rs`           | request cancelled                         |
+//! | `Finished`        | `router.rs`           | completion delivered to the waiter        |
+//!
+//! Step-scoped events (`Plan`, `ChunkExec`, `Scatter`, `Audit`,
+//! `Demote`/`Promote`) carry ticket 0: they belong to a replica track, not a
+//! request lane.
+//!
+//! # Overhead contract
+//!
+//! Disabled (`EngineConfig.trace == false`, the default): every record site is
+//! one `Relaxed` load of an `AtomicBool` plus a branch — no allocation, no
+//! clock read, no TLS access. The mock-sim differential in
+//! `tests/bench_mock_sim.rs` holds the output bit-identical and the modeled
+//! cost equal with tracing off.
+//!
+//! Enabled: an event is one clock read plus five atomic stores into a
+//! per-thread single-producer seqlock ring ([`RING_CAP`] slots, overwrite
+//! oldest). Readers never block writers; a drain that races a wrap or an
+//! in-flight write counts the slot into `trace_dropped_events` instead of
+//! surfacing a torn event. The invariant `recorded == drained + dropped` is
+//! held by a concurrent property test in this module.
+//!
+//! # Export
+//!
+//! [`FlightRecorder::chrome_trace_json`] renders the drained stream as Chrome
+//! trace-event JSON (Perfetto-loadable): one process track per replica,
+//! `ChunkExec` as complete slices on the replica track, and one async-span
+//! lane per request (`b`/`n`/`e` events keyed by ticket id) covering
+//! Enqueued → … → Finished.
+
+use std::cell::RefCell;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Slots per per-thread ring. Power of two (index masking).
+pub const RING_CAP: usize = 4096;
+
+/// Function codes carried in `ChunkExec` payloads.
+pub const FUNC_DECODE: u8 = 0;
+pub const FUNC_VERIFY: u8 = 1;
+pub const FUNC_PREFILL: u8 = 2;
+pub const FUNC_AUDIT: u8 = 3;
+const FUNC_NAMES: [&str; 4] = ["decode", "verify", "prefill", "audit"];
+
+/// Name of a `ChunkExec` function code.
+pub fn func_name(func: u8) -> &'static str {
+    FUNC_NAMES.get(func as usize).copied().unwrap_or("other")
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (pinned at first use; the
+/// recorder constructor pins it early so all rings share one origin).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// How a prefill chunk was executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillMode {
+    /// Rode a spare slot of a decode/verify sub-batch the step ran anyway.
+    Ridden = 0,
+    /// Needed a dedicated prefill-program call (a counted decode stall).
+    Dedicated = 1,
+    /// Dedicated call shed to the smaller verify program under queue pressure.
+    Shed = 2,
+}
+
+impl PrefillMode {
+    fn name(self) -> &'static str {
+        match self {
+            PrefillMode::Ridden => "ridden",
+            PrefillMode::Dedicated => "dedicated",
+            PrefillMode::Shed => "shed",
+        }
+    }
+}
+
+/// A typed span event. Payload fields are packed into one `u64` on the wire
+/// (see `payload()` / `decode()`), so the ring slot stays four words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request entered the admission queue.
+    Enqueued,
+    /// Dispatcher routed the request to `replica` (stolen = spilled off home).
+    Dispatched { replica: u32, stolen: bool },
+    /// Admission granted; `hit_tokens` spliced from the prefix cache.
+    Admitted { hit_tokens: u32 },
+    /// One prefill chunk executed.
+    PrefillChunk { mode: PrefillMode },
+    /// Step planner partitioned the active rows into `subbatches` calls.
+    Plan { subbatches: u32 },
+    /// One chunk program call: interned variant id, function code, batch
+    /// bucket, wall time in microseconds.
+    ChunkExec { variant: u8, func: u8, bucket: u16, wall_us: u32 },
+    /// Sub-batch scatter-back completed.
+    Scatter,
+    /// Row committed `accepted` tokens this step.
+    Commit { accepted: u32 },
+    /// Governor shadow audit ran on a sub-batch.
+    Audit,
+    /// Governor demoted a request class to the reference precision.
+    Demote,
+    /// Governor re-promoted a request class to the quantized variant.
+    Promote,
+    /// Request cancelled.
+    Cancelled,
+    /// Completion delivered to the waiting client.
+    Finished,
+}
+
+impl EventKind {
+    fn tag(self) -> u64 {
+        match self {
+            EventKind::Enqueued => 1,
+            EventKind::Dispatched { .. } => 2,
+            EventKind::Admitted { .. } => 3,
+            EventKind::PrefillChunk { .. } => 4,
+            EventKind::Plan { .. } => 5,
+            EventKind::ChunkExec { .. } => 6,
+            EventKind::Scatter => 7,
+            EventKind::Commit { .. } => 8,
+            EventKind::Audit => 9,
+            EventKind::Demote => 10,
+            EventKind::Promote => 11,
+            EventKind::Cancelled => 12,
+            EventKind::Finished => 13,
+        }
+    }
+
+    /// Stable display name (used for Chrome `name` fields).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueued => "enqueued",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::Plan { .. } => "plan",
+            EventKind::ChunkExec { .. } => "chunk_exec",
+            EventKind::Scatter => "scatter",
+            EventKind::Commit { .. } => "commit",
+            EventKind::Audit => "audit",
+            EventKind::Demote => "demote",
+            EventKind::Promote => "promote",
+            EventKind::Cancelled => "cancelled",
+            EventKind::Finished => "finished",
+        }
+    }
+
+    /// Tie-break rank for equal-timestamp sorting: pipeline order, so a
+    /// drained stream reads causally even at microsecond granularity.
+    fn rank(self) -> u8 {
+        match self {
+            EventKind::Dispatched { .. } => 0,
+            EventKind::Enqueued => 1,
+            EventKind::Admitted { .. } => 2,
+            EventKind::PrefillChunk { .. } => 3,
+            EventKind::Plan { .. } => 4,
+            EventKind::ChunkExec { .. } => 5,
+            EventKind::Scatter => 6,
+            EventKind::Audit => 7,
+            EventKind::Commit { .. } => 8,
+            EventKind::Demote => 9,
+            EventKind::Promote => 10,
+            EventKind::Cancelled => 11,
+            EventKind::Finished => 12,
+        }
+    }
+
+    fn payload(self) -> u64 {
+        match self {
+            EventKind::Dispatched { replica, stolen } => {
+                ((replica as u64) << 1) | stolen as u64
+            }
+            EventKind::Admitted { hit_tokens } => hit_tokens as u64,
+            EventKind::PrefillChunk { mode } => mode as u64,
+            EventKind::Plan { subbatches } => subbatches as u64,
+            EventKind::ChunkExec { variant, func, bucket, wall_us } => {
+                variant as u64
+                    | (func as u64) << 8
+                    | (bucket as u64) << 16
+                    | (wall_us as u64) << 32
+            }
+            EventKind::Commit { accepted } => accepted as u64,
+            _ => 0,
+        }
+    }
+
+    fn decode(tag: u64, payload: u64) -> Option<EventKind> {
+        Some(match tag {
+            1 => EventKind::Enqueued,
+            2 => EventKind::Dispatched {
+                replica: (payload >> 1) as u32,
+                stolen: payload & 1 != 0,
+            },
+            3 => EventKind::Admitted { hit_tokens: payload as u32 },
+            4 => EventKind::PrefillChunk {
+                mode: match payload {
+                    0 => PrefillMode::Ridden,
+                    1 => PrefillMode::Dedicated,
+                    2 => PrefillMode::Shed,
+                    _ => return None,
+                },
+            },
+            5 => EventKind::Plan { subbatches: payload as u32 },
+            6 => EventKind::ChunkExec {
+                variant: payload as u8,
+                func: (payload >> 8) as u8,
+                bucket: (payload >> 16) as u16,
+                wall_us: (payload >> 32) as u32,
+            },
+            7 => EventKind::Scatter,
+            8 => EventKind::Commit { accepted: payload as u32 },
+            9 => EventKind::Audit,
+            10 => EventKind::Demote,
+            11 => EventKind::Promote,
+            12 => EventKind::Cancelled,
+            13 => EventKind::Finished,
+            _ => return None,
+        })
+    }
+}
+
+/// A drained, decoded event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Microseconds since the process trace epoch.
+    pub ts_us: u64,
+    /// Request ticket id; 0 for step-scoped (replica-track) events.
+    pub ticket: u64,
+    /// Replica that recorded the event.
+    pub replica: u32,
+    pub kind: EventKind,
+}
+
+/// One seqlock slot: sequence word + four payload words. Even seq 2i+2 means
+/// generation i is published; odd means a write is in flight.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; 4],
+}
+
+/// Single-producer ring. Only the owning thread writes; any thread may read.
+struct Ring {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn new() -> Self {
+        let slots = (0..RING_CAP)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                words: [
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                ],
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring { slots, head: AtomicU64::new(0) }
+    }
+
+    /// Publish one event (owner thread only). Seqlock write protocol: mark
+    /// the slot odd, release-fence, store the words, then the even seq store
+    /// (Release) publishes them; the head bump (Release) makes the slot
+    /// visible to drains.
+    fn push(&self, w: [u64; 4]) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[h as usize & (RING_CAP - 1)];
+        slot.seq.store(2 * h + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        for (dst, src) in slot.words.iter().zip(w) {
+            dst.store(src, Ordering::Relaxed);
+        }
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Read generation `i` if still intact; `None` on overwrite or a torn
+    /// (in-flight) write.
+    fn read(&self, i: u64) -> Option<[u64; 4]> {
+        let slot = &self.slots[i as usize & (RING_CAP - 1)];
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 != 2 * i + 2 {
+            return None;
+        }
+        let w = [
+            slot.words[0].load(Ordering::Relaxed),
+            slot.words[1].load(Ordering::Relaxed),
+            slot.words[2].load(Ordering::Relaxed),
+            slot.words[3].load(Ordering::Relaxed),
+        ];
+        fence(Ordering::Acquire);
+        let s2 = slot.seq.load(Ordering::Relaxed);
+        (s2 == s1).then_some(w)
+    }
+}
+
+struct RingEntry {
+    ring: Arc<Ring>,
+    /// Next generation to drain from this ring.
+    tail: u64,
+}
+
+thread_local! {
+    /// Per-thread rings, keyed by recorder id (a process can host several
+    /// recorders across tests; each gets its own ring on each thread).
+    static TLS_RINGS: RefCell<Vec<(u64, Arc<Ring>)>> = const { RefCell::new(Vec::new()) };
+}
+
+fn next_recorder_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The trace sink: owns the per-thread rings, the enable flag, the drop
+/// counter, and the interned variant-name table.
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    dropped: AtomicU64,
+    id: u64,
+    names: Mutex<Vec<String>>,
+    rings: Mutex<Vec<RingEntry>>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("enabled", &self.enabled.load(Ordering::Relaxed))
+            .field("dropped", &self.dropped.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(enabled: bool) -> Self {
+        epoch(); // pin the time origin before any thread records
+        FlightRecorder {
+            enabled: AtomicBool::new(enabled),
+            dropped: AtomicU64::new(0),
+            id: next_recorder_id(),
+            names: Mutex::new(Vec::new()),
+            rings: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative events lost to ring wrap or torn reads.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Intern a variant name, returning a stable small id for `ChunkExec`
+    /// payloads. Caps at 255 ("other").
+    pub fn intern(&self, name: &str) -> u8 {
+        let mut names = self.names.lock().unwrap();
+        if let Some(i) = names.iter().position(|n| n == name) {
+            return i as u8;
+        }
+        if names.len() >= 255 {
+            return 255;
+        }
+        names.push(name.to_string());
+        (names.len() - 1) as u8
+    }
+
+    fn variant_names(&self) -> Vec<String> {
+        self.names.lock().unwrap().clone()
+    }
+
+    /// This thread's ring for this recorder, registering it on first use.
+    fn thread_ring(&self) -> Arc<Ring> {
+        TLS_RINGS.with(|cell| {
+            let mut rings = cell.borrow_mut();
+            if let Some((_, r)) = rings.iter().find(|(id, _)| *id == self.id) {
+                return r.clone();
+            }
+            let ring = Arc::new(Ring::new());
+            rings.push((self.id, ring.clone()));
+            self.rings
+                .lock()
+                .unwrap()
+                .push(RingEntry { ring: ring.clone(), tail: 0 });
+            ring
+        })
+    }
+
+    /// Record one event. Callers go through [`TraceHandle::record`], which
+    /// branches on the enable flag first.
+    pub fn record_raw(&self, ticket: u64, replica: u32, ts_us: u64, kind: EventKind) {
+        let w = [
+            ticket,
+            ts_us,
+            kind.tag() | (replica as u64) << 8,
+            kind.payload(),
+        ];
+        self.thread_ring().push(w);
+    }
+
+    /// Drain all rings since the previous drain. Returns the decoded events
+    /// sorted by `(ts_us, pipeline rank, ticket)` plus the cumulative drop
+    /// counter.
+    pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
+        let mut out = Vec::new();
+        {
+            let mut rings = self.rings.lock().unwrap();
+            for entry in rings.iter_mut() {
+                let head = entry.ring.head.load(Ordering::Acquire);
+                let lo = head.saturating_sub(RING_CAP as u64).max(entry.tail);
+                if lo > entry.tail {
+                    self.dropped.fetch_add(lo - entry.tail, Ordering::Relaxed);
+                }
+                for i in lo..head {
+                    match entry.ring.read(i).and_then(decode_words) {
+                        Some(ev) => out.push(ev),
+                        None => {
+                            self.dropped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                entry.tail = head;
+            }
+        }
+        // Stable sort: per-ring (per-thread) order is preserved at equal keys.
+        out.sort_by_key(|ev| (ev.ts_us, ev.kind.rank(), ev.ticket));
+        (out, self.dropped())
+    }
+
+    /// Drain and render as Chrome trace-event JSON.
+    pub fn chrome_trace_json(&self) -> Json {
+        let names = self.variant_names();
+        let (events, dropped) = self.drain();
+        chrome_trace(&events, &names, dropped, self.enabled())
+    }
+}
+
+fn decode_words(w: [u64; 4]) -> Option<TraceEvent> {
+    let kind = EventKind::decode(w[2] & 0xff, w[3])?;
+    Some(TraceEvent {
+        ts_us: w[1],
+        ticket: w[0],
+        replica: (w[2] >> 8) as u32,
+        kind,
+    })
+}
+
+/// Cheap cloneable recording capability: a recorder reference plus the
+/// replica id stamped onto every event.
+#[derive(Debug, Clone)]
+pub struct TraceHandle {
+    rec: Option<Arc<FlightRecorder>>,
+    replica: u32,
+}
+
+impl Default for TraceHandle {
+    fn default() -> Self {
+        TraceHandle::disabled()
+    }
+}
+
+impl TraceHandle {
+    pub fn new(rec: Arc<FlightRecorder>, replica: u32) -> Self {
+        TraceHandle { rec: Some(rec), replica }
+    }
+
+    /// A handle that records nothing and holds no recorder.
+    pub fn disabled() -> Self {
+        TraceHandle { rec: None, replica: 0 }
+    }
+
+    /// Same recorder, different replica id stamp.
+    pub fn for_replica(&self, replica: u32) -> Self {
+        TraceHandle { rec: self.rec.clone(), replica }
+    }
+
+    /// The single-branch off path: one Relaxed atomic load when a recorder
+    /// is attached, a `None` check when not.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        matches!(&self.rec, Some(r) if r.enabled())
+    }
+
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.rec.as_ref()
+    }
+
+    /// Capture a timestamp only if tracing is live — lets callers pin an
+    /// event's time before its ticket id is known, with zero cost when off.
+    #[inline]
+    pub fn stamp(&self) -> Option<u64> {
+        self.enabled().then(now_us)
+    }
+
+    /// Record an event now. When disabled this is the contract's single
+    /// atomic branch: no allocation, no clock read, no TLS access.
+    #[inline]
+    pub fn record(&self, ticket: u64, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
+        self.record_slow(now_us(), ticket, kind);
+    }
+
+    /// Record an event at a pre-captured [`stamp`](Self::stamp) timestamp.
+    #[inline]
+    pub fn record_at(&self, ts_us: u64, ticket: u64, kind: EventKind) {
+        if !self.enabled() {
+            return;
+        }
+        self.record_slow(ts_us, ticket, kind);
+    }
+
+    #[cold]
+    fn record_slow(&self, ts_us: u64, ticket: u64, kind: EventKind) {
+        if let Some(rec) = &self.rec {
+            rec.record_raw(ticket, self.replica, ts_us, kind);
+        }
+    }
+
+    /// Intern a variant name (0 when disabled: payloads are never drained).
+    pub fn intern(&self, name: &str) -> u8 {
+        match &self.rec {
+            Some(rec) if rec.enabled() => rec.intern(name),
+            _ => 0,
+        }
+    }
+}
+
+fn variant_label(names: &[String], id: u8) -> String {
+    names
+        .get(id as usize)
+        .cloned()
+        .unwrap_or_else(|| format!("v{id}"))
+}
+
+/// Render a drained event stream as Chrome trace-event JSON (the
+/// `traceEvents` array format Perfetto loads). One process (`pid`) per
+/// replica; `ChunkExec` becomes a complete (`X`) slice on the replica track;
+/// each request ticket becomes an async nestable lane (`b`/`n`/`e` keyed by
+/// the ticket id) spanning its first to last event.
+pub fn chrome_trace(
+    events: &[TraceEvent],
+    variant_names: &[String],
+    dropped: u64,
+    enabled: bool,
+) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+
+    // Replica set: the recording replica, plus dispatch targets.
+    let mut replicas: Vec<u32> = Vec::new();
+    for ev in events {
+        let pid = match ev.kind {
+            EventKind::Dispatched { replica, .. } => replica,
+            _ => ev.replica,
+        };
+        if !replicas.contains(&pid) {
+            replicas.push(pid);
+        }
+    }
+    replicas.sort_unstable();
+    for r in &replicas {
+        out.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::Num(*r as f64)),
+            ("tid", Json::Num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(format!("replica {r}")))]),
+            ),
+        ]));
+    }
+
+    // First/last event index per ticket, to open/close the async lanes.
+    let mut first: std::collections::BTreeMap<u64, usize> = Default::default();
+    let mut last: std::collections::BTreeMap<u64, usize> = Default::default();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.ticket == 0 {
+            continue;
+        }
+        first.entry(ev.ticket).or_insert(i);
+        last.insert(ev.ticket, i);
+    }
+
+    for (i, ev) in events.iter().enumerate() {
+        let pid = match ev.kind {
+            EventKind::Dispatched { replica, .. } => replica,
+            _ => ev.replica,
+        };
+        if ev.ticket == 0 {
+            // Step-scoped: replica track.
+            match ev.kind {
+                EventKind::ChunkExec { variant, func, bucket, wall_us } => {
+                    out.push(Json::obj(vec![
+                        ("ph", Json::str("X")),
+                        (
+                            "name",
+                            Json::str(format!(
+                                "exec {} b{} {}",
+                                func_name(func),
+                                bucket,
+                                variant_label(variant_names, variant)
+                            )),
+                        ),
+                        ("cat", Json::str("step")),
+                        ("pid", Json::Num(pid as f64)),
+                        ("tid", Json::Num(0.0)),
+                        (
+                            "ts",
+                            Json::Num(ev.ts_us.saturating_sub(wall_us as u64) as f64),
+                        ),
+                        ("dur", Json::Num(wall_us as f64)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                (
+                                    "variant",
+                                    Json::str(variant_label(variant_names, variant)),
+                                ),
+                                ("fn", Json::str(func_name(func))),
+                                ("bucket", Json::Num(bucket as f64)),
+                            ]),
+                        ),
+                    ]));
+                }
+                _ => {
+                    let mut args = vec![];
+                    if let EventKind::Plan { subbatches } = ev.kind {
+                        args.push(("subbatches", Json::Num(subbatches as f64)));
+                    }
+                    out.push(Json::obj(vec![
+                        ("ph", Json::str("i")),
+                        ("name", Json::str(ev.kind.name())),
+                        ("cat", Json::str("step")),
+                        ("s", Json::str("t")),
+                        ("pid", Json::Num(pid as f64)),
+                        ("tid", Json::Num(0.0)),
+                        ("ts", Json::Num(ev.ts_us as f64)),
+                        ("args", Json::obj(args)),
+                    ]));
+                }
+            }
+            continue;
+        }
+
+        let id = Json::str(format!("{}", ev.ticket));
+        if first.get(&ev.ticket) == Some(&i) {
+            out.push(Json::obj(vec![
+                ("ph", Json::str("b")),
+                ("cat", Json::str("request")),
+                ("id", id.clone()),
+                ("name", Json::str(format!("request {}", ev.ticket))),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(ev.ts_us as f64)),
+            ]));
+        }
+
+        let mut args: Vec<(&str, Json)> = vec![("ticket", Json::Num(ev.ticket as f64))];
+        match ev.kind {
+            EventKind::Dispatched { replica, stolen } => {
+                args.push(("target", Json::Num(replica as f64)));
+                args.push(("stolen", Json::Bool(stolen)));
+            }
+            EventKind::Admitted { hit_tokens } => {
+                args.push(("hit_tokens", Json::Num(hit_tokens as f64)));
+            }
+            EventKind::PrefillChunk { mode } => {
+                args.push(("mode", Json::str(mode.name())));
+            }
+            EventKind::Commit { accepted } => {
+                args.push(("accepted", Json::Num(accepted as f64)));
+            }
+            _ => {}
+        }
+        out.push(Json::obj(vec![
+            ("ph", Json::str("n")),
+            ("cat", Json::str("request")),
+            ("id", id.clone()),
+            ("name", Json::str(ev.kind.name())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(ev.ts_us as f64)),
+            ("args", Json::obj(args)),
+        ]));
+
+        if last.get(&ev.ticket) == Some(&i) {
+            out.push(Json::obj(vec![
+                ("ph", Json::str("e")),
+                ("cat", Json::str("request")),
+                ("id", id),
+                ("name", Json::str(format!("request {}", ev.ticket))),
+                ("pid", Json::Num(pid as f64)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(ev.ts_us as f64)),
+            ]));
+        }
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("enabled", Json::Bool(enabled)),
+        ("trace_dropped_events", Json::Num(dropped as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn all_kinds() -> Vec<EventKind> {
+        vec![
+            EventKind::Enqueued,
+            EventKind::Dispatched { replica: 3, stolen: true },
+            EventKind::Dispatched { replica: 0, stolen: false },
+            EventKind::Admitted { hit_tokens: 4095 },
+            EventKind::PrefillChunk { mode: PrefillMode::Ridden },
+            EventKind::PrefillChunk { mode: PrefillMode::Dedicated },
+            EventKind::PrefillChunk { mode: PrefillMode::Shed },
+            EventKind::Plan { subbatches: 7 },
+            EventKind::ChunkExec { variant: 2, func: FUNC_VERIFY, bucket: 16, wall_us: 1234 },
+            EventKind::Scatter,
+            EventKind::Commit { accepted: 5 },
+            EventKind::Audit,
+            EventKind::Demote,
+            EventKind::Promote,
+            EventKind::Cancelled,
+            EventKind::Finished,
+        ]
+    }
+
+    #[test]
+    fn payload_round_trips_every_kind() {
+        for kind in all_kinds() {
+            let got = EventKind::decode(kind.tag(), kind.payload());
+            assert_eq!(got, Some(kind), "round trip failed for {kind:?}");
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Arc::new(FlightRecorder::new(false));
+        let h = TraceHandle::new(rec.clone(), 0);
+        assert!(!h.enabled());
+        assert_eq!(h.stamp(), None);
+        h.record(1, EventKind::Enqueued);
+        h.record_at(5, 1, EventKind::Finished);
+        let (events, dropped) = rec.drain();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+        // The default handle holds no recorder at all.
+        let d = TraceHandle::default();
+        assert!(!d.enabled());
+        d.record(1, EventKind::Enqueued);
+    }
+
+    #[test]
+    fn events_drain_in_causal_order() {
+        let rec = Arc::new(FlightRecorder::new(true));
+        let h = TraceHandle::new(rec.clone(), 2);
+        h.record(10, EventKind::Enqueued);
+        h.record(10, EventKind::Admitted { hit_tokens: 8 });
+        h.record(10, EventKind::Commit { accepted: 3 });
+        h.record(10, EventKind::Finished);
+        let (events, dropped) = rec.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 4);
+        assert!(events.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        assert_eq!(events[0].kind, EventKind::Enqueued);
+        assert_eq!(events[3].kind, EventKind::Finished);
+        assert!(events.iter().all(|e| e.replica == 2 && e.ticket == 10));
+        // A second drain yields nothing new.
+        let (again, _) = rec.drain();
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn ring_wrap_drops_exactly() {
+        let rec = Arc::new(FlightRecorder::new(true));
+        let h = TraceHandle::new(rec.clone(), 0);
+        let extra = 37u64;
+        let total = RING_CAP as u64 + extra;
+        for i in 0..total {
+            h.record(1, EventKind::Commit { accepted: i as u32 });
+        }
+        let (events, dropped) = rec.drain();
+        assert_eq!(events.len(), RING_CAP);
+        assert_eq!(dropped, extra);
+        // The survivors are the newest RING_CAP events, still in order.
+        let accepted: Vec<u32> = events
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::Commit { accepted } => accepted,
+                _ => panic!("unexpected kind"),
+            })
+            .collect();
+        assert_eq!(accepted[0], extra as u32);
+        assert!(accepted.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    /// Concurrent property: K writers × N events with a concurrent drainer.
+    /// Self-validating payloads catch torn reads; the drop counter plus the
+    /// drained count must account for every recorded event; drained events
+    /// stay per-ticket monotonic across successive drains.
+    #[test]
+    fn concurrent_record_drain_accounts_for_every_event() {
+        const WRITERS: u64 = 4;
+        const PER_WRITER: u64 = 20_000;
+        let rec = Arc::new(FlightRecorder::new(true));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let drainer = {
+            let rec = rec.clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                let mut drained: Vec<TraceEvent> = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let (evs, _) = rec.drain();
+                    drained.extend(evs);
+                }
+                drained
+            })
+        };
+
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|t| {
+                let rec = rec.clone();
+                thread::spawn(move || {
+                    let h = TraceHandle::new(rec, t as u32);
+                    for i in 0..PER_WRITER {
+                        // Payload encodes (ticket, seq): torn reads can't
+                        // produce a consistent pair.
+                        h.record(
+                            t + 1,
+                            EventKind::Commit {
+                                accepted: ((t + 1) * 1_000_000 + i) as u32,
+                            },
+                        );
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let mut drained = drainer.join().unwrap();
+        let (tail_events, dropped) = rec.drain();
+        drained.extend(tail_events);
+
+        assert_eq!(
+            drained.len() as u64 + dropped,
+            WRITERS * PER_WRITER,
+            "every recorded event must be drained or counted dropped"
+        );
+        let mut last_seq: std::collections::BTreeMap<u64, u64> = Default::default();
+        for ev in &drained {
+            let accepted = match ev.kind {
+                EventKind::Commit { accepted } => accepted as u64,
+                _ => panic!("unexpected kind {:?}", ev.kind),
+            };
+            let ticket = accepted / 1_000_000;
+            assert_eq!(ticket, ev.ticket, "torn event: payload/ticket mismatch");
+            let seq = accepted % 1_000_000;
+            if let Some(prev) = last_seq.get(&ev.ticket) {
+                assert!(
+                    seq > *prev,
+                    "per-ticket order violated: {seq} after {prev} for ticket {}",
+                    ev.ticket
+                );
+            }
+            last_seq.insert(ev.ticket, seq);
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape_covers_lanes_and_tracks() {
+        let rec = Arc::new(FlightRecorder::new(true));
+        let h = TraceHandle::new(rec.clone(), 0);
+        let v = rec.intern("w8a8");
+        assert_eq!(v, rec.intern("w8a8"));
+        h.record(7, EventKind::Enqueued);
+        h.record(7, EventKind::Admitted { hit_tokens: 0 });
+        h.record(
+            0,
+            EventKind::ChunkExec { variant: v, func: FUNC_DECODE, bucket: 4, wall_us: 50 },
+        );
+        h.record(7, EventKind::Commit { accepted: 2 });
+        h.record(7, EventKind::Finished);
+        let json = rec.chrome_trace_json();
+        let text = json.to_string();
+        assert!(text.contains("\"traceEvents\""));
+        let evs = match json.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        let phases: Vec<String> = evs
+            .iter()
+            .filter_map(|e| match e.get("ph") {
+                Some(Json::Str(s)) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert!(phases.contains(&"M".to_string()), "process metadata missing");
+        assert!(phases.contains(&"b".to_string()), "async begin missing");
+        assert!(phases.contains(&"e".to_string()), "async end missing");
+        assert!(phases.contains(&"X".to_string()), "exec slice missing");
+        assert_eq!(
+            phases.iter().filter(|p| *p == "b").count(),
+            phases.iter().filter(|p| *p == "e").count(),
+            "unbalanced async lanes"
+        );
+        assert!(text.contains("w8a8"));
+        assert_eq!(
+            json.get("trace_dropped_events"),
+            Some(&Json::Num(0.0))
+        );
+    }
+}

@@ -4,7 +4,7 @@
 //! microsecond-to-second latencies are captured with ~4% relative error at a
 //! fixed 256-bucket footprint, plus exact min/max/mean/count.
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     /// log-spaced buckets covering [1e-7, 1e3) in 25-per-decade resolution
     buckets: Vec<u64>,
@@ -123,6 +123,25 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Raw per-bucket counts (index 0 = underflow, last = overflow); pairs
+    /// with [`bucket_upper_bound`] for cumulative (Prometheus-style) export.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Inclusive upper bound of bucket `i` in the recorded unit: the
+    /// underflow bucket tops out at the scale floor, the overflow bucket at
+    /// +Inf.
+    pub fn bucket_upper_bound(i: usize) -> f64 {
+        if i == 0 {
+            10f64.powf(DECADES_LO)
+        } else if i + 1 >= N_BUCKETS {
+            f64::INFINITY
+        } else {
+            10f64.powf(DECADES_LO + i as f64 / PER_DECADE as f64)
+        }
+    }
+
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -209,6 +228,22 @@ mod tests {
         assert_eq!(a.count(), c.count());
         assert!((a.mean() - c.mean()).abs() < 1e-12);
         assert_eq!(a.p95(), c.p95());
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotone_and_cover_recordings() {
+        let bounds: Vec<f64> = (0..N_BUCKETS).map(Histogram::bucket_upper_bound).collect();
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*bounds.last().unwrap(), f64::INFINITY);
+        let mut h = Histogram::new();
+        for v in [1e-9, 0.0004, 0.25, 7.5, 1e6] {
+            h.record(v);
+            // every recorded value lands in a bucket whose bound covers it
+            let i = (0..N_BUCKETS)
+                .find(|&i| h.bucket_counts()[i] > 0 && Histogram::bucket_upper_bound(i) >= v);
+            assert!(i.is_some(), "no covering bucket for {v}");
+        }
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
     }
 
     #[test]

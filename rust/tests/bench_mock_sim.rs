@@ -9,13 +9,17 @@
 mod common;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use quasar::bench::BenchReport;
 use quasar::coordinator::{pack_prefill_riders, plan_step, CallLog, FnKind, PlanCtx, PlanRow,
                           PrefillPending, VariantCtx};
+use quasar::trace::{FlightRecorder, TraceHandle};
 use quasar::util::json;
+use quasar::util::rng::Pcg;
 
-use common::sim::{check_equivalent, run_equivalence, sim_perf, SIM_CHUNK, SIM_L};
+use common::sim::{check_equivalent, run_equivalence, sim_perf, Sim, SIM_CHUNK, SIM_L,
+                  SIM_VOCAB};
 
 /// Useful positions over executed positions, the engine's chunk-efficiency
 /// definition applied to the sim's call log.
@@ -134,4 +138,67 @@ fn shed_load_caps_the_dedicated_prefill_stall() {
     );
     println!("calm_stall_s={calm_s:.9}");
     println!("shed_stall_s={shed_s:.9}");
+}
+
+/// Flight-recorder differential: an armed trace handle must be a pure tap.
+/// Two elastic sims consume identical seeded drafts — one with the recorder
+/// armed, one with the default disabled handle — and must produce
+/// bit-identical committed streams, identical call logs, and identical
+/// modeled decode time (the recorder books zero modeled cost). The armed
+/// recorder must actually have captured events; the disabled handle drains
+/// nothing because it holds no ring at all.
+#[test]
+fn trace_recording_never_changes_the_sim() {
+    let (n_req, steps, full) = (4usize, 32usize, 4usize);
+    let recorder = Arc::new(FlightRecorder::new(true));
+    let mut armed = Sim::new(n_req, full, sim_perf(0), true);
+    armed.trace = TraceHandle::new(Arc::clone(&recorder), 0);
+    let mut silent = Sim::new(n_req, full, sim_perf(0), true);
+    assert!(!silent.trace.enabled(), "sim default must be trace-off");
+
+    let mut rng = Pcg::seeded(0x7ACE);
+    for _ in 0..steps {
+        let drafts: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| {
+                let len = rng.usize_below(SIM_CHUNK);
+                (0..len).map(|_| rng.below(SIM_VOCAB as u64) as i32).collect()
+            })
+            .collect();
+        armed.step(&drafts);
+        silent.step(&drafts);
+    }
+
+    for (i, (a, s)) in armed.reqs.iter().zip(&silent.reqs).enumerate() {
+        assert_eq!(
+            a.committed, s.committed,
+            "req {i}: tracing changed the committed stream"
+        );
+        assert_eq!(a.cached, s.cached, "req {i}: tracing changed the cache extent");
+    }
+    assert_eq!(
+        armed.log.records.len(),
+        silent.log.records.len(),
+        "tracing changed the call pattern"
+    );
+    let armed_s = armed.perf.decode_time(&armed.log, None);
+    let silent_s = silent.perf.decode_time(&silent.log, None);
+    assert_eq!(
+        armed_s.to_bits(),
+        silent_s.to_bits(),
+        "tracing must add zero modeled cost"
+    );
+
+    let (events, dropped) = recorder.drain();
+    assert!(
+        !events.is_empty(),
+        "armed recorder captured no events from {steps} elastic steps"
+    );
+    // 32 steps of Plan + ChunkExec + 4 Commits stay far under one ring's
+    // capacity, so nothing may have been overwritten.
+    assert_eq!(dropped, 0, "ring wrapped under a trivial load");
+    // Timestamps come from one monotonic clock, so the drained (merged)
+    // stream is ordered.
+    for w in events.windows(2) {
+        assert!(w[0].ts_us <= w[1].ts_us, "drained events out of ts order");
+    }
 }

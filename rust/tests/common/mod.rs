@@ -202,6 +202,7 @@ impl TestRig {
             chunked_prefill: self.chunked_prefill,
             replica: 0,
             replicas: 1,
+            trace: false,
         }
     }
 
@@ -267,6 +268,8 @@ pub mod sim {
     use quasar::prop_assert;
     use quasar::runtime::{CostModelCfg, ModelCfg, Tensor};
     use quasar::spec::{verify_draft, Draft};
+    use quasar::trace::{EventKind, TraceHandle, FUNC_AUDIT, FUNC_DECODE, FUNC_PREFILL,
+                        FUNC_VERIFY};
     use quasar::util::prop::ok;
     use quasar::util::rng::Pcg;
 
@@ -376,6 +379,10 @@ pub mod sim {
         /// Degraded-variant mode: the mock chunk flips every argmax (see
         /// [`mock_chunk`]). Toggled per step by the governed-sim test.
         pub flip: bool,
+        /// Flight-recorder tap for the elastic pipeline: disabled by default
+        /// so the sim stays cost-free; the trace differential test swaps in
+        /// an armed handle and asserts the committed streams don't move.
+        pub trace: TraceHandle,
     }
 
     impl Sim {
@@ -398,7 +405,16 @@ pub mod sim {
                 let row = group.join_prefix(i, &k1, &v1, 1).unwrap();
                 reqs.push(SimReq { row, committed: vec![prompt_tok], cached: 1 });
             }
-            Sim { group, reqs, log: CallLog::default(), perf, full, elastic, flip: false }
+            Sim {
+                group,
+                reqs,
+                log: CallLog::default(),
+                perf,
+                full,
+                elastic,
+                flip: false,
+                trace: TraceHandle::disabled(),
+            }
         }
 
         fn commit(req: &mut SimReq, draft: &[i32], logits: &Tensor<f32>, lrow: usize) {
@@ -498,6 +514,10 @@ pub mod sim {
                 plan_step(&ctx, &rows).unwrap()
             };
             assert!(plan.modeled_s <= plan.monolithic_s + 1e-15);
+            self.trace.record(
+                0,
+                EventKind::Plan { subbatches: plan.sub_batches.len() as u32 },
+            );
             for sb in &plan.sub_batches {
                 let (bucket, chunk) = (sb.bucket, sb.chunk);
                 let row_lens: Vec<(usize, usize)> = sb
@@ -530,8 +550,30 @@ pub mod sim {
                 self.group.scatter_rows(&write_back, &sk, &sv).unwrap();
                 self.record(sb.fn_kind, bucket, chunk, sb.rows.len(), sb.tokens_used,
                             sb.useful_tokens);
+                self.trace.record(
+                    0,
+                    EventKind::ChunkExec {
+                        variant: self.trace.intern("fp32"),
+                        func: match sb.fn_kind {
+                            FnKind::Decode => FUNC_DECODE,
+                            FnKind::Verify => FUNC_VERIFY,
+                            FnKind::Prefill => FUNC_PREFILL,
+                            FnKind::Audit => FUNC_AUDIT,
+                        },
+                        bucket: bucket as u16,
+                        wall_us: 0,
+                    },
+                );
                 for (i, &di) in sb.rows.iter().enumerate() {
+                    let before = self.reqs[di].committed.len();
                     Self::commit(&mut self.reqs[di], &drafts[di], &logits, i);
+                    // commit() appends `accepted + 1` tokens (the bonus/next
+                    // token rides along), so recover the acceptance count.
+                    let accepted = self.reqs[di].committed.len() - before - 1;
+                    self.trace.record(
+                        di as u64,
+                        EventKind::Commit { accepted: accepted as u32 },
+                    );
                 }
             }
         }

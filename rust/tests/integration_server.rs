@@ -131,6 +131,43 @@ fn round_trip_phase(addr: SocketAddr) {
     assert_eq!(dispatch.get("policy").unwrap().as_str().unwrap(), "locality");
     assert_eq!(dispatch.get("steals").unwrap().as_i64().unwrap(), 0,
                "a 1-replica fleet can never steal: {stats}");
+    // Provenance block: uptime/version/config echo ride on every snapshot.
+    assert!(stats.get("uptime_s").unwrap().as_f64().unwrap() > 0.0, "{stats}");
+    assert_eq!(
+        stats.get("version").unwrap().as_str().unwrap(),
+        env!("CARGO_PKG_VERSION"),
+        "{stats}"
+    );
+    let config = stats.get("config").unwrap();
+    assert_eq!(config.get("batch").unwrap().as_i64().unwrap(), 4, "{stats}");
+    assert_eq!(config.get("replicas").unwrap().as_i64().unwrap(), 1, "{stats}");
+    assert_eq!(config.get("dispatch").unwrap().as_str().unwrap(), "locality");
+    assert_eq!(config.get("trace").unwrap().as_bool().unwrap(), false);
+    assert!(!config.get("method").unwrap().as_str().unwrap().is_empty());
+
+    // Prometheus exposition: the metrics command wraps the text format in a
+    // one-field JSON envelope; spot-check the scrape contract.
+    let metrics = client
+        .roundtrip(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .unwrap();
+    let text = metrics.get("metrics").unwrap().as_str().unwrap().to_string();
+    assert!(text.contains("# TYPE"), "no TYPE lines in exposition:\n{text}");
+    assert!(
+        text.lines().any(|l| l.contains("_bucket{") && l.contains("le=")),
+        "no histogram bucket lines in exposition:\n{text}"
+    );
+
+    // Trace export: with the recorder unarmed (EngineConfig::quasar defaults
+    // trace off) the endpoint still answers with a valid, empty trace.
+    let trace = client
+        .roundtrip(&Json::obj(vec![("cmd", Json::str("trace"))]))
+        .unwrap();
+    assert!(trace.opt("error").is_none(), "trace endpoint errored: {trace}");
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events.iter().all(|e| e.opt("ph").is_some()),
+        "malformed trace event: {trace}"
+    );
 }
 
 /// The acceptance test for the concurrent scheduler: >= 8 connections in
