@@ -12,8 +12,20 @@
 //! handle as the dispatcher-free A/B reference, and `--replicas 1` must
 //! match it bit for bit (CI's checksum gate).
 //!
+//! `--scenario` selects a workload shape from the suite in
+//! `quasar::workload` — `mixed` (the original round-robin closed loop),
+//! `agentic` (multi-turn tool-call loops over family templates), `diurnal`
+//! (open-loop bursty trace replay at `--rate` req/s base), `longctx`
+//! (long-context summarization) and `thrash` (adversarial cache-thrashing
+//! salted prompts). Every run is scored against SLO targets
+//! (`--slo-ttft-ms` / `--slo-tpot-ms`): the attainment fractions and
+//! per-stage percentiles land on stdout and in the `BENCH_*.json`
+//! artifact. `--adaptive-gamma off` pins speculation depth to `--gamma`'s
+//! static cap (the per-class controller A/B reference; outputs are
+//! bit-identical either way — only drafted-but-rejected work moves).
+//!
 //! Run: `cargo run --release --example serve_benchmark -- \
-//!         [--n 24] [--clients 8] [--batch 4]`
+//!         [--n 24] [--clients 8] [--batch 4] [--scenario agentic]`
 
 use std::net::TcpListener;
 use std::path::PathBuf;
@@ -26,6 +38,7 @@ use quasar::coordinator::{ClusterConfig, ClusterHandle, DispatchPolicy, EngineCo
                           EngineHandle, GovernorConfig};
 use quasar::server::{serve, Client, ServeHandle};
 use quasar::util::cli::Cli;
+use quasar::workload::{ScenarioKind, ScenarioPlan};
 use quasar::util::hist::Histogram;
 use quasar::util::rng::Pcg;
 use quasar::util::json::Json;
@@ -76,6 +89,9 @@ struct ClientTally {
     /// Worst relative error of sum(stages) vs latency_s over this client's
     /// requests — CI gates it under 5%.
     stage_err_max: f64,
+    /// Requests meeting the TTFT / TPOT SLO targets (attainment numerators).
+    slo_ttft_ok: usize,
+    slo_tpot_ok: usize,
     tokens: u64,
     l_sum: f64,
     done: usize,
@@ -92,7 +108,16 @@ fn run() -> anyhow::Result<()> {
         .opt("temp", Some("0"), "sampling temperature")
         .opt("method", Some("both"), "ngram | quasar | both")
         .opt("turns", Some("1"), "closed-loop turns per work item: turn k+1 resubmits the \
-                                  full transcript (prompt + answer) as a longer prompt")
+                                  full transcript (prompt + answer) as a longer prompt \
+                                  (scenarios with an intrinsic turn count take the max)")
+        .opt("scenario", Some("mixed"),
+             "workload scenario: mixed | agentic | diurnal | longctx | thrash")
+        .opt("rate", Some("8"), "open-loop base arrival rate for trace scenarios (req/s)")
+        .opt("adaptive-gamma", Some("on"),
+             "per-class adaptive draft depth: on (default; learned per task class) | \
+              off (the engine's gamma cap is the fixed depth)")
+        .opt("slo-ttft-ms", Some("500"), "TTFT SLO target (ms) for attainment scoring")
+        .opt("slo-tpot-ms", Some("50"), "TPOT SLO target (ms) for attainment scoring")
         .flag("governor", "adaptive precision: audit w8a8 verification, demote to fp32 on drift")
         .flag("prefix-share", "shared-prefix workload: per-task system-prompt templates")
         .flag("no-prefix-cache", "disable shared-prefix KV reuse (cold-admission baseline)")
@@ -124,6 +149,15 @@ fn run() -> anyhow::Result<()> {
     let temp = args.f64("temp");
     let turns = args.usize("turns").max(1);
     let page_tokens = args.usize("page-tokens").max(1);
+    let scenario_name = args.str("scenario");
+    let rate = args.f64("rate");
+    let adaptive_gamma = match args.str("adaptive-gamma").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("unknown --adaptive-gamma {other} (on|off)"),
+    };
+    let slo_ttft_s = args.f64("slo-ttft-ms") / 1e3;
+    let slo_tpot_s = args.f64("slo-tpot-ms") / 1e3;
     let method = args.str("method");
     let governor = args.has("governor");
     let prefix_share = args.has("prefix-share");
@@ -154,6 +188,11 @@ fn run() -> anyhow::Result<()> {
                    "--max-new", &max_new.to_string(),
                    "--temp", &temp.to_string(),
                    "--turns", &turns.to_string(),
+                   "--scenario", &scenario_name,
+                   "--rate", &rate.to_string(),
+                   "--adaptive-gamma", if adaptive_gamma { "on" } else { "off" },
+                   "--slo-ttft-ms", &(slo_ttft_s * 1e3).to_string(),
+                   "--slo-tpot-ms", &(slo_tpot_s * 1e3).to_string(),
                    "--page-tokens", &page_tokens.to_string(),
                    "--replicas", &replicas.to_string(),
                    "--dispatch", &dispatch,
@@ -206,14 +245,29 @@ fn run() -> anyhow::Result<()> {
     }
 
     let ctx = BenchCtx::load()?;
-    let items = if prefix_share {
-        // Family templates half the prefill window long: enough shared
-        // tokens for the cache to matter, enough suffix to stay distinct.
-        let plen = ctx.manifest.model("qwen3-like")?.cfg.prefill_len / 2;
-        ctx.workloads.shared_prefix(n, plen, &mut Pcg::seeded(0xE2E))?
+    // Family templates half the prefill window long: enough shared tokens
+    // for the cache to matter, enough suffix to stay distinct.
+    let plen = ctx.manifest.model("qwen3-like")?.cfg.prefill_len / 2;
+    let kind = ScenarioKind::parse(&scenario_name)?;
+    let plan = if prefix_share {
+        // Legacy flag: the shared-prefix item set as a single-turn closed
+        // loop — CI's warm-vs-cold checksum legs depend on this exact shape.
+        ScenarioPlan {
+            kind,
+            items: ctx.workloads.shared_prefix(n, plen, &mut Pcg::seeded(0xE2E))?,
+            arrivals: Vec::new(),
+            turns: 1,
+        }
     } else {
-        ctx.workloads.mixed(n, &mut Pcg::seeded(0xE2E))?
+        ctx.workloads.scenario(kind, n, plen, rate, &mut Pcg::seeded(0xE2E))?
     };
+    // Scenarios with an intrinsic turn structure (agentic) raise the turn
+    // count; an explicit larger --turns still wins.
+    let turns = turns.max(plan.turns);
+    let items = plan.items;
+    // Open-loop pacing: offset seconds from run start per conversation;
+    // empty = closed loop (each client fires as soon as it is free).
+    let arrivals: Arc<Vec<f64>> = Arc::new(plan.arrivals);
     // The wire protocol takes prompt text; the closed-lexicon tokenizer
     // round-trips decode(encode(text)) exactly.
     let prompts: Arc<Vec<(String, String)>> = Arc::new(
@@ -241,6 +295,7 @@ fn run() -> anyhow::Result<()> {
     cfg.prefix.page_tokens = page_tokens;
     cfg.paged_rows = !no_paged_rows;
     cfg.chunked_prefill = !no_chunked_prefill;
+    cfg.adaptive_gamma = adaptive_gamma;
     cfg.trace = trace_on;
     let policy = DispatchPolicy::parse(&dispatch)
         .ok_or_else(|| anyhow::anyhow!("unknown --dispatch {dispatch} (locality|random)"))?;
@@ -298,6 +353,7 @@ fn run() -> anyhow::Result<()> {
         let next = Arc::clone(&next);
         let prompts = Arc::clone(&prompts);
         let slow_gate = Arc::clone(&slow_gate);
+        let arrivals = Arc::clone(&arrivals);
         let addr = addr.to_string();
         joins.push(std::thread::spawn(move || -> anyhow::Result<ClientTally> {
             let mut client = Client::connect(&addr)?;
@@ -306,6 +362,16 @@ fn run() -> anyhow::Result<()> {
                 let i = next.fetch_add(1, Ordering::SeqCst);
                 if i >= prompts.len() {
                     return Ok(tally);
+                }
+                // Open-loop trace replay: hold this conversation until its
+                // recorded arrival offset. Indices are claimed in order and
+                // the offsets are sorted, so the pool reproduces the trace's
+                // bursts as long as enough clients are free.
+                if let Some(&at) = arrivals.get(i) {
+                    let lag = at - t0.elapsed().as_secs_f64();
+                    if lag > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(lag));
+                    }
                 }
                 let (text, task) = &prompts[i];
                 // Multi-turn closed loop: turn k+1's prompt is turn k's
@@ -383,17 +449,23 @@ fn run() -> anyhow::Result<()> {
                     // misses transport + dispatch before the request reaches
                     // the engine thread. Subtract the post-first-token
                     // generation time from the observed roundtrip instead.
-                    tally.ttft.record((roundtrip_s - (lat_s - ttft_s)).max(0.0));
+                    let client_ttft_s = (roundtrip_s - (lat_s - ttft_s)).max(0.0);
+                    tally.ttft.record(client_ttft_s);
                     let toks: Vec<i64> = resp
                         .get("tokens")?
                         .as_arr()?
                         .iter()
                         .map(|t| t.as_i64())
                         .collect::<Result<_, _>>()?;
-                    tally.tpot.record(
-                        (lat_s - ttft_s).max(0.0)
-                            / toks.len().saturating_sub(1).max(1) as f64,
-                    );
+                    let tpot_s = (lat_s - ttft_s).max(0.0)
+                        / toks.len().saturating_sub(1).max(1) as f64;
+                    tally.tpot.record(tpot_s);
+                    if client_ttft_s <= slo_ttft_s {
+                        tally.slo_ttft_ok += 1;
+                    }
+                    if tpot_s <= slo_tpot_s {
+                        tally.slo_tpot_ok += 1;
+                    }
                     tally.checksum ^= fnv_request(i * turns + turn, &toks);
                     tally.tokens += toks.len() as u64;
                     tally.l_sum += resp.get("accept_len")?.as_f64()?;
@@ -419,6 +491,8 @@ fn run() -> anyhow::Result<()> {
         total.stage_decode.merge(&t.stage_decode);
         total.stage_emit.merge(&t.stage_emit);
         total.stage_err_max = total.stage_err_max.max(t.stage_err_max);
+        total.slo_ttft_ok += t.slo_ttft_ok;
+        total.slo_tpot_ok += t.slo_tpot_ok;
         total.tokens += t.tokens;
         total.l_sum += t.l_sum;
         total.done += t.done;
@@ -431,7 +505,9 @@ fn run() -> anyhow::Result<()> {
     );
 
     let scenario = format!(
-        "{method}{}{}{}",
+        "{method}{}{}{}{}{}",
+        if scenario_name != "mixed" { format!("_{scenario_name}") } else { String::new() },
+        if !adaptive_gamma { "_static" } else { "" },
         if no_paged_rows { "_copyrows" } else { "" },
         if no_chunked_prefill { "_monoprefill" } else { "" },
         match replicas {
@@ -455,13 +531,13 @@ fn run() -> anyhow::Result<()> {
     server.join().expect("server thread panicked")?;
 
     println!(
-        "\n=== {name}: {n} requests x {turns} turn(s), {clients} clients, b={batch}, \
-         T={temp} ==="
+        "\n=== {name} [{scenario_name}]: {n} requests x {turns} turn(s), {clients} clients, \
+         b={batch}, T={temp} ==="
     );
     println!("  wall                {wall:.1}s  ({:.1} tok/s CPU)",
              total.tokens as f64 / wall);
     println!("  tokens generated    {}", total.tokens);
-    println!("  mean acceptance L   {:.2}", total.l_sum / n as f64);
+    println!("  mean acceptance L   {:.2}", total.l_sum / total.done.max(1) as f64);
     println!("  batch occupancy     {:.2} rows/step (cap {}) over {} steps",
              stats.get("batch_occupancy")?.as_f64()?,
              stats.get("batch")?.as_i64()?,
@@ -493,6 +569,22 @@ fn run() -> anyhow::Result<()> {
                  gov.get("probes")?.as_i64()?,
                  gov.get("demotions")?.as_i64()?,
                  gov.get("promotions")?.as_i64()?);
+    }
+    // Per-class draft-depth controller: the accept EWMA each class has
+    // learned and the drafted/accepted volume behind it.
+    let gamma = stats.get("gamma")?;
+    let gamma_classes = gamma.get("classes")?.as_arr()?;
+    println!("  gamma controller    {} ({} classes), {} drafted / {} accepted over {} steps",
+             if adaptive_gamma { "adaptive" } else { "static (off)" },
+             gamma_classes.len(),
+             gamma.get("drafted")?.as_i64()?,
+             gamma.get("accepted")?.as_i64()?,
+             gamma.get("steps")?.as_i64()?);
+    for c in gamma_classes {
+        println!("    class {:<14} accept ewma {:.2} over {} steps",
+                 c.get("class")?.as_str()?,
+                 c.get("accept_ewma")?.as_f64()?,
+                 c.get("steps")?.as_i64()?);
     }
     let prefix = stats.get("prefix")?;
     let hit_rate = prefix.get("hit_rate")?.as_f64()?;
@@ -548,6 +640,11 @@ fn run() -> anyhow::Result<()> {
     println!("  request latency     {}", total.lat.summary_ms());
     println!("  ttft                {}", total.ttft.summary_ms());
     println!("  tpot                {}", total.tpot.summary_ms());
+    let slo_ttft_attainment = total.slo_ttft_ok as f64 / total.done.max(1) as f64;
+    let slo_tpot_attainment = total.slo_tpot_ok as f64 / total.done.max(1) as f64;
+    println!("  slo attainment      ttft<= {:.0}ms: {:.1}%   tpot<= {:.0}ms: {:.1}%",
+             slo_ttft_s * 1e3, slo_ttft_attainment * 100.0,
+             slo_tpot_s * 1e3, slo_tpot_attainment * 100.0);
     // Per-request stage attribution (from the opt-in "stages" wire field):
     // the six stages partition each request's observed latency, so their
     // sums must track latency_s to within float noise plus clock skew.
@@ -595,6 +692,16 @@ fn run() -> anyhow::Result<()> {
     println!("ttft_p50_s={:.6}", total.ttft.p50());
     println!("ttft_p99_s={:.6}", total.ttft.p99());
     println!("tpot_p99_s={:.6}", total.tpot.p99());
+    // Scenario/SLO gates: the suite smoke asserts the attainment fields
+    // exist and parse; the controller A/B legs compare output_checksum
+    // across adaptive on/off (lossless — depth policy never moves outputs)
+    // and drafted volume (the controller's actual lever).
+    println!("scenario={scenario_name}");
+    println!("adaptive_gamma={}", adaptive_gamma as u8);
+    println!("slo_ttft_attainment={slo_ttft_attainment:.4}");
+    println!("slo_tpot_attainment={slo_tpot_attainment:.4}");
+    println!("gamma_drafted={}", gamma.get("drafted")?.as_i64()?);
+    println!("gamma_accepted={}", gamma.get("accepted")?.as_i64()?);
     // Stage-attribution gate: the CI trace smoke requires the six per-stage
     // durations to reconstruct each request's latency within 5%.
     println!("stage_sum_max_rel_err={:.6}", total.stage_err_max);
@@ -620,8 +727,14 @@ fn run() -> anyhow::Result<()> {
     if let Some(dir) = &bench_json {
         let mut r = BenchReport::new(&scenario);
         r.text("method", &method)
+            .text("workload_scenario", &scenario_name)
             .flag("paged_rows", paged)
             .flag("chunked_prefill", !no_chunked_prefill)
+            .flag("adaptive_gamma", adaptive_gamma)
+            .num("slo_ttft_s", slo_ttft_s)
+            .num("slo_tpot_s", slo_tpot_s)
+            .num("slo_ttft_attainment", slo_ttft_attainment)
+            .num("slo_tpot_attainment", slo_tpot_attainment)
             .num("requests", (n * turns) as f64)
             .num("clients", clients as f64)
             .num("batch", batch as f64)
@@ -629,7 +742,7 @@ fn run() -> anyhow::Result<()> {
             .num("wall_s", wall)
             .num("tokens", total.tokens as f64)
             .num("throughput_tok_s", total.tokens as f64 / wall.max(1e-12))
-            .num("mean_accept_len", total.l_sum / n as f64)
+            .num("mean_accept_len", total.l_sum / total.done.max(1) as f64)
             .num("latency_p50_s", total.lat.p50())
             .num("latency_p95_s", total.lat.p95())
             .num("ttft_p50_s", total.ttft.p50())
@@ -701,6 +814,8 @@ fn run() -> anyhow::Result<()> {
             .num("tpot_cold_p99_s", pf.get("tpot_cold_p99_s")?.as_f64()?)
             .text("output_checksum", &format!("{:016x}", total.checksum));
         r.num("replica_count", replicas as f64);
+        // Per-class gamma controller state straight from the fleet stats.
+        r.json("gamma", gamma.clone());
         if let Some(d) = &dispatch_stats {
             // Per-replica breakdown straight from the fleet stats: shows
             // whether dispatch kept the replicas busy (occupancy), balanced

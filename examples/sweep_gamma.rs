@@ -49,6 +49,9 @@ fn run() -> anyhow::Result<()> {
             drafter: DrafterKind::Ngram(NgramConfig { gamma, adaptive: false, ..Default::default() }),
             batch: 1,
             gamma,
+            // A depth sweep measures the depth it requests: pin both the
+            // drafter's EWMA and the per-class controller off.
+            adaptive_gamma: false,
             seed: 0,
             policy: Default::default(),
             elastic: true,

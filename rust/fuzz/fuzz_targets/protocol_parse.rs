@@ -1,0 +1,32 @@
+//! Fuzz the JSON-lines protocol parser (`quasar::server::parse_request`)
+//! with arbitrary bytes. The parser fronts the TCP socket, so its contract
+//! is totality: any input — malformed JSON, wrong types, huge / non-finite
+//! numbers, unknown commands — returns `Err`, never panics. Accepted
+//! requests must additionally satisfy the invariants the engine relies on
+//! (already found one real crash: `deadline_ms: 1e999` used to reach
+//! `Duration::from_secs_f64(inf)`).
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use quasar::server::{parse_request, WireRequest};
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(line) = std::str::from_utf8(data) else { return };
+    match parse_request(line) {
+        Err(_) => {} // rejection is always a legal outcome
+        Ok(WireRequest::Command(_)) => {}
+        Ok(WireRequest::Generate { prompt: _, params, task: _, stages: _ }) => {
+            // The wire path always stops at EOS.
+            assert!(params.stop_at_eos);
+            // The JSON grammar has no NaN literal, so a parsed temperature
+            // is never NaN (the sampler divides by max(temp, eps)).
+            assert!(!params.temp.is_nan());
+            // A parsed deadline is a well-formed Duration by construction
+            // (from_secs_f64 would have panicked otherwise); bound it to
+            // the parser's documented clamp.
+            if let Some(d) = params.deadline {
+                assert!(d.as_secs_f64() <= 86_400.0 * 365.0 + 1.0);
+            }
+        }
+    }
+});

@@ -1,0 +1,91 @@
+//! Fuzz the admission scheduler with byte-driven op interleavings:
+//! push / pop / cancel / take_expired across all three policies, checked
+//! against a trivial set model. The scheduler sits between every submitter
+//! and the engine's KV rows, so the invariants are accounting exactness:
+//! depth mirrors the live set, ids never duplicate or leak, cancel hits
+//! exactly the queued ids, expiry drains only deadline-carrying requests,
+//! and the peak-depth high-water mark never runs behind the live depth.
+#![no_main]
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use libfuzzer_sys::fuzz_target;
+use quasar::coordinator::{GenParams, Priority, Request, SchedPolicy, Scheduler};
+
+fuzz_target!(|data: &[u8]| {
+    let mut bytes = data.iter().copied();
+    let policy = match bytes.next().unwrap_or(0) % 3 {
+        0 => SchedPolicy::Fifo,
+        1 => SchedPolicy::ShortestPromptFirst,
+        _ => SchedPolicy::Priority,
+    };
+    let mut sched = Scheduler::new(policy);
+    let t0 = Instant::now();
+    let mut live: HashSet<u64> = HashSet::new();
+    let mut next_id = 1u64;
+
+    while let Some(op) = bytes.next() {
+        match op % 4 {
+            0 => {
+                let arg = bytes.next().unwrap_or(0);
+                let id = next_id;
+                next_id += 1;
+                let params = GenParams {
+                    priority: match arg % 3 {
+                        0 => Priority::High,
+                        1 => Priority::Normal,
+                        _ => Priority::Low,
+                    },
+                    // Some already-expired, some far-future, some none.
+                    deadline: match arg % 5 {
+                        0 => Some(Duration::ZERO),
+                        1 | 2 => Some(Duration::from_secs(3600)),
+                        _ => None,
+                    },
+                    ..GenParams::default()
+                };
+                let prompt = vec![1i32; (arg as usize % 7) + 1];
+                sched.push(Request::new(id, prompt, params).with_submitted_at(t0));
+                live.insert(id);
+            }
+            1 => {
+                let popped = sched.pop();
+                match popped {
+                    Some(req) => assert!(live.remove(&req.id), "popped unknown id"),
+                    None => assert!(live.is_empty(), "pop missed queued work"),
+                }
+            }
+            2 => {
+                // Probe a mix of live, already-gone and never-minted ids.
+                let arg = bytes.next().unwrap_or(0) as u64;
+                let id = arg % (next_id + 2);
+                let hit = sched.cancel(id);
+                assert_eq!(
+                    hit.is_some(),
+                    live.contains(&id),
+                    "cancel({id}) disagreed with the model"
+                );
+                if let Some(req) = hit {
+                    assert_eq!(req.id, id);
+                    live.remove(&id);
+                }
+            }
+            _ => {
+                for req in sched.take_expired(Instant::now()) {
+                    assert!(live.remove(&req.id), "expired unknown id");
+                    assert!(
+                        req.params.deadline.is_some(),
+                        "expired a deadline-free request"
+                    );
+                }
+            }
+        }
+        assert_eq!(sched.depth(), live.len(), "depth diverged from live set");
+        assert_eq!(sched.is_empty(), live.is_empty());
+        assert!(sched.peak_depth() >= sched.depth());
+        for &id in &live {
+            assert!(sched.contains(id), "live id {id} vanished from the index");
+        }
+    }
+});

@@ -353,6 +353,30 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
             *variants.entry(v.variant.clone()).or_insert(0) += v.calls;
         }
     }
+    // Per-class draft-depth stats fold by class name: counters sum, and the
+    // fleet EWMA recombines under the drafted-token weight that produced
+    // each replica's value (steps-weighted would overweight shallow rows).
+    let mut gamma: std::collections::BTreeMap<String, super::router::GammaClassStat> =
+        std::collections::BTreeMap::new();
+    for s in snaps {
+        for c in &s.gamma {
+            let e = gamma
+                .entry(c.class.clone())
+                .or_insert_with(|| super::router::GammaClassStat {
+                    class: c.class.clone(),
+                    ..Default::default()
+                });
+            let total = e.drafted + c.drafted;
+            if total > 0 {
+                e.accept_ewma = (e.accept_ewma * e.drafted as f64
+                    + c.accept_ewma * c.drafted as f64)
+                    / total as f64;
+            }
+            e.steps += c.steps;
+            e.drafted = total;
+            e.accepted += c.accepted;
+        }
+    }
 
     let hits = sum_u64(&|s| s.prefix.hits);
     let misses = sum_u64(&|s| s.prefix.misses);
@@ -421,6 +445,7 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
             demotions: sum_u64(&|s| s.governor.demotions),
             promotions: sum_u64(&|s| s.governor.promotions),
         },
+        gamma: gamma.into_values().collect(),
         prefix: super::router::PrefixSnapshot {
             hits,
             misses,
@@ -863,6 +888,13 @@ mod tests {
                 demotions: 1,
                 promotions: 1,
             },
+            gamma: vec![super::super::router::GammaClassStat {
+                class: "chat".into(),
+                accept_ewma: 3.25,
+                steps: 20,
+                drafted: 80,
+                accepted: 65,
+            }],
             prefix: super::super::router::PrefixSnapshot {
                 hits: 30,
                 misses: 10,
@@ -917,6 +949,7 @@ mod tests {
                 dispatch: "none".into(),
                 paged_rows: true,
                 chunked_prefill: true,
+                adaptive_gamma: true,
                 trace: false,
             },
         };
@@ -936,6 +969,7 @@ mod tests {
         assert_eq!(a.buckets, s.buckets);
         assert_eq!(a.variants, s.variants);
         assert_eq!(a.governor, s.governor);
+        assert_eq!(a.gamma, s.gamma);
         assert_eq!(a.prefix, s.prefix);
         assert_eq!(a.kv, s.kv);
         assert_eq!(a.prefill, s.prefill);

@@ -161,6 +161,7 @@ use crate::tokenizer::{BOS_ID, EOS_ID};
 use crate::util::rng::Pcg;
 
 use super::calls::{CallLog, CallRecord, FnKind};
+use super::gamma::{GammaConfig, GammaController};
 use super::governor::{Governor, GovernorConfig, Route, Transition};
 use super::kv::{BatchGroup, PagedGroup, RowStore};
 use super::plan::{pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending, StepPlan,
@@ -193,6 +194,15 @@ pub struct EngineConfig {
     pub batch: usize,
     /// Speculation depth cap (<= model gamma_max).
     pub gamma: usize,
+    /// Per-class adaptive draft depth (`coordinator::gamma`): the engine
+    /// resolves each row's effective gamma from its class's
+    /// accepted-per-draft EWMA (accumulated across requests and turns) and
+    /// seeds fresh drafters from the class prior. `false` pins every draft
+    /// at the configured `gamma` — truly fixed depth, the static A/B
+    /// reference (`--adaptive-gamma off`) and the shape `--gamma` sweeps
+    /// measure. Lossless either way: depth moves drafted-but-rejected
+    /// cost, never committed tokens.
+    pub adaptive_gamma: bool,
     pub seed: u64,
     /// Admission ordering for queued requests (see `coordinator::scheduler`).
     pub policy: SchedPolicy,
@@ -248,6 +258,7 @@ impl EngineConfig {
             drafter: DrafterKind::Vanilla,
             batch,
             gamma: 0,
+            adaptive_gamma: true,
             seed: 0,
             policy: SchedPolicy::Fifo,
             elastic: true,
@@ -267,6 +278,7 @@ impl EngineConfig {
             drafter: DrafterKind::Ngram(NgramConfig { gamma, ..Default::default() }),
             batch,
             gamma,
+            adaptive_gamma: true,
             seed: 0,
             policy: SchedPolicy::Fifo,
             elastic: true,
@@ -359,6 +371,11 @@ pub struct Engine {
     variants: Vec<VariantSlot>,
     /// Adaptive-precision state machine (inert when disabled).
     governor: Governor,
+    /// Per-class draft-depth controller (`coordinator::gamma`): resolves
+    /// each row's effective gamma at draft time and seeds fresh drafters
+    /// from the class prior. Always records (the stats are free and feed
+    /// `{"cmd":"stats"}`); only clamps when `cfg.adaptive_gamma`.
+    gamma: GammaController,
     /// Shared-prefix KV reuse across admissions (inert when disabled) —
     /// and, under `paged_rows`, the page allocator the batch rows live in.
     prefix_cache: PrefixCache,
@@ -401,6 +418,10 @@ impl Engine {
         let perf = PerfModel::new(model.cost_model().clone(), mcfg.clone());
         let (prefill_k, prefill_v) = model.empty_cache(mcfg.n_layers, 1);
         let governor = Governor::new(cfg.governor.clone(), cfg.seed ^ 0x4649_4445);
+        let gamma = GammaController::new(GammaConfig {
+            enabled: cfg.adaptive_gamma,
+            ..GammaConfig::default()
+        });
         let prefix_cache = PrefixCache::new(cfg.prefix.clone());
         // Direct-embedding users (benches, tests) get a private recorder
         // when tracing is on; the router replaces it at spawn so a cluster's
@@ -432,6 +453,7 @@ impl Engine {
             perf,
             variants,
             governor,
+            gamma,
             prefix_cache,
             kv_peak_bytes: 0,
             prefill_k,
@@ -484,6 +506,17 @@ impl Engine {
         &mut self.governor
     }
 
+    /// The draft-depth controller (read-only view for stats/tests).
+    pub fn gamma_ctl(&self) -> &GammaController {
+        &self.gamma
+    }
+
+    /// Mutable depth-controller access: lets tests and operational tooling
+    /// pre-seed a class's acceptance prior.
+    pub fn gamma_ctl_mut(&mut self) -> &mut GammaController {
+        &mut self.gamma
+    }
+
     /// The shared-prefix KV cache (read-only view for stats/tests).
     pub fn prefix_cache(&self) -> &PrefixCache {
         &self.prefix_cache
@@ -513,7 +546,15 @@ impl Engine {
     fn make_drafter(&mut self) -> Result<Box<dyn Drafter>> {
         Ok(match &self.cfg.drafter {
             DrafterKind::Vanilla => Box::new(VanillaDrafter),
-            DrafterKind::Ngram(c) => Box::new(NgramDrafter::new(*c)),
+            DrafterKind::Ngram(c) => {
+                // The engine-level switch overrides the per-drafter flag:
+                // `adaptive_gamma: false` means a *truly* fixed depth —
+                // no intra-request EWMA either — so `--gamma` sweeps and
+                // the static A/B measure the depth they asked for.
+                let mut c = *c;
+                c.adaptive = self.cfg.adaptive_gamma;
+                Box::new(NgramDrafter::new(c))
+            }
             DrafterKind::Pruned(variant) => Box::new(PrunedDrafter::new(
                 Rc::clone(&self.model),
                 variant,
@@ -650,6 +691,13 @@ impl Engine {
             self.metrics.observe(names::SCHED_DELAY_S, sched_delay);
             let mut drafter = self.make_drafter()?;
             drafter.begin(&req.prompt)?;
+            // Warm-start the drafter's intra-request depth EWMA from the
+            // class's cross-request prior: a second turn (or a template
+            // sibling) drafts at the learned depth on its first step
+            // instead of relearning from the cold-start constant.
+            if let Some(prior) = self.gamma.prior(&req.task) {
+                drafter.seed_depth_prior(prior);
+            }
             let rng = self.rng.fork(req.params.seed.unwrap_or(req.id));
             let mut st = RequestState::new(req, drafter, rng);
             st.sched_delay_s = sched_delay;
@@ -1116,12 +1164,16 @@ impl Engine {
         let mut drafts: Vec<(usize, usize, Draft)> = Vec::with_capacity(decode_active.len());
         for &(row, slot) in &decode_active {
             let st = self.states[slot].as_mut().expect("leased slot has state");
+            // Class-resolved depth: the controller clamps the configured
+            // cap by the class's accepted-per-draft EWMA (full cap when
+            // static or unseen), then the row's KV room clamps again.
+            let g_class = self.gamma.resolve(&st.req.task, gamma_cap);
             // Keep a margin: the chunk writes `chunk_len` positions.
             let room = self
                 .mcfg
                 .max_seq
                 .saturating_sub(st.cached + 2);
-            let g_cap = gamma_cap.min(room);
+            let g_cap = g_class.min(room);
             let draft = if g_cap == 0 {
                 Draft::empty()
             } else {
@@ -1733,6 +1785,12 @@ impl Engine {
             }
             st.drafter.observe_commit(&commit)?;
             st.drafter.observe_outcome(draft.len(), outcome.accepted);
+            // Feed the class controller the same outcome the drafter sees:
+            // the depth prior survives this request and seeds the class's
+            // next admission. Recorded even in static mode — the per-class
+            // acceptance stats flow to `{"cmd":"stats"}` either way; only
+            // `resolve` (above) acts on them.
+            self.gamma.record(&st.req.task, draft.len(), outcome.accepted);
 
             Self::check_finish_with(self.mcfg.max_seq, st);
             if !st.is_active() {

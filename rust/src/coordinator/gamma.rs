@@ -1,0 +1,311 @@
+//! Per-class adaptive draft-depth controller: makes speculation *depth* a
+//! serving-time decision that survives request boundaries.
+//!
+//! The paper runs a static `gamma` per run, but speedup is the product of
+//! acceptance length and verification cost (Eq. 11/12): drafting past the
+//! depth a workload actually accepts buys nothing and still pays verify
+//! traffic for the rejected tail. Draft & Verify (PAPERS.md) sets draft
+//! length online from acceptance statistics; this controller does that per
+//! *request class* (the same task-tag key the fidelity governor uses), so
+//! the statistics accumulate across requests and turns instead of being
+//! relearned from a constant on every admission:
+//!
+//! * Every committed step feeds `(drafted, accepted)` for its row's class
+//!   into a per-class accepted-per-draft EWMA ([`GammaController::record`]).
+//! * At draft time the engine resolves each row's depth cap:
+//!   `clamp(round(ewma + headroom), 1, cap)` — deep enough to capture
+//!   acceptance streaks, shallow enough to bound wasted verification
+//!   ([`GammaController::resolve`], pure like the governor's `resolve`).
+//! * A fresh admission seeds its drafter's *intra-request* EWMA from the
+//!   class prior ([`GammaController::prior`] →
+//!   `Drafter::seed_depth_prior`), so a second turn drafts at the class's
+//!   learned depth on its first step instead of the cold-start constant.
+//!
+//! Invariants (mirrored from the governor, asserted by the unit tests
+//! below and the property tests in `rust/tests/prop_coordinator.rs`):
+//!
+//! 1. `resolve` is bounded: `0` exactly when `cap == 0`, else in
+//!    `[1, cap]` for any configuration and any recorded history.
+//! 2. An unseen class resolves to the full cap — no evidence, no clamp.
+//! 3. Depth recovers when acceptance recovers: the EWMA has no absorbing
+//!    floor, so a class throttled during an acceptance collapse climbs
+//!    back once `record` sees long accepted prefixes again.
+//! 4. The class map is bounded at [`MAX_CLASSES`]; past the cap unseen
+//!    tags fold into one shared [`OVERFLOW_CLASS`] that is tracked and
+//!    resolved like any other class (same folding rule as the governor).
+//! 5. Depth choices never change committed tokens: speculative decoding
+//!    is lossless, so the controller moves *cost* (drafted-but-rejected
+//!    tokens), never outputs — CI's checksum A/B holds with it on or off.
+
+use std::collections::BTreeMap;
+
+/// Tuning knobs for the depth policy. The constants match the drafter's
+/// previous per-request EWMA (`alpha` 0.2, `headroom` +2.0), so a
+/// single-class workload behaves like the old path with a longer memory.
+#[derive(Debug, Clone)]
+pub struct GammaConfig {
+    /// Master switch. Disabled: every class resolves to the full cap and
+    /// `prior` never seeds a drafter (the static-gamma A/B reference).
+    pub enabled: bool,
+    /// EWMA smoothing factor for accepted-per-draft.
+    pub alpha: f64,
+    /// Depth margin past the acceptance level: speculate a little deeper
+    /// than the recent accept length to capture streaks.
+    pub headroom: f64,
+}
+
+impl Default for GammaConfig {
+    fn default() -> Self {
+        GammaConfig { enabled: true, alpha: 0.2, headroom: 2.0 }
+    }
+}
+
+impl GammaConfig {
+    /// The static-gamma reference configuration.
+    pub fn off() -> Self {
+        GammaConfig { enabled: false, ..Default::default() }
+    }
+}
+
+/// Per-class depth bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ClassGamma {
+    /// EWMA of accepted tokens per drafting step.
+    pub accept_ewma: f64,
+    /// Drafting steps observed (steps with `drafted > 0`).
+    pub steps: u64,
+    /// Lifetime drafted tokens.
+    pub drafted: u64,
+    /// Lifetime accepted tokens.
+    pub accepted: u64,
+}
+
+impl ClassGamma {
+    fn fresh(first_accepted: usize) -> Self {
+        ClassGamma {
+            accept_ewma: first_accepted as f64,
+            steps: 0,
+            drafted: 0,
+            accepted: 0,
+        }
+    }
+}
+
+/// Cap on distinct tracked classes — same bound and folding rule as the
+/// governor's: the key is the client-supplied task tag, so past the cap
+/// unseen tags share one overflow class instead of growing state forever.
+const MAX_CLASSES: usize = 256;
+const OVERFLOW_CLASS: &str = "<overflow>";
+
+/// The controller itself: per-class EWMAs keyed like the governor's class
+/// map. Owned by the engine; `resolve` runs once per active row per step
+/// and `record` once per committed row — both a bounded BTreeMap probe.
+pub struct GammaController {
+    cfg: GammaConfig,
+    classes: BTreeMap<String, ClassGamma>,
+}
+
+impl GammaController {
+    pub fn new(cfg: GammaConfig) -> Self {
+        GammaController { cfg, classes: BTreeMap::new() }
+    }
+
+    pub fn cfg(&self) -> &GammaConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The tracked key for `class`: itself while known or while the map has
+    /// room, the shared overflow class once the cap is hit.
+    fn key<'a>(&self, class: &'a str) -> &'a str {
+        if self.classes.contains_key(class) || self.classes.len() < MAX_CLASSES {
+            class
+        } else {
+            OVERFLOW_CLASS
+        }
+    }
+
+    /// Effective draft depth for one row of `class` under `cap` (the
+    /// engine's `gamma_cap` — configured gamma already clamped to the
+    /// exported chunk). Pure: planning and drafting of one step agree.
+    ///
+    /// Returns 0 exactly when `cap == 0` (a row with no KV room drafts
+    /// nothing — the same early return that fixes the drafter's
+    /// `clamp(1, 0)` panic); otherwise the result is in `[1, cap]`.
+    pub fn resolve(&self, class: &str, cap: usize) -> usize {
+        if cap == 0 {
+            return 0;
+        }
+        if !self.cfg.enabled {
+            return cap;
+        }
+        match self.classes.get(self.key(class)) {
+            Some(st) => {
+                let g = (st.accept_ewma + self.cfg.headroom).round() as usize;
+                g.clamp(1, cap)
+            }
+            // No evidence yet: draft at the full cap, like the old path's
+            // first request.
+            None => cap,
+        }
+    }
+
+    /// The class's accepted-per-draft prior, for seeding a fresh drafter's
+    /// intra-request EWMA at admission. `None` while the class is unseen
+    /// (the drafter keeps its cold-start constant) or when disabled.
+    pub fn prior(&self, class: &str) -> Option<f64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.classes.get(self.key(class)).map(|st| st.accept_ewma)
+    }
+
+    /// Record one committed step's outcome for `class`. Steps that drafted
+    /// nothing carry no depth evidence and are skipped (mirrors the
+    /// drafter's own `observe_outcome` gate). The first observation seeds
+    /// the EWMA at its own accepted length instead of decaying from an
+    /// arbitrary constant.
+    pub fn record(&mut self, class: &str, drafted: usize, accepted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        let key = self.key(class).to_string();
+        let alpha = self.cfg.alpha;
+        let st = self
+            .classes
+            .entry(key)
+            .or_insert_with(|| ClassGamma::fresh(accepted));
+        if st.steps > 0 {
+            st.accept_ewma = (1.0 - alpha) * st.accept_ewma + alpha * accepted as f64;
+        }
+        st.steps += 1;
+        st.drafted += drafted as u64;
+        st.accepted += accepted as u64;
+    }
+
+    /// Per-class view for stats endpoints and tests.
+    pub fn class(&self, class: &str) -> Option<&ClassGamma> {
+        self.classes.get(class)
+    }
+
+    pub fn classes(&self) -> impl Iterator<Item = (&String, &ClassGamma)> {
+        self.classes.iter()
+    }
+
+    /// Lifetime drafting steps across every class.
+    pub fn total_steps(&self) -> u64 {
+        self.classes.values().map(|c| c.steps).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> GammaController {
+        GammaController::new(GammaConfig::default())
+    }
+
+    #[test]
+    fn disabled_controller_resolves_full_cap_and_never_seeds() {
+        let mut g = GammaController::new(GammaConfig::off());
+        g.record("c", 5, 0);
+        assert_eq!(g.resolve("c", 8), 8);
+        assert_eq!(g.resolve("c", 0), 0);
+        assert_eq!(g.prior("c"), None);
+    }
+
+    #[test]
+    fn unseen_class_resolves_full_cap() {
+        let g = ctl();
+        assert_eq!(g.resolve("never-seen", 5), 5);
+        assert_eq!(g.prior("never-seen"), None);
+    }
+
+    #[test]
+    fn zero_cap_resolves_zero_for_any_state() {
+        let mut g = ctl();
+        g.record("c", 8, 8);
+        assert_eq!(g.resolve("c", 0), 0, "cap 0 must not clamp(1, 0)");
+        assert_eq!(g.resolve("unseen", 0), 0);
+    }
+
+    #[test]
+    fn collapse_shrinks_and_recovery_restores_depth() {
+        let mut g = ctl();
+        for _ in 0..20 {
+            g.record("c", 8, 8);
+        }
+        assert_eq!(g.resolve("c", 8), 8, "healthy class drafts deep");
+        for _ in 0..40 {
+            g.record("c", 8, 0); // acceptance collapse
+        }
+        assert_eq!(g.resolve("c", 8), 2, "floor at ewma~0 + headroom");
+        for _ in 0..40 {
+            g.record("c", 8, 8);
+        }
+        assert!(g.resolve("c", 8) >= 7, "depth recovers with acceptance");
+    }
+
+    #[test]
+    fn first_observation_seeds_ewma_at_its_own_accept_length() {
+        let mut g = ctl();
+        g.record("c", 6, 6);
+        assert_eq!(g.prior("c"), Some(6.0));
+        assert_eq!(g.resolve("c", 10), 8, "6 + headroom 2");
+    }
+
+    #[test]
+    fn zero_draft_steps_carry_no_evidence() {
+        let mut g = ctl();
+        g.record("c", 0, 0);
+        assert!(g.class("c").is_none(), "draft misses must not seed a class");
+    }
+
+    #[test]
+    fn resolve_is_bounded_for_any_config_and_history() {
+        for &(alpha, headroom) in
+            &[(0.0, 0.0), (1.0, 100.0), (0.2, 2.0), (0.5, -3.0), (0.9, 1e9)]
+        {
+            let mut g = GammaController::new(GammaConfig { enabled: true, alpha, headroom });
+            for i in 0..50usize {
+                g.record("c", 1 + i % 9, i % 10);
+                for cap in 0..10 {
+                    let r = g.resolve("c", cap);
+                    if cap == 0 {
+                        assert_eq!(r, 0);
+                    } else {
+                        assert!(
+                            (1..=cap).contains(&r),
+                            "resolve out of bounds: {r} for cap {cap} (a={alpha}, h={headroom})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_map_is_bounded_and_overflow_tags_still_resolve() {
+        let mut g = ctl();
+        for i in 0..MAX_CLASSES + 50 {
+            g.record(&format!("class-{i}"), 8, 8);
+        }
+        assert!(
+            g.classes().count() <= MAX_CLASSES + 1,
+            "class map must stay bounded, got {}",
+            g.classes().count()
+        );
+        assert!(g.class(OVERFLOW_CLASS).is_some(), "excess tags fold into overflow");
+        // Overflow is governed like any other class: collapse recorded by
+        // one untracked tag throttles every other untracked tag.
+        for _ in 0..40 {
+            g.record("some-novel-tag", 8, 0);
+        }
+        assert_eq!(g.resolve("a-different-novel-tag", 8), 2);
+        assert_eq!(g.resolve("class-0", 8), 8, "tracked classes unaffected");
+    }
+}

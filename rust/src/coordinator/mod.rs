@@ -4,7 +4,8 @@
 //! (`scheduler`), paged shared-prefix KV reuse for suffix-only prefill —
 //! page-granular sharing, mid-stream snapshots, boot warm-up
 //! (`prefixcache`), cost-guided elastic step planning (`plan`), the
-//! adaptive-precision fidelity governor (`governor`), the decode loop
+//! adaptive-precision fidelity governor (`governor`), the per-class
+//! adaptive draft-depth controller (`gamma`), the decode loop
 //! (`engine`), call accounting for the cost model (`calls`), the threaded
 //! front door with correlated completion routing (`router`), and the
 //! replica-fleet dispatch plane — locality-hashing dispatch with
@@ -13,6 +14,7 @@
 pub mod calls;
 pub mod cluster;
 pub mod engine;
+pub mod gamma;
 pub mod governor;
 pub mod kv;
 pub mod plan;
@@ -26,6 +28,7 @@ pub use cluster::{aggregate, build_ring, dispatch_decision, replica_of_id, ring_
                   ClusterConfig, ClusterHandle, ClusterSnapshot, DispatchInfo,
                   DispatchPolicy, DispatchSnapshot};
 pub use engine::{DrafterKind, Engine, EngineConfig};
+pub use gamma::{ClassGamma, GammaConfig, GammaController};
 pub use governor::{Governor, GovernorConfig, Route, Transition};
 pub use kv::{BatchGroup, PagedGroup, RowStore};
 pub use plan::{best_bucket, pack_prefill_riders, plan_step, PlanCtx, PlanRow, PrefillPending,
@@ -33,7 +36,7 @@ pub use plan::{best_bucket, pack_prefill_riders, plan_step, PlanCtx, PlanRow, Pr
 pub use prefixcache::{Lease, LocalityIndex, PrefixCache, PrefixCacheConfig, PrefixCacheStats};
 pub use request::{Completion, FinishReason, GenParams, PrefillProgress, Priority, Request,
                   RequestState, StageBreakdown};
-pub use router::{BucketStat, ConfigEcho, EngineHandle, GovernorSnapshot, KvSnapshot,
-                 PrefillSnapshot, PrefixSnapshot, RouterStats, StatsSnapshot, Ticket,
-                 VariantCalls};
+pub use router::{BucketStat, ConfigEcho, EngineHandle, GammaClassStat, GovernorSnapshot,
+                 KvSnapshot, PrefillSnapshot, PrefixSnapshot, RouterStats, StatsSnapshot,
+                 Ticket, VariantCalls};
 pub use scheduler::{SchedPolicy, Scheduler};

@@ -12,6 +12,14 @@
 //! gather → run_chunk → scatter pipeline per sub-batch (see
 //! `coordinator::kv` for the row movement, `coordinator::engine` for the
 //! driver and `coordinator::governor` for how a row's variant is chosen).
+//! A row's draft length is itself class-resolved upstream: with
+//! `adaptive_gamma` on, the engine clamps each row's drafter to the depth
+//! `coordinator::gamma` resolved for its request class, so the draft
+//! lengths the planner packs — and the `tokens_used` each priced call
+//! executes — already reflect per-class acceptance history rather than the
+//! static configured gamma. The planner stays policy-free either way: like
+//! variant assignment, depth is decided before planning; the planner only
+//! prices and packs what it is handed.
 //!
 //! ## Bucket/variant-selection invariants
 //!

@@ -115,6 +115,23 @@ pub struct GovernorSnapshot {
     pub promotions: u64,
 }
 
+/// One class's entry in the per-class draft-depth controller view (see
+/// `coordinator::gamma`): the accepted-per-draft EWMA that sets the class's
+/// speculation depth, plus lifetime draft/accept tallies.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GammaClassStat {
+    /// Request class (the client task tag; `<overflow>` folds excess tags).
+    pub class: String,
+    /// Accepted-per-draft EWMA driving `resolve`.
+    pub accept_ewma: f64,
+    /// Drafting steps observed.
+    pub steps: u64,
+    /// Lifetime drafted tokens.
+    pub drafted: u64,
+    /// Lifetime accepted tokens.
+    pub accepted: u64,
+}
+
 /// Point-in-time view of the shared-prefix KV cache (see
 /// `coordinator::prefixcache`): how much admission prefill is being served
 /// from cached committed prefixes, and what that working set costs.
@@ -220,6 +237,9 @@ pub struct ConfigEcho {
     pub dispatch: String,
     pub paged_rows: bool,
     pub chunked_prefill: bool,
+    /// Whether the per-class draft-depth controller adapts gamma (off =
+    /// static depth, the A/B reference; see `coordinator::gamma`).
+    pub adaptive_gamma: bool,
     /// Whether the flight recorder is armed (see [`crate::trace`]).
     pub trace: bool,
 }
@@ -233,6 +253,7 @@ impl Default for ConfigEcho {
             dispatch: "none".to_string(),
             paged_rows: false,
             chunked_prefill: false,
+            adaptive_gamma: false,
             trace: false,
         }
     }
@@ -247,6 +268,7 @@ impl ConfigEcho {
             dispatch: "none".to_string(),
             paged_rows: cfg.paged_rows,
             chunked_prefill: cfg.chunked_prefill,
+            adaptive_gamma: cfg.adaptive_gamma,
             trace: cfg.trace,
         }
     }
@@ -259,6 +281,7 @@ impl ConfigEcho {
             ("dispatch", Json::str(self.dispatch.clone())),
             ("paged_rows", Json::Bool(self.paged_rows)),
             ("chunked_prefill", Json::Bool(self.chunked_prefill)),
+            ("adaptive_gamma", Json::Bool(self.adaptive_gamma)),
             ("trace", Json::Bool(self.trace)),
         ])
     }
@@ -346,6 +369,9 @@ pub struct RouterStats {
     pub tpot_warm_p99_us: AtomicU64,
     pub tpot_cold_p50_us: AtomicU64,
     pub tpot_cold_p99_us: AtomicU64,
+    /// Per-class draft-depth controller view published by the engine
+    /// thread (keyed by class; written only between steps, read by `stats`).
+    pub gamma: Mutex<BTreeMap<String, GammaClassStat>>,
     /// Per-bucket occupancy/calls published by the engine thread.
     pub buckets: Mutex<std::collections::BTreeMap<usize, BucketStat>>,
     /// Per-variant chunk-call tallies published by the engine thread.
@@ -389,6 +415,10 @@ pub struct StatsSnapshot {
     pub variants: Vec<VariantCalls>,
     /// Adaptive-precision governor view (all-zero when disabled).
     pub governor: GovernorSnapshot,
+    /// Per-class draft-depth controller view, ascending by class (empty
+    /// until a class has recorded a drafting step; populated in static
+    /// mode too — only `resolve` is gated on `adaptive_gamma`).
+    pub gamma: Vec<GammaClassStat>,
     /// Shared-prefix KV cache view (all-zero when disabled).
     pub prefix: PrefixSnapshot,
     /// KV residency / page-table-row view.
@@ -464,6 +494,40 @@ impl StatsSnapshot {
                     ("accept_delta", Json::num(self.governor.accept_delta)),
                     ("demotions", Json::num(self.governor.demotions as f64)),
                     ("promotions", Json::num(self.governor.promotions as f64)),
+                ]),
+            ),
+            (
+                "gamma",
+                Json::obj(vec![
+                    (
+                        "classes",
+                        Json::arr(
+                            self.gamma
+                                .iter()
+                                .map(|c| {
+                                    Json::obj(vec![
+                                        ("class", Json::str(c.class.clone())),
+                                        ("accept_ewma", Json::num(c.accept_ewma)),
+                                        ("steps", Json::num(c.steps as f64)),
+                                        ("drafted", Json::num(c.drafted as f64)),
+                                        ("accepted", Json::num(c.accepted as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "steps",
+                        Json::num(self.gamma.iter().map(|c| c.steps).sum::<u64>() as f64),
+                    ),
+                    (
+                        "drafted",
+                        Json::num(self.gamma.iter().map(|c| c.drafted).sum::<u64>() as f64),
+                    ),
+                    (
+                        "accepted",
+                        Json::num(self.gamma.iter().map(|c| c.accepted).sum::<u64>() as f64),
+                    ),
                 ]),
             ),
             (
@@ -791,6 +855,7 @@ impl EngineHandle {
                     promotions: s.gov_promotions.load(Ordering::Relaxed),
                 }
             },
+            gamma: s.gamma.lock().unwrap().values().cloned().collect(),
             prefix: {
                 let hits = s.prefix_hits.load(Ordering::Relaxed);
                 let misses = s.prefix_misses.load(Ordering::Relaxed);
@@ -1144,6 +1209,23 @@ fn publish_stats(engine: &Engine, stats: &RouterStats) {
         }
     }
     drop(hists);
+    // Per-class draft-depth view comes from the controller itself (like the
+    // governor's transition counts below): its EWMAs live outside the
+    // metrics registry.
+    let mut gamma = stats.gamma.lock().unwrap();
+    for (class, st) in engine.gamma_ctl().classes() {
+        gamma.insert(
+            class.clone(),
+            GammaClassStat {
+                class: class.clone(),
+                accept_ewma: st.accept_ewma,
+                steps: st.steps,
+                drafted: st.drafted,
+                accepted: st.accepted,
+            },
+        );
+    }
+    drop(gamma);
     // Transition counts come from the governor itself (not the metrics
     // registry): transitions forced outside the engine's audit loop — e.g.
     // operational pre-demotion via `Engine::governor_mut` — must still be
@@ -1201,6 +1283,22 @@ mod tests {
                 demotions: 1,
                 promotions: 1,
             },
+            gamma: vec![
+                GammaClassStat {
+                    class: "chat".into(),
+                    accept_ewma: 3.5,
+                    steps: 40,
+                    drafted: 200,
+                    accepted: 140,
+                },
+                GammaClassStat {
+                    class: "code".into(),
+                    accept_ewma: 1.25,
+                    steps: 10,
+                    drafted: 50,
+                    accepted: 10,
+                },
+            ],
             prefix: PrefixSnapshot {
                 hits: 6,
                 misses: 2,
@@ -1248,6 +1346,7 @@ mod tests {
                 dispatch: "locality".into(),
                 paged_rows: true,
                 chunked_prefill: true,
+                adaptive_gamma: true,
                 trace: true,
             },
         };
@@ -1264,6 +1363,7 @@ mod tests {
         assert_eq!(cfg.get("dispatch").unwrap().as_str().unwrap(), "locality");
         assert!(cfg.get("paged_rows").unwrap().as_bool().unwrap());
         assert!(cfg.get("chunked_prefill").unwrap().as_bool().unwrap());
+        assert!(cfg.get("adaptive_gamma").unwrap().as_bool().unwrap());
         assert!(cfg.get("trace").unwrap().as_bool().unwrap());
         assert_eq!(j.get("replica").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("queue_depth").unwrap().as_i64().unwrap(), 2);
@@ -1292,6 +1392,20 @@ mod tests {
         assert!((gov.get("accept_delta").unwrap().as_f64().unwrap() + 0.25).abs() < 1e-9);
         assert_eq!(gov.get("demotions").unwrap().as_i64().unwrap(), 1);
         assert_eq!(gov.get("promotions").unwrap().as_i64().unwrap(), 1);
+        let gamma = j.get("gamma").unwrap();
+        let classes = gamma.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("class").unwrap().as_str().unwrap(), "chat");
+        assert!(
+            (classes[0].get("accept_ewma").unwrap().as_f64().unwrap() - 3.5).abs() < 1e-9
+        );
+        assert_eq!(classes[0].get("steps").unwrap().as_i64().unwrap(), 40);
+        assert_eq!(classes[1].get("class").unwrap().as_str().unwrap(), "code");
+        assert_eq!(classes[1].get("drafted").unwrap().as_i64().unwrap(), 50);
+        assert_eq!(classes[1].get("accepted").unwrap().as_i64().unwrap(), 10);
+        assert_eq!(gamma.get("steps").unwrap().as_i64().unwrap(), 50);
+        assert_eq!(gamma.get("drafted").unwrap().as_i64().unwrap(), 250);
+        assert_eq!(gamma.get("accepted").unwrap().as_i64().unwrap(), 150);
         let prefix = j.get("prefix").unwrap();
         assert_eq!(prefix.get("hits").unwrap().as_i64().unwrap(), 6);
         assert_eq!(prefix.get("misses").unwrap().as_i64().unwrap(), 2);

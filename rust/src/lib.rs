@@ -75,6 +75,29 @@
 //! top-1" assumption online instead of trusting it. Audit rate, agreement,
 //! demotions and per-variant call counts surface through `{"cmd":"stats"}`.
 //!
+//! Draft depth is the same kind of serving-time policy. Gamma — how many
+//! tokens the drafter speculates per step — prices the whole speculative
+//! bet: too deep on a low-acceptance workload and every step executes (and
+//! streams KV for) positions the verifier then rejects; too shallow on a
+//! high-acceptance one and steps are wasted on short chunks. The gamma
+//! controller (`coordinator::gamma`) makes depth adaptive *per request
+//! class* using the governor's class-key plumbing: every commit records
+//! (drafted, accepted) into the submitting class's accepted-per-draft EWMA,
+//! and at draft time the engine resolves the row's effective gamma as the
+//! class EWMA plus a fixed headroom, clamped to the configured cap — so a
+//! chat class that keeps accepting 6-token drafts drifts up toward the cap
+//! while an adversarial class collapsing to 0-1 acceptances shrinks to
+//! depth 1-2 within a few steps, shedding the rejected-position work
+//! without touching outputs (committed tokens are the verifier's greedy
+//! stream regardless of depth — CI holds `--adaptive-gamma off` and `on`
+//! to equal output checksums). Classes learn *across* requests and turns:
+//! a new request of a known class seeds its drafter from the class prior
+//! instead of cold-starting at the static default. The class map is
+//! bounded (overflow folds into one bucket), the static path
+//! (`EngineConfig::adaptive_gamma: false`, `--adaptive-gamma off`) is the
+//! bit-identical A/B reference, and per-class depth/acceptance stats
+//! surface through `{"cmd":"stats"}` and `BENCH_*.json`.
+//!
 //! Threading model (serving path, two tiers): pool workers in `server`
 //! share one `Sync` [`coordinator::ClusterHandle`] with no outer lock. The
 //! top tier is a stateless-per-request dispatch plane

@@ -42,6 +42,8 @@ fn real_main() -> Result<()> {
     .opt("verifier", Some("w8a8"), "verifier variant: fp32 | w8a8")
     .opt("drafter", Some("ngram"), "vanilla | ngram | pruned{90,75,50}")
     .opt("gamma", Some("5"), "speculation depth cap")
+    .opt("adaptive-gamma", Some("on"),
+         "per-class adaptive draft depth: on (default; learned per task class) | off (--gamma is the fixed depth)")
     .opt("batch", Some("4"), "batch bucket (1 or 4)")
     .opt("sched", Some("fifo"), "admission policy: fifo | spf | priority")
     .opt("plan", Some("elastic"), "step planning: elastic | monolithic")
@@ -119,6 +121,11 @@ fn real_main() -> Result<()> {
             "on" => true,
             "off" => false,
             other => bail!("unknown chunked-prefill mode '{other}' (on|off)"),
+        },
+        adaptive_gamma: match parsed.str("adaptive-gamma").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown adaptive-gamma mode '{other}' (on|off)"),
         },
         // The cluster stamps per-replica identity when it clones this config.
         replica: 0,

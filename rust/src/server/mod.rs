@@ -20,6 +20,13 @@
 //!                                     "top1_agreement": .., "accept_delta":
 //!                                     .., "demotions": .., "promotions":
 //!                                     ..},
+//!                                     "gamma": {"classes": [{"class": ..,
+//!                                     "accept_ewma": .., "steps": ..,
+//!                                     "drafted": .., "accepted": ..}, ..],
+//!                                     "steps": .., "drafted": ..,
+//!                                     "accepted": ..} — the per-class
+//!                                     adaptive draft-depth controller
+//!                                     (config echoes "adaptive_gamma"),
 //!                                     "prefix": {"hits": .., "misses": ..,
 //!                                     "hit_rate": .., "hit_tokens": ..,
 //!                                     "mid_stream_hit_tokens": ..,
@@ -247,28 +254,48 @@ fn handle_conn(stream: TcpStream, handle: &ServeHandle, tok: &Tokenizer,
     Ok(())
 }
 
-fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
-               stop: &AtomicBool) -> Result<Json> {
+/// A protocol control command (`{"cmd": ...}` lines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireCmd {
+    Ping,
+    Stats,
+    Trace,
+    Metrics,
+    Shutdown,
+}
+
+/// One parsed protocol line, before any engine interaction. Factored out of
+/// the connection handler so the parser is pure (bytes in, value or error
+/// out) — unit-testable and fuzzable (`rust/fuzz/fuzz_targets/
+/// protocol_parse.rs`) without a socket or an engine.
+#[derive(Debug)]
+pub enum WireRequest {
+    Command(WireCmd),
+    Generate {
+        prompt: String,
+        params: GenParams,
+        task: String,
+        /// Client asked for the per-request stage breakdown in the reply.
+        stages: bool,
+    },
+}
+
+/// Parse one JSON-lines request. Total: any input (malformed JSON, wrong
+/// types, huge/NaN numbers, unknown commands) returns `Err`, never panics —
+/// the fuzz target's core invariant.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
     let req = parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = req.opt("cmd") {
-        match cmd.as_str()? {
-            "ping" => return Ok(Json::obj(vec![("ok", Json::Bool(true))])),
-            "stats" => return Ok(handle.stats_json()),
-            "trace" => return Ok(handle.trace_json()),
-            "metrics" => {
-                return Ok(Json::obj(vec![(
-                    "metrics",
-                    Json::str(handle.metrics_text()?),
-                )]))
-            }
-            "shutdown" => {
-                stop.store(true, Ordering::SeqCst);
-                return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
-            }
+        return Ok(WireRequest::Command(match cmd.as_str()? {
+            "ping" => WireCmd::Ping,
+            "stats" => WireCmd::Stats,
+            "trace" => WireCmd::Trace,
+            "metrics" => WireCmd::Metrics,
+            "shutdown" => WireCmd::Shutdown,
             other => anyhow::bail!("unknown cmd '{other}'"),
-        }
+        }));
     }
-    let prompt_text = req.get("prompt")?.as_str()?.to_string();
+    let prompt = req.get("prompt")?.as_str()?.to_string();
     let params = GenParams {
         temp: req.opt("temp").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0),
         max_new: req.opt("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(64),
@@ -283,18 +310,46 @@ fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
             .opt("deadline_ms")
             .map(|v| v.as_f64())
             .transpose()?
-            .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+            // Clamp before Duration::from_secs_f64, which panics on
+            // negative/inf/overflow input (NaN already maxes to 0). A year
+            // is far past any deadline the scheduler can honor.
+            .map(|ms| Duration::from_secs_f64(ms.max(0.0).min(86_400_000.0 * 365.0) / 1e3)),
     };
     let task = req
         .opt("task")
         .map(|v| v.as_str().map(String::from))
         .transpose()?
         .unwrap_or_default();
-    let want_stages = req
+    let stages = req
         .opt("stages")
         .map(|v| v.as_bool())
         .transpose()?
         .unwrap_or(false);
+    Ok(WireRequest::Generate { prompt, params, task, stages })
+}
+
+fn handle_line(line: &str, handle: &ServeHandle, tok: &Tokenizer,
+               stop: &AtomicBool) -> Result<Json> {
+    let (prompt_text, params, task, want_stages) = match parse_request(line)? {
+        WireRequest::Command(WireCmd::Ping) => {
+            return Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        WireRequest::Command(WireCmd::Stats) => return Ok(handle.stats_json()),
+        WireRequest::Command(WireCmd::Trace) => return Ok(handle.trace_json()),
+        WireRequest::Command(WireCmd::Metrics) => {
+            return Ok(Json::obj(vec![(
+                "metrics",
+                Json::str(handle.metrics_text()?),
+            )]))
+        }
+        WireRequest::Command(WireCmd::Shutdown) => {
+            stop.store(true, Ordering::SeqCst);
+            return Ok(Json::obj(vec![("ok", Json::Bool(true))]));
+        }
+        WireRequest::Generate { prompt, params, task, stages } => {
+            (prompt, params, task, stages)
+        }
+    };
     let ids = tok.encode(&prompt_text, true);
 
     // Lock-free submit; this worker blocks only on its own ticket while the
@@ -386,5 +441,76 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         self.roundtrip(&Json::obj(vec![("cmd", Json::str("shutdown"))]))?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_commands_and_generate() {
+        assert!(matches!(
+            parse_request(r#"{"cmd": "ping"}"#).unwrap(),
+            WireRequest::Command(WireCmd::Ping)
+        ));
+        assert!(matches!(
+            parse_request(r#"{"cmd": "stats"}"#).unwrap(),
+            WireRequest::Command(WireCmd::Stats)
+        ));
+        let req = parse_request(
+            r#"{"prompt": "question : x", "max_new": 8, "temp": 0.5,
+               "task": "gsm8k", "priority": "high", "deadline_ms": 250,
+               "stages": true, "seed": 7}"#,
+        )
+        .unwrap();
+        match req {
+            WireRequest::Generate { prompt, params, task, stages } => {
+                assert_eq!(prompt, "question : x");
+                assert_eq!(params.max_new, 8);
+                assert_eq!(params.temp, 0.5);
+                assert_eq!(params.seed, Some(7));
+                assert_eq!(params.priority, Priority::High);
+                assert_eq!(params.deadline, Some(Duration::from_millis(250)));
+                assert!(params.stop_at_eos);
+                assert_eq!(task, "gsm8k");
+                assert!(stages);
+            }
+            other => panic!("expected Generate, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage_without_panicking() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            r#"{"cmd": "reboot"}"#,
+            r#"{"prompt": 3}"#,
+            r#"{"prompt": "x", "priority": "urgent"}"#,
+            r#"{"prompt": "x", "max_new": "many"}"#,
+            r#"{"cmd": ["stats"]}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "accepted {bad:?}");
+        }
+        // Negative/huge/non-finite deadlines clamp rather than panic
+        // Duration::from_secs_f64 (its input domain excludes negatives,
+        // infinities and anything past u64 seconds).
+        for extreme in ["-50", "1e999", "1e308", "-1e999"] {
+            let line = format!(r#"{{"prompt": "x", "deadline_ms": {extreme}}}"#);
+            match parse_request(&line).unwrap() {
+                WireRequest::Generate { params, .. } => {
+                    assert!(params.deadline.is_some(), "deadline dropped for {extreme}");
+                }
+                other => panic!("expected Generate, got {other:?}"),
+            }
+        }
+        match parse_request(r#"{"prompt": "x", "deadline_ms": -50}"#).unwrap() {
+            WireRequest::Generate { params, .. } => {
+                assert_eq!(params.deadline, Some(Duration::ZERO));
+            }
+            other => panic!("expected Generate, got {other:?}"),
+        }
     }
 }

@@ -43,6 +43,15 @@ pub trait Drafter {
     /// Outcome feedback for adaptive speculation depth.
     fn observe_outcome(&mut self, drafted: usize, accepted: usize);
 
+    /// Seed this drafter's intra-request depth state from a cross-request
+    /// prior (the per-class controller's accepted-per-draft EWMA,
+    /// `coordinator::gamma`). Called once per request, after [`begin`]
+    /// (which resets to the cold-start constant — the fallback for classes
+    /// with no history). Default: no-op for depth-less drafters.
+    ///
+    /// [`begin`]: Drafter::begin
+    fn seed_depth_prior(&mut self, _prior: f64) {}
+
     /// Model calls consumed since the last call to this method.
     fn take_cost(&mut self) -> DraftCost;
 
@@ -116,15 +125,18 @@ impl NgramDrafter {
         }
     }
 
-    /// Effective speculation depth this step.
+    /// Effective speculation depth this step. A zero cap (no KV room, or
+    /// `gamma: 0`) yields zero: the early return keeps the adaptive clamp
+    /// below well-formed — `clamp(1, 0)` asserts `min <= max` and panics.
     fn effective_gamma(&self, cap: usize) -> usize {
-        if !self.cfg.adaptive {
-            return self.cfg.gamma.min(cap);
+        let cap = self.cfg.gamma.min(cap);
+        if cap == 0 || !self.cfg.adaptive {
+            return cap;
         }
         // Speculate a little past the recent acceptance level: deep enough
         // to capture streaks, shallow enough to bound wasted verification.
         let g = (self.accept_ewma + 2.0).round() as usize;
-        g.clamp(1, self.cfg.gamma.min(cap))
+        g.clamp(1, cap)
     }
 }
 
@@ -132,6 +144,9 @@ impl Drafter for NgramDrafter {
     fn begin(&mut self, prompt: &[i32]) -> anyhow::Result<()> {
         self.index = NgramIndex::new(self.cfg.k_min, self.cfg.k_max);
         self.index.extend(prompt);
+        // Cold-start constant — the fallback when the request's class has
+        // no cross-request history; the engine overrides it right after
+        // via `seed_depth_prior` when the class controller has a prior.
         self.accept_ewma = self.cfg.gamma as f64 * 0.5;
         Ok(())
     }
@@ -152,6 +167,10 @@ impl Drafter for NgramDrafter {
         if drafted > 0 {
             self.accept_ewma = 0.8 * self.accept_ewma + 0.2 * accepted as f64;
         }
+    }
+
+    fn seed_depth_prior(&mut self, prior: f64) {
+        self.accept_ewma = prior;
     }
 
     fn take_cost(&mut self) -> DraftCost {
@@ -211,6 +230,34 @@ mod tests {
         }
         let g2 = d.draft(8, 0.0).unwrap().tokens.len();
         assert!(g2 >= 7, "gamma should recover, got {g2}");
+    }
+
+    #[test]
+    fn zero_gamma_cap_is_an_empty_draft_not_a_panic() {
+        // Regression: `clamp(1, 0)` asserts min <= max, so an adaptive
+        // drafter handed cap 0 (a row with no KV room) used to panic.
+        let mut d = NgramDrafter::new(NgramConfig { gamma: 8, adaptive: true, ..Default::default() });
+        d.begin(&[5, 6, 5, 6, 5, 6]).unwrap();
+        assert!(d.draft(0, 0.0).unwrap().is_empty());
+        // Same reachable panic with `gamma: 0` configured and any cap.
+        let mut d0 = NgramDrafter::new(NgramConfig { gamma: 0, adaptive: true, ..Default::default() });
+        d0.begin(&[5, 6, 5, 6, 5, 6]).unwrap();
+        assert!(d0.draft(4, 0.0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_prior_sets_first_step_depth() {
+        // A second-turn request whose class learned a low acceptance must
+        // draft shallow on its *first* step, not relearn from gamma/2.
+        let mut d = NgramDrafter::new(NgramConfig { gamma: 8, adaptive: true, ..Default::default() });
+        let ctx: Vec<i32> = std::iter::repeat([5, 6]).take(12).flatten().collect();
+        d.begin(&ctx).unwrap();
+        d.seed_depth_prior(0.0);
+        assert_eq!(d.draft(8, 0.0).unwrap().tokens.len(), 2, "ewma 0 + 2");
+        // ... and a high prior drafts deep immediately.
+        d.begin(&ctx).unwrap();
+        d.seed_depth_prior(8.0);
+        assert_eq!(d.draft(8, 0.0).unwrap().tokens.len(), 8);
     }
 
     #[test]

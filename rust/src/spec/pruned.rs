@@ -95,9 +95,13 @@ impl Drafter for PrunedDrafter {
 
     fn draft(&mut self, gamma: usize, temp: f64) -> Result<Draft> {
         self.catch_up()?;
+        // Nothing committed yet (empty prompt): no token to continue from.
+        let Some(&seed_tok) = self.committed.last() else {
+            return Ok(Draft::empty());
+        };
         let mut tokens = Vec::with_capacity(gamma);
         let mut q_rows = Vec::with_capacity(gamma);
-        let mut last = *self.committed.last().expect("begin() before draft()");
+        let mut last = seed_tok;
         let mut pos = self.cached;
         // Speculative writes beyond `cached` are rolled back simply by not
         // advancing `cached`: the engine's next commit overwrites them (the

@@ -3,8 +3,12 @@
 //! Prompts come from `artifacts/workloads.json` — held-out documents from
 //! the same five task-family generators the model was trained on, exported
 //! by `python/compile/aot.py` so the rust and python sides agree exactly on
-//! the token distribution. This module samples per-task request sets and
-//! synthesizes arrival processes for the serving benchmarks.
+//! the token distribution. This module samples per-task request sets,
+//! synthesizes arrival processes for the serving benchmarks, and composes
+//! both into named serving *scenarios* ([`ScenarioKind`]/[`ScenarioPlan`])
+//! — multi-turn agentic loops, bursty diurnal replay, long-context
+//! summarization, an adversarial cache-thrashing mix — that
+//! `serve_benchmark` runs and reports against p50/p99 TTFT/TPOT SLOs.
 
 use std::path::Path;
 
@@ -178,6 +182,220 @@ impl WorkloadSet {
     }
 }
 
+impl WorkloadSet {
+    /// A long-context summarization batch: `depth` documents of the
+    /// summarization family concatenated into one prompt per request (the
+    /// reference completion is the last document's). Stresses prefill
+    /// volume and KV residency rather than cache reuse.
+    pub fn long_context(&self, n: usize, depth: usize,
+                        rng: &mut Pcg) -> Result<Vec<WorkItem>> {
+        let pool = self.task_pool("cnndm")?;
+        (0..n)
+            .map(|_| {
+                let mut prompt_ids = vec![BOS_ID];
+                let mut texts: Vec<String> = Vec::new();
+                let mut reference_ids = Vec::new();
+                for _ in 0..depth.max(1) {
+                    let it = pool[rng.usize_below(pool.len())];
+                    let body = it
+                        .prompt_ids
+                        .strip_prefix(&[BOS_ID])
+                        .unwrap_or(it.prompt_ids.as_slice());
+                    prompt_ids.extend_from_slice(body);
+                    texts.push(it.prompt.clone());
+                    reference_ids = it.reference_ids.clone();
+                }
+                Ok(WorkItem {
+                    task: "cnndm".to_string(),
+                    prompt: texts.join(" "),
+                    prompt_ids,
+                    reference_ids,
+                })
+            })
+            .collect()
+    }
+
+    /// An adversarial cache-thrashing mix: every request carries a distinct
+    /// per-request "salt" prefix — `salt_len` of the item's own body words,
+    /// rotated by a per-request offset — so same-family requests share no
+    /// useful common prefix and the prefix cache fills with entries that
+    /// never hit again. Word/id pairs rotate together, so the prompt text
+    /// still encodes to exactly `prompt_ids` on the wire path (the closed
+    /// lexicon maps each non-special id to one whitespace word).
+    pub fn thrash(&self, n: usize, salt_len: usize,
+                  rng: &mut Pcg) -> Result<Vec<WorkItem>> {
+        (0..n)
+            .map(|i| {
+                let task = TASKS[i % TASKS.len()];
+                let pool = self.task_pool(task)?;
+                let it = pool[rng.usize_below(pool.len())];
+                let body = it
+                    .prompt_ids
+                    .strip_prefix(&[BOS_ID])
+                    .unwrap_or(it.prompt_ids.as_slice());
+                let pairs: Vec<(i32, &str)> = body
+                    .iter()
+                    .copied()
+                    .filter(|&t| t != crate::tokenizer::PAD_ID
+                        && t != crate::tokenizer::EOS_ID)
+                    .zip(it.prompt.split_whitespace())
+                    .collect();
+                if pairs.is_empty() {
+                    return Ok(it.clone());
+                }
+                // Deterministic per-request rotation: distinct salts even
+                // when the rng resamples the same pool item back to back.
+                let rot = (i * 7 + 1) % pairs.len();
+                let salt: Vec<(i32, &str)> = pairs
+                    .iter()
+                    .cycle()
+                    .skip(rot)
+                    .take(salt_len.max(1).min(pairs.len()))
+                    .copied()
+                    .collect();
+                let mut prompt_ids = vec![BOS_ID];
+                prompt_ids.extend(salt.iter().map(|&(t, _)| t));
+                prompt_ids.extend_from_slice(body);
+                let salt_text =
+                    salt.iter().map(|&(_, w)| w).collect::<Vec<_>>().join(" ");
+                Ok(WorkItem {
+                    task: task.to_string(),
+                    prompt: format!("{salt_text} {}", it.prompt).trim().to_string(),
+                    prompt_ids,
+                    reference_ids: it.reference_ids.clone(),
+                })
+            })
+            .collect()
+    }
+
+    /// Compose items + arrivals + turn structure for one named scenario.
+    /// `n` is the conversation count, `prefix_len` the shared-template cut
+    /// (agentic) / salt length (thrash), `rate_per_s` the open-loop mean
+    /// arrival rate where the scenario replays a trace (0 = closed loop
+    /// even for trace scenarios).
+    pub fn scenario(&self, kind: ScenarioKind, n: usize, prefix_len: usize,
+                    rate_per_s: f64, rng: &mut Pcg) -> Result<ScenarioPlan> {
+        let plan = match kind {
+            ScenarioKind::Mixed => ScenarioPlan {
+                kind,
+                items: self.mixed(n, rng)?,
+                arrivals: Vec::new(),
+                turns: 1,
+            },
+            // Agentic tool-call loop: family-templated prompts, each
+            // conversation resubmitted for several turns with the prior
+            // output appended (the driver owns the append) — the shape the
+            // prefix cache's mid-stream snapshots and the per-class gamma
+            // prior exist for.
+            ScenarioKind::Agentic => ScenarioPlan {
+                kind,
+                items: self.shared_prefix(n, prefix_len, rng)?,
+                arrivals: Vec::new(),
+                turns: 3,
+            },
+            ScenarioKind::Diurnal => {
+                let items = self.mixed(n, rng)?;
+                let arrivals = if rate_per_s > 0.0 {
+                    // Period ≈ a quarter of the expected trace duration
+                    // (mean rate over a cycle is 2.5× base at peak 4.0),
+                    // so the replay traverses several full day/night
+                    // cycles instead of one slow ramp.
+                    let period = (n as f64 / (10.0 * rate_per_s)).max(0.5);
+                    ArrivalTrace::diurnal(n, rate_per_s, 4.0, period, rng)
+                        .arrivals
+                        .iter()
+                        .map(|a| a.0)
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                ScenarioPlan { kind, items, arrivals, turns: 1 }
+            }
+            ScenarioKind::LongCtx => ScenarioPlan {
+                kind,
+                items: self.long_context(n, 4, rng)?,
+                arrivals: Vec::new(),
+                turns: 1,
+            },
+            ScenarioKind::Thrash => ScenarioPlan {
+                kind,
+                items: self.thrash(n, prefix_len.max(4), rng)?,
+                arrivals: Vec::new(),
+                turns: 1,
+            },
+        };
+        Ok(plan)
+    }
+}
+
+/// The serving scenario suite `serve_benchmark --scenario` selects from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Round-robin mixed-task closed loop (the original benchmark shape).
+    Mixed,
+    /// Multi-turn agentic/tool-call loops over family-shared templates.
+    Agentic,
+    /// Bursty diurnal trace replay: rate-modulated Poisson arrivals.
+    Diurnal,
+    /// Long-context summarization: several documents per prompt.
+    LongCtx,
+    /// Adversarial cache-thrashing mix: per-request salted prefixes.
+    Thrash,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mixed" => ScenarioKind::Mixed,
+            "agentic" => ScenarioKind::Agentic,
+            "diurnal" => ScenarioKind::Diurnal,
+            "longctx" => ScenarioKind::LongCtx,
+            "thrash" => ScenarioKind::Thrash,
+            other => bail!(
+                "unknown scenario '{other}' (expected one of: {})",
+                ScenarioKind::all()
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Mixed => "mixed",
+            ScenarioKind::Agentic => "agentic",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::LongCtx => "longctx",
+            ScenarioKind::Thrash => "thrash",
+        }
+    }
+
+    pub fn all() -> [ScenarioKind; 5] {
+        [
+            ScenarioKind::Mixed,
+            ScenarioKind::Agentic,
+            ScenarioKind::Diurnal,
+            ScenarioKind::LongCtx,
+            ScenarioKind::Thrash,
+        ]
+    }
+}
+
+/// One scenario's executable shape: what to send, when, and how many turns
+/// per conversation.
+#[derive(Debug, Clone)]
+pub struct ScenarioPlan {
+    pub kind: ScenarioKind,
+    /// One entry per conversation (turn 1's prompt; later turns append).
+    pub items: Vec<WorkItem>,
+    /// Arrival offset seconds per conversation; empty = closed loop.
+    pub arrivals: Vec<f64>,
+    /// Turns per conversation (>1 = resubmit with the output appended).
+    pub turns: usize,
+}
+
 /// Open-loop Poisson arrival trace for the serving benchmark.
 #[derive(Debug, Clone)]
 pub struct ArrivalTrace {
@@ -191,6 +409,27 @@ impl ArrivalTrace {
         let arrivals = (0..n)
             .map(|i| {
                 t += rng.exp(rate_per_s);
+                (t, i)
+            })
+            .collect();
+        ArrivalTrace { arrivals }
+    }
+
+    /// Rate-modulated Poisson replay of a diurnal load curve: the
+    /// instantaneous rate swings sinusoidally between `base_rate_per_s`
+    /// and `peak_ratio`× it over `period_s`, so the trace alternates calm
+    /// troughs with bursts that exceed the mean rate — the shape that
+    /// separates p99 from p50 under an SLO.
+    pub fn diurnal(n: usize, base_rate_per_s: f64, peak_ratio: f64,
+                   period_s: f64, rng: &mut Pcg) -> Self {
+        let mut t = 0.0;
+        let arrivals = (0..n)
+            .map(|i| {
+                let phase = t / period_s.max(1e-9) * std::f64::consts::TAU;
+                let swing = 0.5 * (1.0 + phase.sin());
+                let rate =
+                    base_rate_per_s * (1.0 + (peak_ratio - 1.0) * swing);
+                t += rng.exp(rate.max(1e-9));
                 (t, i)
             })
             .collect();
@@ -319,6 +558,109 @@ mod tests {
         let a: Vec<_> = items.iter().map(|i| i.prompt_ids.clone()).collect();
         let b: Vec<_> = again.iter().map(|i| i.prompt_ids.clone()).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scenario_names_round_trip_and_bad_names_error() {
+        for k in ScenarioKind::all() {
+            assert_eq!(ScenarioKind::parse(k.name()).unwrap(), k);
+        }
+        let err = ScenarioKind::parse("weekday").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("weekday"), "names the bad scenario: {msg}");
+        assert!(msg.contains("agentic"), "lists the suite: {msg}");
+    }
+
+    #[test]
+    fn agentic_scenario_is_multi_turn_over_shared_templates() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let plan = ws
+            .scenario(ScenarioKind::Agentic, 10, 2, 0.0, &mut Pcg::seeded(3))
+            .unwrap();
+        assert!(plan.turns > 1, "agentic loops must resubmit turns");
+        assert!(plan.arrivals.is_empty(), "closed loop");
+        assert_eq!(plan.items.len(), 10);
+        for (i, it) in plan.items.iter().enumerate() {
+            let template: Vec<i32> = ws.task_items(&it.task)[0]
+                .prompt_ids
+                .iter()
+                .copied()
+                .take(2)
+                .collect();
+            assert!(it.prompt_ids.starts_with(&template), "item {i}");
+        }
+    }
+
+    #[test]
+    fn diurnal_scenario_replays_a_bursty_trace() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let plan = ws
+            .scenario(ScenarioKind::Diurnal, 400, 2, 8.0, &mut Pcg::seeded(4))
+            .unwrap();
+        assert_eq!(plan.arrivals.len(), 400);
+        assert!(plan.arrivals.windows(2).all(|w| w[0] <= w[1]), "monotone");
+        // Burstiness: the peak-rate half of the cycle packs arrivals
+        // tighter than a flat-rate trace would — gap dispersion well above
+        // the exponential's.
+        let gaps: Vec<f64> = plan
+            .arrivals
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+                / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.1, "diurnal gaps must be over-dispersed, cv² {cv2}");
+        // rate 0 = closed loop even for the trace scenario
+        let closed = ws
+            .scenario(ScenarioKind::Diurnal, 10, 2, 0.0, &mut Pcg::seeded(4))
+            .unwrap();
+        assert!(closed.arrivals.is_empty());
+    }
+
+    #[test]
+    fn long_context_concatenates_documents() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let single = ws.task_items("cnndm")[0].prompt_ids.len();
+        let plan = ws
+            .scenario(ScenarioKind::LongCtx, 4, 2, 0.0, &mut Pcg::seeded(5))
+            .unwrap();
+        for it in &plan.items {
+            assert_eq!(it.task, "cnndm");
+            assert!(
+                it.prompt_ids.len() > single,
+                "long-context prompt must exceed one document"
+            );
+            assert_eq!(it.prompt_ids.iter().filter(|&&t| t == 1).count(), 1);
+        }
+    }
+
+    #[test]
+    fn thrash_salts_break_prefix_sharing() {
+        let ws = WorkloadSet::from_json(&sample_json()).unwrap();
+        let items = ws.thrash(10, 2, &mut Pcg::seeded(6)).unwrap();
+        assert_eq!(items.len(), 10);
+        for it in &items {
+            assert_eq!(it.prompt_ids[0], 1, "BOS preserved");
+            // salt + body: longer than the plain item
+            let plain = ws.task_items(&it.task)[0].prompt_ids.len();
+            assert!(it.prompt_ids.len() >= plain);
+        }
+        // Same-family consecutive requests must not share their salted
+        // prefix (the whole point of the adversarial mix). The fixture's
+        // bodies are one token, so salts of the same item still rotate to
+        // distinct positions only when the body has >1 word; assert on the
+        // gsm8k family which has two items to alternate between.
+        let a = ws.thrash(20, 2, &mut Pcg::seeded(6)).unwrap();
+        let b = ws.thrash(20, 2, &mut Pcg::seeded(6)).unwrap();
+        assert!(
+            a.iter()
+                .zip(&b)
+                .all(|(x, y)| x.prompt_ids == y.prompt_ids),
+            "deterministic per seed"
+        );
     }
 
     #[test]

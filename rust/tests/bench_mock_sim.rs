@@ -12,8 +12,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use quasar::bench::BenchReport;
-use quasar::coordinator::{pack_prefill_riders, plan_step, CallLog, FnKind, PlanCtx, PlanRow,
-                          PrefillPending, VariantCtx};
+use quasar::coordinator::{pack_prefill_riders, plan_step, CallLog, FnKind, GammaConfig,
+                          GammaController, PlanCtx, PlanRow, PrefillPending, VariantCtx};
 use quasar::trace::{FlightRecorder, TraceHandle};
 use quasar::util::json;
 use quasar::util::rng::Pcg;
@@ -138,6 +138,141 @@ fn shed_load_caps_the_dedicated_prefill_stall() {
     );
     println!("calm_stall_s={calm_s:.9}");
     println!("shed_stall_s={shed_s:.9}");
+}
+
+/// Per-class gamma controller differential on the mock sim: drive two real
+/// verify pipelines with the same proposal pool — one drafting the full
+/// static cap every step (the pre-PR path), one truncating each draft to
+/// the class-resolved depth — through a healthy warm-up and then a total
+/// acceptance collapse (every proposal out-of-vocab, so the verifier must
+/// reject it). Claims, in order:
+///
+/// * a disabled controller resolves the full cap on *every* step — the
+///   `--adaptive-gamma off` path is the static path, bit for bit;
+/// * depth choices are lossless: both committed streams follow the same
+///   greedy chain (one is a prefix of the other, and the collapse phase
+///   commits the same token count in both runs);
+/// * on collapse the controller strictly shrinks drafted-but-rejected
+///   tokens without reducing committed throughput per verified position
+///   (the modeled verification cost: each executed position is work).
+#[test]
+fn gamma_controller_sheds_rejected_draft_work_losslessly() {
+    let (n_req, full) = (2usize, 4usize);
+    let cap = SIM_CHUNK - 1; // the sim's verify chunk leaves room for 4 drafts
+    let (warm, collapse) = (10usize, 50usize);
+    let mut stat = Sim::new(n_req, full, sim_perf(0), true);
+    let mut adp = Sim::new(n_req, full, sim_perf(0), true);
+    let mut off = GammaController::new(GammaConfig::off());
+    let mut ctl = GammaController::new(GammaConfig::default());
+    let mut rng = Pcg::seeded(0x9A44);
+
+    // Collapse-phase draft accounting (the controller's lever).
+    let (mut stat_drafted, mut stat_rejected, mut stat_positions) = (0usize, 0usize, 0usize);
+    let (mut adp_drafted, mut adp_rejected, mut adp_positions) = (0usize, 0usize, 0usize);
+    let (mut stat_committed, mut adp_committed) = (0usize, 0usize);
+    let mut depth_shrank = false;
+
+    for t in 0..warm + collapse {
+        // One proposal pool per row per step: healthy steps propose
+        // in-vocab tokens (partial acceptance), collapsed steps propose
+        // out-of-vocab junk the greedy verifier rejects at position 0.
+        let pool: Vec<Vec<i32>> = (0..n_req)
+            .map(|_| {
+                (0..cap)
+                    .map(|_| {
+                        if t < warm { rng.below(SIM_VOCAB as u64) as i32 } else { 99 }
+                    })
+                    .collect()
+            })
+            .collect();
+        // (a) the disabled controller IS the static path: full cap always.
+        assert_eq!(off.resolve("chat", cap), cap, "off-controller must not clamp");
+        let g_adp = ctl.resolve("chat", cap);
+        assert!((1..=cap).contains(&g_adp));
+        if g_adp < cap {
+            depth_shrank = true;
+        }
+        let stat_drafts = pool.clone();
+        let adp_drafts: Vec<Vec<i32>> = pool.iter().map(|p| p[..g_adp].to_vec()).collect();
+
+        let before_s: Vec<usize> = stat.reqs.iter().map(|r| r.committed.len()).collect();
+        let before_a: Vec<usize> = adp.reqs.iter().map(|r| r.committed.len()).collect();
+        stat.step(&stat_drafts);
+        adp.step(&adp_drafts);
+        for i in 0..n_req {
+            // commit() appends `accepted + 1` (bonus token rides along).
+            let acc_s = stat.reqs[i].committed.len() - before_s[i] - 1;
+            let acc_a = adp.reqs[i].committed.len() - before_a[i] - 1;
+            // Both controllers observe their own run, exactly as the engine
+            // records every committed step regardless of mode.
+            off.record("chat", stat_drafts[i].len(), acc_s);
+            ctl.record("chat", adp_drafts[i].len(), acc_a);
+            if t >= warm {
+                stat_drafted += stat_drafts[i].len();
+                stat_rejected += stat_drafts[i].len() - acc_s;
+                stat_positions += stat_drafts[i].len() + 1;
+                stat_committed += acc_s + 1;
+                adp_drafted += adp_drafts[i].len();
+                adp_rejected += adp_drafts[i].len() - acc_a;
+                adp_positions += adp_drafts[i].len() + 1;
+                adp_committed += acc_a + 1;
+            }
+        }
+    }
+
+    assert!(depth_shrank, "collapse never moved the resolved depth below cap");
+    // Lossless: both runs walk the same greedy chain — the shorter stream
+    // is a prefix of the longer (they can only differ by warm-up steps
+    // where the static run accepted past the adaptive depth).
+    for (i, (s, a)) in stat.reqs.iter().zip(&adp.reqs).enumerate() {
+        let n = s.committed.len().min(a.committed.len());
+        assert_eq!(
+            s.committed[..n],
+            a.committed[..n],
+            "req {i}: depth policy changed the greedy stream"
+        );
+    }
+    // Collapse phase: every junk proposal is rejected, so both runs commit
+    // exactly one (bonus) token per row per step — identical throughput...
+    assert_eq!(stat_committed, n_req * collapse);
+    assert_eq!(adp_committed, stat_committed, "controller reduced committed tokens");
+    // ...while the controller drafts (and pays verification for) strictly
+    // less rejected work than the static cap.
+    assert_eq!(stat_rejected, stat_drafted, "collapse phase must reject everything");
+    assert!(
+        adp_rejected < stat_rejected,
+        "controller must shed rejected draft work: adaptive {adp_rejected} vs \
+         static {stat_rejected}"
+    );
+    // Modeled cost: committed tokens per executed verify position — the
+    // adaptive run pays fewer positions for the same commits.
+    assert!(adp_positions < stat_positions);
+    let stat_eff = stat_committed as f64 / stat_positions as f64;
+    let adp_eff = adp_committed as f64 / adp_positions as f64;
+    assert!(
+        adp_eff > stat_eff,
+        "controller must raise committed-per-position: {adp_eff:.3} vs {stat_eff:.3}"
+    );
+    // The learned floor matches the controller's contract: ewma ~ 0 plus
+    // headroom 2 under total rejection.
+    assert_eq!(ctl.resolve("chat", cap), 2, "post-collapse resolved depth");
+
+    // Machine-readable trail for the CI smoke, same channel as the mock
+    // sim bench artifact.
+    let mut r = BenchReport::new("mock_sim_gamma");
+    r.num("warm_steps", warm as f64)
+        .num("collapse_steps", collapse as f64)
+        .num("static_rejected", stat_rejected as f64)
+        .num("adaptive_rejected", adp_rejected as f64)
+        .num("static_positions", stat_positions as f64)
+        .num("adaptive_positions", adp_positions as f64)
+        .num("static_committed_per_position", stat_eff)
+        .num("adaptive_committed_per_position", adp_eff);
+    let dir = std::env::var("QUASAR_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("target/bench"));
+    let path = r.write_to(&dir).expect("write gamma bench json");
+    println!("bench_json={}", path.display());
 }
 
 /// Flight-recorder differential: an armed trace handle must be a pure tap.

@@ -83,6 +83,7 @@ pub struct TestRig {
     pub prefix: PrefixCacheConfig,
     pub paged_rows: bool,
     pub chunked_prefill: bool,
+    pub adaptive_gamma: bool,
 }
 
 impl Default for TestRig {
@@ -111,7 +112,18 @@ impl TestRig {
             // Deterministic scenarios default to the monolithic admission
             // path; the chunked-vs-monolithic differential scenarios opt in.
             chunked_prefill: false,
+            // Static draft depth, matching the rig's non-adaptive drafter:
+            // every deterministic scenario pins the per-class controller
+            // off; the gamma differential scenarios opt in.
+            adaptive_gamma: false,
         }
+    }
+
+    /// Per-class adaptive draft depth (`coordinator::gamma`): `false` (rig
+    /// default) pins every draft at the configured gamma.
+    pub fn adaptive_gamma(mut self, adaptive_gamma: bool) -> Self {
+        self.adaptive_gamma = adaptive_gamma;
+        self
     }
 
     pub fn verifier(mut self, v: &str) -> Self {
@@ -200,6 +212,7 @@ impl TestRig {
             prefix: self.prefix.clone(),
             paged_rows: self.paged_rows,
             chunked_prefill: self.chunked_prefill,
+            adaptive_gamma: self.adaptive_gamma,
             replica: 0,
             replicas: 1,
             trace: false,

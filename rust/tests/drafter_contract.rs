@@ -1,0 +1,102 @@
+//! Drafter-trait contract: every drafting strategy must tolerate the
+//! engine's edge inputs without panicking and keep its outputs inside the
+//! caps the engine hands it.
+//!
+//! The contract (one clause per regression this suite pins):
+//!
+//! * `draft(0, _)` is an empty draft, never a panic — the adaptive depth
+//!   clamp used to hit `clamp(1, 0)` when a row had no KV room;
+//! * `begin(&[])` (empty prompt) succeeds, and the following draft is
+//!   empty — there is no token to continue from;
+//! * a draft never exceeds the gamma cap, for any acceptance history;
+//! * `observe_outcome` accepts any `(drafted, accepted)` pair with
+//!   `accepted <= drafted` — including `(0, 0)`, the no-draft step —
+//!   without panicking or pushing the next depth out of bounds;
+//! * `seed_depth_prior` with extreme priors keeps depth within `[1, cap]`.
+//!
+//! Vanilla and ngram run everywhere; the pruned drafter costs real forward
+//! passes, so its leg is artifact-gated like the integration scenarios.
+
+mod common;
+
+use quasar::spec::{Drafter, NgramConfig, NgramDrafter, PrunedDrafter, VanillaDrafter};
+
+/// Drive one drafter through the full contract. `ctx` must make the
+/// drafter actually propose tokens (a repetitive context for ngram); the
+/// vanilla drafter proposes nothing and passes vacuously.
+fn check_contract(d: &mut dyn Drafter, ctx: &[i32]) {
+    // Empty prompt: begin succeeds, drafts are empty at any cap.
+    d.begin(&[]).unwrap();
+    assert!(d.draft(0, 0.0).unwrap().is_empty(), "{}: gamma 0 on empty", d.name());
+    assert!(d.draft(8, 0.0).unwrap().is_empty(), "{}: empty context", d.name());
+
+    // Real context: gamma 0 still empty, and every draft respects the cap.
+    d.begin(ctx).unwrap();
+    assert!(d.draft(0, 0.0).unwrap().is_empty(), "{}: gamma 0", d.name());
+    for cap in [1usize, 2, 3, 5, 8] {
+        let n = d.draft(cap, 0.0).unwrap().tokens.len();
+        assert!(n <= cap, "{}: drafted {n} > cap {cap}", d.name());
+    }
+
+    // Outcome bounds: any accepted <= drafted pair, including the no-draft
+    // step, and pathological streaks in both directions.
+    d.observe_outcome(0, 0);
+    for _ in 0..50 {
+        d.observe_outcome(8, 0); // total rejection
+    }
+    assert!(d.draft(8, 0.0).unwrap().tokens.len() <= 8, "{}: post-collapse", d.name());
+    assert!(d.draft(0, 0.0).unwrap().is_empty(), "{}: gamma 0 post-collapse", d.name());
+    for _ in 0..50 {
+        d.observe_outcome(8, 8); // perfect acceptance
+    }
+    assert!(d.draft(3, 0.0).unwrap().tokens.len() <= 3, "{}: post-streak cap", d.name());
+
+    // Extreme cross-request priors stay clamped to the per-step cap.
+    d.begin(ctx).unwrap();
+    d.seed_depth_prior(1e9);
+    assert!(d.draft(4, 0.0).unwrap().tokens.len() <= 4, "{}: huge prior", d.name());
+    d.begin(ctx).unwrap();
+    d.seed_depth_prior(0.0);
+    assert!(d.draft(0, 0.0).unwrap().is_empty(), "{}: zero prior, zero cap", d.name());
+
+    // Commits keep the contract intact.
+    d.observe_commit(&[1, 2, 1, 2]).unwrap();
+    assert!(d.draft(2, 0.0).unwrap().tokens.len() <= 2, "{}: post-commit cap", d.name());
+}
+
+/// A context repetitive enough that the ngram index always finds a
+/// continuation — the cap assertions then bite rather than pass vacuously.
+fn repetitive_ctx() -> Vec<i32> {
+    std::iter::repeat([5, 6, 7]).take(12).flatten().collect()
+}
+
+#[test]
+fn vanilla_meets_the_drafter_contract() {
+    check_contract(&mut VanillaDrafter, &repetitive_ctx());
+}
+
+#[test]
+fn ngram_meets_the_drafter_contract_adaptive_and_static() {
+    for adaptive in [true, false] {
+        for gamma in [0usize, 1, 5, 8] {
+            let mut d = NgramDrafter::new(NgramConfig { gamma, adaptive, ..Default::default() });
+            check_contract(&mut d, &repetitive_ctx());
+        }
+    }
+}
+
+#[test]
+fn pruned_meets_the_drafter_contract() {
+    let Some(root) = common::artifacts_root() else { return };
+    let (_manifest, mr) = common::load_model(&root);
+    for variant in ["pruned90", "pruned50"] {
+        let Ok(mut d) = PrunedDrafter::new(std::rc::Rc::clone(&mr), variant, 7) else {
+            eprintln!("[skip] no {variant} artifact in this set");
+            continue;
+        };
+        // The pruned drafter runs real forward passes: keep the context a
+        // golden prompt so prefill shapes match the compiled artifact.
+        let prompts = common::golden_prompts(&mr);
+        check_contract(&mut d, &prompts[0]);
+    }
+}

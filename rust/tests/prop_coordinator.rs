@@ -7,9 +7,9 @@ mod common;
 use common::sim::{check_equivalent, mock_chunk, run_equivalence, sim_perf, Sim, SIM_CHUNK,
                   SIM_H, SIM_HD, SIM_L, SIM_S, SIM_VOCAB};
 use quasar::coordinator::{
-    build_ring, dispatch_decision, replica_of_id, ring_assign, BatchGroup, FnKind, GenParams,
-    Governor, GovernorConfig, Lease, PagedGroup, PrefixCache, PrefixCacheConfig, Priority,
-    Request, Route, SchedPolicy, Scheduler, Transition,
+    build_ring, dispatch_decision, replica_of_id, ring_assign, BatchGroup, FnKind, GammaConfig,
+    GammaController, GenParams, Governor, GovernorConfig, Lease, PagedGroup, PrefixCache,
+    PrefixCacheConfig, Priority, Request, Route, SchedPolicy, Scheduler, Transition,
 };
 use quasar::prop_assert;
 use quasar::runtime::Tensor;
@@ -1486,6 +1486,140 @@ fn cluster_id_stride_routes_cancels_home_and_one_replica_degenerates() {
             prop_assert!(
                 dispatch_decision(0, &[*mints as usize], 1) == (0, false),
                 "a 1-replica fleet can never steal"
+            );
+            ok()
+        },
+    )
+}
+
+#[test]
+fn gamma_resolve_is_bounded_for_any_config_and_history() {
+    // The per-class depth controller's core contract (coordinator/gamma):
+    // for ANY tuning (including degenerate alphas and huge/negative
+    // headroom), ANY recorded history over ANY class stream, resolve()
+    // returns 0 exactly when cap == 0 and a value in [1, cap] otherwise —
+    // and a disabled controller always returns the full cap.
+    prop_check(
+        "gamma resolve bounds",
+        400,
+        |rng| {
+            let enabled = rng.below(4) != 0;
+            let alpha = rng.below(101) as f64 / 100.0;
+            let headroom = rng.below(41) as f64 - 20.0; // [-20, 20]
+            let steps: Vec<(u64, u64, u64)> = (0..rng.usize_below(60))
+                .map(|_| {
+                    let class = rng.below(6);
+                    let drafted = rng.below(10);
+                    let accepted = rng.below(drafted + 1);
+                    (class, drafted, accepted)
+                })
+                .collect();
+            (enabled, alpha, headroom, steps)
+        },
+        |(enabled, alpha, headroom, steps)| {
+            let mut g = GammaController::new(GammaConfig {
+                enabled: *enabled,
+                alpha: *alpha,
+                headroom: *headroom,
+            });
+            for &(class, drafted, accepted) in steps {
+                g.record(&format!("c{class}"), drafted as usize, accepted as usize);
+                for class in 0..6 {
+                    let name = format!("c{class}");
+                    for cap in 0..9usize {
+                        let r = g.resolve(&name, cap);
+                        if cap == 0 {
+                            prop_assert!(r == 0, "cap 0 must resolve 0, got {r}");
+                        } else if !enabled {
+                            prop_assert!(r == cap, "disabled must pass cap through");
+                        } else {
+                            prop_assert!(
+                                (1..=cap).contains(&r),
+                                "resolve {r} out of [1, {cap}] (a={alpha}, h={headroom})"
+                            );
+                        }
+                        // The admission prior mirrors resolve's gating: only
+                        // enabled controllers with evidence seed drafters.
+                        match g.prior(&name) {
+                            Some(p) => prop_assert!(
+                                *enabled && p.is_finite(),
+                                "prior must imply enabled+finite"
+                            ),
+                            None => {}
+                        }
+                    }
+                }
+            }
+            ok()
+        },
+    )
+}
+
+#[test]
+fn gamma_depth_recovers_after_any_collapse() {
+    // No absorbing floor: however long acceptance collapses, a healthy
+    // stream afterwards must climb the class back to (near) the cap.
+    prop_check(
+        "gamma collapse recovery",
+        300,
+        |rng| {
+            let collapse = 1 + rng.usize_below(200);
+            let cap = 2 + rng.usize_below(7);
+            (collapse as u64, cap as u64)
+        },
+        |(collapse, cap)| {
+            let cap = *cap as usize;
+            let mut g = GammaController::new(GammaConfig::default());
+            for _ in 0..20 {
+                g.record("c", cap, cap);
+            }
+            prop_assert!(g.resolve("c", cap) == cap, "healthy class must draft deep");
+            for _ in 0..*collapse {
+                g.record("c", cap, 0);
+            }
+            let throttled = g.resolve("c", cap);
+            prop_assert!(
+                (1..=cap).contains(&throttled),
+                "throttled depth out of bounds: {throttled}"
+            );
+            for _ in 0..200 {
+                g.record("c", cap, cap);
+            }
+            prop_assert!(
+                g.resolve("c", cap) == cap,
+                "depth failed to recover after {collapse}-step collapse: {}",
+                g.resolve("c", cap)
+            );
+            ok()
+        },
+    )
+}
+
+#[test]
+fn gamma_class_map_stays_bounded_under_any_tag_stream() {
+    // The class key is the client-supplied task tag: any unbounded stream
+    // of novel tags must fold into the shared overflow class instead of
+    // growing the map past its cap (same rule as the governor's map).
+    prop_check(
+        "gamma class-map bound",
+        200,
+        |rng| {
+            let tags: Vec<u64> = (0..300 + rng.usize_below(300))
+                .map(|_| rng.below(1 << 48))
+                .collect();
+            tags
+        },
+        |tags| {
+            let mut g = GammaController::new(GammaConfig::default());
+            for &t in tags {
+                g.record(&format!("tag-{t}"), 4, 2);
+            }
+            let n = g.classes().count();
+            prop_assert!(n <= 257, "class map grew unbounded: {n}");
+            // Every tag still resolves in bounds through the overflow fold.
+            prop_assert!(
+                (1..=8).contains(&g.resolve("yet-another-novel-tag", 8)),
+                "overflow-folded tag must still resolve in bounds"
             );
             ok()
         },
